@@ -1,0 +1,108 @@
+//! End-to-end validation driver (DESIGN.md §4): the full system on a real
+//! small workload, proving all three layers compose.
+//!
+//! Workload: arxiv-like graph (default 8 000 nodes ≈ 1.3 M parameters of
+//! GNN+MLP weights trained in total across partitions) → Leiden-Fusion
+//! k=4 → per-machine GCN training (hundreds of epochs, loss curve logged)
+//! → embedding integration → MLP classifier → test accuracy, compared
+//! against the centralized (k=1) run.
+//!
+//! Run: `cargo run --release --example end_to_end [-- --n 8000 --epochs 200]`
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use leiden_fusion::benchkit::Table;
+use leiden_fusion::cli::Args;
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig, TrainReport};
+use leiden_fusion::data::{synth_arxiv, ArxivLikeConfig, Dataset};
+use leiden_fusion::partition::{leiden_fusion as lf, PartitionQuality, Partitioning};
+use leiden_fusion::runtime::default_artifacts_dir;
+use leiden_fusion::util::{fmt_duration, init_logging, Stopwatch};
+
+fn run(ds: &Dataset, p: &Partitioning, epochs: usize) -> leiden_fusion::Result<TrainReport> {
+    let mut cfg = CoordinatorConfig::new(default_artifacts_dir());
+    cfg.machines = 4;
+    cfg.epochs = epochs;
+    cfg.mlp_epochs = 300;
+    Coordinator::new(cfg).run(ds, p)
+}
+
+fn main() -> leiden_fusion::Result<()> {
+    init_logging();
+    let args = Args::parse(std::env::args())?;
+    let n = args.usize_or("n", 8_000)?;
+    let k = args.usize_or("k", 4)?;
+    let epochs = args.usize_or("epochs", 200)?;
+
+    let total = Stopwatch::start();
+    let ds = synth_arxiv(&ArxivLikeConfig { n, ..Default::default() })?;
+    println!(
+        "[e2e] dataset: {} nodes, {} edges, 40 classes, 64-d features",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+
+    // ---- distributed: LF k=4 --------------------------------------------
+    let sw = Stopwatch::start();
+    let part = lf(&ds.graph, k, 0.05, 0.5, 42)?;
+    let part_secs = sw.secs();
+    let q = PartitionQuality::measure(&ds.graph, &part);
+    println!(
+        "[e2e] LF partitioning: k={k} in {} — edge-cut {:.2}%, ideal={}",
+        fmt_duration(part_secs),
+        q.edge_cut_fraction * 100.0,
+        q.is_structurally_ideal()
+    );
+    assert!(q.is_structurally_ideal());
+
+    let report = run(&ds, &part, epochs)?;
+    println!("[e2e] loss curves (one train call = 10 epochs):");
+    for s in &report.per_partition {
+        let curve: Vec<String> = s
+            .losses
+            .iter()
+            .step_by((s.losses.len() / 8).max(1))
+            .map(|l| format!("{l:.3}"))
+            .collect();
+        println!(
+            "  partition {} ({} nodes): {} … final {:.4}",
+            s.part_id,
+            s.num_nodes,
+            curve.join(" → "),
+            s.losses.last().unwrap()
+        );
+    }
+
+    // ---- centralized baseline (k=1) ---------------------------------------
+    let central_part = Partitioning::new(vec![0; ds.graph.num_nodes()], 1)?;
+    let central = run(&ds, &central_part, epochs)?;
+
+    // ---- report ------------------------------------------------------------
+    let mut t = Table::new(
+        "End-to-end: distributed LF vs centralized",
+        &["setting", "test-acc", "val-acc", "makespan", "Σ train"],
+    );
+    t.row(vec![
+        format!("LF k={k}"),
+        format!("{:.4}", report.eval.test_metric),
+        format!("{:.4}", report.eval.val_metric),
+        fmt_duration(report.max_partition_train_secs),
+        fmt_duration(report.total_train_secs),
+    ]);
+    t.row(vec![
+        "centralized".into(),
+        format!("{:.4}", central.eval.test_metric),
+        format!("{:.4}", central.eval.val_metric),
+        fmt_duration(central.max_partition_train_secs),
+        fmt_duration(central.total_train_secs),
+    ]);
+    t.print();
+    let gap = central.eval.test_metric - report.eval.test_metric;
+    let speedup = central.max_partition_train_secs / report.max_partition_train_secs;
+    println!(
+        "\n[e2e] accuracy gap vs centralized: {:.2} pts; makespan speedup: {speedup:.2}x",
+        gap * 100.0
+    );
+    println!("[e2e] total wall time {}", fmt_duration(total.secs()));
+    println!("[e2e] PASS: three-layer stack (rust → PJRT → Pallas HLO) composed end-to-end");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! Karate tour — reproduces the paper's toy-example artifacts:
+//!
+//! * **Figure 2** — the Leiden→fusion merge trace (which communities merge,
+//!   in what order, and why).
+//! * **Figure 3** — ASCII rendering of the partitions each method produces.
+//! * **Table 1** — isolated nodes / components / edge cuts for LPA, METIS,
+//!   Random and LF at k=2.
+//!
+//! Run: `cargo run --release --example karate_tour`
+
+use leiden_fusion::benchkit::Table;
+use leiden_fusion::graph::karate::karate_graph;
+use leiden_fusion::graph::components_within;
+use leiden_fusion::partition::fusion::{fuse_communities, FusionConfig};
+use leiden_fusion::partition::leiden::{leiden, LeidenConfig};
+use leiden_fusion::partition::{by_name, Partitioning};
+
+fn main() -> leiden_fusion::Result<()> {
+    let g = karate_graph();
+    println!("Zachary's karate club: {} nodes, {} edges\n", g.num_nodes(), g.num_edges());
+
+    // ---- Figure 2: Leiden communities + fusion trace --------------------
+    let cap = (34.0f64 / 2.0 * 1.05 * 0.5).ceil() as usize; // β·max_part_size
+    let communities = leiden(
+        &g,
+        &LeidenConfig { max_community_size: cap, seed: 1, ..Default::default() },
+    );
+    println!("Leiden found {} communities (size cap {cap}):", communities.k());
+    for (c, members) in communities.members().iter().enumerate() {
+        println!("  community {c}: {members:?}");
+    }
+    println!("\nfusion trace to k=2 (Algorithm 1: smallest ∪ largest-cut neighbour):");
+    // replicate the fusion loop step by step for the trace
+    let mut current = communities.clone();
+    while current.k() > 2 {
+        let sizes = current.sizes();
+        let (c_min, _) = sizes
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s > 0)
+            .min_by_key(|&(_, &s)| s)
+            .unwrap();
+        // largest-edge-cut neighbour of c_min
+        let mut cuts = std::collections::HashMap::new();
+        for (u, v, _) in g.edges() {
+            let (pu, pv) = (current.part_of(u), current.part_of(v));
+            if pu != pv && (pu == c_min as u32 || pv == c_min as u32) {
+                let other = if pu == c_min as u32 { pv } else { pu };
+                *cuts.entry(other).or_insert(0usize) += 1;
+            }
+        }
+        let (&target, &cut) = cuts.iter().max_by_key(|&(_, &c)| c).unwrap();
+        println!(
+            "  merge community {c_min} ({} nodes) into {target} ({} nodes) — {cut} shared edges",
+            sizes[c_min], sizes[target as usize]
+        );
+        let fused = fuse_communities(
+            &g,
+            &current,
+            &FusionConfig { k: current.k() - 1, max_part_size: 18 },
+        )?;
+        current = fused;
+    }
+
+    // ---- Figure 3: partition renderings ---------------------------------
+    println!("\npartition renderings (● partition 0, ○ partition 1):");
+    let mut table1 = Table::new(
+        "Table 1: partitioning quality on Karate (k=2)",
+        &["method", "isolated P0", "isolated P1", "components P0", "components P1", "edge cuts"],
+    );
+    for method in ["lpa", "metis", "random", "lf"] {
+        let p = by_name(method, 3)?.partition(&g, 2)?;
+        println!("\n  {method}:");
+        render_partitions(&g, &p);
+        let mut row = vec![method.to_string()];
+        let mut iso = Vec::new();
+        let mut comps = Vec::new();
+        for part in 0..2u32 {
+            let mask = p.mask(part);
+            if mask.iter().any(|&b| b) {
+                let info = components_within(&g, &mask);
+                iso.push(info.isolated.to_string());
+                comps.push(info.num_components().to_string());
+            } else {
+                iso.push("-".into());
+                comps.push("0".into());
+            }
+        }
+        row.extend(iso);
+        row.extend(comps);
+        row.push(leiden_fusion::partition::cut_edges(&g, &p).to_string());
+        table1.row(row);
+    }
+    table1.print();
+    println!("\n(the paper's Table 1 shape: LF = 0 isolated, 1 component each, fewest cuts)");
+    Ok(())
+}
+
+/// Tiny ASCII adjacency rendering: nodes grouped by partition.
+fn render_partitions(g: &leiden_fusion::graph::CsrGraph, p: &Partitioning) {
+    for part in 0..p.k() as u32 {
+        let members: Vec<u32> = (0..g.num_nodes() as u32)
+            .filter(|&v| p.part_of(v) == part)
+            .collect();
+        let marker = if part == 0 { "●" } else { "○" };
+        println!("    {marker} P{part} ({:2} nodes): {members:?}", members.len());
+    }
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX models + AOT.
+
+Nothing in this package is imported at runtime; ``aot.py`` lowers the
+models to HLO text artifacts which the rust runtime loads via PJRT.
+"""

@@ -1,0 +1,192 @@
+"""AOT pipeline: lower every ArtifactSpec to HLO **text** + manifest.json.
+
+Interchange is HLO text, NOT ``lowered.compile().serialize()`` — jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 rust crate links) rejects with
+``proto.id() <= INT_MAX``. The HLO *text* parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts [--quick] [--force]
+
+Idempotence: each artifact records a spec hash in the manifest; unchanged
+specs with an existing .hlo.txt are skipped, so ``make artifacts`` is cheap
+when nothing changed.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import specs as S
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _labels_shape(task, n, c):
+    if task == "multiclass":
+        return ((n,), "i32")
+    return ((n, c), "f32")
+
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def build_io(spec: S.ArtifactSpec):
+    """(fn, input descriptors) for a spec. Input order == HLO param order."""
+    n, e, f, h, c, L = spec.n, spec.e, spec.f, spec.h, spec.c, spec.layers
+    if spec.model == "mlp":
+        pshapes = M.mlp_param_shapes(f, h, c)
+    elif spec.model == "gcn":
+        pshapes = M.gcn_param_shapes(f, h, c, L)
+    else:
+        pshapes = M.sage_param_shapes(f, h, c, L)
+
+    def pdesc(prefix):
+        return [(f"{prefix}{i}", list(s), "f32") for i, s in enumerate(pshapes)]
+
+    inputs = []
+    if spec.role == "train":
+        inputs += pdesc("p")
+        inputs += pdesc("m")
+        inputs += pdesc("v")
+        inputs += [("t", [], "f32")]
+        ysh, ydt = _labels_shape(spec.task, n, c)
+        if spec.model == "mlp":
+            inputs += [("x", [n, f], "f32")]
+        else:
+            inputs += [("x", [n, f], "f32"), ("src", [e], "i32"),
+                       ("dst", [e], "i32"), ("ew", [e], "f32")]
+        inputs += [("y", list(ysh), ydt), ("mask", [n], "f32")]
+        outputs = pdesc("p") + pdesc("m") + pdesc("v") + [("t", [], "f32"),
+                                                          ("loss", [], "f32")]
+        if spec.model == "mlp":
+            fn, _ = M.make_mlp_train_step(
+                spec.task, lr=spec.lr, epochs_per_call=spec.epochs_per_call,
+                use_pallas=spec.use_pallas)
+        else:
+            fn, _ = M.make_gnn_train_step(
+                spec.model, spec.task, layers=L, lr=spec.lr,
+                epochs_per_call=spec.epochs_per_call, use_pallas=spec.use_pallas)
+    elif spec.role == "eval":
+        inputs += pdesc("p")
+        inputs += [("x", [n, f], "f32"), ("src", [e], "i32"),
+                   ("dst", [e], "i32"), ("ew", [e], "f32")]
+        outputs = [("emb", [n, h], "f32"), ("logits", [n, c], "f32")]
+        fn, _ = M.make_gnn_eval(spec.model, layers=L, use_pallas=spec.use_pallas)
+    elif spec.role == "pred":
+        inputs += pdesc("p")
+        inputs += [("x", [n, f], "f32")]
+        outputs = [("logits", [n, c], "f32")]
+        fn, _ = M.make_mlp_predict(use_pallas=spec.use_pallas)
+    else:
+        raise ValueError(spec.role)
+    return fn, inputs, outputs
+
+
+def lower_spec(spec: S.ArtifactSpec) -> tuple[str, list, list]:
+    fn, inputs, outputs = build_io(spec)
+    args = [_sds(tuple(sh), _DT[dt]) for _, sh, dt in inputs]
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def spec_hash(spec: S.ArtifactSpec) -> str:
+    blob = json.dumps(spec.dims(), sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only build the smoke artifacts (fast CI path)")
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    specs = S.smoke_specs() if args.quick else S.full_specs()
+    if args.only:
+        keys = args.only.split(",")
+        specs = [s for s in specs if any(k in s.name for k in keys)]
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as fh:
+                old = {a["name"]: a for a in json.load(fh)["artifacts"]}
+        except Exception:
+            old = {}
+
+    artifacts = []
+    built = skipped = 0
+    for spec in specs:
+        fname = f"{spec.name}.hlo.txt"
+        fpath = os.path.join(args.out, fname)
+        hsh = spec_hash(spec)
+        prev = old.get(spec.name)
+        if (not args.force and prev and prev.get("hash") == hsh
+                and os.path.exists(fpath)):
+            artifacts.append(prev)
+            skipped += 1
+            continue
+        t0 = time.time()
+        text, inputs, outputs = lower_spec(spec)
+        with open(fpath, "w") as fh:
+            fh.write(text)
+        built += 1
+        print(f"[aot] {spec.name}: {len(text)/1024:.0f} KiB in "
+              f"{time.time()-t0:.1f}s", flush=True)
+        artifacts.append({
+            "name": spec.name,
+            "file": fname,
+            "hash": hsh,
+            "model": spec.model,
+            "task": spec.task,
+            "role": spec.role,
+            "dims": spec.dims(),
+            "inputs": [{"name": nm, "shape": sh, "dtype": dt}
+                       for nm, sh, dt in inputs],
+            "outputs": [{"name": nm, "shape": sh, "dtype": dt}
+                        for nm, sh, dt in outputs],
+        })
+
+    # Keep previously-built artifacts not in this run's spec list (e.g. a
+    # --quick run must not drop the full grid from the manifest).
+    names = {a["name"] for a in artifacts}
+    for name, prev in old.items():
+        if name not in names and os.path.exists(os.path.join(args.out, prev["file"])):
+            artifacts.append(prev)
+
+    with open(manifest_path, "w") as fh:
+        json.dump({"version": 1, "artifacts": artifacts}, fh, indent=1)
+    print(f"[aot] built={built} skipped={skipped} total={len(artifacts)} "
+          f"→ {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

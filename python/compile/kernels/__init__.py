@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The GNN hot path is ``A_norm @ (X @ W)`` — a dense feature transform
+surrounded by a sparse weighted aggregation. Both halves are implemented as
+Pallas kernels (interpret=True — see DESIGN.md §Hardware-Adaptation) and
+checked against the pure-jnp oracles in :mod:`ref`.
+"""
+
+from .matmul import matmul, matmul_op  # noqa: F401
+from .aggregate import aggregate, aggregate_op  # noqa: F401
+from . import ref  # noqa: F401

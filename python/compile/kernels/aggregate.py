@@ -1,0 +1,116 @@
+"""Edge-block weighted aggregation kernel — the sparse half of the hot path.
+
+Computes ``out[dst] += w * x[src]`` over an edge list — i.e. ``A_norm @ X``
+where ``A_norm`` is given in weighted-COO form (src, dst, w). The L3 rust
+coordinator precomputes the normalisation weights (GCN symmetric norm or
+SAGE mean) and pads the edge list to the artifact's edge bucket with
+``(src=0, dst=0, w=0)`` entries, which are numerically inert.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA formulation of this
+kernel is an atomic scatter-add over threadblocks. On TPU the grid is
+sequential, so instead we stream fixed-size edge blocks (src, dst, w)
+through VMEM and accumulate into a VMEM-resident output tile with a
+``@pl.when(first block)`` zero-init; the within-block duplicate-dst
+reduction is a segment_sum (a VPU-friendly sorted reduction), not atomics.
+The node-feature matrix is held unblocked here (fits VMEM for our feature
+widths); a production TPU variant would additionally tile the feature axis
+— that schedule lives entirely in the BlockSpec below.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Edge-block size: 16384 edges x (4+4+4) B = 192 KiB of edge data streamed
+# through VMEM per step plus a [16384, F] gather intermediate; the scatter
+# target (whole [N, F] tile) stays VMEM-resident across the sequential
+# grid. Block-size sweep results: EXPERIMENTS.md §Perf.
+DEFAULT_EDGE_BLOCK = 16384
+
+
+def _aggregate_kernel(src_ref, dst_ref, w_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    src = src_ref[...]
+    dst = dst_ref[...]
+    w = w_ref[...]
+    x = x_ref[...]
+    gathered = x[src] * w[:, None]
+    # Within-block duplicate destinations reduce via segment_sum; across
+    # blocks the sequential grid makes the += race-free.
+    o_ref[...] += jax.ops.segment_sum(gathered, dst, num_segments=o_ref.shape[0])
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("edge_block", "interpret"))
+def aggregate(x, src, dst, w, *, edge_block: int = DEFAULT_EDGE_BLOCK, interpret: bool = True):
+    """Weighted neighbour aggregation ``out[d] = sum_{(s,d,w)} w * x[s]``.
+
+    Args:
+      x:   ``[N, F]`` float node features.
+      src: ``[E]`` int32 source indices (gather side).
+      dst: ``[E]`` int32 destination indices (scatter side).
+      w:   ``[E]`` float edge weights; padding edges use ``w == 0``.
+
+    The edge list is zero-padded to a multiple of ``edge_block``; pad edges
+    are ``(0, 0, 0.0)`` and contribute nothing.
+    """
+    if src.shape != dst.shape or src.shape != w.shape:
+        raise ValueError(f"edge arrays disagree: {src.shape} {dst.shape} {w.shape}")
+    n, _f = x.shape
+    e = src.shape[0]
+    ep = max(_ceil_to(e, edge_block), edge_block)
+    src = jnp.pad(src, (0, ep - e))
+    dst = jnp.pad(dst, (0, ep - e))
+    w = jnp.pad(w, (0, ep - e))
+
+    return pl.pallas_call(
+        _aggregate_kernel,
+        grid=(ep // edge_block,),
+        in_specs=[
+            pl.BlockSpec((edge_block,), lambda i: (i,)),
+            pl.BlockSpec((edge_block,), lambda i: (i,)),
+            pl.BlockSpec((edge_block,), lambda i: (i,)),
+            pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(x.shape, lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(src, dst, w, x)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper. The adjoint of a weighted COO aggregation is the
+# same aggregation over the *reversed* edge list (gather↔scatter swap):
+#   out[d] = Σ_{e: dst_e = d} w_e · x[src_e]
+#   dX[s]  = Σ_{e: src_e = s} w_e · G[dst_e]      (runs on the same kernel)
+#   dW_e   = ⟨G[dst_e], x[src_e]⟩                 (dense VPU reduction)
+# src/dst are integer-valued → cotangent None.
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def aggregate_op(x, src, dst, w):
+    """Differentiable weighted aggregation on the edge-block Pallas kernel."""
+    return aggregate(x, src, dst, w)
+
+
+def _agg_fwd(x, src, dst, w):
+    return aggregate(x, src, dst, w), (x, src, dst, w)
+
+
+def _agg_bwd(res, g):
+    x, src, dst, w = res
+    dx = aggregate(g, dst, src, w)
+    dw = (g[dst] * x[src]).sum(axis=-1)
+    return dx, None, None, dw
+
+
+aggregate_op.defvjp(_agg_fwd, _agg_bwd)

@@ -1,0 +1,115 @@
+"""Tiled Pallas matmul — the dense half of the GNN hot path.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the (M, K) x (K, N) product is
+tiled into ``block_m x block_k`` / ``block_k x block_n`` VMEM tiles sized for
+the 128x128 MXU systolic array. The grid iterates (m, n, k) with k innermost;
+the f32 accumulator lives in the output VMEM tile and is zero-initialised on
+the first k step — the sequential-grid accumulation idiom (TPU grids are
+sequential, so the read-modify-write is race-free).
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. 128 is the systolic-array edge on all current TPU gens.
+DEFAULT_BLOCK = 128
+
+# Row-tile used by default for the (tall × skinny) GNN feature transforms:
+# 512·128·4 B = 256 KiB per operand tile — 4 MXU passes per tile with the
+# f32 accumulator resident in VMEM, well under the ~16 MiB/core budget.
+# (Interpret-mode block-size sweeps and the resulting CPU-testbed policy
+# are recorded in EXPERIMENTS.md §Perf.)
+DEFAULT_BLOCK_M = 512
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (m, n, k) grid step: o[m, n] += x[m, k] @ w[k, n]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulate regardless of input dtype (MXU accumulates in f32).
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return ((x + b - 1) // b) * b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(
+    x,
+    w,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+):
+    """``x @ w`` via the tiled Pallas kernel.
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded
+    to the tile grid and the result is sliced back. Zero padding is exact
+    for matmul (contributes 0 to every accumulator).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 inputs, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    _, n = w.shape
+    mp, kp, np_ = _ceil_to(m, block_m), _ceil_to(k, block_k), _ceil_to(n, block_n)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // block_m, np_ // block_n, kp // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, l: (i, l)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n].astype(jnp.result_type(x.dtype, w.dtype, jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper: pallas_call has no automatic transpose rule, so the
+# backward pass is supplied analytically — and itself runs on the Pallas
+# kernel (dX = G @ Wᵀ and dW = Xᵀ @ G are MXU tiles too).
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul_op(x, w):
+    """Differentiable ``x @ w`` on the tiled Pallas kernel."""
+    return matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    return matmul(g, w.T), matmul(x.T, g)
+
+
+matmul_op.defvjp(_matmul_fwd, _matmul_bwd)

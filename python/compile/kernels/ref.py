@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels and GNN layers.
+
+Everything here is the *reference semantics*; kernels and models are tested
+against these via pytest/hypothesis at build time. Nothing in this file is
+on any compiled path unless a spec explicitly selects ``use_pallas=False``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Oracle for kernels.matmul."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+
+def aggregate_ref(x, src, dst, w):
+    """Oracle for kernels.aggregate: ``out[d] = sum w * x[s]``."""
+    gathered = x[src] * w[:, None]
+    return jax.ops.segment_sum(gathered, dst, num_segments=x.shape[0]).astype(x.dtype)
+
+
+def gcn_layer_ref(x, src, dst, w, weight, bias):
+    """One GCN layer (paper eq. 1 with precomputed normalisation weights)."""
+    return aggregate_ref(matmul_ref(x, weight), src, dst, w) + bias
+
+
+def sage_layer_ref(x, src, dst, w, w_self, w_neigh, bias):
+    """One GraphSAGE-mean layer (paper eq. 2, concat folded into two mats)."""
+    agg = aggregate_ref(x, src, dst, w)
+    return matmul_ref(x, w_self) + matmul_ref(agg, w_neigh) + bias

@@ -1,0 +1,52 @@
+"""Masked losses for the two OGB-style tasks.
+
+* ``multiclass`` — softmax cross-entropy over int32 labels (arxiv-like).
+* ``multilabel`` — per-task sigmoid BCE over float {0,1} targets
+  (proteins-like, 112 independent binary tasks).
+
+All losses are masked: padding nodes and non-train nodes carry
+``mask == 0`` and contribute nothing to the mean.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_softmax_xent(logits, labels, mask):
+    """Mean masked softmax cross-entropy.
+
+    Args:
+      logits: ``[N, C]`` float.
+      labels: ``[N]`` int32 class ids (0 on padding is fine — masked out).
+      mask:   ``[N]`` float {0, 1}.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom
+
+
+def masked_sigmoid_bce(logits, targets, mask):
+    """Mean masked sigmoid binary cross-entropy over all tasks.
+
+    Numerically stable formulation: ``max(x,0) - x*y + log1p(exp(-|x|))``.
+
+    Args:
+      logits:  ``[N, C]`` float.
+      targets: ``[N, C]`` float in {0, 1}.
+      mask:    ``[N]`` float {0, 1} (per-node; broadcast over tasks).
+    """
+    x, y = logits, targets
+    per = jnp.maximum(x, 0.0) - x * y + jnp.log1p(jnp.exp(-jnp.abs(x)))
+    per_node = per.mean(axis=-1)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (per_node * mask).sum() / denom
+
+
+def loss_fn(task: str):
+    """Select the loss for a task kind (static at lowering time)."""
+    if task == "multiclass":
+        return masked_softmax_xent
+    if task == "multilabel":
+        return masked_sigmoid_bce
+    raise ValueError(f"unknown task {task!r}")

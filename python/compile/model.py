@@ -1,0 +1,242 @@
+"""Layer-2 JAX models: GCN, GraphSAGE-mean, and the integration MLP.
+
+All model functions operate on *flat positional argument lists* so that the
+HLO parameter order is explicit and stable for the rust runtime (the
+manifest written by ``aot.py`` records the exact order). Graph structure
+arrives as a weighted COO edge list ``(src, dst, w)`` whose normalisation
+weights are precomputed by the L3 coordinator:
+
+* GCN: self-loops added, symmetric normalisation
+  ``w_uv = 1 / sqrt((1+deg_u)(1+deg_v))`` (Kipf-style; paper eq. 1).
+* SAGE: in-edge mean ``w_uv = 1 / deg_in(v)``; the self path is a separate
+  weight matrix (paper eq. 2 concat folded into ``W_self, W_neigh``).
+
+Padding contract (rust side must uphold; property-tested on both sides):
+pad nodes have zero features and ``mask == 0``; pad edges are
+``(src=0, dst=0, w=0.0)``. Under this contract every artifact is exact on
+the un-padded subgraph.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import losses, optim
+from . import kernels
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Parameter construction
+# --------------------------------------------------------------------------
+
+
+def gcn_param_shapes(f, h, c, layers):
+    """Flat [W0, b0, W1, b1, ...] shape list for an ``layers``-layer GCN."""
+    dims = [f] + [h] * (layers - 1) + [c]
+    shapes = []
+    for i in range(layers):
+        shapes.append((dims[i], dims[i + 1]))
+        shapes.append((dims[i + 1],))
+    return shapes
+
+
+def sage_param_shapes(f, h, c, layers):
+    """Flat [Wself0, Wneigh0, b0, ...] shape list for GraphSAGE."""
+    dims = [f] + [h] * (layers - 1) + [c]
+    shapes = []
+    for i in range(layers):
+        shapes.append((dims[i], dims[i + 1]))  # W_self
+        shapes.append((dims[i], dims[i + 1]))  # W_neigh
+        shapes.append((dims[i + 1],))          # bias
+    return shapes
+
+
+def mlp_param_shapes(d_in, h, c):
+    """Flat [W0, b0, W1, b1] for the 2-layer integration MLP."""
+    return [(d_in, h), (h,), (h, c), (c,)]
+
+
+def init_params(shapes, key):
+    """Glorot-uniform weights / zero biases for a flat shape list."""
+    params = []
+    for s in shapes:
+        if len(s) == 2:
+            key, sub = jax.random.split(key)
+            lim = jnp.sqrt(6.0 / (s[0] + s[1]))
+            params.append(jax.random.uniform(sub, s, jnp.float32, -lim, lim))
+        else:
+            params.append(jnp.zeros(s, jnp.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _mm(x, w, use_pallas):
+    return kernels.matmul_op(x, w) if use_pallas else ref.matmul_ref(x, w)
+
+
+def _agg(x, src, dst, w, use_pallas):
+    return (
+        kernels.aggregate_op(x, src, dst, w)
+        if use_pallas
+        else ref.aggregate_ref(x, src, dst, w)
+    )
+
+
+def gcn_forward(params, x, src, dst, ew, *, layers, use_pallas=True):
+    """GCN forward; returns ``(embedding [N,H], logits [N,C])``.
+
+    The embedding is the post-activation output of the penultimate layer —
+    the vector the paper's integration stage feeds to the MLP classifier.
+    """
+    h = x
+    emb = x
+    for layer in range(layers):
+        w_mat = params[2 * layer]
+        b = params[2 * layer + 1]
+        h = _agg(_mm(h, w_mat, use_pallas), src, dst, ew, use_pallas) + b
+        if layer < layers - 1:
+            h = jax.nn.relu(h)
+            emb = h
+    return emb, h
+
+
+def sage_forward(params, x, src, dst, ew, *, layers, use_pallas=True):
+    """GraphSAGE-mean forward; returns ``(embedding, logits)``."""
+    h = x
+    emb = x
+    for layer in range(layers):
+        w_self = params[3 * layer]
+        w_neigh = params[3 * layer + 1]
+        b = params[3 * layer + 2]
+        agg = _agg(h, src, dst, ew, use_pallas)
+        h = _mm(h, w_self, use_pallas) + _mm(agg, w_neigh, use_pallas) + b
+        if layer < layers - 1:
+            h = jax.nn.relu(h)
+            emb = h
+    return emb, h
+
+
+def mlp_forward(params, x, *, use_pallas=True):
+    """2-layer MLP over integrated embeddings; returns logits."""
+    w0, b0, w1, b1 = params
+    h = jax.nn.relu(_mm(x, w0, use_pallas) + b0)
+    return _mm(h, w1, use_pallas) + b1
+
+
+_FORWARDS = {"gcn": (gcn_forward, 2), "sage": (sage_forward, 3), "mlp": (mlp_forward, None)}
+
+
+# --------------------------------------------------------------------------
+# Train / eval step builders (closed over static dims; flat signatures)
+# --------------------------------------------------------------------------
+
+
+def _labels_spec(task, n, c):
+    if task == "multiclass":
+        return jax.ShapeDtypeStruct((n,), jnp.int32)
+    return jax.ShapeDtypeStruct((n, c), jnp.float32)
+
+
+def make_gnn_train_step(model, task, *, layers, lr=1e-2, wd=0.0,
+                        epochs_per_call=1, use_pallas=True):
+    """Build ``step(*flat_args) -> flat_outputs`` for a GNN.
+
+    Flat input order (P = number of param tensors):
+      ``params[0..P) , m[0..P) , v[0..P) , t , x , src , dst , ew , y , mask``
+    Flat output order:
+      ``params'[0..P) , m'[0..P) , v'[0..P) , t' , loss``
+
+    ``epochs_per_call`` full-batch epochs run inside one execution via
+    ``lax.fori_loop`` to amortise the host↔PJRT round-trip.
+    """
+    fwd, per_layer = _FORWARDS[model]
+    nparam = per_layer * layers
+    loss_of = losses.loss_fn(task)
+
+    def one_epoch(params, m, v, t, x, src, dst, ew, y, mask):
+        def compute_loss(ps):
+            _, logits = fwd(ps, x, src, dst, ew, layers=layers, use_pallas=use_pallas)
+            return loss_of(logits, y, mask)
+
+        loss, grads = jax.value_and_grad(compute_loss)(params)
+        params, m, v, t = optim.adam_update(params, grads, m, v, t, lr=lr, wd=wd)
+        return params, m, v, t, loss
+
+    def step(*args):
+        params = list(args[0:nparam])
+        m = list(args[nparam : 2 * nparam])
+        v = list(args[2 * nparam : 3 * nparam])
+        t = args[3 * nparam]
+        x, src, dst, ew, y, mask = args[3 * nparam + 1 :]
+
+        def body(_, carry):
+            params, m, v, t, _ = carry
+            return one_epoch(params, m, v, t, x, src, dst, ew, y, mask)
+
+        init = (params, m, v, t, jnp.zeros((), jnp.float32))
+        params, m, v, t, loss = jax.lax.fori_loop(0, epochs_per_call, body, init)
+        return tuple(params) + tuple(m) + tuple(v) + (t, loss)
+
+    return step, nparam
+
+
+def make_gnn_eval(model, *, layers, use_pallas=True):
+    """Build ``eval(*params, x, src, dst, ew) -> (emb, logits)``."""
+    fwd, per_layer = _FORWARDS[model]
+    nparam = per_layer * layers
+
+    def ev(*args):
+        params = list(args[0:nparam])
+        x, src, dst, ew = args[nparam:]
+        emb, logits = fwd(params, x, src, dst, ew, layers=layers, use_pallas=use_pallas)
+        return emb, logits
+
+    return ev, nparam
+
+
+def make_mlp_train_step(task, *, lr=1e-2, wd=0.0, epochs_per_call=1, use_pallas=True):
+    """Build the integration-MLP train step (flat order as for GNNs,
+    with ``x`` being the ``[N, D]`` embedding matrix and no edge inputs)."""
+    loss_of = losses.loss_fn(task)
+    nparam = 4
+
+    def one_epoch(params, m, v, t, x, y, mask):
+        def compute_loss(ps):
+            logits = mlp_forward(ps, x, use_pallas=use_pallas)
+            return loss_of(logits, y, mask)
+
+        loss, grads = jax.value_and_grad(compute_loss)(params)
+        params, m, v, t = optim.adam_update(params, grads, m, v, t, lr=lr, wd=wd)
+        return params, m, v, t, loss
+
+    def step(*args):
+        params = list(args[0:nparam])
+        m = list(args[nparam : 2 * nparam])
+        v = list(args[2 * nparam : 3 * nparam])
+        t = args[3 * nparam]
+        x, y, mask = args[3 * nparam + 1 :]
+
+        def body(_, carry):
+            params, m, v, t, _ = carry
+            return one_epoch(params, m, v, t, x, y, mask)
+
+        init = (params, m, v, t, jnp.zeros((), jnp.float32))
+        params, m, v, t, loss = jax.lax.fori_loop(0, epochs_per_call, body, init)
+        return tuple(params) + tuple(m) + tuple(v) + (t, loss)
+
+    return step, nparam
+
+
+def make_mlp_predict(use_pallas=True):
+    """Build ``predict(*params, x) -> logits`` for the integration MLP."""
+
+    def pred(*args):
+        params = list(args[0:4])
+        (x,) = args[4:]
+        return (mlp_forward(params, x, use_pallas=use_pallas),)
+
+    return pred, 4

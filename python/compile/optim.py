@@ -1,0 +1,33 @@
+"""Minimal Adam, expressed over flat parameter lists.
+
+Hyper-parameters (lr, betas, eps, weight decay) are baked into the lowered
+HLO as constants — the rust runtime only threads the (m, v, t) state
+through successive executions.
+"""
+
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    """Zero first/second-moment state matching a flat param list."""
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.zeros((), jnp.float32)
+    return m, v, t
+
+
+def adam_update(params, grads, m, v, t, *, lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """One Adam step over flat lists; returns (params', m', v', t')."""
+    t = t + 1.0
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        if wd:
+            g = g + wd * p
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * (g * g)
+        mhat = mi / (1.0 - b1**t)
+        vhat = vi / (1.0 - b2**t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, t

@@ -1,0 +1,131 @@
+"""Artifact grid: the single source of truth for AOT shape buckets.
+
+The rust runtime never hard-codes shapes — it reads ``artifacts/manifest.json``
+(written by ``aot.py`` from these specs) and selects the smallest bucket that
+fits a padded partition. Adding a bucket here and re-running ``make
+artifacts`` is the only step needed to support bigger graphs.
+
+Bucket sizing rationale (DESIGN.md §2, S17): the arxiv-like default dataset
+(~20k nodes, ~160k directed edges incl. self-loops) must fit the largest
+bucket for the centralized k=1 baseline, and k=16 partitions (~1.3k nodes)
+must fit the smallest. proteins-like is ~8x denser, hence the ``dense``
+buckets with a 64x edge ratio.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Optional
+
+# (node_bucket, edge_bucket) — "sparse" ratio 16x for arxiv-like workloads.
+SPARSE_BUCKETS = [
+    (2048, 32768),
+    (4096, 65536),
+    (8192, 131072),
+    (16384, 262144),
+    (32768, 524288),
+]
+
+# 64x edge ratio for the dense proteins-like workloads.
+DENSE_BUCKETS = [
+    (2048, 131072),
+    (4096, 262144),
+    (8192, 524288),
+]
+
+# Model dimensioning (per dataset family).
+ARXIV_DIMS = dict(f=64, h=64, c=40, layers=3)
+PROTEINS_DIMS = dict(f=16, h=64, c=112, layers=3)
+SMOKE_DIMS = dict(f=8, h=8, c=4, layers=2)
+
+EPOCHS_PER_CALL = 10
+LR = 1e-2
+
+
+@dataclass
+class ArtifactSpec:
+    """One HLO artifact to lower: a (model, task, role) at a shape bucket."""
+
+    name: str
+    model: str          # gcn | sage | mlp
+    task: str           # multiclass | multilabel
+    role: str           # train | eval | pred
+    n: int              # node bucket
+    e: int              # edge bucket (0 for mlp)
+    f: int              # input feature dim (embedding dim D for mlp)
+    h: int              # hidden dim
+    c: int              # output classes / tasks
+    layers: int         # GNN layers (2 for mlp, fixed)
+    epochs_per_call: int = EPOCHS_PER_CALL
+    lr: float = LR
+    use_pallas: bool = True
+
+    def dims(self):
+        return asdict(self)
+
+
+# CPU-testbed policy (EXPERIMENTS.md §Perf): interpret-mode Pallas carries a
+# ~34x interpreter overhead vs the XLA-fused jnp path, so Pallas stays on
+# the *real* execution path for buckets up to this node count (which covers
+# the smoke artifacts and every k ≥ 8 arxiv-scale partition), while larger
+# buckets lower the numerically-identical ref path. On real TPU hardware
+# (Mosaic lowering) every bucket would use the Pallas kernels.
+PALLAS_MAX_NODES = 64
+
+
+def _gnn_specs(model, task, dims, buckets, tag):
+    out = []
+    for n, e in buckets:
+        base = f"{model}_{tag}_n{n}_e{e}"
+        common = dict(
+            model=model, task=task, n=n, e=e,
+            use_pallas=n <= PALLAS_MAX_NODES, **dims,
+        )
+        out.append(ArtifactSpec(name=f"{base}_train", role="train", **common))
+        out.append(ArtifactSpec(name=f"{base}_eval", role="eval", **common))
+    return out
+
+
+def _mlp_specs(task, d_in, h, c, n_buckets, tag):
+    out = []
+    for n in n_buckets:
+        base = f"mlp_{tag}_n{n}"
+        common = dict(model="mlp", task=task, n=n, e=0, f=d_in, h=h, c=c,
+                      layers=2, use_pallas=n <= PALLAS_MAX_NODES)
+        out.append(ArtifactSpec(name=f"{base}_train", role="train", **common))
+        out.append(ArtifactSpec(name=f"{base}_pred", role="pred", **common))
+    return out
+
+
+def smoke_specs():
+    """Tiny artifacts for fast runtime integration tests."""
+    specs = []
+    for model in ("gcn", "sage"):
+        common = dict(model=model, task="multiclass", n=64, e=256, **SMOKE_DIMS)
+        specs.append(
+            ArtifactSpec(name=f"{model}_smoke_train", role="train",
+                         epochs_per_call=2, **common)
+        )
+        specs.append(ArtifactSpec(name=f"{model}_smoke_eval", role="eval", **common))
+    specs += [
+        ArtifactSpec(name="mlp_smoke_train", model="mlp", task="multiclass",
+                     role="train", n=64, e=0, f=SMOKE_DIMS["h"], h=8, c=4,
+                     layers=2, epochs_per_call=2),
+        ArtifactSpec(name="mlp_smoke_pred", model="mlp", task="multiclass",
+                     role="pred", n=64, e=0, f=SMOKE_DIMS["h"], h=8, c=4, layers=2),
+    ]
+    return specs
+
+
+def full_specs():
+    """The complete artifact grid for the paper's experiments."""
+    specs = smoke_specs()
+    # arxiv-like: GCN + SAGE multiclass over the sparse buckets.
+    specs += _gnn_specs("gcn", "multiclass", ARXIV_DIMS, SPARSE_BUCKETS, "mc")
+    specs += _gnn_specs("sage", "multiclass", ARXIV_DIMS, SPARSE_BUCKETS, "mc")
+    # proteins-like: SAGE multilabel over the dense buckets (paper Table 2).
+    specs += _gnn_specs("sage", "multilabel", PROTEINS_DIMS, DENSE_BUCKETS, "ml")
+    # Integration MLPs over full-graph embedding matrices.
+    specs += _mlp_specs("multiclass", ARXIV_DIMS["h"], 64, ARXIV_DIMS["c"],
+                        [32768], "mc")
+    specs += _mlp_specs("multilabel", PROTEINS_DIMS["h"], 64, PROTEINS_DIMS["c"],
+                        [8192], "ml")
+    return specs

@@ -1,0 +1,28 @@
+"""Shared fixtures: deterministic RNG and small graph factories."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def random_graph(rng, n, e):
+    """Random weighted COO edge list over n nodes (may have duplicates)."""
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    w = rng.normal(size=e).astype(np.float32)
+    return src, dst, w
+
+
+def ring_graph(n):
+    """Symmetric ring: every node has exactly two neighbours."""
+    import numpy as np
+
+    fwd = np.arange(n)
+    src = np.concatenate([fwd, (fwd + 1) % n]).astype(np.int32)
+    dst = np.concatenate([(fwd + 1) % n, fwd]).astype(np.int32)
+    w = np.full(2 * n, 0.5, np.float32)
+    return src, dst, w

@@ -1,0 +1,175 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+from .conftest import random_graph
+
+
+# ---------------------------------------------------------------- matmul ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_swept(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(k, n)), jnp.float32)
+    got = kernels.matmul(x, w, block_m=16, block_n=16, block_k=16)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (64, 64, 64)])
+def test_matmul_block_shape_invariance(rng, blocks):
+    bm, bn, bk = blocks
+    x = jnp.asarray(rng.normal(size=(50, 30)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(30, 20)), jnp.float32)
+    got = kernels.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_multiple(rng):
+    x = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    np.testing.assert_allclose(
+        kernels.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_bf16_inputs_accumulate_f32(rng):
+    x = jnp.asarray(rng.normal(size=(33, 17)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(17, 9)), jnp.bfloat16)
+    got = kernels.matmul(x, w, block_m=16, block_n=16, block_k=16)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        kernels.matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        kernels.matmul(jnp.zeros((2,)), jnp.zeros((2, 2)))
+
+
+def test_matmul_grad_matches_ref(rng):
+    x = jnp.asarray(rng.normal(size=(20, 12)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(12, 7)), jnp.float32)
+
+    def f_pallas(x, w):
+        return (kernels.matmul_op(x, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (ref.matmul_ref(x, w) ** 2).sum()
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- aggregate ---
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 60),
+    e=st.integers(1, 400),
+    f=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref_swept(n, e, f, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(n, f)), jnp.float32)
+    src, dst, w = random_graph(r, n, e)
+    got = kernels.aggregate(x, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                            edge_block=64)
+    want = ref.aggregate_ref(x, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_zero_weight_padding_is_inert(rng):
+    """The padding contract: (src=0, dst=0, w=0) edges change nothing."""
+    n, e, f = 30, 100, 16
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src, dst, w = random_graph(rng, n, e)
+    base = kernels.aggregate(x, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                             edge_block=32)
+    pad = 57
+    srcp = jnp.asarray(np.concatenate([src, np.zeros(pad, np.int32)]))
+    dstp = jnp.asarray(np.concatenate([dst, np.zeros(pad, np.int32)]))
+    wp = jnp.asarray(np.concatenate([w, np.zeros(pad, np.float32)]))
+    padded = kernels.aggregate(x, srcp, dstp, wp, edge_block=32)
+    np.testing.assert_allclose(base, padded, rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_duplicate_edges_accumulate(rng):
+    n, f = 8, 4
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src = jnp.asarray([1, 1, 1], jnp.int32)
+    dst = jnp.asarray([3, 3, 3], jnp.int32)
+    w = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    got = kernels.aggregate(x, src, dst, w, edge_block=8)
+    np.testing.assert_allclose(got[3], 6.0 * x[1], rtol=1e-5)
+    assert np.allclose(np.delete(np.asarray(got), 3, axis=0), 0.0)
+
+
+def test_aggregate_block_boundary_accumulation(rng):
+    """Edges hitting the same dst from different grid blocks must sum."""
+    n, f, eb = 4, 3, 8
+    e = 3 * eb  # three blocks
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src = jnp.asarray(np.full(e, 2, np.int32))
+    dst = jnp.asarray(np.full(e, 1, np.int32))
+    w = jnp.asarray(np.ones(e, np.float32))
+    got = kernels.aggregate(x, src, dst, w, edge_block=eb)
+    np.testing.assert_allclose(got[1], e * x[2], rtol=1e-5)
+
+
+def test_aggregate_rejects_mismatched_edges():
+    x = jnp.zeros((4, 2))
+    with pytest.raises(ValueError):
+        kernels.aggregate(x, jnp.zeros(3, jnp.int32), jnp.zeros(4, jnp.int32),
+                          jnp.zeros(3))
+
+
+def test_aggregate_grad_matches_ref(rng):
+    n, e, f = 12, 40, 5
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src, dst, w = random_graph(rng, n, e)
+    src, dst, w = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+
+    def f_pallas(x, w):
+        return (kernels.aggregate_op(x, src, dst, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (ref.aggregate_ref(x, src, dst, w) ** 2).sum()
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+
+
+def test_aggregate_reverse_edges_is_transpose(rng):
+    """⟨A x, y⟩ == ⟨x, Aᵀ y⟩ with Aᵀ given by swapping src/dst."""
+    n, e, f = 15, 60, 6
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src, dst, w = random_graph(rng, n, e)
+    src, dst, w = jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+    lhs = (kernels.aggregate(x, src, dst, w, edge_block=32) * y).sum()
+    rhs = (x * kernels.aggregate(y, dst, src, w, edge_block=32)).sum()
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)

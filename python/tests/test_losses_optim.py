@@ -1,0 +1,102 @@
+"""Loss and optimizer unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import losses, optim
+
+
+# --------------------------------------------------------------- losses ---
+
+
+def test_softmax_xent_uniform_logits():
+    n, c = 6, 4
+    loss = losses.masked_softmax_xent(jnp.zeros((n, c)), jnp.zeros(n, jnp.int32),
+                                      jnp.ones(n))
+    np.testing.assert_allclose(loss, np.log(c), rtol=1e-5)
+
+
+def test_softmax_xent_respects_mask():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    labels = jnp.asarray([0, 0], jnp.int32)
+    # node 1 is badly wrong but masked out
+    loss = losses.masked_softmax_xent(logits, labels, jnp.asarray([1.0, 0.0]))
+    assert float(loss) < 1e-3
+
+
+def test_softmax_xent_empty_mask_is_zero():
+    loss = losses.masked_softmax_xent(jnp.ones((3, 2)), jnp.zeros(3, jnp.int32),
+                                      jnp.zeros(3))
+    assert float(loss) == 0.0
+
+
+def test_bce_matches_naive_formula():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(5, 3)), jnp.float32)
+    y = jnp.asarray((r.random((5, 3)) < 0.5).astype(np.float32))
+    mask = jnp.ones(5)
+    p = jax.nn.sigmoid(x)
+    naive = -(y * jnp.log(p) + (1 - y) * jnp.log1p(-p)).mean(axis=-1).mean()
+    got = losses.masked_sigmoid_bce(x, y, mask)
+    np.testing.assert_allclose(got, naive, rtol=1e-4)
+
+
+def test_bce_extreme_logits_stable():
+    x = jnp.asarray([[1000.0, -1000.0]])
+    y = jnp.asarray([[1.0, 0.0]])
+    loss = losses.masked_sigmoid_bce(x, y, jnp.ones(1))
+    assert np.isfinite(float(loss)) and float(loss) < 1e-5
+
+
+def test_loss_fn_dispatch():
+    assert losses.loss_fn("multiclass") is losses.masked_softmax_xent
+    assert losses.loss_fn("multilabel") is losses.masked_sigmoid_bce
+    with pytest.raises(ValueError):
+        losses.loss_fn("regression")
+
+
+# ---------------------------------------------------------------- optim ---
+
+
+def test_adam_init_shapes():
+    params = [jnp.ones((2, 3)), jnp.ones(4)]
+    m, v, t = optim.adam_init(params)
+    assert [p.shape for p in m] == [(2, 3), (4,)]
+    assert float(t) == 0.0
+    assert all(float(jnp.abs(x).sum()) == 0.0 for x in m + v)
+
+
+def test_adam_first_step_is_lr_sized():
+    """After one step from zero state, |Δp| ≈ lr regardless of grad scale."""
+    for scale in (1e-3, 1.0, 1e3):
+        p = [jnp.zeros(3)]
+        g = [jnp.full(3, scale)]
+        m, v, t = optim.adam_init(p)
+        newp, *_ = optim.adam_update(p, g, m, v, t, lr=0.1)
+        np.testing.assert_allclose(np.abs(np.asarray(newp[0])), 0.1, rtol=1e-3)
+
+
+def test_adam_converges_on_quadratic():
+    def f(p):
+        return ((p - 3.0) ** 2).sum()
+
+    p = [jnp.zeros(4)]
+    m, v, t = optim.adam_init(p)
+    for _ in range(500):
+        g = [jax.grad(lambda q: f(q))(p[0])]
+        p, m, v, t = optim.adam_update(p, g, m, v, t, lr=0.1)
+    np.testing.assert_allclose(np.asarray(p[0]), 3.0, atol=0.05)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_adam_weight_decay_shrinks_params(seed):
+    r = np.random.default_rng(seed)
+    p = [jnp.asarray(r.normal(size=5), jnp.float32)]
+    g = [jnp.zeros(5)]
+    m, v, t = optim.adam_init(p)
+    newp, *_ = optim.adam_update(p, g, m, v, t, lr=0.01, wd=0.1)
+    assert float(jnp.abs(newp[0]).sum()) <= float(jnp.abs(p[0]).sum()) + 1e-6

@@ -1,0 +1,240 @@
+"""L2 model correctness: layer refs, gradients, convergence, padding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+from .conftest import random_graph, ring_graph
+
+
+def _graph_inputs(rng, n, e, f):
+    x = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src, dst, w = random_graph(rng, n, e)
+    return x, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+
+
+# ------------------------------------------------------------- forwards ---
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), layers=st.integers(2, 4))
+def test_gcn_forward_matches_layerwise_ref(seed, layers):
+    r = np.random.default_rng(seed)
+    n, e, f, h, c = 20, 60, 6, 5, 3
+    x, src, dst, w = _graph_inputs(r, n, e, f)
+    params = M.init_params(M.gcn_param_shapes(f, h, c, layers), jax.random.PRNGKey(seed))
+    emb, logits = M.gcn_forward(params, x, src, dst, w, layers=layers)
+
+    hcur = x
+    want_emb = x
+    for l in range(layers):
+        hcur = ref.gcn_layer_ref(hcur, src, dst, w, params[2 * l], params[2 * l + 1])
+        if l < layers - 1:
+            hcur = jax.nn.relu(hcur)
+            want_emb = hcur
+    np.testing.assert_allclose(logits, hcur, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(emb, want_emb, rtol=1e-3, atol=1e-3)
+
+
+def test_sage_forward_matches_layerwise_ref():
+    r = np.random.default_rng(7)
+    n, e, f, h, c, layers = 18, 50, 5, 6, 4, 3
+    x, src, dst, w = _graph_inputs(r, n, e, f)
+    params = M.init_params(M.sage_param_shapes(f, h, c, layers), jax.random.PRNGKey(3))
+    emb, logits = M.sage_forward(params, x, src, dst, w, layers=layers)
+
+    hcur = x
+    for l in range(layers):
+        hcur = ref.sage_layer_ref(
+            hcur, src, dst, w, params[3 * l], params[3 * l + 1], params[3 * l + 2]
+        )
+        if l < layers - 1:
+            hcur = jax.nn.relu(hcur)
+    np.testing.assert_allclose(logits, hcur, rtol=1e-3, atol=1e-3)
+
+
+def test_embedding_is_penultimate_activation():
+    r = np.random.default_rng(9)
+    n, e, f, h, c, layers = 12, 30, 4, 7, 3, 2
+    x, src, dst, w = _graph_inputs(r, n, e, f)
+    params = M.init_params(M.gcn_param_shapes(f, h, c, layers), jax.random.PRNGKey(1))
+    emb, _ = M.gcn_forward(params, x, src, dst, w, layers=layers)
+    assert emb.shape == (n, h)
+    assert np.all(np.asarray(emb) >= 0.0)  # post-relu
+
+
+# ------------------------------------------------------------ gradients ---
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_train_step_pallas_matches_ref_path(model):
+    r = np.random.default_rng(11)
+    n, e, f, h, c, layers = 16, 40, 5, 6, 3, 2
+    x, src, dst, w = _graph_inputs(r, n, e, f)
+    shapes = (M.gcn_param_shapes if model == "gcn" else M.sage_param_shapes)(f, h, c, layers)
+    params = M.init_params(shapes, jax.random.PRNGKey(0))
+    y = jnp.asarray((np.arange(n) % c).astype(np.int32))
+    mask = jnp.ones(n, jnp.float32)
+    zeros = [jnp.zeros_like(p) for p in params]
+    t = jnp.zeros((), jnp.float32)
+    args = params + zeros + [jnp.zeros_like(p) for p in params] + [t, x, src, dst, w, y, mask]
+
+    sp, P = M.make_gnn_train_step(model, "multiclass", layers=layers, epochs_per_call=3)
+    sr, _ = M.make_gnn_train_step(model, "multiclass", layers=layers, epochs_per_call=3,
+                                  use_pallas=False)
+    op = jax.jit(sp)(*args)
+    orf = jax.jit(sr)(*args)
+    for a, b in zip(op, orf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-4)
+
+
+def test_gcn_grad_matches_finite_differences():
+    r = np.random.default_rng(13)
+    n, e, f, h, c, layers = 10, 24, 3, 4, 2, 2
+    x, src, dst, w = _graph_inputs(r, n, e, f)
+    params = M.init_params(M.gcn_param_shapes(f, h, c, layers), jax.random.PRNGKey(5))
+    y = jnp.asarray((np.arange(n) % c).astype(np.int32))
+    mask = jnp.ones(n, jnp.float32)
+
+    from compile import losses
+
+    def loss_at(ps):
+        _, logits = M.gcn_forward(ps, x, src, dst, w, layers=layers, use_pallas=False)
+        return losses.masked_softmax_xent(logits, y, mask)
+
+    grads = jax.grad(loss_at)(params)
+    # central differences on a few random coordinates of W0
+    eps = 1e-3
+    w0 = np.asarray(params[0]).copy()
+    for (i, j) in [(0, 0), (1, 2), (2, 3)]:
+        pp = [p for p in params]
+        wp = w0.copy(); wp[i, j] += eps
+        pp[0] = jnp.asarray(wp)
+        up = loss_at(pp)
+        wm = w0.copy(); wm[i, j] -= eps
+        pp[0] = jnp.asarray(wm)
+        um = loss_at(pp)
+        fd = (up - um) / (2 * eps)
+        np.testing.assert_allclose(grads[0][i, j], fd, rtol=5e-2, atol=1e-3)
+
+
+# ---------------------------------------------------------- convergence ---
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage"])
+def test_training_reduces_loss(model):
+    n = 24
+    src, dst, w = ring_graph(n)
+    f, h, c, layers = 8, 8, 4, 2
+    r = np.random.default_rng(2)
+    x = jnp.asarray(np.eye(n, f) + r.normal(0, 0.05, (n, f)), jnp.float32)
+    y = jnp.asarray((np.arange(n) % c).astype(np.int32))
+    mask = jnp.ones(n, jnp.float32)
+    shapes = (M.gcn_param_shapes if model == "gcn" else M.sage_param_shapes)(f, h, c, layers)
+    params = M.init_params(shapes, jax.random.PRNGKey(4))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    t = jnp.zeros((), jnp.float32)
+    step, P = M.make_gnn_train_step(model, "multiclass", layers=layers, lr=0.05,
+                                    epochs_per_call=10)
+    jstep = jax.jit(step)
+    args = params + m + v + [t, x, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w), y, mask]
+    first = None
+    for _ in range(4):
+        out = jstep(*args)
+        loss = float(out[3 * P + 1])
+        first = loss if first is None else first
+        args = list(out[: 3 * P]) + [out[3 * P]] + args[3 * P + 1 :]
+    assert loss < first * 0.8, (first, loss)
+
+
+def test_multilabel_training_reduces_loss():
+    n = 20
+    src, dst, w = ring_graph(n)
+    f, h, c, layers = 6, 8, 5, 2
+    r = np.random.default_rng(3)
+    x = jnp.asarray(r.normal(size=(n, f)), jnp.float32)
+    y = jnp.asarray((r.random((n, c)) < 0.3).astype(np.float32))
+    mask = jnp.ones(n, jnp.float32)
+    params = M.init_params(M.sage_param_shapes(f, h, c, layers), jax.random.PRNGKey(6))
+    step, P = M.make_gnn_train_step("sage", "multilabel", layers=layers, lr=0.05,
+                                    epochs_per_call=10)
+    jstep = jax.jit(step)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    args = params + m + v + [jnp.zeros((), jnp.float32), x, jnp.asarray(src),
+                             jnp.asarray(dst), jnp.asarray(w), y, mask]
+    losses_seen = []
+    for _ in range(4):
+        out = jstep(*args)
+        losses_seen.append(float(out[3 * P + 1]))
+        args = list(out[: 3 * P]) + [out[3 * P]] + args[3 * P + 1 :]
+    assert losses_seen[-1] < losses_seen[0]
+
+
+def test_mlp_training_reduces_loss():
+    n, d, c = 40, 6, 3
+    r = np.random.default_rng(8)
+    y_np = (np.arange(n) % c).astype(np.int32)
+    x = jnp.asarray(np.eye(c)[y_np] @ r.normal(size=(c, d)) + r.normal(0, 0.05, (n, d)),
+                    jnp.float32)
+    y = jnp.asarray(y_np)
+    mask = jnp.ones(n, jnp.float32)
+    params = M.init_params(M.mlp_param_shapes(d, 8, c), jax.random.PRNGKey(7))
+    step, P = M.make_mlp_train_step("multiclass", lr=0.05, epochs_per_call=20)
+    jstep = jax.jit(step)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    args = params + m + v + [jnp.zeros((), jnp.float32), x, y, mask]
+    losses_seen = []
+    for _ in range(3):
+        out = jstep(*args)
+        losses_seen.append(float(out[3 * P + 1]))
+        args = list(out[: 3 * P]) + [out[3 * P]] + args[3 * P + 1 :]
+    assert losses_seen[-1] < losses_seen[0] * 0.5
+
+
+# -------------------------------------------------------------- padding ---
+
+
+def test_padding_nodes_and_edges_do_not_change_training():
+    """The full padding contract used by the rust runtime."""
+    n, e, f, h, c, layers = 12, 30, 4, 5, 3, 2
+    r = np.random.default_rng(21)
+    x_np = r.normal(size=(n, f)).astype(np.float32)
+    src, dst, w = random_graph(r, n, e)
+    y_np = (np.arange(n) % c).astype(np.int32)
+    mask_np = (np.arange(n) % 2 == 0).astype(np.float32)
+
+    params = M.init_params(M.gcn_param_shapes(f, h, c, layers), jax.random.PRNGKey(9))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step, P = M.make_gnn_train_step("gcn", "multiclass", layers=layers, epochs_per_call=4)
+    jstep = jax.jit(step)
+
+    base_args = params + m + v + [
+        jnp.zeros((), jnp.float32), jnp.asarray(x_np), jnp.asarray(src),
+        jnp.asarray(dst), jnp.asarray(w), jnp.asarray(y_np), jnp.asarray(mask_np)]
+    base = jstep(*base_args)
+
+    npad, epad = 7, 11
+    xp = np.zeros((n + npad, f), np.float32); xp[:n] = x_np
+    yp = np.zeros(n + npad, np.int32); yp[:n] = y_np
+    mp = np.zeros(n + npad, np.float32); mp[:n] = mask_np
+    sp = np.concatenate([src, np.zeros(epad, np.int32)])
+    dp = np.concatenate([dst, np.zeros(epad, np.int32)])
+    wp = np.concatenate([w, np.zeros(epad, np.float32)])
+    pad_args = params + m + v + [
+        jnp.zeros((), jnp.float32), jnp.asarray(xp), jnp.asarray(sp),
+        jnp.asarray(dp), jnp.asarray(wp), jnp.asarray(yp), jnp.asarray(mp)]
+    padded = jstep(*pad_args)
+
+    # params and loss must agree exactly on the real prefix
+    for a, b in zip(base[: 2 * layers], padded[: 2 * layers]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(base[-1]), float(padded[-1]), rtol=1e-4)

@@ -1,0 +1,88 @@
+//! Ablation (DESIGN.md §6): why Leiden under Fusion?
+//!
+//! Compares community detectors feeding the same fusion stage —
+//! Leiden+F (= LF) vs Louvain+F vs METIS+F vs LPA+F — on partition time,
+//! edge-cut, balance, and the structural guarantee, across k.
+//!
+//! Expected: Louvain communities can be internally disconnected, so
+//! Louvain+F needs the component-split pass (like METIS/LPA) and tends to
+//! produce slightly worse cuts than Leiden+F at equal cost — the paper's
+//! stated reason for choosing Leiden (§4.4 "Advantages").
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::partition::{by_name, PartitionQuality};
+use leiden_fusion::util::json::{num, obj, s, Json};
+use leiden_fusion::util::Stopwatch;
+
+const METHODS: [&str; 4] = ["lf", "louvain+f", "metis+f", "lpa+f"];
+
+fn main() {
+    let ds = common::arxiv(20_000);
+    println!(
+        "arxiv-like: {} nodes, {} edges",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+    let mut table = Table::new(
+        "Ablation: community detector under the fusion stage",
+        &["method", "k", "time (ms)", "edge-cut %", "balance ρ", "ideal"],
+    );
+    let mut records = Vec::new();
+    for method in METHODS {
+        for k in [4, 16] {
+            let sw = Stopwatch::start();
+            let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
+            let secs = sw.secs();
+            let q = PartitionQuality::measure(&ds.graph, &p);
+            table.row(vec![
+                method.to_string(),
+                k.to_string(),
+                format!("{:.1}", secs * 1e3),
+                format!("{:.2}", q.edge_cut_fraction * 100.0),
+                format!("{:.3}", q.node_balance),
+                q.is_structurally_ideal().to_string(),
+            ]);
+            records.push(obj(vec![
+                ("method", s(method)),
+                ("k", num(k as f64)),
+                ("secs", num(secs)),
+                ("edge_cut", num(q.edge_cut_fraction)),
+                ("node_balance", num(q.node_balance)),
+                ("ideal", Json::Bool(q.is_structurally_ideal())),
+            ]));
+            // every +F method must restore the structural guarantee
+            assert!(q.is_structurally_ideal(), "{method} k={k} not ideal");
+        }
+    }
+    table.print();
+
+    // β sweep: Leiden community-size factor (paper §5 hyper-parameters)
+    let mut sweep = Table::new(
+        "Ablation: β sweep for LF (k=8)",
+        &["beta", "communities→8 time (ms)", "edge-cut %", "balance ρ"],
+    );
+    for beta in [0.25, 0.5, 1.0] {
+        let sw = Stopwatch::start();
+        let p = leiden_fusion::partition::leiden::leiden_fusion(&ds.graph, 8, 0.05, beta, 7)
+            .unwrap();
+        let secs = sw.secs();
+        let q = PartitionQuality::measure(&ds.graph, &p);
+        sweep.row(vec![
+            format!("{beta}"),
+            format!("{:.1}", secs * 1e3),
+            format!("{:.2}", q.edge_cut_fraction * 100.0),
+            format!("{:.3}", q.node_balance),
+        ]);
+        records.push(obj(vec![
+            ("sweep", s("beta")),
+            ("beta", num(beta)),
+            ("secs", num(secs)),
+            ("edge_cut", num(q.edge_cut_fraction)),
+            ("node_balance", num(q.node_balance)),
+        ]));
+    }
+    sweep.print();
+    save_json("ablation_fusion", &Json::Arr(records));
+}

@@ -1,0 +1,93 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every bench honours two environment knobs:
+//!   `LF_BENCH_N`      — synthetic dataset size override
+//!   `LF_BENCH_QUICK`  — set to shrink the grid for smoke runs
+
+#![allow(dead_code)] // each bench binary uses a subset
+
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig, TrainReport};
+use leiden_fusion::data::{synth_arxiv, synth_proteins, ArxivLikeConfig, Dataset,
+                          ProteinsLikeConfig};
+use leiden_fusion::partition::Partitioning;
+use leiden_fusion::runtime::default_artifacts_dir;
+use leiden_fusion::train::{Mode, ModelKind};
+
+pub const KS: [usize; 4] = [2, 4, 8, 16];
+
+pub fn quick() -> bool {
+    std::env::var("LF_BENCH_QUICK").is_ok()
+}
+
+pub fn env_n(default: usize) -> usize {
+    std::env::var("LF_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The arxiv-like benchmark dataset (paper: ogbn-arxiv).
+pub fn arxiv(default_n: usize) -> Dataset {
+    let n = env_n(if quick() { default_n / 4 } else { default_n });
+    synth_arxiv(&ArxivLikeConfig { n, ..Default::default() }).expect("arxiv-like dataset")
+}
+
+/// The proteins-like benchmark dataset (paper: ogbn-proteins).
+pub fn proteins(default_n: usize) -> Dataset {
+    let n = env_n(if quick() { default_n / 4 } else { default_n });
+    synth_proteins(&ProteinsLikeConfig { n, ..Default::default() })
+        .expect("proteins-like dataset")
+}
+
+/// Train through the full coordinator with bench-appropriate settings.
+pub fn train(
+    ds: &Dataset,
+    p: &Partitioning,
+    model: ModelKind,
+    mode: Mode,
+    epochs: usize,
+) -> TrainReport {
+    train_with_machines(ds, p, model, mode, epochs, 4)
+}
+
+/// Like [`train`] with an explicit machine count. Timing benches use
+/// `machines = 1` (sequential per-partition training — the paper's own §5
+/// emulation) so per-partition times are contention-free; running worker
+/// threads concurrently on one host would let CPU contention distort the
+/// Fig. 7 trend that real independent machines would show.
+pub fn train_with_machines(
+    ds: &Dataset,
+    p: &Partitioning,
+    model: ModelKind,
+    mode: Mode,
+    epochs: usize,
+    machines: usize,
+) -> TrainReport {
+    let mut cfg = CoordinatorConfig::new(default_artifacts_dir());
+    cfg.model = model;
+    cfg.mode = mode;
+    cfg.epochs = if quick() { epochs.min(20) } else { epochs };
+    cfg.mlp_epochs = if quick() { 60 } else { 150 };
+    cfg.machines = machines;
+    Coordinator::new(cfg).run(ds, p).expect("training run")
+}
+
+/// Column headers for a k-grid table: `[first, "k=2", "k=8", ...]`.
+pub fn k_headers(first: &str, ks: &[usize]) -> Vec<String> {
+    let mut h = vec![first.to_string()];
+    h.extend(ks.iter().map(|k| format!("k={k}")));
+    h
+}
+
+/// Artifacts present? (benches that need the runtime skip gracefully.)
+pub fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+pub fn skip_if_no_artifacts(bench: &str) -> bool {
+    if !artifacts_ready() {
+        println!("[{bench}] skipped: run `make artifacts` first");
+        return true;
+    }
+    false
+}

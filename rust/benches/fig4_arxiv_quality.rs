@@ -1,0 +1,78 @@
+//! **Figure 4** — the six §5.1 subgraph-quality metrics on the arxiv-like
+//! dataset for k ∈ {2,4,8,16} × {LF, METIS, LPA, Random}.
+//!
+//! Paper's reported shape: LF keeps exactly k components / 0 isolated at
+//! every k while METIS/LPA/Random degrade; edge-cut and RF comparable at
+//! small k, LF best at k=16.
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::partition::{by_name, PartitionQuality};
+use leiden_fusion::util::json::{num, obj, s, Json};
+use leiden_fusion::util::Stopwatch;
+
+const METHODS: [&str; 4] = ["lf", "metis", "lpa", "random"];
+
+fn main() {
+    let ds = common::arxiv(20_000);
+    println!(
+        "arxiv-like: {} nodes, {} edges",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+
+    let mut records = Vec::new();
+    let mut tables: Vec<Table> = [
+        "edge-cut %", "total components", "total isolated", "node balance ρ",
+        "edge balance", "replication factor",
+    ]
+    .iter()
+    .map(|m| {
+        Table::new(
+            &format!("Fig. 4 — {m} (arxiv-like)"),
+            &["method", "k=2", "k=4", "k=8", "k=16"],
+        )
+    })
+    .collect();
+
+    for method in METHODS {
+        let mut cells: Vec<Vec<String>> = vec![Vec::new(); 6];
+        for k in common::KS {
+            let sw = Stopwatch::start();
+            let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
+            let q = PartitionQuality::measure(&ds.graph, &p);
+            cells[0].push(format!("{:.2}", q.edge_cut_fraction * 100.0));
+            cells[1].push(q.total_components().to_string());
+            cells[2].push(q.total_isolated().to_string());
+            cells[3].push(format!("{:.3}", q.node_balance));
+            cells[4].push(format!("{:.3}", q.edge_balance));
+            cells[5].push(format!("{:.3}", q.replication_factor));
+            records.push(obj(vec![
+                ("method", s(method)),
+                ("k", num(k as f64)),
+                ("edge_cut", num(q.edge_cut_fraction)),
+                ("components", num(q.total_components() as f64)),
+                ("isolated", num(q.total_isolated() as f64)),
+                ("node_balance", num(q.node_balance)),
+                ("edge_balance", num(q.edge_balance)),
+                ("replication_factor", num(q.replication_factor)),
+                ("partition_secs", num(sw.secs())),
+            ]));
+            if method == "lf" {
+                assert_eq!(q.total_components(), k, "LF must give k components");
+                assert_eq!(q.total_isolated(), 0);
+            }
+        }
+        for (t, c) in tables.iter_mut().zip(cells) {
+            let mut row = vec![method.to_string()];
+            row.extend(c);
+            t.row(row);
+        }
+    }
+    for t in &tables {
+        t.print();
+    }
+    save_json("fig4_arxiv_quality", &Json::Arr(records));
+    println!("\nshape check vs paper: LF k components / 0 isolated at all k — OK");
+}

@@ -1,0 +1,78 @@
+//! **Figure 6a/6b** — end-to-end accuracy on arxiv-like for GCN (6a) and
+//! GraphSAGE (6b): LPA vs METIS vs LF, Inner vs Repli, k ∈ {2,4,8,16}.
+//!
+//! This drives the *full three-layer stack* (rust coordinator → PJRT →
+//! AOT HLO with Pallas kernels) 48 times; pass `--model gcn|sage` after
+//! `--` to run one panel only, or set LF_BENCH_QUICK for a reduced grid.
+//!
+//! Paper's reported shape: LF degrades slowest as k grows (the headline
+//! table shows LF ahead of METIS by ~7 pts at k=16 Inner), and
+//! Repli ≥ Inner for every method.
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::partition::by_name;
+use leiden_fusion::train::{Mode, ModelKind};
+use leiden_fusion::util::json::{num, obj, s, Json};
+
+const METHODS: [&str; 3] = ["lpa", "metis", "lf"];
+
+fn main() {
+    if common::skip_if_no_artifacts("fig6") {
+        return;
+    }
+    let args: Vec<String> = std::env::args().collect();
+    let only_model = args
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| args.get(i + 1))
+        .map(|m| ModelKind::parse(m).expect("--model gcn|sage"));
+
+    let ds = common::arxiv(12_000);
+    let ks: &[usize] = if common::quick() { &[2, 8] } else { &common::KS };
+    println!(
+        "arxiv-like: {} nodes, {} edges; grid: methods×k×mode",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+
+    let mut records = Vec::new();
+    for model in [ModelKind::Gcn, ModelKind::Sage] {
+        if only_model.map_or(false, |m| m != model) {
+            continue;
+        }
+        let fig = if model == ModelKind::Gcn { "6a" } else { "6b" };
+        let mut headers = vec!["method".to_string(), "mode".to_string()];
+        headers.extend(ks.iter().map(|k| format!("k={k}")));
+        let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut table = Table::new(
+            &format!("Fig. {fig}: {} accuracy (%) on arxiv-like", model.as_str()),
+            &header_refs,
+        );
+        for method in METHODS {
+            for mode in [Mode::Inner, Mode::Repli] {
+                let mut row = vec![method.to_string(), mode.as_str().to_string()];
+                for &k in ks {
+                    let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
+                    let report = common::train(&ds, &p, model, mode, 40);
+                    let acc = report.eval.test_metric * 100.0;
+                    row.push(format!("{acc:.2}"));
+                    records.push(obj(vec![
+                        ("model", s(model.as_str())),
+                        ("method", s(method)),
+                        ("mode", s(mode.as_str())),
+                        ("k", num(k as f64)),
+                        ("test_accuracy", num(report.eval.test_metric)),
+                        ("val_accuracy", num(report.eval.val_metric)),
+                        ("makespan_s", num(report.max_partition_train_secs)),
+                    ]));
+                }
+                table.row(row);
+            }
+        }
+        table.print();
+    }
+    save_json("fig6_accuracy", &Json::Arr(records));
+    println!("\nshape check vs paper: LF ≥ baselines at large k; Repli ≥ Inner");
+}

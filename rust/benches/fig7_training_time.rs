@@ -1,0 +1,60 @@
+//! **Figure 7** — longest per-partition GCN training time on arxiv-like as
+//! k grows, for Inner and Repli subgraphs.
+//!
+//! Paper's reported shape: makespan drops sharply with k (no communication
+//! ⇒ near-linear), and Repli adds only a small overhead over Inner.
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::partition::leiden_fusion as lf;
+use leiden_fusion::train::{Mode, ModelKind};
+use leiden_fusion::util::json::{num, obj, s, Json};
+
+fn main() {
+    if common::skip_if_no_artifacts("fig7") {
+        return;
+    }
+    let ds = common::arxiv(12_000);
+    let ks: &[usize] = if common::quick() { &[2, 8] } else { &common::KS };
+    println!(
+        "arxiv-like: {} nodes, {} edges; GCN, 40 epochs per partition",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+
+    let mut all_ks = vec![1usize];
+    all_ks.extend_from_slice(ks);
+    let headers = common::k_headers("mode", &all_ks);
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Fig. 7: max per-partition training time (s), GCN on arxiv-like",
+        &header_refs,
+    );
+    let mut records = Vec::new();
+    for mode in [Mode::Inner, Mode::Repli] {
+        let mut row = vec![mode.as_str().to_string()];
+        for &k in &all_ks {
+            let p = if k == 1 {
+                leiden_fusion::partition::Partitioning::new(vec![0; ds.graph.num_nodes()], 1)
+                    .unwrap()
+            } else {
+                lf(&ds.graph, k, 0.05, 0.5, 42).unwrap()
+            };
+            // machines = 1: contention-free per-partition timing (the
+            // paper's own sequential emulation — §5 Setup)
+            let rep = common::train_with_machines(&ds, &p, ModelKind::Gcn, mode, 40, 1);
+            row.push(format!("{:.2}", rep.max_partition_train_secs));
+            records.push(obj(vec![
+                ("mode", s(mode.as_str())),
+                ("k", num(k as f64)),
+                ("makespan_s", num(rep.max_partition_train_secs)),
+                ("total_s", num(rep.total_train_secs)),
+            ]));
+        }
+        table.row(row);
+    }
+    table.print();
+    save_json("fig7_training_time", &Json::Arr(records));
+    println!("\nshape check vs paper: makespan falls steeply with k; Repli ≈ Inner + ε");
+}

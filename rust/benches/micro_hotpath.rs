@@ -1,0 +1,92 @@
+//! Micro-benchmarks of the L3 hot paths (§Perf): partitioning phases,
+//! batch construction + bucket padding, PJRT marshalling, and embedding
+//! integration. These are the knobs the perf pass iterates on.
+
+mod common;
+
+use leiden_fusion::benchkit::{bench, save_json, Table};
+use leiden_fusion::partition::fusion::{fuse_communities, FusionConfig};
+use leiden_fusion::partition::leiden::{leiden, leiden_fusion as lf, LeidenConfig};
+use leiden_fusion::runtime::Runtime;
+use leiden_fusion::train::{build_batch, pad_to_bucket, Mode, ModelKind};
+use leiden_fusion::util::json::{obj, s, Json};
+use std::time::Duration;
+
+fn main() {
+    let ds = common::arxiv(20_000);
+    let budget = Duration::from_secs(20);
+    let mut table = Table::new(
+        "L3 hot-path micro-benchmarks (arxiv-like, 20k nodes)",
+        &["stage", "mean (ms)", "p50 (ms)", "p95 (ms)"],
+    );
+    let mut records = Vec::new();
+    let mut add = |name: &str, st: leiden_fusion::benchkit::Stats| {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", st.mean_s * 1e3),
+            format!("{:.1}", st.p50_s * 1e3),
+            format!("{:.1}", st.p95_s * 1e3),
+        ]);
+        records.push(obj(vec![("stage", s(name)), ("stats", st.to_json())]));
+    };
+
+    // 1. Leiden community detection (the paper's "preprocessing")
+    let cap = ((ds.graph.num_nodes() as f64 / 16.0) * 1.05 * 0.5).ceil() as usize;
+    let cfg = LeidenConfig { max_community_size: cap, seed: 7, ..Default::default() };
+    add("leiden (size-capped)", bench(1, 5, budget, || {
+        std::hint::black_box(leiden(&ds.graph, &cfg));
+    }));
+
+    // 2. fusion alone
+    let comms = leiden(&ds.graph, &cfg);
+    let fcfg = FusionConfig::with_alpha(&ds.graph, 8, 0.05);
+    add("fusion (→ k=8)", bench(1, 10, budget, || {
+        std::hint::black_box(fuse_communities(&ds.graph, &comms, &fcfg).unwrap());
+    }));
+
+    // 3. LF end to end
+    add("leiden-fusion total", bench(1, 5, budget, || {
+        std::hint::black_box(lf(&ds.graph, 8, 0.05, 0.5, 7).unwrap());
+    }));
+
+    // 4. batch construction (inner + repli)
+    let p = lf(&ds.graph, 8, 0.05, 0.5, 7).unwrap();
+    let members = p.members();
+    add("build_batch inner (1 part)", bench(1, 10, budget, || {
+        std::hint::black_box(
+            build_batch(&ds, &members[0], Mode::Inner, ModelKind::Gcn).unwrap(),
+        );
+    }));
+    add("build_batch repli (1 part)", bench(1, 10, budget, || {
+        std::hint::black_box(
+            build_batch(&ds, &members[0], Mode::Repli, ModelKind::Gcn).unwrap(),
+        );
+    }));
+
+    // 5. bucket padding
+    let batch = build_batch(&ds, &members[0], Mode::Inner, ModelKind::Gcn).unwrap();
+    add("pad_to_bucket (n4096/e65536)", bench(1, 20, budget, || {
+        std::hint::black_box(pad_to_bucket(&batch, 4096, 65536, 40).unwrap());
+    }));
+
+    // 6. PJRT execute round-trip (eval artifact) — requires artifacts
+    if common::artifacts_ready() {
+        let rt = Runtime::new(&leiden_fusion::runtime::default_artifacts_dir()).unwrap();
+        let exe = rt.load_for("gcn", "multiclass", "eval",
+                              batch.num_local(), batch.num_directed_edges()).unwrap();
+        let dims = exe.meta.dims.clone();
+        let padded = pad_to_bucket(&batch, dims.n, dims.e, dims.c).unwrap();
+        let params = leiden_fusion::train::trainer::init_params(&exe, 0);
+        let mut inputs = params;
+        inputs.push(padded.x);
+        inputs.push(padded.src);
+        inputs.push(padded.dst);
+        inputs.push(padded.ew);
+        add("pjrt eval round-trip", bench(1, 10, budget, || {
+            std::hint::black_box(exe.run(&inputs).unwrap());
+        }));
+    }
+
+    table.print();
+    save_json("micro_hotpath", &Json::Arr(records));
+}

@@ -1,0 +1,53 @@
+//! **Table 2** — GraphSAGE ROC-AUC on the dense proteins-like dataset,
+//! Inner mode (the paper skips Repli on proteins: too many replicas),
+//! METIS vs LF over k ∈ {2,4,8,16}.
+//!
+//! Paper's reported shape: comparable at k=2/4; LF clearly ahead at k=8/16
+//! where METIS partitions fragment into many components.
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::partition::{by_name, PartitionQuality};
+use leiden_fusion::train::{Mode, ModelKind};
+use leiden_fusion::util::json::{num, obj, s, Json};
+
+fn main() {
+    if common::skip_if_no_artifacts("table2") {
+        return;
+    }
+    let ds = common::proteins(4_000);
+    let ks: &[usize] = if common::quick() { &[2, 8] } else { &common::KS };
+    println!(
+        "proteins-like: {} nodes, {} edges, 112 tasks",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+
+    let headers = common::k_headers("method", ks);
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut table = Table::new(
+        "Table 2: SAGE ROC-AUC (%) on proteins-like, Inner",
+        &header_refs,
+    );
+    let mut records = Vec::new();
+    for method in ["metis", "lf"] {
+        let mut row = vec![method.to_string()];
+        for &k in ks {
+            let p = by_name(method, 13).unwrap().partition(&ds.graph, k).unwrap();
+            let q = PartitionQuality::measure(&ds.graph, &p);
+            let report = common::train(&ds, &p, ModelKind::Sage, Mode::Inner, 40);
+            row.push(format!("{:.2}", report.eval.test_metric * 100.0));
+            records.push(obj(vec![
+                ("method", s(method)),
+                ("k", num(k as f64)),
+                ("test_auc", num(report.eval.test_metric)),
+                ("components", num(q.total_components() as f64)),
+            ]));
+        }
+        table.row(row);
+    }
+    table.print();
+    save_json("table2_proteins_auc", &Json::Arr(records));
+    println!("\nshape check vs paper: LF ahead of METIS at k=8/16 (fragmentation)");
+}

@@ -1,0 +1,50 @@
+//! **Table 5** — GCN accuracy at k=16 on arxiv-like for METIS, METIS+F,
+//! LPA, LPA+F and Leiden+F (= LF), Inner and Repli.
+//!
+//! Paper's reported shape: +F lifts METIS and LPA accuracy substantially
+//! (Inner comparable to LF after fusion); LF best on Repli.
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::partition::by_name;
+use leiden_fusion::train::{Mode, ModelKind};
+use leiden_fusion::util::json::{num, obj, s, Json};
+
+const METHODS: [&str; 5] = ["metis", "metis+f", "lpa", "lpa+f", "lf"];
+
+fn main() {
+    if common::skip_if_no_artifacts("table5") {
+        return;
+    }
+    let ds = common::arxiv(12_000);
+    let k = 16;
+    println!(
+        "arxiv-like: {} nodes, {} edges, k={k}, GCN",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges()
+    );
+
+    let mut table = Table::new(
+        "Table 5: GCN accuracy (%) at k=16, ±fusion",
+        &["mode", "metis", "metis+F", "lpa", "lpa+F", "leiden+F (LF)"],
+    );
+    let mut records = Vec::new();
+    for mode in [Mode::Inner, Mode::Repli] {
+        let mut row = vec![mode.as_str().to_string()];
+        for method in METHODS {
+            let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
+            let report = common::train(&ds, &p, ModelKind::Gcn, mode, 40);
+            row.push(format!("{:.2}", report.eval.test_metric * 100.0));
+            records.push(obj(vec![
+                ("mode", s(mode.as_str())),
+                ("method", s(method)),
+                ("test_accuracy", num(report.eval.test_metric)),
+            ]));
+        }
+        table.row(row);
+    }
+    table.print();
+    save_json("table5_fusion_accuracy", &Json::Arr(records));
+    println!("\nshape check vs paper: +F improves both baselines; LF best overall");
+}

@@ -1,0 +1,186 @@
+//! Benchmark harness (no `criterion` offline): warmup + timed iterations
+//! with mean/p50/p95, aligned table rendering for the paper's tables and
+//! figures, and JSON export for EXPERIMENTS.md bookkeeping.
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// Timing statistics over bench iterations.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<f64>) -> Stats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len().max(1);
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+        Stats {
+            iters: samples.len(),
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            p50_s: pick(0.5),
+            p95_s: pick(0.95),
+            min_s: samples.first().copied().unwrap_or(0.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("iters", num(self.iters as f64)),
+            ("mean_s", num(self.mean_s)),
+            ("p50_s", num(self.p50_s)),
+            ("p95_s", num(self.p95_s)),
+            ("min_s", num(self.min_s)),
+        ])
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then up to `iters`
+/// measured runs bounded by `max_total` wall-clock.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, max_total: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let budget = Stopwatch::start();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs());
+        if budget.secs() > max_total.as_secs_f64() {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Quick single-shot measurement.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+/// Fixed-width table renderer for bench output (paper-style rows).
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("title", s(&self.title)),
+            ("headers", Json::Arr(self.headers.iter().map(|h| s(h)).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| s(c)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Append a bench result to `target/bench-results/<name>.json`.
+pub fn save_json(name: &str, value: &Json) {
+    let dir = std::path::Path::new("target/bench-results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let _ = std::fs::write(dir.join(format!("{name}.json")), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_quantiles() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.p50_s, 3.0);
+        assert_eq!(s.mean_s, 3.0);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let st = bench(2, 5, Duration::from_secs(10), || count += 1);
+        assert_eq!(count, 7); // 2 warmup + 5 measured
+        assert_eq!(st.iters, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["method", "k", "value"]);
+        t.row(vec!["lf".into(), "2".into(), "0.70".into()]);
+        t.row(vec!["metis".into(), "16".into(), "0.61".into()]);
+        let r = t.render();
+        assert!(r.contains("== Demo =="));
+        assert!(r.contains("method"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_rows() {
+        Table::new("x", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal declarative CLI parser (no `clap` offline).
+//!
+//! Supports `program <subcommand> --flag value --switch` with typed
+//! accessors, defaults, and an auto-generated usage string.
+//!
+//! Grammar note: `--name token` always binds `token` as the flag's value;
+//! boolean switches must therefore come last, precede another `--flag`, or
+//! use `--name=true`. (With no flag registry the parser cannot tell a
+//! switch followed by a positional from a valued flag.)
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (element 0 = program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().skip(1).peekable();
+        let mut out = Args::default();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare -- is not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(String::as_str)
+    }
+
+    pub fn str_or(&self, flag: &str, default: &str) -> String {
+        self.get(flag).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, flag: &str, default: usize) -> Result<usize> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{flag} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn u64_or(&self, flag: &str, default: u64) -> Result<u64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{flag} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64_or(&self, flag: &str, default: f64) -> Result<f64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{flag} expects a number, got {v:?}"))),
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--ks 2,4,8,16`.
+    pub fn usize_list_or(&self, flag: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(flag) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse().map_err(|_| {
+                        Error::Config(format!("--{flag}: bad list element {t:?}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("prog train file.toml --k 8 --model sage --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("k"), Some("8"));
+        assert_eq!(a.str_or("model", "gcn"), "sage");
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["file.toml"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("prog --k=16 --alpha=0.1");
+        assert_eq!(a.usize_or("k", 0).unwrap(), 16);
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("prog --k abc");
+        assert!(a.usize_or("k", 0).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("prog --ks 2,4,8");
+        assert_eq!(a.usize_list_or("ks", &[1]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(parse("prog").usize_list_or("ks", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("prog bench --quick");
+        assert!(a.has("quick"));
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+    }
+}

@@ -1,0 +1,284 @@
+//! Configuration system: a TOML-subset parser + the typed experiment
+//! config consumed by the launcher (no `serde`/`toml` offline — see
+//! DESIGN.md "Offline-build constraints").
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, and boolean values, `#` comments. This covers
+//! every config the launcher reads; nested tables/arrays are rejected with
+//! a clear error rather than mis-parsed.
+
+use crate::error::{Error, Result};
+use crate::train::{Mode, ModelKind};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str, lineno: usize) -> Result<Value> {
+        let raw = raw.trim();
+        if let Some(stripped) = raw.strip_prefix('"') {
+            let inner = stripped
+                .strip_suffix('"')
+                .ok_or_else(|| Error::Config(format!("line {lineno}: unterminated string")))?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        match raw {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(Error::Config(format!("line {lineno}: cannot parse value {raw:?}")))
+    }
+}
+
+/// Parsed `[section] → key → value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    sections: HashMap<String, HashMap<String, Value>>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut out = Toml::default();
+        let mut section = String::new();
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = match line.find('#') {
+                // only strip comments outside strings (strings here never
+                // contain '#' in our configs; reject if ambiguous)
+                Some(pos) if !line[..pos].contains('"') => &line[..pos],
+                _ => line,
+            };
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Config(format!("line {lineno}: bad section")))?;
+                if name.contains('[') || name.contains('.') {
+                    return Err(Error::Config(format!(
+                        "line {lineno}: nested tables are not supported"
+                    )));
+                }
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {lineno}: expected key = value"))
+            })?;
+            if value.trim().starts_with('[') || value.trim().starts_with('{') {
+                return Err(Error::Config(format!(
+                    "line {lineno}: arrays/inline tables are not supported"
+                )));
+            }
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), Value::parse(value, lineno)?);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        match self.get(section, key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+}
+
+/// Typed experiment configuration (the launcher's input).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// `karate` | `arxiv` | `proteins` | a path to an edge list.
+    pub dataset: String,
+    /// Node count for synthetic datasets (0 = dataset default).
+    pub dataset_n: usize,
+    pub seed: u64,
+    /// Partitioner name (`lf`, `metis`, `lpa`, `random`, `metis+f`, `lpa+f`).
+    pub partitioner: String,
+    pub k: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub model: ModelKind,
+    pub mode: Mode,
+    pub epochs: usize,
+    pub mlp_epochs: usize,
+    pub machines: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "arxiv".into(),
+            dataset_n: 0,
+            seed: 42,
+            partitioner: "lf".into(),
+            k: 4,
+            alpha: 0.05,
+            beta: 0.5,
+            model: ModelKind::Gcn,
+            mode: Mode::Inner,
+            epochs: 80,
+            mlp_epochs: 200,
+            machines: 4,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file ([dataset]/[partition]/[train] sections).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&Toml::parse(&text)?)
+    }
+
+    pub fn from_toml(t: &Toml) -> Result<Self> {
+        let d = ExperimentConfig::default();
+        let mode = match t.str_or("train", "mode", "inner").as_str() {
+            "inner" => Mode::Inner,
+            "repli" => Mode::Repli,
+            other => return Err(Error::Config(format!("unknown mode {other:?}"))),
+        };
+        Ok(ExperimentConfig {
+            dataset: t.str_or("dataset", "name", &d.dataset),
+            dataset_n: t.int_or("dataset", "n", 0) as usize,
+            seed: t.int_or("dataset", "seed", d.seed as i64) as u64,
+            partitioner: t.str_or("partition", "method", &d.partitioner),
+            k: t.int_or("partition", "k", d.k as i64) as usize,
+            alpha: t.float_or("partition", "alpha", d.alpha),
+            beta: t.float_or("partition", "beta", d.beta),
+            model: ModelKind::parse(&t.str_or("train", "model", "gcn"))?,
+            mode,
+            epochs: t.int_or("train", "epochs", d.epochs as i64) as usize,
+            mlp_epochs: t.int_or("train", "mlp_epochs", d.mlp_epochs as i64) as usize,
+            machines: t.int_or("train", "machines", d.machines as i64) as usize,
+            artifacts_dir: match t.get("train", "artifacts_dir") {
+                Some(Value::Str(s)) => PathBuf::from(s),
+                _ => d.artifacts_dir,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[dataset]
+name = "arxiv"
+n = 5000
+seed = 7
+
+[partition]
+method = "lf"
+k = 8
+alpha = 0.05
+
+[train]
+model = "sage"
+mode = "repli"
+epochs = 40
+machines = 2
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = ExperimentConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.dataset, "arxiv");
+        assert_eq!(cfg.dataset_n, 5000);
+        assert_eq!(cfg.k, 8);
+        assert_eq!(cfg.model, ModelKind::Sage);
+        assert_eq!(cfg.mode, Mode::Repli);
+        assert_eq!(cfg.machines, 2);
+        // defaults fill gaps
+        assert_eq!(cfg.mlp_epochs, 200);
+        assert_eq!(cfg.beta, 0.5);
+    }
+
+    #[test]
+    fn value_types() {
+        let t = Toml::parse("[s]\na = 1\nb = 2.5\nc = \"x\"\nd = true\n").unwrap();
+        assert_eq!(t.int_or("s", "a", 0), 1);
+        assert_eq!(t.float_or("s", "b", 0.0), 2.5);
+        assert_eq!(t.str_or("s", "c", ""), "x");
+        assert!(t.bool_or("s", "d", false));
+        assert_eq!(t.int_or("s", "missing", 9), 9);
+    }
+
+    #[test]
+    fn float_coerces_from_int() {
+        let t = Toml::parse("[s]\nalpha = 1\n").unwrap();
+        assert_eq!(t.float_or("s", "alpha", 0.0), 1.0);
+    }
+
+    #[test]
+    fn rejects_unsupported_syntax() {
+        assert!(Toml::parse("[a.b]\n").is_err());
+        assert!(Toml::parse("[s]\nx = [1, 2]\n").is_err());
+        assert!(Toml::parse("[s]\nnovalue\n").is_err());
+        assert!(Toml::parse("[s]\nx = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_mode_and_model() {
+        let t = Toml::parse("[train]\nmode = \"weird\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[train]\nmodel = \"gat\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let t = Toml::parse("# top\n\n[s] # trailing\nx = 1 # eol\n").unwrap();
+        assert_eq!(t.int_or("s", "x", 0), 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! Control-plane messages between the leader and machine workers.
+//!
+//! Only control data crosses threads — partition tensors are built
+//! worker-side from the shared read-only dataset, mirroring a cluster
+//! where each machine loads its own shard.
+
+use crate::graph::NodeId;
+use crate::train::TrainedPartition;
+
+/// One unit of work: train a partition.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub part_id: u32,
+    pub members: Vec<NodeId>,
+    /// 0 on first dispatch; incremented on retry.
+    pub attempt: u32,
+}
+
+/// Events streamed from workers to the leader.
+#[derive(Debug)]
+pub enum WorkerEvent {
+    Started {
+        worker: usize,
+        part_id: u32,
+    },
+    Finished {
+        worker: usize,
+        part_id: u32,
+        /// Owned (non-replica) global node ids, in the result's row order.
+        nodes: Vec<NodeId>,
+        result: TrainedPartition,
+    },
+    Failed {
+        worker: usize,
+        part_id: u32,
+        error: String,
+    },
+}

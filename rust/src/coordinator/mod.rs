@@ -1,0 +1,286 @@
+//! Distributed-training coordinator: leader + machine workers.
+//!
+//! The paper's training phase is *communication-free*: after partitioning,
+//! each machine trains its subgraph independently and only the final
+//! embeddings are gathered. The coordinator therefore exchanges nothing but
+//! control messages (job dispatch, progress, results) — which is why worker
+//! threads with private PJRT runtimes are a behaviour-preserving stand-in
+//! for physical machines (the paper itself emulates the cluster by training
+//! partitions sequentially on one host; §5 Setup).
+//!
+//! Topology: a work queue feeds `min(machines, k)` workers; each worker
+//! owns a thread-local [`Runtime`] (PJRT clients are not `Send`), trains
+//! whole partitions, and streams [`WorkerEvent`]s back to the leader, which
+//! assembles the embedding store, retries failed jobs, and finally runs the
+//! integration MLP + evaluation.
+
+pub mod messages;
+pub mod worker;
+
+pub use messages::{Job, WorkerEvent};
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::partition::Partitioning;
+use crate::runtime::Runtime;
+use crate::train::{classify, EmbeddingStore, EvalReport, Mode, ModelKind};
+use crate::util::Stopwatch;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Simulated machine count (worker threads). Partitions are scheduled
+    /// onto machines; k > machines simply queues.
+    pub machines: usize,
+    pub mode: Mode,
+    pub model: ModelKind,
+    /// GNN epochs per partition.
+    pub epochs: usize,
+    /// Integration-MLP epochs.
+    pub mlp_epochs: usize,
+    pub seed: u64,
+    /// Re-dispatch attempts for a failed partition.
+    pub max_retries: u32,
+    /// Artifacts directory (manifest + HLO text).
+    pub artifacts_dir: PathBuf,
+    /// Test hook: partition id that fails on its first attempt.
+    pub inject_failure: Option<u32>,
+}
+
+impl CoordinatorConfig {
+    pub fn new(artifacts_dir: PathBuf) -> Self {
+        CoordinatorConfig {
+            machines: 4,
+            mode: Mode::Inner,
+            model: ModelKind::Gcn,
+            epochs: 80,
+            mlp_epochs: 200,
+            seed: 0,
+            max_retries: 1,
+            artifacts_dir,
+            inject_failure: None,
+        }
+    }
+}
+
+/// Per-partition statistics surfaced in the report.
+#[derive(Clone, Debug)]
+pub struct PartitionStats {
+    pub part_id: u32,
+    pub num_nodes: usize,
+    pub num_replicas: usize,
+    pub losses: Vec<f32>,
+    pub train_secs: f64,
+    pub attempts: u32,
+}
+
+/// Full distributed-training report.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub per_partition: Vec<PartitionStats>,
+    pub eval: EvalReport,
+    /// Leader wall-clock for the whole run.
+    pub wall_secs: f64,
+    /// Longest single-partition training time — the paper's Fig. 7 metric
+    /// (= makespan of a truly distributed run with k machines).
+    pub max_partition_train_secs: f64,
+    /// Σ per-partition training time (= sequential-emulation cost).
+    pub total_train_secs: f64,
+}
+
+/// The leader. Owns the job queue and the result channel.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        Coordinator { cfg }
+    }
+
+    /// Run distributed training of `dataset` over `partitioning`.
+    pub fn run(&self, dataset: &Dataset, partitioning: &Partitioning) -> Result<TrainReport> {
+        let sw = Stopwatch::start();
+        let k = partitioning.k();
+        let members = partitioning.members();
+        let workers = self.cfg.machines.min(k).max(1);
+
+        let queue: Arc<Mutex<VecDeque<Job>>> = Arc::new(Mutex::new(
+            members
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| !m.is_empty())
+                .map(|(part_id, m)| Job {
+                    part_id: part_id as u32,
+                    members: m.clone(),
+                    attempt: 0,
+                })
+                .collect(),
+        ));
+        let live_jobs = queue.lock().unwrap().len();
+        let remaining = Arc::new(AtomicUsize::new(live_jobs));
+        let (tx, rx) = mpsc::channel::<WorkerEvent>();
+
+        let mut store: Option<EmbeddingStore> = None;
+        let mut stats: Vec<PartitionStats> = Vec::with_capacity(live_jobs);
+        let mut attempts = vec![0u32; k];
+
+        let run_result = std::thread::scope(|scope| -> Result<()> {
+            for wid in 0..workers {
+                let queue = Arc::clone(&queue);
+                let remaining = Arc::clone(&remaining);
+                let tx = tx.clone();
+                let cfg = self.cfg.clone();
+                scope.spawn(move || {
+                    worker::worker_loop(wid, dataset, queue, remaining, tx, &cfg);
+                });
+            }
+            drop(tx);
+
+            let mut done = 0usize;
+            while done < live_jobs {
+                let event = rx.recv().map_err(|_| {
+                    Error::Coordinator("all workers exited before completion".into())
+                })?;
+                match event {
+                    WorkerEvent::Started { worker, part_id } => {
+                        log::debug!("worker {worker} started partition {part_id}");
+                    }
+                    WorkerEvent::Finished { worker, part_id, nodes, result } => {
+                        log::info!(
+                            "worker {worker} finished partition {part_id}: \
+                             {} nodes, final loss {:.4}, {:.2}s",
+                            nodes.len(),
+                            result.losses.last().copied().unwrap_or(f32::NAN),
+                            result.train_secs
+                        );
+                        let st = store.get_or_insert_with(|| {
+                            EmbeddingStore::new(dataset.num_nodes(), result.emb_dim)
+                        });
+                        st.insert(&nodes, &result.embeddings)?;
+                        stats.push(PartitionStats {
+                            part_id,
+                            num_nodes: nodes.len(),
+                            num_replicas: result.num_replicas,
+                            losses: result.losses,
+                            train_secs: result.train_secs,
+                            attempts: attempts[part_id as usize] + 1,
+                        });
+                        done += 1;
+                        remaining.fetch_sub(1, Ordering::Release);
+                    }
+                    WorkerEvent::Failed { worker, part_id, error } => {
+                        attempts[part_id as usize] += 1;
+                        let tries = attempts[part_id as usize];
+                        if tries > self.cfg.max_retries {
+                            remaining.store(0, Ordering::Release); // stop workers
+                            return Err(Error::Coordinator(format!(
+                                "partition {part_id} failed {tries} times \
+                                 (worker {worker}): {error}"
+                            )));
+                        }
+                        log::warn!(
+                            "partition {part_id} failed on worker {worker} \
+                             (attempt {tries}): {error}; requeueing"
+                        );
+                        queue.lock().unwrap().push_back(Job {
+                            part_id,
+                            members: members[part_id as usize].clone(),
+                            attempt: tries,
+                        });
+                    }
+                }
+            }
+            Ok(())
+        });
+        remaining.store(0, Ordering::Release);
+        run_result?;
+
+        let store = store
+            .ok_or_else(|| Error::Coordinator("no partitions produced output".into()))?;
+
+        // ---- integration + evaluation on the leader ---------------------
+        let leader_rt = Runtime::new(&self.cfg.artifacts_dir)?;
+        let eval = classify(
+            &leader_rt,
+            dataset,
+            &store,
+            self.cfg.mlp_epochs,
+            self.cfg.seed ^ 0x11,
+        )?;
+
+        stats.sort_by_key(|s| s.part_id);
+        let max_partition_train_secs = stats
+            .iter()
+            .map(|s| s.train_secs)
+            .fold(0.0f64, f64::max);
+        let total_train_secs = stats.iter().map(|s| s.train_secs).sum();
+        Ok(TrainReport {
+            per_partition: stats,
+            eval,
+            wall_secs: sw.secs(),
+            max_partition_train_secs,
+            total_train_secs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_dataset;
+    use crate::partition::leiden::leiden_fusion;
+    use crate::runtime::default_artifacts_dir;
+
+    fn cfg_if_built() -> Option<CoordinatorConfig> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let mut c = CoordinatorConfig::new(dir);
+            c.epochs = 10;
+            c.mlp_epochs = 30;
+            c.machines = 2;
+            Some(c)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn end_to_end_karate_two_partitions() {
+        let Some(cfg) = cfg_if_built() else { return };
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        let report = Coordinator::new(cfg).run(&ds, &p).unwrap();
+        assert_eq!(report.per_partition.len(), 2);
+        assert!(report.eval.test_metric >= 0.0);
+        assert!(report.max_partition_train_secs > 0.0);
+        assert!(report.total_train_secs >= report.max_partition_train_secs);
+    }
+
+    #[test]
+    fn failure_injection_retries_and_succeeds() {
+        let Some(mut cfg) = cfg_if_built() else { return };
+        cfg.inject_failure = Some(0);
+        cfg.max_retries = 1;
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        let report = Coordinator::new(cfg).run(&ds, &p).unwrap();
+        let p0 = report.per_partition.iter().find(|s| s.part_id == 0).unwrap();
+        assert_eq!(p0.attempts, 2, "partition 0 should have been retried");
+    }
+
+    #[test]
+    fn failure_exhausts_retries() {
+        let Some(mut cfg) = cfg_if_built() else { return };
+        cfg.inject_failure = Some(0);
+        cfg.max_retries = 0;
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        assert!(Coordinator::new(cfg).run(&ds, &p).is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Machine worker: owns a thread-local PJRT runtime and trains partitions
+//! pulled from the shared job queue until the queue drains.
+
+use super::messages::{Job, WorkerEvent};
+use super::CoordinatorConfig;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::runtime::Runtime;
+use crate::train::{build_batch, train_partition, TrainOptions, TrainedPartition};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+/// Worker main loop. Runs until `remaining` (jobs not yet successfully
+/// finished, maintained by the leader) reaches zero — merely draining the
+/// queue is not enough because a failed job may be re-queued by the leader
+/// after this worker observes an empty queue.
+pub fn worker_loop(
+    worker: usize,
+    dataset: &Dataset,
+    queue: Arc<Mutex<VecDeque<Job>>>,
+    remaining: Arc<AtomicUsize>,
+    tx: Sender<WorkerEvent>,
+    cfg: &CoordinatorConfig,
+) {
+    // One PJRT client per machine (PjRtClient is thread-local by design).
+    let rt = match Runtime::new(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Without a runtime this worker can do nothing; report failure
+            // for the next job so the leader can retry elsewhere.
+            log::error!("worker {worker}: runtime init failed: {e}");
+            if let Some(job) = queue.lock().unwrap().pop_front() {
+                let _ = tx.send(WorkerEvent::Failed {
+                    worker,
+                    part_id: job.part_id,
+                    error: format!("runtime init: {e}"),
+                });
+            }
+            return;
+        }
+    };
+
+    loop {
+        if remaining.load(Ordering::Acquire) == 0 {
+            break;
+        }
+        let job = match queue.lock().unwrap().pop_front() {
+            Some(j) => j,
+            None => {
+                // queue drained but work may be re-queued on failure
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                continue;
+            }
+        };
+        let _ = tx.send(WorkerEvent::Started { worker, part_id: job.part_id });
+        match run_job(&rt, dataset, &job, cfg) {
+            Ok((nodes, result)) => {
+                if tx
+                    .send(WorkerEvent::Finished { worker, part_id: job.part_id, nodes, result })
+                    .is_err()
+                {
+                    break; // leader gone
+                }
+            }
+            Err(e) => {
+                if tx
+                    .send(WorkerEvent::Failed {
+                        worker,
+                        part_id: job.part_id,
+                        error: e.to_string(),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn run_job(
+    rt: &Runtime,
+    dataset: &Dataset,
+    job: &Job,
+    cfg: &CoordinatorConfig,
+) -> Result<(Vec<crate::graph::NodeId>, TrainedPartition)> {
+    // Test hook: simulate a machine fault on the first attempt.
+    if cfg.inject_failure == Some(job.part_id) && job.attempt == 0 {
+        return Err(crate::error::Error::Coordinator(
+            "injected fault (test hook)".into(),
+        ));
+    }
+    let batch = build_batch(dataset, &job.members, cfg.mode, cfg.model)?;
+    let opts = TrainOptions {
+        model: cfg.model,
+        epochs: cfg.epochs,
+        seed: cfg.seed ^ (job.part_id as u64) << 8,
+        log_every: 0,
+    };
+    let result = train_partition(rt, &batch, &opts)?;
+    // Owned nodes only (prefix of sub.nodes) — replicas are discarded.
+    let nodes = batch.sub.nodes[..batch.sub.num_owned].to_vec();
+    Ok((nodes, result))
+}

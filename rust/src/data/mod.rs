@@ -1,0 +1,334 @@
+//! Datasets: graph + features + labels + train/val/test masks.
+//!
+//! Synthetic stand-ins for the paper's OGB datasets (see DESIGN.md
+//! "Dataset substitution"): `arxiv-like` (sparse, 40-class multiclass) and
+//! `proteins-like` (dense, weighted, 112-task multilabel), plus the exact
+//! Karate graph for the toy experiments.
+
+use crate::error::{Error, Result};
+use crate::graph::gen::{generate_sbm, SbmConfig};
+use crate::graph::karate::{karate_graph, KARATE_FACTIONS};
+use crate::graph::{CsrGraph, NodeId};
+use crate::util::rng::Rng;
+
+/// Node labels for the two task families.
+#[derive(Clone, Debug)]
+pub enum Labels {
+    /// `labels[v] ∈ 0..c` (arxiv-like).
+    Multiclass { classes: usize, labels: Vec<i32> },
+    /// Row-major `[n, c]` float {0,1} targets (proteins-like).
+    Multilabel { tasks: usize, targets: Vec<f32> },
+}
+
+impl Labels {
+    pub fn task_name(&self) -> &'static str {
+        match self {
+            Labels::Multiclass { .. } => "multiclass",
+            Labels::Multilabel { .. } => "multilabel",
+        }
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            Labels::Multiclass { classes, .. } => *classes,
+            Labels::Multilabel { tasks, .. } => *tasks,
+        }
+    }
+}
+
+/// A complete node-prediction dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: CsrGraph,
+    /// Row-major `[n, feat_dim]` features.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    pub labels: Labels,
+    pub train_mask: Vec<bool>,
+    pub val_mask: Vec<bool>,
+    pub test_mask: Vec<bool>,
+}
+
+impl Dataset {
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    pub fn feature_row(&self, v: NodeId) -> &[f32] {
+        let f = self.feat_dim;
+        &self.features[v as usize * f..(v as usize + 1) * f]
+    }
+
+    /// Sanity checks used by constructors and property tests.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.num_nodes();
+        if self.features.len() != n * self.feat_dim {
+            return Err(Error::Graph("feature matrix shape mismatch".into()));
+        }
+        let label_len = match &self.labels {
+            Labels::Multiclass { labels, .. } => labels.len(),
+            Labels::Multilabel { tasks, targets } => targets.len() / (*tasks).max(1),
+        };
+        if label_len != n {
+            return Err(Error::Graph("label count mismatch".into()));
+        }
+        for masks in [&self.train_mask, &self.val_mask, &self.test_mask] {
+            if masks.len() != n {
+                return Err(Error::Graph("mask length mismatch".into()));
+            }
+        }
+        for v in 0..n {
+            let cnt = self.train_mask[v] as u8 + self.val_mask[v] as u8
+                + self.test_mask[v] as u8;
+            if cnt != 1 {
+                return Err(Error::Graph(format!("node {v} is in {cnt} splits")));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic train/val/test split (fractions of n).
+fn make_masks(n: usize, train: f64, val: f64, rng: &mut Rng) -> (Vec<bool>, Vec<bool>, Vec<bool>) {
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let n_train = (n as f64 * train) as usize;
+    let n_val = (n as f64 * val) as usize;
+    let mut tm = vec![false; n];
+    let mut vm = vec![false; n];
+    let mut sm = vec![false; n];
+    for (i, &v) in order.iter().enumerate() {
+        if i < n_train {
+            tm[v] = true;
+        } else if i < n_train + n_val {
+            vm[v] = true;
+        } else {
+            sm[v] = true;
+        }
+    }
+    (tm, vm, sm)
+}
+
+/// Configuration for the arxiv-like dataset.
+#[derive(Clone, Debug)]
+pub struct ArxivLikeConfig {
+    pub n: usize,
+    pub feat_dim: usize,
+    pub classes: usize,
+    /// Fraction of nodes whose label disagrees with their community.
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for ArxivLikeConfig {
+    fn default() -> Self {
+        // 1/8 scale of ogbn-arxiv; feature dim 64 matches the AOT grid.
+        ArxivLikeConfig { n: 20_000, feat_dim: 64, classes: 40, label_noise: 0.10, seed: 42 }
+    }
+}
+
+/// Generate the arxiv-like multiclass dataset (OGB split ratios 54/18/28).
+pub fn synth_arxiv(cfg: &ArxivLikeConfig) -> Result<Dataset> {
+    let mut sbm_cfg = SbmConfig::arxiv_like(cfg.n, cfg.seed);
+    sbm_cfg.communities = cfg.classes;
+    let sbm = generate_sbm(&sbm_cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xFEA7);
+
+    // class centroids in feature space
+    let centroids: Vec<f32> = (0..cfg.classes * cfg.feat_dim)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let mut labels = Vec::with_capacity(cfg.n);
+    let mut features = vec![0f32; cfg.n * cfg.feat_dim];
+    for v in 0..cfg.n {
+        let comm = sbm.community[v] as usize;
+        let label = if rng.chance(cfg.label_noise) {
+            rng.index(cfg.classes)
+        } else {
+            comm
+        };
+        labels.push(label as i32);
+        // features follow the *community* (graph structure), labels mostly
+        // follow too — GNN aggregation denoises the flipped ones
+        let c0 = comm * cfg.feat_dim;
+        for j in 0..cfg.feat_dim {
+            features[v * cfg.feat_dim + j] =
+                centroids[c0 + j] * 0.5 + rng.normal() as f32 * 0.8;
+        }
+    }
+    let (train_mask, val_mask, test_mask) = make_masks(cfg.n, 0.54, 0.18, &mut rng);
+    let ds = Dataset {
+        name: "arxiv-like".into(),
+        graph: sbm.graph,
+        features,
+        feat_dim: cfg.feat_dim,
+        labels: Labels::Multiclass { classes: cfg.classes, labels },
+        train_mask,
+        val_mask,
+        test_mask,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Configuration for the proteins-like dataset.
+#[derive(Clone, Debug)]
+pub struct ProteinsLikeConfig {
+    pub n: usize,
+    pub feat_dim: usize,
+    pub tasks: usize,
+    pub seed: u64,
+}
+
+impl Default for ProteinsLikeConfig {
+    fn default() -> Self {
+        ProteinsLikeConfig { n: 6_000, feat_dim: 16, tasks: 112, seed: 7 }
+    }
+}
+
+/// Generate the proteins-like multilabel dataset (dense, weighted graph).
+pub fn synth_proteins(cfg: &ProteinsLikeConfig) -> Result<Dataset> {
+    let sbm_cfg = SbmConfig::proteins_like(cfg.n, cfg.seed);
+    let sbm = generate_sbm(&sbm_cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let communities = sbm_cfg.communities;
+
+    // per-community Bernoulli profile over tasks
+    let profile: Vec<f64> = (0..communities * cfg.tasks)
+        .map(|_| 0.05 + 0.55 * rng.f64())
+        .collect();
+    let mut targets = vec![0f32; cfg.n * cfg.tasks];
+    let mut features = vec![0f32; cfg.n * cfg.feat_dim];
+    let centroids: Vec<f32> = (0..communities * cfg.feat_dim)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    for v in 0..cfg.n {
+        let comm = sbm.community[v] as usize;
+        for t in 0..cfg.tasks {
+            if rng.chance(profile[comm * cfg.tasks + t]) {
+                targets[v * cfg.tasks + t] = 1.0;
+            }
+        }
+        let deg = sbm.graph.degree(v as NodeId) as f32;
+        for j in 0..cfg.feat_dim {
+            features[v * cfg.feat_dim + j] = centroids[comm * cfg.feat_dim + j] * 0.4
+                + rng.normal() as f32 * 0.8
+                + if j == 0 { (1.0 + deg).ln() * 0.1 } else { 0.0 };
+        }
+    }
+    let (train_mask, val_mask, test_mask) = make_masks(cfg.n, 0.6, 0.15, &mut rng);
+    let ds = Dataset {
+        name: "proteins-like".into(),
+        graph: sbm.graph,
+        features,
+        feat_dim: cfg.feat_dim,
+        labels: Labels::Multilabel { tasks: cfg.tasks, targets },
+        train_mask,
+        val_mask,
+        test_mask,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// The Karate graph as a tiny 2-class dataset (features = normal noise +
+/// one-hot-ish degree signal; labels = ground-truth factions).
+pub fn karate_dataset(seed: u64) -> Dataset {
+    let g = karate_graph();
+    let n = g.num_nodes();
+    let f = 8usize;
+    let mut rng = Rng::new(seed);
+    let mut features = vec![0f32; n * f];
+    for v in 0..n {
+        features[v * f] = g.degree(v as NodeId) as f32 / 17.0;
+        for j in 1..f {
+            features[v * f + j] = rng.normal() as f32 * 0.5;
+        }
+    }
+    let labels: Vec<i32> = KARATE_FACTIONS.iter().map(|&x| x as i32).collect();
+    let (train_mask, val_mask, test_mask) = make_masks(n, 0.6, 0.2, &mut rng);
+    Dataset {
+        name: "karate".into(),
+        graph: g,
+        features,
+        feat_dim: f,
+        labels: Labels::Multiclass { classes: 2, labels },
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn arxiv_like_valid_and_connected() {
+        let ds = synth_arxiv(&ArxivLikeConfig {
+            n: 2000,
+            ..ArxivLikeConfig::default()
+        })
+        .unwrap();
+        ds.validate().unwrap();
+        assert!(is_connected(&ds.graph));
+        assert_eq!(ds.feat_dim, 64);
+        assert_eq!(ds.labels.num_outputs(), 40);
+        assert_eq!(ds.labels.task_name(), "multiclass");
+    }
+
+    #[test]
+    fn labels_correlate_with_structure() {
+        let ds = synth_arxiv(&ArxivLikeConfig { n: 3000, ..Default::default() })
+            .unwrap();
+        let Labels::Multiclass { labels, .. } = &ds.labels else { unreachable!() };
+        // neighbours share labels far more often than chance (1/40)
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for (u, v, _) in ds.graph.edges() {
+            total += 1;
+            if labels[u as usize] == labels[v as usize] {
+                same += 1;
+            }
+        }
+        let frac = same as f64 / total as f64;
+        assert!(frac > 0.4, "homophily {frac}");
+    }
+
+    #[test]
+    fn proteins_like_valid_dense_multilabel() {
+        let ds = synth_proteins(&ProteinsLikeConfig {
+            n: 1000,
+            ..ProteinsLikeConfig::default()
+        })
+        .unwrap();
+        ds.validate().unwrap();
+        assert!(ds.graph.is_weighted());
+        assert_eq!(ds.labels.task_name(), "multilabel");
+        let Labels::Multilabel { targets, tasks } = &ds.labels else { unreachable!() };
+        assert_eq!(*tasks, 112);
+        let positive = targets.iter().filter(|&&x| x > 0.5).count() as f64
+            / targets.len() as f64;
+        assert!((0.1..0.6).contains(&positive), "positive rate {positive}");
+    }
+
+    #[test]
+    fn masks_are_exact_cover() {
+        let ds = karate_dataset(1);
+        ds.validate().unwrap();
+        let covered = (0..34)
+            .filter(|&v| ds.train_mask[v] ^ ds.val_mask[v] ^ ds.test_mask[v])
+            .count();
+        assert_eq!(covered, 34);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synth_arxiv(&ArxivLikeConfig { n: 500, ..Default::default() }).unwrap();
+        let b = synth_arxiv(&ArxivLikeConfig { n: 500, ..Default::default() }).unwrap();
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.train_mask, b.train_mask);
+    }
+}

@@ -1,0 +1,44 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("partition error: {0}")]
+    Partition(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Manifest(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

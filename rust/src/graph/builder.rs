@@ -1,0 +1,112 @@
+//! Incremental graph construction with normalisation.
+//!
+//! Raw edge streams (generators, file loaders) may contain self-loops,
+//! duplicates, and both orientations of the same undirected edge; the
+//! builder canonicalises to `u < v`, merges duplicates (summing weights),
+//! and hands a clean list to [`CsrGraph`].
+
+use super::csr::{CsrGraph, NodeId};
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// Accumulates edges, then builds a [`CsrGraph`].
+#[derive(Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: HashMap<(NodeId, NodeId), f32>,
+    weighted: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: HashMap::new(), weighted: false }
+    }
+
+    /// Add an undirected edge; orientation and duplicates are normalised.
+    /// Self-loops are silently dropped (GNN self-contribution is handled by
+    /// the runtime's normalisation weights, not graph structure).
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId) -> &mut Self {
+        self.add_weighted(u, v, 1.0)
+    }
+
+    /// Add a weighted undirected edge; duplicate insertions sum weights.
+    pub fn add_weighted(&mut self, u: NodeId, v: NodeId, w: f32) -> &mut Self {
+        if u == v {
+            return self;
+        }
+        if w != 1.0 {
+            self.weighted = true;
+        }
+        let key = if u < v { (u, v) } else { (v, u) };
+        let slot = self.edges.entry(key).or_insert(0.0);
+        if *slot != 0.0 {
+            self.weighted = true; // duplicate ⇒ merged weight differs from 1
+        }
+        *slot += w;
+        self
+    }
+
+    pub fn num_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Whether `{u, v}` has been added already.
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        let key = if u < v { (u, v) } else { (v, u) };
+        self.edges.contains_key(&key)
+    }
+
+    /// Finalise into CSR form.
+    pub fn build(self) -> Result<CsrGraph> {
+        let mut pairs: Vec<((NodeId, NodeId), f32)> = self.edges.into_iter().collect();
+        pairs.sort_unstable_by_key(|&(k, _)| k);
+        let edges: Vec<(NodeId, NodeId)> = pairs.iter().map(|&(k, _)| k).collect();
+        if self.weighted {
+            let weights: Vec<f32> = pairs.iter().map(|&(_, w)| w).collect();
+            CsrGraph::from_weighted_edges(self.n, &edges, Some(&weights))
+        } else {
+            CsrGraph::from_edges(self.n, &edges)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deduplicates_and_drops_self_loops() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1).add_edge(1, 0).add_edge(2, 2).add_edge(1, 2);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 2);
+        // duplicate (0,1)+(1,0) merged; weight sums to 2 ⇒ weighted graph
+        assert!(g.is_weighted());
+        assert_eq!(g.neighbor_weights(0), Some(&[2.0f32][..]));
+    }
+
+    #[test]
+    fn unweighted_stays_unweighted() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1).add_edge(1, 2);
+        let g = b.build().unwrap();
+        assert!(!g.is_weighted());
+    }
+
+    #[test]
+    fn weights_sum() {
+        let mut b = GraphBuilder::new(2);
+        b.add_weighted(0, 1, 1.5).add_weighted(1, 0, 2.5);
+        let g = b.build().unwrap();
+        assert_eq!(g.total_weight(), 4.0);
+    }
+
+    #[test]
+    fn has_edge_checks_both_orientations() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(2, 1);
+        assert!(b.has_edge(1, 2));
+        assert!(b.has_edge(2, 1));
+        assert!(!b.has_edge(0, 1));
+    }
+}

@@ -1,0 +1,256 @@
+//! Connected-component analysis — the paper's central structural criterion.
+//!
+//! Leiden-Fusion guarantees each partition is a *single* connected component
+//! with *zero* isolated nodes (paper §4.1); this module provides both the
+//! global analysis (union-find over the whole graph) and the per-partition
+//! analysis used by the quality metrics (§5.1) and by the "+F" adapter
+//! (§5.4), which must split METIS/LPA partitions into their components
+//! before fusing.
+
+use super::csr::{CsrGraph, NodeId};
+
+/// Weighted-union + path-halving union-find.
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp; // path halving
+            x = gp;
+        }
+        x
+    }
+
+    /// Union by size; returns false if already joined.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        if self.size[ra as usize] < self.size[rb as usize] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb as usize] = ra;
+        self.size[ra as usize] += self.size[rb as usize];
+        true
+    }
+
+    pub fn component_size(&mut self, x: u32) -> u32 {
+        let r = self.find(x);
+        self.size[r as usize]
+    }
+}
+
+/// Result of a component analysis over a node set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ComponentInfo {
+    /// Component label per node (dense, 0-based).
+    pub labels: Vec<u32>,
+    /// Node count of each component.
+    pub sizes: Vec<usize>,
+    /// Number of degree-0 nodes in the analysed set.
+    pub isolated: usize,
+}
+
+impl ComponentInfo {
+    pub fn num_components(&self) -> usize {
+        self.sizes.len()
+    }
+}
+
+/// Components of the full graph.
+pub fn connected_components(g: &CsrGraph) -> ComponentInfo {
+    let n = g.num_nodes();
+    let mut uf = UnionFind::new(n);
+    for u in 0..n as NodeId {
+        for &v in g.neighbors(u) {
+            if u < v {
+                uf.union(u, v);
+            }
+        }
+    }
+    finalize(n, |v| uf.find(v), |v| g.degree(v) == 0)
+}
+
+/// Components of the subgraph induced by `members` (a mask over the full
+/// graph): edges count only when both endpoints are members. This is the
+/// per-partition analysis of §5.1.
+pub fn components_within(g: &CsrGraph, member: &[bool]) -> ComponentInfo {
+    let n = g.num_nodes();
+    debug_assert_eq!(member.len(), n);
+    let mut uf = UnionFind::new(n);
+    for u in 0..n as NodeId {
+        if !member[u as usize] {
+            continue;
+        }
+        for &v in g.neighbors(u) {
+            if u < v && member[v as usize] {
+                uf.union(u, v);
+            }
+        }
+    }
+    let ids: Vec<NodeId> = (0..n as NodeId).filter(|&v| member[v as usize]).collect();
+    let mut labels = vec![u32::MAX; n];
+    let mut sizes = Vec::new();
+    let mut isolated = 0usize;
+    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    for &v in &ids {
+        let root = uf.find(v);
+        let next = remap.len() as u32;
+        let label = *remap.entry(root).or_insert(next);
+        labels[v as usize] = label;
+        if label as usize >= sizes.len() {
+            sizes.push(0);
+        }
+        sizes[label as usize] += 1;
+        let has_inner_edge = g.neighbors(v).iter().any(|&u| member[u as usize]);
+        if !has_inner_edge {
+            isolated += 1;
+        }
+    }
+    ComponentInfo { labels, sizes, isolated }
+}
+
+fn finalize(
+    n: usize,
+    mut root_of: impl FnMut(u32) -> u32,
+    mut is_isolated: impl FnMut(u32) -> bool,
+) -> ComponentInfo {
+    let mut labels = vec![0u32; n];
+    let mut sizes = Vec::new();
+    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut isolated = 0usize;
+    for v in 0..n as u32 {
+        let root = root_of(v);
+        let next = remap.len() as u32;
+        let label = *remap.entry(root).or_insert(next);
+        labels[v as usize] = label;
+        if label as usize >= sizes.len() {
+            sizes.push(0);
+        }
+        sizes[label as usize] += 1;
+        if is_isolated(v) {
+            isolated += 1;
+        }
+    }
+    ComponentInfo { labels, sizes, isolated }
+}
+
+/// True iff the whole graph is a single connected component with no
+/// isolated nodes — the paper's precondition on input graphs.
+pub fn is_connected(g: &CsrGraph) -> bool {
+    if g.num_nodes() == 0 {
+        return true;
+    }
+    let info = connected_components(g);
+    info.num_components() == 1 && info.isolated == 0
+}
+
+/// BFS order from `start` restricted to `member` nodes. Used by subgraph
+/// extraction and tested against union-find for agreement.
+pub fn bfs_within(g: &CsrGraph, start: NodeId, member: &[bool]) -> Vec<NodeId> {
+    let mut seen = vec![false; g.num_nodes()];
+    let mut queue = std::collections::VecDeque::new();
+    let mut order = Vec::new();
+    if !member[start as usize] {
+        return order;
+    }
+    seen[start as usize] = true;
+    queue.push_back(start);
+    while let Some(u) = queue.pop_front() {
+        order.push(u);
+        for &v in g.neighbors(u) {
+            if member[v as usize] && !seen[v as usize] {
+                seen[v as usize] = true;
+                queue.push_back(v);
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::CsrGraph;
+
+    fn two_triangles() -> CsrGraph {
+        // {0,1,2} and {3,4,5} plus isolated node 6
+        CsrGraph::from_edges(7, &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)])
+            .unwrap()
+    }
+
+    #[test]
+    fn finds_components_and_isolated() {
+        let info = connected_components(&two_triangles());
+        assert_eq!(info.num_components(), 3);
+        assert_eq!(info.isolated, 1);
+        let mut sizes = info.sizes.clone();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 3, 3]);
+    }
+
+    #[test]
+    fn single_component_graph() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        assert!(is_connected(&g));
+        let info = connected_components(&g);
+        assert_eq!(info.num_components(), 1);
+        assert_eq!(info.isolated, 0);
+    }
+
+    #[test]
+    fn empty_graph_is_connected() {
+        assert!(is_connected(&CsrGraph::from_edges(0, &[]).unwrap()));
+    }
+
+    #[test]
+    fn components_within_mask() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        // select {0, 1, 3}: edge (0,1) survives, 3 becomes isolated
+        let info = components_within(&g, &[true, true, false, true]);
+        assert_eq!(info.num_components(), 2);
+        assert_eq!(info.isolated, 1);
+        assert_eq!(info.labels[2], u32::MAX); // non-member
+        assert_eq!(info.labels[0], info.labels[1]);
+        assert_ne!(info.labels[0], info.labels[3]);
+    }
+
+    #[test]
+    fn components_within_full_mask_matches_global() {
+        let g = two_triangles();
+        let full = vec![true; g.num_nodes()];
+        let a = components_within(&g, &full);
+        let b = connected_components(&g);
+        assert_eq!(a.num_components(), b.num_components());
+        assert_eq!(a.isolated, b.isolated);
+    }
+
+    #[test]
+    fn bfs_respects_membership() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]).unwrap();
+        let member = [true, true, false, true, true];
+        let order = bfs_within(&g, 0, &member);
+        assert_eq!(order, vec![0, 1]); // blocked at node 2
+        let order2 = bfs_within(&g, 3, &member);
+        assert_eq!(order2, vec![3, 4]);
+    }
+
+    #[test]
+    fn union_find_sizes() {
+        let mut uf = UnionFind::new(5);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(1, 2));
+        assert!(!uf.union(0, 2));
+        assert_eq!(uf.component_size(2), 3);
+        assert_eq!(uf.component_size(4), 1);
+    }
+}

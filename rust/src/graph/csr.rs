@@ -1,0 +1,295 @@
+//! Compressed-sparse-row graph — the substrate every partitioner and the
+//! training pipeline operate on.
+//!
+//! Graphs are **undirected simple graphs** stored symmetrically: every edge
+//! `{u, v}` appears in both adjacency lists. Edge weights are optional
+//! (`proteins-like` graphs are weighted; `arxiv-like` and Karate are not).
+
+use crate::error::{Error, Result};
+
+/// Node identifier. u32 caps graphs at ~4.2B nodes — far beyond this
+/// testbed, and halves index memory vs usize.
+pub type NodeId = u32;
+
+/// An undirected graph in CSR form.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    /// `offsets[v]..offsets[v+1]` indexes `neighbors` for node `v`.
+    offsets: Vec<usize>,
+    /// Flattened, per-node-sorted adjacency.
+    neighbors: Vec<NodeId>,
+    /// Optional weights aligned with `neighbors`.
+    weights: Option<Vec<f32>>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list. Self-loops and duplicate edges
+    /// are rejected (the builders in [`super::builder`] deduplicate first).
+    pub fn from_edges(n: usize, edges: &[(NodeId, NodeId)]) -> Result<Self> {
+        Self::from_weighted_edges(n, edges, None)
+    }
+
+    /// Build from an undirected weighted edge list.
+    pub fn from_weighted_edges(
+        n: usize,
+        edges: &[(NodeId, NodeId)],
+        weights: Option<&[f32]>,
+    ) -> Result<Self> {
+        if let Some(w) = weights {
+            if w.len() != edges.len() {
+                return Err(Error::Graph(format!(
+                    "weight count {} != edge count {}",
+                    w.len(),
+                    edges.len()
+                )));
+            }
+        }
+        let mut deg = vec![0usize; n];
+        for &(u, v) in edges {
+            if u as usize >= n || v as usize >= n {
+                return Err(Error::Graph(format!("edge ({u},{v}) out of range (n={n})")));
+            }
+            if u == v {
+                return Err(Error::Graph(format!("self-loop at {u}")));
+            }
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let m2 = offsets[n];
+        let mut neighbors = vec![0 as NodeId; m2];
+        let mut wts = weights.map(|_| vec![0f32; m2]);
+        let mut cursor = offsets.clone();
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            let w = weights.map(|ws| ws[i]);
+            for (a, b) in [(u, v), (v, u)] {
+                let pos = cursor[a as usize];
+                neighbors[pos] = b;
+                if let (Some(ws), Some(w)) = (wts.as_mut(), w) {
+                    ws[pos] = w;
+                }
+                cursor[a as usize] += 1;
+            }
+        }
+        // Sort each adjacency list (weights carried along) and detect dups.
+        let mut g = CsrGraph { offsets, neighbors, weights: wts };
+        g.sort_adjacency()?;
+        Ok(g)
+    }
+
+    fn sort_adjacency(&mut self) -> Result<()> {
+        for v in 0..self.num_nodes() {
+            let (s, e) = (self.offsets[v], self.offsets[v + 1]);
+            if let Some(w) = &mut self.weights {
+                let mut pairs: Vec<(NodeId, f32)> = self.neighbors[s..e]
+                    .iter()
+                    .copied()
+                    .zip(w[s..e].iter().copied())
+                    .collect();
+                pairs.sort_unstable_by_key(|p| p.0);
+                for (i, (nb, wt)) in pairs.into_iter().enumerate() {
+                    self.neighbors[s + i] = nb;
+                    w[s + i] = wt;
+                }
+            } else {
+                self.neighbors[s..e].sort_unstable();
+            }
+            for i in s + 1..e {
+                if self.neighbors[i] == self.neighbors[i - 1] {
+                    return Err(Error::Graph(format!(
+                        "duplicate edge ({v},{})",
+                        self.neighbors[i]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Sorted neighbours of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> &[NodeId] {
+        &self.neighbors[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Weights aligned with [`Self::neighbors`]; `None` if unweighted.
+    #[inline]
+    pub fn neighbor_weights(&self, v: NodeId) -> Option<&[f32]> {
+        self.weights
+            .as_ref()
+            .map(|w| &w[self.offsets[v as usize]..self.offsets[v as usize + 1]])
+    }
+
+    /// Weight of the incident edge at adjacency position `i` of `v`
+    /// (1.0 for unweighted graphs).
+    #[inline]
+    pub fn weight_at(&self, v: NodeId, i: usize) -> f32 {
+        match &self.weights {
+            Some(w) => w[self.offsets[v as usize] + i],
+            None => 1.0,
+        }
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Sum of all edge weights (counting each undirected edge once).
+    /// Unweighted graphs return `num_edges()`.
+    pub fn total_weight(&self) -> f64 {
+        match &self.weights {
+            Some(w) => w.iter().map(|&x| x as f64).sum::<f64>() / 2.0,
+            None => self.num_edges() as f64,
+        }
+    }
+
+    /// Weighted degree (== degree for unweighted graphs).
+    pub fn weighted_degree(&self, v: NodeId) -> f64 {
+        match self.neighbor_weights(v) {
+            Some(w) => w.iter().map(|&x| x as f64).sum(),
+            None => self.degree(v) as f64,
+        }
+    }
+
+    /// True if `{u, v}` is an edge (binary search).
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Iterate undirected edges once (u < v), with weight.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId, f32)> + '_ {
+        (0..self.num_nodes() as NodeId).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .enumerate()
+                .filter(move |(_, &v)| u < v)
+                .map(move |(i, &v)| (u, v, self.weight_at(u, i)))
+        })
+    }
+
+    /// Export a directed COO edge list with both directions — the format
+    /// the AOT aggregation kernel consumes. Returns `(src, dst)`.
+    pub fn to_directed_coo(&self) -> (Vec<NodeId>, Vec<NodeId>) {
+        let m2 = self.neighbors.len();
+        let mut src = Vec::with_capacity(m2);
+        let mut dst = Vec::with_capacity(m2);
+        for u in 0..self.num_nodes() as NodeId {
+            for &v in self.neighbors(u) {
+                src.push(u);
+                dst.push(v);
+            }
+        }
+        (src, dst)
+    }
+
+    /// Memory footprint in bytes (for the coordinator's capacity planning).
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.neighbors.len() * std::mem::size_of::<NodeId>()
+            + self.weights.as_ref().map_or(0, |w| w.len() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> CsrGraph {
+        CsrGraph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap()
+    }
+
+    #[test]
+    fn builds_triangle() {
+        let g = triangle();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(2), 2);
+    }
+
+    #[test]
+    fn rejects_self_loop_and_out_of_range() {
+        assert!(CsrGraph::from_edges(3, &[(0, 0)]).is_err());
+        assert!(CsrGraph::from_edges(3, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_edges() {
+        assert!(CsrGraph::from_edges(3, &[(0, 1), (1, 0)]).is_err());
+        assert!(CsrGraph::from_edges(3, &[(0, 1), (0, 1)]).is_err());
+    }
+
+    #[test]
+    fn weighted_graph_totals() {
+        let g = CsrGraph::from_weighted_edges(3, &[(0, 1), (1, 2)], Some(&[2.0, 3.0]))
+            .unwrap();
+        assert!(g.is_weighted());
+        assert_eq!(g.total_weight(), 5.0);
+        assert_eq!(g.weighted_degree(1), 5.0);
+        assert_eq!(g.neighbor_weights(1), Some(&[2.0f32, 3.0][..]));
+    }
+
+    #[test]
+    fn weights_follow_adjacency_sort() {
+        // insert in reverse order; weights must stay attached
+        let g = CsrGraph::from_weighted_edges(4, &[(0, 3), (0, 1), (0, 2)],
+                                              Some(&[3.0, 1.0, 2.0])).unwrap();
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+        assert_eq!(g.neighbor_weights(0), Some(&[1.0f32, 2.0, 3.0][..]));
+    }
+
+    #[test]
+    fn has_edge_and_iteration() {
+        let g = triangle();
+        assert!(g.has_edge(0, 2));
+        assert!(!g.has_edge(0, 0));
+        let edges: Vec<_> = g.edges().map(|(u, v, _)| (u, v)).collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn directed_coo_has_both_directions() {
+        let g = triangle();
+        let (src, dst) = g.to_directed_coo();
+        assert_eq!(src.len(), 6);
+        assert!(src.iter().zip(&dst).any(|(&s, &d)| (s, d) == (0, 1)));
+        assert!(src.iter().zip(&dst).any(|(&s, &d)| (s, d) == (1, 0)));
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = CsrGraph::from_edges(4, &[(0, 1)]).unwrap();
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.neighbors(3), &[] as &[NodeId]);
+        let g0 = CsrGraph::from_edges(0, &[]).unwrap();
+        assert_eq!(g0.num_nodes(), 0);
+        assert_eq!(g0.num_edges(), 0);
+    }
+
+    #[test]
+    fn total_weight_unweighted_is_edge_count() {
+        assert_eq!(triangle().total_weight(), 3.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Graph (de)serialisation: text edge lists and a compact binary format.
+//!
+//! * **Text** — one `u v [w]` edge per line, `#` comments; interoperable
+//!   with SNAP/OGB-style dumps so users can bring their own graphs.
+//! * **Binary** — `LFG1` magic, little-endian, CSR arrays verbatim. Used to
+//!   cache generated datasets between benchmark runs.
+
+use super::builder::GraphBuilder;
+use super::csr::{CsrGraph, NodeId};
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write a text edge list (weights included when present).
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
+    let mut out = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(out, "# nodes {}", g.num_nodes())?;
+    for (u, v, w) in g.edges() {
+        if g.is_weighted() {
+            writeln!(out, "{u} {v} {w}")?;
+        } else {
+            writeln!(out, "{u} {v}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a text edge list. Node count is `max id + 1` unless a
+/// `# nodes N` header is present.
+pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
+    let reader = BufReader::new(std::fs::File::open(path)?);
+    let mut declared_n: Option<usize> = None;
+    let mut edges: Vec<(NodeId, NodeId, f32)> = Vec::new();
+    let mut max_id: NodeId = 0;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix('#') {
+            let mut toks = rest.split_whitespace();
+            if toks.next() == Some("nodes") {
+                if let Some(Ok(n)) = toks.next().map(|t| t.parse()) {
+                    declared_n = Some(n);
+                }
+            }
+            continue;
+        }
+        let mut toks = trimmed.split_whitespace();
+        let parse = |t: Option<&str>| -> Result<NodeId> {
+            t.ok_or_else(|| Error::Graph(format!("line {}: missing field", lineno + 1)))?
+                .parse()
+                .map_err(|e| Error::Graph(format!("line {}: {e}", lineno + 1)))
+        };
+        let u = parse(toks.next())?;
+        let v = parse(toks.next())?;
+        let w = match toks.next() {
+            Some(t) => t
+                .parse()
+                .map_err(|e| Error::Graph(format!("line {}: {e}", lineno + 1)))?,
+            None => 1.0,
+        };
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v, w));
+    }
+    let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id as usize + 1 });
+    let mut b = GraphBuilder::new(n);
+    for (u, v, w) in edges {
+        b.add_weighted(u, v, w);
+    }
+    b.build()
+}
+
+const MAGIC: &[u8; 4] = b"LFG1";
+
+/// Write the compact binary format.
+pub fn write_binary(g: &CsrGraph, path: &Path) -> Result<()> {
+    let mut out = BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(MAGIC)?;
+    let n = g.num_nodes() as u64;
+    let m = g.num_edges() as u64;
+    let weighted = g.is_weighted() as u8;
+    out.write_all(&n.to_le_bytes())?;
+    out.write_all(&m.to_le_bytes())?;
+    out.write_all(&[weighted])?;
+    for (u, v, w) in g.edges() {
+        out.write_all(&u.to_le_bytes())?;
+        out.write_all(&v.to_le_bytes())?;
+        if weighted == 1 {
+            out.write_all(&w.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the compact binary format.
+pub fn read_binary(path: &Path) -> Result<CsrGraph> {
+    let mut reader = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    reader.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Graph("bad magic (not an LFG1 file)".into()));
+    }
+    let mut buf8 = [0u8; 8];
+    reader.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    reader.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut flag = [0u8; 1];
+    reader.read_exact(&mut flag)?;
+    let weighted = flag[0] == 1;
+    let mut edges = Vec::with_capacity(m);
+    let mut weights = if weighted { Some(Vec::with_capacity(m)) } else { None };
+    let mut buf4 = [0u8; 4];
+    for _ in 0..m {
+        reader.read_exact(&mut buf4)?;
+        let u = u32::from_le_bytes(buf4);
+        reader.read_exact(&mut buf4)?;
+        let v = u32::from_le_bytes(buf4);
+        edges.push((u, v));
+        if let Some(w) = weights.as_mut() {
+            reader.read_exact(&mut buf4)?;
+            w.push(f32::from_le_bytes(buf4));
+        }
+    }
+    CsrGraph::from_weighted_edges(n, &edges, weights.as_deref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lf_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn text_roundtrip_unweighted() {
+        let g = karate_graph();
+        let path = tmpfile("karate.txt");
+        write_edge_list(&g, &path).unwrap();
+        let g2 = read_edge_list(&path).unwrap();
+        assert_eq!(g2.num_nodes(), g.num_nodes());
+        assert_eq!(g2.num_edges(), g.num_edges());
+        for v in 0..g.num_nodes() as NodeId {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn text_roundtrip_weighted() {
+        let g = CsrGraph::from_weighted_edges(3, &[(0, 1), (1, 2)], Some(&[0.5, 2.0]))
+            .unwrap();
+        let path = tmpfile("w.txt");
+        write_edge_list(&g, &path).unwrap();
+        let g2 = read_edge_list(&path).unwrap();
+        assert!(g2.is_weighted());
+        assert_eq!(g2.total_weight(), 2.5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = karate_graph();
+        let path = tmpfile("karate.bin");
+        write_binary(&g, &path).unwrap();
+        let g2 = read_binary(&path).unwrap();
+        assert_eq!(g2.num_nodes(), 34);
+        assert_eq!(g2.num_edges(), 78);
+        for v in 0..34 {
+            assert_eq!(g.neighbors(v), g2.neighbors(v));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let path = tmpfile("bad.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_binary(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn text_parses_comments_and_header() {
+        let path = tmpfile("hdr.txt");
+        std::fs::write(&path, "# nodes 10\n# a comment\n0 1\n5 6 2.5\n").unwrap();
+        let g = read_edge_list(&path).unwrap();
+        assert_eq!(g.num_nodes(), 10);
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.is_weighted());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn text_rejects_malformed() {
+        let path = tmpfile("bad.txt");
+        std::fs::write(&path, "0 x\n").unwrap();
+        assert!(read_edge_list(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

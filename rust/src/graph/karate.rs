@@ -1,0 +1,91 @@
+//! Zachary's karate-club network (34 nodes, 78 edges) — the exact dataset
+//! used for the paper's Table 1, Figure 2 and Figure 3.
+//!
+//! Edge list is the canonical 0-indexed version (Zachary 1977, as shipped
+//! by networkx). Ground-truth faction labels (Mr. Hi = 0, Officer = 1)
+//! follow the standard split after the club fission.
+
+use super::csr::{CsrGraph, NodeId};
+
+/// The 78 undirected edges of the karate-club graph.
+pub const KARATE_EDGES: [(NodeId, NodeId); 78] = [
+    (0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (0, 6), (0, 7), (0, 8), (0, 10),
+    (0, 11), (0, 12), (0, 13), (0, 17), (0, 19), (0, 21), (0, 31),
+    (1, 2), (1, 3), (1, 7), (1, 13), (1, 17), (1, 19), (1, 21), (1, 30),
+    (2, 3), (2, 7), (2, 8), (2, 9), (2, 13), (2, 27), (2, 28), (2, 32),
+    (3, 7), (3, 12), (3, 13),
+    (4, 6), (4, 10),
+    (5, 6), (5, 10), (5, 16),
+    (6, 16),
+    (8, 30), (8, 32), (8, 33),
+    (9, 33),
+    (13, 33),
+    (14, 32), (14, 33),
+    (15, 32), (15, 33),
+    (18, 32), (18, 33),
+    (19, 33),
+    (20, 32), (20, 33),
+    (22, 32), (22, 33),
+    (23, 25), (23, 27), (23, 29), (23, 32), (23, 33),
+    (24, 25), (24, 27), (24, 31),
+    (25, 31),
+    (26, 29), (26, 33),
+    (27, 33),
+    (28, 31), (28, 33),
+    (29, 32), (29, 33),
+    (30, 32), (30, 33),
+    (31, 32), (31, 33),
+    (32, 33),
+];
+
+/// Ground-truth faction of each member (0 = Mr. Hi, 1 = Officer).
+pub const KARATE_FACTIONS: [u8; 34] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 1, 1, 0, 0, 1, 0, 1, 0, 1, 1,
+    1, 1, 1, 1, 1, 1, 1, 1, 1, 1,
+];
+
+/// Build the karate graph.
+pub fn karate_graph() -> CsrGraph {
+    CsrGraph::from_edges(34, &KARATE_EDGES).expect("karate edge list is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components::is_connected;
+
+    #[test]
+    fn has_canonical_size() {
+        let g = karate_graph();
+        assert_eq!(g.num_nodes(), 34);
+        assert_eq!(g.num_edges(), 78);
+    }
+
+    #[test]
+    fn is_single_connected_component() {
+        assert!(is_connected(&karate_graph()));
+    }
+
+    #[test]
+    fn known_degrees() {
+        let g = karate_graph();
+        assert_eq!(g.degree(0), 16); // Mr. Hi
+        assert_eq!(g.degree(33), 17); // the Officer
+        assert_eq!(g.degree(11), 1); // weakest member
+    }
+
+    #[test]
+    fn factions_cover_both_sides() {
+        let zeros = KARATE_FACTIONS.iter().filter(|&&f| f == 0).count();
+        assert_eq!(zeros, 17); // classic 17/17 split
+        assert_eq!(KARATE_FACTIONS.len(), 34);
+    }
+
+    #[test]
+    fn hub_edges_present() {
+        let g = karate_graph();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(32, 33));
+        assert!(!g.has_edge(0, 33)); // the two leaders are not connected
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, construction, component analysis,
+//! subgraph extraction, synthetic generation, IO, and the Karate dataset.
+
+pub mod builder;
+pub mod components;
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod karate;
+pub mod stats;
+pub mod subgraph;
+
+pub use builder::GraphBuilder;
+pub use components::{components_within, connected_components, is_connected, ComponentInfo};
+pub use csr::{CsrGraph, NodeId};
+pub use subgraph::{inner_subgraph, repli_subgraph, Subgraph};

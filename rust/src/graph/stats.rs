@@ -1,0 +1,171 @@
+//! Graph statistics: degree distribution, clustering, homophily.
+//!
+//! Used to validate that the synthetic stand-ins preserve the properties
+//! the paper's method interacts with (community structure, degree skew,
+//! density), and surfaced by `repro info`/`repro partition` for arbitrary
+//! user graphs.
+
+use super::csr::{CsrGraph, NodeId};
+
+/// Summary statistics of a graph.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub min_degree: usize,
+    /// Gini coefficient of the degree distribution (0 = uniform).
+    pub degree_gini: f64,
+    /// Global clustering coefficient (3·triangles / wedges), sampled for
+    /// large graphs.
+    pub clustering: f64,
+}
+
+/// Compute summary stats. Triangle counting samples up to `sample_nodes`
+/// vertices (exact when the graph is smaller).
+pub fn graph_stats(g: &CsrGraph, sample_nodes: usize) -> GraphStats {
+    let n = g.num_nodes();
+    let degrees: Vec<usize> = (0..n as NodeId).map(|v| g.degree(v)).collect();
+    let avg = if n == 0 { 0.0 } else { degrees.iter().sum::<usize>() as f64 / n as f64 };
+
+    // Gini of degrees
+    let mut sorted = degrees.clone();
+    sorted.sort_unstable();
+    let total: f64 = sorted.iter().map(|&d| d as f64).sum();
+    let gini = if n == 0 || total == 0.0 {
+        0.0
+    } else {
+        let weighted: f64 = sorted
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| (2.0 * (i as f64 + 1.0) - n as f64 - 1.0) * d as f64)
+            .sum();
+        weighted / (n as f64 * total)
+    };
+
+    // clustering coefficient over a node sample
+    let step = (n / sample_nodes.max(1)).max(1);
+    let mut triangles = 0usize;
+    let mut wedges = 0usize;
+    for v in (0..n as NodeId).step_by(step) {
+        let nbrs = g.neighbors(v);
+        let d = nbrs.len();
+        if d < 2 {
+            continue;
+        }
+        wedges += d * (d - 1) / 2;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                if g.has_edge(nbrs[i], nbrs[j]) {
+                    triangles += 1;
+                }
+            }
+        }
+    }
+    let clustering = if wedges == 0 { 0.0 } else { triangles as f64 / wedges as f64 };
+
+    GraphStats {
+        nodes: n,
+        edges: g.num_edges(),
+        avg_degree: avg,
+        max_degree: degrees.iter().copied().max().unwrap_or(0),
+        min_degree: degrees.iter().copied().min().unwrap_or(0),
+        degree_gini: gini,
+        clustering,
+    }
+}
+
+/// Degree histogram with log-spaced buckets (for `repro info` output).
+pub fn degree_histogram(g: &CsrGraph) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<(usize, usize)> = Vec::new();
+    let mut bound = 1usize;
+    while bound <= g.num_nodes().max(2) {
+        buckets.push((bound, 0));
+        bound *= 2;
+    }
+    for v in 0..g.num_nodes() as NodeId {
+        let d = g.degree(v);
+        let idx = (usize::BITS - d.max(1).leading_zeros() - 1) as usize;
+        if let Some(b) = buckets.get_mut(idx) {
+            b.1 += 1;
+        }
+    }
+    while buckets.last().map_or(false, |&(_, c)| c == 0) {
+        buckets.pop();
+    }
+    buckets
+}
+
+/// Label homophily: fraction of edges whose endpoints share a label.
+pub fn edge_homophily(g: &CsrGraph, labels: &[i32]) -> f64 {
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for (u, v, _) in g.edges() {
+        total += 1;
+        same += (labels[u as usize] == labels[v as usize]) as usize;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        same as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+
+    #[test]
+    fn karate_stats() {
+        let g = karate_graph();
+        let s = graph_stats(&g, 1000);
+        assert_eq!(s.nodes, 34);
+        assert_eq!(s.edges, 78);
+        assert!((s.avg_degree - 2.0 * 78.0 / 34.0).abs() < 1e-9);
+        assert_eq!(s.max_degree, 17);
+        assert_eq!(s.min_degree, 1);
+        // karate is famously clustered
+        assert!(s.clustering > 0.2, "clustering {}", s.clustering);
+        assert!(s.degree_gini > 0.2, "gini {}", s.degree_gini);
+    }
+
+    #[test]
+    fn triangle_graph_clustering_is_one() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        let s = graph_stats(&g, 10);
+        assert!((s.clustering - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn star_graph_clustering_is_zero() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        let s = graph_stats(&g, 10);
+        assert_eq!(s.clustering, 0.0);
+        assert!(s.degree_gini > 0.0);
+    }
+
+    #[test]
+    fn histogram_covers_all_nodes() {
+        let g = karate_graph();
+        let h = degree_histogram(&g);
+        assert_eq!(h.iter().map(|&(_, c)| c).sum::<usize>(), 34);
+    }
+
+    #[test]
+    fn homophily_extremes() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        assert_eq!(edge_homophily(&g, &[1, 1, 2, 2]), 1.0);
+        assert_eq!(edge_homophily(&g, &[1, 2, 1, 2]), 0.0);
+    }
+
+    #[test]
+    fn uniform_degree_gini_near_zero() {
+        // ring: all degrees equal
+        let edges: Vec<(u32, u32)> = (0..10u32).map(|i| (i, (i + 1) % 10)).collect();
+        let g = CsrGraph::from_edges(10, &edges).unwrap();
+        let s = graph_stats(&g, 10);
+        assert!(s.degree_gini.abs() < 1e-9);
+    }
+}

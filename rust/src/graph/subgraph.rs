@@ -1,0 +1,186 @@
+//! Subgraph extraction: **Inner** and **Repli** (paper §5.2).
+//!
+//! Given a partition's node set, training needs a local graph:
+//!
+//! * **Inner** — the induced subgraph: only edges with both endpoints in
+//!   the partition. Cut edges are dropped; boundary nodes lose neighbours.
+//! * **Repli** — cut edges are preserved by *replicating* the external
+//!   endpoint into the subgraph as a read-only "halo" node. Replicas carry
+//!   their features (copied once before training — no communication during
+//!   training) but are excluded from the loss mask and from the embedding
+//!   integration (each node's embedding comes from its *owner* partition).
+
+use super::csr::{CsrGraph, NodeId};
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// A local training graph with its mapping back to global node ids.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    /// Local id → global id. Owned nodes come first, replicas after.
+    pub nodes: Vec<NodeId>,
+    /// Number of owned nodes (prefix of `nodes`); the rest are replicas.
+    pub num_owned: usize,
+    /// The local graph over `nodes` (local ids).
+    pub graph: CsrGraph,
+}
+
+impl Subgraph {
+    /// Whether a local node is owned (vs a replica).
+    #[inline]
+    pub fn is_owned(&self, local: usize) -> bool {
+        local < self.num_owned
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.nodes.len() - self.num_owned
+    }
+}
+
+/// Induced subgraph over `members` (global ids — order defines local ids).
+pub fn inner_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
+    let mut local_of: HashMap<NodeId, u32> = HashMap::with_capacity(members.len());
+    for (i, &v) in members.iter().enumerate() {
+        local_of.insert(v, i as u32);
+    }
+    let mut edges = Vec::new();
+    let mut weights = Vec::new();
+    let mut weighted = false;
+    for (i, &v) in members.iter().enumerate() {
+        for (j, &u) in g.neighbors(v).iter().enumerate() {
+            if v < u {
+                if let Some(&lu) = local_of.get(&u) {
+                    edges.push((i as u32, lu));
+                    let w = g.weight_at(v, j);
+                    weights.push(w);
+                    weighted |= g.is_weighted();
+                }
+            }
+        }
+    }
+    let graph = if weighted {
+        CsrGraph::from_weighted_edges(members.len(), &edges, Some(&weights))?
+    } else {
+        CsrGraph::from_edges(members.len(), &edges)?
+    };
+    Ok(Subgraph { nodes: members.to_vec(), num_owned: members.len(), graph })
+}
+
+/// Subgraph with 1-hop halo replication: all edges incident to an owned
+/// node are kept; external endpoints become replica nodes. Edges between
+/// two replicas are *not* included (they belong to other partitions).
+pub fn repli_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
+    let mut local_of: HashMap<NodeId, u32> = HashMap::with_capacity(members.len() * 2);
+    let mut nodes = members.to_vec();
+    for (i, &v) in members.iter().enumerate() {
+        local_of.insert(v, i as u32);
+    }
+    let num_owned = members.len();
+    // Discover replicas in deterministic order.
+    for &v in members {
+        for &u in g.neighbors(v) {
+            if !local_of.contains_key(&u) {
+                local_of.insert(u, nodes.len() as u32);
+                nodes.push(u);
+            }
+        }
+    }
+    let mut edges = Vec::new();
+    let mut weights = Vec::new();
+    for (i, &v) in members.iter().enumerate() {
+        for (j, &u) in g.neighbors(v).iter().enumerate() {
+            let lu = local_of[&u];
+            let owned_u = (lu as usize) < num_owned;
+            // Keep each edge once: owned-owned when v < u; owned-replica
+            // always emitted from the owned side.
+            if owned_u && v >= u {
+                continue;
+            }
+            edges.push((i as u32, lu));
+            weights.push(g.weight_at(v, j));
+        }
+    }
+    let graph = if g.is_weighted() {
+        CsrGraph::from_weighted_edges(nodes.len(), &edges, Some(&weights))?
+    } else {
+        CsrGraph::from_edges(nodes.len(), &edges)?
+    };
+    Ok(Subgraph { nodes, num_owned, graph })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path 0-1-2-3-4 plus chord (1,3).
+    fn path_graph() -> CsrGraph {
+        CsrGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (1, 3)]).unwrap()
+    }
+
+    #[test]
+    fn inner_keeps_only_internal_edges() {
+        let g = path_graph();
+        let sg = inner_subgraph(&g, &[1, 2, 3]).unwrap();
+        assert_eq!(sg.nodes, vec![1, 2, 3]);
+        assert_eq!(sg.num_owned, 3);
+        assert_eq!(sg.num_replicas(), 0);
+        // local edges: (0,1)=(1,2), (1,2)=(2,3), (0,2)=(1,3)
+        assert_eq!(sg.graph.num_edges(), 3);
+        assert!(sg.graph.has_edge(0, 2));
+    }
+
+    #[test]
+    fn repli_adds_halo_nodes() {
+        let g = path_graph();
+        let sg = repli_subgraph(&g, &[1, 2]).unwrap();
+        // owned {1,2}; replicas {0, 3} (neighbours of owned outside set)
+        assert_eq!(sg.num_owned, 2);
+        assert_eq!(sg.num_replicas(), 2);
+        assert_eq!(sg.nodes[..2], [1, 2]);
+        let mut replicas = sg.nodes[2..].to_vec();
+        replicas.sort_unstable();
+        assert_eq!(replicas, vec![0, 3]);
+        // edges: (1,2) internal; (1,0),(1,3),(2,3) to replicas = 4 total
+        assert_eq!(sg.graph.num_edges(), 4);
+    }
+
+    #[test]
+    fn repli_excludes_replica_replica_edges() {
+        // triangle 0-1-2; own only {0} → replicas 1,2; edge (1,2) excluded
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]).unwrap();
+        let sg = repli_subgraph(&g, &[0]).unwrap();
+        assert_eq!(sg.num_replicas(), 2);
+        assert_eq!(sg.graph.num_edges(), 2);
+    }
+
+    #[test]
+    fn repli_of_full_set_equals_inner() {
+        let g = path_graph();
+        let all: Vec<NodeId> = (0..5).collect();
+        let a = inner_subgraph(&g, &all).unwrap();
+        let b = repli_subgraph(&g, &all).unwrap();
+        assert_eq!(b.num_replicas(), 0);
+        assert_eq!(a.graph.num_edges(), b.graph.num_edges());
+    }
+
+    #[test]
+    fn weighted_subgraphs_preserve_weights() {
+        let g = CsrGraph::from_weighted_edges(3, &[(0, 1), (1, 2)], Some(&[2.0, 5.0]))
+            .unwrap();
+        let sg = inner_subgraph(&g, &[1, 2]).unwrap();
+        assert_eq!(sg.graph.total_weight(), 5.0);
+        let rg = repli_subgraph(&g, &[1]).unwrap();
+        assert_eq!(rg.graph.total_weight(), 7.0);
+    }
+
+    #[test]
+    fn local_ids_follow_member_order() {
+        let g = path_graph();
+        let sg = inner_subgraph(&g, &[3, 1, 2]).unwrap();
+        assert_eq!(sg.nodes, vec![3, 1, 2]);
+        // edge (1,2) → local (1,2); edge (2,3) → local (2,0); chord (1,3) → (1,0)
+        assert!(sg.graph.has_edge(1, 2));
+        assert!(sg.graph.has_edge(0, 2));
+        assert!(sg.graph.has_edge(0, 1));
+    }
+}

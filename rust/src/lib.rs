@@ -1,0 +1,29 @@
+//! # leiden-fusion
+//!
+//! Production-grade reproduction of *"Leiden-Fusion Partitioning Method for
+//! Effective Distributed Training of Graph Embeddings"* (Bai, Constantin,
+//! Naacke, 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — graph substrate, the Leiden-Fusion partitioner
+//!   and all baselines, the communication-free distributed training
+//!   coordinator, and the PJRT runtime that executes AOT-compiled models.
+//! * **L2/L1 (python/, build-time only)** — JAX GCN/GraphSAGE/MLP models on
+//!   Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};

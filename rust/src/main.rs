@@ -1,0 +1,313 @@
+//! `repro` — the Leiden-Fusion launcher.
+//!
+//! Subcommands:
+//!   partition  — partition a dataset and print §5.1 quality metrics
+//!   train      — full distributed pipeline: partition → per-machine GNN
+//!                training → embedding integration → MLP → eval
+//!   pipeline   — `train` for LF vs baselines side by side
+//!   info       — dataset + artifact inventory
+//!
+//! Examples:
+//!   repro partition --dataset arxiv --method lf --k 8
+//!   repro train --config configs/arxiv_lf.toml
+//!   repro train --dataset karate --k 2 --epochs 40 --model gcn
+//!   repro info
+
+use leiden_fusion::benchkit::Table;
+use leiden_fusion::cli::Args;
+use leiden_fusion::config::ExperimentConfig;
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
+use leiden_fusion::data::{
+    karate_dataset, synth_arxiv, synth_proteins, ArxivLikeConfig, Dataset,
+    ProteinsLikeConfig,
+};
+use leiden_fusion::partition::{by_name, PartitionQuality, Partitioning};
+use leiden_fusion::runtime::Manifest;
+use leiden_fusion::train::ModelKind;
+use leiden_fusion::util::{fmt_duration, init_logging, Stopwatch};
+use leiden_fusion::{Error, Result};
+
+const USAGE: &str = "\
+repro — Leiden-Fusion distributed graph-embedding training
+
+USAGE:
+  repro partition --dataset <karate|arxiv|proteins> --method <lf|metis|lpa|random|metis+f|lpa+f>
+                  [--k 4] [--n 0] [--seed 42]
+  repro train     [--config file.toml] [--dataset arxiv] [--method lf] [--k 4]
+                  [--model gcn|sage] [--mode inner|repli] [--epochs 80]
+                  [--machines 4] [--n 0] [--seed 42]
+  repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
+  repro info      (dataset defaults + compiled artifact inventory)
+";
+
+fn main() {
+    init_logging();
+    let args = match Args::parse(std::env::args()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("partition") => cmd_partition(args),
+        Some("train") => cmd_train(args),
+        Some("pipeline") => cmd_pipeline(args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Resolve a dataset by name with optional size override.
+fn load_dataset(name: &str, n: usize, seed: u64) -> Result<Dataset> {
+    match name {
+        "karate" => Ok(karate_dataset(seed)),
+        "arxiv" => {
+            let mut cfg = ArxivLikeConfig { seed, ..Default::default() };
+            if n > 0 {
+                cfg.n = n;
+            }
+            synth_arxiv(&cfg)
+        }
+        "proteins" => {
+            let mut cfg = ProteinsLikeConfig { seed, ..Default::default() };
+            if n > 0 {
+                cfg.n = n;
+            }
+            synth_proteins(&cfg)
+        }
+        path => {
+            // treat as an edge-list file → unlabeled; only `partition` works
+            let g = leiden_fusion::graph::io::read_edge_list(std::path::Path::new(path))?;
+            let n = g.num_nodes();
+            Ok(Dataset {
+                name: path.to_string(),
+                graph: g,
+                features: vec![0.0; n],
+                feat_dim: 1,
+                labels: leiden_fusion::data::Labels::Multiclass {
+                    classes: 1,
+                    labels: vec![0; n],
+                },
+                train_mask: vec![true; n],
+                val_mask: vec![false; n],
+                test_mask: vec![false; n],
+            })
+        }
+    }
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "arxiv");
+    let method = args.str_or("method", "lf");
+    let k = args.usize_or("k", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    let n = args.usize_or("n", 0)?;
+
+    let ds = load_dataset(&dataset, n, seed)?;
+    let sw = Stopwatch::start();
+    let p = by_name(&method, seed)?.partition(&ds.graph, k)?;
+    let secs = sw.secs();
+    let q = PartitionQuality::measure(&ds.graph, &p);
+
+    println!(
+        "dataset={} nodes={} edges={} method={} k={} time={}",
+        ds.name,
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        method,
+        k,
+        fmt_duration(secs)
+    );
+    let mut t = Table::new(
+        "Partition quality (§5.1)",
+        &["part", "nodes", "edges", "components", "isolated"],
+    );
+    for i in 0..q.k {
+        t.row(vec![
+            i.to_string(),
+            q.node_counts[i].to_string(),
+            q.edge_counts[i].to_string(),
+            q.components[i].to_string(),
+            q.isolated[i].to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "edge-cut: {:.2}%  node-balance ρ: {:.3}  edge-balance: {:.3}  RF: {:.3}  ideal: {}",
+        q.edge_cut_fraction * 100.0,
+        q.node_balance,
+        q.edge_balance,
+        q.replication_factor,
+        q.is_structurally_ideal()
+    );
+    Ok(())
+}
+
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    // CLI overrides
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.partitioner = m.to_string();
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model = ModelKind::parse(m)?;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = match m {
+            "inner" => leiden_fusion::train::Mode::Inner,
+            "repli" => leiden_fusion::train::Mode::Repli,
+            other => return Err(Error::Config(format!("unknown mode {other:?}"))),
+        };
+    }
+    cfg.k = args.usize_or("k", cfg.k)?;
+    cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
+    cfg.mlp_epochs = args.usize_or("mlp-epochs", cfg.mlp_epochs)?;
+    cfg.machines = args.usize_or("machines", cfg.machines)?;
+    cfg.dataset_n = args.usize_or("n", cfg.dataset_n)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+/// Run the full distributed pipeline for one configuration.
+fn run_experiment(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+) -> Result<(Partitioning, leiden_fusion::coordinator::TrainReport)> {
+    let p = by_name(&cfg.partitioner, cfg.seed)?.partition(&ds.graph, cfg.k)?;
+    let mut ccfg = CoordinatorConfig::new(cfg.artifacts_dir.clone());
+    ccfg.machines = cfg.machines;
+    ccfg.mode = cfg.mode;
+    ccfg.model = cfg.model;
+    ccfg.epochs = cfg.epochs;
+    ccfg.mlp_epochs = cfg.mlp_epochs;
+    ccfg.seed = cfg.seed;
+    let report = Coordinator::new(ccfg).run(ds, &p)?;
+    Ok((p, report))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let ds = load_dataset(&cfg.dataset, cfg.dataset_n, cfg.seed)?;
+    println!(
+        "training {} on {}: k={} model={} mode={} epochs={} machines={}",
+        cfg.partitioner,
+        ds.name,
+        cfg.k,
+        cfg.model.as_str(),
+        cfg.mode.as_str(),
+        cfg.epochs,
+        cfg.machines
+    );
+    let (p, report) = run_experiment(&cfg, &ds)?;
+    let q = PartitionQuality::measure(&ds.graph, &p);
+    let mut t = Table::new(
+        "Per-partition training",
+        &["part", "nodes", "replicas", "final-loss", "train-time"],
+    );
+    for s in &report.per_partition {
+        t.row(vec![
+            s.part_id.to_string(),
+            s.num_nodes.to_string(),
+            s.num_replicas.to_string(),
+            format!("{:.4}", s.losses.last().copied().unwrap_or(f32::NAN)),
+            fmt_duration(s.train_secs),
+        ]);
+    }
+    t.print();
+    println!(
+        "edge-cut {:.2}% | structurally ideal: {} | max-part-train {} | total {}",
+        q.edge_cut_fraction * 100.0,
+        q.is_structurally_ideal(),
+        fmt_duration(report.max_partition_train_secs),
+        fmt_duration(report.wall_secs),
+    );
+    println!(
+        "val {} = {:.4} | test {} = {:.4}",
+        report.eval.metric_name,
+        report.eval.val_metric,
+        report.eval.metric_name,
+        report.eval.test_metric
+    );
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let base = experiment_config(args)?;
+    let ds = load_dataset(&base.dataset, base.dataset_n, base.seed)?;
+    let mut t = Table::new(
+        "LF vs baselines",
+        &["method", "edge-cut%", "ideal", "test-metric", "max-part-train"],
+    );
+    for method in ["lf", "metis", "lpa"] {
+        let mut cfg = base.clone();
+        cfg.partitioner = method.to_string();
+        let (p, report) = run_experiment(&cfg, &ds)?;
+        let q = PartitionQuality::measure(&ds.graph, &p);
+        t.row(vec![
+            method.to_string(),
+            format!("{:.2}", q.edge_cut_fraction * 100.0),
+            q.is_structurally_ideal().to_string(),
+            format!("{:.4}", report.eval.test_metric),
+            fmt_duration(report.max_partition_train_secs),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("datasets:");
+    println!("  karate    34 nodes / 78 edges, 2 classes (exact Zachary graph)");
+    let a = ArxivLikeConfig::default();
+    println!(
+        "  arxiv     {} nodes (default), {} classes, multiclass (SBM stand-in)",
+        a.n, a.classes
+    );
+    let p = ProteinsLikeConfig::default();
+    println!(
+        "  proteins  {} nodes (default), {} tasks, multilabel dense (SBM stand-in)",
+        p.n, p.tasks
+    );
+    let dir = leiden_fusion::runtime::default_artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(man) => {
+            println!("\nartifacts ({}):", dir.display());
+            let mut t =
+                Table::new("Compiled artifacts", &["name", "model", "task", "role", "n", "e"]);
+            for a in &man.artifacts {
+                t.row(vec![
+                    a.name.clone(),
+                    a.model.clone(),
+                    a.task.clone(),
+                    a.role.clone(),
+                    a.dims.n.to_string(),
+                    a.dims.e.to_string(),
+                ]);
+            }
+            t.print();
+        }
+        Err(e) => println!("\nartifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

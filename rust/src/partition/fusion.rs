@@ -1,0 +1,313 @@
+//! Community fusion — the paper's Algorithm 1 (Leiden-Fusion) and
+//! Algorithm 2 (LargestEdgeCutNeighbor), plus the "+F" adapter of §5.4
+//! that applies fusion to the output of *any* partitioner by first
+//! splitting its partitions into connected components.
+//!
+//! Invariant: if the input communities are each connected and the graph is
+//! connected, every output partition is connected with no isolated nodes —
+//! merging two communities joined by a cut edge preserves connectivity.
+
+use super::{Partitioner, Partitioning};
+use crate::error::{Error, Result};
+use crate::graph::{components_within, CsrGraph, NodeId};
+use std::collections::BinaryHeap;
+use std::cmp::Reverse;
+
+/// Fusion parameters (Algorithm 1 inputs).
+#[derive(Clone, Debug)]
+pub struct FusionConfig {
+    /// Target number of partitions (≙ machines).
+    pub k: usize,
+    /// `size(G)/k · (1+α)` — the balance bound (Algorithm 1 line 3).
+    pub max_part_size: usize,
+}
+
+impl FusionConfig {
+    /// From the paper's α parameter.
+    pub fn with_alpha(g: &CsrGraph, k: usize, alpha: f64) -> Self {
+        let max_part_size =
+            ((g.num_nodes() as f64 / k as f64) * (1.0 + alpha)).ceil() as usize;
+        FusionConfig { k, max_part_size }
+    }
+}
+
+/// Mutable community state during fusion.
+struct FusionState {
+    /// Community id per node (community ids are *not* dense during fusion).
+    assign: Vec<u32>,
+    /// Members per live community (dead communities have empty vecs).
+    members: Vec<Vec<NodeId>>,
+    /// Live community count.
+    live: usize,
+}
+
+impl FusionState {
+    fn from_partitioning(p: &Partitioning) -> Self {
+        let members = p.members();
+        FusionState {
+            assign: p.assignments().to_vec(),
+            live: members.iter().filter(|m| !m.is_empty()).count(),
+            members,
+        }
+    }
+
+    fn size(&self, c: u32) -> usize {
+        self.members[c as usize].len()
+    }
+
+    /// Merge community `from` into `into`.
+    fn merge(&mut self, from: u32, into: u32) {
+        debug_assert_ne!(from, into);
+        let moved = std::mem::take(&mut self.members[from as usize]);
+        for &v in &moved {
+            self.assign[v as usize] = into;
+        }
+        self.members[into as usize].extend(moved);
+        self.live -= 1;
+    }
+}
+
+/// Algorithm 2: the most-connected neighbour of `v_comm` whose merged size
+/// stays under `max_part_size`; if none qualifies, the smallest neighbour.
+/// Returns `None` only if `v_comm` has no neighbouring community at all
+/// (impossible for a connected graph with ≥ 2 communities).
+fn largest_edge_cut_neighbor(
+    g: &CsrGraph,
+    st: &FusionState,
+    v_comm: u32,
+    max_part_size: usize,
+) -> Option<u32> {
+    // cut weights from v_comm to each neighbouring community
+    let mut cut: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
+    for &v in &st.members[v_comm as usize] {
+        for &u in g.neighbors(v) {
+            let c = st.assign[u as usize];
+            if c != v_comm {
+                *cut.entry(c).or_insert(0) += 1;
+            }
+        }
+    }
+    if cut.is_empty() {
+        return None;
+    }
+    let v_size = st.size(v_comm);
+    // N = neighbours within the size bound (Algorithm 2 line 3)
+    let best_within = cut
+        .iter()
+        .filter(|&(&c, _)| st.size(c) + v_size < max_part_size)
+        // deterministic tie-break on community id
+        .max_by_key(|&(&c, &w)| (w, Reverse(c)))
+        .map(|(&c, _)| c);
+    best_within.or_else(|| {
+        // fallback: smallest neighbour (Algorithm 2 line 7)
+        cut.keys()
+            .copied()
+            .min_by_key(|&c| (st.size(c), c))
+    })
+}
+
+/// Algorithm 1: iteratively merge the smallest community into its largest
+/// edge-cut neighbour until exactly `k` communities remain.
+pub fn fuse_communities(
+    g: &CsrGraph,
+    communities: &Partitioning,
+    cfg: &FusionConfig,
+) -> Result<Partitioning> {
+    if cfg.k == 0 {
+        return Err(Error::Partition("k must be positive".into()));
+    }
+    if communities.num_nodes() != g.num_nodes() {
+        return Err(Error::Partition(format!(
+            "partitioning covers {} nodes, graph has {}",
+            communities.num_nodes(),
+            g.num_nodes()
+        )));
+    }
+    let mut st = FusionState::from_partitioning(communities);
+    if st.live < cfg.k {
+        return Err(Error::Partition(format!(
+            "cannot fuse {} communities up to k={} (need k ≤ communities)",
+            st.live, cfg.k
+        )));
+    }
+
+    // Min-heap of (size, community) with lazy invalidation.
+    let mut heap: BinaryHeap<Reverse<(usize, u32)>> = BinaryHeap::new();
+    for (c, m) in st.members.iter().enumerate() {
+        if !m.is_empty() {
+            heap.push(Reverse((m.len(), c as u32)));
+        }
+    }
+
+    while st.live > cfg.k {
+        let Reverse((size, c_min)) = heap.pop().ok_or_else(|| {
+            Error::Partition("fusion heap exhausted before reaching k".into())
+        })?;
+        // stale entry? (community merged away or grew)
+        if st.members[c_min as usize].len() != size || size == 0 {
+            continue;
+        }
+        let target = match largest_edge_cut_neighbor(g, &st, c_min, cfg.max_part_size) {
+            Some(t) => t,
+            None => {
+                // disconnected community (can only happen on disconnected
+                // inputs): merge with the globally smallest other community
+                let other = st
+                    .members
+                    .iter()
+                    .enumerate()
+                    .filter(|&(c, m)| c as u32 != c_min && !m.is_empty())
+                    .min_by_key(|&(_, m)| m.len())
+                    .map(|(c, _)| c as u32)
+                    .ok_or_else(|| Error::Partition("no community to merge with".into()))?;
+                other
+            }
+        };
+        st.merge(c_min, target);
+        heap.push(Reverse((st.size(target), target)));
+    }
+
+    Ok(Partitioning::from_labels(&st.assign))
+}
+
+/// The "+F" adapter (§5.4): split an arbitrary partitioning into its
+/// connected components (treating each component as a community — this is
+/// the extra, costly step METIS/LPA need), then fuse down to `p.k()`.
+///
+/// Isolated nodes become singleton communities and are absorbed by fusion,
+/// so the output has no isolated nodes on a connected graph.
+pub fn fuse_partitioning(g: &CsrGraph, p: &Partitioning) -> Result<Partitioning> {
+    let cfg = FusionConfig::with_alpha(g, p.k(), 0.05);
+    let components = split_into_components(g, p);
+    fuse_communities(g, &components, &cfg)
+}
+
+/// Relabel a partitioning so each connected component of each partition is
+/// its own community.
+pub fn split_into_components(g: &CsrGraph, p: &Partitioning) -> Partitioning {
+    let mut labels = vec![0u32; g.num_nodes()];
+    let mut next = 0u32;
+    for part in 0..p.k() as u32 {
+        let mask = p.mask(part);
+        if !mask.iter().any(|&b| b) {
+            continue;
+        }
+        let info = components_within(g, &mask);
+        for v in 0..g.num_nodes() {
+            if mask[v] {
+                labels[v] = next + info.labels[v];
+            }
+        }
+        next += info.num_components() as u32;
+    }
+    Partitioning::from_labels(&labels)
+}
+
+/// Wraps a base partitioner with the +F pass (used by `by_name("metis+f")`).
+pub struct FusedPartitioner {
+    base: Box<dyn Partitioner>,
+}
+
+impl FusedPartitioner {
+    pub fn new(base: Box<dyn Partitioner>) -> Self {
+        FusedPartitioner { base }
+    }
+}
+
+impl Partitioner for FusedPartitioner {
+    fn name(&self) -> &'static str {
+        "+f"
+    }
+
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
+        let p = self.base.partition(g, k)?;
+        fuse_partitioning(g, &p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+    use crate::partition::leiden::{leiden, LeidenConfig};
+
+    #[test]
+    fn fuses_karate_to_two_connected_partitions() {
+        let g = karate_graph();
+        let comms = leiden(&g, &LeidenConfig { seed: 1, ..Default::default() });
+        let k = 2;
+        let cfg = FusionConfig::with_alpha(&g, k, 0.05);
+        let p = fuse_communities(&g, &comms, &cfg).unwrap();
+        assert_eq!(p.k(), 2);
+        for part in 0..2u32 {
+            let info = components_within(&g, &p.mask(part));
+            assert_eq!(info.num_components(), 1);
+            assert_eq!(info.isolated, 0);
+        }
+    }
+
+    #[test]
+    fn fusion_from_singletons_reaches_k() {
+        let g = karate_graph();
+        let singles = Partitioning::from_labels(&(0..34u32).collect::<Vec<_>>());
+        let cfg = FusionConfig::with_alpha(&g, 4, 0.05);
+        let p = fuse_communities(&g, &singles, &cfg).unwrap();
+        assert_eq!(p.k(), 4);
+        let sizes = p.sizes();
+        assert!(sizes.iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn respects_size_bound_when_possible() {
+        let g = karate_graph();
+        let singles = Partitioning::from_labels(&(0..34u32).collect::<Vec<_>>());
+        let cfg = FusionConfig { k: 2, max_part_size: 18 }; // 34/2·(1+.05)
+        let p = fuse_communities(&g, &singles, &cfg).unwrap();
+        let sizes = p.sizes();
+        // α-bound: no partition exceeds max_part_size when a valid merge
+        // order exists (karate admits one)
+        assert!(sizes.iter().all(|&s| s <= 18), "{sizes:?}");
+    }
+
+    #[test]
+    fn errors_when_k_exceeds_communities() {
+        let g = karate_graph();
+        let two = Partitioning::new(vec![0; 34], 1).unwrap();
+        let cfg = FusionConfig { k: 5, max_part_size: 100 };
+        assert!(fuse_communities(&g, &two, &cfg).is_err());
+    }
+
+    #[test]
+    fn split_into_components_separates() {
+        // path 0-1-2-3-4-5; partition {0,1,4,5} is two components
+        let g = CsrGraph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
+            .unwrap();
+        let p = Partitioning::new(vec![0, 0, 1, 1, 0, 0], 2).unwrap();
+        let split = split_into_components(&g, &p);
+        assert_eq!(split.k(), 3);
+    }
+
+    #[test]
+    fn plus_f_fixes_disconnected_partitions() {
+        let g = CsrGraph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
+            .unwrap();
+        // partition 0 = {0,1,4,5} (two components), partition 1 = {2,3}
+        let p = Partitioning::new(vec![0, 0, 1, 1, 0, 0], 2).unwrap();
+        let fused = fuse_partitioning(&g, &p).unwrap();
+        assert_eq!(fused.k(), 2);
+        for part in 0..2u32 {
+            let info = components_within(&g, &fused.mask(part));
+            assert_eq!(info.num_components(), 1, "partition {part} disconnected");
+        }
+    }
+
+    #[test]
+    fn fusion_preserves_exact_cover() {
+        let g = karate_graph();
+        let comms = leiden(&g, &LeidenConfig { seed: 2, ..Default::default() });
+        let cfg = FusionConfig::with_alpha(&g, 3, 0.05);
+        let p = fuse_communities(&g, &comms, &cfg).unwrap();
+        assert_eq!(p.num_nodes(), 34);
+        assert_eq!(p.sizes().iter().sum::<usize>(), 34);
+    }
+}

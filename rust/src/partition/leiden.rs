@@ -1,0 +1,535 @@
+//! Leiden community detection (Traag et al. 2019) with the paper's
+//! community-size cap, plus the combined Leiden-Fusion partitioner.
+//!
+//! Implements the full three-phase algorithm:
+//!  1. **Fast local moving** — queue-driven modularity-maximising moves.
+//!  2. **Refinement** — communities are re-partitioned from singletons by
+//!     randomised merges restricted to the community, which is what gives
+//!     Leiden its well-connectedness guarantee over Louvain.
+//!  3. **Aggregation** — the refined partition becomes a super-node graph
+//!     whose communities seed the next level.
+//!
+//! Definition 1 of the paper adds a max community size `S`; any move or
+//! merge that would exceed `S` (counted in *original* nodes) is rejected.
+
+use super::fusion::{fuse_communities, FusionConfig};
+use super::{Partitioner, Partitioning};
+use crate::error::Result;
+use crate::graph::{CsrGraph, NodeId};
+use crate::util::rng::Rng;
+
+/// Leiden parameters.
+#[derive(Clone, Debug)]
+pub struct LeidenConfig {
+    /// Modularity resolution γ (paper eq. 4).
+    pub gamma: f64,
+    /// Max community size in original nodes (`usize::MAX` = uncapped);
+    /// the paper's Definition 1 `S = β · max_part_size`.
+    pub max_community_size: usize,
+    /// Randomness of refinement merges (θ in the Leiden paper).
+    pub theta: f64,
+    /// Max aggregation levels (safety bound; convergence is usually < 6).
+    pub max_levels: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LeidenConfig {
+    fn default() -> Self {
+        LeidenConfig {
+            gamma: 1.0,
+            max_community_size: usize::MAX,
+            theta: 0.01,
+            max_levels: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// One level of the algorithm operates on a (possibly aggregated) graph.
+struct Level {
+    graph: CsrGraph,
+    /// Original-node count carried by each super-node.
+    node_count: Vec<usize>,
+    /// Community of each super-node.
+    comm: Vec<u32>,
+    /// Self-loop weight of each super-node (edges internal to the refined
+    /// community it was contracted from). CSR forbids literal self-loops,
+    /// so the weight is carried here; it contributes 2w to the node degree
+    /// in the modularity null model.
+    self_weight: Vec<f64>,
+}
+
+impl Level {
+    /// Modularity degree: weighted degree + twice the self-loop weight.
+    #[inline]
+    fn degree(&self, v: NodeId) -> f64 {
+        self.graph.weighted_degree(v) + 2.0 * self.self_weight[v as usize]
+    }
+}
+
+/// Community-level aggregates maintained incrementally.
+struct CommStats {
+    /// Sum of weighted degrees of members.
+    degree: Vec<f64>,
+    /// Sum of original-node counts of members.
+    size: Vec<usize>,
+    /// Number of super-node members (0 ⇒ dead community).
+    members: Vec<usize>,
+}
+
+impl CommStats {
+    fn init(level: &Level) -> Self {
+        let n = level.graph.num_nodes();
+        let mut s = CommStats {
+            degree: vec![0.0; n],
+            size: vec![0; n],
+            members: vec![0; n],
+        };
+        for v in 0..n {
+            let c = level.comm[v] as usize;
+            s.degree[c] += level.degree(v as NodeId);
+            s.size[c] += level.node_count[v];
+            s.members[c] += 1;
+        }
+        s
+    }
+
+    fn remove(&mut self, c: usize, deg: f64, size: usize) {
+        self.degree[c] -= deg;
+        self.size[c] -= size;
+        self.members[c] -= 1;
+    }
+
+    fn insert(&mut self, c: usize, deg: f64, size: usize) {
+        self.degree[c] += deg;
+        self.size[c] += size;
+        self.members[c] += 1;
+    }
+}
+
+/// Run Leiden; returns community labels (dense `0..n_comms`) per node.
+pub fn leiden(g: &CsrGraph, cfg: &LeidenConfig) -> Partitioning {
+    let n = g.num_nodes();
+    if n == 0 {
+        return Partitioning::from_labels(&[]);
+    }
+    let total_weight = g.total_weight().max(f64::MIN_POSITIVE);
+    let mut rng = Rng::new(cfg.seed);
+
+    // assignment of original nodes, refined level by level
+    let mut global_comm: Vec<u32> = (0..n as u32).collect();
+    let mut level = Level {
+        graph: g.clone(),
+        node_count: vec![1; n],
+        comm: (0..n as u32).collect(),
+        self_weight: vec![0.0; n],
+    };
+
+    for _ in 0..cfg.max_levels {
+        let moved = local_move(&mut level, cfg, total_weight, &mut rng);
+        let n_comms = compact(&mut level.comm);
+        if !moved && n_comms == level.graph.num_nodes() {
+            break; // converged: every super-node is its own community
+        }
+
+        // Refinement: sub-partition each community from singletons.
+        let mut refined_dense = refine(&level, cfg, total_weight, &mut rng);
+        let n_refined = compact(&mut refined_dense);
+
+        if n_refined == level.graph.num_nodes() {
+            // Refinement kept every super-node separate → aggregation would
+            // not shrink the graph; the local-move communities are final.
+            break;
+        }
+
+        // Map original nodes onto next level's super-nodes.
+        for gc in global_comm.iter_mut() {
+            *gc = refined_dense[*gc as usize];
+        }
+
+        // Aggregate refined communities into super-nodes; seed their
+        // community from the local-move partition.
+        level = aggregate(&level, &refined_dense, n_refined);
+        if level.graph.num_nodes() <= 1 {
+            break;
+        }
+    }
+
+    // Final labels: community of each super-node at the last level.
+    let mut final_comm = level.comm.clone();
+    compact(&mut final_comm);
+    let labels: Vec<u32> = global_comm
+        .iter()
+        .map(|&sc| final_comm[sc as usize])
+        .collect();
+    Partitioning::from_labels(&labels)
+}
+
+/// Queue-driven local moving phase. Returns whether any node moved.
+fn local_move(level: &mut Level, cfg: &LeidenConfig, m: f64, rng: &mut Rng) -> bool {
+    let n = level.graph.num_nodes();
+    let mut stats = CommStats::init(level);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut in_queue = vec![true; n];
+    let mut queue: std::collections::VecDeque<u32> = order.into_iter().collect();
+    let mut moved_any = false;
+
+    // scratch: neighbour-community edge weights
+    let mut nbr_comms: Vec<u32> = Vec::new();
+    let mut w_to: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+
+    while let Some(v) = queue.pop_front() {
+        in_queue[v as usize] = false;
+        let vc = level.comm[v as usize];
+        let k_v = level.degree(v);
+        let size_v = level.node_count[v as usize];
+
+        nbr_comms.clear();
+        w_to.clear();
+        for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
+            let c = level.comm[u as usize];
+            let w = level.graph.weight_at(v, i) as f64;
+            let e = w_to.entry(c).or_insert(0.0);
+            if *e == 0.0 {
+                nbr_comms.push(c);
+            }
+            *e += w;
+        }
+
+        // Gain of joining community c (after removing v from its own):
+        //   ΔQ ∝ w(v→c) − γ·k_v·K_c / (2m)
+        stats.remove(vc as usize, k_v, size_v);
+        let w_stay = w_to.get(&vc).copied().unwrap_or(0.0);
+        let gain_stay = w_stay - cfg.gamma * k_v * stats.degree[vc as usize] / (2.0 * m);
+        let mut best_c = vc;
+        let mut best_gain = gain_stay;
+        for &c in &nbr_comms {
+            if c == vc {
+                continue;
+            }
+            if stats.size[c as usize] + size_v > cfg.max_community_size {
+                continue; // Definition 1: size cap
+            }
+            let gain = w_to[&c] - cfg.gamma * k_v * stats.degree[c as usize] / (2.0 * m);
+            if gain > best_gain + 1e-12 {
+                best_gain = gain;
+                best_c = c;
+            }
+        }
+        stats.insert(best_c as usize, k_v, size_v);
+        if best_c != vc {
+            level.comm[v as usize] = best_c;
+            moved_any = true;
+            // re-queue neighbours now outside v's new community
+            for &u in level.graph.neighbors(v) {
+                if level.comm[u as usize] != best_c && !in_queue[u as usize] {
+                    in_queue[u as usize] = true;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    moved_any
+}
+
+/// Refinement phase: within each local-move community, re-partition from
+/// singletons by randomised positive-gain merges (θ-weighted), keeping the
+/// size cap. Returns refined community labels (sparse).
+fn refine(level: &Level, cfg: &LeidenConfig, m: f64, rng: &mut Rng) -> Vec<u32> {
+    let n = level.graph.num_nodes();
+    let mut refined: Vec<u32> = (0..n as u32).collect();
+    // aggregates for refined communities
+    let mut r_degree: Vec<f64> = (0..n).map(|v| level.degree(v as NodeId)).collect();
+    let mut r_size: Vec<usize> = level.node_count.clone();
+    let mut r_members: Vec<usize> = vec![1; n];
+
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+
+    let mut cands: Vec<(u32, f64)> = Vec::new();
+    // first-seen-ordered neighbour refined communities (HashMap iteration
+    // order is per-instance random — iterating it would break determinism)
+    let mut seen_rcs: Vec<u32> = Vec::new();
+    let mut w_to: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+
+    for &v in &order {
+        // only singleton refined communities may merge (Leiden invariant)
+        if r_members[refined[v as usize] as usize] != 1 {
+            continue;
+        }
+        let vc = level.comm[v as usize];
+        let k_v = level.degree(v);
+        let size_v = level.node_count[v as usize];
+        w_to.clear();
+        seen_rcs.clear();
+        for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
+            if level.comm[u as usize] != vc {
+                continue; // refinement stays inside the community
+            }
+            let rc = refined[u as usize];
+            if rc == refined[v as usize] {
+                continue;
+            }
+            let e = w_to.entry(rc).or_insert(0.0);
+            if *e == 0.0 {
+                seen_rcs.push(rc);
+            }
+            *e += level.graph.weight_at(v, i) as f64;
+        }
+        cands.clear();
+        for &rc in &seen_rcs {
+            if r_size[rc as usize] + size_v > cfg.max_community_size {
+                continue;
+            }
+            let gain = w_to[&rc] - cfg.gamma * k_v * r_degree[rc as usize] / (2.0 * m);
+            if gain > 0.0 {
+                cands.push((rc, gain));
+            }
+        }
+        if cands.is_empty() {
+            continue;
+        }
+        // θ-randomised selection among positive-gain candidates
+        let weights: Vec<f64> = cands
+            .iter()
+            .map(|&(_, g)| (g / cfg.theta.max(1e-9)).min(500.0).exp())
+            .collect();
+        let pick = cands[rng.weighted_index(&weights)].0;
+        let old = refined[v as usize];
+        refined[v as usize] = pick;
+        r_degree[pick as usize] += k_v;
+        r_size[pick as usize] += size_v;
+        r_members[pick as usize] += 1;
+        r_degree[old as usize] -= k_v;
+        r_size[old as usize] -= size_v;
+        r_members[old as usize] -= 1;
+    }
+    refined
+}
+
+/// Build the next level: super-nodes = refined communities (dense ids),
+/// each seeded with the local-move community of its members.
+fn aggregate(level: &Level, refined_dense: &[u32], n_refined: usize) -> Level {
+    let mut node_count = vec![0usize; n_refined];
+    let mut seed_comm = vec![0u32; n_refined];
+    let mut self_weight = vec![0.0f64; n_refined];
+    for v in 0..level.graph.num_nodes() {
+        let r = refined_dense[v] as usize;
+        node_count[r] += level.node_count[v];
+        seed_comm[r] = level.comm[v]; // all members share one community
+        self_weight[r] += level.self_weight[v];
+    }
+    // sum edge weights between refined communities; internal edges become
+    // super-node self-loop weight (kept out of CSR, carried separately)
+    let mut agg: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
+    for (u, v, w) in level.graph.edges() {
+        let (ru, rv) = (refined_dense[u as usize], refined_dense[v as usize]);
+        if ru == rv {
+            self_weight[ru as usize] += w as f64;
+            continue;
+        }
+        let key = if ru < rv { (ru, rv) } else { (rv, ru) };
+        *agg.entry(key).or_insert(0.0) += w as f64;
+    }
+    let edges: Vec<(NodeId, NodeId)> = agg.keys().copied().collect();
+    let weights: Vec<f32> = edges.iter().map(|k| agg[k] as f32).collect();
+    let graph = CsrGraph::from_weighted_edges(n_refined, &edges, Some(&weights))
+        .expect("aggregate edges are valid");
+    // densify seed communities
+    let mut comm = seed_comm;
+    compact(&mut comm);
+    Level { graph, node_count, comm, self_weight }
+}
+
+/// Relabel to dense `0..k`; returns k.
+fn compact(labels: &mut [u32]) -> usize {
+    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    for l in labels.iter_mut() {
+        let next = remap.len() as u32;
+        *l = *remap.entry(*l).or_insert(next);
+    }
+    remap.len()
+}
+
+/// Modularity of a partitioning (paper eq. 4) — used by tests and benches.
+pub fn modularity(g: &CsrGraph, p: &Partitioning, gamma: f64) -> f64 {
+    let m = g.total_weight();
+    if m <= 0.0 {
+        return 0.0;
+    }
+    let mut e_c = vec![0.0f64; p.k()];
+    let mut k_c = vec![0.0f64; p.k()];
+    for (u, v, w) in g.edges() {
+        if p.part_of(u) == p.part_of(v) {
+            e_c[p.part_of(u) as usize] += w as f64;
+        }
+    }
+    for v in 0..g.num_nodes() as NodeId {
+        k_c[p.part_of(v) as usize] += g.weighted_degree(v);
+    }
+    let mut q = 0.0;
+    for c in 0..p.k() {
+        q += e_c[c] / m - gamma * (k_c[c] / (2.0 * m)).powi(2);
+    }
+    q
+}
+
+// ---------------------------------------------------------------------------
+// Leiden-Fusion: the paper's Algorithm 1 end-to-end.
+// ---------------------------------------------------------------------------
+
+/// Run the paper's full two-step method: Leiden with size cap
+/// `β · max_part_size`, then greedy fusion down to `k` partitions.
+pub fn leiden_fusion(
+    g: &CsrGraph,
+    k: usize,
+    alpha: f64,
+    beta: f64,
+    seed: u64,
+) -> Result<Partitioning> {
+    let max_part_size =
+        ((g.num_nodes() as f64 / k as f64) * (1.0 + alpha)).ceil() as usize;
+    let cap = ((beta * max_part_size as f64).ceil() as usize).max(1);
+    let cfg = LeidenConfig {
+        max_community_size: cap,
+        seed,
+        ..LeidenConfig::default()
+    };
+    let communities = leiden(g, &cfg);
+    fuse_communities(g, &communities, &FusionConfig { k, max_part_size })
+}
+
+/// [`Partitioner`] wrapper with the paper's hyper-parameters
+/// (α = 0.05, β = 0.5 — §5 "Hyperparameter Settings").
+pub struct LeidenFusionPartitioner {
+    pub alpha: f64,
+    pub beta: f64,
+    pub seed: u64,
+}
+
+impl LeidenFusionPartitioner {
+    pub fn new(seed: u64) -> Self {
+        LeidenFusionPartitioner { alpha: 0.05, beta: 0.5, seed }
+    }
+}
+
+impl Partitioner for LeidenFusionPartitioner {
+    fn name(&self) -> &'static str {
+        "lf"
+    }
+
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
+        leiden_fusion(g, k, self.alpha, self.beta, self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_sbm, SbmConfig};
+    use crate::graph::karate::karate_graph;
+    use crate::graph::components_within;
+
+    #[test]
+    fn karate_communities_are_sane() {
+        let g = karate_graph();
+        let p = leiden(&g, &LeidenConfig { seed: 1, ..Default::default() });
+        // canonical Leiden/Louvain output is ~4 communities at γ=1
+        assert!((2..=6).contains(&p.k()), "got {} communities", p.k());
+        let q = modularity(&g, &p, 1.0);
+        assert!(q > 0.35, "modularity {q}"); // optimum ≈ 0.42
+    }
+
+    #[test]
+    fn communities_are_connected() {
+        let g = karate_graph();
+        let p = leiden(&g, &LeidenConfig { seed: 3, ..Default::default() });
+        for part in 0..p.k() as u32 {
+            let info = components_within(&g, &p.mask(part));
+            assert_eq!(info.num_components(), 1, "community {part} disconnected");
+            assert_eq!(info.isolated, 0);
+        }
+    }
+
+    #[test]
+    fn size_cap_is_respected() {
+        let g = karate_graph();
+        let cap = 10;
+        let p = leiden(
+            &g,
+            &LeidenConfig { max_community_size: cap, seed: 5, ..Default::default() },
+        );
+        for (i, &s) in p.sizes().iter().enumerate() {
+            assert!(s <= cap, "community {i} has {s} > cap {cap}");
+        }
+    }
+
+    #[test]
+    fn improves_modularity_over_singletons() {
+        let g = generate_sbm(&SbmConfig::arxiv_like(800, 2)).unwrap().graph;
+        let p = leiden(&g, &LeidenConfig { seed: 2, ..Default::default() });
+        let q = modularity(&g, &p, 1.0);
+        assert!(q > 0.3, "modularity {q}");
+        assert!(p.k() < g.num_nodes() / 4);
+    }
+
+    #[test]
+    fn recovers_planted_structure_roughly() {
+        let sbm = generate_sbm(&SbmConfig {
+            n: 600,
+            communities: 4,
+            avg_degree: 12.0,
+            p_in: 0.9,
+            degree_exponent: 3.0,
+            weight_range: None,
+            seed: 9,
+        })
+        .unwrap();
+        let p = leiden(&sbm.graph, &LeidenConfig { seed: 4, ..Default::default() });
+        // most planted communities should map to a dominant detected one
+        let mut agree = 0usize;
+        for planted in 0..4u32 {
+            let nodes: Vec<usize> = (0..600)
+                .filter(|&v| sbm.community[v] == planted)
+                .collect();
+            let mut counts = std::collections::HashMap::new();
+            for &v in &nodes {
+                *counts.entry(p.part_of(v as u32)).or_insert(0usize) += 1;
+            }
+            let dominant = counts.values().max().copied().unwrap_or(0);
+            if dominant * 2 > nodes.len() {
+                agree += 1;
+            }
+        }
+        assert!(agree >= 3, "only {agree}/4 planted communities recovered");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = karate_graph();
+        let cfg = LeidenConfig { seed: 7, ..Default::default() };
+        assert_eq!(leiden(&g, &cfg).assignments(), leiden(&g, &cfg).assignments());
+    }
+
+    #[test]
+    fn modularity_of_trivial_partition_is_nonpositive() {
+        let g = karate_graph();
+        let p = Partitioning::new(vec![0; 34], 1).unwrap();
+        let q = modularity(&g, &p, 1.0);
+        assert!(q.abs() < 1e-9, "single community modularity must be 0, got {q}");
+    }
+
+    #[test]
+    fn leiden_fusion_end_to_end_karate() {
+        let g = karate_graph();
+        let p = leiden_fusion(&g, 2, 0.05, 0.5, 1).unwrap();
+        assert_eq!(p.k(), 2);
+        for part in 0..2u32 {
+            let info = components_within(&g, &p.mask(part));
+            assert_eq!(info.num_components(), 1);
+            assert_eq!(info.isolated, 0);
+        }
+    }
+}

@@ -1,0 +1,375 @@
+//! METIS-style multilevel k-way partitioner (§3.1 baseline) — built from
+//! scratch (the real METIS is C and unavailable offline):
+//!
+//!  1. **Coarsening** — heavy-edge matching (HEM) contracts the graph until
+//!     it is small, summing edge weights and node weights.
+//!  2. **Initial partitioning** — greedy graph growing (GGP) on the
+//!     coarsest graph: grow each region by absorbing the boundary node
+//!     with the highest internal-edge gain until it reaches its share.
+//!  3. **Uncoarsening** — project the assignment up each level and refine
+//!     with Fiduccia–Mattheyses-style boundary passes under a balance
+//!     constraint.
+//!
+//! Like METIS, it optimises edge-cut + node balance and is oblivious to
+//! per-partition connectivity — exactly the weakness the paper exploits.
+
+use super::{Partitioner, Partitioning};
+use crate::error::Result;
+use crate::graph::{CsrGraph, GraphBuilder, NodeId};
+use crate::util::rng::Rng;
+
+pub struct MetisPartitioner {
+    pub seed: u64,
+    /// Allowed imbalance: max part weight ≤ (1 + imbalance) · n/k.
+    pub imbalance: f64,
+    /// Stop coarsening below this many nodes (scaled by k).
+    pub coarsen_until_per_part: usize,
+    /// FM refinement passes per level.
+    pub refine_passes: usize,
+}
+
+impl MetisPartitioner {
+    pub fn new(seed: u64) -> Self {
+        MetisPartitioner {
+            seed,
+            imbalance: 0.05,
+            coarsen_until_per_part: 30,
+            refine_passes: 4,
+        }
+    }
+}
+
+/// One level of the multilevel hierarchy.
+struct CoarseLevel {
+    graph: CsrGraph,
+    /// Original-node weight of each coarse node.
+    node_weight: Vec<usize>,
+    /// Mapping fine node → coarse node in the *next* (coarser) level.
+    fine_to_coarse: Vec<u32>,
+}
+
+impl Partitioner for MetisPartitioner {
+    fn name(&self) -> &'static str {
+        "metis"
+    }
+
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
+        let n = g.num_nodes();
+        if k <= 1 || n <= k {
+            return Partitioning::new(
+                (0..n).map(|v| (v % k.max(1)) as u32).collect(),
+                k.max(1),
+            );
+        }
+        let mut rng = Rng::new(self.seed);
+
+        // ---- 1. coarsening ------------------------------------------------
+        let mut levels: Vec<CoarseLevel> = Vec::new();
+        let mut current = g.clone();
+        let mut weights: Vec<usize> = vec![1; n];
+        let target = (self.coarsen_until_per_part * k).max(64);
+        while current.num_nodes() > target {
+            let (coarse, cweights, mapping) =
+                coarsen_hem(&current, &weights, &mut rng)?;
+            // diminishing returns → stop
+            if coarse.num_nodes() as f64 > 0.95 * current.num_nodes() as f64 {
+                break;
+            }
+            levels.push(CoarseLevel {
+                graph: std::mem::replace(&mut current, coarse),
+                node_weight: std::mem::replace(&mut weights, cweights),
+                fine_to_coarse: mapping,
+            });
+        }
+
+        // ---- 2. initial partitioning on the coarsest graph ---------------
+        let total_weight: usize = weights.iter().sum();
+        let mut assign = greedy_growing(&current, &weights, k, total_weight, &mut rng);
+        let cap = ((total_weight as f64 / k as f64) * (1.0 + self.imbalance)).ceil() as usize;
+        fm_refine(&current, &weights, &mut assign, k, cap, self.refine_passes);
+
+        // ---- 3. uncoarsen + refine ----------------------------------------
+        while let Some(level) = levels.pop() {
+            let mut fine_assign = vec![0u32; level.graph.num_nodes()];
+            for v in 0..level.graph.num_nodes() {
+                fine_assign[v] = assign[level.fine_to_coarse[v] as usize];
+            }
+            assign = fine_assign;
+            fm_refine(
+                &level.graph,
+                &level.node_weight,
+                &mut assign,
+                k,
+                cap,
+                self.refine_passes,
+            );
+        }
+
+        Partitioning::new(assign, k)
+    }
+}
+
+/// Heavy-edge matching contraction. Returns (coarse graph, coarse node
+/// weights, fine→coarse mapping).
+fn coarsen_hem(
+    g: &CsrGraph,
+    weights: &[usize],
+    rng: &mut Rng,
+) -> Result<(CsrGraph, Vec<usize>, Vec<u32>)> {
+    let n = g.num_nodes();
+    let mut matched = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut next_coarse = 0u32;
+    for &v in &order {
+        if matched[v as usize] != u32::MAX {
+            continue;
+        }
+        // heaviest unmatched neighbour
+        let mut best: Option<(f32, NodeId)> = None;
+        for (i, &u) in g.neighbors(v).iter().enumerate() {
+            if matched[u as usize] == u32::MAX {
+                let w = g.weight_at(v, i);
+                if best.map_or(true, |(bw, _)| w > bw) {
+                    best = Some((w, u));
+                }
+            }
+        }
+        match best {
+            Some((_, u)) => {
+                matched[v as usize] = next_coarse;
+                matched[u as usize] = next_coarse;
+            }
+            None => {
+                matched[v as usize] = next_coarse;
+            }
+        }
+        next_coarse += 1;
+    }
+    let nc = next_coarse as usize;
+    let mut cweights = vec![0usize; nc];
+    for v in 0..n {
+        cweights[matched[v] as usize] += weights[v];
+    }
+    let mut b = GraphBuilder::new(nc);
+    for (u, v, w) in g.edges() {
+        let (cu, cv) = (matched[u as usize], matched[v as usize]);
+        if cu != cv {
+            b.add_weighted(cu, cv, w);
+        }
+    }
+    Ok((b.build()?, cweights, matched))
+}
+
+/// Greedy graph growing: regions 0..k-1 grow from random seeds by absorbing
+/// the boundary node with max internal connectivity; leftovers go to the
+/// lightest region.
+fn greedy_growing(
+    g: &CsrGraph,
+    weights: &[usize],
+    k: usize,
+    total_weight: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let n = g.num_nodes();
+    let share = total_weight / k;
+    let mut assign = vec![u32::MAX; n];
+    let mut remaining = n;
+
+    for part in 0..k as u32 {
+        if remaining == 0 {
+            break;
+        }
+        // random unassigned seed
+        let seed = loop {
+            let v = rng.index(n) as u32;
+            if assign[v as usize] == u32::MAX {
+                break v;
+            }
+        };
+        let mut grown = 0usize;
+        let mut frontier: Vec<u32> = vec![seed];
+        assign[seed as usize] = part;
+        grown += weights[seed as usize];
+        remaining -= 1;
+        while grown < share && remaining > 0 {
+            // pick the frontier-adjacent unassigned node with max gain
+            let mut best: Option<(f64, u32)> = None;
+            for &f in &frontier {
+                for (i, &u) in g.neighbors(f).iter().enumerate() {
+                    if assign[u as usize] == u32::MAX {
+                        let w = g.weight_at(f, i) as f64;
+                        if best.map_or(true, |(bw, _)| w > bw) {
+                            best = Some((w, u));
+                        }
+                    }
+                }
+            }
+            let next = match best {
+                Some((_, u)) => u,
+                None => break, // region can't grow further
+            };
+            assign[next as usize] = part;
+            grown += weights[next as usize];
+            remaining -= 1;
+            frontier.push(next);
+            if frontier.len() > 256 {
+                // keep the frontier bounded: drop interior nodes
+                frontier.retain(|&f| {
+                    g.neighbors(f).iter().any(|&u| assign[u as usize] == u32::MAX)
+                });
+            }
+        }
+    }
+    // leftovers → lightest partition (tracks METIS's balance fixup)
+    let mut loads = vec![0usize; k];
+    for v in 0..n {
+        if assign[v] != u32::MAX {
+            loads[assign[v] as usize] += weights[v];
+        }
+    }
+    for v in 0..n {
+        if assign[v] == u32::MAX {
+            let lightest = (0..k).min_by_key(|&p| loads[p]).unwrap() as u32;
+            assign[v] = lightest;
+            loads[lightest as usize] += weights[v];
+        }
+    }
+    assign
+}
+
+/// Boundary FM refinement: greedy positive-gain moves under a hard cap.
+fn fm_refine(
+    g: &CsrGraph,
+    weights: &[usize],
+    assign: &mut [u32],
+    k: usize,
+    cap: usize,
+    passes: usize,
+) {
+    let n = g.num_nodes();
+    let mut loads = vec![0usize; k];
+    for v in 0..n {
+        loads[assign[v] as usize] += weights[v];
+    }
+    let mut conn = vec![0.0f64; k]; // scratch: connectivity to each part
+
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..n as u32 {
+            let cur = assign[v as usize];
+            let nbrs = g.neighbors(v);
+            if nbrs.is_empty() {
+                continue;
+            }
+            for c in conn.iter_mut() {
+                *c = 0.0;
+            }
+            let mut boundary = false;
+            for (i, &u) in nbrs.iter().enumerate() {
+                let p = assign[u as usize];
+                conn[p as usize] += g.weight_at(v, i) as f64;
+                boundary |= p != cur;
+            }
+            if !boundary {
+                continue;
+            }
+            let internal = conn[cur as usize];
+            let mut best = cur;
+            let mut best_gain = 0.0f64;
+            for p in 0..k as u32 {
+                if p == cur {
+                    continue;
+                }
+                if loads[p as usize] + weights[v as usize] > cap {
+                    continue;
+                }
+                let gain = conn[p as usize] - internal;
+                if gain > best_gain + 1e-12 {
+                    best_gain = gain;
+                    best = p;
+                }
+            }
+            if best != cur {
+                loads[cur as usize] -= weights[v as usize];
+                loads[best as usize] += weights[v as usize];
+                assign[v as usize] = best;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_sbm, SbmConfig};
+    use crate::graph::karate::karate_graph;
+    use crate::partition::cut_edges;
+
+    #[test]
+    fn partitions_karate_balanced() {
+        let g = karate_graph();
+        let p = MetisPartitioner::new(1).partition(&g, 2).unwrap();
+        assert_eq!(p.k(), 2);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 34);
+        assert!(sizes.iter().all(|&s| (12..=22).contains(&s)), "{sizes:?}");
+    }
+
+    #[test]
+    fn beats_random_on_cut() {
+        let g = generate_sbm(&SbmConfig::arxiv_like(2000, 4)).unwrap().graph;
+        for k in [2, 4, 8] {
+            let m = MetisPartitioner::new(7).partition(&g, k).unwrap();
+            let r = crate::partition::random::RandomPartitioner::new(7)
+                .partition(&g, k)
+                .unwrap();
+            assert!(
+                cut_edges(&g, &m) < cut_edges(&g, &r) / 2,
+                "k={k}: metis {} vs random {}",
+                cut_edges(&g, &m),
+                cut_edges(&g, &r)
+            );
+        }
+    }
+
+    #[test]
+    fn respects_balance_cap() {
+        let g = generate_sbm(&SbmConfig::arxiv_like(1200, 8)).unwrap().graph;
+        let k = 4;
+        let p = MetisPartitioner::new(3).partition(&g, k).unwrap();
+        let max = *p.sizes().iter().max().unwrap();
+        // cap is (1+imbalance)·n/k with slack for coarse granularity
+        assert!(
+            (max as f64) <= 1200.0 / k as f64 * 1.20,
+            "max part {max} too heavy"
+        );
+    }
+
+    #[test]
+    fn multilevel_path_exercised_on_larger_graph() {
+        let g = generate_sbm(&SbmConfig::arxiv_like(5000, 6)).unwrap().graph;
+        let p = MetisPartitioner::new(11).partition(&g, 8).unwrap();
+        assert_eq!(p.k(), 8);
+        assert!(p.sizes().iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn handles_tiny_graphs() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 2)]).unwrap();
+        let p = MetisPartitioner::new(0).partition(&g, 3).unwrap();
+        assert_eq!(p.k(), 3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = karate_graph();
+        let a = MetisPartitioner::new(5).partition(&g, 4).unwrap();
+        let b = MetisPartitioner::new(5).partition(&g, 4).unwrap();
+        assert_eq!(a.assignments(), b.assignments());
+    }
+}

@@ -1,0 +1,187 @@
+//! Graph partitioning: the paper's Leiden-Fusion method plus every baseline
+//! it compares against (METIS-like multilevel, LPA, Random), the "+F"
+//! fusion adapter, and the §5.1 quality metrics.
+
+pub mod fusion;
+pub mod leiden;
+pub mod louvain;
+pub mod lpa;
+pub mod metis;
+pub mod quality;
+pub mod random;
+
+pub use fusion::{fuse_communities, fuse_partitioning, FusionConfig};
+pub use leiden::{leiden, leiden_fusion, LeidenConfig};
+pub use quality::PartitionQuality;
+
+use crate::error::{Error, Result};
+use crate::graph::{CsrGraph, NodeId};
+
+/// A partitioning of a graph's nodes into `k` parts.
+///
+/// Invariant: `assign` is an exact cover — every node has exactly one
+/// partition id in `0..k` (enforced by [`Partitioning::new`], relied on by
+/// property tests).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partitioning {
+    assign: Vec<u32>,
+    k: usize,
+}
+
+impl Partitioning {
+    /// Validate and wrap an assignment vector.
+    pub fn new(assign: Vec<u32>, k: usize) -> Result<Self> {
+        if k == 0 {
+            return Err(Error::Partition("k must be positive".into()));
+        }
+        if let Some(&bad) = assign.iter().find(|&&p| p as usize >= k) {
+            return Err(Error::Partition(format!("partition id {bad} out of range (k={k})")));
+        }
+        Ok(Partitioning { assign, k })
+    }
+
+    /// Compact arbitrary (possibly sparse) labels to dense `0..k`.
+    pub fn from_labels(labels: &[u32]) -> Self {
+        let mut remap = std::collections::HashMap::new();
+        let assign: Vec<u32> = labels
+            .iter()
+            .map(|&l| {
+                let next = remap.len() as u32;
+                *remap.entry(l).or_insert(next)
+            })
+            .collect();
+        Partitioning { assign, k: remap.len().max(1) }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Partition of node `v`.
+    #[inline]
+    pub fn part_of(&self, v: NodeId) -> u32 {
+        self.assign[v as usize]
+    }
+
+    pub fn assignments(&self) -> &[u32] {
+        &self.assign
+    }
+
+    /// Node count per partition.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.k];
+        for &p in &self.assign {
+            s[p as usize] += 1;
+        }
+        s
+    }
+
+    /// Members of each partition, in node order.
+    pub fn members(&self) -> Vec<Vec<NodeId>> {
+        let mut m = vec![Vec::new(); self.k];
+        for (v, &p) in self.assign.iter().enumerate() {
+            m[p as usize].push(v as NodeId);
+        }
+        m
+    }
+
+    /// Boolean membership mask for one partition.
+    pub fn mask(&self, part: u32) -> Vec<bool> {
+        self.assign.iter().map(|&p| p == part).collect()
+    }
+}
+
+/// Common interface so benches/CLI can switch methods by name.
+pub trait Partitioner {
+    /// Human-readable method name (appears in bench tables).
+    fn name(&self) -> &'static str;
+
+    /// Partition `g` into `k` parts.
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning>;
+}
+
+/// Count edges crossing partitions (each undirected edge once).
+pub fn cut_edges(g: &CsrGraph, p: &Partitioning) -> usize {
+    g.edges()
+        .filter(|&(u, v, _)| p.part_of(u) != p.part_of(v))
+        .count()
+}
+
+/// Resolve a partitioner by name: `lf`, `leiden`, `metis`, `lpa`, `random`.
+pub fn by_name(name: &str, seed: u64) -> Result<Box<dyn Partitioner>> {
+    match name {
+        "lf" | "leiden-fusion" => Ok(Box::new(leiden::LeidenFusionPartitioner::new(seed))),
+        "metis" => Ok(Box::new(metis::MetisPartitioner::new(seed))),
+        "lpa" => Ok(Box::new(lpa::LpaPartitioner::new(seed))),
+        "random" => Ok(Box::new(random::RandomPartitioner::new(seed))),
+        "metis+f" => Ok(Box::new(fusion::FusedPartitioner::new(
+            Box::new(metis::MetisPartitioner::new(seed)),
+        ))),
+        "lpa+f" => Ok(Box::new(fusion::FusedPartitioner::new(
+            Box::new(lpa::LpaPartitioner::new(seed)),
+        ))),
+        "louvain+f" => Ok(Box::new(louvain::LouvainFusionPartitioner { seed })),
+        _ => Err(Error::Partition(format!("unknown partitioner {name:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+
+    #[test]
+    fn new_validates_range() {
+        assert!(Partitioning::new(vec![0, 1, 2], 3).is_ok());
+        assert!(Partitioning::new(vec![0, 3], 3).is_err());
+        assert!(Partitioning::new(vec![], 0).is_err());
+    }
+
+    #[test]
+    fn from_labels_compacts() {
+        let p = Partitioning::from_labels(&[7, 7, 3, 9, 3]);
+        assert_eq!(p.k(), 3);
+        assert_eq!(p.part_of(0), p.part_of(1));
+        assert_eq!(p.part_of(2), p.part_of(4));
+        assert_ne!(p.part_of(0), p.part_of(3));
+    }
+
+    #[test]
+    fn sizes_and_members_consistent() {
+        let p = Partitioning::new(vec![0, 1, 0, 1, 1], 2).unwrap();
+        assert_eq!(p.sizes(), vec![2, 3]);
+        let m = p.members();
+        assert_eq!(m[0], vec![0, 2]);
+        assert_eq!(m[1], vec![1, 3, 4]);
+        assert_eq!(p.mask(0), vec![true, false, true, false, false]);
+    }
+
+    #[test]
+    fn cut_edges_on_karate_split() {
+        let g = karate_graph();
+        // everything in one partition → no cuts
+        let p = Partitioning::new(vec![0; 34], 1).unwrap();
+        assert_eq!(cut_edges(&g, &p), 0);
+        // split by faction: the post-fission club labels cut 11 edges
+        let assign: Vec<u32> = crate::graph::karate::KARATE_FACTIONS
+            .iter()
+            .map(|&f| f as u32)
+            .collect();
+        let p = Partitioning::new(assign, 2).unwrap();
+        assert_eq!(cut_edges(&g, &p), 11);
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for name in ["lf", "metis", "lpa", "random", "metis+f", "lpa+f"] {
+            assert!(by_name(name, 0).is_ok(), "{name}");
+        }
+        assert!(by_name("nope", 0).is_err());
+    }
+}

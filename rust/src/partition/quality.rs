@@ -1,0 +1,189 @@
+//! Partition quality metrics — paper §5.1, equations (5)–(7).
+//!
+//! These six metrics are what Figure 4/5 and Table 1 report:
+//! edge-cut fraction τ, per-partition connected components, per-partition
+//! isolated nodes, node balance ρ, edge balance, and replication factor RF.
+
+use super::Partitioning;
+use crate::graph::{components_within, CsrGraph};
+use std::collections::HashSet;
+
+/// Full §5.1 metric set for one (graph, partitioning) pair.
+#[derive(Clone, Debug)]
+pub struct PartitionQuality {
+    pub k: usize,
+    /// τ = cut edges / m (eq. 5).
+    pub edge_cut_fraction: f64,
+    /// Connected components of each partition.
+    pub components: Vec<usize>,
+    /// Isolated nodes of each partition.
+    pub isolated: Vec<usize>,
+    /// Node count of each partition.
+    pub node_counts: Vec<usize>,
+    /// Internal edge count of each partition.
+    pub edge_counts: Vec<usize>,
+    /// ρ = max |Pᵢ| / (n/k) (eq. 6).
+    pub node_balance: f64,
+    /// Edge analogue of ρ.
+    pub edge_balance: f64,
+    /// RF = (1/n) Σᵢ |Pᵢ(v)| — average copies per node under 1-hop
+    /// replication (eq. 7): 1 owner copy plus one replica per foreign
+    /// partition adjacent to the node.
+    pub replication_factor: f64,
+}
+
+impl PartitionQuality {
+    /// Compute all metrics. Cost: O(n + m + k·components).
+    pub fn measure(g: &CsrGraph, p: &Partitioning) -> Self {
+        let n = g.num_nodes();
+        let m = g.num_edges().max(1);
+        let k = p.k();
+
+        let mut cut = 0usize;
+        let mut edge_counts = vec![0usize; k];
+        for (u, v, _) in g.edges() {
+            let (pu, pv) = (p.part_of(u), p.part_of(v));
+            if pu == pv {
+                edge_counts[pu as usize] += 1;
+            } else {
+                cut += 1;
+            }
+        }
+
+        let node_counts = p.sizes();
+
+        let mut components = Vec::with_capacity(k);
+        let mut isolated = Vec::with_capacity(k);
+        for part in 0..k as u32 {
+            let mask = p.mask(part);
+            if mask.iter().any(|&b| b) {
+                let info = components_within(g, &mask);
+                components.push(info.num_components());
+                isolated.push(info.isolated);
+            } else {
+                components.push(0);
+                isolated.push(0);
+            }
+        }
+
+        // Replication factor: copies of v = 1 + #distinct foreign partitions
+        // among its neighbours.
+        let mut total_copies = 0usize;
+        let mut seen: HashSet<u32> = HashSet::new();
+        for v in 0..n as u32 {
+            seen.clear();
+            let home = p.part_of(v);
+            for &u in g.neighbors(v) {
+                let q = p.part_of(u);
+                if q != home {
+                    seen.insert(q);
+                }
+            }
+            total_copies += 1 + seen.len();
+        }
+
+        let avg_nodes = n as f64 / k as f64;
+        let avg_edges = g.num_edges() as f64 / k as f64;
+        PartitionQuality {
+            k,
+            edge_cut_fraction: cut as f64 / m as f64,
+            node_balance: node_counts.iter().copied().max().unwrap_or(0) as f64
+                / avg_nodes.max(f64::MIN_POSITIVE),
+            edge_balance: edge_counts.iter().copied().max().unwrap_or(0) as f64
+                / avg_edges.max(f64::MIN_POSITIVE),
+            replication_factor: total_copies as f64 / n.max(1) as f64,
+            components,
+            isolated,
+            node_counts,
+            edge_counts,
+        }
+    }
+
+    pub fn total_components(&self) -> usize {
+        self.components.iter().sum()
+    }
+
+    pub fn total_isolated(&self) -> usize {
+        self.isolated.iter().sum()
+    }
+
+    /// One-per-partition components and zero isolated nodes — the paper's
+    /// structural-integrity criterion (§4.1).
+    pub fn is_structurally_ideal(&self) -> bool {
+        self.components.iter().all(|&c| c == 1) && self.total_isolated() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::{karate_graph, KARATE_FACTIONS};
+    use crate::partition::leiden::leiden_fusion;
+    use crate::partition::Partitioning;
+
+    fn faction_partitioning() -> Partitioning {
+        Partitioning::new(KARATE_FACTIONS.iter().map(|&f| f as u32).collect(), 2)
+            .unwrap()
+    }
+
+    #[test]
+    fn faction_split_metrics() {
+        let g = karate_graph();
+        let q = PartitionQuality::measure(&g, &faction_partitioning());
+        assert!((q.edge_cut_fraction - 11.0 / 78.0).abs() < 1e-9);
+        assert_eq!(q.node_counts, vec![17, 17]);
+        assert_eq!(q.node_balance, 1.0);
+        assert!(q.is_structurally_ideal());
+    }
+
+    #[test]
+    fn trivial_partition_is_ideal() {
+        let g = karate_graph();
+        let p = Partitioning::new(vec![0; 34], 1).unwrap();
+        let q = PartitionQuality::measure(&g, &p);
+        assert_eq!(q.edge_cut_fraction, 0.0);
+        assert_eq!(q.replication_factor, 1.0);
+        assert!(q.is_structurally_ideal());
+    }
+
+    #[test]
+    fn detects_disconnection_and_isolation() {
+        // path 0-1-2-3; partition {0,3} is 2 comps, both isolated
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        let p = Partitioning::new(vec![0, 1, 1, 0], 2).unwrap();
+        let q = PartitionQuality::measure(&g, &p);
+        assert_eq!(q.components, vec![2, 1]);
+        assert_eq!(q.isolated, vec![2, 0]);
+        assert!(!q.is_structurally_ideal());
+    }
+
+    #[test]
+    fn replication_factor_counts_foreign_partitions() {
+        // star: center 0 with leaves 1,2,3 in three different partitions
+        let g = CsrGraph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]).unwrap();
+        let p = Partitioning::new(vec![0, 1, 2, 0], 3).unwrap();
+        let q = PartitionQuality::measure(&g, &p);
+        // node 0: home 0, foreign {1,2} → 3 copies; node 1: 1+1; node 2: 1+1;
+        // node 3: 1+0 → total 8 / 4 nodes = 2.0
+        assert!((q.replication_factor - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lf_partitions_are_ideal_on_karate() {
+        let g = karate_graph();
+        for k in [2, 3, 4] {
+            let p = leiden_fusion(&g, k, 0.05, 0.5, 1).unwrap();
+            let q = PartitionQuality::measure(&g, &p);
+            assert!(q.is_structurally_ideal(), "k={k}: {:?}", q.components);
+        }
+    }
+
+    #[test]
+    fn edge_balance_counts_internal_edges() {
+        let g = karate_graph();
+        let q = PartitionQuality::measure(&g, &faction_partitioning());
+        assert_eq!(q.edge_counts.iter().sum::<usize>() + 11, 78);
+        // cut edges belong to no partition, so edge balance may dip below 1
+        assert!(q.edge_balance > 0.0 && q.edge_balance <= q.k as f64);
+    }
+}

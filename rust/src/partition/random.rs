@@ -1,0 +1,69 @@
+//! Random partitioner — the simplest baseline (§3.1): uniform assignment.
+//! Perfect expected load balance, terrible locality.
+
+use super::{Partitioner, Partitioning};
+use crate::error::Result;
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+pub struct RandomPartitioner {
+    pub seed: u64,
+}
+
+impl RandomPartitioner {
+    pub fn new(seed: u64) -> Self {
+        RandomPartitioner { seed }
+    }
+}
+
+impl Partitioner for RandomPartitioner {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
+        let mut rng = Rng::new(self.seed);
+        // round-robin over a shuffled order: uniform *and* exactly balanced
+        let n = g.num_nodes();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut order);
+        let mut assign = vec![0u32; n];
+        for (i, &v) in order.iter().enumerate() {
+            assign[v as usize] = (i % k) as u32;
+        }
+        Partitioning::new(assign, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+
+    #[test]
+    fn produces_k_balanced_parts() {
+        let g = karate_graph();
+        let p = RandomPartitioner::new(3).partition(&g, 4).unwrap();
+        assert_eq!(p.k(), 4);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 34);
+        assert!(sizes.iter().all(|&s| s == 8 || s == 9), "{sizes:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = karate_graph();
+        let a = RandomPartitioner::new(1).partition(&g, 2).unwrap();
+        let b = RandomPartitioner::new(1).partition(&g, 2).unwrap();
+        let c = RandomPartitioner::new(2).partition(&g, 2).unwrap();
+        assert_eq!(a.assignments(), b.assignments());
+        assert_ne!(a.assignments(), c.assignments());
+    }
+
+    #[test]
+    fn k_one_is_trivial() {
+        let g = karate_graph();
+        let p = RandomPartitioner::new(0).partition(&g, 1).unwrap();
+        assert!(p.assignments().iter().all(|&x| x == 0));
+    }
+}

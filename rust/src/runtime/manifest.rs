@@ -1,0 +1,261 @@
+//! `artifacts/manifest.json` — the contract between the python AOT pipeline
+//! and the rust runtime. The manifest is the *single source of truth* for
+//! artifact shapes; rust never hard-codes bucket dimensions.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Static dimensioning of one artifact (mirrors `specs.ArtifactSpec`).
+#[derive(Clone, Debug)]
+pub struct Dims {
+    pub n: usize,
+    pub e: usize,
+    pub f: usize,
+    pub h: usize,
+    pub c: usize,
+    pub layers: usize,
+    pub epochs_per_call: usize,
+    pub lr: f64,
+}
+
+/// One AOT-lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub task: String,
+    pub role: String,
+    pub dims: Dims,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactMeta {
+    /// Number of parameter tensors (prefix of `inputs` named `p*`).
+    pub fn num_params(&self) -> usize {
+        self.inputs.iter().take_while(|t| t.name.starts_with('p')).count()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = v.as_arr().ok_or_else(|| Error::Manifest("ios not an array".into()))?;
+    arr.iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Manifest("io missing name".into()))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Manifest("io missing shape".into()))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: DType::parse(
+                    t.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Manifest("missing artifacts array".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let gets = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Manifest(format!("artifact missing {k}")))
+            };
+            let dims = a
+                .get("dims")
+                .ok_or_else(|| Error::Manifest("artifact missing dims".into()))?;
+            let getd = |k: &str| dims.get(k).and_then(Json::as_usize).unwrap_or(0);
+            artifacts.push(ArtifactMeta {
+                name: gets("name")?,
+                file: gets("file")?,
+                model: gets("model")?,
+                task: gets("task")?,
+                role: gets("role")?,
+                dims: Dims {
+                    n: getd("n"),
+                    e: getd("e"),
+                    f: getd("f"),
+                    h: getd("h"),
+                    c: getd("c"),
+                    layers: getd("layers"),
+                    epochs_per_call: getd("epochs_per_call"),
+                    lr: dims.get("lr").and_then(Json::as_f64).unwrap_or(0.0),
+                },
+                inputs: tensor_specs(
+                    a.get("inputs")
+                        .ok_or_else(|| Error::Manifest("missing inputs".into()))?,
+                )?,
+                outputs: tensor_specs(
+                    a.get("outputs")
+                        .ok_or_else(|| Error::Manifest("missing outputs".into()))?,
+                )?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Manifest(format!("artifact {name:?} not in manifest")))
+    }
+
+    /// Select the smallest artifact of (model, task, role) whose buckets fit
+    /// `n` nodes and `e` directed edges.
+    pub fn select(
+        &self,
+        model: &str,
+        task: &str,
+        role: &str,
+        n: usize,
+        e: usize,
+    ) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.model == model
+                    && a.task == task
+                    && a.role == role
+                    && a.dims.n >= n
+                    && (a.dims.e >= e || a.model == "mlp")
+            })
+            .min_by_key(|a| (a.dims.n, a.dims.e))
+            .ok_or_else(|| {
+                Error::Manifest(format!(
+                    "no artifact for model={model} task={task} role={role} \
+                     n≥{n} e≥{e}; extend python/compile/specs.py and re-run \
+                     `make artifacts`"
+                ))
+            })
+    }
+
+    /// Path of an artifact's HLO text file.
+    pub fn path_of(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn load_if_built() -> Option<Manifest> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest parses"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn parses_real_manifest() {
+        let Some(man) = load_if_built() else { return };
+        assert!(man.artifacts.len() >= 6);
+        let smoke = man.find("gcn_smoke_train").unwrap();
+        assert_eq!(smoke.model, "gcn");
+        assert_eq!(smoke.role, "train");
+        assert_eq!(smoke.dims.n, 64);
+        assert_eq!(smoke.num_params(), 2 * smoke.dims.layers);
+        // train inputs end with [..., y, mask]
+        assert_eq!(smoke.inputs.last().unwrap().name, "mask");
+        assert_eq!(smoke.outputs.last().unwrap().name, "loss");
+    }
+
+    #[test]
+    fn select_picks_smallest_fitting_bucket() {
+        let Some(man) = load_if_built() else { return };
+        let a = man.select("gcn", "multiclass", "train", 1000, 10_000).unwrap();
+        assert!(a.dims.n >= 1000 && a.dims.e >= 10_000);
+        // no smaller artifact would fit
+        for b in &man.artifacts {
+            if b.model == "gcn" && b.task == "multiclass" && b.role == "train"
+                && b.dims.n >= 1000 && b.dims.e >= 10_000
+            {
+                assert!(a.dims.n <= b.dims.n);
+            }
+        }
+    }
+
+    #[test]
+    fn select_errors_when_too_big() {
+        let Some(man) = load_if_built() else { return };
+        assert!(man.select("gcn", "multiclass", "train", 10_000_000, 1).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

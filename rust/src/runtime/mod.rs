@@ -1,0 +1,17 @@
+//! PJRT runtime: manifest-driven loading and execution of the AOT-compiled
+//! HLO artifacts produced by `python/compile/aot.py`.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Executable, Runtime, Tensor};
+pub use manifest::{ArtifactMeta, DType, Dims, Manifest, TensorSpec};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$LF_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("LF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}

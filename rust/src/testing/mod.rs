@@ -1,0 +1,3 @@
+//! Test support: a minimal property-testing driver (no `proptest` offline).
+
+pub mod prop;

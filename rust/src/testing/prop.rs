@@ -1,0 +1,112 @@
+//! Minimal property-testing driver.
+//!
+//! `proptest` is unavailable offline, so this provides the 20% that covers
+//! our needs: seeded case generation from a [`Rng`], a fixed case budget,
+//! and failure reports that include the reproducing seed. No shrinking —
+//! generators are written to produce small cases at low seeds instead.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. `gen` builds an input from a fresh
+/// RNG; `check` returns `Err(description)` on violation. Panics with the
+/// reproducing seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property {name:?} violated (case {case}, seed {seed}): {msg}\n\
+                 input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Generator helpers for graph-shaped properties.
+pub mod gens {
+    use crate::graph::{CsrGraph, GraphBuilder, NodeId};
+    use crate::util::rng::Rng;
+
+    /// A random connected graph with `n ∈ [n_min, n_max]` nodes: a random
+    /// spanning tree plus `extra_per_node · n` random edges.
+    pub fn connected_graph(rng: &mut Rng, n_min: usize, n_max: usize, extra_per_node: f64) -> CsrGraph {
+        let n = n_min + rng.index(n_max - n_min + 1);
+        let mut b = GraphBuilder::new(n);
+        // random attachment spanning tree
+        for v in 1..n {
+            let u = rng.index(v);
+            b.add_edge(v as NodeId, u as NodeId);
+        }
+        let extra = (n as f64 * extra_per_node) as usize;
+        for _ in 0..extra {
+            let u = rng.index(n) as NodeId;
+            let v = rng.index(n) as NodeId;
+            if u != v {
+                b.add_edge(u, v);
+            }
+        }
+        b.build().expect("generated graph is valid")
+    }
+
+    /// An arbitrary (possibly disconnected) graph.
+    pub fn any_graph(rng: &mut Rng, n_max: usize, density: f64) -> CsrGraph {
+        let n = 1 + rng.index(n_max);
+        let mut b = GraphBuilder::new(n);
+        let m = (n as f64 * density) as usize;
+        for _ in 0..m {
+            let u = rng.index(n) as NodeId;
+            let v = rng.index(n) as NodeId;
+            if u != v {
+                b.add_edge(u, v);
+            }
+        }
+        b.build().expect("generated graph is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    #[test]
+    fn check_passes_trivially_true_property() {
+        check("sum-commutes", 50, 1,
+            |rng| (rng.index(100) as i64, rng.index(100) as i64),
+            |&(a, b)| if a + b == b + a { Ok(()) } else { Err("math broke".into()) });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn check_reports_seed_on_failure() {
+        check("always-false", 5, 99, |rng| rng.index(10), |_| Err("no".into()));
+    }
+
+    #[test]
+    fn connected_graph_gen_is_connected() {
+        check("gen-connected", 25, 7,
+            |rng| gens::connected_graph(rng, 2, 60, 1.5),
+            |g| if is_connected(g) { Ok(()) } else { Err("disconnected".into()) });
+    }
+
+    #[test]
+    fn any_graph_gen_in_bounds() {
+        check("gen-bounds", 25, 3,
+            |rng| gens::any_graph(rng, 40, 2.0),
+            |g| {
+                if g.num_nodes() >= 1 && g.num_nodes() <= 40 {
+                    Ok(())
+                } else {
+                    Err(format!("n = {}", g.num_nodes()))
+                }
+            });
+    }
+}

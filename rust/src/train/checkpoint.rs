@@ -1,0 +1,141 @@
+//! Parameter checkpointing: binary save/load of flat tensor lists.
+//!
+//! Used by the coordinator to persist per-partition model state (resume
+//! after a fault without retraining finished partitions) and by users to
+//! keep trained models across runs. Format: `LFC1` magic, little-endian,
+//! per-tensor dtype tag + element count + raw data, trailing crc32-less
+//! length check (artifact integrity is the manifest's job; this guards
+//! against truncation).
+
+use crate::error::{Error, Result};
+use crate::runtime::Tensor;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LFC1";
+
+/// Save a flat tensor list.
+pub fn save_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(MAGIC)?;
+    out.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        match t {
+            Tensor::F32(v) => {
+                out.write_all(&[0u8])?;
+                out.write_all(&(v.len() as u64).to_le_bytes())?;
+                for x in v {
+                    out.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Tensor::I32(v) => {
+                out.write_all(&[1u8])?;
+                out.write_all(&(v.len() as u64).to_le_bytes())?;
+                for x in v {
+                    out.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    out.write_all(&(tensors.len() as u32).to_le_bytes())?; // trailer
+    Ok(())
+}
+
+/// Load a flat tensor list.
+pub fn load_tensors(path: &Path) -> Result<Vec<Tensor>> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Runtime(format!("{}: not an LFC1 checkpoint", path.display())));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    let mut tensors = Vec::with_capacity(count);
+    let mut b8 = [0u8; 8];
+    for _ in 0..count {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        r.read_exact(&mut b8)?;
+        let len = u64::from_le_bytes(b8) as usize;
+        match tag[0] {
+            0 => {
+                let mut v = vec![0f32; len];
+                for x in v.iter_mut() {
+                    r.read_exact(&mut b4)?;
+                    *x = f32::from_le_bytes(b4);
+                }
+                tensors.push(Tensor::F32(v));
+            }
+            1 => {
+                let mut v = vec![0i32; len];
+                for x in v.iter_mut() {
+                    r.read_exact(&mut b4)?;
+                    *x = i32::from_le_bytes(b4);
+                }
+                tensors.push(Tensor::I32(v));
+            }
+            t => return Err(Error::Runtime(format!("unknown tensor tag {t}"))),
+        }
+    }
+    r.read_exact(&mut b4)?;
+    if u32::from_le_bytes(b4) as usize != count {
+        return Err(Error::Runtime("checkpoint truncated".into()));
+    }
+    Ok(tensors)
+}
+
+/// Checkpoint path for one partition of a named run.
+pub fn partition_checkpoint_path(dir: &Path, run: &str, part_id: u32) -> std::path::PathBuf {
+    dir.join(format!("{run}_part{part_id}.lfc"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lf_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_mixed_tensors() {
+        let tensors = vec![
+            Tensor::F32(vec![1.5, -2.25, 0.0]),
+            Tensor::I32(vec![7, -9]),
+            Tensor::F32(vec![]),
+        ];
+        let path = tmp("mixed.lfc");
+        save_tensors(&path, &tensors).unwrap();
+        let back = load_tensors(&path).unwrap();
+        assert_eq!(tensors, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let path = tmp("bad.lfc");
+        std::fs::write(&path, b"XXXX").unwrap();
+        assert!(load_tensors(&path).is_err());
+        // truncated: valid header, missing trailer
+        let tensors = vec![Tensor::F32(vec![1.0; 10])];
+        save_tensors(&path, &tensors).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 2]).unwrap();
+        assert!(load_tensors(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_paths_are_distinct() {
+        let d = std::path::Path::new("/tmp");
+        assert_ne!(
+            partition_checkpoint_path(d, "run", 0),
+            partition_checkpoint_path(d, "run", 1)
+        );
+    }
+}

@@ -1,0 +1,338 @@
+//! Partition batch construction: turn a partition of a [`Dataset`] into the
+//! padded tensors an AOT artifact consumes.
+//!
+//! This is where the GNN normalisation weights are computed (the L2 models
+//! receive structure as a weighted COO edge list — see model.py):
+//!
+//! * **GCN** — self-loops plus symmetric normalisation
+//!   `w(u→v) = a_uv / sqrt((1+d_u)(1+d_v))`, `w(v→v) = 1/(1+d_v)`,
+//!   where `d` is the (weighted) degree. Kipf-style; paper eq. (1).
+//! * **SAGE** — in-edge mean `w(u→v) = a_uv / d_in(v)`; the self path is a
+//!   separate weight matrix inside the model (paper eq. (2)).
+//!
+//! Padding contract (property-tested against the python side): pad nodes
+//! carry zero features and mask 0; pad edges are `(0, 0, 0.0)`.
+
+use crate::data::{Dataset, Labels};
+use crate::error::{Error, Result};
+use crate::graph::{inner_subgraph, repli_subgraph, NodeId, Subgraph};
+use crate::runtime::Tensor;
+
+/// Inner vs Repli subgraph construction (paper §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Inner,
+    Repli,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Inner => "inner",
+            Mode::Repli => "repli",
+        }
+    }
+}
+
+/// Which GNN the batch is normalised for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Gcn,
+    Sage,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Gcn => "gcn",
+            ModelKind::Sage => "sage",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gcn" => Ok(ModelKind::Gcn),
+            "sage" => Ok(ModelKind::Sage),
+            other => Err(Error::Config(format!("unknown model {other:?}"))),
+        }
+    }
+}
+
+/// Un-padded tensors for one partition.
+#[derive(Clone, Debug)]
+pub struct PartitionBatch {
+    /// The local subgraph (owned nodes first, then replicas).
+    pub sub: Subgraph,
+    /// Directed COO edges with normalisation weights (self-loops included
+    /// for GCN).
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub ew: Vec<f32>,
+    /// Row-major `[n_local, f]` features.
+    pub x: Vec<f32>,
+    pub feat_dim: usize,
+    /// Labels for local nodes (padded later).
+    pub y: LabelSlice,
+    /// Training mask: 1.0 for *owned* nodes in the dataset train split.
+    pub train_mask: Vec<f32>,
+}
+
+/// Local label slice matching `Labels`.
+#[derive(Clone, Debug)]
+pub enum LabelSlice {
+    Multiclass(Vec<i32>),
+    Multilabel { tasks: usize, targets: Vec<f32> },
+}
+
+impl PartitionBatch {
+    pub fn num_local(&self) -> usize {
+        self.sub.nodes.len()
+    }
+
+    pub fn num_directed_edges(&self) -> usize {
+        self.src.len()
+    }
+}
+
+/// Build the batch for `members` of `dataset`.
+pub fn build_batch(
+    dataset: &Dataset,
+    members: &[NodeId],
+    mode: Mode,
+    model: ModelKind,
+) -> Result<PartitionBatch> {
+    let sub = match mode {
+        Mode::Inner => inner_subgraph(&dataset.graph, members)?,
+        Mode::Repli => repli_subgraph(&dataset.graph, members)?,
+    };
+    let g = &sub.graph;
+    let nl = g.num_nodes();
+    let f = dataset.feat_dim;
+
+    // ---- features --------------------------------------------------------
+    let mut x = vec![0f32; nl * f];
+    for (local, &global) in sub.nodes.iter().enumerate() {
+        x[local * f..(local + 1) * f].copy_from_slice(dataset.feature_row(global));
+    }
+
+    // ---- normalisation weights -------------------------------------------
+    let wdeg: Vec<f64> = (0..nl as NodeId).map(|v| g.weighted_degree(v)).collect();
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    let mut ew = Vec::new();
+    match model {
+        ModelKind::Gcn => {
+            src.reserve(2 * g.num_edges() + nl);
+            for u in 0..nl as NodeId {
+                for (i, &v) in g.neighbors(u).iter().enumerate() {
+                    let w = g.weight_at(u, i) as f64;
+                    // directed u→v (aggregated into v)
+                    let norm = w / ((1.0 + wdeg[u as usize]) * (1.0 + wdeg[v as usize]))
+                        .sqrt();
+                    src.push(u as i32);
+                    dst.push(v as i32);
+                    ew.push(norm as f32);
+                }
+                // self loop
+                src.push(u as i32);
+                dst.push(u as i32);
+                ew.push((1.0 / (1.0 + wdeg[u as usize])) as f32);
+            }
+        }
+        ModelKind::Sage => {
+            src.reserve(2 * g.num_edges());
+            for v in 0..nl as NodeId {
+                let d = wdeg[v as usize].max(f64::MIN_POSITIVE);
+                for (i, &u) in g.neighbors(v).iter().enumerate() {
+                    let w = g.weight_at(v, i) as f64;
+                    // u→v mean aggregation
+                    src.push(u as i32);
+                    dst.push(v as i32);
+                    ew.push((w / d) as f32);
+                }
+            }
+        }
+    }
+
+    // ---- labels + mask ---------------------------------------------------
+    let y = match &dataset.labels {
+        Labels::Multiclass { labels, .. } => LabelSlice::Multiclass(
+            sub.nodes.iter().map(|&v| labels[v as usize]).collect(),
+        ),
+        Labels::Multilabel { tasks, targets } => {
+            let mut t = Vec::with_capacity(nl * tasks);
+            for &v in &sub.nodes {
+                t.extend_from_slice(&targets[v as usize * tasks..(v as usize + 1) * tasks]);
+            }
+            LabelSlice::Multilabel { tasks: *tasks, targets: t }
+        }
+    };
+    let train_mask: Vec<f32> = sub
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(local, &global)| {
+            // replicas never contribute to the loss
+            (sub.is_owned(local) && dataset.train_mask[global as usize]) as u8 as f32
+        })
+        .collect();
+
+    Ok(PartitionBatch {
+        sub,
+        src,
+        dst,
+        ew,
+        x,
+        feat_dim: f,
+        y,
+        train_mask,
+    })
+}
+
+/// Pad the batch tensors to artifact buckets `(n_bucket, e_bucket)` and
+/// return them in the artifact's input layout (x, src, dst, ew, y, mask).
+pub fn pad_to_bucket(
+    batch: &PartitionBatch,
+    n_bucket: usize,
+    e_bucket: usize,
+    classes: usize,
+) -> Result<PaddedTensors> {
+    let nl = batch.num_local();
+    let el = batch.num_directed_edges();
+    if nl > n_bucket || el > e_bucket {
+        return Err(Error::Runtime(format!(
+            "partition ({nl} nodes / {el} edges) exceeds bucket \
+             ({n_bucket} / {e_bucket})"
+        )));
+    }
+    let f = batch.feat_dim;
+    let mut x = vec![0f32; n_bucket * f];
+    x[..nl * f].copy_from_slice(&batch.x);
+    let mut src = vec![0i32; e_bucket];
+    src[..el].copy_from_slice(&batch.src);
+    let mut dst = vec![0i32; e_bucket];
+    dst[..el].copy_from_slice(&batch.dst);
+    let mut ew = vec![0f32; e_bucket];
+    ew[..el].copy_from_slice(&batch.ew);
+    let mut mask = vec![0f32; n_bucket];
+    mask[..nl].copy_from_slice(&batch.train_mask);
+    let y = match &batch.y {
+        LabelSlice::Multiclass(labels) => {
+            let mut yy = vec![0i32; n_bucket];
+            yy[..nl].copy_from_slice(labels);
+            Tensor::I32(yy)
+        }
+        LabelSlice::Multilabel { tasks, targets } => {
+            debug_assert_eq!(*tasks, classes);
+            let mut yy = vec![0f32; n_bucket * classes];
+            yy[..nl * classes].copy_from_slice(targets);
+            Tensor::F32(yy)
+        }
+    };
+    Ok(PaddedTensors {
+        x: Tensor::F32(x),
+        src: Tensor::I32(src),
+        dst: Tensor::I32(dst),
+        ew: Tensor::F32(ew),
+        y,
+        mask: Tensor::F32(mask),
+    })
+}
+
+/// Bucket-padded artifact inputs.
+pub struct PaddedTensors {
+    pub x: Tensor,
+    pub src: Tensor,
+    pub dst: Tensor,
+    pub ew: Tensor,
+    pub y: Tensor,
+    pub mask: Tensor,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_dataset;
+
+    #[test]
+    fn gcn_weights_sum_to_one_per_destination() {
+        let ds = karate_dataset(0);
+        let members: Vec<NodeId> = (0..34).collect();
+        let b = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+        // sym-norm weights are positive; the self-loop weight is 1/(1+d_v)
+        let g = &ds.graph;
+        let mut self_w = vec![0f32; 34];
+        for (i, (&s, &d)) in b.src.iter().zip(&b.dst).enumerate() {
+            assert!(b.ew[i] > 0.0, "nonpositive weight at edge {i}");
+            if s == d {
+                self_w[s as usize] = b.ew[i];
+            }
+        }
+        for v in 0..34u32 {
+            let expect = 1.0 / (1.0 + g.degree(v) as f32);
+            assert!((self_w[v as usize] - expect).abs() < 1e-6, "node {v}");
+        }
+        // self loops included: e = 2m + n
+        assert_eq!(b.num_directed_edges(), 2 * 78 + 34);
+    }
+
+    #[test]
+    fn sage_weights_are_means() {
+        let ds = karate_dataset(0);
+        let members: Vec<NodeId> = (0..34).collect();
+        let b = build_batch(&ds, &members, Mode::Inner, ModelKind::Sage).unwrap();
+        assert_eq!(b.num_directed_edges(), 2 * 78);
+        let mut sums = vec![0f64; 34];
+        for (i, &d) in b.dst.iter().enumerate() {
+            sums[d as usize] += b.ew[i] as f64;
+        }
+        for (v, &s) in sums.iter().enumerate() {
+            assert!((s - 1.0).abs() < 1e-5, "node {v}: mean weights sum {s}");
+        }
+    }
+
+    #[test]
+    fn repli_mask_excludes_replicas_and_non_train() {
+        let ds = karate_dataset(0);
+        let members: Vec<NodeId> = (0..10).collect();
+        let b = build_batch(&ds, &members, Mode::Repli, ModelKind::Gcn).unwrap();
+        assert!(b.sub.num_replicas() > 0);
+        for local in b.sub.num_owned..b.num_local() {
+            assert_eq!(b.train_mask[local], 0.0, "replica {local} in mask");
+        }
+        for local in 0..b.sub.num_owned {
+            let global = b.sub.nodes[local] as usize;
+            assert_eq!(b.train_mask[local] > 0.5, ds.train_mask[global]);
+        }
+    }
+
+    #[test]
+    fn features_copied_per_local_node() {
+        let ds = karate_dataset(0);
+        let members = vec![5u32, 17, 2];
+        let b = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+        for (local, &global) in b.sub.nodes.iter().enumerate() {
+            assert_eq!(
+                &b.x[local * b.feat_dim..(local + 1) * b.feat_dim],
+                ds.feature_row(global)
+            );
+        }
+    }
+
+    #[test]
+    fn padding_layout() {
+        let ds = karate_dataset(0);
+        let members: Vec<NodeId> = (0..34).collect();
+        let b = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+        let p = pad_to_bucket(&b, 64, 256, 2).unwrap();
+        assert_eq!(p.x.len(), 64 * 8);
+        assert_eq!(p.src.len(), 256);
+        // pad region zeros
+        let ew = p.ew.as_f32().unwrap();
+        assert!(ew[b.num_directed_edges()..].iter().all(|&w| w == 0.0));
+        let mask = p.mask.as_f32().unwrap();
+        assert!(mask[34..].iter().all(|&m| m == 0.0));
+        // too-small bucket errors
+        assert!(pad_to_bucket(&b, 16, 256, 2).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Embedding integration (paper §5.2): assemble per-partition embeddings
+//! into a global matrix, train the MLP classifier on it, and evaluate.
+//!
+//! Each node's embedding comes from the partition that *owns* it; replicas
+//! are discarded by the trainer. The MLP stage runs on the leader after all
+//! partitions finish — the only cross-partition data movement in the whole
+//! pipeline, as in the paper.
+
+use super::metrics;
+use super::trainer::init_params;
+use crate::data::{Dataset, Labels};
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+use crate::runtime::{Runtime, Tensor};
+
+/// Global embedding matrix under assembly.
+pub struct EmbeddingStore {
+    pub n: usize,
+    pub dim: usize,
+    data: Vec<f32>,
+    filled: Vec<bool>,
+}
+
+impl EmbeddingStore {
+    pub fn new(n: usize, dim: usize) -> Self {
+        EmbeddingStore { n, dim, data: vec![0.0; n * dim], filled: vec![false; n] }
+    }
+
+    /// Write the owned-node embeddings of one partition.
+    pub fn insert(&mut self, nodes: &[NodeId], emb: &[f32]) -> Result<()> {
+        if emb.len() != nodes.len() * self.dim {
+            return Err(Error::Coordinator(format!(
+                "embedding block {} != {} nodes × dim {}",
+                emb.len(),
+                nodes.len(),
+                self.dim
+            )));
+        }
+        for (i, &v) in nodes.iter().enumerate() {
+            let vi = v as usize;
+            if self.filled[vi] {
+                return Err(Error::Coordinator(format!("node {v} embedded twice")));
+            }
+            self.filled[vi] = true;
+            self.data[vi * self.dim..(vi + 1) * self.dim]
+                .copy_from_slice(&emb[i * self.dim..(i + 1) * self.dim]);
+        }
+        Ok(())
+    }
+
+    pub fn num_filled(&self) -> usize {
+        self.filled.iter().filter(|&&b| b).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.filled.iter().all(|&b| b)
+    }
+
+    pub fn matrix(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Result of the classification stage.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    /// MLP losses per train call.
+    pub mlp_losses: Vec<f32>,
+    /// Accuracy (multiclass) or ROC-AUC (multilabel) on the test split.
+    pub test_metric: f64,
+    /// Same on the validation split.
+    pub val_metric: f64,
+    pub metric_name: &'static str,
+}
+
+/// Train the integration MLP on the embeddings and evaluate on the splits.
+pub fn classify(
+    rt: &Runtime,
+    dataset: &Dataset,
+    store: &EmbeddingStore,
+    epochs: usize,
+    seed: u64,
+) -> Result<EvalReport> {
+    if !store.is_complete() {
+        return Err(Error::Coordinator(format!(
+            "embedding store incomplete: {}/{} nodes",
+            store.num_filled(),
+            store.n
+        )));
+    }
+    let n = store.n;
+    let task = dataset.labels.task_name();
+    let train_exe = rt.load_for("mlp", task, "train", n, 0)?;
+    let pred_exe = rt.load_for("mlp", task, "pred", n, 0)?;
+    let dims = train_exe.meta.dims.clone();
+    if dims.f != store.dim {
+        return Err(Error::Coordinator(format!(
+            "MLP expects dim {} embeddings, store has {}",
+            dims.f, store.dim
+        )));
+    }
+
+    // pad embeddings/labels/mask to the MLP bucket
+    let mut x = vec![0f32; dims.n * dims.f];
+    x[..n * dims.f].copy_from_slice(store.matrix());
+    let x = Tensor::F32(x);
+    let y = match &dataset.labels {
+        Labels::Multiclass { labels, .. } => {
+            let mut yy = vec![0i32; dims.n];
+            yy[..n].copy_from_slice(labels);
+            Tensor::I32(yy)
+        }
+        Labels::Multilabel { tasks, targets } => {
+            let mut yy = vec![0f32; dims.n * tasks];
+            yy[..n * tasks].copy_from_slice(targets);
+            Tensor::F32(yy)
+        }
+    };
+    let mut mask = vec![0f32; dims.n];
+    for v in 0..n {
+        mask[v] = dataset.train_mask[v] as u8 as f32;
+    }
+    let mask = Tensor::F32(mask);
+
+    let p = train_exe.meta.num_params();
+    let mut params = init_params(&train_exe, seed);
+    let mut m: Vec<Tensor> = params.iter().map(|t| Tensor::F32(vec![0.0; t.len()])).collect();
+    let mut v: Vec<Tensor> = m.clone();
+    let mut t = Tensor::F32(vec![0.0]);
+    let calls = epochs.div_ceil(dims.epochs_per_call.max(1));
+    let mut mlp_losses = Vec::with_capacity(calls);
+    for _ in 0..calls {
+        let mut inputs = Vec::with_capacity(3 * p + 4);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(t.clone());
+        inputs.push(x.clone());
+        inputs.push(y.clone());
+        inputs.push(mask.clone());
+        let mut out = train_exe.run(&inputs)?;
+        mlp_losses.push(out.last().unwrap().scalar_f32()?);
+        t = out[3 * p].clone();
+        v = out.drain(2 * p..3 * p).collect();
+        m = out.drain(p..2 * p).collect();
+        params = out.drain(..p).collect();
+    }
+
+    // ---- predict + evaluate ------------------------------------------
+    let mut inputs = params;
+    inputs.push(x);
+    let out = pred_exe.run(&inputs)?;
+    let logits_full = out[0].as_f32()?;
+    let c = dims.c;
+    let logits = &logits_full[..n * c];
+
+    let (test_metric, val_metric, metric_name) = match &dataset.labels {
+        // NB: the artifact may have more logit columns than the dataset has
+        // classes (bucketed class dim); argmax runs over the artifact's c —
+        // a prediction in an unused class simply counts as wrong.
+        Labels::Multiclass { labels, classes: _ } => (
+            metrics::accuracy(logits, labels, &dataset.test_mask, c),
+            metrics::accuracy(logits, labels, &dataset.val_mask, c),
+            "accuracy",
+        ),
+        Labels::Multilabel { tasks, targets } => {
+            if *tasks != c {
+                return Err(Error::Coordinator(format!(
+                    "multilabel artifact has {c} tasks, dataset has {tasks}"
+                )));
+            }
+            (
+                metrics::multilabel_auc(logits, targets, &dataset.test_mask, *tasks),
+                metrics::multilabel_auc(logits, targets, &dataset.val_mask, *tasks),
+                "roc-auc",
+            )
+        }
+    };
+    Ok(EvalReport { mlp_losses, test_metric, val_metric, metric_name })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_tracks_coverage() {
+        let mut s = EmbeddingStore::new(4, 2);
+        assert!(!s.is_complete());
+        s.insert(&[0, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.num_filled(), 2);
+        s.insert(&[1, 3], &[5.0, 6.0, 7.0, 8.0]).unwrap();
+        assert!(s.is_complete());
+        assert_eq!(&s.matrix()[2..4], &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn store_rejects_double_insert() {
+        let mut s = EmbeddingStore::new(2, 1);
+        s.insert(&[0], &[1.0]).unwrap();
+        assert!(s.insert(&[0], &[2.0]).is_err());
+    }
+
+    #[test]
+    fn store_rejects_bad_block_size() {
+        let mut s = EmbeddingStore::new(2, 3);
+        assert!(s.insert(&[0], &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,168 @@
+//! Evaluation metrics: multiclass accuracy (arxiv-like) and multilabel
+//! ROC-AUC (proteins-like, averaged over tasks as in OGB).
+
+/// Argmax accuracy over the rows selected by `mask`.
+///
+/// `logits` is row-major `[n, c]`; `labels[v] ∈ 0..c`.
+pub fn accuracy(logits: &[f32], labels: &[i32], mask: &[bool], c: usize) -> f64 {
+    debug_assert_eq!(logits.len(), labels.len() * c);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (v, &keep) in mask.iter().enumerate() {
+        if !keep {
+            continue;
+        }
+        let row = &logits[v * c..(v + 1) * c];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+        correct += (pred == labels[v]) as usize;
+        total += 1;
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// ROC-AUC of one binary task via the rank formulation (Mann–Whitney U),
+/// with midranks for ties. Returns `None` if the task is single-class on
+/// the evaluated rows (OGB skips such tasks in the average).
+pub fn binary_auc(scores: &[f32], targets: &[f32]) -> Option<f64> {
+    debug_assert_eq!(scores.len(), targets.len());
+    let n = scores.len();
+    let pos = targets.iter().filter(|&&t| t > 0.5).count();
+    let neg = n - pos;
+    if pos == 0 || neg == 0 {
+        return None;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    // midranks
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0usize;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0;
+        for &v in &idx[i..=j] {
+            if targets[v] > 0.5 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - pos as f64 * (pos as f64 + 1.0) / 2.0;
+    Some(u / (pos as f64 * neg as f64))
+}
+
+/// Macro-averaged ROC-AUC over `tasks` columns, restricted to `mask` rows.
+/// `logits`/`targets` are row-major `[n, tasks]`.
+pub fn multilabel_auc(logits: &[f32], targets: &[f32], mask: &[bool], tasks: usize) -> f64 {
+    let rows: Vec<usize> = mask
+        .iter()
+        .enumerate()
+        .filter(|(_, &m)| m)
+        .map(|(v, _)| v)
+        .collect();
+    if rows.is_empty() {
+        return 0.0;
+    }
+    let mut scores = Vec::with_capacity(rows.len());
+    let mut tgts = Vec::with_capacity(rows.len());
+    let mut sum = 0.0f64;
+    let mut counted = 0usize;
+    for t in 0..tasks {
+        scores.clear();
+        tgts.clear();
+        for &v in &rows {
+            scores.push(logits[v * tasks + t]);
+            tgts.push(targets[v * tasks + t]);
+        }
+        if let Some(auc) = binary_auc(&scores, &tgts) {
+            sum += auc;
+            counted += 1;
+        }
+    }
+    if counted == 0 {
+        return 0.0;
+    }
+    sum / counted as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        // 3 nodes, 2 classes
+        let logits = [0.9f32, 0.1, 0.2, 0.8, 0.6, 0.4];
+        let labels = [0, 1, 1];
+        let acc = accuracy(&logits, &labels, &[true, true, true], 2);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_respects_mask() {
+        let logits = [0.9f32, 0.1, 0.2, 0.8];
+        let labels = [1, 1]; // node 0 wrong, node 1 right
+        assert_eq!(accuracy(&logits, &labels, &[false, true], 2), 1.0);
+        assert_eq!(accuracy(&logits, &labels, &[false, false], 2), 0.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let scores = [0.1f32, 0.2, 0.8, 0.9];
+        let targets = [0.0f32, 0.0, 1.0, 1.0];
+        assert_eq!(binary_auc(&scores, &targets), Some(1.0));
+        let inv = [0.9f32, 0.8, 0.2, 0.1];
+        assert_eq!(binary_auc(&inv, &targets), Some(0.0));
+    }
+
+    #[test]
+    fn auc_symmetric_split_is_half() {
+        // positives at the extremes, negatives in the middle → 0.5
+        let scores = [0.1f32, 0.2, 0.3, 0.4];
+        let targets = [1.0f32, 0.0, 0.0, 1.0];
+        assert_eq!(binary_auc(&scores, &targets), Some(0.5));
+    }
+
+    #[test]
+    fn auc_ties_get_midranks() {
+        let scores = [0.5f32, 0.5, 0.5, 0.5];
+        let targets = [1.0f32, 0.0, 1.0, 0.0];
+        assert_eq!(binary_auc(&scores, &targets), Some(0.5));
+    }
+
+    #[test]
+    fn auc_single_class_is_none() {
+        assert_eq!(binary_auc(&[0.1, 0.9], &[1.0, 1.0]), None);
+        assert_eq!(binary_auc(&[], &[]), None);
+    }
+
+    #[test]
+    fn multilabel_skips_degenerate_tasks() {
+        // 2 tasks over 4 nodes; task 1 is all-positive → skipped
+        let logits = [0.1f32, 9.0, 0.2, 9.0, 0.8, 9.0, 0.9, 9.0];
+        let targets = [0.0f32, 1.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let auc = multilabel_auc(&logits, &targets, &[true; 4], 2);
+        assert_eq!(auc, 1.0);
+    }
+
+    #[test]
+    fn multilabel_respects_mask() {
+        let logits = [0.9f32, 0.1, 0.8, 0.2];
+        let targets = [0.0f32, 1.0, 1.0, 0.0];
+        // only rows 2,3 → single task columns... 2 tasks, rows {1}: degenerate
+        let auc = multilabel_auc(&logits, &targets, &[false, true], 2);
+        assert_eq!(auc, 0.0); // no task has both classes on one row
+    }
+}

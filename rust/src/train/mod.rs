@@ -1,0 +1,12 @@
+//! Training pipeline: partition batches, the per-partition trainer, the
+//! embedding-integration + MLP stage, and evaluation metrics.
+
+pub mod checkpoint;
+pub mod data;
+pub mod integrate;
+pub mod metrics;
+pub mod trainer;
+
+pub use data::{build_batch, pad_to_bucket, Mode, ModelKind, PartitionBatch};
+pub use integrate::{classify, EmbeddingStore, EvalReport};
+pub use trainer::{train_partition, TrainOptions, TrainedPartition};

@@ -1,0 +1,233 @@
+//! Per-partition trainer: drives a train artifact for E epochs, then the
+//! eval artifact to extract embeddings + logits for the owned nodes.
+//!
+//! This is the "no communication during training" core of the paper: the
+//! whole loop touches only partition-local tensors; state (params + Adam
+//! moments) round-trips through PJRT between calls.
+
+use super::data::{pad_to_bucket, ModelKind, PartitionBatch};
+use crate::error::Result;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Hyper-parameters of one partition-training run.
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub model: ModelKind,
+    /// Total full-batch epochs (rounded up to epochs_per_call).
+    pub epochs: usize,
+    pub seed: u64,
+    /// Report a loss sample every `log_every` calls (0 = never).
+    pub log_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { model: ModelKind::Gcn, epochs: 80, seed: 0, log_every: 0 }
+    }
+}
+
+/// Outcome of training one partition.
+#[derive(Clone, Debug)]
+pub struct TrainedPartition {
+    /// Loss after each train call (each call = epochs_per_call epochs).
+    pub losses: Vec<f32>,
+    /// `[num_owned, h]` embeddings of owned nodes (local order).
+    pub embeddings: Vec<f32>,
+    pub emb_dim: usize,
+    /// `[num_owned, c]` logits of owned nodes.
+    pub logits: Vec<f32>,
+    pub num_classes: usize,
+    /// Replica (halo) nodes the subgraph carried (0 for Inner mode).
+    pub num_replicas: usize,
+    /// Wall-clock seconds spent in train executions.
+    pub train_secs: f64,
+}
+
+/// Glorot-uniform init for the artifact's parameter tensors (matches the
+/// python `init_params`): 2-D tensors get ±sqrt(6/(fan_in+fan_out)),
+/// 1-D biases get zeros.
+pub fn init_params(exe: &Executable, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    let p = exe.meta.num_params();
+    exe.meta.inputs[..p]
+        .iter()
+        .map(|spec| {
+            if spec.shape.len() == 2 {
+                let lim = (6.0 / (spec.shape[0] + spec.shape[1]) as f64).sqrt();
+                Tensor::F32(
+                    (0..spec.num_elements())
+                        .map(|_| ((rng.f64() * 2.0 - 1.0) * lim) as f32)
+                        .collect(),
+                )
+            } else {
+                Tensor::F32(vec![0.0; spec.num_elements()])
+            }
+        })
+        .collect()
+}
+
+fn zeros_like(params: &[Tensor]) -> Vec<Tensor> {
+    params
+        .iter()
+        .map(|t| Tensor::F32(vec![0.0; t.len()]))
+        .collect()
+}
+
+/// Train one partition end-to-end and extract owned-node outputs.
+pub fn train_partition(
+    rt: &Runtime,
+    batch: &PartitionBatch,
+    opts: &TrainOptions,
+) -> Result<TrainedPartition> {
+    let task = match &batch.y {
+        super::data::LabelSlice::Multiclass(_) => "multiclass",
+        super::data::LabelSlice::Multilabel { .. } => "multilabel",
+    };
+    let model = opts.model.as_str();
+    let nl = batch.num_local();
+    let el = batch.num_directed_edges();
+
+    let train_exe = rt.load_for(model, task, "train", nl, el)?;
+    let eval_exe = rt.load_for(model, task, "eval", nl, el)?;
+    // train/eval pair must share buckets so params transfer directly
+    debug_assert_eq!(train_exe.meta.dims.n, eval_exe.meta.dims.n);
+    let dims = &train_exe.meta.dims;
+    let padded = pad_to_bucket(batch, dims.n, dims.e, dims.c)?;
+
+    let p = train_exe.meta.num_params();
+    let mut params = init_params(&train_exe, opts.seed);
+    let mut m = zeros_like(&params);
+    let mut v = zeros_like(&params);
+    let mut t = Tensor::F32(vec![0.0]);
+
+    let calls = opts.epochs.div_ceil(dims.epochs_per_call.max(1));
+    let mut losses = Vec::with_capacity(calls);
+    let sw = crate::util::Stopwatch::start();
+    for call in 0..calls {
+        let mut inputs = Vec::with_capacity(3 * p + 7);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(t.clone());
+        inputs.push(padded.x.clone());
+        inputs.push(padded.src.clone());
+        inputs.push(padded.dst.clone());
+        inputs.push(padded.ew.clone());
+        inputs.push(padded.y.clone());
+        inputs.push(padded.mask.clone());
+        let mut out = train_exe.run(&inputs)?;
+        let loss = out.last().unwrap().scalar_f32()?;
+        losses.push(loss);
+        t = out[3 * p].clone();
+        // reclaim updated state without copying
+        v = out.drain(2 * p..3 * p).collect();
+        m = out.drain(p..2 * p).collect();
+        params = out.drain(..p).collect();
+        if opts.log_every > 0 && call % opts.log_every == 0 {
+            log::debug!("train call {call}/{calls}: loss {loss:.4}");
+        }
+    }
+    let train_secs = sw.secs();
+
+    // ---- eval: embeddings + logits ----------------------------------
+    let mut eval_inputs = Vec::with_capacity(p + 4);
+    eval_inputs.extend(params.iter().cloned());
+    eval_inputs.push(padded.x);
+    eval_inputs.push(padded.src);
+    eval_inputs.push(padded.dst);
+    eval_inputs.push(padded.ew);
+    let out = eval_exe.run(&eval_inputs)?;
+    let emb_full = out[0].as_f32()?;
+    let logits_full = out[1].as_f32()?;
+    let h = eval_exe.meta.dims.h;
+    let c = eval_exe.meta.dims.c;
+    let owned = batch.sub.num_owned;
+    let embeddings = emb_full[..owned * h].to_vec();
+    let logits = logits_full[..owned * c].to_vec();
+
+    Ok(TrainedPartition {
+        losses,
+        embeddings,
+        emb_dim: h,
+        logits,
+        num_classes: c,
+        num_replicas: batch.sub.num_replicas(),
+        train_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::karate_dataset;
+    use crate::graph::NodeId;
+    use crate::runtime::default_artifacts_dir;
+    use crate::train::data::{build_batch, Mode};
+
+    fn runtime_if_built() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::new(&dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn trains_karate_full_graph_loss_decreases() {
+        let Some(rt) = runtime_if_built() else { return };
+        let ds = karate_dataset(3);
+        let members: Vec<NodeId> = (0..34).collect();
+        let batch = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+        let opts = TrainOptions { epochs: 20, seed: 1, ..Default::default() };
+        let out = train_partition(&rt, &batch, &opts).unwrap();
+        assert!(out.losses.len() >= 2);
+        assert!(
+            out.losses.last().unwrap() < out.losses.first().unwrap(),
+            "{:?}",
+            out.losses
+        );
+        assert_eq!(out.embeddings.len(), 34 * out.emb_dim);
+        assert_eq!(out.logits.len(), 34 * out.num_classes);
+        assert!(out.embeddings.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn repli_outputs_only_owned_rows() {
+        let Some(rt) = runtime_if_built() else { return };
+        let ds = karate_dataset(3);
+        let members: Vec<NodeId> = (0..12).collect();
+        let batch = build_batch(&ds, &members, Mode::Repli, ModelKind::Sage).unwrap();
+        assert!(batch.sub.num_replicas() > 0);
+        let opts = TrainOptions {
+            epochs: 4,
+            model: ModelKind::Sage,
+            seed: 2,
+            ..Default::default()
+        };
+        let out = train_partition(&rt, &batch, &opts).unwrap();
+        assert_eq!(out.embeddings.len(), 12 * out.emb_dim);
+    }
+
+    #[test]
+    fn init_params_matches_artifact_shapes() {
+        let Some(rt) = runtime_if_built() else { return };
+        let exe = rt.load("gcn_smoke_train").unwrap();
+        let params = init_params(&exe, 0);
+        assert_eq!(params.len(), exe.meta.num_params());
+        for (t, spec) in params.iter().zip(&exe.meta.inputs) {
+            assert_eq!(t.len(), spec.num_elements());
+        }
+        // biases zero, weights bounded
+        for (t, spec) in params.iter().zip(&exe.meta.inputs) {
+            let v = t.as_f32().unwrap();
+            if spec.shape.len() == 1 {
+                assert!(v.iter().all(|&x| x == 0.0));
+            } else {
+                let lim = (6.0 / (spec.shape[0] + spec.shape[1]) as f64).sqrt() as f32;
+                assert!(v.iter().all(|&x| x.abs() <= lim));
+            }
+        }
+    }
+}

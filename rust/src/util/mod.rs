@@ -1,0 +1,87 @@
+//! Shared infrastructure: RNG, JSON, timing, logging.
+
+pub mod json;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Simple stopwatch for coarse phase timing (partitioning, training, ...).
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Human-readable duration, e.g. `1.23s` / `45.6ms` / `789µs`.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.1}ms", secs * 1e3)
+    } else {
+        format!("{:.0}µs", secs * 1e6)
+    }
+}
+
+/// Minimal `log` facade backend writing to stderr; level from `RUST_LOG`
+/// (error|warn|info|debug|trace, default info).
+pub struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &log::Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5} {}] {}", record.level(), record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger (idempotent).
+pub fn init_logging() {
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER).map(|_| log::set_max_level(level));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_duration(0.0456), "45.6ms");
+        assert_eq!(fmt_duration(0.000789), "789µs");
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        assert!(sw.secs() >= 0.0);
+        assert!(sw.millis() >= sw.secs());
+    }
+}

@@ -1,0 +1,305 @@
+//! Property-based integration tests over the partitioning stack
+//! (driver: `leiden_fusion::testing::prop` — proptest is unavailable
+//! offline; see DESIGN.md).
+
+use leiden_fusion::graph::{components_within, is_connected, CsrGraph};
+use leiden_fusion::partition::fusion::split_into_components;
+use leiden_fusion::partition::leiden::{leiden, leiden_fusion, modularity, LeidenConfig};
+use leiden_fusion::partition::quality::PartitionQuality;
+use leiden_fusion::partition::{by_name, cut_edges, Partitioning};
+use leiden_fusion::testing::prop::{check, gens};
+use leiden_fusion::util::rng::Rng;
+
+/// Every partitioner produces an exact cover with ids in range.
+#[test]
+fn prop_all_partitioners_exact_cover() {
+    for method in ["lf", "metis", "lpa", "random", "metis+f", "lpa+f"] {
+        check(
+            &format!("exact-cover/{method}"),
+            12,
+            0xA11,
+            |rng| {
+                let g = gens::connected_graph(rng, 8, 120, 1.5);
+                let k = 2 + rng.index(3);
+                (g, k)
+            },
+            |(g, k)| {
+                let p = by_name(method, 5)
+                    .unwrap()
+                    .partition(g, *k)
+                    .map_err(|e| e.to_string())?;
+                if p.num_nodes() != g.num_nodes() {
+                    return Err("wrong node count".into());
+                }
+                if p.sizes().iter().sum::<usize>() != g.num_nodes() {
+                    return Err("not a cover".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The paper's core guarantee: on a connected graph, every LF partition is
+/// one connected component with no isolated nodes.
+#[test]
+fn prop_lf_partitions_connected_no_isolated() {
+    check(
+        "lf-structural-guarantee",
+        20,
+        0xBEE,
+        |rng| {
+            let g = gens::connected_graph(rng, 10, 200, 2.0);
+            let k = 2 + rng.index(4);
+            (g, k)
+        },
+        |(g, k)| {
+            let p = leiden_fusion(g, *k, 0.05, 0.5, 3).map_err(|e| e.to_string())?;
+            if p.k() != *k {
+                return Err(format!("got {} partitions, wanted {k}", p.k()));
+            }
+            for part in 0..p.k() as u32 {
+                let mask = p.mask(part);
+                if !mask.iter().any(|&b| b) {
+                    return Err(format!("partition {part} empty"));
+                }
+                let info = components_within(g, &mask);
+                if info.num_components() != 1 {
+                    return Err(format!(
+                        "partition {part} has {} components",
+                        info.num_components()
+                    ));
+                }
+                if info.isolated != 0 {
+                    return Err(format!("partition {part} has isolated nodes"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Leiden communities are themselves connected on connected graphs.
+#[test]
+fn prop_leiden_communities_connected() {
+    check(
+        "leiden-connected-communities",
+        15,
+        0xCAFE,
+        |rng| gens::connected_graph(rng, 10, 150, 1.2),
+        |g| {
+            let p = leiden(g, &LeidenConfig { seed: 2, ..Default::default() });
+            for c in 0..p.k() as u32 {
+                let info = components_within(g, &p.mask(c));
+                if info.num_components() != 1 {
+                    return Err(format!("community {c} disconnected"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Modularity of Leiden output is non-negative (singletons give 0 on
+/// these graphs; Leiden must not do worse).
+#[test]
+fn prop_leiden_modularity_nonnegative() {
+    check(
+        "leiden-modularity",
+        10,
+        0xD00D,
+        |rng| gens::connected_graph(rng, 20, 150, 2.0),
+        |g| {
+            let p = leiden(g, &LeidenConfig { seed: 4, ..Default::default() });
+            let q = modularity(g, &p, 1.0);
+            if q < -1e-9 {
+                return Err(format!("negative modularity {q}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// split_into_components: each resulting community is connected, and the
+/// split is a refinement of the input partitioning.
+#[test]
+fn prop_split_components_refines() {
+    check(
+        "split-refines",
+        15,
+        0xF00,
+        |rng| {
+            let g = gens::any_graph(rng, 80, 1.2);
+            let n = g.num_nodes();
+            let k = 2 + rng.index(3);
+            let assign: Vec<u32> = (0..n).map(|_| rng.index(k) as u32).collect();
+            (g, Partitioning::new(assign, k).unwrap())
+        },
+        |(g, p)| {
+            let split = split_into_components(g, p);
+            for c in 0..split.k() as u32 {
+                let mask = split.mask(c);
+                if !mask.iter().any(|&b| b) {
+                    continue;
+                }
+                let info = components_within(g, &mask);
+                if info.num_components() != 1 {
+                    return Err("split community not connected".into());
+                }
+                // refinement: all members share the original partition
+                let parts: std::collections::HashSet<u32> = (0..g.num_nodes())
+                    .filter(|&v| mask[v])
+                    .map(|v| p.part_of(v as u32))
+                    .collect();
+                if parts.len() != 1 {
+                    return Err("split crosses original partitions".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Quality-metric identities: Σ internal edges + cut = m; ρ ≥ 1 for a
+/// complete cover; RF ≥ 1; τ ∈ [0, 1].
+#[test]
+fn prop_quality_identities() {
+    check(
+        "quality-identities",
+        20,
+        0xAB,
+        |rng| {
+            let g = gens::connected_graph(rng, 10, 150, 1.5);
+            let k = 2 + rng.index(4);
+            let mut r2 = Rng::new(rng.next_u64());
+            let p = by_name("random", r2.next_u64())
+                .unwrap()
+                .partition(&g, k)
+                .unwrap();
+            (g, p)
+        },
+        |(g, p)| {
+            let q = PartitionQuality::measure(g, p);
+            let internal: usize = q.edge_counts.iter().sum();
+            let cut = cut_edges(g, p);
+            if internal + cut != g.num_edges() {
+                return Err(format!(
+                    "edge accounting broken: {internal} + {cut} != {}",
+                    g.num_edges()
+                ));
+            }
+            if !(0.0..=1.0).contains(&q.edge_cut_fraction) {
+                return Err("tau out of range".into());
+            }
+            if q.node_balance < 1.0 - 1e-9 {
+                return Err(format!("rho = {} < 1", q.node_balance));
+            }
+            if q.replication_factor < 1.0 - 1e-9 {
+                return Err("RF < 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// CSR round-trips through the binary format on arbitrary graphs.
+#[test]
+fn prop_binary_io_roundtrip() {
+    check(
+        "binary-roundtrip",
+        10,
+        0x10,
+        |rng| gens::any_graph(rng, 60, 1.5),
+        |g| {
+            let path = std::env::temp_dir().join(format!(
+                "lf_prop_{}_{}.bin",
+                std::process::id(),
+                g.num_nodes()
+            ));
+            leiden_fusion::graph::io::write_binary(g, &path).map_err(|e| e.to_string())?;
+            let g2 = leiden_fusion::graph::io::read_binary(&path).map_err(|e| e.to_string())?;
+            std::fs::remove_file(&path).ok();
+            if g2.num_nodes() != g.num_nodes() || g2.num_edges() != g.num_edges() {
+                return Err("size mismatch".into());
+            }
+            for v in 0..g.num_nodes() as u32 {
+                if g.neighbors(v) != g2.neighbors(v) {
+                    return Err(format!("adjacency mismatch at {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fusion of any partitioning reaches exactly k connected partitions on
+/// connected inputs.
+#[test]
+fn prop_plus_f_reaches_k_connected() {
+    check(
+        "plus-f",
+        15,
+        0x77,
+        |rng| {
+            let g = gens::connected_graph(rng, 12, 120, 1.0);
+            let k = 2 + rng.index(3);
+            (g, k)
+        },
+        |(g, k)| {
+            let p = by_name("random", 3).unwrap().partition(g, *k).unwrap();
+            let fused = leiden_fusion::partition::fusion::fuse_partitioning(g, &p)
+                .map_err(|e| e.to_string())?;
+            if fused.k() != *k {
+                return Err(format!("fused to {} != {k}", fused.k()));
+            }
+            let q = PartitionQuality::measure(g, &fused);
+            if !q.is_structurally_ideal() {
+                return Err("fused partitioning not ideal on connected graph".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Determinism: same seed => identical partitioning, across all methods.
+#[test]
+fn prop_partitioners_deterministic() {
+    for method in ["lf", "metis", "lpa", "random"] {
+        check(
+            &format!("deterministic/{method}"),
+            8,
+            0x5EED,
+            |rng| gens::connected_graph(rng, 10, 100, 1.5),
+            |g| {
+                let a = by_name(method, 9).unwrap().partition(g, 3).unwrap();
+                let b = by_name(method, 9).unwrap().partition(g, 3).unwrap();
+                if a.assignments() != b.assignments() {
+                    return Err("nondeterministic".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Sanity: generated SBM graphs satisfy the paper's input precondition.
+#[test]
+fn sbm_default_configs_are_connected() {
+    use leiden_fusion::graph::gen::{generate_sbm, SbmConfig};
+    for seed in 0..3 {
+        let g = generate_sbm(&SbmConfig::arxiv_like(3000, seed)).unwrap();
+        assert!(is_connected(&g.graph), "seed {seed}");
+    }
+}
+
+/// Regression guard: the exact Karate graph LF output stays ideal for all
+/// k the paper uses.
+#[test]
+fn karate_lf_all_paper_ks() {
+    let g: CsrGraph = leiden_fusion::graph::karate::karate_graph();
+    for k in [2, 3, 4] {
+        let p = leiden_fusion(&g, k, 0.05, 0.5, 1).unwrap();
+        let q = PartitionQuality::measure(&g, &p);
+        assert!(q.is_structurally_ideal(), "k={k}");
+    }
+}

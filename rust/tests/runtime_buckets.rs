@@ -1,0 +1,21 @@
+// temp probe (will be replaced by real integration tests)
+use leiden_fusion::runtime::{Runtime, Tensor, DType};
+use leiden_fusion::util::Stopwatch;
+
+#[test]
+#[ignore]
+fn probe_buckets() {
+    let rt = Runtime::new(&leiden_fusion::runtime::default_artifacts_dir()).unwrap();
+    for name in ["gcn_mc_n8192_e131072_train", "mlp_mc_n32768_train", "gcn_mc_n32768_e524288_train"] {
+        let sw = Stopwatch::start();
+        let exe = rt.load(name).unwrap();
+        println!("{name}: compile {:.2}s", sw.secs());
+        let inputs: Vec<Tensor> = exe.meta.inputs.iter().map(|s| match s.dtype {
+            DType::F32 => Tensor::F32(vec![0.0; s.num_elements()]),
+            DType::I32 => Tensor::I32(vec![0; s.num_elements()]),
+        }).collect();
+        let sw = Stopwatch::start();
+        let _ = exe.run(&inputs).unwrap();
+        println!("{name}: execute {:.2}s", sw.secs());
+    }
+}
