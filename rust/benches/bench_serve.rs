@@ -1,0 +1,166 @@
+//! **bench_serve** — serving-engine throughput and latency.
+//!
+//! Trains a small LF run with shard export, then hammers the query engine
+//! from several client threads with a hot-set-skewed workload (80% of
+//! queries hit 10% of nodes, the usual shape of read-heavy serving
+//! traffic) and reports QPS, p50/p99 per-call latency, and cache hit rate.
+//!
+//! Knobs: `LF_BENCH_QUICK` shrinks the run; `LF_BENCH_N` overrides the
+//! dataset size; `LF_SERVE_WORKERS` / `LF_SERVE_BATCH` tune the engine.
+
+mod common;
+
+use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
+use leiden_fusion::graph::NodeId;
+use leiden_fusion::partition::by_name;
+use leiden_fusion::runtime::default_artifacts_dir;
+use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
+use leiden_fusion::util::json::{num, obj, Json};
+use leiden_fusion::util::rng::Rng;
+use leiden_fusion::util::Stopwatch;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_secs.len() - 1) as f64 * p).round() as usize;
+    sorted_secs[idx] * 1e3
+}
+
+fn main() {
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        println!("bench_serve: artifacts missing (run `make artifacts`); skipping");
+        return;
+    }
+
+    // ---- train + export a bundle -------------------------------------
+    let ds = common::arxiv(1000);
+    let p = by_name("lf", 42).unwrap().partition(&ds.graph, 4).unwrap();
+    let shard_dir = std::env::temp_dir()
+        .join(format!("lf_bench_serve_{}", std::process::id()));
+    std::fs::remove_dir_all(&shard_dir).ok();
+    let mut ccfg = CoordinatorConfig::new(artifacts);
+    ccfg.epochs = if common::quick() { 4 } else { 10 };
+    ccfg.mlp_epochs = 40;
+    ccfg.machines = 2;
+    ccfg.shard_dir = Some(shard_dir.clone());
+    let sw = Stopwatch::start();
+    Coordinator::new(ccfg).run(&ds, &p).expect("training run");
+    println!(
+        "trained {} nodes / {} partitions in {:.1}s; bundle at {}",
+        ds.num_nodes(),
+        p.k(),
+        sw.secs(),
+        shard_dir.display()
+    );
+
+    // ---- spin up the engine ------------------------------------------
+    let workers = env_usize("LF_SERVE_WORKERS", 2);
+    let batch = env_usize("LF_SERVE_BATCH", 64);
+    let store = Arc::new(ShardedEmbeddingStore::open(&shard_dir).expect("open bundle"));
+    store.prefetch_all().expect("prefetch");
+    let engine = Arc::new(
+        Engine::new(
+            EngineConfig {
+                batch_size: batch,
+                workers,
+                cache_capacity: 4096,
+                ..Default::default()
+            },
+            Arc::clone(&store),
+        )
+        .expect("engine"),
+    );
+
+    // ---- skewed query storm ------------------------------------------
+    let calls = if common::quick() { 2_000 } else { 10_000 };
+    let clients = 4;
+    let per_client = calls / clients;
+    let qbatch = 8; // node ids per query() call
+    let n = store.num_nodes() as NodeId;
+    let hot = (n / 10).max(1);
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::with_capacity(calls)));
+
+    let wall = Instant::now();
+    let mut handles = Vec::new();
+    for tid in 0..clients {
+        let engine = Arc::clone(&engine);
+        let latencies = Arc::clone(&latencies);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xBE7C + tid as u64);
+            let mut local = Vec::with_capacity(per_client);
+            let mut batch_ids = vec![0 as NodeId; qbatch];
+            for _ in 0..per_client {
+                for slot in batch_ids.iter_mut() {
+                    *slot = if rng.f64() < 0.8 {
+                        rng.index(hot as usize) as NodeId
+                    } else {
+                        rng.index(n as usize) as NodeId
+                    };
+                }
+                let t0 = Instant::now();
+                engine.query(&batch_ids).expect("query");
+                local.push(t0.elapsed().as_secs_f64());
+            }
+            latencies.lock().unwrap().extend(local);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+
+    // ---- report -------------------------------------------------------
+    let mut lats = latencies.lock().unwrap().clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let answered = (per_client * clients * qbatch) as f64;
+    let qps = answered / wall_secs;
+    let p50 = percentile_ms(&lats, 0.50);
+    let p99 = percentile_ms(&lats, 0.99);
+    let st = engine.stats();
+    let hit_pct = st.cache_hits as f64 / st.requests.max(1) as f64 * 100.0;
+
+    let mut t = Table::new(
+        "bench_serve: batched node-classification serving",
+        &["metric", "value"],
+    );
+    t.row(vec!["nodes".into(), store.num_nodes().to_string()]);
+    t.row(vec!["shards".into(), store.num_shards().to_string()]);
+    t.row(vec!["clients".into(), clients.to_string()]);
+    t.row(vec!["engine workers".into(), workers.to_string()]);
+    t.row(vec!["query calls".into(), (per_client * clients).to_string()]);
+    t.row(vec!["node queries".into(), format!("{answered:.0}")]);
+    t.row(vec!["QPS (nodes/s)".into(), format!("{qps:.0}")]);
+    t.row(vec!["p50 latency".into(), format!("{p50:.3}ms")]);
+    t.row(vec!["p99 latency".into(), format!("{p99:.3}ms")]);
+    t.row(vec!["cache hit rate".into(), format!("{hit_pct:.1}%")]);
+    t.row(vec!["PJRT batches".into(), st.batches.to_string()]);
+    t.print();
+
+    save_json(
+        "bench_serve",
+        &obj(vec![
+            ("nodes", num(store.num_nodes() as f64)),
+            ("workers", num(workers as f64)),
+            ("batch_size", num(batch as f64)),
+            ("query_calls", num((per_client * clients) as f64)),
+            ("node_queries", num(answered)),
+            ("qps", num(qps)),
+            ("p50_ms", num(p50)),
+            ("p99_ms", num(p99)),
+            ("cache_hit_pct", num(hit_pct)),
+            ("pjrt_batches", num(st.batches as f64)),
+            ("wall_secs", Json::Num(wall_secs)),
+        ]),
+    );
+
+    std::fs::remove_dir_all(&shard_dir).ok();
+}

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification: release build + full test suite + formatting.
+#
+# Run from anywhere; operates on the rust/ crate. Artifact-gated tests
+# (anything touching the PJRT runtime) skip themselves when
+# artifacts/manifest.json is absent, so this script is meaningful both
+# with and without a `make artifacts` run.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "tier1: OK"

@@ -3,10 +3,14 @@
 //! Supports `program <subcommand> --flag value --switch` with typed
 //! accessors, defaults, and an auto-generated usage string.
 //!
-//! Grammar note: `--name token` always binds `token` as the flag's value;
-//! boolean switches must therefore come last, precede another `--flag`, or
-//! use `--name=true`. (With no flag registry the parser cannot tell a
-//! switch followed by a positional from a valued flag.)
+//! Grammar note: without a registry, `--name token` always binds `token`
+//! as the flag's value, so a boolean switch followed by a positional is
+//! ambiguous. [`Args::parse_declared`] takes a declared-switch registry:
+//! a declared switch never consumes the next token (`prog run --fast
+//! input.txt` parses as switch `fast` + positional `input.txt`), and
+//! `--fast=true` / `--fast=false` set it explicitly. [`Args::parse`] is
+//! the registry-free legacy entry point (switches must come last, precede
+//! another `--flag`, or use `--name=true`).
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
@@ -21,8 +25,19 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse `std::env::args()`-style input (element 0 = program name).
+    /// Parse `std::env::args()`-style input (element 0 = program name)
+    /// with no declared switches (legacy heuristic grammar).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        Self::parse_declared(argv, &[])
+    }
+
+    /// Parse with a declared-switch registry. Names listed in `declared`
+    /// are boolean switches: they never bind the following token as a
+    /// value, which removes the `--switch positional` ambiguity.
+    pub fn parse_declared<I: IntoIterator<Item = String>>(
+        argv: I,
+        declared: &[&str],
+    ) -> Result<Args> {
         let mut it = argv.into_iter().skip(1).peekable();
         let mut out = Args::default();
         if let Some(first) = it.peek() {
@@ -36,7 +51,21 @@ impl Args {
                     return Err(Error::Config("bare -- is not supported".into()));
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    if declared.contains(&k) {
+                        match v {
+                            "true" => out.switches.push(k.to_string()),
+                            "false" => {}
+                            other => {
+                                return Err(Error::Config(format!(
+                                    "--{k} is a switch; expected true/false, got {other:?}"
+                                )))
+                            }
+                        }
+                    } else {
+                        out.flags.insert(k.to_string(), v.to_string());
+                    }
+                } else if declared.contains(&name) {
+                    out.switches.push(name.to_string());
                 } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
                     out.flags.insert(name.to_string(), it.next().unwrap());
                 } else {
@@ -112,6 +141,10 @@ mod tests {
         Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
     }
 
+    fn parse_decl(s: &str, declared: &[&str]) -> Args {
+        Args::parse_declared(s.split_whitespace().map(str::to_string), declared).unwrap()
+    }
+
     #[test]
     fn subcommand_and_flags() {
         let a = parse("prog train file.toml --k 8 --model sage --verbose");
@@ -148,5 +181,62 @@ mod tests {
         let a = parse("prog bench --quick");
         assert!(a.has("quick"));
         assert_eq!(a.subcommand.as_deref(), Some("bench"));
+    }
+
+    // ---- declared-switch registry -------------------------------------
+
+    #[test]
+    fn undeclared_switch_before_positional_is_misparsed() {
+        // the documented legacy ambiguity this registry exists to fix
+        let a = parse("prog run --fast input.txt");
+        assert!(!a.has("fast"));
+        assert_eq!(a.get("fast"), Some("input.txt"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn declared_switch_does_not_swallow_positional() {
+        let a = parse_decl("prog run --fast input.txt", &["fast"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("fast"), None);
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn declared_switch_between_flags() {
+        let a = parse_decl("prog train --fast --k 8 --dry-run --seed 3", &["fast", "dry-run"]);
+        assert!(a.has("fast"));
+        assert!(a.has("dry-run"));
+        assert_eq!(a.usize_or("k", 0).unwrap(), 8);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 3);
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn declared_switch_equals_forms() {
+        let a = parse_decl("prog --fast=true --slow=false", &["fast", "slow"]);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+        let bad = Args::parse_declared(
+            "prog --fast=7".split_whitespace().map(str::to_string),
+            &["fast"],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn undeclared_flags_still_take_values() {
+        let a = parse_decl("prog --k 8 --fast out.json", &["fast"]);
+        assert_eq!(a.get("k"), Some("8"));
+        assert!(a.has("fast"));
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn empty_registry_matches_legacy_parse() {
+        let legacy = parse("prog train --quick --k 8");
+        let decl = parse_decl("prog train --quick --k 8", &[]);
+        assert_eq!(legacy.has("quick"), decl.has("quick"));
+        assert_eq!(legacy.get("k"), decl.get("k"));
     }
 }

@@ -150,6 +150,55 @@ pub struct ExperimentConfig {
     pub mlp_epochs: usize,
     pub machines: usize,
     pub artifacts_dir: PathBuf,
+    /// When set, `train` exports a serving bundle (shards + classifier)
+    /// here (`[serve] export_dir`, or `--shards` on the CLI).
+    pub shards_out: Option<PathBuf>,
+    /// Serving-engine knobs (`[serve]` section).
+    pub serve: ServeConfig,
+}
+
+/// Configuration of the embedding-serving layer (`[serve]` section).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Shard-bundle directory the `serve`/`query` subcommands read.
+    pub shards_dir: PathBuf,
+    /// Max queries folded into one MLP forward.
+    pub batch_size: usize,
+    /// Engine worker threads (each owns a PJRT runtime).
+    pub workers: usize,
+    /// LRU result-cache entries (0 disables).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards_dir: PathBuf::from("shards"),
+            batch_size: 64,
+            workers: 2,
+            cache_capacity: 4096,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml(t: &Toml) -> Self {
+        let d = ServeConfig::default();
+        // negative values clamp to 0 instead of wrapping through `as usize`
+        // (workers = -1 must not become a 2^64-thread spawn request)
+        let nneg = |section: &str, key: &str, default: usize| {
+            t.int_or(section, key, default as i64).max(0) as usize
+        };
+        ServeConfig {
+            shards_dir: match t.get("serve", "shards_dir") {
+                Some(Value::Str(s)) => PathBuf::from(s),
+                _ => d.shards_dir,
+            },
+            batch_size: nneg("serve", "batch_size", d.batch_size),
+            workers: nneg("serve", "workers", d.workers),
+            cache_capacity: nneg("serve", "cache_capacity", d.cache_capacity),
+        }
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -168,6 +217,8 @@ impl Default for ExperimentConfig {
             mlp_epochs: 200,
             machines: 4,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
+            shards_out: None,
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -203,6 +254,11 @@ impl ExperimentConfig {
                 Some(Value::Str(s)) => PathBuf::from(s),
                 _ => d.artifacts_dir,
             },
+            shards_out: match t.get("serve", "export_dir") {
+                Some(Value::Str(s)) => Some(PathBuf::from(s)),
+                _ => None,
+            },
+            serve: ServeConfig::from_toml(t),
         })
     }
 }
@@ -242,6 +298,36 @@ machines = 2
         // defaults fill gaps
         assert_eq!(cfg.mlp_epochs, 200);
         assert_eq!(cfg.beta, 0.5);
+    }
+
+    #[test]
+    fn parses_serve_section() {
+        let t = Toml::parse(
+            "[serve]\nshards_dir = \"out/shards\"\nexport_dir = \"out/shards\"\n\
+             batch_size = 128\nworkers = 4\ncache_capacity = 100\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.serve.shards_dir, PathBuf::from("out/shards"));
+        assert_eq!(cfg.serve.batch_size, 128);
+        assert_eq!(cfg.serve.workers, 4);
+        assert_eq!(cfg.serve.cache_capacity, 100);
+        assert_eq!(cfg.shards_out, Some(PathBuf::from("out/shards")));
+    }
+
+    #[test]
+    fn serve_negative_values_clamp_to_zero() {
+        let t = Toml::parse("[serve]\nworkers = -1\ncache_capacity = -5\n").unwrap();
+        let s = ServeConfig::from_toml(&t);
+        assert_eq!(s.workers, 0);
+        assert_eq!(s.cache_capacity, 0);
+    }
+
+    #[test]
+    fn serve_defaults_without_section() {
+        let cfg = ExperimentConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.serve, ServeConfig::default());
+        assert_eq!(cfg.shards_out, None);
     }
 
     #[test]

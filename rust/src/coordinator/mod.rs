@@ -23,7 +23,10 @@ use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::partition::Partitioning;
 use crate::runtime::Runtime;
-use crate::train::{classify, EmbeddingStore, EvalReport, Mode, ModelKind};
+use crate::train::{
+    checkpoint, evaluate_classifier, train_classifier, EmbeddingStore, EvalReport, Mode,
+    ModelKind,
+};
 use crate::util::Stopwatch;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -48,6 +51,10 @@ pub struct CoordinatorConfig {
     pub max_retries: u32,
     /// Artifacts directory (manifest + HLO text).
     pub artifacts_dir: PathBuf,
+    /// When set, write a serving bundle here: one `LFS1` shard per
+    /// partition (emitted as each partition finishes), the trained
+    /// integration-MLP checkpoint, and `shards.json`.
+    pub shard_dir: Option<PathBuf>,
     /// Test hook: partition id that fails on its first attempt.
     pub inject_failure: Option<u32>,
 }
@@ -63,6 +70,7 @@ impl CoordinatorConfig {
             seed: 0,
             max_retries: 1,
             artifacts_dir,
+            shard_dir: None,
             inject_failure: None,
         }
     }
@@ -106,6 +114,17 @@ impl Coordinator {
     /// Run distributed training of `dataset` over `partitioning`.
     pub fn run(&self, dataset: &Dataset, partitioning: &Partitioning) -> Result<TrainReport> {
         let sw = Stopwatch::start();
+        // Invalidate any pre-existing bundle before writing the first
+        // shard: the manifest is deleted now and rewritten only after a
+        // fully successful run, so an aborted run can never leave a
+        // readable bundle that mixes shards from different runs.
+        if let Some(dir) = &self.cfg.shard_dir {
+            std::fs::create_dir_all(dir)?;
+            let manifest_path = crate::serve::ShardManifest::path_in(dir);
+            if manifest_path.exists() {
+                std::fs::remove_file(&manifest_path)?;
+            }
+        }
         let k = partitioning.k();
         let members = partitioning.members();
         let workers = self.cfg.machines.min(k).max(1);
@@ -163,6 +182,17 @@ impl Coordinator {
                             EmbeddingStore::new(dataset.num_nodes(), result.emb_dim)
                         });
                         st.insert(&nodes, &result.embeddings)?;
+                        // shard-per-partition export: write while the rest
+                        // of the cluster is still training
+                        if let Some(dir) = &self.cfg.shard_dir {
+                            crate::serve::write_shard(
+                                &dir.join(crate::serve::shard_file_name(part_id)),
+                                part_id,
+                                &nodes,
+                                &result.embeddings,
+                                result.emb_dim,
+                            )?;
+                        }
                         stats.push(PartitionStats {
                             part_id,
                             num_nodes: nodes.len(),
@@ -206,15 +236,51 @@ impl Coordinator {
 
         // ---- integration + evaluation on the leader ---------------------
         let leader_rt = Runtime::new(&self.cfg.artifacts_dir)?;
-        let eval = classify(
+        // preflight the pred artifact so a train-only manifest fails here,
+        // not after the full MLP training loop (compilation is cached for
+        // the evaluation pass)
+        leader_rt.load_for("mlp", dataset.labels.task_name(), "pred", store.n, 0)?;
+        let clf = train_classifier(
             &leader_rt,
             dataset,
             &store,
             self.cfg.mlp_epochs,
             self.cfg.seed ^ 0x11,
         )?;
+        let eval = evaluate_classifier(&leader_rt, dataset, &store, &clf)?;
 
         stats.sort_by_key(|s| s.part_id);
+
+        // ---- finalize the serving bundle --------------------------------
+        if let Some(dir) = &self.cfg.shard_dir {
+            checkpoint::save_tensors(&dir.join(crate::serve::CLASSIFIER_FILE), &clf.params)?;
+            let manifest = crate::serve::ShardManifest {
+                version: 1,
+                dataset: dataset.name.clone(),
+                task: clf.task.to_string(),
+                num_nodes: dataset.num_nodes(),
+                dim: store.dim,
+                classes: clf.classes,
+                classifier_file: crate::serve::CLASSIFIER_FILE.to_string(),
+                shards: stats
+                    .iter()
+                    .map(|s| crate::serve::ShardEntry {
+                        file: crate::serve::shard_file_name(s.part_id),
+                        part_id: s.part_id,
+                        rows: s.num_nodes,
+                    })
+                    .collect(),
+            };
+            manifest.save(dir)?;
+            log::info!(
+                "serving bundle written to {} ({} shards, {} nodes, dim {})",
+                dir.display(),
+                manifest.shards.len(),
+                manifest.num_nodes,
+                manifest.dim
+            );
+        }
+
         let max_partition_train_secs = stats
             .iter()
             .map(|s| s.train_secs)
@@ -272,6 +338,30 @@ mod tests {
         let report = Coordinator::new(cfg).run(&ds, &p).unwrap();
         let p0 = report.per_partition.iter().find(|s| s.part_id == 0).unwrap();
         assert_eq!(p0.attempts, 2, "partition 0 should have been retried");
+    }
+
+    #[test]
+    fn writes_serving_bundle_when_shard_dir_set() {
+        let Some(mut cfg) = cfg_if_built() else { return };
+        let dir = std::env::temp_dir().join(format!("lf_bundle_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.shard_dir = Some(dir.clone());
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        let report = Coordinator::new(cfg).run(&ds, &p).unwrap();
+        let store = crate::serve::ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.num_nodes(), ds.num_nodes());
+        assert_eq!(store.num_shards(), report.per_partition.len());
+        assert!(dir.join(crate::serve::CLASSIFIER_FILE).exists());
+        // shard rows must be the exact embeddings the store assembled
+        for s in &report.per_partition {
+            let (header, _) = crate::serve::read_shard(
+                &dir.join(crate::serve::shard_file_name(s.part_id)),
+            )
+            .unwrap();
+            assert_eq!(header.rows, s.num_nodes);
+        }
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

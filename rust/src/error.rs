@@ -25,6 +25,9 @@ pub enum Error {
     #[error("manifest error: {0}")]
     Manifest(String),
 
+    #[error("serve error: {0}")]
+    Serve(String),
+
     #[error("xla error: {0}")]
     Xla(String),
 }

@@ -6,11 +6,17 @@
 //!
 //! * **L3 (this crate)** — graph substrate, the Leiden-Fusion partitioner
 //!   and all baselines, the communication-free distributed training
-//!   coordinator, and the PJRT runtime that executes AOT-compiled models.
+//!   coordinator, the PJRT runtime that executes AOT-compiled models, and
+//!   the embedding **serving layer** ([`serve`]): `LFS1` per-partition
+//!   shards written by the coordinator, a lazily-loading
+//!   [`serve::ShardedEmbeddingStore`], and a batched, cached query
+//!   [`serve::Engine`] answering node-classification requests through the
+//!   trained integration MLP.
 //! * **L2/L1 (python/, build-time only)** — JAX GCN/GraphSAGE/MLP models on
 //!   Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! See `DESIGN.md` for the system inventory (including the shard format
+//! and query path under *Serving*) and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
 
 pub mod benchkit;
@@ -22,6 +28,7 @@ pub mod error;
 pub mod graph;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod train;
 pub mod util;

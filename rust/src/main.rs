@@ -4,45 +4,60 @@
 //!   partition  — partition a dataset and print §5.1 quality metrics
 //!   train      — full distributed pipeline: partition → per-machine GNN
 //!                training → embedding integration → MLP → eval
+//!                (`--shards <dir>` also exports a serving bundle)
 //!   pipeline   — `train` for LF vs baselines side by side
+//!   serve      — load a shard bundle and answer queries interactively
+//!   query      — one-shot classification of --nodes against a bundle
 //!   info       — dataset + artifact inventory
 //!
 //! Examples:
 //!   repro partition --dataset arxiv --method lf --k 8
 //!   repro train --config configs/arxiv_lf.toml
-//!   repro train --dataset karate --k 2 --epochs 40 --model gcn
+//!   repro train --dataset karate --k 2 --epochs 40 --model gcn --shards /tmp/karate_shards
+//!   repro serve --shards /tmp/karate_shards --warm
+//!   repro query --shards /tmp/karate_shards --nodes 0,5,9
 //!   repro info
 
 use leiden_fusion::benchkit::Table;
 use leiden_fusion::cli::Args;
-use leiden_fusion::config::ExperimentConfig;
+use leiden_fusion::config::{ExperimentConfig, ServeConfig, Toml};
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::data::{
     karate_dataset, synth_arxiv, synth_proteins, ArxivLikeConfig, Dataset,
     ProteinsLikeConfig,
 };
+use leiden_fusion::graph::NodeId;
 use leiden_fusion::partition::{by_name, PartitionQuality, Partitioning};
-use leiden_fusion::runtime::Manifest;
+use leiden_fusion::runtime::{default_artifacts_dir, Manifest};
+use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
 use leiden_fusion::train::ModelKind;
 use leiden_fusion::util::{fmt_duration, init_logging, Stopwatch};
 use leiden_fusion::{Error, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
 
 const USAGE: &str = "\
-repro — Leiden-Fusion distributed graph-embedding training
+repro — Leiden-Fusion distributed graph-embedding training + serving
 
 USAGE:
   repro partition --dataset <karate|arxiv|proteins> --method <lf|metis|lpa|random|metis+f|lpa+f>
                   [--k 4] [--n 0] [--seed 42]
   repro train     [--config file.toml] [--dataset arxiv] [--method lf] [--k 4]
                   [--model gcn|sage] [--mode inner|repli] [--epochs 80]
-                  [--machines 4] [--n 0] [--seed 42]
+                  [--machines 4] [--n 0] [--seed 42] [--shards dir]
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
+  repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
+                  [--artifacts dir] [--warm]   (interactive: node ids on stdin)
+  repro query     --shards dir --nodes 0,5,9 [--batch 64] [--workers 2]
   repro info      (dataset defaults + compiled artifact inventory)
 ";
 
+/// Boolean switches (never bind the next token as a value).
+const SWITCHES: &[&str] = &["help", "warm"];
+
 fn main() {
     init_logging();
-    let args = match Args::parse(std::env::args()) {
+    let args = match Args::parse_declared(std::env::args(), SWITCHES) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("{e}\n{USAGE}");
@@ -60,10 +75,16 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
     match args.subcommand.as_deref() {
         Some("partition") => cmd_partition(args),
         Some("train") => cmd_train(args),
         Some("pipeline") => cmd_pipeline(args),
+        Some("serve") => cmd_serve(args),
+        Some("query") => cmd_query(args),
         Some("info") => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -186,6 +207,9 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.machines = args.usize_or("machines", cfg.machines)?;
     cfg.dataset_n = args.usize_or("n", cfg.dataset_n)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if let Some(dir) = args.get("shards") {
+        cfg.shards_out = Some(PathBuf::from(dir));
+    }
     Ok(cfg)
 }
 
@@ -202,6 +226,7 @@ fn run_experiment(
     ccfg.epochs = cfg.epochs;
     ccfg.mlp_epochs = cfg.mlp_epochs;
     ccfg.seed = cfg.seed;
+    ccfg.shard_dir = cfg.shards_out.clone();
     let report = Coordinator::new(ccfg).run(ds, &p)?;
     Ok((p, report))
 }
@@ -249,6 +274,144 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.eval.metric_name,
         report.eval.test_metric
     );
+    if let Some(dir) = &cfg.shards_out {
+        println!(
+            "serving bundle: {} (query it with `repro serve --shards {}`)",
+            dir.display(),
+            dir.display()
+        );
+    }
+    Ok(())
+}
+
+// ---- serving --------------------------------------------------------------
+
+/// Resolve serve options (config file < CLI flags), open the shard store,
+/// and start the engine.
+fn serve_setup(args: &Args) -> Result<(Arc<ShardedEmbeddingStore>, Engine, ServeConfig)> {
+    let mut scfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            ServeConfig::from_toml(&Toml::parse(&text)?)
+        }
+        None => ServeConfig::default(),
+    };
+    if let Some(dir) = args.get("shards") {
+        scfg.shards_dir = PathBuf::from(dir);
+    }
+    scfg.batch_size = args.usize_or("batch", scfg.batch_size)?;
+    scfg.workers = args.usize_or("workers", scfg.workers)?;
+    scfg.cache_capacity = args.usize_or("cache", scfg.cache_capacity)?;
+
+    let store = Arc::new(ShardedEmbeddingStore::open(&scfg.shards_dir)?);
+    let engine = Engine::new(
+        EngineConfig {
+            artifacts_dir: match args.get("artifacts") {
+                Some(p) => PathBuf::from(p),
+                None => default_artifacts_dir(),
+            },
+            batch_size: scfg.batch_size,
+            workers: scfg.workers,
+            cache_capacity: scfg.cache_capacity,
+        },
+        Arc::clone(&store),
+    )?;
+    Ok((store, engine, scfg))
+}
+
+fn parse_node_list(text: &str) -> Result<Vec<NodeId>> {
+    text.split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<NodeId>()
+                .map_err(|_| Error::Config(format!("bad node id {t:?}")))
+        })
+        .collect()
+}
+
+fn print_engine_stats(engine: &Engine) {
+    let st = engine.stats();
+    let hit_pct = if st.requests > 0 {
+        st.cache_hits as f64 / st.requests as f64 * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "requests {} | cache hits {} ({hit_pct:.1}%) | batches {} | computed {}",
+        st.requests, st.cache_hits, st.batches, st.computed
+    );
+}
+
+fn print_predictions(preds: &[leiden_fusion::serve::Prediction]) {
+    let mut t = Table::new("Predictions", &["node", "class", "score"]);
+    for p in preds {
+        t.row(vec![
+            p.node.to_string(),
+            p.class.to_string(),
+            format!("{:.4}", p.score),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let nodes_arg = args
+        .get("nodes")
+        .ok_or_else(|| Error::Config("query needs --nodes 0,5,9".into()))?;
+    let nodes = parse_node_list(nodes_arg)?;
+    let (store, engine, _) = serve_setup(args)?;
+    println!(
+        "bundle {} ({} shards, {} nodes, dim {})",
+        store.dir().display(),
+        store.num_shards(),
+        store.num_nodes(),
+        store.dim()
+    );
+    let preds = engine.query(&nodes)?;
+    print_predictions(&preds);
+    print_engine_stats(&engine);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::io::BufRead;
+    let (store, engine, scfg) = serve_setup(args)?;
+    let m = store.manifest();
+    println!(
+        "serving {} from {}: {} shards, {} nodes, dim {}, {} logit columns, \
+         batch ≤ {}, {} workers",
+        m.dataset,
+        store.dir().display(),
+        store.num_shards(),
+        store.num_nodes(),
+        store.dim(),
+        m.classes,
+        engine.max_batch(),
+        scfg.workers.max(1),
+    );
+    if args.has("warm") {
+        let sw = Stopwatch::start();
+        store.prefetch_all()?;
+        println!("prefetched {} shards in {}", store.num_shards(), fmt_duration(sw.secs()));
+    }
+    println!("enter node ids (e.g. `0,5,9`), `stats`, or `quit`:");
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match line {
+            "quit" | "exit" => break,
+            "stats" => print_engine_stats(&engine),
+            _ => match parse_node_list(line).and_then(|ns| engine.query(&ns)) {
+                Ok(preds) => print_predictions(&preds),
+                Err(e) => eprintln!("error: {e}"),
+            },
+        }
+    }
+    print_engine_stats(&engine);
     Ok(())
 }
 

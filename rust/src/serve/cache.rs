@@ -1,0 +1,203 @@
+//! Fixed-capacity LRU cache for query results.
+//!
+//! Arena-backed doubly-linked list + `HashMap` index: `get`/`put` are O(1)
+//! with no allocation after the arena fills. The serving engine shares one
+//! cache behind a mutex; entries are whole predictions, so a hit skips the
+//! PJRT forward entirely.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+const NIL: usize = usize::MAX;
+
+struct Entry<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Least-recently-used map with a hard capacity. `cap == 0` disables
+/// caching (every `get` misses, every `put` is dropped).
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    cap: usize,
+    map: HashMap<K, usize>,
+    arena: Vec<Entry<K, V>>,
+    head: usize,
+    tail: usize,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    pub fn new(cap: usize) -> Self {
+        LruCache {
+            cap,
+            map: HashMap::with_capacity(cap.min(1 << 20)),
+            arena: Vec::with_capacity(cap.min(1 << 20)),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Unlink `idx` from the recency list (does not free it).
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.arena[idx].prev, self.arena[idx].next);
+        if prev != NIL {
+            self.arena[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.arena[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Link `idx` at the head (most recently used).
+    fn link_front(&mut self, idx: usize) {
+        self.arena[idx].prev = NIL;
+        self.arena[idx].next = self.head;
+        if self.head != NIL {
+            self.arena[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Look up `key`, marking it most recently used on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let idx = *self.map.get(key)?;
+        if idx != self.head {
+            self.unlink(idx);
+            self.link_front(idx);
+        }
+        Some(&self.arena[idx].value)
+    }
+
+    /// Insert or refresh `key`, evicting the LRU entry at capacity.
+    pub fn put(&mut self, key: K, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(&idx) = self.map.get(&key) {
+            self.arena[idx].value = value;
+            if idx != self.head {
+                self.unlink(idx);
+                self.link_front(idx);
+            }
+            return;
+        }
+        let idx = if self.map.len() >= self.cap {
+            // reuse the LRU slot (there is no remove(), so the arena never
+            // has holes — eviction always recycles the tail in place)
+            let victim = self.tail;
+            self.unlink(victim);
+            let old_key = self.arena[victim].key.clone();
+            self.map.remove(&old_key);
+            self.arena[victim].key = key.clone();
+            self.arena[victim].value = value;
+            victim
+        } else {
+            self.arena.push(Entry { key: key.clone(), value, prev: NIL, next: NIL });
+            self.arena.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.link_front(idx);
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.arena.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_and_misses() {
+        let mut c = LruCache::new(2);
+        assert!(c.get(&1).is_none());
+        c.put(1, "a");
+        c.put(2, "b");
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&2), Some(&"b"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.put(1, "a");
+        c.put(2, "b");
+        c.get(&1); // 2 is now LRU
+        c.put(3, "c");
+        assert!(c.get(&2).is_none(), "LRU entry should be evicted");
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&3), Some(&"c"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn put_refreshes_existing_key() {
+        let mut c = LruCache::new(2);
+        c.put(1, "a");
+        c.put(2, "b");
+        c.put(1, "a2"); // refresh: 2 becomes LRU
+        c.put(3, "c");
+        assert_eq!(c.get(&1), Some(&"a2"));
+        assert!(c.get(&2).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = LruCache::new(0);
+        c.put(1, "a");
+        assert!(c.get(&1).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn heavy_churn_keeps_invariants() {
+        let mut c = LruCache::new(8);
+        for i in 0..1000u32 {
+            c.put(i % 13, i);
+            assert!(c.len() <= 8);
+        }
+        // the 8 most recently inserted distinct keys survive
+        let mut present = 0;
+        for k in 0..13u32 {
+            if c.get(&k).is_some() {
+                present += 1;
+            }
+        }
+        assert_eq!(present, 8);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = LruCache::new(4);
+        c.put(1, 1);
+        c.clear();
+        assert!(c.is_empty());
+        c.put(2, 2);
+        assert_eq!(c.get(&2), Some(&2));
+    }
+}

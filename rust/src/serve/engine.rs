@@ -1,0 +1,480 @@
+//! Concurrent query engine: worker thread pool + request batching over the
+//! PJRT MLP classifier.
+//!
+//! Clients call [`Engine::query`] with node ids; requests land in a shared
+//! queue. Each worker owns a thread-local [`Runtime`] (PJRT clients are not
+//! `Send`, exactly as in the training coordinator), drains up to
+//! `batch_size` requests, gathers the embedding rows from the shared
+//! [`ShardedEmbeddingStore`], packs them into the classifier bucket's `x`,
+//! and runs **one** MLP forward for the whole batch. The MLP is row-wise,
+//! so batched logits are bit-identical to the offline `classify` path.
+//!
+//! An LRU result cache sits in front of the queue: hits are answered on
+//! the client thread without waking a worker.
+
+use super::cache::LruCache;
+use super::store::ShardedEmbeddingStore;
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+use crate::runtime::{ArtifactMeta, Manifest, Runtime, Tensor};
+use crate::train::checkpoint::load_tensors;
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Engine tuning knobs (see the `[serve]` config section).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Compiled-artifact directory (manifest + HLO text).
+    pub artifacts_dir: PathBuf,
+    /// Max queries folded into one MLP forward. Clamped to the artifact's
+    /// node bucket.
+    pub batch_size: usize,
+    /// Worker threads, each with a private PJRT runtime.
+    pub workers: usize,
+    /// LRU result-cache entries (0 disables caching).
+    pub cache_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    /// Knob defaults come from [`crate::config::ServeConfig`] — the one
+    /// source of truth shared with the `[serve]` config section and CLI.
+    fn default() -> Self {
+        let d = crate::config::ServeConfig::default();
+        EngineConfig {
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            batch_size: d.batch_size,
+            workers: d.workers,
+            cache_capacity: d.cache_capacity,
+        }
+    }
+}
+
+/// Answer for one queried node. `logits` is the raw MLP output row and is
+/// the ground truth; `class`/`score` are conveniences derived from it.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub node: NodeId,
+    /// Argmax over the logit columns. For **multiclass** bundles this is
+    /// the offline `classify` evaluation rule (bucketed class dims
+    /// included). For **multilabel** bundles the tasks are independent
+    /// binary targets — this is merely the highest-scoring task; read
+    /// per-task scores from `logits` instead.
+    pub class: usize,
+    /// Logit of the predicted class.
+    pub score: f32,
+    /// Full logit row (artifact's `c` columns; per-task scores for
+    /// multilabel).
+    pub logits: Vec<f32>,
+}
+
+/// Monotonic serving counters (snapshot via [`Engine::stats`]).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub batches: u64,
+    /// Requests answered by a PJRT forward (requests - cache_hits - errors).
+    pub computed: u64,
+}
+
+struct Request {
+    idx: usize,
+    node: NodeId,
+    tx: mpsc::Sender<(usize, Result<Prediction>)>,
+}
+
+struct QueueState {
+    q: VecDeque<Request>,
+    live_workers: usize,
+    /// Set when a worker fails to initialise; poisons future queries.
+    poisoned: Option<String>,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    notify: Condvar,
+    shutdown: AtomicBool,
+    store: Arc<ShardedEmbeddingStore>,
+    cache: Mutex<LruCache<NodeId, Prediction>>,
+    /// Trained integration-MLP parameters (from the shard bundle).
+    params: Vec<Tensor>,
+    /// Pred-artifact metadata resolved at construction time.
+    meta: ArtifactMeta,
+    cfg: EngineConfig,
+    requests: AtomicU64,
+    cache_hits: AtomicU64,
+    batches: AtomicU64,
+    computed: AtomicU64,
+}
+
+/// The serving engine. `&self` methods are thread-safe; clone node lists
+/// into it from as many client threads as you like.
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Validate the bundle against the artifact manifest and start the
+    /// worker pool. Fails fast (before any thread spawns) if the classifier
+    /// checkpoint or artifact shapes don't line up with the shards.
+    pub fn new(cfg: EngineConfig, store: Arc<ShardedEmbeddingStore>) -> Result<Engine> {
+        let man = Manifest::load(&cfg.artifacts_dir)?;
+        let sm = store.manifest();
+        // prefer a bucket that fits the whole batch; otherwise take the
+        // largest available and clamp the batch to it
+        let meta = match man.select("mlp", &sm.task, "pred", cfg.batch_size.max(1), 0) {
+            Ok(m) => m.clone(),
+            Err(_) => man
+                .artifacts
+                .iter()
+                .filter(|a| a.model == "mlp" && a.task == sm.task && a.role == "pred")
+                .max_by_key(|a| a.dims.n)
+                .ok_or_else(|| {
+                    Error::Serve(format!("no mlp/{}/pred artifact in manifest", sm.task))
+                })?
+                .clone(),
+        };
+        if meta.dims.f != store.dim() {
+            return Err(Error::Serve(format!(
+                "classifier artifact expects dim {} embeddings, shards have {}",
+                meta.dims.f,
+                store.dim()
+            )));
+        }
+        if meta.dims.c != sm.classes {
+            return Err(Error::Serve(format!(
+                "classifier artifact has {} logit columns, shard bundle trained {}",
+                meta.dims.c, sm.classes
+            )));
+        }
+        let params = load_tensors(&store.dir().join(&sm.classifier_file))?;
+        if params.len() != meta.num_params() {
+            return Err(Error::Serve(format!(
+                "classifier checkpoint has {} tensors, artifact expects {}",
+                params.len(),
+                meta.num_params()
+            )));
+        }
+        for (t, spec) in params.iter().zip(&meta.inputs) {
+            if t.len() != spec.num_elements() {
+                return Err(Error::Serve(format!(
+                    "classifier tensor {} has {} elements, artifact expects {}",
+                    spec.name,
+                    t.len(),
+                    spec.num_elements()
+                )));
+            }
+        }
+
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                live_workers: workers,
+                poisoned: None,
+            }),
+            notify: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            store,
+            cache: Mutex::new(LruCache::new(cfg.cache_capacity)),
+            params,
+            meta,
+            cfg,
+            requests: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            computed: AtomicU64::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let worker_shared = Arc::clone(&shared);
+            match std::thread::Builder::new()
+                .name(format!("lf-serve-{wid}"))
+                .spawn(move || worker_loop(wid, worker_shared))
+            {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // release any already-spawned workers before bailing
+                    shared.shutdown.store(true, Ordering::Release);
+                    shared.notify.notify_all();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(Error::Serve(format!("cannot spawn worker: {e}")));
+                }
+            }
+        }
+        Ok(Engine { shared, workers: handles })
+    }
+
+    /// Classify a batch of nodes. Blocks until every answer arrives;
+    /// results come back in input order. Unknown node ids fail the whole
+    /// call (partial answers would silently skew downstream aggregation).
+    pub fn query(&self, nodes: &[NodeId]) -> Result<Vec<Prediction>> {
+        if nodes.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.shared.requests.fetch_add(nodes.len() as u64, Ordering::Relaxed);
+        let mut out: Vec<Option<Prediction>> = vec![None; nodes.len()];
+
+        // ---- cache fast path on the client thread -----------------------
+        // a poisoned cache mutex degrades to cache-off (all misses), the
+        // same way the worker insert path does — it must not fail queries
+        let mut misses: Vec<(usize, NodeId)> = Vec::new();
+        match self.shared.cache.lock() {
+            Ok(mut cache) => {
+                for (i, &v) in nodes.iter().enumerate() {
+                    match cache.get(&v) {
+                        Some(p) => out[i] = Some(p.clone()),
+                        None => misses.push((i, v)),
+                    }
+                }
+            }
+            Err(_) => misses.extend(nodes.iter().copied().enumerate()),
+        }
+        let hits = nodes.len() - misses.len();
+        self.shared.cache_hits.fetch_add(hits as u64, Ordering::Relaxed);
+
+        if !misses.is_empty() {
+            let (tx, rx) = mpsc::channel();
+            {
+                let mut st = self
+                    .shared
+                    .state
+                    .lock()
+                    .map_err(|_| Error::Serve("queue lock poisoned".into()))?;
+                if let Some(msg) = &st.poisoned {
+                    return Err(Error::Serve(format!("engine poisoned: {msg}")));
+                }
+                if self.shared.shutdown.load(Ordering::Acquire) || st.live_workers == 0 {
+                    return Err(Error::Serve("engine is shut down".into()));
+                }
+                for &(idx, node) in &misses {
+                    st.q.push_back(Request { idx, node, tx: tx.clone() });
+                }
+            }
+            self.shared.notify.notify_all();
+            drop(tx);
+            for _ in 0..misses.len() {
+                let (idx, res) = rx.recv().map_err(|_| {
+                    Error::Serve("serving workers exited mid-query".into())
+                })?;
+                out[idx] = Some(res?);
+            }
+        }
+        Ok(out.into_iter().map(|p| p.expect("every slot answered")).collect())
+    }
+
+    /// Convenience single-node query.
+    pub fn query_one(&self, node: NodeId) -> Result<Prediction> {
+        Ok(self.query(&[node])?.pop().expect("one answer"))
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            computed: self.shared.computed.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn store(&self) -> &ShardedEmbeddingStore {
+        &self.shared.store
+    }
+
+    /// Effective max batch (config clamped to the artifact bucket).
+    pub fn max_batch(&self) -> usize {
+        self.shared.cfg.batch_size.clamp(1, self.shared.meta.dims.n)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.notify.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Retires its worker on drop — including an unwind out of the batch
+/// loop — so a panicking worker still decrements `live_workers` and the
+/// last one to die fails queued requests instead of stranding clients.
+struct RetireGuard {
+    shared: Arc<Shared>,
+    poison: Option<String>,
+}
+
+impl Drop for RetireGuard {
+    fn drop(&mut self) {
+        retire_worker(&self.shared, self.poison.take());
+    }
+}
+
+/// Mark this worker dead; if it is the last one, fail queued requests so
+/// no client blocks forever. `poison` carries an init-failure message.
+fn retire_worker(shared: &Shared, poison: Option<String>) {
+    let mut st = match shared.state.lock() {
+        Ok(st) => st,
+        Err(_) => return,
+    };
+    st.live_workers -= 1;
+    if let Some(msg) = poison {
+        if st.poisoned.is_none() {
+            st.poisoned = Some(msg);
+        }
+    }
+    if st.live_workers == 0 || st.poisoned.is_some() {
+        let reason = st
+            .poisoned
+            .clone()
+            .unwrap_or_else(|| "engine shut down".to_string());
+        for r in st.q.drain(..) {
+            let _ = r.tx.send((r.idx, Err(Error::Serve(reason.clone()))));
+        }
+    }
+    drop(st);
+    shared.notify.notify_all();
+}
+
+fn worker_loop(wid: usize, shared: Arc<Shared>) {
+    // All exit paths — normal shutdown, init failure, and panics in the
+    // batch loop — retire the worker through this guard.
+    let mut guard = RetireGuard { shared: Arc::clone(&shared), poison: None };
+    // Thread-local PJRT runtime + compiled classifier, as in the trainer.
+    let init = Runtime::new(&shared.cfg.artifacts_dir)
+        .and_then(|rt| rt.load(&shared.meta.name).map(|exe| (rt, exe)));
+    let (_rt, exe) = match init {
+        Ok(pair) => pair,
+        Err(e) => {
+            log::error!("serve worker {wid}: init failed: {e}");
+            guard.poison = Some(e.to_string());
+            return;
+        }
+    };
+    let dims = exe.meta.dims.clone();
+    let batch_cap = shared.cfg.batch_size.clamp(1, dims.n);
+    log::debug!(
+        "serve worker {wid} up: artifact {} (bucket n={}, f={}, c={})",
+        exe.meta.name,
+        dims.n,
+        dims.f,
+        dims.c
+    );
+    // Reusable PJRT input list: params are cloned once per worker, and the
+    // final slot is the bucket-sized `x` buffer rewritten per batch — the
+    // hot path allocates nothing.
+    let mut inputs: Vec<Tensor> = shared.params.iter().cloned().collect();
+    inputs.push(Tensor::F32(vec![0f32; dims.n * dims.f]));
+    let mut prev_rows = 0usize;
+
+    loop {
+        let batch: Vec<Request> = {
+            let mut st = match shared.state.lock() {
+                Ok(st) => st,
+                Err(_) => return, // guard retires
+            };
+            loop {
+                if !st.q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) || st.poisoned.is_some() {
+                    return; // guard retires after `st` unlocks
+                }
+                st = match shared.notify.wait(st) {
+                    Ok(st) => st,
+                    Err(_) => return,
+                };
+            }
+            let take = st.q.len().min(batch_cap);
+            st.q.drain(..take).collect()
+        };
+        process_batch(&shared, &exe, &dims, &mut inputs, &mut prev_rows, batch);
+    }
+}
+
+/// Run one batch through the classifier. `inputs` is the worker's reusable
+/// PJRT input list (params + trailing `x` buffer); `prev_rows` tracks how
+/// many `x` rows the previous batch wrote so only the stale tail is
+/// re-zeroed (the MLP is row-wise, but deterministic buffers keep unused
+/// logit rows reproducible).
+fn process_batch(
+    shared: &Shared,
+    exe: &crate::runtime::Executable,
+    dims: &crate::runtime::Dims,
+    inputs: &mut [Tensor],
+    prev_rows: &mut usize,
+    batch: Vec<Request>,
+) {
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    let f = dims.f;
+    let c = dims.c;
+
+    // Gather embedding rows into the reusable x buffer; requests whose
+    // node is unknown (or whose shard fails to load) are answered
+    // individually with an error.
+    let mut live: Vec<Request> = Vec::with_capacity(batch.len());
+    {
+        let x = match inputs.last_mut() {
+            Some(Tensor::F32(x)) => x,
+            _ => unreachable!("worker inputs always end with the f32 x buffer"),
+        };
+        for r in batch {
+            let row = live.len();
+            match shared.store.copy_embedding(r.node, &mut x[row * f..(row + 1) * f]) {
+                Ok(()) => live.push(r),
+                Err(e) => {
+                    let _ = r.tx.send((r.idx, Err(e)));
+                }
+            }
+        }
+        if live.len() < *prev_rows {
+            x[live.len() * f..*prev_rows * f].fill(0.0);
+        }
+    }
+    *prev_rows = live.len();
+    if live.is_empty() {
+        return;
+    }
+
+    // One MLP forward for the whole batch.
+    let logits = match exe.run(inputs).and_then(|out| {
+        out.into_iter()
+            .next()
+            .ok_or_else(|| Error::Serve("pred artifact returned no outputs".into()))?
+            .as_f32()
+            .map(<[f32]>::to_vec)
+    }) {
+        Ok(l) => l,
+        Err(e) => {
+            let msg = e.to_string();
+            for r in live {
+                let _ = r.tx.send((r.idx, Err(Error::Serve(msg.clone()))));
+            }
+            return;
+        }
+    };
+
+    let mut cache = shared.cache.lock().ok();
+    for (row, r) in live.into_iter().enumerate() {
+        let slice = &logits[row * c..(row + 1) * c];
+        let (class, score) = slice
+            .iter()
+            .enumerate()
+            .fold((0, f32::NEG_INFINITY), |(bi, bs), (i, &v)| {
+                if v > bs { (i, v) } else { (bi, bs) }
+            });
+        let p = Prediction { node: r.node, class, score, logits: slice.to_vec() };
+        if let Some(cache) = cache.as_mut() {
+            cache.put(r.node, p.clone());
+        }
+        shared.computed.fetch_add(1, Ordering::Relaxed);
+        let _ = r.tx.send((r.idx, Ok(p)));
+    }
+}

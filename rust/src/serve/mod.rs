@@ -1,0 +1,36 @@
+//! Embedding serving subsystem: from training output to answered queries.
+//!
+//! The paper stops at offline evaluation; this layer carries the same
+//! per-partition independence through to inference, turning a coordinator
+//! run into a queryable model:
+//!
+//! 1. **Shards** ([`shard`]) — the coordinator writes each partition's
+//!    owned-node embeddings as a versioned `LFS1` binary file the moment
+//!    that partition finishes training, plus a JSON manifest
+//!    (`shards.json`) and the trained integration-MLP checkpoint.
+//!    Leiden-Fusion partitions are disjoint connected components, so the
+//!    shards are an exact, communication-free cover of the node set.
+//! 2. **Store** ([`store`]) — [`ShardedEmbeddingStore`] opens a shard
+//!    directory, builds a `NodeId → (shard, row)` ownership index from
+//!    headers alone, and loads embedding rows lazily on first touch.
+//! 3. **Engine** ([`engine`]) — a worker thread pool batches
+//!    node-classification queries (up to `batch_size` per PJRT forward)
+//!    against the trained MLP, with an LRU result cache ([`cache`]) in
+//!    front. Batched logits are bit-identical to the offline `classify`
+//!    path because the MLP is row-wise.
+//!
+//! Driven by the `serve` / `query` CLI subcommands and measured by
+//! `benches/bench_serve.rs` (QPS, p50/p99 latency).
+
+pub mod cache;
+pub mod engine;
+pub mod shard;
+pub mod store;
+
+pub use cache::LruCache;
+pub use engine::{Engine, EngineConfig, EngineStats, Prediction};
+pub use shard::{
+    read_shard, read_shard_header, shard_file_name, write_shard, ShardEntry, ShardHeader,
+    ShardManifest, CLASSIFIER_FILE, SHARD_MANIFEST_FILE,
+};
+pub use store::ShardedEmbeddingStore;

@@ -1,0 +1,452 @@
+//! `LFS1` embedding shards: the on-disk contract between training and
+//! serving.
+//!
+//! Because Leiden-Fusion partitions are disjoint connected components, the
+//! global embedding matrix shards naturally by partition: each shard holds
+//! the owned-node rows of exactly one partition, written by the coordinator
+//! the moment that partition finishes training. A JSON shard manifest
+//! (`shards.json`) ties the shard files together with the trained
+//! integration-classifier checkpoint (`LFC1`, see `train/checkpoint.rs`,
+//! whose idiom this format follows).
+//!
+//! Shard file layout (all little-endian):
+//!
+//! ```text
+//! magic   "LFS1"            4 bytes
+//! part_id u32               owning partition
+//! rows    u64               node count
+//! dim     u32               embedding width
+//! nodes   rows × u32        global node ids, row order
+//! data    rows·dim × f32    embeddings, row-major
+//! trailer u64               == rows (truncation guard)
+//! ```
+
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+use crate::util::json::{num, obj, s, Json};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+pub const SHARD_MAGIC: &[u8; 4] = b"LFS1";
+
+/// Manifest file name inside a shard directory (distinct from the runtime's
+/// `manifest.json` to keep the two contracts visually separate).
+pub const SHARD_MANIFEST_FILE: &str = "shards.json";
+
+/// Classifier checkpoint file name inside a shard directory.
+pub const CLASSIFIER_FILE: &str = "classifier.lfc";
+
+/// Canonical shard file name for a partition.
+pub fn shard_file_name(part_id: u32) -> String {
+    format!("part{part_id}.lfs")
+}
+
+/// Header of one shard: everything except the embedding rows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub part_id: u32,
+    pub rows: usize,
+    pub dim: usize,
+    /// Global node ids in row order.
+    pub nodes: Vec<NodeId>,
+}
+
+/// Write one partition's owned-node embeddings as an `LFS1` shard.
+pub fn write_shard(
+    path: &Path,
+    part_id: u32,
+    nodes: &[NodeId],
+    emb: &[f32],
+    dim: usize,
+) -> Result<()> {
+    if emb.len() != nodes.len() * dim {
+        return Err(Error::Serve(format!(
+            "shard block {} != {} nodes × dim {dim}",
+            emb.len(),
+            nodes.len()
+        )));
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(SHARD_MAGIC)?;
+    out.write_all(&part_id.to_le_bytes())?;
+    out.write_all(&(nodes.len() as u64).to_le_bytes())?;
+    out.write_all(&(dim as u32).to_le_bytes())?;
+    for &v in nodes {
+        out.write_all(&v.to_le_bytes())?;
+    }
+    for &x in emb {
+        out.write_all(&x.to_le_bytes())?;
+    }
+    out.write_all(&(nodes.len() as u64).to_le_bytes())?; // trailer
+    Ok(())
+}
+
+/// Read and validate the fixed-size part of the header, then the node ids.
+///
+/// `file_len` is the on-disk size: the declared `rows`/`dim` are checked
+/// against it (with overflow-safe arithmetic) *before* any allocation, so
+/// a corrupt or malicious header cannot trigger a huge `vec!` or a
+/// capacity panic — it gets a clean `Error::Serve` instead. This doubles
+/// as the truncation guard: a file shorter than the header implies fails
+/// here, before any embedding bytes are touched.
+fn read_header(r: &mut impl Read, path: &Path, file_len: u64) -> Result<ShardHeader> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != SHARD_MAGIC {
+        return Err(Error::Serve(format!("{}: not an LFS1 shard", path.display())));
+    }
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let part_id = u32::from_le_bytes(b4);
+    r.read_exact(&mut b8)?;
+    let rows64 = u64::from_le_bytes(b8);
+    r.read_exact(&mut b4)?;
+    let dim64 = u32::from_le_bytes(b4) as u64;
+    let expect = rows64
+        .checked_mul(4)
+        .and_then(|ids| rows64.checked_mul(dim64)?.checked_mul(4)?.checked_add(ids))
+        .and_then(|body| body.checked_add((4 + 4 + 8 + 4) + 8));
+    match expect {
+        Some(e) if e == file_len => {}
+        _ => {
+            return Err(Error::Serve(format!(
+                "{}: shard corrupt or truncated ({file_len} bytes, header declares \
+                 {rows64} rows × dim {dim64})",
+                path.display()
+            )))
+        }
+    }
+    let rows = rows64 as usize;
+    let dim = dim64 as usize;
+    let mut nodes = vec![0 as NodeId; rows];
+    for v in nodes.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *v = NodeId::from_le_bytes(b4);
+    }
+    Ok(ShardHeader { part_id, rows, dim, nodes })
+}
+
+/// Read only the header + ownership ids of a shard (the length-based
+/// corruption/truncation guard runs before any allocation; embedding
+/// bytes stay untouched).
+pub fn read_shard_header(path: &Path) -> Result<ShardHeader> {
+    let file = std::fs::File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    read_header(&mut r, path, file_len)
+}
+
+/// Read a full shard: header, embedding rows, and trailer check.
+pub fn read_shard(path: &Path) -> Result<(ShardHeader, Vec<f32>)> {
+    let file = std::fs::File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let header = read_header(&mut r, path, file_len)?;
+    let mut b4 = [0u8; 4];
+    let mut data = vec![0f32; header.rows * header.dim];
+    for x in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *x = f32::from_le_bytes(b4);
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    if u64::from_le_bytes(b8) as usize != header.rows {
+        return Err(Error::Serve(format!("{}: shard truncated", path.display())));
+    }
+    Ok((header, data))
+}
+
+/// One shard file as listed in the manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub file: String,
+    pub part_id: u32,
+    pub rows: usize,
+}
+
+/// `shards.json` — inventory of a serving bundle: shard files, global
+/// dimensions, and the classifier checkpoint the engine must load.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub version: usize,
+    pub dataset: String,
+    /// `multiclass` | `multilabel` — selects the pred artifact family.
+    pub task: String,
+    /// Total owned nodes across all shards (== dataset nodes).
+    pub num_nodes: usize,
+    /// Embedding width; must match the MLP artifact's `f`.
+    pub dim: usize,
+    /// Logit columns of the classifier artifact (bucketed class dim).
+    pub classes: usize,
+    pub classifier_file: String,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    pub fn path_in(dir: &Path) -> std::path::PathBuf {
+        dir.join(SHARD_MANIFEST_FILE)
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let shards = Json::Arr(
+            self.shards
+                .iter()
+                .map(|e| {
+                    obj(vec![
+                        ("file", s(&e.file)),
+                        ("part_id", num(e.part_id as f64)),
+                        ("rows", num(e.rows as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let root = obj(vec![
+            ("version", num(self.version as f64)),
+            ("dataset", s(&self.dataset)),
+            ("task", s(&self.task)),
+            ("num_nodes", num(self.num_nodes as f64)),
+            ("dim", num(self.dim as f64)),
+            ("classes", num(self.classes as f64)),
+            ("classifier_file", s(&self.classifier_file)),
+            ("shards", shards),
+        ]);
+        std::fs::write(Self::path_in(dir), root.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = Self::path_in(dir);
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Serve(format!(
+                "cannot read {} (run `repro train --shards <dir>` first?): {e}",
+                path.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let gets = |k: &str| -> Result<String> {
+            root.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| Error::Serve(format!("shard manifest missing {k:?}")))
+        };
+        let getn = |k: &str| -> Result<usize> {
+            root.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Serve(format!("shard manifest missing {k:?}")))
+        };
+        let shards = root
+            .get("shards")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Serve("shard manifest missing shards array".into()))?
+            .iter()
+            .map(|e| {
+                Ok(ShardEntry {
+                    file: e
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| Error::Serve("shard entry missing file".into()))?
+                        .to_string(),
+                    part_id: e
+                        .get("part_id")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| Error::Serve("shard entry missing part_id".into()))?
+                        as u32,
+                    rows: e
+                        .get("rows")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| Error::Serve("shard entry missing rows".into()))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardManifest {
+            version: getn("version")?,
+            dataset: gets("dataset")?,
+            task: gets("task")?,
+            num_nodes: getn("num_nodes")?,
+            dim: getn("dim")?,
+            classes: getn("classes")?,
+            classifier_file: gets("classifier_file")?,
+            shards,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lf_shard_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_simple() {
+        let path = tmp("simple.lfs");
+        let nodes = vec![4, 0, 9];
+        let emb = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        write_shard(&path, 7, &nodes, &emb, 2).unwrap();
+        let header = read_shard_header(&path).unwrap();
+        assert_eq!(header.part_id, 7);
+        assert_eq!(header.rows, 3);
+        assert_eq!(header.dim, 2);
+        assert_eq!(header.nodes, nodes);
+        let (h2, data) = read_shard(&path).unwrap();
+        assert_eq!(h2, header);
+        assert_eq!(data, emb);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_block_size_mismatch() {
+        let path = tmp("bad_block.lfs");
+        assert!(write_shard(&path, 0, &[1, 2], &[0.0; 3], 2).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_header_without_allocating() {
+        // magic + part_id + rows = u64::MAX + dim: must be a clean error,
+        // not a capacity panic / OOM from trusting the declared size
+        let path = tmp("absurd.lfs");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(SHARD_MAGIC);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&8u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_shard_header(&path).is_err());
+        assert!(read_shard(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("magic.lfs");
+        std::fs::write(&path, b"LFC1\x00\x00\x00\x00").unwrap();
+        assert!(read_shard_header(&path).is_err());
+        assert!(read_shard(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Property: save→load preserves every embedding bit-exactly, for
+    /// arbitrary shapes including empty shards, NaN, ±0.0, subnormals, ∞.
+    #[test]
+    fn prop_roundtrip_bit_exact() {
+        prop::check(
+            "lfs1-roundtrip",
+            40,
+            0xEED5,
+            |rng: &mut Rng| {
+                let rows = rng.index(50);
+                let dim = 1 + rng.index(16);
+                let nodes: Vec<NodeId> =
+                    (0..rows).map(|_| rng.index(1 << 20) as NodeId).collect();
+                let emb: Vec<f32> = (0..rows * dim)
+                    .map(|i| match rng.index(8) {
+                        0 => f32::NAN,
+                        1 => f32::INFINITY,
+                        2 => -0.0,
+                        3 => f32::MIN_POSITIVE / 2.0, // subnormal
+                        _ => (rng.f64() * 2.0 - 1.0) as f32 * (i as f32 + 1.0),
+                    })
+                    .collect();
+                let part = rng.index(64) as u32;
+                (part, dim, nodes, emb)
+            },
+            |(part, dim, nodes, emb)| {
+                let path = tmp(&format!("prop_{part}_{}_{}.lfs", dim, nodes.len()));
+                write_shard(&path, *part, nodes, emb, *dim)
+                    .map_err(|e| format!("write: {e}"))?;
+                let (header, data) = read_shard(&path).map_err(|e| format!("read: {e}"))?;
+                std::fs::remove_file(&path).ok();
+                if header.part_id != *part || header.dim != *dim || header.nodes != *nodes {
+                    return Err("header mismatch".into());
+                }
+                if data.len() != emb.len() {
+                    return Err(format!("len {} != {}", data.len(), emb.len()));
+                }
+                for (i, (a, b)) in data.iter().zip(emb).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("row bit mismatch at {i}: {a:?} != {b:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: any strict prefix of a valid shard file is rejected by
+    /// both the eager reader and the header-only open path (mirrors the
+    /// LFC1 checkpoint truncation guard).
+    #[test]
+    fn prop_rejects_truncation() {
+        prop::check(
+            "lfs1-truncation",
+            25,
+            0x7A11,
+            |rng: &mut Rng| {
+                let rows = 1 + rng.index(20);
+                let dim = 1 + rng.index(8);
+                let nodes: Vec<NodeId> = (0..rows).map(|v| v as NodeId).collect();
+                let emb: Vec<f32> = (0..rows * dim).map(|i| i as f32 * 0.5).collect();
+                let cut = rng.f64();
+                (dim, nodes, emb, cut)
+            },
+            |(dim, nodes, emb, cut)| {
+                let path = tmp(&format!("trunc_{}_{}.lfs", dim, nodes.len()));
+                write_shard(&path, 3, nodes, emb, *dim).map_err(|e| format!("write: {e}"))?;
+                let full = std::fs::read(&path).map_err(|e| e.to_string())?;
+                // cut somewhere strictly inside the file
+                let keep = 1 + ((full.len() - 2) as f64 * cut) as usize;
+                std::fs::write(&path, &full[..keep]).map_err(|e| e.to_string())?;
+                let eager = read_shard(&path);
+                let lazy = read_shard_header(&path);
+                std::fs::remove_file(&path).ok();
+                if eager.is_ok() {
+                    return Err(format!("read_shard accepted {keep}/{} bytes", full.len()));
+                }
+                if lazy.is_ok() {
+                    return Err(format!(
+                        "read_shard_header accepted {keep}/{} bytes",
+                        full.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = tmp("manifest_dir");
+        let m = ShardManifest {
+            version: 1,
+            dataset: "karate".into(),
+            task: "multiclass".into(),
+            num_nodes: 34,
+            dim: 16,
+            classes: 4,
+            classifier_file: CLASSIFIER_FILE.into(),
+            shards: vec![
+                ShardEntry { file: shard_file_name(0), part_id: 0, rows: 18 },
+                ShardEntry { file: shard_file_name(1), part_id: 1, rows: 16 },
+            ],
+        };
+        m.save(&dir).unwrap();
+        let back = ShardManifest::load(&dir).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_helpful() {
+        let err = ShardManifest::load(Path::new("/nonexistent_lf")).unwrap_err();
+        assert!(err.to_string().contains("--shards"));
+    }
+}

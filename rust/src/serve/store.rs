@@ -1,0 +1,314 @@
+//! Sharded embedding store: the serving-time view of the global embedding
+//! matrix.
+//!
+//! Opens a shard directory written by the coordinator, builds the
+//! `NodeId → (shard, row)` ownership index from shard *headers* only, and
+//! loads each shard's embedding rows lazily on first touch. Shards are
+//! disjoint by construction (one per Leiden-Fusion partition), so the
+//! ownership index is an exact cover and lookups never fan out across
+//! shards — the serving analogue of the paper's communication-free
+//! training.
+//!
+//! The store is `Send + Sync`: lazy shard data sits behind per-shard
+//! mutexes holding `Arc<[f32]>` blocks, so engine workers share one store.
+
+use super::shard::{read_shard, read_shard_header, ShardHeader, ShardManifest};
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+struct LazyShard {
+    path: PathBuf,
+    header: ShardHeader,
+    /// Embedding rows, populated on first access.
+    data: Mutex<Option<Arc<Vec<f32>>>>,
+}
+
+/// Lazily-loaded, shard-per-partition embedding store.
+pub struct ShardedEmbeddingStore {
+    dir: PathBuf,
+    manifest: ShardManifest,
+    shards: Vec<LazyShard>,
+    /// node → (shard index, row within shard)
+    ownership: HashMap<NodeId, (u32, u32)>,
+}
+
+impl ShardedEmbeddingStore {
+    /// Open a shard directory: parse `shards.json`, read every shard
+    /// header (cheap — ids only, with a length-based truncation check),
+    /// and build the ownership index. Embedding rows stay on disk.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = ShardManifest::load(dir)?;
+        let mut shards = Vec::with_capacity(manifest.shards.len());
+        let mut ownership = HashMap::with_capacity(manifest.num_nodes);
+        for (idx, entry) in manifest.shards.iter().enumerate() {
+            let path = dir.join(&entry.file);
+            let header = read_shard_header(&path)?;
+            if header.part_id != entry.part_id {
+                return Err(Error::Serve(format!(
+                    "{}: shard claims partition {}, manifest says {}",
+                    path.display(),
+                    header.part_id,
+                    entry.part_id
+                )));
+            }
+            if header.rows != entry.rows {
+                return Err(Error::Serve(format!(
+                    "{}: shard has {} rows, manifest says {}",
+                    path.display(),
+                    header.rows,
+                    entry.rows
+                )));
+            }
+            if header.dim != manifest.dim {
+                return Err(Error::Serve(format!(
+                    "{}: shard dim {} != manifest dim {}",
+                    path.display(),
+                    header.dim,
+                    manifest.dim
+                )));
+            }
+            for (row, &v) in header.nodes.iter().enumerate() {
+                if ownership.insert(v, (idx as u32, row as u32)).is_some() {
+                    return Err(Error::Serve(format!(
+                        "node {v} owned by two shards (partitions must be disjoint)"
+                    )));
+                }
+            }
+            shards.push(LazyShard { path, header, data: Mutex::new(None) });
+        }
+        if ownership.len() != manifest.num_nodes {
+            return Err(Error::Serve(format!(
+                "shards cover {} nodes, manifest says {}",
+                ownership.len(),
+                manifest.num_nodes
+            )));
+        }
+        Ok(ShardedEmbeddingStore { dir: dir.to_path_buf(), manifest, shards, ownership })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.manifest
+    }
+
+    pub fn dim(&self) -> usize {
+        self.manifest.dim
+    }
+
+    /// Total nodes across all shards.
+    pub fn num_nodes(&self) -> usize {
+        self.ownership.len()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards whose embedding rows are currently resident.
+    pub fn loaded_shards(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.data.lock().map(|d| d.is_some()).unwrap_or(false))
+            .count()
+    }
+
+    /// Resolve a node to `(shard index, row)` without touching data.
+    pub fn locate(&self, v: NodeId) -> Option<(u32, u32)> {
+        self.ownership.get(&v).copied()
+    }
+
+    /// All node ids this store serves, in an arbitrary order.
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.ownership.keys().copied()
+    }
+
+    /// Load (or fetch cached) shard data block.
+    fn shard_data(&self, idx: usize) -> Result<Arc<Vec<f32>>> {
+        let shard = &self.shards[idx];
+        let mut slot = shard.data.lock().map_err(|_| {
+            Error::Serve("shard data lock poisoned".into())
+        })?;
+        if let Some(data) = slot.as_ref() {
+            return Ok(Arc::clone(data));
+        }
+        let (header, data) = read_shard(&shard.path)?;
+        // open() validated the header; re-check rows defensively in case
+        // the file changed underneath a running server
+        if header.rows != shard.header.rows || header.dim != shard.header.dim {
+            return Err(Error::Serve(format!(
+                "{}: shard changed on disk while serving",
+                shard.path.display()
+            )));
+        }
+        let data = Arc::new(data);
+        *slot = Some(Arc::clone(&data));
+        log::debug!(
+            "loaded shard {} ({} rows × {})",
+            shard.path.display(),
+            header.rows,
+            header.dim
+        );
+        Ok(data)
+    }
+
+    /// Copy one node's embedding row into `out` (len == dim).
+    pub fn copy_embedding(&self, v: NodeId, out: &mut [f32]) -> Result<()> {
+        if out.len() != self.manifest.dim {
+            return Err(Error::Serve(format!(
+                "output buffer {} != dim {}",
+                out.len(),
+                self.manifest.dim
+            )));
+        }
+        let (shard_idx, row) = self
+            .locate(v)
+            .ok_or_else(|| Error::Serve(format!("node {v} not in any shard")))?;
+        let data = self.shard_data(shard_idx as usize)?;
+        let dim = self.manifest.dim;
+        let off = row as usize * dim;
+        out.copy_from_slice(&data[off..off + dim]);
+        Ok(())
+    }
+
+    /// One node's embedding row as an owned vector.
+    pub fn embedding(&self, v: NodeId) -> Result<Vec<f32>> {
+        let mut out = vec![0.0; self.manifest.dim];
+        self.copy_embedding(v, &mut out)?;
+        Ok(out)
+    }
+
+    /// Force-load every shard (used by benches to exclude cold I/O).
+    pub fn prefetch_all(&self) -> Result<()> {
+        for i in 0..self.shards.len() {
+            self.shard_data(i)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::shard::{
+        shard_file_name, write_shard, ShardEntry, CLASSIFIER_FILE, SHARD_MANIFEST_FILE,
+    };
+
+    fn bundle(name: &str, shards: &[(u32, Vec<NodeId>, usize)]) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("lf_store_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut entries = Vec::new();
+        let mut total = 0;
+        let dim = shards.first().map(|(_, _, d)| *d).unwrap_or(1);
+        for (part, nodes, dim) in shards {
+            // row value = node id so tests can verify which row came back
+            let emb: Vec<f32> = nodes
+                .iter()
+                .flat_map(|&v| (0..*dim).map(move |j| v as f32 * 10.0 + j as f32))
+                .collect();
+            write_shard(&dir.join(shard_file_name(*part)), *part, nodes, &emb, *dim)
+                .unwrap();
+            entries.push(ShardEntry {
+                file: shard_file_name(*part),
+                part_id: *part,
+                rows: nodes.len(),
+            });
+            total += nodes.len();
+        }
+        ShardManifest {
+            version: 1,
+            dataset: "test".into(),
+            task: "multiclass".into(),
+            num_nodes: total,
+            dim,
+            classes: 2,
+            classifier_file: CLASSIFIER_FILE.into(),
+            shards: entries,
+        }
+        .save(&dir)
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn opens_and_resolves_lazily() {
+        let dir = bundle("lazy", &[(0, vec![0, 2, 4], 3), (1, vec![1, 3], 3)]);
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.num_nodes(), 5);
+        assert_eq!(store.num_shards(), 2);
+        assert_eq!(store.loaded_shards(), 0, "open must not load embedding rows");
+
+        assert_eq!(store.embedding(4).unwrap(), vec![40.0, 41.0, 42.0]);
+        assert_eq!(store.loaded_shards(), 1, "only the touched shard loads");
+        assert_eq!(store.embedding(3).unwrap(), vec![30.0, 31.0, 32.0]);
+        assert_eq!(store.loaded_shards(), 2);
+
+        assert_eq!(store.locate(0), Some((0, 0)));
+        assert_eq!(store.locate(3), Some((1, 1)));
+        assert!(store.locate(99).is_none());
+        assert!(store.embedding(99).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_overlapping_shards() {
+        let dir = bundle("overlap", &[(0, vec![0, 1], 2), (1, vec![1, 2], 2)]);
+        let err = ShardedEmbeddingStore::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("two shards"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_row_count_mismatch_with_manifest() {
+        let dir = bundle("rows", &[(0, vec![0, 1, 2], 2)]);
+        // rewrite the shard with fewer rows than the manifest claims
+        write_shard(&dir.join(shard_file_name(0)), 0, &[0, 1], &[0.0; 4], 2).unwrap();
+        assert!(ShardedEmbeddingStore::open(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_shard_at_open() {
+        let dir = bundle("trunc", &[(0, vec![0, 1, 2], 4)]);
+        let path = dir.join(shard_file_name(0));
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        assert!(ShardedEmbeddingStore::open(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let dir = bundle("nomanifest", &[(0, vec![0], 1)]);
+        std::fs::remove_file(dir.join(SHARD_MANIFEST_FILE)).unwrap();
+        assert!(ShardedEmbeddingStore::open(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn concurrent_reads_share_one_load() {
+        let dir = bundle("concurrent", &[(0, (0..64).collect(), 8)]);
+        let store = std::sync::Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let store = std::sync::Arc::clone(&store);
+            handles.push(std::thread::spawn(move || {
+                for v in 0..64u32 {
+                    let e = store.embedding(v).unwrap();
+                    assert_eq!(e[0], v as f32 * 10.0, "thread {t} node {v}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(store.loaded_shards(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

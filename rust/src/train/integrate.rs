@@ -5,6 +5,11 @@
 //! are discarded by the trainer. The MLP stage runs on the leader after all
 //! partitions finish — the only cross-partition data movement in the whole
 //! pipeline, as in the paper.
+//!
+//! Training and evaluation are split ([`train_classifier`] /
+//! [`evaluate_classifier`]) so the coordinator can persist the trained
+//! parameters into a serving bundle (`serve::shard`) — the serving engine
+//! replays the same row-wise MLP forward at query time.
 
 use super::metrics;
 use super::trainer::init_params;
@@ -27,6 +32,11 @@ impl EmbeddingStore {
     }
 
     /// Write the owned-node embeddings of one partition.
+    ///
+    /// Atomic: the whole block is validated (size, node-id range, no node
+    /// already `filled`) before any row is written, so a rejected insert
+    /// leaves the store exactly as it was — the coordinator relies on this
+    /// when it retries a partition after a duplicate-delivery fault.
     pub fn insert(&mut self, nodes: &[NodeId], emb: &[f32]) -> Result<()> {
         if emb.len() != nodes.len() * self.dim {
             return Err(Error::Coordinator(format!(
@@ -36,11 +46,31 @@ impl EmbeddingStore {
                 self.dim
             )));
         }
-        for (i, &v) in nodes.iter().enumerate() {
+        for &v in nodes {
             let vi = v as usize;
+            if vi >= self.n {
+                return Err(Error::Coordinator(format!(
+                    "node {v} out of range (store holds {} nodes)",
+                    self.n
+                )));
+            }
             if self.filled[vi] {
                 return Err(Error::Coordinator(format!("node {v} embedded twice")));
             }
+        }
+        if nodes.len() > 1 {
+            // duplicates *within* the block would also double-embed
+            let mut seen = std::collections::HashSet::with_capacity(nodes.len());
+            for &v in nodes {
+                if !seen.insert(v) {
+                    return Err(Error::Coordinator(format!(
+                        "node {v} appears twice in one embedding block"
+                    )));
+                }
+            }
+        }
+        for (i, &v) in nodes.iter().enumerate() {
+            let vi = v as usize;
             self.filled[vi] = true;
             self.data[vi * self.dim..(vi + 1) * self.dim]
                 .copy_from_slice(&emb[i * self.dim..(i + 1) * self.dim]);
@@ -59,6 +89,28 @@ impl EmbeddingStore {
     pub fn matrix(&self) -> &[f32] {
         &self.data
     }
+
+    /// Extract the embedding rows of `nodes` in order, e.g. to re-shard an
+    /// already-assembled store offline. (The coordinator's streaming export
+    /// writes each `LFS1` shard directly from the worker result instead,
+    /// before the store is complete.)
+    pub fn rows_of(&self, nodes: &[NodeId]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(nodes.len() * self.dim);
+        for &v in nodes {
+            let vi = v as usize;
+            if vi >= self.n {
+                return Err(Error::Coordinator(format!(
+                    "node {v} out of range (store holds {} nodes)",
+                    self.n
+                )));
+            }
+            if !self.filled[vi] {
+                return Err(Error::Coordinator(format!("node {v} not embedded yet")));
+            }
+            out.extend_from_slice(&self.data[vi * self.dim..(vi + 1) * self.dim]);
+        }
+        Ok(out)
+    }
 }
 
 /// Result of the classification stage.
@@ -73,14 +125,60 @@ pub struct EvalReport {
     pub metric_name: &'static str,
 }
 
-/// Train the integration MLP on the embeddings and evaluate on the splits.
-pub fn classify(
+/// A trained integration classifier: the MLP parameters plus the shape
+/// metadata a serving engine needs to rebind them to a (possibly smaller)
+/// inference bucket.
+#[derive(Clone, Debug)]
+pub struct Classifier {
+    pub params: Vec<Tensor>,
+    pub losses: Vec<f32>,
+    /// `multiclass` | `multilabel`.
+    pub task: &'static str,
+    /// Embedding width the MLP consumes (artifact `f`).
+    pub feat_dim: usize,
+    /// Logit columns (artifact `c`, bucketed class dim).
+    pub classes: usize,
+}
+
+/// Pad the store's embedding matrix into an artifact-sized `x` tensor.
+fn padded_x(store: &EmbeddingStore, bucket_n: usize, feat_dim: usize) -> Tensor {
+    let n = store.n;
+    let mut x = vec![0f32; bucket_n * feat_dim];
+    x[..n * feat_dim].copy_from_slice(store.matrix());
+    Tensor::F32(x)
+}
+
+/// Pad labels + train mask to the bucket (train path only — the pred
+/// artifact takes just `x`).
+fn padded_targets(dataset: &Dataset, n: usize, bucket_n: usize) -> (Tensor, Tensor) {
+    let y = match &dataset.labels {
+        Labels::Multiclass { labels, .. } => {
+            let mut yy = vec![0i32; bucket_n];
+            yy[..n].copy_from_slice(labels);
+            Tensor::I32(yy)
+        }
+        Labels::Multilabel { tasks, targets } => {
+            let mut yy = vec![0f32; bucket_n * tasks];
+            yy[..n * tasks].copy_from_slice(targets);
+            Tensor::F32(yy)
+        }
+    };
+    let mut mask = vec![0f32; bucket_n];
+    for v in 0..n {
+        mask[v] = dataset.train_mask[v] as u8 as f32;
+    }
+    (y, Tensor::F32(mask))
+}
+
+/// Train the integration MLP on the embeddings (train-split rows only)
+/// and return the fitted parameters.
+pub fn train_classifier(
     rt: &Runtime,
     dataset: &Dataset,
     store: &EmbeddingStore,
     epochs: usize,
     seed: u64,
-) -> Result<EvalReport> {
+) -> Result<Classifier> {
     if !store.is_complete() {
         return Err(Error::Coordinator(format!(
             "embedding store incomplete: {}/{} nodes",
@@ -91,7 +189,6 @@ pub fn classify(
     let n = store.n;
     let task = dataset.labels.task_name();
     let train_exe = rt.load_for("mlp", task, "train", n, 0)?;
-    let pred_exe = rt.load_for("mlp", task, "pred", n, 0)?;
     let dims = train_exe.meta.dims.clone();
     if dims.f != store.dim {
         return Err(Error::Coordinator(format!(
@@ -99,28 +196,8 @@ pub fn classify(
             dims.f, store.dim
         )));
     }
-
-    // pad embeddings/labels/mask to the MLP bucket
-    let mut x = vec![0f32; dims.n * dims.f];
-    x[..n * dims.f].copy_from_slice(store.matrix());
-    let x = Tensor::F32(x);
-    let y = match &dataset.labels {
-        Labels::Multiclass { labels, .. } => {
-            let mut yy = vec![0i32; dims.n];
-            yy[..n].copy_from_slice(labels);
-            Tensor::I32(yy)
-        }
-        Labels::Multilabel { tasks, targets } => {
-            let mut yy = vec![0f32; dims.n * tasks];
-            yy[..n * tasks].copy_from_slice(targets);
-            Tensor::F32(yy)
-        }
-    };
-    let mut mask = vec![0f32; dims.n];
-    for v in 0..n {
-        mask[v] = dataset.train_mask[v] as u8 as f32;
-    }
-    let mask = Tensor::F32(mask);
+    let x = padded_x(store, dims.n, dims.f);
+    let (y, mask) = padded_targets(dataset, n, dims.n);
 
     let p = train_exe.meta.num_params();
     let mut params = init_params(&train_exe, seed);
@@ -128,7 +205,7 @@ pub fn classify(
     let mut v: Vec<Tensor> = m.clone();
     let mut t = Tensor::F32(vec![0.0]);
     let calls = epochs.div_ceil(dims.epochs_per_call.max(1));
-    let mut mlp_losses = Vec::with_capacity(calls);
+    let mut losses = Vec::with_capacity(calls);
     for _ in 0..calls {
         let mut inputs = Vec::with_capacity(3 * p + 4);
         inputs.extend(params.iter().cloned());
@@ -139,15 +216,36 @@ pub fn classify(
         inputs.push(y.clone());
         inputs.push(mask.clone());
         let mut out = train_exe.run(&inputs)?;
-        mlp_losses.push(out.last().unwrap().scalar_f32()?);
+        losses.push(out.last().unwrap().scalar_f32()?);
         t = out[3 * p].clone();
         v = out.drain(2 * p..3 * p).collect();
         m = out.drain(p..2 * p).collect();
         params = out.drain(..p).collect();
     }
 
-    // ---- predict + evaluate ------------------------------------------
-    let mut inputs = params;
+    Ok(Classifier { params, losses, task, feat_dim: dims.f, classes: dims.c })
+}
+
+/// Run the trained classifier over the full store and score the val/test
+/// splits.
+pub fn evaluate_classifier(
+    rt: &Runtime,
+    dataset: &Dataset,
+    store: &EmbeddingStore,
+    clf: &Classifier,
+) -> Result<EvalReport> {
+    let n = store.n;
+    let pred_exe = rt.load_for("mlp", clf.task, "pred", n, 0)?;
+    let dims = pred_exe.meta.dims.clone();
+    if dims.f != clf.feat_dim || dims.c != clf.classes {
+        return Err(Error::Coordinator(format!(
+            "pred artifact shape (f={}, c={}) differs from trained classifier \
+             (f={}, c={})",
+            dims.f, dims.c, clf.feat_dim, clf.classes
+        )));
+    }
+    let x = padded_x(store, dims.n, dims.f);
+    let mut inputs = clf.params.clone();
     inputs.push(x);
     let out = pred_exe.run(&inputs)?;
     let logits_full = out[0].as_f32()?;
@@ -176,7 +274,29 @@ pub fn classify(
             )
         }
     };
-    Ok(EvalReport { mlp_losses, test_metric, val_metric, metric_name })
+    Ok(EvalReport {
+        mlp_losses: clf.losses.clone(),
+        test_metric,
+        val_metric,
+        metric_name,
+    })
+}
+
+/// Train the integration MLP on the embeddings and evaluate on the splits
+/// (the original offline path: train + evaluate, parameters discarded).
+pub fn classify(
+    rt: &Runtime,
+    dataset: &Dataset,
+    store: &EmbeddingStore,
+    epochs: usize,
+    seed: u64,
+) -> Result<EvalReport> {
+    // preflight the pred artifact so a train-only manifest fails before
+    // the MLP training loop, not after (compilation is cached for the
+    // evaluation pass)
+    rt.load_for("mlp", dataset.labels.task_name(), "pred", store.n, 0)?;
+    let clf = train_classifier(rt, dataset, store, epochs, seed)?;
+    evaluate_classifier(rt, dataset, store, &clf)
 }
 
 #[cfg(test)]
@@ -199,11 +319,57 @@ mod tests {
         let mut s = EmbeddingStore::new(2, 1);
         s.insert(&[0], &[1.0]).unwrap();
         assert!(s.insert(&[0], &[2.0]).is_err());
+        // the original value survives the rejected overwrite
+        assert_eq!(s.matrix()[0], 1.0);
     }
 
     #[test]
     fn store_rejects_bad_block_size() {
         let mut s = EmbeddingStore::new(2, 3);
         assert!(s.insert(&[0], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn failed_insert_leaves_store_unchanged() {
+        let mut s = EmbeddingStore::new(4, 1);
+        s.insert(&[0, 1], &[1.0, 2.0]).unwrap();
+        // block [2, 0]: node 2 is fresh but node 0 is filled → whole block
+        // must be rejected without writing node 2
+        assert!(s.insert(&[2, 0], &[9.0, 9.0]).is_err());
+        assert_eq!(s.num_filled(), 2, "partial write leaked through");
+        assert_eq!(s.matrix()[0], 1.0);
+        // the same fresh nodes still insert cleanly afterwards
+        s.insert(&[2, 3], &[3.0, 4.0]).unwrap();
+        assert!(s.is_complete());
+        assert_eq!(s.matrix(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn store_rejects_out_of_range_node() {
+        let mut s = EmbeddingStore::new(2, 1);
+        assert!(s.insert(&[5], &[1.0]).is_err());
+        assert_eq!(s.num_filled(), 0);
+    }
+
+    #[test]
+    fn store_rejects_duplicate_within_block() {
+        let mut s = EmbeddingStore::new(3, 1);
+        assert!(s.insert(&[1, 1], &[1.0, 2.0]).is_err());
+        assert_eq!(s.num_filled(), 0);
+    }
+
+    #[test]
+    fn rows_of_extracts_in_order() {
+        let mut s = EmbeddingStore::new(3, 2);
+        s.insert(&[0, 1, 2], &[0.0, 1.0, 10.0, 11.0, 20.0, 21.0]).unwrap();
+        assert_eq!(s.rows_of(&[2, 0]).unwrap(), vec![20.0, 21.0, 0.0, 1.0]);
+        assert!(s.rows_of(&[9]).is_err());
+    }
+
+    #[test]
+    fn rows_of_rejects_unfilled() {
+        let mut s = EmbeddingStore::new(2, 1);
+        s.insert(&[0], &[1.0]).unwrap();
+        assert!(s.rows_of(&[1]).is_err());
     }
 }

@@ -8,5 +8,7 @@ pub mod metrics;
 pub mod trainer;
 
 pub use data::{build_batch, pad_to_bucket, Mode, ModelKind, PartitionBatch};
-pub use integrate::{classify, EmbeddingStore, EvalReport};
+pub use integrate::{
+    classify, evaluate_classifier, train_classifier, Classifier, EmbeddingStore, EvalReport,
+};
 pub use trainer::{train_partition, TrainOptions, TrainedPartition};

@@ -1,0 +1,179 @@
+//! End-to-end serving tests: coordinator run → shard bundle → store →
+//! engine, checked against the offline classify path. All tests skip
+//! gracefully when `make artifacts` has not been run.
+
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
+use leiden_fusion::data::karate_dataset;
+use leiden_fusion::graph::NodeId;
+use leiden_fusion::partition::leiden::leiden_fusion;
+use leiden_fusion::runtime::{default_artifacts_dir, Runtime, Tensor};
+use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
+use leiden_fusion::train::checkpoint::load_tensors;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+/// Train karate with shard export and return the bundle directory.
+fn export_bundle(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("lf_serve_rt_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+    let mut cfg = CoordinatorConfig::new(default_artifacts_dir());
+    cfg.epochs = 10;
+    cfg.mlp_epochs = 40;
+    cfg.machines = 2;
+    cfg.shard_dir = Some(dir.clone());
+    Coordinator::new(cfg).run(&ds, &p).unwrap();
+    dir
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .fold((0, f32::NEG_INFINITY), |(bi, bs), (i, &v)| {
+            if v > bs { (i, v) } else { (bi, bs) }
+        })
+        .0
+}
+
+#[test]
+fn engine_matches_offline_classify_path() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = export_bundle("match");
+    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+    let engine = Engine::new(
+        EngineConfig {
+            batch_size: 8,
+            workers: 2,
+            cache_capacity: 64,
+            ..Default::default()
+        },
+        Arc::clone(&store),
+    )
+    .unwrap();
+
+    // ---- offline reference: pred artifact over the full matrix --------
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    let m = store.manifest().clone();
+    let params = load_tensors(&dir.join(&m.classifier_file)).unwrap();
+    let exe = rt.load_for("mlp", &m.task, "pred", m.num_nodes, 0).unwrap();
+    let dims = exe.meta.dims.clone();
+    assert_eq!(dims.f, m.dim);
+    let mut x = vec![0f32; dims.n * dims.f];
+    for v in 0..m.num_nodes {
+        store
+            .copy_embedding(v as NodeId, &mut x[v * dims.f..(v + 1) * dims.f])
+            .unwrap();
+    }
+    let mut inputs = params;
+    inputs.push(Tensor::F32(x));
+    let out = exe.run(&inputs).unwrap();
+    let offline_logits = out[0].as_f32().unwrap();
+    let c = dims.c;
+
+    // ---- the engine must agree on every node --------------------------
+    let nodes: Vec<NodeId> = (0..m.num_nodes as NodeId).collect();
+    let preds = engine.query(&nodes).unwrap();
+    assert_eq!(preds.len(), nodes.len());
+    for p in &preds {
+        let v = p.node as usize;
+        let row = &offline_logits[v * c..(v + 1) * c];
+        assert_eq!(
+            p.class,
+            argmax(row),
+            "node {} class diverged from offline classify",
+            p.node
+        );
+        assert_eq!(p.logits.len(), c);
+        for (a, b) in p.logits.iter().zip(row) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "node {} logits diverged: {a} vs {b}",
+                p.node
+            );
+        }
+    }
+
+    // ---- cache serves repeats without new PJRT batches ----------------
+    let before = engine.stats();
+    let again = engine.query(&[0, 5, 9]).unwrap();
+    let after = engine.stats();
+    assert_eq!(after.batches, before.batches, "repeat query must hit the cache");
+    assert_eq!(after.cache_hits, before.cache_hits + 3);
+    for (p, &v) in again.iter().zip(&[0 as NodeId, 5, 9]) {
+        assert_eq!(p.node, v);
+        let offline = argmax(&offline_logits[v as usize * c..(v as usize + 1) * c]);
+        assert_eq!(p.class, offline);
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn unknown_node_fails_cleanly_and_engine_survives() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = export_bundle("unknown");
+    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+    let engine =
+        Engine::new(EngineConfig::default(), Arc::clone(&store)).unwrap();
+    assert!(engine.query(&[9999]).is_err());
+    // a bad node must not poison subsequent queries
+    let ok = engine.query(&[0, 1]).unwrap();
+    assert_eq!(ok.len(), 2);
+    assert!(engine.query(&[]).unwrap().is_empty());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn concurrent_clients_get_consistent_answers() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = export_bundle("concurrent");
+    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+    let engine = Arc::new(
+        Engine::new(
+            EngineConfig {
+                batch_size: 4,
+                workers: 2,
+                cache_capacity: 0, // force every query through PJRT
+                ..Default::default()
+            },
+            Arc::clone(&store),
+        )
+        .unwrap(),
+    );
+    let n = store.num_nodes() as NodeId;
+    let reference = engine.query(&(0..n).collect::<Vec<_>>()).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4 as NodeId {
+        let engine = Arc::clone(&engine);
+        let reference = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            for round in 0..5 as NodeId {
+                let ids: Vec<NodeId> =
+                    (0..n).filter(|v| (v + t + round) % 3 == 0).collect();
+                let preds = engine.query(&ids).unwrap();
+                for (p, &v) in preds.iter().zip(&ids) {
+                    assert_eq!(p.node, v);
+                    assert_eq!(
+                        p.class, reference[v as usize].class,
+                        "thread {t} round {round} node {v}"
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
