@@ -7,7 +7,7 @@ use leiden_fusion::benchkit::Table;
 use leiden_fusion::cli::Args;
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::data::{synth_arxiv, ArxivLikeConfig};
-use leiden_fusion::partition::{by_name, PartitionQuality};
+use leiden_fusion::partition::PartitionPipeline;
 use leiden_fusion::runtime::default_artifacts_dir;
 use leiden_fusion::train::Mode;
 use leiden_fusion::util::{fmt_duration, init_logging};
@@ -32,8 +32,9 @@ fn main() -> leiden_fusion::Result<()> {
         &["method", "mode", "edge-cut%", "ideal", "test-acc", "makespan"],
     );
     for method in ["lpa", "metis", "lf"] {
-        let p = by_name(method, 7)?.partition(&ds.graph, k)?;
-        let q = PartitionQuality::measure(&ds.graph, &p);
+        let preport = PartitionPipeline::parse(method, 7)?.run(&ds.graph, k)?;
+        let q = preport.quality(&ds.graph).clone();
+        let p = preport.into_partitioning();
         for mode in [Mode::Inner, Mode::Repli] {
             let mut cfg = CoordinatorConfig::new(default_artifacts_dir());
             cfg.mode = mode;

@@ -13,7 +13,7 @@ use leiden_fusion::graph::karate::karate_graph;
 use leiden_fusion::graph::components_within;
 use leiden_fusion::partition::fusion::{fuse_communities, FusionConfig};
 use leiden_fusion::partition::leiden::{leiden, LeidenConfig};
-use leiden_fusion::partition::{by_name, Partitioning};
+use leiden_fusion::partition::{PartitionPipeline, Partitioning};
 
 fn main() -> leiden_fusion::Result<()> {
     let g = karate_graph();
@@ -33,7 +33,7 @@ fn main() -> leiden_fusion::Result<()> {
     // replicate the fusion loop step by step for the trace
     let mut current = communities.clone();
     while current.k() > 2 {
-        let sizes = current.sizes();
+        let sizes = current.sizes().to_vec();
         let (c_min, _) = sizes
             .iter()
             .enumerate()
@@ -69,7 +69,7 @@ fn main() -> leiden_fusion::Result<()> {
         &["method", "isolated P0", "isolated P1", "components P0", "components P1", "edge cuts"],
     );
     for method in ["lpa", "metis", "random", "lf"] {
-        let p = by_name(method, 3)?.partition(&g, 2)?;
+        let p = PartitionPipeline::parse(method, 3)?.run(&g, 2)?.into_partitioning();
         println!("\n  {method}:");
         render_partitions(&g, &p);
         let mut row = vec![method.to_string()];

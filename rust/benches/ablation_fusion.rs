@@ -12,9 +12,7 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::{by_name, PartitionQuality};
 use leiden_fusion::util::json::{num, obj, s, Json};
-use leiden_fusion::util::Stopwatch;
 
 const METHODS: [&str; 4] = ["lf", "louvain+f", "metis+f", "lpa+f"];
 
@@ -32,10 +30,10 @@ fn main() {
     let mut records = Vec::new();
     for method in METHODS {
         for k in [4, 16] {
-            let sw = Stopwatch::start();
-            let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
-            let secs = sw.secs();
-            let q = PartitionQuality::measure(&ds.graph, &p);
+            let report = common::partition(&ds.graph, method, k, 7);
+            // validation cost is spec-dependent, not part of the method
+            let secs = report.algorithm_secs();
+            let q = report.quality(&ds.graph);
             table.row(vec![
                 method.to_string(),
                 k.to_string(),
@@ -58,17 +56,18 @@ fn main() {
     }
     table.print();
 
-    // β sweep: Leiden community-size factor (paper §5 hyper-parameters)
+    // β sweep: Leiden community-size factor (paper §5 hyper-parameters) —
+    // the spec grammar carries the hyperparameter, so the sweep no longer
+    // bypasses the public API
     let mut sweep = Table::new(
         "Ablation: β sweep for LF (k=8)",
         &["beta", "communities→8 time (ms)", "edge-cut %", "balance ρ"],
     );
     for beta in [0.25, 0.5, 1.0] {
-        let sw = Stopwatch::start();
-        let p = leiden_fusion::partition::leiden::leiden_fusion(&ds.graph, 8, 0.05, beta, 7)
-            .unwrap();
-        let secs = sw.secs();
-        let q = PartitionQuality::measure(&ds.graph, &p);
+        let report =
+            common::partition(&ds.graph, &format!("leiden(beta={beta})+fusion"), 8, 7);
+        let secs = report.algorithm_secs();
+        let q = report.quality(&ds.graph);
         sweep.row(vec![
             format!("{beta}"),
             format!("{:.1}", secs * 1e3),

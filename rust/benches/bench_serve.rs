@@ -13,7 +13,6 @@ mod common;
 use leiden_fusion::benchkit::{save_json, Table};
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::graph::NodeId;
-use leiden_fusion::partition::by_name;
 use leiden_fusion::runtime::default_artifacts_dir;
 use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
 use leiden_fusion::util::json::{num, obj, Json};
@@ -43,7 +42,7 @@ fn main() {
 
     // ---- train + export a bundle -------------------------------------
     let ds = common::arxiv(1000);
-    let p = by_name("lf", 42).unwrap().partition(&ds.graph, 4).unwrap();
+    let p = common::partitioning(&ds.graph, "lf", 4, 42);
     let shard_dir = std::env::temp_dir()
         .join(format!("lf_bench_serve_{}", std::process::id()));
     std::fs::remove_dir_all(&shard_dir).ok();

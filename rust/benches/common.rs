@@ -9,11 +9,43 @@
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig, TrainReport};
 use leiden_fusion::data::{synth_arxiv, synth_proteins, ArxivLikeConfig, Dataset,
                           ProteinsLikeConfig};
-use leiden_fusion::partition::Partitioning;
+use leiden_fusion::graph::CsrGraph;
+use leiden_fusion::partition::{
+    PartitionPipeline, PartitionReport, PartitionSpec, Partitioning,
+};
 use leiden_fusion::runtime::default_artifacts_dir;
 use leiden_fusion::train::{Mode, ModelKind};
 
 pub const KS: [usize; 4] = [2, 4, 8, 16];
+
+/// Parse a spec string (grammar or legacy method name), panicking with a
+/// bench-friendly message on error.
+pub fn spec(s: &str) -> PartitionSpec {
+    s.parse().unwrap_or_else(|e| panic!("bad spec {s:?}: {e}"))
+}
+
+/// Run `spec_str` through the staged [`PartitionPipeline`] — the single
+/// entry point every bench binary partitions through.
+pub fn partition(g: &CsrGraph, spec_str: &str, k: usize, seed: u64) -> PartitionReport {
+    PartitionPipeline::new(spec(spec_str), seed)
+        .run(g, k)
+        .unwrap_or_else(|e| panic!("partitioning {spec_str:?} (k={k}) failed: {e}"))
+}
+
+/// Like [`partition`], keeping only the [`Partitioning`].
+pub fn partitioning(g: &CsrGraph, spec_str: &str, k: usize, seed: u64) -> Partitioning {
+    partition(g, spec_str, k, seed).into_partitioning()
+}
+
+/// Wall time of one named stage in a report (0 when the stage didn't run).
+pub fn stage_secs(report: &PartitionReport, name: &str) -> f64 {
+    report
+        .stages
+        .iter()
+        .find(|s| s.name == name)
+        .map(|s| s.secs)
+        .unwrap_or(0.0)
+}
 
 pub fn quick() -> bool {
     std::env::var("LF_BENCH_QUICK").is_ok()

@@ -8,9 +8,7 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::{by_name, PartitionQuality};
 use leiden_fusion::util::json::{num, obj, s, Json};
-use leiden_fusion::util::Stopwatch;
 
 const METHODS: [&str; 4] = ["lf", "metis", "lpa", "random"];
 
@@ -39,9 +37,8 @@ fn main() {
     for method in METHODS {
         let mut cells: Vec<Vec<String>> = vec![Vec::new(); 6];
         for k in common::KS {
-            let sw = Stopwatch::start();
-            let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
-            let q = PartitionQuality::measure(&ds.graph, &p);
+            let report = common::partition(&ds.graph, method, k, 7);
+            let q = report.quality(&ds.graph);
             cells[0].push(format!("{:.2}", q.edge_cut_fraction * 100.0));
             cells[1].push(q.total_components().to_string());
             cells[2].push(q.total_isolated().to_string());
@@ -57,7 +54,7 @@ fn main() {
                 ("node_balance", num(q.node_balance)),
                 ("edge_balance", num(q.edge_balance)),
                 ("replication_factor", num(q.replication_factor)),
-                ("partition_secs", num(sw.secs())),
+                ("partition_secs", num(report.algorithm_secs())),
             ]));
             if method == "lf" {
                 assert_eq!(q.total_components(), k, "LF must give k components");

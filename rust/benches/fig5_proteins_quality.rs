@@ -9,7 +9,6 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::{by_name, PartitionQuality};
 use leiden_fusion::util::json::{num, obj, s, Json};
 
 const METHODS: [&str; 3] = ["lf", "metis", "lpa"];
@@ -38,8 +37,8 @@ fn main() {
     for method in METHODS {
         let mut cells: Vec<Vec<String>> = vec![Vec::new(); metric_names.len()];
         for k in common::KS {
-            let p = by_name(method, 13).unwrap().partition(&ds.graph, k).unwrap();
-            let q = PartitionQuality::measure(&ds.graph, &p);
+            let report = common::partition(&ds.graph, method, k, 13);
+            let q = report.quality(&ds.graph);
             cells[0].push(format!("{:.2}", q.edge_cut_fraction * 100.0));
             cells[1].push(format!("{:.3}", q.replication_factor));
             cells[2].push(q.total_components().to_string());

@@ -12,7 +12,6 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::by_name;
 use leiden_fusion::train::{Mode, ModelKind};
 use leiden_fusion::util::json::{num, obj, s, Json};
 
@@ -54,7 +53,7 @@ fn main() {
             for mode in [Mode::Inner, Mode::Repli] {
                 let mut row = vec![method.to_string(), mode.as_str().to_string()];
                 for &k in ks {
-                    let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
+                    let p = common::partitioning(&ds.graph, method, k, 7);
                     let report = common::train(&ds, &p, model, mode, 40);
                     let acc = report.eval.test_metric * 100.0;
                     row.push(format!("{acc:.2}"));

@@ -7,7 +7,6 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::leiden_fusion as lf;
 use leiden_fusion::train::{Mode, ModelKind};
 use leiden_fusion::util::json::{num, obj, s, Json};
 
@@ -39,7 +38,7 @@ fn main() {
                 leiden_fusion::partition::Partitioning::new(vec![0; ds.graph.num_nodes()], 1)
                     .unwrap()
             } else {
-                lf(&ds.graph, k, 0.05, 0.5, 42).unwrap()
+                common::partitioning(&ds.graph, "lf", k, 42)
             };
             // machines = 1: contention-free per-partition timing (the
             // paper's own sequential emulation — §5 Setup)

@@ -7,6 +7,7 @@ mod common;
 use leiden_fusion::benchkit::{bench, save_json, Table};
 use leiden_fusion::partition::fusion::{fuse_communities, FusionConfig};
 use leiden_fusion::partition::leiden::{leiden, leiden_fusion as lf, LeidenConfig};
+use leiden_fusion::partition::PartitionPipeline;
 use leiden_fusion::runtime::Runtime;
 use leiden_fusion::train::{build_batch, pad_to_bucket, Mode, ModelKind};
 use leiden_fusion::util::json::{obj, s, Json};
@@ -47,6 +48,25 @@ fn main() {
     // 3. LF end to end
     add("leiden-fusion total", bench(1, 5, budget, || {
         std::hint::black_box(lf(&ds.graph, 8, 0.05, 0.5, 7).unwrap());
+    }));
+
+    // 3b. the staged pipeline (spec-driven; includes the validate stage)
+    let pipe = PartitionPipeline::parse("lf", 7).unwrap();
+    add("pipeline lf (spec)", bench(1, 5, budget, || {
+        std::hint::black_box(pipe.run(&ds.graph, 8).unwrap());
+    }));
+
+    // 3c. Partitioning::sizes — cached at construction vs the old rescan
+    let part = pipe.run(&ds.graph, 8).unwrap().into_partitioning();
+    add("Partitioning::sizes (cached)", bench(10, 1000, budget, || {
+        std::hint::black_box(part.sizes());
+    }));
+    add("sizes rescan (pre-cache baseline)", bench(10, 1000, budget, || {
+        let mut s = vec![0usize; part.k()];
+        for &x in part.assignments() {
+            s[x as usize] += 1;
+        }
+        std::hint::black_box(s);
     }));
 
     // 4. batch construction (inner + repli)

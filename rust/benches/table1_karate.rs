@@ -8,7 +8,7 @@ mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
 use leiden_fusion::graph::karate::karate_graph;
-use leiden_fusion::partition::{by_name, cut_edges, PartitionQuality};
+use leiden_fusion::partition::cut_edges;
 use leiden_fusion::util::json::{num, obj, s, Json};
 
 fn main() {
@@ -19,8 +19,9 @@ fn main() {
     );
     let mut rows = Vec::new();
     for method in ["lpa", "metis", "random", "lf"] {
-        let p = by_name(method, 3).unwrap().partition(&g, 2).unwrap();
-        let q = PartitionQuality::measure(&g, &p);
+        let report = common::partition(&g, method, 2, 3);
+        let q = report.quality(&g).clone();
+        let p = report.into_partitioning();
         let cuts = cut_edges(&g, &p);
         table.row(vec![
             method.to_string(),

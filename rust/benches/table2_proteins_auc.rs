@@ -8,7 +8,6 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::{by_name, PartitionQuality};
 use leiden_fusion::train::{Mode, ModelKind};
 use leiden_fusion::util::json::{num, obj, s, Json};
 
@@ -34,8 +33,9 @@ fn main() {
     for method in ["metis", "lf"] {
         let mut row = vec![method.to_string()];
         for &k in ks {
-            let p = by_name(method, 13).unwrap().partition(&ds.graph, k).unwrap();
-            let q = PartitionQuality::measure(&ds.graph, &p);
+            let preport = common::partition(&ds.graph, method, k, 13);
+            let q = preport.quality(&ds.graph).clone();
+            let p = preport.into_partitioning();
             let report = common::train(&ds, &p, ModelKind::Sage, Mode::Inner, 40);
             row.push(format!("{:.2}", report.eval.test_metric * 100.0));
             records.push(obj(vec![

@@ -8,11 +8,10 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::fusion::{fuse_communities, fuse_partitioning, FusionConfig};
-use leiden_fusion::partition::leiden::{leiden, LeidenConfig};
-use leiden_fusion::partition::{by_name, PartitionQuality};
+use leiden_fusion::partition::{
+    PartitionPipeline, PartitionQuality, Partitioning, PipelineEvent,
+};
 use leiden_fusion::util::json::{num, obj, s, Json};
-use leiden_fusion::util::Stopwatch;
 
 fn main() {
     let ds = common::arxiv(20_000);
@@ -30,12 +29,25 @@ fn main() {
     let mut records = Vec::new();
 
     for method in ["metis", "lpa"] {
-        let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
-        let before = PartitionQuality::measure(&ds.graph, &p).edge_cut_fraction;
-        let sw = Stopwatch::start();
-        let fused = fuse_partitioning(&ds.graph, &p).unwrap();
-        let secs = sw.secs();
-        let after = PartitionQuality::measure(&ds.graph, &fused).edge_cut_fraction;
+        // one staged `<method>+fusion` run; the observer hands us the
+        // pre-fusion partitioning for the "before" column, so detection
+        // runs once (as in the paper's before/after comparison)
+        let pipeline = PartitionPipeline::parse(&format!("{method}+fusion"), 7)
+            .expect("valid spec");
+        let mut detect_out: Option<Partitioning> = None;
+        let fused = pipeline
+            .run_observed(&ds.graph, k, &mut |ev| {
+                if let PipelineEvent::StageFinished { name, output, .. } = ev {
+                    if *name == method {
+                        detect_out = Some((*output).clone());
+                    }
+                }
+            })
+            .expect("partitioning run");
+        let before_p = detect_out.expect("detect stage ran");
+        let before = PartitionQuality::measure(&ds.graph, &before_p).edge_cut_fraction;
+        let secs = common::stage_secs(&fused, "fusion");
+        let after = fused.quality(&ds.graph).edge_cut_fraction;
         table.row(vec![
             format!("{method}+F"),
             format!("{:.1}", secs * 1e3),
@@ -50,21 +62,11 @@ fn main() {
         ]));
     }
 
-    // Leiden+F: fusion directly on Leiden communities (no split step).
-    let cap = ((ds.graph.num_nodes() as f64 / k as f64) * 1.05 * 0.5).ceil() as usize;
-    let communities = leiden(
-        &ds.graph,
-        &LeidenConfig { max_community_size: cap, seed: 7, ..Default::default() },
-    );
-    let sw = Stopwatch::start();
-    let fused = fuse_communities(
-        &ds.graph,
-        &communities,
-        &FusionConfig::with_alpha(&ds.graph, k, 0.05),
-    )
-    .unwrap();
-    let secs = sw.secs();
-    let after = PartitionQuality::measure(&ds.graph, &fused).edge_cut_fraction;
+    // Leiden+F: fusion directly on Leiden communities (no split step —
+    // the pipeline skips it because Leiden communities are connected).
+    let lf = common::partition(&ds.graph, "lf", k, 7);
+    let secs = common::stage_secs(&lf, "fusion");
+    let after = lf.quality(&ds.graph).edge_cut_fraction;
     table.row(vec![
         "leiden+F".into(),
         format!("{:.1}", secs * 1e3),

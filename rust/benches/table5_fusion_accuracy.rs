@@ -7,7 +7,6 @@
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
-use leiden_fusion::partition::by_name;
 use leiden_fusion::train::{Mode, ModelKind};
 use leiden_fusion::util::json::{num, obj, s, Json};
 
@@ -33,7 +32,7 @@ fn main() {
     for mode in [Mode::Inner, Mode::Repli] {
         let mut row = vec![mode.as_str().to_string()];
         for method in METHODS {
-            let p = by_name(method, 7).unwrap().partition(&ds.graph, k).unwrap();
+            let p = common::partitioning(&ds.graph, method, k, 7);
             let report = common::train(&ds, &p, ModelKind::Gcn, mode, 40);
             row.push(format!("{:.2}", report.eval.test_metric * 100.0));
             records.push(obj(vec![

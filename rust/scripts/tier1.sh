@@ -15,7 +15,15 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
 echo "== cargo fmt --check =="
 cargo fmt --check
+
+# Bench smoke: the karate bench is artifact-free and fast; it catches
+# bench-binary bitrot against the partitioning API.
+echo "== bench smoke: table1_karate =="
+LF_BENCH_QUICK=1 cargo bench --bench table1_karate
 
 echo "tier1: OK"

@@ -8,6 +8,7 @@
 //! a clear error rather than mis-parsed.
 
 use crate::error::{Error, Result};
+use crate::partition::{PartitionSpec, StageSpec};
 use crate::train::{Mode, ModelKind};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -139,11 +140,10 @@ pub struct ExperimentConfig {
     /// Node count for synthetic datasets (0 = dataset default).
     pub dataset_n: usize,
     pub seed: u64,
-    /// Partitioner name (`lf`, `metis`, `lpa`, `random`, `metis+f`, `lpa+f`).
-    pub partitioner: String,
+    /// Partitioning strategy (`[partition] spec = "..."`, or the legacy
+    /// `method` key plus optional `alpha`/`beta` overrides).
+    pub spec: PartitionSpec,
     pub k: usize,
-    pub alpha: f64,
-    pub beta: f64,
     pub model: ModelKind,
     pub mode: Mode,
     pub epochs: usize,
@@ -201,16 +201,27 @@ impl ServeConfig {
     }
 }
 
+/// Numeric key as a float, accepting integer literals; `None` if absent,
+/// a clear error if present with a non-numeric type.
+fn float_opt(t: &Toml, section: &str, key: &str) -> Result<Option<f64>> {
+    match t.get(section, key) {
+        None => Ok(None),
+        Some(Value::Float(f)) => Ok(Some(*f)),
+        Some(Value::Int(i)) => Ok(Some(*i as f64)),
+        Some(other) => Err(Error::Config(format!(
+            "[{section}] {key} must be a number, got {other:?}"
+        ))),
+    }
+}
+
 impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             dataset: "arxiv".into(),
             dataset_n: 0,
             seed: 42,
-            partitioner: "lf".into(),
+            spec: PartitionSpec::default(),
             k: 4,
-            alpha: 0.05,
-            beta: 0.5,
             model: ModelKind::Gcn,
             mode: Mode::Inner,
             epochs: 80,
@@ -237,14 +248,66 @@ impl ExperimentConfig {
             "repli" => Mode::Repli,
             other => return Err(Error::Config(format!("unknown mode {other:?}"))),
         };
+        // `spec` (grammar) wins; the legacy `alpha`/`beta` keys are
+        // stage-parameter overrides for the `method` path only — an
+        // explicit spec is never silently rewritten.
+        let explicit = match t.get("partition", "spec") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(other) => {
+                return Err(Error::Config(format!(
+                    "[partition] spec must be a string, got {other:?}"
+                )))
+            }
+            None => None,
+        };
+        let explicit_spec = explicit.is_some();
+        if explicit_spec && t.get("partition", "method").is_some() {
+            log::warn!("[partition] method ignored: spec wins");
+        }
+        let spec_str = match explicit {
+            Some(s) => s,
+            None => match t.get("partition", "method") {
+                Some(Value::Str(s)) => s.clone(),
+                Some(other) => {
+                    return Err(Error::Config(format!(
+                        "[partition] method must be a string, got {other:?}"
+                    )))
+                }
+                None => "lf".to_string(),
+            },
+        };
+        let mut spec: PartitionSpec = spec_str.parse()?;
+        // overrides fill gaps only — parameters written inside the spec
+        // string itself (either key) are never clobbered
+        let alpha_in_spec = spec
+            .stages()
+            .iter()
+            .any(|st| matches!(st, StageSpec::Fusion { alpha: Some(_) }));
+        let beta_in_spec = matches!(
+            spec.stages().first(),
+            Some(StageSpec::Leiden { beta: Some(_), .. })
+                | Some(StageSpec::Louvain { beta: Some(_), .. })
+        );
+        if let Some(a) = float_opt(t, "partition", "alpha")? {
+            if explicit_spec || alpha_in_spec {
+                log::warn!("[partition] alpha ignored: set it inside the spec string instead");
+            } else if !spec.set_fusion_alpha(a) {
+                log::warn!("[partition] alpha has no effect: {spec} has no fusion stage");
+            }
+        }
+        if let Some(b) = float_opt(t, "partition", "beta")? {
+            if explicit_spec || beta_in_spec {
+                log::warn!("[partition] beta ignored: set it inside the spec string instead");
+            } else if !spec.set_detect_beta(b) {
+                log::warn!("[partition] beta has no effect: {spec} has no size-capped detector");
+            }
+        }
         Ok(ExperimentConfig {
             dataset: t.str_or("dataset", "name", &d.dataset),
             dataset_n: t.int_or("dataset", "n", 0) as usize,
             seed: t.int_or("dataset", "seed", d.seed as i64) as u64,
-            partitioner: t.str_or("partition", "method", &d.partitioner),
+            spec,
             k: t.int_or("partition", "k", d.k as i64) as usize,
-            alpha: t.float_or("partition", "alpha", d.alpha),
-            beta: t.float_or("partition", "beta", d.beta),
             model: ModelKind::parse(&t.str_or("train", "model", "gcn"))?,
             mode,
             epochs: t.int_or("train", "epochs", d.epochs as i64) as usize,
@@ -297,7 +360,59 @@ machines = 2
         assert_eq!(cfg.machines, 2);
         // defaults fill gaps
         assert_eq!(cfg.mlp_epochs, 200);
-        assert_eq!(cfg.beta, 0.5);
+        // `method = "lf"` + `alpha = 0.05` → spec with the α override set
+        assert_eq!(cfg.spec.to_string(), "leiden+fusion(alpha=0.05)");
+    }
+
+    #[test]
+    fn partition_spec_key_wins_over_method() {
+        let t = Toml::parse(
+            "[partition]\nspec = \"metis(imbalance=0.1)+fusion\"\nmethod = \"lpa\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.spec.to_string(), "metis(imbalance=0.1)+fusion");
+    }
+
+    #[test]
+    fn explicit_spec_is_not_rewritten_by_legacy_keys() {
+        let t = Toml::parse(
+            "[partition]\nspec = \"leiden+fusion(alpha=0.1)\"\nalpha = 0.05\nbeta = 0.25\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.spec.to_string(), "leiden+fusion(alpha=0.1)");
+        // same guarantee when the grammar form arrives via `method`
+        let t = Toml::parse(
+            "[partition]\nmethod = \"leiden(beta=0.1)+fusion(alpha=0.2)\"\nalpha = 0.05\nbeta = 0.25\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.spec.to_string(), "leiden(beta=0.1)+fusion(alpha=0.2)");
+    }
+
+    #[test]
+    fn legacy_beta_key_overrides_detect_stage() {
+        let t = Toml::parse("[partition]\nmethod = \"lf\"\nbeta = 0.25\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.spec.to_string(), "leiden(beta=0.25)+fusion");
+    }
+
+    #[test]
+    fn rejects_bad_spec_string() {
+        let t = Toml::parse("[partition]\nspec = \"leiden+\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[partition]\nmethod = \"nope\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        // a mistyped non-string spec must error, not silently fall back
+        let t = Toml::parse("[partition]\nspec = 0.5\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        // ... and so must a non-numeric alpha/beta override
+        let t = Toml::parse("[partition]\nmethod = \"lf\"\nalpha = \"0.1\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        // ... and a non-string method (forgotten quotes)
+        let t = Toml::parse("[partition]\nmethod = 2\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub use messages::{Job, WorkerEvent};
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
-use crate::partition::Partitioning;
+use crate::partition::{PartitionReport, Partitioning, StageTiming};
 use crate::runtime::Runtime;
 use crate::train::{
     checkpoint, evaluate_classifier, train_classifier, EmbeddingStore, EvalReport, Mode,
@@ -92,6 +92,10 @@ pub struct PartitionStats {
 pub struct TrainReport {
     pub per_partition: Vec<PartitionStats>,
     pub eval: EvalReport,
+    /// Per-stage partitioning wall times, carried over from the
+    /// [`PartitionReport`] when the run was started with
+    /// [`Coordinator::run_report`] (empty for a bare [`Partitioning`]).
+    pub partition_stages: Vec<StageTiming>,
     /// Leader wall-clock for the whole run.
     pub wall_secs: f64,
     /// Longest single-partition training time — the paper's Fig. 7 metric
@@ -109,6 +113,27 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Self {
         Coordinator { cfg }
+    }
+
+    /// Run distributed training over a [`PartitionReport`], logging the
+    /// partitioning stage timings and carrying them into the
+    /// [`TrainReport`].
+    pub fn run_report(
+        &self,
+        dataset: &Dataset,
+        partition: &PartitionReport,
+    ) -> Result<TrainReport> {
+        for st in &partition.stages {
+            log::info!(
+                "partition stage {}: {:.1}ms → {} parts",
+                st.name,
+                st.secs * 1e3,
+                st.parts
+            );
+        }
+        let mut report = self.run(dataset, &partition.partitioning)?;
+        report.partition_stages = partition.stages.clone();
+        Ok(report)
     }
 
     /// Run distributed training of `dataset` over `partitioning`.
@@ -289,6 +314,7 @@ impl Coordinator {
         Ok(TrainReport {
             per_partition: stats,
             eval,
+            partition_stages: Vec::new(),
             wall_secs: sw.secs(),
             max_partition_train_secs,
             total_train_secs,
@@ -326,6 +352,23 @@ mod tests {
         assert!(report.eval.test_metric >= 0.0);
         assert!(report.max_partition_train_secs > 0.0);
         assert!(report.total_train_secs >= report.max_partition_train_secs);
+    }
+
+    #[test]
+    fn run_report_carries_partition_stage_timings() {
+        let Some(cfg) = cfg_if_built() else { return };
+        let ds = karate_dataset(5);
+        let preport = crate::partition::PartitionPipeline::parse("lf", 1)
+            .unwrap()
+            .run(&ds.graph, 2)
+            .unwrap();
+        let report = Coordinator::new(cfg).run_report(&ds, &preport).unwrap();
+        let names: Vec<&str> = report
+            .partition_stages
+            .iter()
+            .map(|s| s.name.as_str())
+            .collect();
+        assert_eq!(names, vec!["leiden", "fusion", "validate"]);
     }
 
     #[test]

@@ -15,9 +15,17 @@
 //! * **L2/L1 (python/, build-time only)** — JAX GCN/GraphSAGE/MLP models on
 //!   Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!
-//! See `DESIGN.md` for the system inventory (including the shard format
-//! and query path under *Serving*) and `EXPERIMENTS.md` for the
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory (including the shard format,
+//! the query path under *Serving*, and the partitioning spec grammar
+//! under *Partitioning*) and `EXPERIMENTS.md` for the paper-vs-measured
+//! results.
+
+// Style lints that fight the index-driven numeric idiom used throughout
+// (CSR arrays are addressed by node id, `Option::map_or(true, …)` reads
+// as the tri-state it models); correctness lints stay enabled and CI
+// runs `clippy --all-targets -- -D warnings`.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::unnecessary_map_or)]
 
 pub mod benchkit;
 pub mod cli;

@@ -11,6 +11,7 @@
 //!   info       — dataset + artifact inventory
 //!
 //! Examples:
+//!   repro partition --dataset arxiv --spec "leiden(gamma=0.7)+fusion(alpha=0.05)" --k 8
 //!   repro partition --dataset arxiv --method lf --k 8
 //!   repro train --config configs/arxiv_lf.toml
 //!   repro train --dataset karate --k 2 --epochs 40 --model gcn --shards /tmp/karate_shards
@@ -27,7 +28,9 @@ use leiden_fusion::data::{
     ProteinsLikeConfig,
 };
 use leiden_fusion::graph::NodeId;
-use leiden_fusion::partition::{by_name, PartitionQuality, Partitioning};
+use leiden_fusion::partition::{
+    PartitionPipeline, PartitionReport, PartitionSpec, PipelineEvent,
+};
 use leiden_fusion::runtime::{default_artifacts_dir, Manifest};
 use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
 use leiden_fusion::train::ModelKind;
@@ -40,16 +43,25 @@ const USAGE: &str = "\
 repro — Leiden-Fusion distributed graph-embedding training + serving
 
 USAGE:
-  repro partition --dataset <karate|arxiv|proteins> --method <lf|metis|lpa|random|metis+f|lpa+f>
+  repro partition --dataset <karate|arxiv|proteins> [--spec SPEC | --method NAME]
                   [--k 4] [--n 0] [--seed 42]
-  repro train     [--config file.toml] [--dataset arxiv] [--method lf] [--k 4]
-                  [--model gcn|sage] [--mode inner|repli] [--epochs 80]
+  repro train     [--config file.toml] [--dataset arxiv] [--spec SPEC | --method NAME]
+                  [--k 4] [--model gcn|sage] [--mode inner|repli] [--epochs 80]
                   [--machines 4] [--n 0] [--seed 42] [--shards dir]
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
   repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
                   [--artifacts dir] [--warm]   (interactive: node ids on stdin)
   repro query     --shards dir --nodes 0,5,9 [--batch 64] [--workers 2]
   repro info      (dataset defaults + compiled artifact inventory)
+
+SPEC grammar (stages joined by '+', optional key=value parameters):
+  detect:     leiden(gamma,beta,theta) | louvain(gamma,beta) |
+              metis(imbalance) | lpa(iters,slack) | random
+  transforms: fusion(alpha) | balance(slack)
+  suffix:     !novalidate  (skip the invariant-checking stage)
+  examples:   \"leiden(gamma=0.7,beta=0.05)+fusion(alpha=0.05)\", \"metis+fusion\"
+  legacy --method names still work: lf, leiden, louvain, metis, lpa,
+  random, metis+f, lpa+f, louvain+f
 ";
 
 /// Boolean switches (never bind the next token as a value).
@@ -132,28 +144,40 @@ fn load_dataset(name: &str, n: usize, seed: u64) -> Result<Dataset> {
     }
 }
 
+/// `--spec` (grammar) wins over `--method` (legacy alias); default `lf`.
+fn spec_from_args(args: &Args) -> Result<PartitionSpec> {
+    let spec = args.get("spec");
+    if spec.is_some() && args.get("method").is_some() {
+        log::warn!("--method ignored: --spec wins");
+    }
+    spec.or_else(|| args.get("method")).unwrap_or("lf").parse()
+}
+
 fn cmd_partition(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "arxiv");
-    let method = args.str_or("method", "lf");
+    let spec = spec_from_args(args)?;
     let k = args.usize_or("k", 4)?;
     let seed = args.u64_or("seed", 42)?;
     let n = args.usize_or("n", 0)?;
 
     let ds = load_dataset(&dataset, n, seed)?;
-    let sw = Stopwatch::start();
-    let p = by_name(&method, seed)?.partition(&ds.graph, k)?;
-    let secs = sw.secs();
-    let q = PartitionQuality::measure(&ds.graph, &p);
-
     println!(
-        "dataset={} nodes={} edges={} method={} k={} time={}",
+        "dataset={} nodes={} edges={} spec={} k={}",
         ds.name,
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
-        method,
-        k,
-        fmt_duration(secs)
+        spec,
+        k
     );
+    let pipeline = PartitionPipeline::new(spec, seed);
+    let report = pipeline.run_observed(&ds.graph, k, &mut |ev| {
+        if let PipelineEvent::StageFinished { name, secs, parts, .. } = ev {
+            println!("  stage {name:<9} {:>9} → {parts} parts", fmt_duration(*secs));
+        }
+    })?;
+    let q = report.quality(&ds.graph);
+
+    println!("partitioning total: {}", fmt_duration(report.total_secs()));
     let mut t = Table::new(
         "Partition quality (§5.1)",
         &["part", "nodes", "edges", "components", "isolated"],
@@ -188,8 +212,10 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(d) = args.get("dataset") {
         cfg.dataset = d.to_string();
     }
-    if let Some(m) = args.get("method") {
-        cfg.partitioner = m.to_string();
+    // a CLI-provided strategy replaces the config's spec wholesale,
+    // including any [partition] alpha/beta overrides already folded in
+    if args.get("spec").is_some() || args.get("method").is_some() {
+        cfg.spec = spec_from_args(args)?;
     }
     if let Some(m) = args.get("model") {
         cfg.model = ModelKind::parse(m)?;
@@ -217,8 +243,9 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
 fn run_experiment(
     cfg: &ExperimentConfig,
     ds: &Dataset,
-) -> Result<(Partitioning, leiden_fusion::coordinator::TrainReport)> {
-    let p = by_name(&cfg.partitioner, cfg.seed)?.partition(&ds.graph, cfg.k)?;
+) -> Result<(PartitionReport, leiden_fusion::coordinator::TrainReport)> {
+    let pipeline = PartitionPipeline::new(cfg.spec.clone(), cfg.seed);
+    let preport = pipeline.run(&ds.graph, cfg.k)?;
     let mut ccfg = CoordinatorConfig::new(cfg.artifacts_dir.clone());
     ccfg.machines = cfg.machines;
     ccfg.mode = cfg.mode;
@@ -227,8 +254,8 @@ fn run_experiment(
     ccfg.mlp_epochs = cfg.mlp_epochs;
     ccfg.seed = cfg.seed;
     ccfg.shard_dir = cfg.shards_out.clone();
-    let report = Coordinator::new(ccfg).run(ds, &p)?;
-    Ok((p, report))
+    let report = Coordinator::new(ccfg).run_report(ds, &preport)?;
+    Ok((preport, report))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -236,7 +263,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let ds = load_dataset(&cfg.dataset, cfg.dataset_n, cfg.seed)?;
     println!(
         "training {} on {}: k={} model={} mode={} epochs={} machines={}",
-        cfg.partitioner,
+        cfg.spec,
         ds.name,
         cfg.k,
         cfg.model.as_str(),
@@ -244,8 +271,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.epochs,
         cfg.machines
     );
-    let (p, report) = run_experiment(&cfg, &ds)?;
-    let q = PartitionQuality::measure(&ds.graph, &p);
+    let (preport, report) = run_experiment(&cfg, &ds)?;
+    println!("partition stages: {}", preport.stage_summary());
+    let q = preport.quality(&ds.graph);
     let mut t = Table::new(
         "Per-partition training",
         &["part", "nodes", "replicas", "final-loss", "train-time"],
@@ -424,9 +452,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     );
     for method in ["lf", "metis", "lpa"] {
         let mut cfg = base.clone();
-        cfg.partitioner = method.to_string();
-        let (p, report) = run_experiment(&cfg, &ds)?;
-        let q = PartitionQuality::measure(&ds.graph, &p);
+        cfg.spec = method.parse()?;
+        let (preport, report) = run_experiment(&cfg, &ds)?;
+        let q = preport.quality(&ds.graph);
         t.row(vec![
             method.to_string(),
             format!("{:.2}", q.edge_cut_fraction * 100.0),

@@ -43,11 +43,11 @@ struct FusionState {
 
 impl FusionState {
     fn from_partitioning(p: &Partitioning) -> Self {
-        let members = p.members();
         FusionState {
             assign: p.assignments().to_vec(),
-            live: members.iter().filter(|m| !m.is_empty()).count(),
-            members,
+            // cached size counts: no rescan of the member lists
+            live: p.sizes().iter().filter(|&&s| s > 0).count(),
+            members: p.members(),
         }
     }
 
@@ -176,10 +176,38 @@ pub fn fuse_communities(
 ///
 /// Isolated nodes become singleton communities and are absorbed by fusion,
 /// so the output has no isolated nodes on a connected graph.
+#[deprecated(note = "run a `PartitionPipeline` with a `<detect>+fusion` spec instead")]
 pub fn fuse_partitioning(g: &CsrGraph, p: &Partitioning) -> Result<Partitioning> {
     let cfg = FusionConfig::with_alpha(g, p.k(), 0.05);
     let components = split_into_components(g, p);
     fuse_communities(g, &components, &cfg)
+}
+
+/// Wraps a base partitioner with the +F pass. Deprecated alongside
+/// [`super::by_name`]: a `<detect>+fusion` spec run through
+/// `PartitionPipeline` replaces it.
+#[deprecated(note = "run a `PartitionPipeline` with a `<detect>+fusion` spec instead")]
+pub struct FusedPartitioner {
+    base: Box<dyn Partitioner>,
+}
+
+#[allow(deprecated)]
+impl FusedPartitioner {
+    pub fn new(base: Box<dyn Partitioner>) -> Self {
+        FusedPartitioner { base }
+    }
+}
+
+#[allow(deprecated)]
+impl Partitioner for FusedPartitioner {
+    fn name(&self) -> &'static str {
+        "+f"
+    }
+
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
+        let p = self.base.partition(g, k)?;
+        fuse_partitioning(g, &p)
+    }
 }
 
 /// Relabel a partitioning so each connected component of each partition is
@@ -201,28 +229,6 @@ pub fn split_into_components(g: &CsrGraph, p: &Partitioning) -> Partitioning {
         next += info.num_components() as u32;
     }
     Partitioning::from_labels(&labels)
-}
-
-/// Wraps a base partitioner with the +F pass (used by `by_name("metis+f")`).
-pub struct FusedPartitioner {
-    base: Box<dyn Partitioner>,
-}
-
-impl FusedPartitioner {
-    pub fn new(base: Box<dyn Partitioner>) -> Self {
-        FusedPartitioner { base }
-    }
-}
-
-impl Partitioner for FusedPartitioner {
-    fn name(&self) -> &'static str {
-        "+f"
-    }
-
-    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
-        let p = self.base.partition(g, k)?;
-        fuse_partitioning(g, &p)
-    }
 }
 
 #[cfg(test)]
@@ -288,6 +294,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn plus_f_fixes_disconnected_partitions() {
         let g = CsrGraph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)])
             .unwrap();

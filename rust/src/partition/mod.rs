@@ -1,18 +1,46 @@
 //! Graph partitioning: the paper's Leiden-Fusion method plus every baseline
 //! it compares against (METIS-like multilevel, LPA, Random), the "+F"
 //! fusion adapter, and the §5.1 quality metrics.
+//!
+//! The public API is built around three types (see DESIGN.md
+//! "Partitioning"):
+//!
+//! * [`PartitionSpec`] — a parsed, validated strategy description with a
+//!   string grammar, e.g. `leiden(gamma=0.7)+fusion(alpha=0.05)`. Every
+//!   legacy method name (`lf`, `leiden`, `metis`, `lpa`, `random`,
+//!   `metis+f`, `lpa+f`, `louvain+f`) parses as a degenerate spec.
+//! * [`PartitionPipeline`] — the staged executor
+//!   (`detect → [fuse] → [balance] → validate`) with per-stage timing and
+//!   an observer callback for progress events. The validate stage enforces
+//!   the paper's invariants (exact cover, connectivity, no isolated nodes)
+//!   for fused specs and is skippable via `!novalidate`.
+//! * [`PartitionReport`] — the pipeline's return value: the
+//!   [`Partitioning`], per-stage wall times, and lazily-computed
+//!   [`PartitionQuality`].
+//!
+//! The free functions [`by_name`] and [`fusion::fuse_partitioning`] are
+//! deprecated shims over this API, kept for one release.
 
 pub mod fusion;
 pub mod leiden;
 pub mod louvain;
 pub mod lpa;
 pub mod metis;
+pub mod pipeline;
 pub mod quality;
 pub mod random;
+pub mod spec;
 
-pub use fusion::{fuse_communities, fuse_partitioning, FusionConfig};
+pub use fusion::{fuse_communities, FusionConfig};
+#[allow(deprecated)]
+pub use fusion::fuse_partitioning;
 pub use leiden::{leiden, leiden_fusion, LeidenConfig};
+pub use pipeline::{
+    PartitionPipeline, PartitionReport, PipelineEvent, SpecPartitioner, Stage,
+    StageCtx, StageTiming,
+};
 pub use quality::PartitionQuality;
+pub use spec::{registered_specs, PartitionSpec, StageSpec};
 
 use crate::error::{Error, Result};
 use crate::graph::{CsrGraph, NodeId};
@@ -21,11 +49,14 @@ use crate::graph::{CsrGraph, NodeId};
 ///
 /// Invariant: `assign` is an exact cover — every node has exactly one
 /// partition id in `0..k` (enforced by [`Partitioning::new`], relied on by
-/// property tests).
+/// property tests). Per-partition node counts are computed once at
+/// construction, so [`Partitioning::sizes`] is free on the hot paths
+/// (fusion's merge loop, [`PartitionQuality`]).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Partitioning {
     assign: Vec<u32>,
     k: usize,
+    sizes: Vec<usize>,
 }
 
 impl Partitioning {
@@ -37,7 +68,8 @@ impl Partitioning {
         if let Some(&bad) = assign.iter().find(|&&p| p as usize >= k) {
             return Err(Error::Partition(format!("partition id {bad} out of range (k={k})")));
         }
-        Ok(Partitioning { assign, k })
+        let sizes = count_sizes(&assign, k);
+        Ok(Partitioning { assign, k, sizes })
     }
 
     /// Compact arbitrary (possibly sparse) labels to dense `0..k`.
@@ -50,7 +82,9 @@ impl Partitioning {
                 *remap.entry(l).or_insert(next)
             })
             .collect();
-        Partitioning { assign, k: remap.len().max(1) }
+        let k = remap.len().max(1);
+        let sizes = count_sizes(&assign, k);
+        Partitioning { assign, k, sizes }
     }
 
     #[inline]
@@ -73,18 +107,16 @@ impl Partitioning {
         &self.assign
     }
 
-    /// Node count per partition.
-    pub fn sizes(&self) -> Vec<usize> {
-        let mut s = vec![0usize; self.k];
-        for &p in &self.assign {
-            s[p as usize] += 1;
-        }
-        s
+    /// Node count per partition (cached at construction — O(1)).
+    #[inline]
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
     }
 
     /// Members of each partition, in node order.
     pub fn members(&self) -> Vec<Vec<NodeId>> {
-        let mut m = vec![Vec::new(); self.k];
+        let mut m: Vec<Vec<NodeId>> =
+            self.sizes.iter().map(|&s| Vec::with_capacity(s)).collect();
         for (v, &p) in self.assign.iter().enumerate() {
             m[p as usize].push(v as NodeId);
         }
@@ -97,10 +129,18 @@ impl Partitioning {
     }
 }
 
+fn count_sizes(assign: &[u32], k: usize) -> Vec<usize> {
+    let mut s = vec![0usize; k];
+    for &p in assign {
+        s[p as usize] += 1;
+    }
+    s
+}
+
 /// Common interface so benches/CLI can switch methods by name.
 pub trait Partitioner {
     /// Human-readable method name (appears in bench tables).
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &str;
 
     /// Partition `g` into `k` parts.
     fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning>;
@@ -113,22 +153,13 @@ pub fn cut_edges(g: &CsrGraph, p: &Partitioning) -> usize {
         .count()
 }
 
-/// Resolve a partitioner by name: `lf`, `leiden`, `metis`, `lpa`, `random`.
+/// Resolve a partitioner by name: any [`PartitionSpec`] string, including
+/// the legacy names `lf`, `leiden`, `metis`, `lpa`, `random`, `metis+f`,
+/// `lpa+f`, `louvain+f`.
+#[deprecated(note = "parse a `PartitionSpec` and run a `PartitionPipeline` instead")]
 pub fn by_name(name: &str, seed: u64) -> Result<Box<dyn Partitioner>> {
-    match name {
-        "lf" | "leiden-fusion" => Ok(Box::new(leiden::LeidenFusionPartitioner::new(seed))),
-        "metis" => Ok(Box::new(metis::MetisPartitioner::new(seed))),
-        "lpa" => Ok(Box::new(lpa::LpaPartitioner::new(seed))),
-        "random" => Ok(Box::new(random::RandomPartitioner::new(seed))),
-        "metis+f" => Ok(Box::new(fusion::FusedPartitioner::new(
-            Box::new(metis::MetisPartitioner::new(seed)),
-        ))),
-        "lpa+f" => Ok(Box::new(fusion::FusedPartitioner::new(
-            Box::new(lpa::LpaPartitioner::new(seed)),
-        ))),
-        "louvain+f" => Ok(Box::new(louvain::LouvainFusionPartitioner { seed })),
-        _ => Err(Error::Partition(format!("unknown partitioner {name:?}"))),
-    }
+    let spec: PartitionSpec = name.parse()?;
+    Ok(Box::new(SpecPartitioner::new(spec, seed)))
 }
 
 #[cfg(test)]
@@ -163,6 +194,17 @@ mod tests {
     }
 
     #[test]
+    fn cached_sizes_match_a_rescan() {
+        let p = Partitioning::from_labels(&[5, 5, 2, 9, 2, 2, 9]);
+        let mut rescan = vec![0usize; p.k()];
+        for &x in p.assignments() {
+            rescan[x as usize] += 1;
+        }
+        assert_eq!(p.sizes(), rescan);
+        assert_eq!(p.sizes().iter().sum::<usize>(), p.num_nodes());
+    }
+
+    #[test]
     fn cut_edges_on_karate_split() {
         let g = karate_graph();
         // everything in one partition → no cuts
@@ -178,10 +220,29 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn by_name_resolves_all() {
-        for name in ["lf", "metis", "lpa", "random", "metis+f", "lpa+f"] {
+        // the doc comment advertises `leiden`; the shim must accept it,
+        // along with every other legacy name (including `louvain+f`)
+        for name in [
+            "lf", "leiden", "louvain", "metis", "lpa", "random", "metis+f",
+            "lpa+f", "louvain+f",
+        ] {
             assert!(by_name(name, 0).is_ok(), "{name}");
         }
         assert!(by_name("nope", 0).is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn by_name_shim_matches_pipeline_output() {
+        let g = karate_graph();
+        let shim = by_name("lf", 1).unwrap().partition(&g, 2).unwrap();
+        let direct = PartitionPipeline::parse("lf", 1)
+            .unwrap()
+            .run(&g, 2)
+            .unwrap()
+            .into_partitioning();
+        assert_eq!(shim.assignments(), direct.assignments());
     }
 }

@@ -1,0 +1,753 @@
+//! `PartitionPipeline` — the staged executor behind every partitioning
+//! run: `detect → [fuse] → [balance] → validate`, built from a
+//! [`PartitionSpec`].
+//!
+//! Each stage is a trait object with a name and its own wall-clock
+//! timing; an observer callback streams per-stage progress events (the
+//! same pattern the coordinator reuses for training progress). The
+//! pipeline returns a [`PartitionReport`] bundling the final
+//! [`Partitioning`], per-stage timings, and a lazily-computed
+//! [`PartitionQuality`], so call sites stop recomputing metrics ad-hoc.
+
+use super::fusion::{fuse_communities, split_into_components, FusionConfig};
+use super::leiden::{leiden, LeidenConfig};
+use super::louvain::{louvain, LouvainConfig};
+use super::lpa::LpaPartitioner;
+use super::metis::MetisPartitioner;
+use super::quality::PartitionQuality;
+use super::random::RandomPartitioner;
+use super::spec::{
+    PartitionSpec, StageSpec, DEFAULT_ALPHA, DEFAULT_BALANCE_SLACK, DEFAULT_GAMMA,
+    DEFAULT_IMBALANCE, DEFAULT_LPA_ITERS, DEFAULT_LPA_SLACK, DEFAULT_THETA,
+};
+use super::{Partitioner, Partitioning};
+use crate::error::{Error, Result};
+use crate::graph::{is_connected, CsrGraph};
+use crate::util::{fmt_duration, Stopwatch};
+use std::cell::OnceCell;
+
+/// Context shared by every stage of one pipeline run.
+pub struct StageCtx<'a> {
+    pub graph: &'a CsrGraph,
+    /// Target partition count.
+    pub k: usize,
+    pub seed: u64,
+}
+
+/// One pipeline stage. Detection stages ignore `input`; transform stages
+/// require it.
+pub trait Stage {
+    /// Stage name (appears in progress events and `PartitionReport`).
+    fn name(&self) -> &'static str;
+
+    /// Produce or refine a partitioning.
+    fn run(&self, ctx: &StageCtx, input: Option<Partitioning>) -> Result<Partitioning>;
+}
+
+/// Progress event streamed to the pipeline observer.
+#[derive(Debug)]
+pub enum PipelineEvent<'a> {
+    PipelineStarted {
+        spec: &'a PartitionSpec,
+        k: usize,
+        num_stages: usize,
+    },
+    StageStarted {
+        index: usize,
+        name: &'a str,
+    },
+    StageFinished {
+        index: usize,
+        name: &'a str,
+        secs: f64,
+        /// Partition/community count of the stage's output.
+        parts: usize,
+        /// The stage's output — lets observers inspect intermediate
+        /// results (e.g. the pre-fusion partitioning) without a second
+        /// pipeline run.
+        output: &'a Partitioning,
+    },
+}
+
+/// Wall time and output size of one executed stage.
+#[derive(Clone, Debug)]
+pub struct StageTiming {
+    pub name: String,
+    pub secs: f64,
+    pub parts: usize,
+}
+
+/// The pipeline's return value: the partitioning plus everything a bench
+/// or subcommand usually recomputes by hand.
+#[derive(Clone, Debug)]
+pub struct PartitionReport {
+    pub spec: PartitionSpec,
+    pub partitioning: Partitioning,
+    /// Per-stage wall times in execution order.
+    pub stages: Vec<StageTiming>,
+    quality: OnceCell<PartitionQuality>,
+}
+
+impl PartitionReport {
+    /// Total partitioning wall time (sum of stage times).
+    pub fn total_secs(&self) -> f64 {
+        self.stages.iter().map(|s| s.secs).sum()
+    }
+
+    /// Wall time of the algorithmic stages only (validation excluded) —
+    /// what timing benches should report, since validation cost depends
+    /// on the spec's strictness, not the method under test.
+    pub fn algorithm_secs(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.name != "validate")
+            .map(|s| s.secs)
+            .sum()
+    }
+
+    /// §5.1 quality metrics, computed on first use and cached. `g` must
+    /// be the graph the pipeline ran on — later calls return the cached
+    /// metrics regardless of the graph passed.
+    pub fn quality(&self, g: &CsrGraph) -> &PartitionQuality {
+        debug_assert_eq!(
+            g.num_nodes(),
+            self.partitioning.num_nodes(),
+            "quality() called with a different graph than the pipeline ran on"
+        );
+        self.quality
+            .get_or_init(|| PartitionQuality::measure(g, &self.partitioning))
+    }
+
+    pub fn into_partitioning(self) -> Partitioning {
+        self.partitioning
+    }
+
+    /// One-line human summary, e.g. `leiden 41.2ms + fusion 2.1ms`.
+    pub fn stage_summary(&self) -> String {
+        let parts: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| format!("{} {}", s.name, fmt_duration(s.secs)))
+            .collect();
+        parts.join(" + ")
+    }
+}
+
+/// The staged partitioning executor.
+pub struct PartitionPipeline {
+    spec: PartitionSpec,
+    seed: u64,
+    stages: Vec<Box<dyn Stage>>,
+}
+
+impl PartitionPipeline {
+    /// Build the stage list for `spec`. The spec is already validated by
+    /// its parser, so construction cannot fail.
+    pub fn new(spec: PartitionSpec, seed: u64) -> Self {
+        let stages = build_stages(&spec);
+        PartitionPipeline { spec, seed, stages }
+    }
+
+    /// Parse `spec` (grammar or legacy name) and build the pipeline.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        Ok(Self::new(spec.parse()?, seed))
+    }
+
+    pub fn spec(&self) -> &PartitionSpec {
+        &self.spec
+    }
+
+    pub fn stage_names(&self) -> Vec<&'static str> {
+        self.stages.iter().map(|s| s.name()).collect()
+    }
+
+    /// Run without an observer.
+    pub fn run(&self, g: &CsrGraph, k: usize) -> Result<PartitionReport> {
+        self.run_observed(g, k, &mut |_| {})
+    }
+
+    /// Run, streaming a [`PipelineEvent`] to `observer` around each stage.
+    pub fn run_observed(
+        &self,
+        g: &CsrGraph,
+        k: usize,
+        observer: &mut dyn FnMut(&PipelineEvent),
+    ) -> Result<PartitionReport> {
+        if k == 0 {
+            return Err(Error::Partition("k must be positive".into()));
+        }
+        observer(&PipelineEvent::PipelineStarted {
+            spec: &self.spec,
+            k,
+            num_stages: self.stages.len(),
+        });
+        let ctx = StageCtx { graph: g, k, seed: self.seed };
+        let mut current: Option<Partitioning> = None;
+        let mut timings = Vec::with_capacity(self.stages.len());
+        for (index, stage) in self.stages.iter().enumerate() {
+            observer(&PipelineEvent::StageStarted { index, name: stage.name() });
+            let sw = Stopwatch::start();
+            let next = stage.run(&ctx, current.take())?;
+            let secs = sw.secs();
+            observer(&PipelineEvent::StageFinished {
+                index,
+                name: stage.name(),
+                secs,
+                parts: next.k(),
+                output: &next,
+            });
+            timings.push(StageTiming {
+                name: stage.name().to_string(),
+                secs,
+                parts: next.k(),
+            });
+            current = Some(next);
+        }
+        let partitioning = current
+            .ok_or_else(|| Error::Partition("pipeline has no stages".into()))?;
+        Ok(PartitionReport {
+            spec: self.spec.clone(),
+            partitioning,
+            stages: timings,
+            quality: OnceCell::new(),
+        })
+    }
+}
+
+/// [`Partitioner`] adapter over a pipeline — what the deprecated
+/// [`super::by_name`] shim hands out, and a drop-in for code that still
+/// passes trait objects around.
+pub struct SpecPartitioner {
+    label: String,
+    pipeline: PartitionPipeline,
+}
+
+impl SpecPartitioner {
+    pub fn new(spec: PartitionSpec, seed: u64) -> Self {
+        SpecPartitioner {
+            label: spec.to_string(),
+            pipeline: PartitionPipeline::new(spec, seed),
+        }
+    }
+}
+
+impl Partitioner for SpecPartitioner {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn partition(&self, g: &CsrGraph, k: usize) -> Result<Partitioning> {
+        Ok(self.pipeline.run(g, k)?.into_partitioning())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stage construction
+// ---------------------------------------------------------------------------
+
+fn build_stages(spec: &PartitionSpec) -> Vec<Box<dyn Stage>> {
+    // Leiden/Louvain's size cap S = β·max_part_size depends on the fusion
+    // stage's α, so wire it across stages here.
+    let fusion_alpha = spec.stages().iter().find_map(|s| match s {
+        StageSpec::Fusion { alpha } => Some(alpha.unwrap_or(DEFAULT_ALPHA)),
+        _ => None,
+    });
+    // Leiden communities are connected by construction; every other
+    // detector needs the component-split pass before fusion (§5.4).
+    let detect_is_leiden =
+        matches!(spec.stages().first(), Some(StageSpec::Leiden { .. }));
+
+    let mut out: Vec<Box<dyn Stage>> = Vec::new();
+    for st in spec.stages() {
+        match st {
+            StageSpec::Leiden { gamma, beta, theta } => out.push(Box::new(LeidenStage {
+                gamma: gamma.unwrap_or(DEFAULT_GAMMA),
+                theta: theta.unwrap_or(DEFAULT_THETA),
+                cap_beta: *beta,
+                cap_alpha: fusion_alpha,
+            })),
+            StageSpec::Louvain { gamma, beta } => out.push(Box::new(LouvainStage {
+                gamma: gamma.unwrap_or(DEFAULT_GAMMA),
+                cap_beta: *beta,
+                cap_alpha: fusion_alpha,
+            })),
+            StageSpec::Metis { imbalance } => out.push(Box::new(MetisStage {
+                imbalance: imbalance.unwrap_or(DEFAULT_IMBALANCE),
+            })),
+            StageSpec::Lpa { iters, slack } => out.push(Box::new(LpaStage {
+                iters: iters.unwrap_or(DEFAULT_LPA_ITERS),
+                slack: slack.unwrap_or(DEFAULT_LPA_SLACK),
+            })),
+            StageSpec::Random => out.push(Box::new(RandomStage)),
+            StageSpec::Fusion { alpha } => out.push(Box::new(FusionStage {
+                alpha: alpha.unwrap_or(DEFAULT_ALPHA),
+                split: !detect_is_leiden,
+            })),
+            StageSpec::Balance { slack } => out.push(Box::new(BalanceStage {
+                slack: slack.unwrap_or(DEFAULT_BALANCE_SLACK),
+            })),
+        }
+    }
+    if spec.validate_enabled() {
+        out.push(Box::new(ValidateStage { strict: spec.is_fused() }));
+    }
+    out
+}
+
+/// The paper's α balance bound — delegates to [`FusionConfig::with_alpha`]
+/// so the detect-stage cap and fusion's bound can never drift apart.
+fn max_part_size(g: &CsrGraph, k: usize, alpha: f64) -> usize {
+    FusionConfig::with_alpha(g, k, alpha).max_part_size
+}
+
+/// Definition 1's community-size cap `S = β·max_part_size`, shared by the
+/// Leiden and Louvain stages. Both parameters `None` means bare community
+/// detection: uncapped.
+fn community_size_cap(g: &CsrGraph, k: usize, beta: Option<f64>, alpha: Option<f64>) -> usize {
+    if beta.is_none() && alpha.is_none() {
+        return usize::MAX;
+    }
+    let beta = beta.unwrap_or(super::spec::DEFAULT_BETA);
+    let alpha = alpha.unwrap_or(DEFAULT_ALPHA);
+    ((beta * max_part_size(g, k, alpha) as f64).ceil() as usize).max(1)
+}
+
+fn require_input(input: Option<Partitioning>, stage: &str) -> Result<Partitioning> {
+    input.ok_or_else(|| {
+        Error::Partition(format!("stage {stage:?} needs an upstream partitioning"))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// stage implementations (thin adapters over the existing algorithms)
+// ---------------------------------------------------------------------------
+
+struct LeidenStage {
+    gamma: f64,
+    theta: f64,
+    /// Explicit β, if set in the spec.
+    cap_beta: Option<f64>,
+    /// Downstream fusion α (None when the spec has no fusion stage).
+    cap_alpha: Option<f64>,
+}
+
+impl Stage for LeidenStage {
+    fn name(&self) -> &'static str {
+        "leiden"
+    }
+
+    fn run(&self, ctx: &StageCtx, _input: Option<Partitioning>) -> Result<Partitioning> {
+        let cfg = LeidenConfig {
+            gamma: self.gamma,
+            max_community_size: community_size_cap(
+                ctx.graph,
+                ctx.k,
+                self.cap_beta,
+                self.cap_alpha,
+            ),
+            theta: self.theta,
+            seed: ctx.seed,
+            ..LeidenConfig::default()
+        };
+        Ok(leiden(ctx.graph, &cfg))
+    }
+}
+
+struct LouvainStage {
+    gamma: f64,
+    cap_beta: Option<f64>,
+    cap_alpha: Option<f64>,
+}
+
+impl Stage for LouvainStage {
+    fn name(&self) -> &'static str {
+        "louvain"
+    }
+
+    fn run(&self, ctx: &StageCtx, _input: Option<Partitioning>) -> Result<Partitioning> {
+        let cfg = LouvainConfig {
+            gamma: self.gamma,
+            max_community_size: community_size_cap(
+                ctx.graph,
+                ctx.k,
+                self.cap_beta,
+                self.cap_alpha,
+            ),
+            seed: ctx.seed,
+            ..LouvainConfig::default()
+        };
+        Ok(louvain(ctx.graph, &cfg))
+    }
+}
+
+struct MetisStage {
+    imbalance: f64,
+}
+
+impl Stage for MetisStage {
+    fn name(&self) -> &'static str {
+        "metis"
+    }
+
+    fn run(&self, ctx: &StageCtx, _input: Option<Partitioning>) -> Result<Partitioning> {
+        let mut p = MetisPartitioner::new(ctx.seed);
+        p.imbalance = self.imbalance;
+        p.partition(ctx.graph, ctx.k)
+    }
+}
+
+struct LpaStage {
+    iters: usize,
+    slack: f64,
+}
+
+impl Stage for LpaStage {
+    fn name(&self) -> &'static str {
+        "lpa"
+    }
+
+    fn run(&self, ctx: &StageCtx, _input: Option<Partitioning>) -> Result<Partitioning> {
+        let mut p = LpaPartitioner::new(ctx.seed);
+        p.max_iters = self.iters;
+        p.capacity_slack = self.slack;
+        p.partition(ctx.graph, ctx.k)
+    }
+}
+
+struct RandomStage;
+
+impl Stage for RandomStage {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn run(&self, ctx: &StageCtx, _input: Option<Partitioning>) -> Result<Partitioning> {
+        RandomPartitioner::new(ctx.seed).partition(ctx.graph, ctx.k)
+    }
+}
+
+struct FusionStage {
+    alpha: f64,
+    /// Split input partitions into connected components first (needed for
+    /// every detector except Leiden).
+    split: bool,
+}
+
+impl Stage for FusionStage {
+    fn name(&self) -> &'static str {
+        "fusion"
+    }
+
+    fn run(&self, ctx: &StageCtx, input: Option<Partitioning>) -> Result<Partitioning> {
+        let p = require_input(input, "fusion")?;
+        let cfg = FusionConfig::with_alpha(ctx.graph, ctx.k, self.alpha);
+        let communities = if self.split {
+            split_into_components(ctx.graph, &p)
+        } else {
+            p
+        };
+        fuse_communities(ctx.graph, &communities, &cfg)
+    }
+}
+
+struct BalanceStage {
+    slack: f64,
+}
+
+impl Stage for BalanceStage {
+    fn name(&self) -> &'static str {
+        "balance"
+    }
+
+    fn run(&self, ctx: &StageCtx, input: Option<Partitioning>) -> Result<Partitioning> {
+        let p = require_input(input, "balance")?;
+        let g = ctx.graph;
+        let n = g.num_nodes();
+        let k = p.k();
+        if k <= 1 {
+            return Ok(p);
+        }
+        let cap = max_part_size(g, k, self.slack);
+        let mut assign = p.assignments().to_vec();
+        let mut sizes = p.sizes().to_vec();
+        // generation-stamped scratch so the per-move BFS never reallocates
+        let mut visited = vec![0u32; n];
+        let mut gen = 0u32;
+        // Bounded sweeps: move boundary nodes out of over-capacity
+        // partitions into their smallest under-capacity neighbour, but
+        // only when the move keeps the source partition in one piece (the
+        // fusion invariant must survive rebalancing).
+        for _pass in 0..8 {
+            let mut moved = false;
+            for v in 0..n as u32 {
+                let src = assign[v as usize];
+                if sizes[src as usize] <= cap {
+                    continue;
+                }
+                let mut best: Option<(usize, u32)> = None;
+                for &u in g.neighbors(v) {
+                    let q = assign[u as usize];
+                    if q != src && sizes[q as usize] < cap {
+                        let cand = (sizes[q as usize], q);
+                        if best.map_or(true, |b| cand < b) {
+                            best = Some(cand);
+                        }
+                    }
+                }
+                let Some((_, dst)) = best else { continue };
+                if !connected_without(
+                    g,
+                    &assign,
+                    src,
+                    v,
+                    sizes[src as usize],
+                    &mut visited,
+                    &mut gen,
+                ) {
+                    continue;
+                }
+                assign[v as usize] = dst;
+                sizes[src as usize] -= 1;
+                sizes[dst as usize] += 1;
+                moved = true;
+            }
+            if !moved {
+                break;
+            }
+        }
+        Partitioning::new(assign, k)
+    }
+}
+
+/// Is partition `part` minus node `v` still one connected component?
+/// BFS restricted to the partition's induced subgraph, so the cost is
+/// bounded by the partition's internal edges, not the whole graph.
+fn connected_without(
+    g: &CsrGraph,
+    assign: &[u32],
+    part: u32,
+    v: u32,
+    part_size: usize,
+    visited: &mut [u32],
+    gen: &mut u32,
+) -> bool {
+    if part_size <= 1 {
+        return false; // the move would empty the partition
+    }
+    let start = match g
+        .neighbors(v)
+        .iter()
+        .find(|&&u| assign[u as usize] == part)
+    {
+        Some(&u) => u,
+        // v has no in-partition neighbour: it is already isolated there,
+        // so moving it out strictly improves structure
+        None => return true,
+    };
+    *gen += 1;
+    let tag = *gen;
+    visited[start as usize] = tag;
+    let mut stack = vec![start];
+    let mut seen = 1usize;
+    while let Some(u) = stack.pop() {
+        for &w in g.neighbors(u) {
+            if w == v || assign[w as usize] != part || visited[w as usize] == tag {
+                continue;
+            }
+            visited[w as usize] = tag;
+            seen += 1;
+            stack.push(w);
+        }
+    }
+    seen == part_size - 1
+}
+
+struct ValidateStage {
+    /// Enforce the paper's structural guarantee (only meaningful for
+    /// fusion-terminated specs on connected graphs).
+    strict: bool,
+}
+
+impl Stage for ValidateStage {
+    fn name(&self) -> &'static str {
+        "validate"
+    }
+
+    fn run(&self, ctx: &StageCtx, input: Option<Partitioning>) -> Result<Partitioning> {
+        let p = require_input(input, "validate")?;
+        // Exact cover with in-range ids is enforced by `Partitioning::new`;
+        // re-check the graph/partitioning pairing here.
+        if p.num_nodes() != ctx.graph.num_nodes() {
+            return Err(Error::Partition(format!(
+                "validate: partitioning covers {} nodes, graph has {}",
+                p.num_nodes(),
+                ctx.graph.num_nodes()
+            )));
+        }
+        if self.strict && is_connected(ctx.graph) {
+            // One union-find pass over the edge list checks every
+            // partition at once (components + isolation), instead of a
+            // mask allocation and graph traversal per partition.
+            let n = ctx.graph.num_nodes();
+            let mut parent: Vec<u32> = (0..n as u32).collect();
+            let mut has_internal_nbr = vec![false; n];
+            for (u, v, _) in ctx.graph.edges() {
+                if p.part_of(u) != p.part_of(v) {
+                    continue;
+                }
+                has_internal_nbr[u as usize] = true;
+                has_internal_nbr[v as usize] = true;
+                let (ru, rv) = (uf_find(&mut parent, u), uf_find(&mut parent, v));
+                if ru != rv {
+                    parent[ru as usize] = rv;
+                }
+            }
+            let mut components = vec![0usize; p.k()];
+            for v in 0..n as u32 {
+                if !has_internal_nbr[v as usize] {
+                    return Err(Error::Partition(format!(
+                        "validate: node {v} is isolated in partition {}",
+                        p.part_of(v)
+                    )));
+                }
+                if uf_find(&mut parent, v) == v {
+                    components[p.part_of(v) as usize] += 1;
+                }
+            }
+            for (part, &comps) in components.iter().enumerate() {
+                if p.sizes()[part] == 0 {
+                    return Err(Error::Partition(format!(
+                        "validate: partition {part} is empty"
+                    )));
+                }
+                if comps != 1 {
+                    return Err(Error::Partition(format!(
+                        "validate: partition {part} has {comps} components"
+                    )));
+                }
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// Union-find root with path halving.
+fn uf_find(parent: &mut [u32], mut x: u32) -> u32 {
+    while parent[x as usize] != x {
+        parent[x as usize] = parent[parent[x as usize] as usize];
+        x = parent[x as usize];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+    use crate::partition::leiden::leiden_fusion;
+
+    fn pipeline(spec: &str, seed: u64) -> PartitionPipeline {
+        PartitionPipeline::parse(spec, seed).unwrap()
+    }
+
+    #[test]
+    fn lf_pipeline_matches_legacy_leiden_fusion() {
+        let g = karate_graph();
+        for seed in [1u64, 7, 42] {
+            let report = pipeline("lf", seed).run(&g, 2).unwrap();
+            let legacy = leiden_fusion(&g, 2, 0.05, 0.5, seed).unwrap();
+            assert_eq!(
+                report.partitioning.assignments(),
+                legacy.assignments(),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn stage_timings_cover_every_stage() {
+        let g = karate_graph();
+        let report = pipeline("lf", 1).run(&g, 2).unwrap();
+        let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["leiden", "fusion", "validate"]);
+        assert!(report.total_secs() >= 0.0);
+        assert_eq!(report.stages.last().unwrap().parts, 2);
+    }
+
+    #[test]
+    fn observer_sees_start_and_finish_per_stage() {
+        let g = karate_graph();
+        let p = pipeline("metis+f", 3);
+        let mut started = 0usize;
+        let mut finished = 0usize;
+        p.run_observed(&g, 2, &mut |ev| match ev {
+            PipelineEvent::StageStarted { .. } => started += 1,
+            PipelineEvent::StageFinished { .. } => finished += 1,
+            PipelineEvent::PipelineStarted { num_stages, .. } => {
+                assert_eq!(*num_stages, 3);
+            }
+        })
+        .unwrap();
+        assert_eq!(started, 3);
+        assert_eq!(finished, 3);
+    }
+
+    #[test]
+    fn bare_leiden_is_community_detection() {
+        let g = karate_graph();
+        let report = pipeline("leiden", 1).run(&g, 2).unwrap();
+        // no fusion: output is the community structure, not k parts
+        assert!(report.partitioning.k() >= 2);
+        assert_eq!(report.stages.len(), 2); // leiden + validate (lenient)
+    }
+
+    #[test]
+    fn novalidate_skips_the_validation_stage() {
+        let g = karate_graph();
+        let report = pipeline("lf!novalidate", 1).run(&g, 2).unwrap();
+        let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["leiden", "fusion"]);
+    }
+
+    #[test]
+    fn lazy_quality_is_computed_once() {
+        let g = karate_graph();
+        let report = pipeline("lf", 1).run(&g, 2).unwrap();
+        let q1 = report.quality(&g) as *const _;
+        let q2 = report.quality(&g) as *const _;
+        assert_eq!(q1, q2);
+        assert!(report.quality(&g).is_structurally_ideal());
+    }
+
+    #[test]
+    fn balance_stage_respects_connectivity() {
+        let g = karate_graph();
+        let report = pipeline("leiden+fusion+balance(slack=0.05)", 1)
+            .run(&g, 2)
+            .unwrap();
+        assert!(report.quality(&g).is_structurally_ideal());
+    }
+
+    #[test]
+    fn spec_partitioner_adapts_the_trait() {
+        let g = karate_graph();
+        let p = SpecPartitioner::new("lf".parse().unwrap(), 1);
+        assert_eq!(p.name(), "leiden+fusion");
+        let out = p.partition(&g, 2).unwrap();
+        assert_eq!(out.k(), 2);
+    }
+
+    #[test]
+    fn pipeline_rejects_k_zero() {
+        let g = karate_graph();
+        assert!(pipeline("lf", 1).run(&g, 0).is_err());
+    }
+
+    #[test]
+    fn stage_names_include_validate() {
+        assert_eq!(
+            pipeline("lf", 0).stage_names(),
+            vec!["leiden", "fusion", "validate"]
+        );
+    }
+}

@@ -50,7 +50,7 @@ impl PartitionQuality {
             }
         }
 
-        let node_counts = p.sizes();
+        let node_counts = p.sizes().to_vec();
 
         let mut components = Vec::with_capacity(k);
         let mut isolated = Vec::with_capacity(k);

@@ -1,0 +1,638 @@
+//! `PartitionSpec` — a parsed, validated description of a partitioning
+//! strategy, shared by the CLI (`--spec`), the `[partition]` config
+//! section, and every bench binary.
+//!
+//! Grammar (stages joined by `+`, optional `key=value` parameters):
+//!
+//! ```text
+//! spec    := stage ('+' stage)* ['!novalidate']
+//! stage   := name [ '(' param (',' param)* ')' ]
+//! param   := key '=' value
+//! ```
+//!
+//! The first stage must be a *detection* stage (`leiden`, `louvain`,
+//! `metis`, `lpa`, `random`); later stages are *transforms* (`fusion`,
+//! `balance`). `!novalidate` disables the final validation stage.
+//!
+//! Examples:
+//!
+//! ```text
+//! leiden(gamma=0.7,beta=0.05)+fusion(alpha=0.05)
+//! metis+fusion
+//! lpa(iters=10,slack=0.2)
+//! random
+//! ```
+//!
+//! Every legacy method name is accepted as a degenerate spec: `lf` and
+//! `leiden-fusion` are whole-string aliases for `leiden+fusion`, `f` is a
+//! stage alias for `fusion` (so `metis+f`, `lpa+f`, `louvain+f` parse
+//! naturally), `cap` is a parameter alias for `leiden`/`louvain`'s
+//! `beta`, and `fusion` accepts `beta` as an alias for its `alpha`
+//! balance slack (some "+F" literature calls the slack β — note this is
+//! *unrelated* to the detect stages' size-cap `beta`). `FromStr` and
+//! `Display` round-trip: parsing the canonical printed form yields an
+//! equal spec.
+
+use crate::error::{Error, Result};
+use std::fmt;
+
+/// Default modularity resolution γ for `leiden`/`louvain`.
+pub const DEFAULT_GAMMA: f64 = 1.0;
+/// Default community-size factor β (Definition 1: `S = β·max_part_size`).
+pub const DEFAULT_BETA: f64 = 0.5;
+/// Default Leiden refinement randomness θ.
+pub const DEFAULT_THETA: f64 = 0.01;
+/// Default balance slack α (`max_part_size = n/k·(1+α)`).
+pub const DEFAULT_ALPHA: f64 = 0.05;
+/// Default METIS imbalance tolerance.
+pub const DEFAULT_IMBALANCE: f64 = 0.05;
+/// Default LPA sweep budget.
+pub const DEFAULT_LPA_ITERS: usize = 30;
+/// Default LPA capacity slack.
+pub const DEFAULT_LPA_SLACK: f64 = 0.10;
+/// Default balance-stage slack.
+pub const DEFAULT_BALANCE_SLACK: f64 = 0.05;
+
+/// One stage of a partitioning strategy. Parameters are `None` when not
+/// explicitly set, so `Display` can print only what the user wrote and
+/// the pipeline can fill in context-dependent defaults (e.g. Leiden's
+/// size cap is derived from the fusion stage's α).
+#[derive(Clone, Debug, PartialEq)]
+pub enum StageSpec {
+    /// Leiden community detection (γ, size-cap factor β, refinement θ).
+    Leiden {
+        gamma: Option<f64>,
+        beta: Option<f64>,
+        theta: Option<f64>,
+    },
+    /// Louvain community detection (ablation baseline).
+    Louvain { gamma: Option<f64>, beta: Option<f64> },
+    /// METIS-style multilevel k-way partitioner.
+    Metis { imbalance: Option<f64> },
+    /// Spinner-style label propagation.
+    Lpa {
+        iters: Option<usize>,
+        slack: Option<f64>,
+    },
+    /// Uniform random assignment.
+    Random,
+    /// Greedy community fusion down to k partitions (Algorithm 1).
+    Fusion { alpha: Option<f64> },
+    /// Post-fusion boundary rebalancing under a node-count cap.
+    Balance { slack: Option<f64> },
+}
+
+impl StageSpec {
+    /// Stage name as it appears in the grammar and progress events.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StageSpec::Leiden { .. } => "leiden",
+            StageSpec::Louvain { .. } => "louvain",
+            StageSpec::Metis { .. } => "metis",
+            StageSpec::Lpa { .. } => "lpa",
+            StageSpec::Random => "random",
+            StageSpec::Fusion { .. } => "fusion",
+            StageSpec::Balance { .. } => "balance",
+        }
+    }
+
+    /// Detection stages produce a partitioning from scratch; transforms
+    /// refine an upstream one.
+    pub fn is_detect(&self) -> bool {
+        matches!(
+            self,
+            StageSpec::Leiden { .. }
+                | StageSpec::Louvain { .. }
+                | StageSpec::Metis { .. }
+                | StageSpec::Lpa { .. }
+                | StageSpec::Random
+        )
+    }
+
+    /// Explicitly-set parameters in canonical key order, for `Display`.
+    fn params(&self) -> Vec<(&'static str, String)> {
+        fn push_f(out: &mut Vec<(&'static str, String)>, key: &'static str, v: &Option<f64>) {
+            if let Some(v) = v {
+                out.push((key, format!("{v}")));
+            }
+        }
+        let mut out = Vec::new();
+        match self {
+            StageSpec::Leiden { gamma, beta, theta } => {
+                push_f(&mut out, "gamma", gamma);
+                push_f(&mut out, "beta", beta);
+                push_f(&mut out, "theta", theta);
+            }
+            StageSpec::Louvain { gamma, beta } => {
+                push_f(&mut out, "gamma", gamma);
+                push_f(&mut out, "beta", beta);
+            }
+            StageSpec::Metis { imbalance } => push_f(&mut out, "imbalance", imbalance),
+            StageSpec::Lpa { iters, slack } => {
+                if let Some(i) = iters {
+                    out.push(("iters", format!("{i}")));
+                }
+                push_f(&mut out, "slack", slack);
+            }
+            StageSpec::Random => {}
+            StageSpec::Fusion { alpha } => push_f(&mut out, "alpha", alpha),
+            StageSpec::Balance { slack } => push_f(&mut out, "slack", slack),
+        }
+        out
+    }
+}
+
+impl fmt::Display for StageSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())?;
+        let params = self.params();
+        if !params.is_empty() {
+            let joined: Vec<String> =
+                params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            write!(f, "({})", joined.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// A full partitioning strategy: an ordered stage list plus whether the
+/// final validation stage runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionSpec {
+    stages: Vec<StageSpec>,
+    validate: bool,
+}
+
+impl PartitionSpec {
+    /// The ordered stage list (always starts with a detection stage).
+    pub fn stages(&self) -> &[StageSpec] {
+        &self.stages
+    }
+
+    /// Whether the strategy ends with the paper's fusion pass (and thus
+    /// carries the structural guarantee on connected graphs).
+    pub fn is_fused(&self) -> bool {
+        self.stages
+            .iter()
+            .any(|s| matches!(s, StageSpec::Fusion { .. }))
+    }
+
+    /// Whether the pipeline appends the validation stage.
+    pub fn validate_enabled(&self) -> bool {
+        self.validate
+    }
+
+    /// Disable the validation stage (`!novalidate` in the grammar).
+    pub fn without_validation(mut self) -> Self {
+        self.validate = false;
+        self
+    }
+
+    /// Override the fusion stage's balance slack α. Returns `false` when
+    /// the spec has no fusion stage (the override is meaningless).
+    pub fn set_fusion_alpha(&mut self, alpha: f64) -> bool {
+        for st in &mut self.stages {
+            if let StageSpec::Fusion { alpha: a } = st {
+                *a = Some(alpha);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Override the detection stage's community-size factor β. Returns
+    /// `false` for detectors without a size cap (metis/lpa/random).
+    pub fn set_detect_beta(&mut self, beta: f64) -> bool {
+        match self.stages.first_mut() {
+            Some(StageSpec::Leiden { beta: b, .. })
+            | Some(StageSpec::Louvain { beta: b, .. }) => {
+                *b = Some(beta);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Structural validation: non-empty, detection first, transforms
+    /// after, at most one fusion stage.
+    fn check(&self) -> Result<()> {
+        let first = self
+            .stages
+            .first()
+            .ok_or_else(|| spec_err("empty spec"))?;
+        if !first.is_detect() {
+            return Err(spec_err(&format!(
+                "spec must start with a detection stage, got {:?}",
+                first.name()
+            )));
+        }
+        let mut fusions = 0usize;
+        let mut seen_balance = false;
+        for st in &self.stages[1..] {
+            if st.is_detect() {
+                return Err(spec_err(&format!(
+                    "detection stage {:?} must come first",
+                    st.name()
+                )));
+            }
+            match st {
+                StageSpec::Fusion { .. } => {
+                    if seen_balance {
+                        // the documented order is detect → fuse → balance;
+                        // balancing pre-fusion communities is meaningless
+                        return Err(spec_err("fusion must come before balance"));
+                    }
+                    fusions += 1;
+                }
+                StageSpec::Balance { .. } => {
+                    if seen_balance {
+                        return Err(spec_err("at most one balance stage is allowed"));
+                    }
+                    seen_balance = true;
+                }
+                _ => {}
+            }
+        }
+        if fusions > 1 {
+            return Err(spec_err("at most one fusion stage is allowed"));
+        }
+        Ok(())
+    }
+}
+
+impl Default for PartitionSpec {
+    /// The paper's method: `leiden+fusion` with all-default parameters.
+    fn default() -> Self {
+        PartitionSpec {
+            stages: vec![
+                StageSpec::Leiden { gamma: None, beta: None, theta: None },
+                StageSpec::Fusion { alpha: None },
+            ],
+            validate: true,
+        }
+    }
+}
+
+impl fmt::Display for PartitionSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, st) in self.stages.iter().enumerate() {
+            if i > 0 {
+                write!(f, "+")?;
+            }
+            write!(f, "{st}")?;
+        }
+        if !self.validate {
+            write!(f, "!novalidate")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for PartitionSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let raw = s.trim();
+        if raw.is_empty() {
+            return Err(spec_err("empty spec"));
+        }
+        let (body, validate) = match raw.strip_suffix("!novalidate") {
+            Some(b) => (b.trim_end(), false),
+            None => (raw, true),
+        };
+        // whole-string legacy aliases
+        let body = match body {
+            "lf" | "leiden-fusion" => "leiden+fusion",
+            other => other,
+        };
+        let mut stages = Vec::new();
+        for tok in split_stages(body)? {
+            stages.push(parse_stage(tok)?);
+        }
+        let spec = PartitionSpec { stages, validate };
+        spec.check()?;
+        Ok(spec)
+    }
+}
+
+fn spec_err(msg: &str) -> Error {
+    Error::Partition(format!("spec: {msg}"))
+}
+
+/// Split on `+` outside parentheses; rejects unbalanced parens and empty
+/// segments (trailing or doubled `+`).
+fn split_stages(body: &str) -> Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in body.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| spec_err("unbalanced ')'"))?;
+            }
+            '+' if depth == 0 => {
+                out.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return Err(spec_err("unbalanced '('"));
+    }
+    out.push(&body[start..]);
+    for tok in &out {
+        if tok.trim().is_empty() {
+            return Err(spec_err("empty stage (trailing or doubled '+')"));
+        }
+    }
+    Ok(out)
+}
+
+fn parse_stage(tok: &str) -> Result<StageSpec> {
+    let tok = tok.trim();
+    let (name, params) = match tok.find('(') {
+        Some(i) => {
+            let inner = tok[i + 1..]
+                .strip_suffix(')')
+                .ok_or_else(|| spec_err(&format!("stage {tok:?}: missing ')'")))?;
+            (tok[..i].trim(), parse_params(inner)?)
+        }
+        None => (tok, Vec::new()),
+    };
+    build_stage(name, &params)
+}
+
+fn parse_params(inner: &str) -> Result<Vec<(String, String)>> {
+    if inner.trim().is_empty() {
+        return Err(spec_err("empty parameter list '()'"));
+    }
+    inner
+        .split(',')
+        .map(|kv| {
+            let (k, v) = kv.split_once('=').ok_or_else(|| {
+                spec_err(&format!("parameter {kv:?}: expected key=value"))
+            })?;
+            Ok((k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+fn parse_float(stage: &str, key: &str, v: &str) -> Result<f64> {
+    let f: f64 = v.parse().map_err(|_| {
+        spec_err(&format!("{stage}({key}=...): bad float {v:?}"))
+    })?;
+    if !f.is_finite() || f < 0.0 {
+        return Err(spec_err(&format!(
+            "{stage}({key}=...): value must be finite and non-negative"
+        )));
+    }
+    Ok(f)
+}
+
+fn parse_usize(stage: &str, key: &str, v: &str) -> Result<usize> {
+    let n: usize = v.parse().map_err(|_| {
+        spec_err(&format!("{stage}({key}=...): bad integer {v:?}"))
+    })?;
+    if n == 0 {
+        return Err(spec_err(&format!("{stage}({key}=...): must be positive")));
+    }
+    Ok(n)
+}
+
+/// Assign a parameter slot exactly once; a repeated key (or two aliases
+/// of the same slot) is rejected, not silently last-wins.
+fn set_once<T>(slot: &mut Option<T>, stage: &str, key: &str, val: T) -> Result<()> {
+    if slot.is_some() {
+        return Err(spec_err(&format!(
+            "stage {stage:?}: parameter {key:?} duplicates or conflicts with an earlier one"
+        )));
+    }
+    *slot = Some(val);
+    Ok(())
+}
+
+fn build_stage(name: &str, params: &[(String, String)]) -> Result<StageSpec> {
+    let unknown = |key: &str| {
+        spec_err(&format!("stage {name:?}: unknown parameter {key:?}"))
+    };
+    match name {
+        "leiden" => {
+            let (mut gamma, mut beta, mut theta) = (None, None, None);
+            for (k, v) in params {
+                match k.as_str() {
+                    "gamma" => set_once(&mut gamma, name, k, parse_float(name, k, v)?)?,
+                    "beta" | "cap" => set_once(&mut beta, name, k, parse_float(name, k, v)?)?,
+                    "theta" => set_once(&mut theta, name, k, parse_float(name, k, v)?)?,
+                    other => return Err(unknown(other)),
+                }
+            }
+            Ok(StageSpec::Leiden { gamma, beta, theta })
+        }
+        "louvain" => {
+            let (mut gamma, mut beta) = (None, None);
+            for (k, v) in params {
+                match k.as_str() {
+                    "gamma" => set_once(&mut gamma, name, k, parse_float(name, k, v)?)?,
+                    "beta" | "cap" => set_once(&mut beta, name, k, parse_float(name, k, v)?)?,
+                    other => return Err(unknown(other)),
+                }
+            }
+            Ok(StageSpec::Louvain { gamma, beta })
+        }
+        "metis" => {
+            let mut imbalance = None;
+            for (k, v) in params {
+                match k.as_str() {
+                    "imbalance" => {
+                        set_once(&mut imbalance, name, k, parse_float(name, k, v)?)?
+                    }
+                    other => return Err(unknown(other)),
+                }
+            }
+            Ok(StageSpec::Metis { imbalance })
+        }
+        "lpa" => {
+            let (mut iters, mut slack) = (None, None);
+            for (k, v) in params {
+                match k.as_str() {
+                    "iters" => set_once(&mut iters, name, k, parse_usize(name, k, v)?)?,
+                    "slack" => set_once(&mut slack, name, k, parse_float(name, k, v)?)?,
+                    other => return Err(unknown(other)),
+                }
+            }
+            Ok(StageSpec::Lpa { iters, slack })
+        }
+        "random" => {
+            if !params.is_empty() {
+                return Err(spec_err("stage \"random\" takes no parameters"));
+            }
+            Ok(StageSpec::Random)
+        }
+        "fusion" | "f" => {
+            let mut alpha = None;
+            for (k, v) in params {
+                match k.as_str() {
+                    "alpha" | "beta" => {
+                        set_once(&mut alpha, "fusion", k, parse_float("fusion", k, v)?)?
+                    }
+                    other => return Err(unknown(other)),
+                }
+            }
+            Ok(StageSpec::Fusion { alpha })
+        }
+        "balance" => {
+            let mut slack = None;
+            for (k, v) in params {
+                match k.as_str() {
+                    "slack" => set_once(&mut slack, name, k, parse_float(name, k, v)?)?,
+                    other => return Err(unknown(other)),
+                }
+            }
+            Ok(StageSpec::Balance { slack })
+        }
+        other => Err(spec_err(&format!("unknown stage {other:?}"))),
+    }
+}
+
+/// The standard method registry: every legacy name plus the bare
+/// community detectors, each resolved to its spec. The property tests
+/// assert the paper's structural guarantee for every fused entry; bench
+/// binaries keep curated sub-lists (their table layouts mirror the
+/// paper's figures) but resolve every name through the same grammar.
+pub fn registered_specs() -> Vec<(&'static str, PartitionSpec)> {
+    [
+        "lf", "leiden", "louvain", "metis", "lpa", "random", "metis+f",
+        "lpa+f", "louvain+f",
+    ]
+    .iter()
+    .map(|&name| {
+        let spec: PartitionSpec = name.parse().expect("registered spec parses");
+        (name, spec)
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> PartitionSpec {
+        s.parse().unwrap_or_else(|e| panic!("spec {s:?}: {e}"))
+    }
+
+    #[test]
+    fn legacy_names_parse_and_display() {
+        let cases = [
+            ("lf", "leiden+fusion"),
+            ("leiden-fusion", "leiden+fusion"),
+            ("leiden", "leiden"),
+            ("louvain", "louvain"),
+            ("metis", "metis"),
+            ("lpa", "lpa"),
+            ("random", "random"),
+            ("metis+f", "metis+fusion"),
+            ("lpa+f", "lpa+fusion"),
+            ("louvain+f", "louvain+fusion"),
+        ];
+        for (input, canonical) in cases {
+            let spec = parse(input);
+            assert_eq!(spec.to_string(), canonical, "{input}");
+            // canonical form round-trips to an equal spec
+            assert_eq!(parse(canonical), spec, "{input}");
+        }
+    }
+
+    #[test]
+    fn parameters_round_trip() {
+        let cases = [
+            "leiden(gamma=0.7,beta=0.05)+fusion(alpha=0.1)",
+            "leiden(theta=0.5)+fusion",
+            "metis(imbalance=0.1)+fusion+balance(slack=0.2)",
+            "lpa(iters=10,slack=0.2)",
+            "louvain(gamma=2)+fusion",
+            "random+fusion!novalidate",
+        ];
+        for s in cases {
+            let spec = parse(s);
+            let printed = spec.to_string();
+            assert_eq!(parse(&printed), spec, "{s} → {printed}");
+        }
+    }
+
+    #[test]
+    fn cap_is_an_alias_for_beta() {
+        assert_eq!(
+            parse("leiden(cap=0.25)+fusion"),
+            parse("leiden(beta=0.25)+fusion"),
+        );
+    }
+
+    #[test]
+    fn novalidate_suffix_disables_validation() {
+        assert!(parse("lf").validate_enabled());
+        assert!(!parse("lf!novalidate").validate_enabled());
+        assert_eq!(parse("lf").without_validation(), parse("lf!novalidate"));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let bad = [
+            "",
+            "nope",
+            "leiden+",
+            "+fusion",
+            "leiden++fusion",
+            "fusion",
+            "balance",
+            "leiden+leiden",
+            "leiden+fusion+fusion",
+            "leiden+balance+fusion",
+            "leiden+fusion+balance+balance",
+            "leiden(gamma=1,gamma=2)+fusion",
+            "leiden(beta=0.5,cap=0.5)+fusion",
+            "leiden+fusion(alpha=0.02,beta=0.5)",
+            "leiden(gamma=abc)+fusion",
+            "leiden(gamma=-1)+fusion",
+            "leiden()",
+            "leiden(gamma=1",
+            "leiden(cap)",
+            "lpa(iters=0)",
+            "random(x=1)",
+            "leiden(wat=1)+fusion",
+            "metis+unknown",
+        ];
+        for s in bad {
+            assert!(s.parse::<PartitionSpec>().is_err(), "{s:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn overrides_target_the_right_stages() {
+        let mut spec = parse("lf");
+        assert!(spec.set_fusion_alpha(0.2));
+        assert!(spec.set_detect_beta(0.3));
+        assert_eq!(spec.to_string(), "leiden(beta=0.3)+fusion(alpha=0.2)");
+        let mut bare = parse("metis");
+        assert!(!bare.set_fusion_alpha(0.2));
+        assert!(!bare.set_detect_beta(0.3));
+    }
+
+    #[test]
+    fn registry_contains_all_legacy_names() {
+        let reg = registered_specs();
+        for name in ["lf", "leiden", "metis", "lpa", "random", "metis+f", "lpa+f", "louvain+f"] {
+            assert!(reg.iter().any(|(n, _)| *n == name), "{name} missing");
+        }
+        let fused = reg.iter().filter(|(_, s)| s.is_fused()).count();
+        assert_eq!(fused, 4, "lf, metis+f, lpa+f, louvain+f");
+    }
+
+    #[test]
+    fn default_is_the_paper_method() {
+        assert_eq!(PartitionSpec::default(), parse("lf"));
+    }
+}

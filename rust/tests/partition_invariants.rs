@@ -6,16 +6,30 @@ use leiden_fusion::graph::{components_within, is_connected, CsrGraph};
 use leiden_fusion::partition::fusion::split_into_components;
 use leiden_fusion::partition::leiden::{leiden, leiden_fusion, modularity, LeidenConfig};
 use leiden_fusion::partition::quality::PartitionQuality;
-use leiden_fusion::partition::{by_name, cut_edges, Partitioning};
+use leiden_fusion::partition::{
+    cut_edges, registered_specs, PartitionPipeline, PartitionSpec, Partitioning,
+};
 use leiden_fusion::testing::prop::{check, gens};
 use leiden_fusion::util::rng::Rng;
 
-/// Every partitioner produces an exact cover with ids in range.
+/// Run a spec string through the staged pipeline.
+fn run_spec(
+    g: &CsrGraph,
+    spec: &str,
+    k: usize,
+    seed: u64,
+) -> leiden_fusion::Result<Partitioning> {
+    Ok(PartitionPipeline::parse(spec, seed)?
+        .run(g, k)?
+        .into_partitioning())
+}
+
+/// Every registered spec produces an exact cover with ids in range.
 #[test]
 fn prop_all_partitioners_exact_cover() {
-    for method in ["lf", "metis", "lpa", "random", "metis+f", "lpa+f"] {
+    for (name, _) in registered_specs() {
         check(
-            &format!("exact-cover/{method}"),
+            &format!("exact-cover/{name}"),
             12,
             0xA11,
             |rng| {
@@ -24,10 +38,7 @@ fn prop_all_partitioners_exact_cover() {
                 (g, k)
             },
             |(g, k)| {
-                let p = by_name(method, 5)
-                    .unwrap()
-                    .partition(g, *k)
-                    .map_err(|e| e.to_string())?;
+                let p = run_spec(g, name, *k, 5).map_err(|e| e.to_string())?;
                 if p.num_nodes() != g.num_nodes() {
                     return Err("wrong node count".into());
                 }
@@ -37,6 +48,87 @@ fn prop_all_partitioners_exact_cover() {
                 Ok(())
             },
         );
+    }
+}
+
+/// The paper's guarantee generalised: every registered spec ending in
+/// `+fusion` yields connected, isolate-free partitions of exactly k parts
+/// on random connected graphs.
+#[test]
+fn prop_fused_specs_structurally_ideal() {
+    for (name, spec) in registered_specs() {
+        if !spec.is_fused() {
+            continue;
+        }
+        let verified = std::cell::Cell::new(0usize);
+        check(
+            &format!("fused-ideal/{name}"),
+            10,
+            0xF05E,
+            |rng| {
+                let g = gens::connected_graph(rng, 10, 150, 1.5);
+                let k = 2 + rng.index(3);
+                (g, k)
+            },
+            |(g, k)| {
+                let p = match run_spec(g, name, *k, 5) {
+                    Ok(p) => p,
+                    // LPA may empty a partition, leaving fewer communities
+                    // than k — fusion is then infeasible by construction,
+                    // not a violation of the guarantee
+                    Err(e) if e.to_string().contains("cannot fuse") => return Ok(()),
+                    Err(e) => return Err(e.to_string()),
+                };
+                if p.k() != *k {
+                    return Err(format!("got {} partitions, wanted {k}", p.k()));
+                }
+                let q = PartitionQuality::measure(g, &p);
+                if !q.is_structurally_ideal() {
+                    return Err(format!(
+                        "components {:?}, isolated {:?}",
+                        q.components, q.isolated
+                    ));
+                }
+                verified.set(verified.get() + 1);
+                Ok(())
+            },
+        );
+        // the infeasibility skip must stay an exception, not the rule —
+        // a vacuously green guarantee is no guarantee
+        assert!(
+            verified.get() >= 7,
+            "{name}: only {}/10 cases actually verified",
+            verified.get()
+        );
+    }
+}
+
+/// `PartitionSpec` round-trips through its `Display` form, and malformed
+/// specs are rejected with errors rather than mis-parsed.
+#[test]
+fn spec_grammar_roundtrip_and_rejection() {
+    let good = [
+        "lf",
+        "leiden",
+        "metis",
+        "lpa",
+        "random",
+        "metis+f",
+        "lpa+f",
+        "louvain+f",
+        "leiden(gamma=0.7,beta=0.05)+fusion(alpha=0.1)",
+        "lpa(iters=5,slack=0.3)+fusion!novalidate",
+        "metis(imbalance=0.2)+fusion+balance(slack=0.1)",
+    ];
+    for s in good {
+        let spec: PartitionSpec = s.parse().unwrap_or_else(|e| panic!("{s}: {e}"));
+        let printed = spec.to_string();
+        let reparsed: PartitionSpec = printed.parse().unwrap();
+        assert_eq!(spec, reparsed, "{s} → {printed}");
+    }
+    let bad = ["", "unknownstage", "leiden+", "leiden(gamma=zz)+fusion", "fusion"];
+    for s in bad {
+        assert!(s.parse::<PartitionSpec>().is_err(), "{s:?} must be rejected");
     }
 }
 
@@ -172,10 +264,7 @@ fn prop_quality_identities() {
             let g = gens::connected_graph(rng, 10, 150, 1.5);
             let k = 2 + rng.index(4);
             let mut r2 = Rng::new(rng.next_u64());
-            let p = by_name("random", r2.next_u64())
-                .unwrap()
-                .partition(&g, k)
-                .unwrap();
+            let p = run_spec(&g, "random", k, r2.next_u64()).unwrap();
             (g, p)
         },
         |(g, p)| {
@@ -233,7 +322,8 @@ fn prop_binary_io_roundtrip() {
 }
 
 /// Fusion of any partitioning reaches exactly k connected partitions on
-/// connected inputs.
+/// connected inputs (the `random+fusion` pipeline is the worst case:
+/// maximally fragmented input).
 #[test]
 fn prop_plus_f_reaches_k_connected() {
     check(
@@ -246,9 +336,7 @@ fn prop_plus_f_reaches_k_connected() {
             (g, k)
         },
         |(g, k)| {
-            let p = by_name("random", 3).unwrap().partition(g, *k).unwrap();
-            let fused = leiden_fusion::partition::fusion::fuse_partitioning(g, &p)
-                .map_err(|e| e.to_string())?;
+            let fused = run_spec(g, "random+fusion", *k, 3).map_err(|e| e.to_string())?;
             if fused.k() != *k {
                 return Err(format!("fused to {} != {k}", fused.k()));
             }
@@ -271,8 +359,8 @@ fn prop_partitioners_deterministic() {
             0x5EED,
             |rng| gens::connected_graph(rng, 10, 100, 1.5),
             |g| {
-                let a = by_name(method, 9).unwrap().partition(g, 3).unwrap();
-                let b = by_name(method, 9).unwrap().partition(g, 3).unwrap();
+                let a = run_spec(g, method, 3, 9).unwrap();
+                let b = run_spec(g, method, 3, 9).unwrap();
                 if a.assignments() != b.assignments() {
                     return Err("nondeterministic".into());
                 }

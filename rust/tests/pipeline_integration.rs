@@ -6,7 +6,7 @@ use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::data::{karate_dataset, synth_arxiv, synth_proteins, ArxivLikeConfig,
                           Labels, ProteinsLikeConfig};
 use leiden_fusion::partition::leiden::leiden_fusion;
-use leiden_fusion::partition::{by_name, Partitioning};
+use leiden_fusion::partition::{PartitionPipeline, Partitioning};
 use leiden_fusion::runtime::default_artifacts_dir;
 use leiden_fusion::train::{build_batch, train_partition, Mode, ModelKind, TrainOptions};
 
@@ -155,12 +155,16 @@ fn all_partitioner_outputs_trainable_on_karate() {
     }
     let ds = karate_dataset(7);
     for method in ["lf", "metis", "lpa", "random"] {
-        let p = by_name(method, 5).unwrap().partition(&ds.graph, 2).unwrap();
-        let report = Coordinator::new(small_cfg(2)).run(&ds, &p).unwrap();
+        let preport = PartitionPipeline::parse(method, 5)
+            .unwrap()
+            .run(&ds.graph, 2)
+            .unwrap();
+        let report = Coordinator::new(small_cfg(2)).run_report(&ds, &preport).unwrap();
         assert!(
             report.eval.test_metric >= 0.0 && report.eval.test_metric <= 1.0,
             "{method}"
         );
+        assert!(!report.partition_stages.is_empty(), "{method} stage timings");
     }
 }
 
