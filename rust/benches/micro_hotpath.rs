@@ -7,6 +7,7 @@ mod common;
 use leiden_fusion::benchkit::{bench, save_json, Table};
 use leiden_fusion::partition::fusion::{fuse_communities, FusionConfig};
 use leiden_fusion::partition::leiden::{leiden, leiden_fusion as lf, LeidenConfig};
+use leiden_fusion::partition::scratch::NeighborWeights;
 use leiden_fusion::partition::PartitionPipeline;
 use leiden_fusion::runtime::Runtime;
 use leiden_fusion::train::{build_batch, pad_to_bucket, Mode, ModelKind};
@@ -67,6 +68,54 @@ fn main() {
             s[x as usize] += 1;
         }
         std::hint::black_box(s);
+    }));
+
+    // 3d. the scratch kernel vs the HashMap it replaced: per-node
+    // neighbour-community weight accumulation (the inner loop of every
+    // local-move phase), over the whole graph
+    let labels = comms.assignments();
+    let n_comms = comms.k();
+    let mut nw = NeighborWeights::new();
+    nw.reset(n_comms);
+    add("nbr-weights kernel (scratch)", bench(1, 10, budget, || {
+        let mut acc = 0.0f64;
+        for v in 0..ds.graph.num_nodes() as u32 {
+            nw.begin();
+            for (i, &u) in ds.graph.neighbors(v).iter().enumerate() {
+                nw.add(labels[u as usize], ds.graph.weight_at(v, i) as f64);
+            }
+            for &c in nw.touched() {
+                acc += nw.get(c);
+            }
+        }
+        std::hint::black_box(acc);
+    }));
+    add("nbr-weights kernel (hashmap baseline)", bench(1, 10, budget, || {
+        let mut acc = 0.0f64;
+        let mut w_to: std::collections::HashMap<u32, f64> =
+            std::collections::HashMap::new();
+        for v in 0..ds.graph.num_nodes() as u32 {
+            w_to.clear();
+            for (i, &u) in ds.graph.neighbors(v).iter().enumerate() {
+                *w_to.entry(labels[u as usize]).or_insert(0.0) +=
+                    ds.graph.weight_at(v, i) as f64;
+            }
+            for w in w_to.values() {
+                acc += w;
+            }
+        }
+        std::hint::black_box(acc);
+    }));
+
+    // 3e. sort-based CSR coarsening vs the HashMap aggregation it replaced
+    add("coarsen sort-based (1 thread)", bench(1, 10, budget, || {
+        std::hint::black_box(ds.graph.coarsen(labels, n_comms, 1));
+    }));
+    add("coarsen sort-based (4 threads)", bench(1, 10, budget, || {
+        std::hint::black_box(ds.graph.coarsen(labels, n_comms, 4));
+    }));
+    add("coarsen hashmap reference", bench(1, 10, budget, || {
+        std::hint::black_box(ds.graph.coarsen_reference(labels, n_comms));
     }));
 
     // 4. batch construction (inner + repli)

@@ -1,41 +1,75 @@
-//! **Table 3** — partitioning time (s) on arxiv-like across methods and k.
+//! **Table 3** — partitioning time (s) on arxiv-like across methods and k,
+//! plus the perf-trajectory export behind `BENCH_partition.json`.
 //!
 //! Paper's reported shape: LPA slowest and growing with k; METIS flat;
 //! LF fastest and *decreasing* in k (fewer merges needed). The Leiden
 //! stage time is reported separately per k (its size cap depends on k;
 //! the paper amortises a single preprocessing run).
+//!
+//! Flags (after `--` on `cargo bench`):
+//!   --json-out <path>   also write the machine-readable report there
+//!                       (the CI artifact / committed trajectory point)
+//!   --threads 1,4       thread grid for the LF scaling section
+//!   --ks 2,4,8,16       k grid override
+//!
+//! Every record carries `nodes_per_sec` so trajectory points stay
+//! comparable when `LF_BENCH_N` changes the dataset size.
 
 mod common;
 
 use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::cli::Args;
+use leiden_fusion::partition::PartitionPipeline;
 use leiden_fusion::util::json::{num, obj, s, Json};
 
 fn main() {
+    let args = Args::parse(std::env::args()).unwrap_or_else(|e| {
+        eprintln!("bad bench args: {e}");
+        std::process::exit(2);
+    });
+    let thread_grid = args.usize_list_or("threads", &[1, 4]).unwrap_or_else(|e| {
+        eprintln!("bad --threads: {e}");
+        std::process::exit(2);
+    });
+    let ks = args.usize_list_or("ks", &common::KS).unwrap_or_else(|e| {
+        eprintln!("bad --ks: {e}");
+        std::process::exit(2);
+    });
+
     let ds = common::arxiv(20_000);
+    let nodes = ds.graph.num_nodes() as f64;
     println!(
         "arxiv-like: {} nodes, {} edges",
         ds.graph.num_nodes(),
         ds.graph.num_edges()
     );
 
+    let mut records = Vec::new();
+    let mut record = |spec: &str, k: usize, threads: usize, stage: &str, secs: f64| {
+        records.push(obj(vec![
+            ("spec", s(spec)),
+            ("k", num(k as f64)),
+            ("threads", num(threads as f64)),
+            ("stage", s(stage)),
+            ("secs", num(secs)),
+            ("nodes_per_sec", num(if secs > 0.0 { nodes / secs } else { 0.0 })),
+        ]));
+    };
+
+    let headers = common::k_headers("method", &ks);
     let mut table = Table::new(
         "Table 3: partitioning time (ms) on arxiv-like",
-        &["method", "k=2", "k=4", "k=8", "k=16"],
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
     );
-    let mut records = Vec::new();
 
     // ---- LPA / METIS: full pipeline run per k -----------------------------
     for method in ["lpa", "metis"] {
         let mut row = vec![method.to_string()];
-        for k in common::KS {
+        for &k in &ks {
             let report = common::partition(&ds.graph, method, k, 7);
             let secs = report.algorithm_secs();
             row.push(format!("{:.1}", secs * 1e3));
-            records.push(obj(vec![
-                ("method", s(method)),
-                ("k", num(k as f64)),
-                ("secs", num(secs)),
-            ]));
+            record(method, k, 1, "total", secs);
         }
         table.row(row);
     }
@@ -47,30 +81,86 @@ fn main() {
     // the fusion row is what the paper's Table 3 compares.
     let mut leiden_secs = Vec::new();
     let mut row = vec!["lf (fusion)".to_string()];
-    for k in common::KS {
+    for &k in &ks {
         let report = common::partition(&ds.graph, "lf", k, 7);
         let fusion_secs = common::stage_secs(&report, "fusion");
         let leiden_stage_secs = common::stage_secs(&report, "leiden");
         leiden_secs.push(leiden_stage_secs);
         row.push(format!("{:.1}", fusion_secs * 1e3));
-        records.push(obj(vec![
-            ("method", s("lf_fusion")),
-            ("k", num(k as f64)),
-            ("secs", num(fusion_secs)),
-        ]));
-        records.push(obj(vec![
-            ("method", s("lf_leiden")),
-            ("k", num(k as f64)),
-            ("secs", num(leiden_stage_secs)),
-        ]));
+        record("lf", k, 1, "fusion", fusion_secs);
+        record("lf", k, 1, "leiden", leiden_stage_secs);
+        record("lf", k, 1, "total", report.algorithm_secs());
     }
     table.row(row);
     table.print();
-    let leiden_mean = leiden_secs.iter().sum::<f64>() / leiden_secs.len() as f64;
+    let leiden_mean = leiden_secs.iter().sum::<f64>() / leiden_secs.len().max(1) as f64;
     println!(
         "Leiden stage (rerun per k — the cap depends on k; the paper \
          amortises one run): mean {leiden_mean:.2}s"
     );
-    save_json("table3_partition_time", &Json::Arr(records));
+
+    // ---- LF thread scaling: end-to-end per thread count -------------------
+    // The headline trajectory number: same seed, byte-identical output,
+    // wall time per thread count on the largest k of the grid.
+    let k_scale = ks.last().copied().unwrap_or(8);
+    let mut scale = Table::new(
+        "LF thread scaling (end-to-end, same seed, identical output)",
+        &["threads", "total (ms)", "leiden (ms)", "fusion (ms)", "nodes/sec"],
+    );
+    let mut reference: Option<Vec<u32>> = None;
+    for &t in &thread_grid {
+        let report = PartitionPipeline::parse("lf", 7)
+            .expect("lf spec parses")
+            .with_threads(t)
+            .run(&ds.graph, k_scale)
+            .expect("lf partitioning");
+        let secs = report.algorithm_secs();
+        scale.row(vec![
+            t.to_string(),
+            format!("{:.1}", secs * 1e3),
+            format!("{:.1}", common::stage_secs(&report, "leiden") * 1e3),
+            format!("{:.1}", common::stage_secs(&report, "fusion") * 1e3),
+            format!("{:.0}", nodes / secs.max(1e-12)),
+        ]);
+        record("lf", k_scale, t, "leiden", common::stage_secs(&report, "leiden"));
+        record("lf", k_scale, t, "fusion", common::stage_secs(&report, "fusion"));
+        record("lf", k_scale, t, "total", secs);
+        // determinism spot-check alongside the timing run
+        let assign = report.into_partitioning().assignments().to_vec();
+        match &reference {
+            None => reference = Some(assign),
+            Some(r) => assert_eq!(
+                r, &assign,
+                "threads={t} changed the partitioning — determinism contract broken"
+            ),
+        }
+    }
+    scale.print();
+
+    let doc = obj(vec![
+        ("bench", s("table3_partition_time")),
+        (
+            "dataset",
+            obj(vec![
+                ("name", s("arxiv-like")),
+                ("nodes", num(ds.graph.num_nodes() as f64)),
+                ("edges", num(ds.graph.num_edges() as f64)),
+            ]),
+        ),
+        ("quick", Json::Bool(common::quick())),
+        (
+            "thread_grid",
+            Json::Arr(thread_grid.iter().map(|&t| num(t as f64)).collect()),
+        ),
+        ("entries", Json::Arr(records)),
+    ]);
+    save_json("table3_partition_time", &doc);
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, doc.to_string()).unwrap_or_else(|e| {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(1);
+        });
+        println!("\nbench report written to {path}");
+    }
     println!("\nshape check vs paper: LF fusion ≪ LPA, decreasing in k");
 }

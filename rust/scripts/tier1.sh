@@ -26,4 +26,26 @@ cargo fmt --check
 echo "== bench smoke: table1_karate =="
 LF_BENCH_QUICK=1 cargo bench --bench table1_karate
 
+# Perf-trajectory smoke: the JSON-emitting path of the partition-time
+# bench must keep producing BENCH_partition.json (the CI artifact).
+echo "== bench smoke: table3_partition_time --json-out =="
+mkdir -p target/bench-results
+LF_BENCH_QUICK=1 LF_BENCH_N=4000 cargo bench --bench table3_partition_time -- \
+  --ks 2,8 --threads 1,2 --json-out target/bench-results/BENCH_partition.json
+test -s target/bench-results/BENCH_partition.json
+
+# Determinism: same seed must yield byte-identical partitionings across
+# runs AND across thread counts (DESIGN.md "Performance" contract).
+echo "== determinism: threads=1 vs threads=4, same seed =="
+run_partition() {
+  cargo run --quiet --release --bin repro -- partition \
+    --dataset arxiv --n 4000 --k 4 --seed 7 --threads "$1" \
+    --assignments-out "$2" > /dev/null
+}
+run_partition 1 target/assign_t1.txt
+run_partition 4 target/assign_t4.txt
+run_partition 4 target/assign_t4_rerun.txt
+cmp target/assign_t1.txt target/assign_t4.txt
+cmp target/assign_t4.txt target/assign_t4_rerun.txt
+
 echo "tier1: OK"

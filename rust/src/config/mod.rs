@@ -144,6 +144,9 @@ pub struct ExperimentConfig {
     /// `method` key plus optional `alpha`/`beta` overrides).
     pub spec: PartitionSpec,
     pub k: usize,
+    /// Worker threads for the partitioning pipeline (`[partition]
+    /// threads`, `--threads`; ≥ 1, same output for every value).
+    pub partition_threads: usize,
     pub model: ModelKind,
     pub mode: Mode,
     pub epochs: usize,
@@ -222,6 +225,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             spec: PartitionSpec::default(),
             k: 4,
+            partition_threads: 1,
             model: ModelKind::Gcn,
             mode: Mode::Inner,
             epochs: 80,
@@ -308,6 +312,9 @@ impl ExperimentConfig {
             seed: t.int_or("dataset", "seed", d.seed as i64) as u64,
             spec,
             k: t.int_or("partition", "k", d.k as i64) as usize,
+            partition_threads: t
+                .int_or("partition", "threads", d.partition_threads as i64)
+                .max(1) as usize,
             model: ModelKind::parse(&t.str_or("train", "model", "gcn"))?,
             mode,
             epochs: t.int_or("train", "epochs", d.epochs as i64) as usize,
@@ -362,6 +369,17 @@ machines = 2
         assert_eq!(cfg.mlp_epochs, 200);
         // `method = "lf"` + `alpha = 0.05` → spec with the α override set
         assert_eq!(cfg.spec.to_string(), "leiden+fusion(alpha=0.05)");
+    }
+
+    #[test]
+    fn partition_threads_key_parses_and_clamps() {
+        let t = Toml::parse("[partition]\nthreads = 4\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&t).unwrap().partition_threads, 4);
+        // non-positive values clamp to the sequential default
+        let t = Toml::parse("[partition]\nthreads = -2\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&t).unwrap().partition_threads, 1);
+        let t = Toml::parse("[partition]\nk = 2\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&t).unwrap().partition_threads, 1);
     }
 
     #[test]

@@ -209,6 +209,193 @@ impl CsrGraph {
             + self.neighbors.len() * std::mem::size_of::<NodeId>()
             + self.weights.as_ref().map_or(0, |w| w.len() * 4)
     }
+
+    // -- coarsening ---------------------------------------------------------
+
+    /// Contract the graph by dense labels `0..n_coarse`: super-node `c` is
+    /// the union of all nodes with `labels[v] == c`. Returns the weighted
+    /// coarse graph (inter-community edge weights summed) and the internal
+    /// weight each super-node absorbed (edges whose endpoints share a
+    /// label, counted once per undirected edge) — the self-loop weight the
+    /// Leiden/Louvain aggregation levels carry outside the CSR.
+    ///
+    /// This is the sort-based replacement for the old per-level
+    /// `HashMap<(u32, u32), f64>` aggregation: emit every directed
+    /// adjacency entry as a `(label_u, label_v, w)` triple, sort by label
+    /// pair, and run-length merge straight into CSR arrays — no hashing,
+    /// no re-sorting of adjacency lists afterwards. Triple generation
+    /// fans out over node chunks when `threads > 1`; because chunks cover
+    /// ascending node ranges and are concatenated in chunk order, the
+    /// triple sequence — and therefore every downstream float sum, which
+    /// happens in sorted-run order — is byte-identical for every thread
+    /// count.
+    pub fn coarsen(&self, labels: &[u32], n_coarse: usize, threads: usize) -> (CsrGraph, Vec<f64>) {
+        let n = self.num_nodes();
+        debug_assert_eq!(labels.len(), n);
+        debug_assert!(labels.iter().all(|&l| (l as usize) < n_coarse));
+
+        let mut chunks = crate::util::parallel::map_chunks(threads, n, 4096, |_, range| {
+            let mut triples: Vec<(u32, u32, f64)> = Vec::new();
+            for u in range {
+                let cu = labels[u];
+                for i in self.offsets[u]..self.offsets[u + 1] {
+                    let v = self.neighbors[i];
+                    let cv = labels[v as usize];
+                    let w = match &self.weights {
+                        Some(ws) => ws[i] as f64,
+                        None => 1.0,
+                    };
+                    if cu == cv {
+                        // internal edge: keep one direction so the weight
+                        // is counted once
+                        if (u as NodeId) < v {
+                            triples.push((cu, cv, w));
+                        }
+                    } else {
+                        triples.push((cu, cv, w));
+                    }
+                }
+            }
+            triples
+        });
+        // single chunk (the sequential default): take the buffer as-is —
+        // only the multi-chunk path pays the ordered concat
+        let mut triples: Vec<(u32, u32, f64)> = if chunks.len() == 1 {
+            chunks.pop().expect("map_chunks returns at least one chunk")
+        } else {
+            let mut all = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+            for c in chunks {
+                all.extend(c);
+            }
+            all
+        };
+        triples.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+
+        let mut self_weight = vec![0.0f64; n_coarse];
+        let mut counts = vec![0usize; n_coarse];
+        let mut neighbors: Vec<NodeId> = Vec::new();
+        let mut weights: Vec<f32> = Vec::new();
+        let mut i = 0;
+        while i < triples.len() {
+            let (a, b, _) = triples[i];
+            let mut w = 0.0f64;
+            while i < triples.len() && triples[i].0 == a && triples[i].1 == b {
+                w += triples[i].2;
+                i += 1;
+            }
+            if a == b {
+                self_weight[a as usize] += w;
+            } else {
+                neighbors.push(b);
+                weights.push(w as f32);
+                counts[a as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; n_coarse + 1];
+        for c in 0..n_coarse {
+            offsets[c + 1] = offsets[c] + counts[c];
+        }
+        let g = CsrGraph { offsets, neighbors, weights: Some(weights) };
+        debug_assert!(g.adjacency_sorted_unique(), "coarsen produced bad CSR");
+        (g, self_weight)
+    }
+
+    /// HashMap-based coarsening oracle — kept only as the reference the
+    /// property tests and the `micro_hotpath` baseline entry compare
+    /// [`Self::coarsen`] against.
+    #[doc(hidden)]
+    pub fn coarsen_reference(&self, labels: &[u32], n_coarse: usize) -> (CsrGraph, Vec<f64>) {
+        let mut self_weight = vec![0.0f64; n_coarse];
+        let mut agg: std::collections::HashMap<(u32, u32), f64> =
+            std::collections::HashMap::new();
+        for (u, v, w) in self.edges() {
+            let (cu, cv) = (labels[u as usize], labels[v as usize]);
+            if cu == cv {
+                self_weight[cu as usize] += w as f64;
+                continue;
+            }
+            let key = if cu < cv { (cu, cv) } else { (cv, cu) };
+            *agg.entry(key).or_insert(0.0) += w as f64;
+        }
+        let mut edges: Vec<(NodeId, NodeId)> = agg.keys().copied().collect();
+        edges.sort_unstable();
+        let weights: Vec<f32> = edges.iter().map(|k| agg[k] as f32).collect();
+        let g = CsrGraph::from_weighted_edges(n_coarse, &edges, Some(&weights))
+            .expect("reference coarse graph is valid");
+        (g, self_weight)
+    }
+
+    /// Test support: check the full [`Self::coarsen`] contract against the
+    /// HashMap oracle — same structure, same weights up to float-summation
+    /// order (coarse weights are f32 sums, so runs may round differently),
+    /// same self-weights, and bit-identical output for threads 1 vs 4.
+    /// Returns a description of the first violation. Encoded once here so
+    /// the unit tests and the `partition_invariants` property suite cannot
+    /// drift apart.
+    #[doc(hidden)]
+    pub fn check_coarsen_contract(
+        &self,
+        labels: &[u32],
+        n_coarse: usize,
+    ) -> std::result::Result<(), String> {
+        let (fast, fast_self) = self.coarsen(labels, n_coarse, 1);
+        let (reference, ref_self) = self.coarsen_reference(labels, n_coarse);
+        if fast.num_nodes() != reference.num_nodes()
+            || fast.num_edges() != reference.num_edges()
+        {
+            return Err(format!(
+                "shape mismatch: {}n/{}e vs {}n/{}e",
+                fast.num_nodes(),
+                fast.num_edges(),
+                reference.num_nodes(),
+                reference.num_edges()
+            ));
+        }
+        for v in 0..fast.num_nodes() as NodeId {
+            if fast.neighbors(v) != reference.neighbors(v) {
+                return Err(format!("adjacency mismatch at supernode {v}"));
+            }
+            let fw = fast.neighbor_weights(v).unwrap();
+            let rw = reference.neighbor_weights(v).unwrap();
+            for (i, (a, b)) in fw.iter().zip(rw).enumerate() {
+                if (a - b).abs() > 1e-4 * a.abs().max(b.abs()).max(1.0) {
+                    return Err(format!("weight mismatch at {v}[{i}]: {a} vs {b}"));
+                }
+            }
+        }
+        for (c, (a, b)) in fast_self.iter().zip(&ref_self).enumerate() {
+            if (a - b).abs() > 1e-9 * a.abs().max(b.abs()).max(1.0) {
+                return Err(format!("self-weight mismatch at {c}: {a} vs {b}"));
+            }
+        }
+        // thread count must not change anything, bit for bit
+        let (par, par_self) = self.coarsen(labels, n_coarse, 4);
+        if fast.offsets != par.offsets
+            || fast.neighbors != par.neighbors
+            || fast.weights != par.weights
+        {
+            return Err("thread count changed the coarse CSR".into());
+        }
+        if fast_self != par_self {
+            return Err("thread count changed self-weights".into());
+        }
+        Ok(())
+    }
+
+    /// Every adjacency list strictly sorted (implies no duplicates) and no
+    /// self-loops — the CSR invariants, checked in debug builds only.
+    fn adjacency_sorted_unique(&self) -> bool {
+        for v in 0..self.num_nodes() {
+            let adj = &self.neighbors[self.offsets[v]..self.offsets[v + 1]];
+            if adj.iter().any(|&u| u as usize == v) {
+                return false;
+            }
+            if adj.windows(2).any(|w| w[0] >= w[1]) {
+                return false;
+            }
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -291,5 +478,72 @@ mod tests {
     #[test]
     fn total_weight_unweighted_is_edge_count() {
         assert_eq!(triangle().total_weight(), 3.0);
+    }
+
+    // -- coarsening ---------------------------------------------------------
+
+    /// The shared contract checker, panicking for unit-test use.
+    fn assert_coarsen_matches(g: &CsrGraph, labels: &[u32], n_coarse: usize) {
+        g.check_coarsen_contract(labels, n_coarse)
+            .unwrap_or_else(|e| panic!("coarsen contract violated: {e}"));
+    }
+
+    #[test]
+    fn coarsen_path_into_two_supernodes() {
+        // path 0-1-2-3, labels {0,0,1,1}: one cut edge, one internal each
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        let (coarse, self_w) = g.coarsen(&[0, 0, 1, 1], 2, 1);
+        assert_eq!(coarse.num_nodes(), 2);
+        assert_eq!(coarse.num_edges(), 1);
+        assert_eq!(coarse.neighbors(0), &[1]);
+        assert_eq!(coarse.neighbor_weights(0), Some(&[1.0f32][..]));
+        assert_eq!(self_w, vec![1.0, 1.0]);
+        assert_coarsen_matches(&g, &[0, 0, 1, 1], 2);
+    }
+
+    #[test]
+    fn coarsen_sums_parallel_cut_edges() {
+        // two cut edges between the label classes plus a weighted internal
+        let g = CsrGraph::from_weighted_edges(
+            4,
+            &[(0, 2), (1, 3), (0, 1), (2, 3)],
+            Some(&[2.0, 3.0, 7.0, 0.5]),
+        )
+        .unwrap();
+        let labels = [0u32, 0, 1, 1];
+        let (coarse, self_w) = g.coarsen(&labels, 2, 1);
+        assert_eq!(coarse.neighbor_weights(0), Some(&[5.0f32][..]));
+        assert_eq!(self_w, vec![7.0, 0.5]);
+        assert_coarsen_matches(&g, &labels, 2);
+    }
+
+    #[test]
+    fn coarsen_all_internal_yields_edgeless_graph() {
+        let g = triangle();
+        let (coarse, self_w) = g.coarsen(&[0, 0, 0], 1, 1);
+        assert_eq!(coarse.num_nodes(), 1);
+        assert_eq!(coarse.num_edges(), 0);
+        assert_eq!(self_w, vec![3.0]);
+    }
+
+    #[test]
+    fn coarsen_identity_labels_reproduces_graph() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)]).unwrap();
+        let labels: Vec<u32> = (0..5).collect();
+        let (coarse, self_w) = g.coarsen(&labels, 5, 1);
+        assert_eq!(coarse.num_edges(), g.num_edges());
+        for v in 0..5u32 {
+            assert_eq!(coarse.neighbors(v), g.neighbors(v));
+        }
+        assert!(self_w.iter().all(|&w| w == 0.0));
+        assert_coarsen_matches(&g, &labels, 5);
+    }
+
+    #[test]
+    fn coarsen_empty_graph() {
+        let g = CsrGraph::from_edges(0, &[]).unwrap();
+        let (coarse, self_w) = g.coarsen(&[], 0, 1);
+        assert_eq!(coarse.num_nodes(), 0);
+        assert!(self_w.is_empty());
     }
 }

@@ -44,10 +44,11 @@ repro — Leiden-Fusion distributed graph-embedding training + serving
 
 USAGE:
   repro partition --dataset <karate|arxiv|proteins> [--spec SPEC | --method NAME]
-                  [--k 4] [--n 0] [--seed 42]
+                  [--k 4] [--n 0] [--seed 42] [--threads 1]
+                  [--assignments-out file]   (one partition id per line)
   repro train     [--config file.toml] [--dataset arxiv] [--spec SPEC | --method NAME]
                   [--k 4] [--model gcn|sage] [--mode inner|repli] [--epochs 80]
-                  [--machines 4] [--n 0] [--seed 42] [--shards dir]
+                  [--machines 4] [--n 0] [--seed 42] [--threads 1] [--shards dir]
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
   repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
                   [--artifacts dir] [--warm]   (interactive: node ids on stdin)
@@ -62,6 +63,8 @@ SPEC grammar (stages joined by '+', optional key=value parameters):
   examples:   \"leiden(gamma=0.7,beta=0.05)+fusion(alpha=0.05)\", \"metis+fusion\"
   legacy --method names still work: lf, leiden, louvain, metis, lpa,
   random, metis+f, lpa+f, louvain+f
+  --threads parallelises the partitioning pipeline; same seed gives a
+  byte-identical partitioning for every thread count
 ";
 
 /// Boolean switches (never bind the next token as a value).
@@ -159,17 +162,19 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let k = args.usize_or("k", 4)?;
     let seed = args.u64_or("seed", 42)?;
     let n = args.usize_or("n", 0)?;
+    let threads = args.usize_or("threads", 1)?;
 
     let ds = load_dataset(&dataset, n, seed)?;
     println!(
-        "dataset={} nodes={} edges={} spec={} k={}",
+        "dataset={} nodes={} edges={} spec={} k={} threads={}",
         ds.name,
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
         spec,
-        k
+        k,
+        threads.max(1)
     );
-    let pipeline = PartitionPipeline::new(spec, seed);
+    let pipeline = PartitionPipeline::new(spec, seed).with_threads(threads);
     let report = pipeline.run_observed(&ds.graph, k, &mut |ev| {
         if let PipelineEvent::StageFinished { name, secs, parts, .. } = ev {
             println!("  stage {name:<9} {:>9} → {parts} parts", fmt_duration(*secs));
@@ -200,6 +205,17 @@ fn cmd_partition(args: &Args) -> Result<()> {
         q.replication_factor,
         q.is_structurally_ideal()
     );
+    if let Some(path) = args.get("assignments-out") {
+        // one partition id per line — what the tier-1 determinism check
+        // (and any external tooling) diffs across runs and thread counts
+        let mut out = String::with_capacity(report.partitioning.num_nodes() * 3);
+        for &p in report.partitioning.assignments() {
+            out.push_str(&p.to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        println!("assignments written to {path}");
+    }
     Ok(())
 }
 
@@ -233,6 +249,7 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.machines = args.usize_or("machines", cfg.machines)?;
     cfg.dataset_n = args.usize_or("n", cfg.dataset_n)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.partition_threads = args.usize_or("threads", cfg.partition_threads)?;
     if let Some(dir) = args.get("shards") {
         cfg.shards_out = Some(PathBuf::from(dir));
     }
@@ -244,7 +261,8 @@ fn run_experiment(
     cfg: &ExperimentConfig,
     ds: &Dataset,
 ) -> Result<(PartitionReport, leiden_fusion::coordinator::TrainReport)> {
-    let pipeline = PartitionPipeline::new(cfg.spec.clone(), cfg.seed);
+    let pipeline = PartitionPipeline::new(cfg.spec.clone(), cfg.seed)
+        .with_threads(cfg.partition_threads);
     let preport = pipeline.run(&ds.graph, cfg.k)?;
     let mut ccfg = CoordinatorConfig::new(cfg.artifacts_dir.clone());
     ccfg.machines = cfg.machines;

@@ -10,8 +10,9 @@
 use super::{Partitioner, Partitioning};
 use crate::error::{Error, Result};
 use crate::graph::{components_within, CsrGraph, NodeId};
-use std::collections::BinaryHeap;
+use crate::util::parallel::map_chunks;
 use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Fusion parameters (Algorithm 1 inputs).
 #[derive(Clone, Debug)]
@@ -67,25 +68,103 @@ impl FusionState {
     }
 }
 
+/// Inter-community cut-edge counts, maintained **incrementally** across
+/// merges. `per[c]` maps each neighbouring community of `c` to the number
+/// of cut edges between them (symmetric: `per[a][b] == per[b][a]`).
+///
+/// The pre-overhaul implementation recomputed the popped community's cut
+/// from scratch on every merge — O(cut edges of that community) per
+/// iteration. Folding `from`'s map into `into`'s on merge makes each
+/// query O(neighbouring communities) and each merge O(degree of `from`
+/// in the community graph).
+struct CutMap {
+    per: Vec<HashMap<u32, u64>>,
+}
+
+impl CutMap {
+    /// One boundary scan over the graph, fanned out over node chunks.
+    /// Each chunk run-length-encodes its sorted directed boundary pairs;
+    /// the ordered reduction sums integer counts, so the result is
+    /// identical for every thread count.
+    fn build(g: &CsrGraph, assign: &[u32], n_comms: usize, threads: usize) -> CutMap {
+        let chunks = map_chunks(threads, g.num_nodes(), 4096, |_, range| {
+            let mut pairs: Vec<(u32, u32)> = Vec::new();
+            for u in range {
+                let cu = assign[u];
+                for &v in g.neighbors(u as NodeId) {
+                    let cv = assign[v as usize];
+                    if cu != cv {
+                        pairs.push((cu, cv));
+                    }
+                }
+            }
+            pairs.sort_unstable();
+            let mut enc: Vec<(u32, u32, u64)> = Vec::new();
+            for &(a, b) in &pairs {
+                match enc.last_mut() {
+                    Some(last) if last.0 == a && last.1 == b => last.2 += 1,
+                    _ => enc.push((a, b, 1)),
+                }
+            }
+            enc
+        });
+        let mut per: Vec<HashMap<u32, u64>> = vec![HashMap::new(); n_comms];
+        for enc in chunks {
+            for (a, b, cnt) in enc {
+                *per[a as usize].entry(b).or_insert(0) += cnt;
+            }
+        }
+        CutMap { per }
+    }
+
+    /// Fold community `from` into `into`, rewriting every neighbour's
+    /// back-reference. Edges between `from` and `into` become internal
+    /// and leave the map.
+    fn merge(&mut self, from: u32, into: u32) {
+        debug_assert_ne!(from, into);
+        let from_map = std::mem::take(&mut self.per[from as usize]);
+        for (c, w) in from_map {
+            if c == into {
+                continue;
+            }
+            let back = self.per[c as usize].remove(&from).unwrap_or(0);
+            debug_assert_eq!(back, w, "cut map asymmetric between {c} and {from}");
+            *self.per[c as usize].entry(into).or_insert(0) += w;
+            *self.per[into as usize].entry(c).or_insert(0) += w;
+        }
+        self.per[into as usize].remove(&from);
+    }
+}
+
 /// Algorithm 2: the most-connected neighbour of `v_comm` whose merged size
 /// stays under `max_part_size`; if none qualifies, the smallest neighbour.
 /// Returns `None` only if `v_comm` has no neighbouring community at all
 /// (impossible for a connected graph with ≥ 2 communities).
 fn largest_edge_cut_neighbor(
-    g: &CsrGraph,
+    _g: &CsrGraph,
     st: &FusionState,
+    cuts: &CutMap,
     v_comm: u32,
     max_part_size: usize,
 ) -> Option<u32> {
-    // cut weights from v_comm to each neighbouring community
-    let mut cut: std::collections::HashMap<u32, u64> = std::collections::HashMap::new();
-    for &v in &st.members[v_comm as usize] {
-        for &u in g.neighbors(v) {
-            let c = st.assign[u as usize];
-            if c != v_comm {
-                *cut.entry(c).or_insert(0) += 1;
+    let cut = &cuts.per[v_comm as usize];
+    // The incremental map must always equal a from-scratch recomputation
+    // of the queried community's cut (the pre-overhaul code path).
+    #[cfg(debug_assertions)]
+    {
+        let mut reference: HashMap<u32, u64> = HashMap::new();
+        for &v in &st.members[v_comm as usize] {
+            for &u in _g.neighbors(v) {
+                let c = st.assign[u as usize];
+                if c != v_comm {
+                    *reference.entry(c).or_insert(0) += 1;
+                }
             }
         }
+        debug_assert_eq!(
+            cut, &reference,
+            "incremental cut map drifted for community {v_comm}"
+        );
     }
     if cut.is_empty() {
         return None;
@@ -113,6 +192,18 @@ pub fn fuse_communities(
     communities: &Partitioning,
     cfg: &FusionConfig,
 ) -> Result<Partitioning> {
+    fuse_communities_threaded(g, communities, cfg, 1)
+}
+
+/// [`fuse_communities`] with an explicit thread count for the initial
+/// boundary-cut scan (the merge loop itself is inherently sequential).
+/// The result is identical for every thread count.
+pub fn fuse_communities_threaded(
+    g: &CsrGraph,
+    communities: &Partitioning,
+    cfg: &FusionConfig,
+    threads: usize,
+) -> Result<Partitioning> {
     if cfg.k == 0 {
         return Err(Error::Partition("k must be positive".into()));
     }
@@ -130,6 +221,7 @@ pub fn fuse_communities(
             st.live, cfg.k
         )));
     }
+    let mut cuts = CutMap::build(g, &st.assign, st.members.len(), threads);
 
     // Min-heap of (size, community) with lazy invalidation.
     let mut heap: BinaryHeap<Reverse<(usize, u32)>> = BinaryHeap::new();
@@ -147,7 +239,8 @@ pub fn fuse_communities(
         if st.members[c_min as usize].len() != size || size == 0 {
             continue;
         }
-        let target = match largest_edge_cut_neighbor(g, &st, c_min, cfg.max_part_size) {
+        let target = match largest_edge_cut_neighbor(g, &st, &cuts, c_min, cfg.max_part_size)
+        {
             Some(t) => t,
             None => {
                 // disconnected community (can only happen on disconnected
@@ -164,6 +257,7 @@ pub fn fuse_communities(
             }
         };
         st.merge(c_min, target);
+        cuts.merge(c_min, target);
         heap.push(Reverse((st.size(target), target)));
     }
 
@@ -306,6 +400,20 @@ mod tests {
             let info = components_within(&g, &fused.mask(part));
             assert_eq!(info.num_components(), 1, "partition {part} disconnected");
         }
+    }
+
+    #[test]
+    fn threaded_fusion_matches_sequential() {
+        use crate::graph::gen::{generate_sbm, SbmConfig};
+        let g = generate_sbm(&SbmConfig::arxiv_like(1200, 5)).unwrap().graph;
+        let comms = leiden(
+            &g,
+            &LeidenConfig { max_community_size: 80, seed: 3, ..Default::default() },
+        );
+        let cfg = FusionConfig::with_alpha(&g, 6, 0.05);
+        let seq = fuse_communities_threaded(&g, &comms, &cfg, 1).unwrap();
+        let par = fuse_communities_threaded(&g, &comms, &cfg, 4).unwrap();
+        assert_eq!(seq.assignments(), par.assignments());
     }
 
     #[test]

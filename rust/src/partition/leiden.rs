@@ -2,21 +2,34 @@
 //! community-size cap, plus the combined Leiden-Fusion partitioner.
 //!
 //! Implements the full three-phase algorithm:
-//!  1. **Fast local moving** — queue-driven modularity-maximising moves.
+//!  1. **Fast local moving** — queue-driven modularity-maximising moves
+//!     (`MovePolicy::Queue` over the shared `super::level` routine).
 //!  2. **Refinement** — communities are re-partitioned from singletons by
 //!     randomised merges restricted to the community, which is what gives
-//!     Leiden its well-connectedness guarantee over Louvain.
+//!     Leiden its well-connectedness guarantee over Louvain. Communities
+//!     are independent, so refinement fans out over them when
+//!     `threads > 1`; each community draws from its own RNG stream seeded
+//!     by `(seed, level, community)`, so the output is byte-identical for
+//!     every thread count.
 //!  3. **Aggregation** — the refined partition becomes a super-node graph
-//!     whose communities seed the next level.
+//!     (sort-based [`crate::graph::CsrGraph::coarsen`]) whose communities
+//!     seed the next level.
 //!
 //! Definition 1 of the paper adds a max community size `S`; any move or
 //! merge that would exceed `S` (counted in *original* nodes) is rejected.
+//!
+//! All inner loops run on the epoch-stamped [`NeighborWeights`] scratch
+//! kernel — no per-node-visit allocation, and neighbour-community
+//! enumeration order is first-touch order, deterministic by construction.
 
 use super::fusion::{fuse_communities, FusionConfig};
+use super::level::{compact, local_move, Level, MovePolicy};
+use super::scratch::NeighborWeights;
 use super::{Partitioner, Partitioning};
 use crate::error::Result;
-use crate::graph::{CsrGraph, NodeId};
-use crate::util::rng::Rng;
+use crate::graph::CsrGraph;
+use crate::util::parallel::map_chunks;
+use crate::util::rng::{splitmix64, Rng};
 
 /// Leiden parameters.
 #[derive(Clone, Debug)]
@@ -32,6 +45,10 @@ pub struct LeidenConfig {
     pub max_levels: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Worker threads for refinement and aggregation (1 = sequential).
+    /// The partitioning is identical for every value — see DESIGN.md
+    /// "Performance" for the determinism contract.
+    pub threads: usize,
 }
 
 impl Default for LeidenConfig {
@@ -42,69 +59,8 @@ impl Default for LeidenConfig {
             theta: 0.01,
             max_levels: 10,
             seed: 0,
+            threads: 1,
         }
-    }
-}
-
-/// One level of the algorithm operates on a (possibly aggregated) graph.
-struct Level {
-    graph: CsrGraph,
-    /// Original-node count carried by each super-node.
-    node_count: Vec<usize>,
-    /// Community of each super-node.
-    comm: Vec<u32>,
-    /// Self-loop weight of each super-node (edges internal to the refined
-    /// community it was contracted from). CSR forbids literal self-loops,
-    /// so the weight is carried here; it contributes 2w to the node degree
-    /// in the modularity null model.
-    self_weight: Vec<f64>,
-}
-
-impl Level {
-    /// Modularity degree: weighted degree + twice the self-loop weight.
-    #[inline]
-    fn degree(&self, v: NodeId) -> f64 {
-        self.graph.weighted_degree(v) + 2.0 * self.self_weight[v as usize]
-    }
-}
-
-/// Community-level aggregates maintained incrementally.
-struct CommStats {
-    /// Sum of weighted degrees of members.
-    degree: Vec<f64>,
-    /// Sum of original-node counts of members.
-    size: Vec<usize>,
-    /// Number of super-node members (0 ⇒ dead community).
-    members: Vec<usize>,
-}
-
-impl CommStats {
-    fn init(level: &Level) -> Self {
-        let n = level.graph.num_nodes();
-        let mut s = CommStats {
-            degree: vec![0.0; n],
-            size: vec![0; n],
-            members: vec![0; n],
-        };
-        for v in 0..n {
-            let c = level.comm[v] as usize;
-            s.degree[c] += level.degree(v as NodeId);
-            s.size[c] += level.node_count[v];
-            s.members[c] += 1;
-        }
-        s
-    }
-
-    fn remove(&mut self, c: usize, deg: f64, size: usize) {
-        self.degree[c] -= deg;
-        self.size[c] -= size;
-        self.members[c] -= 1;
-    }
-
-    fn insert(&mut self, c: usize, deg: f64, size: usize) {
-        self.degree[c] += deg;
-        self.size[c] += size;
-        self.members[c] += 1;
     }
 }
 
@@ -116,25 +72,29 @@ pub fn leiden(g: &CsrGraph, cfg: &LeidenConfig) -> Partitioning {
     }
     let total_weight = g.total_weight().max(f64::MIN_POSITIVE);
     let mut rng = Rng::new(cfg.seed);
+    let mut scratch = NeighborWeights::new();
 
     // assignment of original nodes, refined level by level
     let mut global_comm: Vec<u32> = (0..n as u32).collect();
-    let mut level = Level {
-        graph: g.clone(),
-        node_count: vec![1; n],
-        comm: (0..n as u32).collect(),
-        self_weight: vec![0.0; n],
-    };
+    let mut level = Level::singleton(g.clone());
 
-    for _ in 0..cfg.max_levels {
-        let moved = local_move(&mut level, cfg, total_weight, &mut rng);
+    for level_idx in 0..cfg.max_levels {
+        let moved = local_move(
+            &mut level,
+            MovePolicy::Queue,
+            cfg.gamma,
+            cfg.max_community_size,
+            total_weight,
+            &mut rng,
+            &mut scratch,
+        );
         let n_comms = compact(&mut level.comm);
         if !moved && n_comms == level.graph.num_nodes() {
             break; // converged: every super-node is its own community
         }
 
         // Refinement: sub-partition each community from singletons.
-        let mut refined_dense = refine(&level, cfg, total_weight, &mut rng);
+        let mut refined_dense = refine(&level, cfg, total_weight, level_idx, n_comms);
         let n_refined = compact(&mut refined_dense);
 
         if n_refined == level.graph.num_nodes() {
@@ -150,7 +110,7 @@ pub fn leiden(g: &CsrGraph, cfg: &LeidenConfig) -> Partitioning {
 
         // Aggregate refined communities into super-nodes; seed their
         // community from the local-move partition.
-        level = aggregate(&level, &refined_dense, n_refined);
+        level = level.aggregate(&refined_dense, n_refined, true, cfg.threads);
         if level.graph.num_nodes() <= 1 {
             break;
         }
@@ -166,191 +126,175 @@ pub fn leiden(g: &CsrGraph, cfg: &LeidenConfig) -> Partitioning {
     Partitioning::from_labels(&labels)
 }
 
-/// Queue-driven local moving phase. Returns whether any node moved.
-fn local_move(level: &mut Level, cfg: &LeidenConfig, m: f64, rng: &mut Rng) -> bool {
-    let n = level.graph.num_nodes();
-    let mut stats = CommStats::init(level);
-    let mut order: Vec<u32> = (0..n as u32).collect();
-    rng.shuffle(&mut order);
-    let mut in_queue = vec![true; n];
-    let mut queue: std::collections::VecDeque<u32> = order.into_iter().collect();
-    let mut moved_any = false;
-
-    // scratch: neighbour-community edge weights
-    let mut nbr_comms: Vec<u32> = Vec::new();
-    let mut w_to: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
-
-    while let Some(v) = queue.pop_front() {
-        in_queue[v as usize] = false;
-        let vc = level.comm[v as usize];
-        let k_v = level.degree(v);
-        let size_v = level.node_count[v as usize];
-
-        nbr_comms.clear();
-        w_to.clear();
-        for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
-            let c = level.comm[u as usize];
-            let w = level.graph.weight_at(v, i) as f64;
-            let e = w_to.entry(c).or_insert(0.0);
-            if *e == 0.0 {
-                nbr_comms.push(c);
-            }
-            *e += w;
-        }
-
-        // Gain of joining community c (after removing v from its own):
-        //   ΔQ ∝ w(v→c) − γ·k_v·K_c / (2m)
-        stats.remove(vc as usize, k_v, size_v);
-        let w_stay = w_to.get(&vc).copied().unwrap_or(0.0);
-        let gain_stay = w_stay - cfg.gamma * k_v * stats.degree[vc as usize] / (2.0 * m);
-        let mut best_c = vc;
-        let mut best_gain = gain_stay;
-        for &c in &nbr_comms {
-            if c == vc {
-                continue;
-            }
-            if stats.size[c as usize] + size_v > cfg.max_community_size {
-                continue; // Definition 1: size cap
-            }
-            let gain = w_to[&c] - cfg.gamma * k_v * stats.degree[c as usize] / (2.0 * m);
-            if gain > best_gain + 1e-12 {
-                best_gain = gain;
-                best_c = c;
-            }
-        }
-        stats.insert(best_c as usize, k_v, size_v);
-        if best_c != vc {
-            level.comm[v as usize] = best_c;
-            moved_any = true;
-            // re-queue neighbours now outside v's new community
-            for &u in level.graph.neighbors(v) {
-                if level.comm[u as usize] != best_c && !in_queue[u as usize] {
-                    in_queue[u as usize] = true;
-                    queue.push_back(u);
-                }
-            }
-        }
-    }
-    moved_any
+/// Independent RNG stream per `(seed, level, community)` — what keeps the
+/// parallel refinement's output invariant under the thread count.
+fn refine_stream_seed(seed: u64, level: usize, comm: usize) -> u64 {
+    let mut s = seed
+        ^ (level as u64).wrapping_mul(0xA076_1D64_78BD_642F)
+        ^ (comm as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB);
+    splitmix64(&mut s)
 }
 
 /// Refinement phase: within each local-move community, re-partition from
-/// singletons by randomised positive-gain merges (θ-weighted), keeping the
-/// size cap. Returns refined community labels (sparse).
-fn refine(level: &Level, cfg: &LeidenConfig, m: f64, rng: &mut Rng) -> Vec<u32> {
+/// singletons by randomised positive-gain merges (θ-weighted), keeping
+/// the size cap. Returns refined labels, sparse: the label of a refined
+/// community is the node id of one of its members, so labels are globally
+/// unique without cross-community coordination. `level.comm` must be
+/// dense (`0..n_comms`).
+fn refine(
+    level: &Level,
+    cfg: &LeidenConfig,
+    m: f64,
+    level_idx: usize,
+    n_comms: usize,
+) -> Vec<u32> {
     let n = level.graph.num_nodes();
+
+    // Group nodes by community (counting sort → contiguous member slices
+    // in ascending node order) and record each node's index in its slice.
+    let mut start = vec![0usize; n_comms + 1];
+    for &c in &level.comm {
+        start[c as usize + 1] += 1;
+    }
+    for i in 0..n_comms {
+        start[i + 1] += start[i];
+    }
+    let mut members = vec![0u32; n];
+    let mut local_idx = vec![0u32; n];
+    let mut cursor = start.clone();
+    for v in 0..n {
+        let c = level.comm[v] as usize;
+        local_idx[v] = (cursor[c] - start[c]) as u32;
+        members[cursor[c]] = v as u32;
+        cursor[c] += 1;
+    }
+
+    // Communities are independent: fan out over them, balancing chunks by
+    // *member* count, not community count — one huge community must not
+    // serialise the level onto a single worker. `start` is already the
+    // member-count prefix sum, so the boundary scan is O(n_comms). The
+    // grouping does not affect the output (each community's work is
+    // self-contained), so the determinism contract survives any chunking.
+    let threads = crate::util::parallel::effective_threads(cfg.threads, n, 4096);
+    let mut bounds: Vec<std::ops::Range<usize>> = Vec::with_capacity(threads);
+    let mut lo = 0usize;
+    for i in 1..=threads {
+        let target = n * i / threads;
+        let mut hi = lo;
+        while hi < n_comms && start[hi] < target {
+            hi += 1;
+        }
+        bounds.push(lo..hi);
+        lo = hi;
+    }
+    debug_assert_eq!(lo, n_comms, "refinement chunking must cover every community");
+
+    // Each chunk returns `(node, refined_label)` pairs for its
+    // communities; node sets are disjoint, so the ordered merge below is
+    // race-free by construction. All per-community state is hoisted and
+    // reused — the loop is allocation-free in steady state.
+    let chunks = map_chunks(bounds.len(), bounds.len(), 1, |_, bound_range| {
+        let mut out: Vec<(u32, u32)> = Vec::new();
+        let mut scratch = NeighborWeights::new();
+        let mut order: Vec<u32> = Vec::new();
+        let mut cands: Vec<(u32, f64)> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        let mut refined_l: Vec<u32> = Vec::new();
+        let mut r_degree: Vec<f64> = Vec::new();
+        let mut r_size: Vec<usize> = Vec::new();
+        let mut r_members: Vec<usize> = Vec::new();
+        for c in bound_range.flat_map(|b| bounds[b].clone()) {
+            let ms = &members[start[c]..start[c + 1]];
+            if ms.len() <= 1 {
+                continue; // singleton community: nothing to refine
+            }
+            let mut rng = Rng::new(refine_stream_seed(cfg.seed, level_idx, c));
+            order.clear();
+            order.extend_from_slice(ms);
+            rng.shuffle(&mut order);
+
+            // per-community aggregates, indexed by local member position
+            let len = ms.len();
+            refined_l.clear();
+            refined_l.extend(0..len as u32);
+            r_degree.clear();
+            r_degree.extend(ms.iter().map(|&v| level.degree(v)));
+            r_size.clear();
+            r_size.extend(ms.iter().map(|&v| level.node_count[v as usize]));
+            r_members.clear();
+            r_members.resize(len, 1);
+            scratch.reset(len);
+
+            for &v in &order {
+                let lv = local_idx[v as usize] as usize;
+                // only singleton refined communities may merge (Leiden
+                // invariant)
+                if r_members[refined_l[lv] as usize] != 1 {
+                    continue;
+                }
+                let k_v = level.degree(v);
+                let size_v = level.node_count[v as usize];
+                scratch.begin();
+                for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
+                    if level.comm[u as usize] as usize != c {
+                        continue; // refinement stays inside the community
+                    }
+                    let rc = refined_l[local_idx[u as usize] as usize];
+                    if rc == refined_l[lv] {
+                        continue;
+                    }
+                    scratch.add(rc, level.graph.weight_at(v, i) as f64);
+                }
+                cands.clear();
+                for &rc in scratch.touched() {
+                    if r_size[rc as usize] + size_v > cfg.max_community_size {
+                        continue;
+                    }
+                    let gain = scratch.get(rc)
+                        - cfg.gamma * k_v * r_degree[rc as usize] / (2.0 * m);
+                    if gain > 0.0 {
+                        cands.push((rc, gain));
+                    }
+                }
+                if cands.is_empty() {
+                    continue;
+                }
+                // θ-randomised selection among positive-gain candidates
+                weights.clear();
+                weights.extend(
+                    cands
+                        .iter()
+                        .map(|&(_, g)| (g / cfg.theta.max(1e-9)).min(500.0).exp()),
+                );
+                let pick = cands[rng.weighted_index(&weights)].0;
+                let old = refined_l[lv];
+                refined_l[lv] = pick;
+                r_degree[pick as usize] += k_v;
+                r_size[pick as usize] += size_v;
+                r_members[pick as usize] += 1;
+                r_degree[old as usize] -= k_v;
+                r_size[old as usize] -= size_v;
+                r_members[old as usize] -= 1;
+            }
+            for (i, &v) in ms.iter().enumerate() {
+                let rl = refined_l[i] as usize;
+                if rl != i {
+                    out.push((v, ms[rl]));
+                }
+            }
+        }
+        out
+    });
+
+    // default: every node its own refined community (covers singleton
+    // communities and unmoved nodes)
     let mut refined: Vec<u32> = (0..n as u32).collect();
-    // aggregates for refined communities
-    let mut r_degree: Vec<f64> = (0..n).map(|v| level.degree(v as NodeId)).collect();
-    let mut r_size: Vec<usize> = level.node_count.clone();
-    let mut r_members: Vec<usize> = vec![1; n];
-
-    let mut order: Vec<u32> = (0..n as u32).collect();
-    rng.shuffle(&mut order);
-
-    let mut cands: Vec<(u32, f64)> = Vec::new();
-    // first-seen-ordered neighbour refined communities (HashMap iteration
-    // order is per-instance random — iterating it would break determinism)
-    let mut seen_rcs: Vec<u32> = Vec::new();
-    let mut w_to: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
-
-    for &v in &order {
-        // only singleton refined communities may merge (Leiden invariant)
-        if r_members[refined[v as usize] as usize] != 1 {
-            continue;
+    for chunk in chunks {
+        for (v, label) in chunk {
+            refined[v as usize] = label;
         }
-        let vc = level.comm[v as usize];
-        let k_v = level.degree(v);
-        let size_v = level.node_count[v as usize];
-        w_to.clear();
-        seen_rcs.clear();
-        for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
-            if level.comm[u as usize] != vc {
-                continue; // refinement stays inside the community
-            }
-            let rc = refined[u as usize];
-            if rc == refined[v as usize] {
-                continue;
-            }
-            let e = w_to.entry(rc).or_insert(0.0);
-            if *e == 0.0 {
-                seen_rcs.push(rc);
-            }
-            *e += level.graph.weight_at(v, i) as f64;
-        }
-        cands.clear();
-        for &rc in &seen_rcs {
-            if r_size[rc as usize] + size_v > cfg.max_community_size {
-                continue;
-            }
-            let gain = w_to[&rc] - cfg.gamma * k_v * r_degree[rc as usize] / (2.0 * m);
-            if gain > 0.0 {
-                cands.push((rc, gain));
-            }
-        }
-        if cands.is_empty() {
-            continue;
-        }
-        // θ-randomised selection among positive-gain candidates
-        let weights: Vec<f64> = cands
-            .iter()
-            .map(|&(_, g)| (g / cfg.theta.max(1e-9)).min(500.0).exp())
-            .collect();
-        let pick = cands[rng.weighted_index(&weights)].0;
-        let old = refined[v as usize];
-        refined[v as usize] = pick;
-        r_degree[pick as usize] += k_v;
-        r_size[pick as usize] += size_v;
-        r_members[pick as usize] += 1;
-        r_degree[old as usize] -= k_v;
-        r_size[old as usize] -= size_v;
-        r_members[old as usize] -= 1;
     }
     refined
-}
-
-/// Build the next level: super-nodes = refined communities (dense ids),
-/// each seeded with the local-move community of its members.
-fn aggregate(level: &Level, refined_dense: &[u32], n_refined: usize) -> Level {
-    let mut node_count = vec![0usize; n_refined];
-    let mut seed_comm = vec![0u32; n_refined];
-    let mut self_weight = vec![0.0f64; n_refined];
-    for v in 0..level.graph.num_nodes() {
-        let r = refined_dense[v] as usize;
-        node_count[r] += level.node_count[v];
-        seed_comm[r] = level.comm[v]; // all members share one community
-        self_weight[r] += level.self_weight[v];
-    }
-    // sum edge weights between refined communities; internal edges become
-    // super-node self-loop weight (kept out of CSR, carried separately)
-    let mut agg: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
-    for (u, v, w) in level.graph.edges() {
-        let (ru, rv) = (refined_dense[u as usize], refined_dense[v as usize]);
-        if ru == rv {
-            self_weight[ru as usize] += w as f64;
-            continue;
-        }
-        let key = if ru < rv { (ru, rv) } else { (rv, ru) };
-        *agg.entry(key).or_insert(0.0) += w as f64;
-    }
-    let edges: Vec<(NodeId, NodeId)> = agg.keys().copied().collect();
-    let weights: Vec<f32> = edges.iter().map(|k| agg[k] as f32).collect();
-    let graph = CsrGraph::from_weighted_edges(n_refined, &edges, Some(&weights))
-        .expect("aggregate edges are valid");
-    // densify seed communities
-    let mut comm = seed_comm;
-    compact(&mut comm);
-    Level { graph, node_count, comm, self_weight }
-}
-
-/// Relabel to dense `0..k`; returns k.
-fn compact(labels: &mut [u32]) -> usize {
-    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
-    for l in labels.iter_mut() {
-        let next = remap.len() as u32;
-        *l = *remap.entry(*l).or_insert(next);
-    }
-    remap.len()
 }
 
 /// Modularity of a partitioning (paper eq. 4) — used by tests and benches.
@@ -366,7 +310,7 @@ pub fn modularity(g: &CsrGraph, p: &Partitioning, gamma: f64) -> f64 {
             e_c[p.part_of(u) as usize] += w as f64;
         }
     }
-    for v in 0..g.num_nodes() as NodeId {
+    for v in 0..g.num_nodes() as crate::graph::NodeId {
         k_c[p.part_of(v) as usize] += g.weighted_degree(v);
     }
     let mut q = 0.0;
@@ -382,6 +326,8 @@ pub fn modularity(g: &CsrGraph, p: &Partitioning, gamma: f64) -> f64 {
 
 /// Run the paper's full two-step method: Leiden with size cap
 /// `β · max_part_size`, then greedy fusion down to `k` partitions.
+/// Single-threaded legacy entry point — a `PartitionPipeline` with
+/// `with_threads` is the parallel path.
 pub fn leiden_fusion(
     g: &CsrGraph,
     k: usize,
@@ -428,9 +374,9 @@ impl Partitioner for LeidenFusionPartitioner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::components_within;
     use crate::graph::gen::{generate_sbm, SbmConfig};
     use crate::graph::karate::karate_graph;
-    use crate::graph::components_within;
 
     #[test]
     fn karate_communities_are_sane() {
@@ -511,6 +457,33 @@ mod tests {
         let g = karate_graph();
         let cfg = LeidenConfig { seed: 7, ..Default::default() };
         assert_eq!(leiden(&g, &cfg).assignments(), leiden(&g, &cfg).assignments());
+    }
+
+    /// Regression for the pre-overhaul nondeterminism workaround: with the
+    /// scratch kernel, neighbour-community order is first-touch order by
+    /// construction, so a fixed seed must give byte-identical labels — on
+    /// a graph big enough to take several refinement levels, and for
+    /// every thread count.
+    #[test]
+    fn fixed_seed_is_byte_identical_across_runs_and_threads() {
+        let g = generate_sbm(&SbmConfig::arxiv_like(1500, 6)).unwrap().graph;
+        let cap = g.num_nodes() / 7;
+        let base = LeidenConfig {
+            max_community_size: cap,
+            seed: 11,
+            ..Default::default()
+        };
+        let reference = leiden(&g, &base);
+        let rerun = leiden(&g, &base);
+        assert_eq!(reference.assignments(), rerun.assignments(), "rerun drifted");
+        for threads in [2, 4] {
+            let cfg = LeidenConfig { threads, ..base.clone() };
+            assert_eq!(
+                reference.assignments(),
+                leiden(&g, &cfg).assignments(),
+                "threads={threads} drifted"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Shared machinery of the multilevel community detectors: the per-level
+//! graph state, community aggregates, the **single** modularity
+//! local-move routine both Leiden and Louvain run (they differ only in
+//! scheduling policy), and aggregation onto the next level via the
+//! sort-based [`CsrGraph::coarsen`] builder.
+//!
+//! Before the hot-path overhaul, `leiden.rs` and `louvain.rs` each
+//! carried a near-identical copy of this code with a `HashMap` allocated
+//! per node visit; the shared routine runs on an epoch-stamped
+//! [`NeighborWeights`] scratch buffer instead (O(degree) per visit, zero
+//! allocation in steady state).
+
+use super::scratch::NeighborWeights;
+use crate::graph::{CsrGraph, NodeId};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// One level of a multilevel community detector: a (possibly aggregated)
+/// graph plus per-super-node carry data.
+pub struct Level {
+    pub graph: CsrGraph,
+    /// Original-node count carried by each super-node.
+    pub node_count: Vec<usize>,
+    /// Community of each super-node.
+    pub comm: Vec<u32>,
+    /// Self-loop weight of each super-node (edges internal to the
+    /// community it was contracted from). CSR forbids literal self-loops,
+    /// so the weight is carried here; it contributes 2w to the node degree
+    /// in the modularity null model.
+    pub self_weight: Vec<f64>,
+}
+
+impl Level {
+    /// The finest level: every node is its own super-node and community.
+    pub fn singleton(graph: CsrGraph) -> Level {
+        let n = graph.num_nodes();
+        Level {
+            graph,
+            node_count: vec![1; n],
+            comm: (0..n as u32).collect(),
+            self_weight: vec![0.0; n],
+        }
+    }
+
+    /// Modularity degree: weighted degree + twice the self-loop weight.
+    #[inline]
+    pub fn degree(&self, v: NodeId) -> f64 {
+        self.graph.weighted_degree(v) + 2.0 * self.self_weight[v as usize]
+    }
+
+    /// Build the next level by contracting dense labels `0..n_coarse`.
+    /// With `seed_from_comm` each super-node's community is seeded from
+    /// its members' current community, compacted (Leiden: the refined
+    /// partition aggregates, the local-move partition seeds); otherwise
+    /// every super-node starts as its own community (Louvain).
+    pub fn aggregate(
+        &self,
+        dense: &[u32],
+        n_coarse: usize,
+        seed_from_comm: bool,
+        threads: usize,
+    ) -> Level {
+        let mut node_count = vec![0usize; n_coarse];
+        let mut self_weight = vec![0.0f64; n_coarse];
+        for v in 0..self.graph.num_nodes() {
+            let c = dense[v] as usize;
+            node_count[c] += self.node_count[v];
+            self_weight[c] += self.self_weight[v];
+        }
+        let (graph, internal) = self.graph.coarsen(dense, n_coarse, threads);
+        for (sw, w) in self_weight.iter_mut().zip(&internal) {
+            *sw += w;
+        }
+        let comm = if seed_from_comm {
+            let mut seed = vec![0u32; n_coarse];
+            for v in 0..self.graph.num_nodes() {
+                // all members of a refined community share one community
+                seed[dense[v] as usize] = self.comm[v];
+            }
+            compact(&mut seed);
+            seed
+        } else {
+            (0..n_coarse as u32).collect()
+        };
+        Level { graph, node_count, comm, self_weight }
+    }
+}
+
+/// Community-level aggregates maintained incrementally during local moves.
+pub struct CommStats {
+    /// Sum of modularity degrees of members.
+    pub degree: Vec<f64>,
+    /// Sum of original-node counts of members (Definition 1's size).
+    pub size: Vec<usize>,
+}
+
+impl CommStats {
+    pub fn init(level: &Level) -> Self {
+        let n = level.graph.num_nodes();
+        let mut s = CommStats { degree: vec![0.0; n], size: vec![0; n] };
+        for v in 0..n {
+            let c = level.comm[v] as usize;
+            s.degree[c] += level.degree(v as NodeId);
+            s.size[c] += level.node_count[v];
+        }
+        s
+    }
+
+    #[inline]
+    fn remove(&mut self, c: usize, deg: f64, size: usize) {
+        self.degree[c] -= deg;
+        self.size[c] -= size;
+    }
+
+    #[inline]
+    fn insert(&mut self, c: usize, deg: f64, size: usize) {
+        self.degree[c] += deg;
+        self.size[c] += size;
+    }
+}
+
+/// Scheduling policy of the shared local-move routine. The modularity
+/// objective, size cap, and candidate evaluation are identical; only the
+/// visit order differs — which is exactly the published difference
+/// between the two algorithms' moving phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MovePolicy {
+    /// Leiden's fast local moving: a work queue seeded with a shuffled
+    /// node order; a successful move re-queues the neighbours it affects.
+    Queue,
+    /// Louvain's classic sweep: full shuffled passes until a pass makes
+    /// no move.
+    Sweep,
+}
+
+/// Greedy modularity local moving over one level. Returns whether any
+/// node moved. `m` is the graph's total edge weight, `cap` the
+/// Definition 1 community-size bound in original nodes.
+pub fn local_move(
+    level: &mut Level,
+    policy: MovePolicy,
+    gamma: f64,
+    cap: usize,
+    m: f64,
+    rng: &mut Rng,
+    scratch: &mut NeighborWeights,
+) -> bool {
+    let n = level.graph.num_nodes();
+    if n == 0 {
+        return false;
+    }
+    scratch.reset(n); // community ids live in 0..n at every level
+    let mut stats = CommStats::init(level);
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut moved_any = false;
+
+    match policy {
+        MovePolicy::Queue => {
+            let mut in_queue = vec![true; n];
+            let mut queue: VecDeque<u32> = order.into_iter().collect();
+            while let Some(v) = queue.pop_front() {
+                in_queue[v as usize] = false;
+                let vc = level.comm[v as usize];
+                let best = best_move(level, &mut stats, scratch, v, gamma, cap, m);
+                if best != vc {
+                    level.comm[v as usize] = best;
+                    moved_any = true;
+                    // re-queue neighbours now outside v's new community
+                    for &u in level.graph.neighbors(v) {
+                        if level.comm[u as usize] != best && !in_queue[u as usize] {
+                            in_queue[u as usize] = true;
+                            queue.push_back(u);
+                        }
+                    }
+                }
+            }
+        }
+        MovePolicy::Sweep => loop {
+            let mut moved = false;
+            for &v in &order {
+                let vc = level.comm[v as usize];
+                let best = best_move(level, &mut stats, scratch, v, gamma, cap, m);
+                if best != vc {
+                    level.comm[v as usize] = best;
+                    moved = true;
+                    moved_any = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        },
+    }
+    moved_any
+}
+
+/// Evaluate `v`'s best community under the modularity gain
+/// `ΔQ ∝ w(v→c) − γ·k_v·K_c / (2m)` and update `stats` as if the move
+/// were applied (staying put re-inserts into the old community). The
+/// caller applies the label change.
+#[inline]
+fn best_move(
+    level: &Level,
+    stats: &mut CommStats,
+    scratch: &mut NeighborWeights,
+    v: u32,
+    gamma: f64,
+    cap: usize,
+    m: f64,
+) -> u32 {
+    let vc = level.comm[v as usize];
+    let k_v = level.degree(v);
+    let size_v = level.node_count[v as usize];
+
+    scratch.begin();
+    for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
+        scratch.add(level.comm[u as usize], level.graph.weight_at(v, i) as f64);
+    }
+
+    stats.remove(vc as usize, k_v, size_v);
+    let mut best_c = vc;
+    let mut best_gain =
+        scratch.get(vc) - gamma * k_v * stats.degree[vc as usize] / (2.0 * m);
+    for &c in scratch.touched() {
+        if c == vc {
+            continue;
+        }
+        if stats.size[c as usize] + size_v > cap {
+            continue; // Definition 1: size cap
+        }
+        let gain = scratch.get(c) - gamma * k_v * stats.degree[c as usize] / (2.0 * m);
+        if gain > best_gain + 1e-12 {
+            best_gain = gain;
+            best_c = c;
+        }
+    }
+    stats.insert(best_c as usize, k_v, size_v);
+    best_c
+}
+
+/// Relabel to dense `0..k` in first-seen order; returns `k`. Labels are
+/// near-dense on every caller (community ids are node ids at each level),
+/// so the remap is a flat array instead of a hash map.
+pub fn compact(labels: &mut [u32]) -> usize {
+    let cap = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(0);
+    let mut remap = vec![u32::MAX; cap];
+    let mut next = 0u32;
+    for l in labels.iter_mut() {
+        let slot = &mut remap[*l as usize];
+        if *slot == u32::MAX {
+            *slot = next;
+            next += 1;
+        }
+        *l = *slot;
+    }
+    next as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::karate::karate_graph;
+
+    #[test]
+    fn compact_is_first_seen_dense() {
+        let mut labels = vec![4u32, 4, 1, 3, 1, 0];
+        let k = compact(&mut labels);
+        assert_eq!(k, 4);
+        assert_eq!(labels, vec![0, 0, 1, 2, 1, 3]);
+        let mut empty: Vec<u32> = vec![];
+        assert_eq!(compact(&mut empty), 0);
+    }
+
+    #[test]
+    fn singleton_level_degrees_match_graph() {
+        let g = karate_graph();
+        let level = Level::singleton(g.clone());
+        for v in 0..g.num_nodes() as NodeId {
+            assert_eq!(level.degree(v), g.weighted_degree(v));
+        }
+        assert_eq!(level.node_count, vec![1; g.num_nodes()]);
+    }
+
+    #[test]
+    fn local_move_policies_improve_modularity() {
+        use crate::partition::leiden::modularity;
+        use crate::partition::Partitioning;
+        let g = karate_graph();
+        let m = g.total_weight();
+        for policy in [MovePolicy::Queue, MovePolicy::Sweep] {
+            let mut level = Level::singleton(g.clone());
+            let mut rng = Rng::new(3);
+            let mut scratch = NeighborWeights::new();
+            let moved =
+                local_move(&mut level, policy, 1.0, usize::MAX, m, &mut rng, &mut scratch);
+            assert!(moved, "{policy:?} moved nothing");
+            let p = Partitioning::from_labels(&level.comm);
+            assert!(p.k() < g.num_nodes());
+            assert!(modularity(&g, &p, 1.0) > 0.3, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn aggregate_conserves_node_count_and_weight() {
+        let g = karate_graph();
+        let m = g.total_weight();
+        let mut level = Level::singleton(g.clone());
+        let mut rng = Rng::new(5);
+        let mut scratch = NeighborWeights::new();
+        local_move(&mut level, MovePolicy::Queue, 1.0, usize::MAX, m, &mut rng, &mut scratch);
+        let mut dense = level.comm.clone();
+        let k = compact(&mut dense);
+        let agg = level.aggregate(&dense, k, false, 1);
+        assert_eq!(agg.graph.num_nodes(), k);
+        assert_eq!(agg.node_count.iter().sum::<usize>(), g.num_nodes());
+        // total weight (edges + self loops) is conserved by contraction
+        let total = agg.graph.total_weight() + agg.self_weight.iter().sum::<f64>();
+        assert!((total - m).abs() < 1e-6, "{total} vs {m}");
+    }
+
+    #[test]
+    fn aggregate_seeds_communities_from_members() {
+        let g = karate_graph();
+        let m = g.total_weight();
+        let mut level = Level::singleton(g.clone());
+        let mut rng = Rng::new(7);
+        let mut scratch = NeighborWeights::new();
+        local_move(&mut level, MovePolicy::Queue, 1.0, usize::MAX, m, &mut rng, &mut scratch);
+        let n_comms = compact(&mut level.comm);
+        // refine-as-identity: every super-node keeps its community
+        let dense: Vec<u32> = (0..g.num_nodes() as u32).collect();
+        let agg = level.aggregate(&dense, g.num_nodes(), true, 1);
+        let mut expect = level.comm.clone();
+        compact(&mut expect);
+        assert_eq!(agg.comm, expect);
+        assert!(n_comms >= 2);
+    }
+}

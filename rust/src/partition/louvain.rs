@@ -1,17 +1,22 @@
 //! Louvain community detection (Blondel et al. 2008) — the predecessor the
 //! Leiden paper improves on, implemented as an ablation baseline.
 //!
-//! Identical modularity objective and aggregation scheme as
-//! [`super::leiden`], but **no refinement phase**: communities move as
-//! whole blocks between levels, which is exactly what lets Louvain produce
-//! internally-disconnected communities (Traag et al. 2019, Fig. 1 — the
-//! defect that motivates Leiden, and transitively Leiden-Fusion). The
-//! `ablation_fusion` bench quantifies the difference on our workloads.
+//! Since the hot-path overhaul this is a thin configuration over the
+//! shared `super::level` machinery: the same modularity local-move
+//! routine as Leiden under `MovePolicy::Sweep` instead of
+//! `MovePolicy::Queue`, and **no refinement phase** — communities move
+//! as whole blocks between levels, which is exactly what lets Louvain
+//! produce internally-disconnected communities (Traag et al. 2019,
+//! Fig. 1 — the defect that motivates Leiden, and transitively
+//! Leiden-Fusion). The `ablation_fusion` bench quantifies the difference
+//! on our workloads.
 
 use super::fusion::{fuse_communities, split_into_components, FusionConfig};
+use super::level::{compact, local_move, Level, MovePolicy};
+use super::scratch::NeighborWeights;
 use super::{Partitioner, Partitioning};
 use crate::error::Result;
-use crate::graph::{CsrGraph, NodeId};
+use crate::graph::CsrGraph;
 use crate::util::rng::Rng;
 
 /// Louvain parameters (subset of Leiden's — no θ, no refinement).
@@ -22,6 +27,8 @@ pub struct LouvainConfig {
     pub max_community_size: usize,
     pub max_levels: usize,
     pub seed: u64,
+    /// Worker threads for aggregation (the sweep itself is sequential).
+    pub threads: usize,
 }
 
 impl Default for LouvainConfig {
@@ -31,21 +38,8 @@ impl Default for LouvainConfig {
             max_community_size: usize::MAX,
             max_levels: 10,
             seed: 0,
+            threads: 1,
         }
-    }
-}
-
-struct Level {
-    graph: CsrGraph,
-    node_count: Vec<usize>,
-    self_weight: Vec<f64>,
-    comm: Vec<u32>,
-}
-
-impl Level {
-    #[inline]
-    fn degree(&self, v: NodeId) -> f64 {
-        self.graph.weighted_degree(v) + 2.0 * self.self_weight[v as usize]
     }
 }
 
@@ -57,16 +51,20 @@ pub fn louvain(g: &CsrGraph, cfg: &LouvainConfig) -> Partitioning {
     }
     let m = g.total_weight().max(f64::MIN_POSITIVE);
     let mut rng = Rng::new(cfg.seed);
+    let mut scratch = NeighborWeights::new();
     let mut global: Vec<u32> = (0..n as u32).collect();
-    let mut level = Level {
-        graph: g.clone(),
-        node_count: vec![1; n],
-        self_weight: vec![0.0; n],
-        comm: (0..n as u32).collect(),
-    };
+    let mut level = Level::singleton(g.clone());
 
     for _ in 0..cfg.max_levels {
-        let moved = local_move(&mut level, cfg, m, &mut rng);
+        let moved = local_move(
+            &mut level,
+            MovePolicy::Sweep,
+            cfg.gamma,
+            cfg.max_community_size,
+            m,
+            &mut rng,
+            &mut scratch,
+        );
         let mut dense = level.comm.clone();
         let n_comms = compact(&mut dense);
         if !moved || n_comms == level.graph.num_nodes() {
@@ -76,7 +74,7 @@ pub fn louvain(g: &CsrGraph, cfg: &LouvainConfig) -> Partitioning {
         for gcv in global.iter_mut() {
             *gcv = dense[*gcv as usize];
         }
-        level = aggregate(&level, &dense, n_comms);
+        level = level.aggregate(&dense, n_comms, false, cfg.threads);
         if level.graph.num_nodes() <= 1 {
             break;
         }
@@ -85,106 +83,6 @@ pub fn louvain(g: &CsrGraph, cfg: &LouvainConfig) -> Partitioning {
     compact(&mut final_comm);
     let labels: Vec<u32> = global.iter().map(|&sc| final_comm[sc as usize]).collect();
     Partitioning::from_labels(&labels)
-}
-
-fn local_move(level: &mut Level, cfg: &LouvainConfig, m: f64, rng: &mut Rng) -> bool {
-    let n = level.graph.num_nodes();
-    let mut deg_c = vec![0.0f64; n];
-    let mut size_c = vec![0usize; n];
-    for v in 0..n {
-        deg_c[level.comm[v] as usize] += level.degree(v as NodeId);
-        size_c[level.comm[v] as usize] += level.node_count[v];
-    }
-    let mut order: Vec<u32> = (0..n as u32).collect();
-    rng.shuffle(&mut order);
-    let mut moved_any = false;
-    let mut nbr_comms: Vec<u32> = Vec::new();
-    let mut w_to: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
-
-    // classic Louvain: sweep until a full pass makes no move
-    loop {
-        let mut moved = false;
-        for &v in &order {
-            let vc = level.comm[v as usize];
-            let k_v = level.degree(v);
-            let size_v = level.node_count[v as usize];
-            nbr_comms.clear();
-            w_to.clear();
-            for (i, &u) in level.graph.neighbors(v).iter().enumerate() {
-                let c = level.comm[u as usize];
-                let e = w_to.entry(c).or_insert(0.0);
-                if *e == 0.0 {
-                    nbr_comms.push(c);
-                }
-                *e += level.graph.weight_at(v, i) as f64;
-            }
-            deg_c[vc as usize] -= k_v;
-            size_c[vc as usize] -= size_v;
-            let w_stay = w_to.get(&vc).copied().unwrap_or(0.0);
-            let mut best = vc;
-            let mut best_gain = w_stay - cfg.gamma * k_v * deg_c[vc as usize] / (2.0 * m);
-            for &c in &nbr_comms {
-                if c == vc || size_c[c as usize] + size_v > cfg.max_community_size {
-                    continue;
-                }
-                let gain = w_to[&c] - cfg.gamma * k_v * deg_c[c as usize] / (2.0 * m);
-                if gain > best_gain + 1e-12 {
-                    best_gain = gain;
-                    best = c;
-                }
-            }
-            deg_c[best as usize] += k_v;
-            size_c[best as usize] += size_v;
-            if best != vc {
-                level.comm[v as usize] = best;
-                moved = true;
-                moved_any = true;
-            }
-        }
-        if !moved {
-            break;
-        }
-    }
-    moved_any
-}
-
-fn aggregate(level: &Level, dense: &[u32], n_comms: usize) -> Level {
-    let mut node_count = vec![0usize; n_comms];
-    let mut self_weight = vec![0.0f64; n_comms];
-    for v in 0..level.graph.num_nodes() {
-        let c = dense[v] as usize;
-        node_count[c] += level.node_count[v];
-        self_weight[c] += level.self_weight[v];
-    }
-    let mut agg: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
-    for (u, v, w) in level.graph.edges() {
-        let (cu, cv) = (dense[u as usize], dense[v as usize]);
-        if cu == cv {
-            self_weight[cu as usize] += w as f64;
-            continue;
-        }
-        let key = if cu < cv { (cu, cv) } else { (cv, cu) };
-        *agg.entry(key).or_insert(0.0) += w as f64;
-    }
-    let edges: Vec<(NodeId, NodeId)> = agg.keys().copied().collect();
-    let weights: Vec<f32> = edges.iter().map(|k| agg[k] as f32).collect();
-    let graph = CsrGraph::from_weighted_edges(n_comms, &edges, Some(&weights))
-        .expect("aggregate edges valid");
-    Level {
-        graph,
-        node_count,
-        self_weight,
-        comm: (0..n_comms as u32).collect(),
-    }
-}
-
-fn compact(labels: &mut [u32]) -> usize {
-    let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
-    for l in labels.iter_mut() {
-        let next = remap.len() as u32;
-        *l = *remap.entry(*l).or_insert(next);
-    }
-    remap.len()
 }
 
 /// Louvain-Fusion: the ablation counterpart of [`super::leiden::leiden_fusion`].
@@ -226,9 +124,9 @@ impl Partitioner for LouvainFusionPartitioner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::components_within;
     use crate::graph::gen::{generate_sbm, SbmConfig};
     use crate::graph::karate::karate_graph;
-    use crate::graph::components_within;
     use crate::partition::leiden::modularity;
 
     #[test]
@@ -263,6 +161,15 @@ mod tests {
         let g = karate_graph();
         let cfg = LouvainConfig { seed: 5, ..Default::default() };
         assert_eq!(louvain(&g, &cfg).assignments(), louvain(&g, &cfg).assignments());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_labels() {
+        let g = generate_sbm(&SbmConfig::arxiv_like(900, 3)).unwrap().graph;
+        let base = LouvainConfig { seed: 8, ..Default::default() };
+        let reference = louvain(&g, &base);
+        let par = louvain(&g, &LouvainConfig { threads: 4, ..base });
+        assert_eq!(reference.assignments(), par.assignments());
     }
 
     #[test]

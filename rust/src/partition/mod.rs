@@ -20,18 +20,28 @@
 //!
 //! The free functions [`by_name`] and [`fusion::fuse_partitioning`] are
 //! deprecated shims over this API, kept for one release.
+//!
+//! Hot paths run on the epoch-stamped scratch kernel in [`scratch`]
+//! (shared by the Leiden/Louvain local-move routine in `level`, Leiden
+//! refinement, and fusion's incremental cut map) and aggregate levels
+//! through the sort-based `CsrGraph::coarsen` builder. The pipeline's
+//! `with_threads` knob parallelises refinement, coarsening, and the
+//! fusion boundary scan with a byte-identical-output guarantee — see
+//! DESIGN.md "Performance".
 
 pub mod fusion;
 pub mod leiden;
+pub(crate) mod level;
 pub mod louvain;
 pub mod lpa;
 pub mod metis;
 pub mod pipeline;
 pub mod quality;
 pub mod random;
+pub mod scratch;
 pub mod spec;
 
-pub use fusion::{fuse_communities, FusionConfig};
+pub use fusion::{fuse_communities, fuse_communities_threaded, FusionConfig};
 #[allow(deprecated)]
 pub use fusion::fuse_partitioning;
 pub use leiden::{leiden, leiden_fusion, LeidenConfig};

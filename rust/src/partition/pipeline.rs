@@ -9,7 +9,7 @@
 //! [`Partitioning`], per-stage timings, and a lazily-computed
 //! [`PartitionQuality`], so call sites stop recomputing metrics ad-hoc.
 
-use super::fusion::{fuse_communities, split_into_components, FusionConfig};
+use super::fusion::{fuse_communities_threaded, split_into_components, FusionConfig};
 use super::leiden::{leiden, LeidenConfig};
 use super::louvain::{louvain, LouvainConfig};
 use super::lpa::LpaPartitioner;
@@ -32,6 +32,10 @@ pub struct StageCtx<'a> {
     /// Target partition count.
     pub k: usize,
     pub seed: u64,
+    /// Worker threads available to parallel-capable stages (≥ 1). The
+    /// determinism contract (DESIGN.md "Performance") guarantees the
+    /// partitioning is identical for every value.
+    pub threads: usize,
 }
 
 /// One pipeline stage. Detection stages ignore `input`; transform stages
@@ -137,20 +141,34 @@ impl PartitionReport {
 pub struct PartitionPipeline {
     spec: PartitionSpec,
     seed: u64,
+    threads: usize,
     stages: Vec<Box<dyn Stage>>,
 }
 
 impl PartitionPipeline {
     /// Build the stage list for `spec`. The spec is already validated by
-    /// its parser, so construction cannot fail.
+    /// its parser, so construction cannot fail. Stages run sequentially
+    /// within one thread unless [`Self::with_threads`] raises the knob.
     pub fn new(spec: PartitionSpec, seed: u64) -> Self {
         let stages = build_stages(&spec);
-        PartitionPipeline { spec, seed, stages }
+        PartitionPipeline { spec, seed, threads: 1, stages }
     }
 
     /// Parse `spec` (grammar or legacy name) and build the pipeline.
     pub fn parse(spec: &str, seed: u64) -> Result<Self> {
         Ok(Self::new(spec.parse()?, seed))
+    }
+
+    /// Set the worker-thread count for parallel-capable stages (Leiden
+    /// refinement/aggregation, fusion's boundary scan). `0` is treated as
+    /// `1`. Same seed ⇒ byte-identical partitionings for every value.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     pub fn spec(&self) -> &PartitionSpec {
@@ -181,7 +199,7 @@ impl PartitionPipeline {
             k,
             num_stages: self.stages.len(),
         });
-        let ctx = StageCtx { graph: g, k, seed: self.seed };
+        let ctx = StageCtx { graph: g, k, seed: self.seed, threads: self.threads };
         let mut current: Option<Partitioning> = None;
         let mut timings = Vec::with_capacity(self.stages.len());
         for (index, stage) in self.stages.iter().enumerate() {
@@ -347,6 +365,7 @@ impl Stage for LeidenStage {
             ),
             theta: self.theta,
             seed: ctx.seed,
+            threads: ctx.threads,
             ..LeidenConfig::default()
         };
         Ok(leiden(ctx.graph, &cfg))
@@ -374,6 +393,7 @@ impl Stage for LouvainStage {
                 self.cap_alpha,
             ),
             seed: ctx.seed,
+            threads: ctx.threads,
             ..LouvainConfig::default()
         };
         Ok(louvain(ctx.graph, &cfg))
@@ -446,7 +466,7 @@ impl Stage for FusionStage {
         } else {
             p
         };
-        fuse_communities(ctx.graph, &communities, &cfg)
+        fuse_communities_threaded(ctx.graph, &communities, &cfg, ctx.threads)
     }
 }
 
@@ -735,6 +755,26 @@ mod tests {
         assert_eq!(p.name(), "leiden+fusion");
         let out = p.partition(&g, 2).unwrap();
         assert_eq!(out.k(), 2);
+    }
+
+    #[test]
+    fn same_seed_same_labels_for_every_thread_count() {
+        use crate::graph::gen::{generate_sbm, SbmConfig};
+        let g = generate_sbm(&SbmConfig::arxiv_like(1500, 2)).unwrap().graph;
+        let reference = pipeline("lf", 7).run(&g, 4).unwrap().into_partitioning();
+        for threads in [2, 4] {
+            let p = PartitionPipeline::parse("lf", 7)
+                .unwrap()
+                .with_threads(threads)
+                .run(&g, 4)
+                .unwrap()
+                .into_partitioning();
+            assert_eq!(
+                reference.assignments(),
+                p.assignments(),
+                "threads={threads} changed the partitioning"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! Epoch-stamped dense scratch buffers — the shared kernel under every
+//! partitioning hot path.
+//!
+//! The Leiden/Louvain local-move loops, Leiden refinement, and the fusion
+//! cut computation all need the same primitive: accumulate edge weights
+//! from one node to each neighbouring community, inspect the few
+//! communities actually touched, and move on. A `HashMap` per node visit
+//! (the pre-overhaul implementation) pays hashing plus an allocation per
+//! visit; [`NeighborWeights`] replaces it with dense arrays cleared in
+//! O(touched) via an epoch stamp:
+//!
+//! * `w_to[key]` holds the accumulated weight, valid only when
+//!   `stamp[key]` equals the current epoch;
+//! * [`NeighborWeights::begin`] bumps the epoch — an O(1) "clear";
+//! * [`NeighborWeights::touched`] lists the keys hit since `begin` in
+//!   **first-touch order**, which is fully determined by the caller's
+//!   neighbour iteration order. This is what makes candidate enumeration
+//!   deterministic by construction — the first-seen side list the old
+//!   code kept to paper over `HashMap` iteration order is gone.
+
+/// Dense `u32 key → f64 weight` accumulator with O(1) epoch clears.
+#[derive(Debug, Default)]
+pub struct NeighborWeights {
+    w_to: Vec<f64>,
+    stamp: Vec<u32>,
+    touched: Vec<u32>,
+    epoch: u32,
+}
+
+impl NeighborWeights {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure capacity for keys `0..n` and invalidate every entry.
+    /// Reusing one buffer across calls keeps the hot loops allocation-free
+    /// once the high-water mark is reached.
+    pub fn reset(&mut self, n: usize) {
+        if self.w_to.len() < n {
+            self.w_to.resize(n, 0.0);
+            self.stamp.resize(n, 0);
+        }
+        self.touched.clear();
+        self.bump_epoch();
+    }
+
+    /// Start a fresh accumulation: previous entries are invalidated by the
+    /// epoch stamp, not by touching the dense arrays — O(1) plus the
+    /// truncation of the touched list.
+    #[inline]
+    pub fn begin(&mut self) {
+        self.touched.clear();
+        self.bump_epoch();
+    }
+
+    fn bump_epoch(&mut self) {
+        // On wrap, stale stamps could alias the new epoch — do the one
+        // full clear every 2^32 - 1 epochs that correctness needs.
+        if self.epoch == u32::MAX {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    /// Add `w` to `key`'s accumulator. The first touch of a key registers
+    /// it in [`Self::touched`].
+    #[inline]
+    pub fn add(&mut self, key: u32, w: f64) {
+        let i = key as usize;
+        if self.stamp[i] == self.epoch {
+            self.w_to[i] += w;
+        } else {
+            self.stamp[i] = self.epoch;
+            self.w_to[i] = w;
+            self.touched.push(key);
+        }
+    }
+
+    /// Accumulated weight for `key`; 0.0 when untouched since `begin`.
+    #[inline]
+    pub fn get(&self, key: u32) -> f64 {
+        let i = key as usize;
+        if self.stamp[i] == self.epoch {
+            self.w_to[i]
+        } else {
+            0.0
+        }
+    }
+
+    /// Keys touched since `begin`, in first-touch order.
+    #[inline]
+    pub fn touched(&self) -> &[u32] {
+        &self.touched
+    }
+
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_lists_first_touch_order() {
+        let mut nw = NeighborWeights::new();
+        nw.reset(10);
+        nw.begin();
+        nw.add(3, 1.0);
+        nw.add(7, 2.0);
+        nw.add(3, 0.5);
+        nw.add(0, 4.0);
+        assert_eq!(nw.touched(), &[3, 7, 0]);
+        assert_eq!(nw.get(3), 1.5);
+        assert_eq!(nw.get(7), 2.0);
+        assert_eq!(nw.get(0), 4.0);
+        assert_eq!(nw.get(5), 0.0);
+        assert_eq!(nw.len(), 3);
+    }
+
+    #[test]
+    fn begin_clears_in_o1() {
+        let mut nw = NeighborWeights::new();
+        nw.reset(4);
+        nw.begin();
+        nw.add(2, 1.0);
+        nw.begin();
+        assert!(nw.is_empty());
+        assert_eq!(nw.get(2), 0.0);
+        nw.add(2, 3.0);
+        assert_eq!(nw.get(2), 3.0);
+        assert_eq!(nw.touched(), &[2]);
+    }
+
+    #[test]
+    fn reset_grows_and_invalidates() {
+        let mut nw = NeighborWeights::new();
+        nw.reset(2);
+        nw.begin();
+        nw.add(1, 9.0);
+        nw.reset(8);
+        assert_eq!(nw.get(1), 0.0);
+        nw.begin();
+        nw.add(7, 1.0);
+        assert_eq!(nw.get(7), 1.0);
+    }
+
+    #[test]
+    fn epoch_wrap_does_not_resurrect_entries() {
+        let mut nw = NeighborWeights::new();
+        nw.reset(3);
+        nw.epoch = u32::MAX - 1;
+        nw.begin(); // epoch = MAX
+        nw.add(1, 5.0);
+        nw.begin(); // wraps: full stamp clear, epoch = 1
+        assert_eq!(nw.get(1), 0.0);
+        assert!(nw.is_empty());
+        nw.add(1, 2.0);
+        assert_eq!(nw.get(1), 2.0);
+    }
+
+    #[test]
+    fn matches_hashmap_reference_on_random_streams() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        let mut nw = NeighborWeights::new();
+        nw.reset(64);
+        for _ in 0..50 {
+            nw.begin();
+            let mut reference: std::collections::HashMap<u32, f64> =
+                std::collections::HashMap::new();
+            for _ in 0..rng.index(40) {
+                let key = rng.index(64) as u32;
+                let w = rng.f64();
+                nw.add(key, w);
+                *reference.entry(key).or_insert(0.0) += w;
+            }
+            assert_eq!(nw.len(), reference.len());
+            for (&k, &w) in &reference {
+                assert!((nw.get(k) - w).abs() < 1e-12);
+            }
+        }
+    }
+}

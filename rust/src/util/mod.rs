@@ -1,6 +1,8 @@
-//! Shared infrastructure: RNG, JSON, timing, logging.
+//! Shared infrastructure: RNG, JSON, timing, logging, fork-join
+//! parallelism.
 
 pub mod json;
+pub mod parallel;
 pub mod rng;
 
 use std::time::Instant;

@@ -1,0 +1,121 @@
+//! In-crate fork-join data parallelism.
+//!
+//! `rayon` is unavailable offline (see DESIGN.md "Offline-build
+//! constraints"), so the partitioning hot paths parallelise through this
+//! module instead: scoped-thread map over contiguous index chunks with
+//! **ordered reduction** — chunk results are always combined in chunk
+//! order, never in completion order, which is the property the
+//! determinism-under-parallelism contract (DESIGN.md "Performance")
+//! builds on. Callers that additionally need floating-point sums to be
+//! bit-identical across thread counts must make the summation order
+//! independent of the chunking (the CSR coarsening builder does this by
+//! summing inside a sorted merge rather than per chunk).
+
+use std::ops::Range;
+
+/// Clamp a requested thread count to what `len` items can usefully feed:
+/// at least `min_chunk` items per thread, and never more threads than
+/// items. `0` and `1` both mean sequential.
+pub fn effective_threads(threads: usize, len: usize, min_chunk: usize) -> usize {
+    if threads <= 1 || len == 0 {
+        return 1;
+    }
+    let max_useful = len.div_ceil(min_chunk.max(1));
+    threads.min(max_useful).max(1)
+}
+
+/// Split `0..len` into at most `threads` near-equal contiguous chunks,
+/// apply `f(chunk_index, range)` to each — in parallel when more than one
+/// chunk results — and return the outputs **in chunk order**.
+///
+/// With `threads <= 1` this degenerates to a single inline call, so the
+/// sequential and parallel paths share one code path and cannot drift.
+pub fn map_chunks<T, F>(threads: usize, len: usize, min_chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, Range<usize>) -> T + Sync,
+{
+    let threads = effective_threads(threads, len, min_chunk);
+    if threads == 1 {
+        return vec![f(0, 0..len)];
+    }
+    let chunk = len.div_ceil(threads);
+    // re-derive the worker count from the chunk size so every range is
+    // non-empty and well-formed (ceil rounding can otherwise leave
+    // trailing workers with start > len)
+    let threads = len.div_ceil(chunk);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let f = &f;
+                let start = t * chunk;
+                let end = ((t + 1) * chunk).min(len);
+                scope.spawn(move || f(t, start..end))
+            })
+            .collect();
+        // join in spawn order — the ordered reduction
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        for threads in [1, 2, 3, 8] {
+            let chunks = map_chunks(threads, 100, 1, |_, r| r.collect::<Vec<_>>());
+            let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+            assert_eq!(flat, (0..100).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn results_are_in_chunk_order() {
+        let out = map_chunks(4, 40, 1, |idx, r| (idx, r.start));
+        for (i, &(idx, start)) in out.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(start, i * 10);
+        }
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let work = |_, r: Range<usize>| r.map(|i| i * i).sum::<usize>();
+        let seq: usize = map_chunks(1, 1000, 1, work).into_iter().sum();
+        let par: usize = map_chunks(4, 1000, 1, work).into_iter().sum();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(map_chunks(8, 0, 1, |_, r| r.len()), vec![0]);
+        // 3 items, min chunk 2 → at most 2 chunks
+        let out = map_chunks(8, 3, 2, |_, r| r.len());
+        assert!(out.len() <= 2, "{out:?}");
+        assert_eq!(out.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn ranges_are_well_formed_when_threads_do_not_divide_len() {
+        // threads=7, len=9 → chunk=2; naive `t * chunk` would hand worker
+        // 5 the inverted range 10..9 — slicing with it must not panic
+        let data: Vec<usize> = (0..9).collect();
+        let chunks = map_chunks(7, data.len(), 1, |_, r| data[r].to_vec());
+        let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+        assert_eq!(flat, data);
+    }
+
+    #[test]
+    fn effective_threads_clamps() {
+        assert_eq!(effective_threads(0, 100, 1), 1);
+        assert_eq!(effective_threads(1, 100, 1), 1);
+        assert_eq!(effective_threads(16, 4, 1), 4);
+        assert_eq!(effective_threads(16, 100, 50), 2);
+        assert_eq!(effective_threads(4, 0, 1), 1);
+    }
+}

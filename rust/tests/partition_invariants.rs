@@ -349,6 +349,73 @@ fn prop_plus_f_reaches_k_connected() {
     );
 }
 
+/// The sort-based coarsening builder produces the same coarse graph
+/// (same CSR structure, same weights up to float-summation order) as the
+/// HashMap reference on arbitrary graphs, weighted or not — and its
+/// output is byte-identical for every thread count.
+#[test]
+fn prop_coarsen_matches_hashmap_reference() {
+    check(
+        "coarsen-reference",
+        25,
+        0xC0A5,
+        |rng| {
+            let g0 = gens::any_graph(rng, 80, 2.0);
+            // attach random weights in half the cases
+            let g = if rng.chance(0.5) && g0.num_edges() > 0 {
+                let edges: Vec<(u32, u32)> =
+                    g0.edges().map(|(u, v, _)| (u, v)).collect();
+                let ws: Vec<f32> =
+                    edges.iter().map(|_| 0.25 + rng.f32() * 4.0).collect();
+                CsrGraph::from_weighted_edges(g0.num_nodes(), &edges, Some(&ws))
+                    .unwrap()
+            } else {
+                g0
+            };
+            let n_coarse = 1 + rng.index(g.num_nodes());
+            let labels: Vec<u32> =
+                (0..g.num_nodes()).map(|_| rng.index(n_coarse) as u32).collect();
+            (g, labels, n_coarse)
+        },
+        // the contract (oracle equality + thread invariance) is encoded
+        // once, in `CsrGraph::check_coarsen_contract`
+        |(g, labels, n_coarse)| g.check_coarsen_contract(labels, *n_coarse),
+    );
+}
+
+/// The acceptance contract of the parallel pipeline: same seed yields
+/// byte-identical partitionings for threads=1 and threads=4.
+#[test]
+fn prop_lf_byte_identical_across_thread_counts() {
+    check(
+        "lf-threads-identical",
+        8,
+        0x7D5,
+        |rng| {
+            let g = gens::connected_graph(rng, 40, 300, 2.0);
+            let k = 2 + rng.index(3);
+            (g, k)
+        },
+        |(g, k)| {
+            let seq = PartitionPipeline::parse("lf", 9)
+                .map_err(|e| e.to_string())?
+                .run(g, *k)
+                .map_err(|e| e.to_string())?
+                .into_partitioning();
+            let par = PartitionPipeline::parse("lf", 9)
+                .map_err(|e| e.to_string())?
+                .with_threads(4)
+                .run(g, *k)
+                .map_err(|e| e.to_string())?
+                .into_partitioning();
+            if seq.assignments() != par.assignments() {
+                return Err("threads=4 produced a different partitioning".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Determinism: same seed => identical partitioning, across all methods.
 #[test]
 fn prop_partitioners_deterministic() {
