@@ -118,9 +118,153 @@ fn main() {
         std::hint::black_box(ds.graph.coarsen_reference(labels, n_comms));
     }));
 
+    // 3f. serving ownership lookup: dense direct-indexed OwnershipIndex
+    // vs the HashMap it replaced (8 shards over a compact id space, the
+    // normal serving shape)
+    {
+        use leiden_fusion::graph::NodeId;
+        use leiden_fusion::serve::{IndexLayout, OwnershipIndex};
+        let n_serve = 200_000u32;
+        let k_shards = 8usize;
+        let mut shard_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); k_shards];
+        for v in 0..n_serve {
+            shard_nodes[(v as usize) % k_shards].push(v);
+        }
+        let views: Vec<&[NodeId]> = shard_nodes.iter().map(|s| s.as_slice()).collect();
+        let idx = OwnershipIndex::build_with_layout(&views, IndexLayout::Auto).unwrap();
+        assert!(idx.is_dense());
+        let mut map: std::collections::HashMap<NodeId, (u32, u32)> =
+            std::collections::HashMap::with_capacity(n_serve as usize);
+        for (s, nodes) in shard_nodes.iter().enumerate() {
+            for (r, &v) in nodes.iter().enumerate() {
+                map.insert(v, (s as u32, r as u32));
+            }
+        }
+        // pseudo-random probe sequence, identical for both sides
+        let probe = |lookup: &dyn Fn(NodeId) -> Option<(u32, u32)>| {
+            let mut acc = 0u64;
+            let mut x = 0x9E3779B97F4A7C15u64;
+            for _ in 0..n_serve {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let v = (x >> 33) as u32 % n_serve;
+                if let Some((s, r)) = lookup(v) {
+                    acc += (s as u64) + (r as u64);
+                }
+            }
+            acc
+        };
+        add("ownership lookup (dense index)", bench(1, 20, budget, || {
+            std::hint::black_box(probe(&|v| idx.locate(v)));
+        }));
+        add("ownership lookup (hashmap baseline)", bench(1, 20, budget, || {
+            std::hint::black_box(probe(&|v| map.get(&v).copied()));
+        }));
+    }
+
+    // 3g. serving batch gather: lock-free slab store vs the old
+    // Mutex<Option<Arc<Vec>>> round-trip per row
+    {
+        use leiden_fusion::graph::NodeId;
+        use leiden_fusion::serve::{
+            shard_file_name, write_shard, ShardEntry, ShardManifest,
+            ShardedEmbeddingStore, CLASSIFIER_FILE,
+        };
+        use std::sync::{Arc, Mutex};
+        // the pre-overhaul per-shard slot shape, reconstructed as a baseline
+        type LazySlot = Mutex<Option<Arc<Vec<f32>>>>;
+        let dim = 64usize;
+        let n_rows = 20_000u32;
+        let k_shards = 4usize;
+        let dir = std::env::temp_dir()
+            .join(format!("lf_micro_slab_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut entries = Vec::new();
+        let mut mutex_shards: Vec<LazySlot> = Vec::new();
+        let mut shard_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); k_shards];
+        for v in 0..n_rows {
+            shard_nodes[(v as usize) % k_shards].push(v);
+        }
+        for (s, nodes) in shard_nodes.iter().enumerate() {
+            let emb: Vec<f32> = (0..nodes.len() * dim).map(|i| i as f32 * 0.5).collect();
+            write_shard(&dir.join(shard_file_name(s as u32)), s as u32, nodes, &emb, dim)
+                .unwrap();
+            entries.push(ShardEntry {
+                file: shard_file_name(s as u32),
+                part_id: s as u32,
+                rows: nodes.len(),
+            });
+            mutex_shards.push(Mutex::new(Some(Arc::new(emb))));
+        }
+        ShardManifest {
+            version: 1,
+            dataset: "micro".into(),
+            task: "multiclass".into(),
+            num_nodes: n_rows as usize,
+            dim,
+            classes: 2,
+            classifier_file: CLASSIFIER_FILE.into(),
+            shards: entries,
+        }
+        .save(&dir)
+        .unwrap();
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        store.warm(4).unwrap();
+        let mut x = vec![0f32; 256 * dim];
+        add("batch gather (lock-free slabs)", bench(1, 20, budget, || {
+            let mut v = 0u32;
+            for b in 0..(n_rows as usize / 256) {
+                for row in 0..256 {
+                    store
+                        .copy_embedding(v, &mut x[row * dim..(row + 1) * dim])
+                        .unwrap();
+                    v = (v + 7919) % n_rows;
+                }
+                std::hint::black_box(b);
+            }
+            std::hint::black_box(&x);
+        }));
+        add("batch gather (mutex baseline)", bench(1, 20, budget, || {
+            let mut v = 0u32;
+            for b in 0..(n_rows as usize / 256) {
+                for row in 0..256 {
+                    // the pre-overhaul path: locate, lock the shard slot,
+                    // clone the Arc, then copy
+                    let (s, r) = store.locate(v).unwrap();
+                    let data = {
+                        let slot = mutex_shards[s as usize].lock().unwrap();
+                        Arc::clone(slot.as_ref().unwrap())
+                    };
+                    let off = r as usize * dim;
+                    x[row * dim..(row + 1) * dim]
+                        .copy_from_slice(&data[off..off + dim]);
+                    v = (v + 7919) % n_rows;
+                }
+                std::hint::black_box(b);
+            }
+            std::hint::black_box(&x);
+        }));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     // 4. batch construction (inner + repli)
     let p = lf(&ds.graph, 8, 0.05, 0.5, 7).unwrap();
     let members = p.members();
+
+    // 4b. per-partition subgraph extraction: scratch-based, sequential vs
+    // fanned out across partitions (byte-identical output by contract)
+    {
+        use leiden_fusion::graph::{extract_subgraphs, SubgraphKind};
+        add("extract_subgraphs repli (1 thread)", bench(1, 10, budget, || {
+            std::hint::black_box(
+                extract_subgraphs(&ds.graph, &members, SubgraphKind::Repli, 1).unwrap(),
+            );
+        }));
+        add("extract_subgraphs repli (4 threads)", bench(1, 10, budget, || {
+            std::hint::black_box(
+                extract_subgraphs(&ds.graph, &members, SubgraphKind::Repli, 4).unwrap(),
+            );
+        }));
+    }
     add("build_batch inner (1 part)", bench(1, 10, budget, || {
         std::hint::black_box(
             build_batch(&ds, &members[0], Mode::Inner, ModelKind::Gcn).unwrap(),

@@ -34,6 +34,15 @@ LF_BENCH_QUICK=1 LF_BENCH_N=4000 cargo bench --bench table3_partition_time -- \
   --ks 2,8 --threads 1,2 --json-out target/bench-results/BENCH_partition.json
 test -s target/bench-results/BENCH_partition.json
 
+# Serving-trajectory smoke: bench_serve must keep producing
+# BENCH_serve.json. Without compiled artifacts it emits a skipped-marker
+# report (so this check holds on un-provisioned runners); with them it
+# measures QPS/p50/p99/hit-rate and the per-stage breakdown.
+echo "== bench smoke: bench_serve --json-out =="
+LF_BENCH_QUICK=1 cargo bench --bench bench_serve -- \
+  --json-out target/bench-results/BENCH_serve.json
+test -s target/bench-results/BENCH_serve.json
+
 # Determinism: same seed must yield byte-identical partitionings across
 # runs AND across thread counts (DESIGN.md "Performance" contract).
 echo "== determinism: threads=1 vs threads=4, same seed =="

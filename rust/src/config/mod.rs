@@ -169,8 +169,15 @@ pub struct ServeConfig {
     pub batch_size: usize,
     /// Engine worker threads (each owns a PJRT runtime).
     pub workers: usize,
-    /// LRU result-cache entries (0 disables).
+    /// LRU result-cache entries across all stripes (0 disables caching;
+    /// single-flight miss coalescing stays on).
     pub cache_capacity: usize,
+    /// Cache stripes (rounded up to a power of two by the engine;
+    /// 0 = auto: 4 per worker).
+    pub cache_stripes: usize,
+    /// Eagerly load every shard slab before serving (`repro serve` also
+    /// takes `--warm` on the CLI).
+    pub warm: bool,
 }
 
 impl Default for ServeConfig {
@@ -180,6 +187,8 @@ impl Default for ServeConfig {
             batch_size: 64,
             workers: 2,
             cache_capacity: 4096,
+            cache_stripes: 8,
+            warm: false,
         }
     }
 }
@@ -200,6 +209,8 @@ impl ServeConfig {
             batch_size: nneg("serve", "batch_size", d.batch_size),
             workers: nneg("serve", "workers", d.workers),
             cache_capacity: nneg("serve", "cache_capacity", d.cache_capacity),
+            cache_stripes: nneg("serve", "cache_stripes", d.cache_stripes),
+            warm: t.bool_or("serve", "warm", d.warm),
         }
     }
 }
@@ -437,7 +448,8 @@ machines = 2
     fn parses_serve_section() {
         let t = Toml::parse(
             "[serve]\nshards_dir = \"out/shards\"\nexport_dir = \"out/shards\"\n\
-             batch_size = 128\nworkers = 4\ncache_capacity = 100\n",
+             batch_size = 128\nworkers = 4\ncache_capacity = 100\n\
+             cache_stripes = 16\nwarm = true\n",
         )
         .unwrap();
         let cfg = ExperimentConfig::from_toml(&t).unwrap();
@@ -445,15 +457,21 @@ machines = 2
         assert_eq!(cfg.serve.batch_size, 128);
         assert_eq!(cfg.serve.workers, 4);
         assert_eq!(cfg.serve.cache_capacity, 100);
+        assert_eq!(cfg.serve.cache_stripes, 16);
+        assert!(cfg.serve.warm);
         assert_eq!(cfg.shards_out, Some(PathBuf::from("out/shards")));
     }
 
     #[test]
     fn serve_negative_values_clamp_to_zero() {
-        let t = Toml::parse("[serve]\nworkers = -1\ncache_capacity = -5\n").unwrap();
+        let t = Toml::parse(
+            "[serve]\nworkers = -1\ncache_capacity = -5\ncache_stripes = -3\n",
+        )
+        .unwrap();
         let s = ServeConfig::from_toml(&t);
         assert_eq!(s.workers, 0);
         assert_eq!(s.cache_capacity, 0);
+        assert_eq!(s.cache_stripes, 0, "-3 clamps to 0 (= auto), not 2^64");
     }
 
     #[test]

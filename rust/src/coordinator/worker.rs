@@ -6,7 +6,8 @@ use super::CoordinatorConfig;
 use crate::data::Dataset;
 use crate::error::Result;
 use crate::runtime::Runtime;
-use crate::train::{build_batch, train_partition, TrainOptions, TrainedPartition};
+use crate::graph::SubgraphScratch;
+use crate::train::{build_batch_with, train_partition, TrainOptions, TrainedPartition};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
@@ -42,6 +43,9 @@ pub fn worker_loop(
         }
     };
 
+    // One subgraph-extraction scratch reused across every partition this
+    // machine trains (the dense id map allocates once, not per job).
+    let mut scratch = SubgraphScratch::new();
     loop {
         if remaining.load(Ordering::Acquire) == 0 {
             break;
@@ -55,7 +59,7 @@ pub fn worker_loop(
             }
         };
         let _ = tx.send(WorkerEvent::Started { worker, part_id: job.part_id });
-        match run_job(&rt, dataset, &job, cfg) {
+        match run_job(&rt, dataset, &job, cfg, &mut scratch) {
             Ok((nodes, result)) => {
                 if tx
                     .send(WorkerEvent::Finished { worker, part_id: job.part_id, nodes, result })
@@ -85,6 +89,7 @@ fn run_job(
     dataset: &Dataset,
     job: &Job,
     cfg: &CoordinatorConfig,
+    scratch: &mut SubgraphScratch,
 ) -> Result<(Vec<crate::graph::NodeId>, TrainedPartition)> {
     // Test hook: simulate a machine fault on the first attempt.
     if cfg.inject_failure == Some(job.part_id) && job.attempt == 0 {
@@ -92,7 +97,7 @@ fn run_job(
             "injected fault (test hook)".into(),
         ));
     }
-    let batch = build_batch(dataset, &job.members, cfg.mode, cfg.model)?;
+    let batch = build_batch_with(dataset, &job.members, cfg.mode, cfg.model, scratch)?;
     let opts = TrainOptions {
         model: cfg.model,
         epochs: cfg.epochs,

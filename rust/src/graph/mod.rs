@@ -13,4 +13,7 @@ pub mod subgraph;
 pub use builder::GraphBuilder;
 pub use components::{components_within, connected_components, is_connected, ComponentInfo};
 pub use csr::{CsrGraph, NodeId};
-pub use subgraph::{inner_subgraph, repli_subgraph, Subgraph};
+pub use subgraph::{
+    extract_subgraphs, inner_subgraph, inner_subgraph_with, repli_subgraph,
+    repli_subgraph_with, Subgraph, SubgraphKind, SubgraphScratch,
+};

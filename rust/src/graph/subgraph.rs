@@ -9,10 +9,21 @@
 //!   their features (copied once before training — no communication during
 //!   training) but are excluded from the loss mask and from the embedding
 //!   integration (each node's embedding comes from its *owner* partition).
+//!
+//! Extraction follows the partitioning core's scratch pattern (DESIGN.md
+//! "Performance"): the global→local id map is an epoch-stamped dense
+//! array ([`SubgraphScratch`]) instead of a per-extraction `HashMap` — a
+//! membership probe is one stamped load, clearing between partitions is
+//! O(1), and one scratch reused across extractions allocates nothing
+//! after the first. [`extract_subgraphs`] fans per-partition extraction
+//! out across threads (`util/parallel`) with the same byte-identical
+//! determinism contract as the partition pipeline: partitions are
+//! independent and chunk results reduce in chunk order, so the output
+//! never depends on the thread count.
 
 use super::csr::{CsrGraph, NodeId};
 use crate::error::Result;
-use std::collections::HashMap;
+use crate::util::parallel::map_chunks;
 
 /// A local training graph with its mapping back to global node ids.
 #[derive(Clone, Debug)]
@@ -37,11 +48,81 @@ impl Subgraph {
     }
 }
 
+/// Which extraction to run (mirrors `train::Mode`, which lives above this
+/// layer and converts into it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubgraphKind {
+    Inner,
+    Repli,
+}
+
+/// Reusable epoch-stamped dense `global id → local id` map.
+///
+/// `local[v]` is valid only while `stamp[v]` equals the current epoch;
+/// `begin` bumps the epoch (an O(1) clear) and grows the arrays to the
+/// graph's node count on first use. One scratch reused across many
+/// extractions keeps the loops allocation-free after the high-water mark.
+#[derive(Debug, Default)]
+pub struct SubgraphScratch {
+    local: Vec<u32>,
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl SubgraphScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a fresh extraction over a graph with `n` nodes.
+    fn begin(&mut self, n: usize) {
+        if self.local.len() < n {
+            self.local.resize(n, 0);
+            self.stamp.resize(n, 0);
+        }
+        // On wrap, stale stamps could alias the new epoch — do the one
+        // full clear every 2^32 - 1 epochs that correctness needs.
+        if self.epoch == u32::MAX {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+        }
+    }
+
+    #[inline]
+    fn get(&self, v: NodeId) -> Option<u32> {
+        let i = v as usize;
+        if self.stamp[i] == self.epoch {
+            Some(self.local[i])
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, v: NodeId, local: u32) {
+        let i = v as usize;
+        self.stamp[i] = self.epoch;
+        self.local[i] = local;
+    }
+}
+
 /// Induced subgraph over `members` (global ids — order defines local ids).
 pub fn inner_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
-    let mut local_of: HashMap<NodeId, u32> = HashMap::with_capacity(members.len());
+    inner_subgraph_with(g, members, &mut SubgraphScratch::new())
+}
+
+/// [`inner_subgraph`] with a caller-provided scratch (reuse it across
+/// partitions to avoid re-allocating the dense id map).
+pub fn inner_subgraph_with(
+    g: &CsrGraph,
+    members: &[NodeId],
+    scratch: &mut SubgraphScratch,
+) -> Result<Subgraph> {
+    scratch.begin(g.num_nodes());
     for (i, &v) in members.iter().enumerate() {
-        local_of.insert(v, i as u32);
+        scratch.set(v, i as u32);
     }
     let mut edges = Vec::new();
     let mut weights = Vec::new();
@@ -49,7 +130,7 @@ pub fn inner_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
     for (i, &v) in members.iter().enumerate() {
         for (j, &u) in g.neighbors(v).iter().enumerate() {
             if v < u {
-                if let Some(&lu) = local_of.get(&u) {
+                if let Some(lu) = scratch.get(u) {
                     edges.push((i as u32, lu));
                     let w = g.weight_at(v, j);
                     weights.push(w);
@@ -70,17 +151,27 @@ pub fn inner_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
 /// node are kept; external endpoints become replica nodes. Edges between
 /// two replicas are *not* included (they belong to other partitions).
 pub fn repli_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
-    let mut local_of: HashMap<NodeId, u32> = HashMap::with_capacity(members.len() * 2);
+    repli_subgraph_with(g, members, &mut SubgraphScratch::new())
+}
+
+/// [`repli_subgraph`] with a caller-provided scratch (reuse it across
+/// partitions to avoid re-allocating the dense id map).
+pub fn repli_subgraph_with(
+    g: &CsrGraph,
+    members: &[NodeId],
+    scratch: &mut SubgraphScratch,
+) -> Result<Subgraph> {
+    scratch.begin(g.num_nodes());
     let mut nodes = members.to_vec();
     for (i, &v) in members.iter().enumerate() {
-        local_of.insert(v, i as u32);
+        scratch.set(v, i as u32);
     }
     let num_owned = members.len();
     // Discover replicas in deterministic order.
     for &v in members {
         for &u in g.neighbors(v) {
-            if !local_of.contains_key(&u) {
-                local_of.insert(u, nodes.len() as u32);
+            if scratch.get(u).is_none() {
+                scratch.set(u, nodes.len() as u32);
                 nodes.push(u);
             }
         }
@@ -89,7 +180,7 @@ pub fn repli_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
     let mut weights = Vec::new();
     for (i, &v) in members.iter().enumerate() {
         for (j, &u) in g.neighbors(v).iter().enumerate() {
-            let lu = local_of[&u];
+            let lu = scratch.get(u).expect("every neighbour was registered");
             let owned_u = (lu as usize) < num_owned;
             // Keep each edge once: owned-owned when v < u; owned-replica
             // always emitted from the owned side.
@@ -106,6 +197,33 @@ pub fn repli_subgraph(g: &CsrGraph, members: &[NodeId]) -> Result<Subgraph> {
         CsrGraph::from_edges(nodes.len(), &edges)?
     };
     Ok(Subgraph { nodes, num_owned, graph })
+}
+
+/// Extract one subgraph per partition, `threads`-wide. Partitions are
+/// independent, each worker reuses one scratch across its chunk, and
+/// chunk results reduce in chunk order — the output is byte-identical
+/// for every thread count (the partition pipeline's determinism
+/// contract).
+pub fn extract_subgraphs(
+    g: &CsrGraph,
+    members: &[Vec<NodeId>],
+    kind: SubgraphKind,
+    threads: usize,
+) -> Result<Vec<Subgraph>> {
+    let chunks = map_chunks(threads, members.len(), 1, |_, range| {
+        let mut scratch = SubgraphScratch::new();
+        range
+            .map(|p| match kind {
+                SubgraphKind::Inner => inner_subgraph_with(g, &members[p], &mut scratch),
+                SubgraphKind::Repli => repli_subgraph_with(g, &members[p], &mut scratch),
+            })
+            .collect::<Result<Vec<_>>>()
+    });
+    let mut out = Vec::with_capacity(members.len());
+    for chunk in chunks {
+        out.extend(chunk?);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -182,5 +300,63 @@ mod tests {
         assert!(sg.graph.has_edge(1, 2));
         assert!(sg.graph.has_edge(0, 2));
         assert!(sg.graph.has_edge(0, 1));
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_extraction() {
+        let g = path_graph();
+        let mut scratch = SubgraphScratch::new();
+        // run several extractions through one scratch; each must match a
+        // fresh-scratch run exactly (the epoch clear really clears)
+        for members in [vec![1, 2, 3], vec![0, 4], vec![2], vec![3, 1, 2]] {
+            let a = inner_subgraph_with(&g, &members, &mut scratch).unwrap();
+            let b = inner_subgraph(&g, &members).unwrap();
+            assert_subgraph_eq(&a, &b);
+            let a = repli_subgraph_with(&g, &members, &mut scratch).unwrap();
+            let b = repli_subgraph(&g, &members).unwrap();
+            assert_subgraph_eq(&a, &b);
+        }
+    }
+
+    fn assert_subgraph_eq(a: &Subgraph, b: &Subgraph) {
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.num_owned, b.num_owned);
+        assert_eq!(a.graph.num_nodes(), b.graph.num_nodes());
+        assert_eq!(a.graph.num_edges(), b.graph.num_edges());
+        for v in 0..a.graph.num_nodes() as NodeId {
+            assert_eq!(a.graph.neighbors(v), b.graph.neighbors(v), "node {v}");
+            for j in 0..a.graph.neighbors(v).len() {
+                assert_eq!(
+                    a.graph.weight_at(v, j).to_bits(),
+                    b.graph.weight_at(v, j).to_bits(),
+                    "weight at ({v}, {j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_extraction_is_byte_identical_across_thread_counts() {
+        use crate::testing::prop::gens;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5AB6);
+        let g = gens::connected_graph(&mut rng, 60, 120, 2.0);
+        // round-robin the nodes into 7 uneven "partitions"
+        let k = 7;
+        let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); k];
+        for v in 0..g.num_nodes() as NodeId {
+            members[(v as usize * 31 + 7) % k].push(v);
+        }
+        for kind in [SubgraphKind::Inner, SubgraphKind::Repli] {
+            let seq = extract_subgraphs(&g, &members, kind, 1).unwrap();
+            assert_eq!(seq.len(), k);
+            for threads in [2, 3, 8] {
+                let par = extract_subgraphs(&g, &members, kind, threads).unwrap();
+                assert_eq!(par.len(), k, "{kind:?} threads={threads}");
+                for (a, b) in par.iter().zip(&seq) {
+                    assert_subgraph_eq(a, b);
+                }
+            }
+        }
     }
 }

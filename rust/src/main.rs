@@ -51,8 +51,11 @@ USAGE:
                   [--machines 4] [--n 0] [--seed 42] [--threads 1] [--shards dir]
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
   repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
-                  [--artifacts dir] [--warm]   (interactive: node ids on stdin)
+                  [--cache-stripes 8] [--artifacts dir] [--warm]
+                  (interactive: node ids on stdin; --warm preloads every
+                   shard slab in parallel before the first query)
   repro query     --shards dir --nodes 0,5,9 [--batch 64] [--workers 2]
+                  [--cache 4096] [--cache-stripes 8]
   repro info      (dataset defaults + compiled artifact inventory)
 
 SPEC grammar (stages joined by '+', optional key=value parameters):
@@ -348,6 +351,8 @@ fn serve_setup(args: &Args) -> Result<(Arc<ShardedEmbeddingStore>, Engine, Serve
     scfg.batch_size = args.usize_or("batch", scfg.batch_size)?;
     scfg.workers = args.usize_or("workers", scfg.workers)?;
     scfg.cache_capacity = args.usize_or("cache", scfg.cache_capacity)?;
+    scfg.cache_stripes = args.usize_or("cache-stripes", scfg.cache_stripes)?;
+    scfg.warm = scfg.warm || args.has("warm");
 
     let store = Arc::new(ShardedEmbeddingStore::open(&scfg.shards_dir)?);
     let engine = Engine::new(
@@ -359,6 +364,7 @@ fn serve_setup(args: &Args) -> Result<(Arc<ShardedEmbeddingStore>, Engine, Serve
             batch_size: scfg.batch_size,
             workers: scfg.workers,
             cache_capacity: scfg.cache_capacity,
+            cache_stripes: scfg.cache_stripes,
         },
         Arc::clone(&store),
     )?;
@@ -383,9 +389,18 @@ fn print_engine_stats(engine: &Engine) {
         0.0
     };
     println!(
-        "requests {} | cache hits {} ({hit_pct:.1}%) | batches {} | computed {}",
-        st.requests, st.cache_hits, st.batches, st.computed
+        "requests {} | cache hits {} ({hit_pct:.1}%) | coalesced {} | batches {} | \
+         computed {}",
+        st.requests, st.cache_hits, st.coalesced, st.batches, st.computed
     );
+    if st.batches > 0 {
+        println!(
+            "worker stages: gather {:.1}ms | forward {:.1}ms | publish {:.1}ms",
+            st.gather_secs * 1e3,
+            st.forward_secs * 1e3,
+            st.publish_secs * 1e3
+        );
+    }
 }
 
 fn print_predictions(preds: &[leiden_fusion::serve::Prediction]) {
@@ -425,7 +440,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = store.manifest();
     println!(
         "serving {} from {}: {} shards, {} nodes, dim {}, {} logit columns, \
-         batch ≤ {}, {} workers",
+         batch ≤ {}, {} workers, {} cache stripes",
         m.dataset,
         store.dir().display(),
         store.num_shards(),
@@ -434,11 +449,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         m.classes,
         engine.max_batch(),
         scfg.workers.max(1),
+        engine.cache_stripes(),
     );
-    if args.has("warm") {
+    if scfg.warm {
         let sw = Stopwatch::start();
-        store.prefetch_all()?;
-        println!("prefetched {} shards in {}", store.num_shards(), fmt_duration(sw.secs()));
+        store.warm(scfg.workers.max(1))?;
+        println!("warmed {} shard slabs in {}", store.num_shards(), fmt_duration(sw.secs()));
     }
     println!("enter node ids (e.g. `0,5,9`), `stats`, or `quit`:");
     let stdin = std::io::stdin();

@@ -1,14 +1,40 @@
-//! Fixed-capacity LRU cache for query results.
+//! Result caching for the serving engine: a fixed-capacity LRU plus the
+//! striped, single-flight front the engine actually queries through.
 //!
-//! Arena-backed doubly-linked list + `HashMap` index: `get`/`put` are O(1)
-//! with no allocation after the arena fills. The serving engine shares one
-//! cache behind a mutex; entries are whole predictions, so a hit skips the
-//! PJRT forward entirely.
+//! Two layers:
+//!
+//! * [`LruCache`] — arena-backed doubly-linked list + `HashMap` index;
+//!   `get`/`put` are O(1) with no allocation after the arena fills. Not
+//!   thread-safe by itself.
+//! * [`ResultCache`] — N independent stripes (hash of the key picks one),
+//!   each a mutex over an [`LruCache`] **and** an in-flight table. One
+//!   stripe lock covers "check cache + join computation" atomically, so
+//!   concurrent misses for the same key coalesce into a single
+//!   computation (**single-flight**) instead of stampeding the backend,
+//!   and unrelated keys never contend on one global mutex.
+//!
+//! The single-flight protocol: [`ResultCache::lookup`] returns
+//! [`Lookup::Hit`] (cached value), [`Lookup::Wait`] (someone is already
+//! computing this key — block on the returned [`Flight`]), or
+//! [`Lookup::Compute`] (the caller became the key's *leader*: it must
+//! arrange for [`ResultCache::complete`] to be called exactly once, which
+//! publishes the value, wakes only that flight's waiters — never every
+//! client — and retires the flight). Errors are delivered to waiters but
+//! **not** cached: the next lookup after a failure recomputes.
 
 use std::collections::HashMap;
-use std::hash::Hash;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Condvar, Mutex};
 
 const NIL: usize = usize::MAX;
+
+/// Hard ceiling on any single [`LruCache`]'s capacity. `new` clamps its
+/// argument to this, so the arena reservation made up front is always the
+/// real capacity — a `cap` in the billions cannot promise a small arena
+/// and then grow it entry by entry (the pre-fix behavior: the clamp was
+/// applied to `with_capacity` only, silently breaking the "no allocation
+/// after the arena fills" contract above 2^20 entries).
+pub const MAX_LRU_CAPACITY: usize = 1 << 20;
 
 struct Entry<K, V> {
     key: K,
@@ -18,7 +44,9 @@ struct Entry<K, V> {
 }
 
 /// Least-recently-used map with a hard capacity. `cap == 0` disables
-/// caching (every `get` misses, every `put` is dropped).
+/// caching (every `get` misses, every `put` is dropped). Capacities above
+/// [`MAX_LRU_CAPACITY`] are clamped — check [`Self::capacity`] for the
+/// effective value.
 pub struct LruCache<K: Eq + Hash + Clone, V> {
     cap: usize,
     map: HashMap<K, usize>,
@@ -29,10 +57,11 @@ pub struct LruCache<K: Eq + Hash + Clone, V> {
 
 impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
     pub fn new(cap: usize) -> Self {
+        let cap = cap.min(MAX_LRU_CAPACITY);
         LruCache {
             cap,
-            map: HashMap::with_capacity(cap.min(1 << 20)),
-            arena: Vec::with_capacity(cap.min(1 << 20)),
+            map: HashMap::with_capacity(cap),
+            arena: Vec::with_capacity(cap),
             head: NIL,
             tail: NIL,
         }
@@ -46,6 +75,8 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.is_empty()
     }
 
+    /// Effective capacity (after the [`MAX_LRU_CAPACITY`] clamp): the
+    /// arena never outgrows this many entries.
     pub fn capacity(&self) -> usize {
         self.cap
     }
@@ -127,9 +158,222 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
     }
 }
 
+// ---- single-flight ---------------------------------------------------------
+
+/// A computation in flight for one key. Waiters block on [`Flight::wait`];
+/// the completer publishes exactly once via [`Flight::complete`], which
+/// wakes **only this flight's** waiters (per-flight condvar — completing
+/// one key never causes a system-wide `notify_all`).
+pub struct Flight<V> {
+    slot: Mutex<Option<Result<V, String>>>,
+    cv: Condvar,
+}
+
+impl<V: Clone> Flight<V> {
+    pub fn new() -> Self {
+        Flight { slot: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    /// Publish the result and wake this flight's waiters. Idempotent-ish:
+    /// a second call overwrites the slot and re-notifies, which is
+    /// harmless (waiters take whichever result is present when they wake).
+    pub fn complete(&self, result: Result<V, String>) {
+        if let Ok(mut slot) = self.slot.lock() {
+            *slot = Some(result);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block until the result is published.
+    pub fn wait(&self) -> Result<V, String> {
+        let mut slot = self
+            .slot
+            .lock()
+            .map_err(|_| "flight lock poisoned".to_string())?;
+        loop {
+            if let Some(r) = slot.as_ref() {
+                return r.clone();
+            }
+            slot = self
+                .cv
+                .wait(slot)
+                .map_err(|_| "flight lock poisoned".to_string())?;
+        }
+    }
+
+    /// Non-blocking peek (tests and diagnostics).
+    pub fn try_result(&self) -> Option<Result<V, String>> {
+        self.slot.lock().ok().and_then(|s| s.clone())
+    }
+}
+
+impl<V: Clone> Default for Flight<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Outcome of [`ResultCache::lookup`].
+pub enum Lookup<V> {
+    /// Cached value, returned immediately.
+    Hit(V),
+    /// Another caller is computing this key; wait on the flight.
+    Wait(Arc<Flight<V>>),
+    /// The caller became this key's leader: compute, then call
+    /// [`ResultCache::complete`] with this flight.
+    Compute(Arc<Flight<V>>),
+}
+
+struct Stripe<K: Eq + Hash + Clone, V: Clone> {
+    lru: LruCache<K, V>,
+    inflight: HashMap<K, Arc<Flight<V>>>,
+}
+
+/// Striped LRU + single-flight table. See the module docs for the
+/// protocol. All methods take `&self`; one stripe mutex per
+/// `hash(key) & mask`, so disjoint keys proceed in parallel.
+pub struct ResultCache<K: Eq + Hash + Clone, V: Clone> {
+    stripes: Vec<Mutex<Stripe<K, V>>>,
+    mask: u64,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> ResultCache<K, V> {
+    /// `capacity` is the total LRU budget, split evenly (rounded up)
+    /// across `stripes` (clamped to `[1, 4096]`, rounded up to a power of
+    /// two). `capacity == 0` disables caching but keeps single-flight
+    /// coalescing active.
+    pub fn new(capacity: usize, stripes: usize) -> Self {
+        let stripes = stripes.clamp(1, 1 << 12).next_power_of_two();
+        let per_stripe = if capacity == 0 { 0 } else { capacity.div_ceil(stripes) };
+        ResultCache {
+            stripes: (0..stripes)
+                .map(|_| {
+                    Mutex::new(Stripe {
+                        lru: LruCache::new(per_stripe),
+                        inflight: HashMap::new(),
+                    })
+                })
+                .collect(),
+            mask: stripes as u64 - 1,
+        }
+    }
+
+    pub fn num_stripes(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// Total effective capacity (per-stripe capacity × stripes; the
+    /// even split rounds up, so this can slightly exceed the requested
+    /// total — never undershoot it).
+    pub fn capacity(&self) -> usize {
+        self.stripes.len()
+            * self.stripes[0]
+                .lock()
+                .map(|s| s.lru.capacity())
+                .unwrap_or(0)
+    }
+
+    /// Stripe index for a key (exposed so tests can model per-stripe
+    /// eviction exactly).
+    pub fn stripe_of(&self, key: &K) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() & self.mask) as usize
+    }
+
+    /// Cache check + single-flight join in one stripe critical section.
+    pub fn lookup(&self, key: &K) -> Lookup<V> {
+        match self.stripes[self.stripe_of(key)].lock() {
+            Ok(mut stripe) => {
+                if let Some(v) = stripe.lru.get(key) {
+                    return Lookup::Hit(v.clone());
+                }
+                // An in-flight entry that already carries an error was
+                // abandoned (its leader completed the flight directly,
+                // e.g. from a drop guard, without retiring the entry) —
+                // self-heal by electing a fresh leader instead of handing
+                // out a permanently-failed flight.
+                let stale = match stripe.inflight.get(key) {
+                    Some(f) if matches!(f.try_result(), Some(Err(_))) => true,
+                    Some(f) => return Lookup::Wait(Arc::clone(f)),
+                    None => false,
+                };
+                if stale {
+                    stripe.inflight.remove(key);
+                }
+                let f = Arc::new(Flight::new());
+                stripe.inflight.insert(key.clone(), Arc::clone(&f));
+                Lookup::Compute(f)
+            }
+            // a poisoned stripe degrades to cache-off: every caller
+            // computes privately (stampede, but correct and un-stuck)
+            Err(_) => Lookup::Compute(Arc::new(Flight::new())),
+        }
+    }
+
+    /// Publish a leader's result: insert into the LRU (successes only —
+    /// errors are never cached), retire the in-flight entry, and wake the
+    /// flight's waiters. `flight` is the handle `lookup` handed the
+    /// leader; it is always completed, even if the stripe lock is
+    /// poisoned, so waiters cannot hang.
+    pub fn complete(&self, key: &K, flight: &Arc<Flight<V>>, result: Result<V, String>) {
+        let registered = match self.stripes[self.stripe_of(key)].lock() {
+            Ok(mut stripe) => {
+                let f = stripe.inflight.remove(key);
+                if let Ok(v) = &result {
+                    stripe.lru.put(key.clone(), v.clone());
+                }
+                f
+            }
+            Err(_) => None,
+        };
+        // normally the registered flight IS the leader's; the clone for a
+        // separately-registered one (a degraded-mode caller raced in
+        // between) happens only in that rare branch, keeping the per-row
+        // publish path allocation-free
+        if let Some(f) = registered {
+            if !Arc::ptr_eq(&f, flight) {
+                f.complete(result.clone());
+            }
+        }
+        flight.complete(result);
+    }
+
+    /// Cached entries across all stripes (poisoned stripes count 0).
+    pub fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().map(|s| s.lru.len()).unwrap_or(0))
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Keys currently being computed (diagnostics/tests).
+    pub fn inflight_len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().map(|s| s.inflight.len()).unwrap_or(0))
+            .sum()
+    }
+
+    /// Drop all cached entries (in-flight computations are untouched).
+    pub fn clear(&self) {
+        for s in &self.stripes {
+            if let Ok(mut s) = s.lock() {
+                s.lru.clear();
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
 
     #[test]
     fn hits_and_misses() {
@@ -175,6 +419,18 @@ mod tests {
     }
 
     #[test]
+    fn oversized_capacity_clamps_to_the_reservation() {
+        // the former bug: cap above the arena reservation ceiling was
+        // kept verbatim, so the "no allocation after the arena fills"
+        // promise silently broke. Now cap itself clamps and capacity()
+        // reports the effective value.
+        let c: LruCache<u32, u32> = LruCache::new(MAX_LRU_CAPACITY + 123);
+        assert_eq!(c.capacity(), MAX_LRU_CAPACITY);
+        let c: LruCache<u32, u32> = LruCache::new(64);
+        assert_eq!(c.capacity(), 64);
+    }
+
+    #[test]
     fn heavy_churn_keeps_invariants() {
         let mut c = LruCache::new(8);
         for i in 0..1000u32 {
@@ -199,5 +455,265 @@ mod tests {
         assert!(c.is_empty());
         c.put(2, 2);
         assert_eq!(c.get(&2), Some(&2));
+    }
+
+    // ---- striped single-flight front ----------------------------------
+
+    #[test]
+    fn lookup_compute_complete_roundtrip() {
+        let cache: ResultCache<u32, String> = ResultCache::new(16, 4);
+        let leader = match cache.lookup(&7) {
+            Lookup::Compute(f) => f,
+            _ => panic!("first lookup must elect a leader"),
+        };
+        assert_eq!(cache.inflight_len(), 1);
+        // a second caller joins the in-flight computation
+        let joined = match cache.lookup(&7) {
+            Lookup::Wait(f) => f,
+            _ => panic!("second lookup must join, not recompute"),
+        };
+        assert!(Arc::ptr_eq(&leader, &joined));
+        cache.complete(&7, &leader, Ok("v7".into()));
+        assert_eq!(joined.wait().unwrap(), "v7");
+        assert_eq!(cache.inflight_len(), 0);
+        match cache.lookup(&7) {
+            Lookup::Hit(v) => assert_eq!(v, "v7"),
+            _ => panic!("completed key must be a cache hit"),
+        }
+    }
+
+    #[test]
+    fn errors_propagate_but_are_not_cached() {
+        let cache: ResultCache<u32, String> = ResultCache::new(16, 2);
+        let f = match cache.lookup(&1) {
+            Lookup::Compute(f) => f,
+            _ => panic!(),
+        };
+        cache.complete(&1, &f, Err("backend down".into()));
+        assert_eq!(f.wait().unwrap_err(), "backend down");
+        assert_eq!(cache.len(), 0, "errors must not be cached");
+        assert!(
+            matches!(cache.lookup(&1), Lookup::Compute(_)),
+            "after an error the next lookup recomputes"
+        );
+    }
+
+    #[test]
+    fn zero_capacity_keeps_single_flight() {
+        let cache: ResultCache<u32, u32> = ResultCache::new(0, 4);
+        let f = match cache.lookup(&3) {
+            Lookup::Compute(f) => f,
+            _ => panic!(),
+        };
+        assert!(matches!(cache.lookup(&3), Lookup::Wait(_)));
+        cache.complete(&3, &f, Ok(30));
+        assert_eq!(f.wait().unwrap(), 30);
+        // nothing cached, so the next lookup computes again
+        assert!(matches!(cache.lookup(&3), Lookup::Compute(_)));
+    }
+
+    #[test]
+    fn abandoned_errored_flight_self_heals() {
+        let cache: ResultCache<u32, u32> = ResultCache::new(8, 2);
+        let f = match cache.lookup(&5) {
+            Lookup::Compute(f) => f,
+            _ => panic!(),
+        };
+        // leader dies without going through complete(): the flight gets
+        // an error but the in-flight entry is left behind
+        f.complete(Err("leader dropped".into()));
+        assert_eq!(cache.inflight_len(), 1, "entry is stale, not retired");
+        // the next lookup must not hand out the dead flight forever
+        let f2 = match cache.lookup(&5) {
+            Lookup::Compute(f2) => f2,
+            _ => panic!("stale errored flight must be replaced, not joined"),
+        };
+        assert!(!Arc::ptr_eq(&f, &f2));
+        cache.complete(&5, &f2, Ok(50));
+        assert!(matches!(cache.lookup(&5), Lookup::Hit(50)));
+    }
+
+    #[test]
+    fn stripes_round_up_to_power_of_two() {
+        let c: ResultCache<u32, u32> = ResultCache::new(100, 3);
+        assert_eq!(c.num_stripes(), 4);
+        assert!(c.capacity() >= 100);
+        let c: ResultCache<u32, u32> = ResultCache::new(100, 0);
+        assert_eq!(c.num_stripes(), 1);
+    }
+
+    #[test]
+    fn concurrent_misses_coalesce_to_one_leader() {
+        let cache: Arc<ResultCache<u32, u64>> = Arc::new(ResultCache::new(64, 8));
+        let leaders = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cache = Arc::clone(&cache);
+            let leaders = Arc::clone(&leaders);
+            handles.push(std::thread::spawn(move || match cache.lookup(&42) {
+                Lookup::Hit(v) => v,
+                Lookup::Wait(f) => f.wait().unwrap(),
+                Lookup::Compute(f) => {
+                    leaders.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    // simulate a slow backend so others pile in
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    cache.complete(&42, &f, Ok(4242));
+                    f.wait().unwrap()
+                }
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 4242);
+        }
+        assert_eq!(
+            leaders.load(std::sync::atomic::Ordering::SeqCst),
+            1,
+            "exactly one thread may compute a hot key"
+        );
+    }
+
+    /// A naive recency-list LRU used as the reference model: correctness
+    /// is obvious by inspection (Vec scan, most recent at the back).
+    struct ModelLru<K: PartialEq + Clone, V: Clone> {
+        cap: usize,
+        items: Vec<(K, V)>,
+    }
+
+    impl<K: PartialEq + Clone, V: Clone> ModelLru<K, V> {
+        fn new(cap: usize) -> Self {
+            ModelLru { cap, items: Vec::new() }
+        }
+
+        fn get(&mut self, key: &K) -> Option<V> {
+            let pos = self.items.iter().position(|(k, _)| k == key)?;
+            let kv = self.items.remove(pos);
+            let v = kv.1.clone();
+            self.items.push(kv);
+            Some(v)
+        }
+
+        fn put(&mut self, key: K, value: V) {
+            if self.cap == 0 {
+                return;
+            }
+            if let Some(pos) = self.items.iter().position(|(k, _)| k == &key) {
+                self.items.remove(pos);
+            } else if self.items.len() >= self.cap {
+                self.items.remove(0);
+            }
+            self.items.push((key, value));
+        }
+    }
+
+    /// Property: the arena LRU behaves exactly like the naive model under
+    /// random op sequences, across small capacities.
+    #[test]
+    fn prop_lru_matches_model() {
+        prop::check(
+            "lru-vs-model",
+            40,
+            0x11BC,
+            |rng: &mut Rng| {
+                let cap = rng.index(6); // includes 0 (disabled)
+                let ops: Vec<(bool, u32, u32)> = (0..120)
+                    .map(|i| (rng.f64() < 0.5, rng.index(10) as u32, i))
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut real = LruCache::new(*cap);
+                let mut model = ModelLru::new(*cap);
+                for &(is_put, key, val) in ops {
+                    if is_put {
+                        real.put(key, val);
+                        model.put(key, val);
+                    } else {
+                        let a = real.get(&key).copied();
+                        let b = model.get(&key);
+                        if a != b {
+                            return Err(format!("get({key}): {a:?} != model {b:?}"));
+                        }
+                    }
+                    if real.len() != model.items.len() {
+                        return Err(format!(
+                            "len {} != model {}",
+                            real.len(),
+                            model.items.len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: the striped cache behaves exactly like one independent
+    /// model LRU **per stripe** (striping changes eviction locality by
+    /// design, so the model maps keys through the same stripe function).
+    #[test]
+    fn prop_striped_matches_per_stripe_models() {
+        prop::check(
+            "striped-vs-models",
+            30,
+            0x57A1,
+            |rng: &mut Rng| {
+                let stripes = 1 << rng.index(4); // 1, 2, 4, 8
+                let capacity = 1 + rng.index(12);
+                let ops: Vec<(bool, u32, u32)> = (0..150)
+                    .map(|i| (rng.f64() < 0.5, rng.index(24) as u32, i))
+                    .collect();
+                (stripes, capacity, ops)
+            },
+            |(stripes, capacity, ops)| {
+                let cache: ResultCache<u32, u32> = ResultCache::new(*capacity, *stripes);
+                let per_stripe = capacity.div_ceil(cache.num_stripes());
+                let mut models: Vec<ModelLru<u32, u32>> = (0..cache.num_stripes())
+                    .map(|_| ModelLru::new(per_stripe))
+                    .collect();
+                for &(is_put, key, val) in ops {
+                    let s = cache.stripe_of(&key);
+                    if is_put {
+                        // drive the put through the single-flight path the
+                        // engine uses: leader computes, complete() caches
+                        match cache.lookup(&key) {
+                            Lookup::Hit(_) => {
+                                // hit refreshes recency in both
+                                models[s].get(&key);
+                            }
+                            Lookup::Compute(f) => {
+                                cache.complete(&key, &f, Ok(val));
+                                models[s].put(key, val);
+                            }
+                            Lookup::Wait(_) => {
+                                return Err(format!(
+                                    "key {key} stuck in flight in a single-threaded run"
+                                ))
+                            }
+                        }
+                    } else {
+                        let got = match cache.lookup(&key) {
+                            Lookup::Hit(v) => Some(v),
+                            Lookup::Compute(f) => {
+                                // a miss elected us leader; abandon by
+                                // completing with an error (not cached)
+                                cache.complete(&key, &f, Err("probe".into()));
+                                None
+                            }
+                            Lookup::Wait(_) => {
+                                return Err(format!("key {key} unexpectedly in flight"))
+                            }
+                        };
+                        let want = models[s].get(&key);
+                        if got != want {
+                            return Err(format!("get({key}): {got:?} != model {want:?}"));
+                        }
+                    }
+                }
+                if cache.len() != models.iter().map(|m| m.items.len()).sum::<usize>() {
+                    return Err("total len diverged".into());
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,18 +1,24 @@
 //! Concurrent query engine: worker thread pool + request batching over the
 //! PJRT MLP classifier.
 //!
-//! Clients call [`Engine::query`] with node ids; requests land in a shared
-//! queue. Each worker owns a thread-local [`Runtime`] (PJRT clients are not
-//! `Send`, exactly as in the training coordinator), drains up to
-//! `batch_size` requests, gathers the embedding rows from the shared
-//! [`ShardedEmbeddingStore`], packs them into the classifier bucket's `x`,
-//! and runs **one** MLP forward for the whole batch. The MLP is row-wise,
-//! so batched logits are bit-identical to the offline `classify` path.
+//! Clients call [`Engine::query`] with node ids. Each id goes through the
+//! striped single-flight [`ResultCache`] first: a **hit** is answered on
+//! the client thread; a **join** blocks on the id's in-flight computation
+//! (one MLP forward serves every concurrent asker — no stampede); only a
+//! **leader** enqueues a compute request. Workers steal whole batches
+//! from the queue under one short lock, gather embedding rows straight
+//! into the reusable bucket-padded `x` tensor (no per-row allocation, no
+//! lock on the slab fast path — see `store.rs`), run **one** MLP forward
+//! for the batch, and publish each row through its flight — waking only
+//! that id's waiters, never every client.
 //!
-//! An LRU result cache sits in front of the queue: hits are answered on
-//! the client thread without waking a worker.
+//! Each worker owns a thread-local [`Runtime`] (PJRT clients are not
+//! `Send`, exactly as in the training coordinator). The MLP is row-wise,
+//! so batched logits are bit-identical to the offline `classify` path —
+//! `tests/serve_roundtrip.rs` asserts this at the bit level under
+//! concurrent load.
 
-use super::cache::LruCache;
+use super::cache::{Flight, Lookup, ResultCache};
 use super::store::ShardedEmbeddingStore;
 use crate::error::{Error, Result};
 use crate::graph::NodeId;
@@ -21,8 +27,9 @@ use crate::train::checkpoint::load_tensors;
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Engine tuning knobs (see the `[serve]` config section).
 #[derive(Clone, Debug)]
@@ -34,8 +41,12 @@ pub struct EngineConfig {
     pub batch_size: usize,
     /// Worker threads, each with a private PJRT runtime.
     pub workers: usize,
-    /// LRU result-cache entries (0 disables caching).
+    /// LRU result-cache entries across all stripes (0 disables caching;
+    /// single-flight miss coalescing stays on).
     pub cache_capacity: usize,
+    /// Cache stripes (rounded up to a power of two; 0 = auto: 4 per
+    /// worker). More stripes = less contention, slightly worse LRU-ness.
+    pub cache_stripes: usize,
 }
 
 impl Default for EngineConfig {
@@ -48,6 +59,7 @@ impl Default for EngineConfig {
             batch_size: d.batch_size,
             workers: d.workers,
             cache_capacity: d.cache_capacity,
+            cache_stripes: d.cache_stripes,
         }
     }
 }
@@ -74,16 +86,58 @@ pub struct Prediction {
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub requests: u64,
+    /// Requests answered from the LRU on the client thread.
     pub cache_hits: u64,
+    /// Requests answered by joining another caller's in-flight forward
+    /// (single-flight coalescing; no extra PJRT work).
+    pub coalesced: u64,
     pub batches: u64,
-    /// Requests answered by a PJRT forward (requests - cache_hits - errors).
+    /// Requests answered by a PJRT forward (requests - cache_hits -
+    /// coalesced - errors).
     pub computed: u64,
+    /// Cumulative worker time gathering embedding rows into `x`.
+    pub gather_secs: f64,
+    /// Cumulative worker time inside the PJRT forward.
+    pub forward_secs: f64,
+    /// Cumulative worker time publishing predictions (argmax + cache
+    /// insert + flight wakeups).
+    pub publish_secs: f64,
 }
 
+/// One enqueued leader computation. Answer it with [`Request::finish`];
+/// if it is dropped unanswered (a panic path missed it), the drop guard
+/// error-completes the flight so waiters unblock — the stale in-flight
+/// table entry this leaves is self-healed by `ResultCache::lookup`.
 struct Request {
-    idx: usize,
     node: NodeId,
-    tx: mpsc::Sender<(usize, Result<Prediction>)>,
+    flight: Option<Arc<Flight<Prediction>>>,
+}
+
+impl Request {
+    fn new(node: NodeId, flight: Arc<Flight<Prediction>>) -> Request {
+        Request { node, flight: Some(flight) }
+    }
+
+    /// Publish the result through the cache (LRU insert on `Ok`, retire
+    /// the in-flight entry, wake this node's waiters) and disarm the
+    /// drop guard.
+    fn finish(
+        mut self,
+        cache: &ResultCache<NodeId, Prediction>,
+        result: std::result::Result<Prediction, String>,
+    ) {
+        if let Some(f) = self.flight.take() {
+            cache.complete(&self.node, &f, result);
+        }
+    }
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        if let Some(f) = self.flight.take() {
+            f.complete(Err("serve request dropped without an answer".to_string()));
+        }
+    }
 }
 
 struct QueueState {
@@ -98,7 +152,7 @@ struct Shared {
     notify: Condvar,
     shutdown: AtomicBool,
     store: Arc<ShardedEmbeddingStore>,
-    cache: Mutex<LruCache<NodeId, Prediction>>,
+    cache: ResultCache<NodeId, Prediction>,
     /// Trained integration-MLP parameters (from the shard bundle).
     params: Vec<Tensor>,
     /// Pred-artifact metadata resolved at construction time.
@@ -106,8 +160,12 @@ struct Shared {
     cfg: EngineConfig,
     requests: AtomicU64,
     cache_hits: AtomicU64,
+    coalesced: AtomicU64,
     batches: AtomicU64,
     computed: AtomicU64,
+    gather_nanos: AtomicU64,
+    forward_nanos: AtomicU64,
+    publish_nanos: AtomicU64,
 }
 
 /// The serving engine. `&self` methods are thread-safe; clone node lists
@@ -171,6 +229,7 @@ impl Engine {
         }
 
         let workers = cfg.workers.max(1);
+        let stripes = if cfg.cache_stripes == 0 { workers * 4 } else { cfg.cache_stripes };
         let shared = Arc::new(Shared {
             state: Mutex::new(QueueState {
                 q: VecDeque::new(),
@@ -180,14 +239,18 @@ impl Engine {
             notify: Condvar::new(),
             shutdown: AtomicBool::new(false),
             store,
-            cache: Mutex::new(LruCache::new(cfg.cache_capacity)),
+            cache: ResultCache::new(cfg.cache_capacity, stripes),
             params,
             meta,
             cfg,
             requests: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             computed: AtomicU64::new(0),
+            gather_nanos: AtomicU64::new(0),
+            forward_nanos: AtomicU64::new(0),
+            publish_nanos: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
@@ -221,49 +284,76 @@ impl Engine {
         self.shared.requests.fetch_add(nodes.len() as u64, Ordering::Relaxed);
         let mut out: Vec<Option<Prediction>> = vec![None; nodes.len()];
 
-        // ---- cache fast path on the client thread -----------------------
-        // a poisoned cache mutex degrades to cache-off (all misses), the
-        // same way the worker insert path does — it must not fail queries
-        let mut misses: Vec<(usize, NodeId)> = Vec::new();
-        match self.shared.cache.lock() {
-            Ok(mut cache) => {
-                for (i, &v) in nodes.iter().enumerate() {
-                    match cache.get(&v) {
-                        Some(p) => out[i] = Some(p.clone()),
-                        None => misses.push((i, v)),
-                    }
+        // ---- cache / single-flight triage on the client thread ----------
+        // Hits fill `out` directly; joins and leader slots both wait on a
+        // flight. Only leaders enqueue work. A repeated id within one call
+        // joins its own leader's flight — one forward either way.
+        let mut waits: Vec<(usize, Arc<Flight<Prediction>>)> = Vec::new();
+        let mut compute: Vec<Request> = Vec::new();
+        let mut hits = 0u64;
+        let mut joins = 0u64;
+        for (i, &v) in nodes.iter().enumerate() {
+            match self.shared.cache.lookup(&v) {
+                Lookup::Hit(p) => {
+                    hits += 1;
+                    out[i] = Some(p);
+                }
+                Lookup::Wait(f) => {
+                    joins += 1;
+                    waits.push((i, f));
+                }
+                Lookup::Compute(f) => {
+                    compute.push(Request::new(v, Arc::clone(&f)));
+                    waits.push((i, f));
                 }
             }
-            Err(_) => misses.extend(nodes.iter().copied().enumerate()),
         }
-        let hits = nodes.len() - misses.len();
-        self.shared.cache_hits.fetch_add(hits as u64, Ordering::Relaxed);
+        self.shared.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        self.shared.coalesced.fetch_add(joins, Ordering::Relaxed);
 
-        if !misses.is_empty() {
-            let (tx, rx) = mpsc::channel();
-            {
-                let mut st = self
-                    .shared
-                    .state
-                    .lock()
-                    .map_err(|_| Error::Serve("queue lock poisoned".into()))?;
-                if let Some(msg) = &st.poisoned {
-                    return Err(Error::Serve(format!("engine poisoned: {msg}")));
+        if !compute.is_empty() {
+            let enqueue_err = {
+                match self.shared.state.lock() {
+                    Ok(mut st) => {
+                        if let Some(msg) = &st.poisoned {
+                            Some(format!("engine poisoned: {msg}"))
+                        } else if self.shared.shutdown.load(Ordering::Acquire)
+                            || st.live_workers == 0
+                        {
+                            Some("engine is shut down".to_string())
+                        } else {
+                            let wake_all = compute.len() >= self.max_batch();
+                            for r in compute.drain(..) {
+                                st.q.push_back(r);
+                            }
+                            drop(st);
+                            // one batch's worth of work needs one worker;
+                            // spilling past the batch cap wakes them all
+                            if wake_all {
+                                self.shared.notify.notify_all();
+                            } else {
+                                self.shared.notify.notify_one();
+                            }
+                            None
+                        }
+                    }
+                    Err(_) => Some("queue lock poisoned".to_string()),
                 }
-                if self.shared.shutdown.load(Ordering::Acquire) || st.live_workers == 0 {
-                    return Err(Error::Serve("engine is shut down".into()));
+            };
+            if let Some(msg) = enqueue_err {
+                // retire the flights we created so concurrent joiners (and
+                // our own waits) see the failure instead of hanging
+                for r in compute {
+                    r.finish(&self.shared.cache, Err(msg.clone()));
                 }
-                for &(idx, node) in &misses {
-                    st.q.push_back(Request { idx, node, tx: tx.clone() });
-                }
+                return Err(Error::Serve(msg));
             }
-            self.shared.notify.notify_all();
-            drop(tx);
-            for _ in 0..misses.len() {
-                let (idx, res) = rx.recv().map_err(|_| {
-                    Error::Serve("serving workers exited mid-query".into())
-                })?;
-                out[idx] = Some(res?);
+        }
+
+        for (i, f) in waits {
+            match f.wait() {
+                Ok(p) => out[i] = Some(p),
+                Err(msg) => return Err(Error::Serve(msg)),
             }
         }
         Ok(out.into_iter().map(|p| p.expect("every slot answered")).collect())
@@ -275,11 +365,16 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
+        let nanos = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64 / 1e9;
         EngineStats {
             requests: self.shared.requests.load(Ordering::Relaxed),
             cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            coalesced: self.shared.coalesced.load(Ordering::Relaxed),
             batches: self.shared.batches.load(Ordering::Relaxed),
             computed: self.shared.computed.load(Ordering::Relaxed),
+            gather_secs: nanos(&self.shared.gather_nanos),
+            forward_secs: nanos(&self.shared.forward_nanos),
+            publish_secs: nanos(&self.shared.publish_nanos),
         }
     }
 
@@ -290,6 +385,11 @@ impl Engine {
     /// Effective max batch (config clamped to the artifact bucket).
     pub fn max_batch(&self) -> usize {
         self.shared.cfg.batch_size.clamp(1, self.shared.meta.dims.n)
+    }
+
+    /// Cache stripes actually in use (after auto-sizing and rounding).
+    pub fn cache_stripes(&self) -> usize {
+        self.shared.cache.num_stripes()
     }
 }
 
@@ -320,26 +420,30 @@ impl Drop for RetireGuard {
 /// Mark this worker dead; if it is the last one, fail queued requests so
 /// no client blocks forever. `poison` carries an init-failure message.
 fn retire_worker(shared: &Shared, poison: Option<String>) {
-    let mut st = match shared.state.lock() {
-        Ok(st) => st,
-        Err(_) => return,
+    let (orphans, reason): (Vec<Request>, String) = {
+        let mut st = match shared.state.lock() {
+            Ok(st) => st,
+            Err(_) => return,
+        };
+        st.live_workers -= 1;
+        if let Some(msg) = poison {
+            if st.poisoned.is_none() {
+                st.poisoned = Some(msg);
+            }
+        }
+        if st.live_workers == 0 || st.poisoned.is_some() {
+            let reason = st
+                .poisoned
+                .clone()
+                .unwrap_or_else(|| "engine shut down".to_string());
+            (st.q.drain(..).collect(), reason)
+        } else {
+            (Vec::new(), String::new())
+        }
     };
-    st.live_workers -= 1;
-    if let Some(msg) = poison {
-        if st.poisoned.is_none() {
-            st.poisoned = Some(msg);
-        }
+    for r in orphans {
+        r.finish(&shared.cache, Err(reason.clone()));
     }
-    if st.live_workers == 0 || st.poisoned.is_some() {
-        let reason = st
-            .poisoned
-            .clone()
-            .unwrap_or_else(|| "engine shut down".to_string());
-        for r in st.q.drain(..) {
-            let _ = r.tx.send((r.idx, Err(Error::Serve(reason.clone()))));
-        }
-    }
-    drop(st);
     shared.notify.notify_all();
 }
 
@@ -375,6 +479,9 @@ fn worker_loop(wid: usize, shared: Arc<Shared>) {
     let mut prev_rows = 0usize;
 
     loop {
+        // Steal a whole batch under one short lock: wait for work, drain
+        // up to batch_cap requests, release. Clients never hold this lock
+        // while waiting for answers (they block on per-node flights).
         let batch: Vec<Request> = {
             let mut st = match shared.state.lock() {
                 Ok(st) => st,
@@ -399,6 +506,25 @@ fn worker_loop(wid: usize, shared: Arc<Shared>) {
     }
 }
 
+/// Completes every still-pending request with an error if the worker
+/// unwinds mid-batch (e.g. a PJRT panic), so joined clients never hang on
+/// a flight whose leader died.
+struct PendingBatch<'a> {
+    shared: &'a Shared,
+    reqs: VecDeque<Request>,
+}
+
+impl Drop for PendingBatch<'_> {
+    fn drop(&mut self) {
+        for r in self.reqs.drain(..) {
+            r.finish(
+                &self.shared.cache,
+                Err("serve worker panicked mid-batch".to_string()),
+            );
+        }
+    }
+}
+
 /// Run one batch through the classifier. `inputs` is the worker's reusable
 /// PJRT input list (params + trailing `x` buffer); `prev_rows` tracks how
 /// many `x` rows the previous batch wrote so only the stale tail is
@@ -415,35 +541,51 @@ fn process_batch(
     shared.batches.fetch_add(1, Ordering::Relaxed);
     let f = dims.f;
     let c = dims.c;
+    let mut pending = PendingBatch { shared, reqs: batch.into() };
 
-    // Gather embedding rows into the reusable x buffer; requests whose
-    // node is unknown (or whose shard fails to load) are answered
-    // individually with an error.
-    let mut live: Vec<Request> = Vec::with_capacity(batch.len());
+    // Gather embedding rows into the reusable x buffer: lookup is a dense
+    // load, the slab is lock-free after first touch, and rows are copied
+    // straight into the bucket-padded tensor — nothing per-row is
+    // allocated. Requests whose node is unknown (or whose shard fails to
+    // load) are answered individually with an error.
+    let t_gather = Instant::now();
     {
         let x = match inputs.last_mut() {
             Some(Tensor::F32(x)) => x,
             _ => unreachable!("worker inputs always end with the f32 x buffer"),
         };
-        for r in batch {
-            let row = live.len();
-            match shared.store.copy_embedding(r.node, &mut x[row * f..(row + 1) * f]) {
-                Ok(()) => live.push(r),
+        // rotate through the guard's deque (pop front, keep live at the
+        // back — O(1) each way) so an unwind mid-loop still
+        // error-completes everything not yet processed
+        let total = pending.reqs.len();
+        let mut live = 0usize;
+        for _ in 0..total {
+            let r = pending.reqs.pop_front().expect("rotation stays within len");
+            match shared.store.copy_embedding(r.node, &mut x[live * f..(live + 1) * f]) {
+                Ok(()) => {
+                    pending.reqs.push_back(r);
+                    live += 1;
+                }
                 Err(e) => {
-                    let _ = r.tx.send((r.idx, Err(e)));
+                    let msg = e.to_string();
+                    r.finish(&shared.cache, Err(msg));
                 }
             }
         }
-        if live.len() < *prev_rows {
-            x[live.len() * f..*prev_rows * f].fill(0.0);
+        if pending.reqs.len() < *prev_rows {
+            x[pending.reqs.len() * f..*prev_rows * f].fill(0.0);
         }
     }
-    *prev_rows = live.len();
-    if live.is_empty() {
+    shared
+        .gather_nanos
+        .fetch_add(t_gather.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    *prev_rows = pending.reqs.len();
+    if pending.reqs.is_empty() {
         return;
     }
 
     // One MLP forward for the whole batch.
+    let t_forward = Instant::now();
     let logits = match exe.run(inputs).and_then(|out| {
         out.into_iter()
             .next()
@@ -454,16 +596,23 @@ fn process_batch(
         Ok(l) => l,
         Err(e) => {
             let msg = e.to_string();
-            for r in live {
-                let _ = r.tx.send((r.idx, Err(Error::Serve(msg.clone()))));
+            for r in pending.reqs.drain(..) {
+                r.finish(&shared.cache, Err(msg.clone()));
             }
             return;
         }
     };
+    shared
+        .forward_nanos
+        .fetch_add(t_forward.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
-    let mut cache = shared.cache.lock().ok();
-    for (row, r) in live.into_iter().enumerate() {
+    // Publish: cache insert + flight completion per row. Each completion
+    // wakes only that node's waiters (per-flight condvar).
+    let t_publish = Instant::now();
+    let mut row = 0usize;
+    while let Some(r) = pending.reqs.pop_front() {
         let slice = &logits[row * c..(row + 1) * c];
+        row += 1;
         let (class, score) = slice
             .iter()
             .enumerate()
@@ -471,10 +620,10 @@ fn process_batch(
                 if v > bs { (i, v) } else { (bi, bs) }
             });
         let p = Prediction { node: r.node, class, score, logits: slice.to_vec() };
-        if let Some(cache) = cache.as_mut() {
-            cache.put(r.node, p.clone());
-        }
         shared.computed.fetch_add(1, Ordering::Relaxed);
-        let _ = r.tx.send((r.idx, Ok(p)));
+        r.finish(&shared.cache, Ok(p));
     }
+    shared
+        .publish_nanos
+        .fetch_add(t_publish.elapsed().as_nanos() as u64, Ordering::Relaxed);
 }

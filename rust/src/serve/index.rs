@@ -1,0 +1,342 @@
+//! Ownership index: `NodeId → (shard, row)` resolution without a hash
+//! probe on the hot path.
+//!
+//! Shards are disjoint by construction (one per Leiden-Fusion partition),
+//! so every served node has exactly one `(shard, row)` location. The
+//! pre-overhaul store resolved it through a `HashMap<NodeId, (u32, u32)>`
+//! — a hash + probe + 12-byte entry per node on every single query. This
+//! module replaces it with a packed **global row** scheme:
+//!
+//! * rows are numbered globally in shard order — shard `s` owns global
+//!   rows `offsets[s]..offsets[s + 1]` — so one `u32` encodes both the
+//!   shard and the row within it;
+//! * when the id space is dense (node ids are compact `u32`s, the normal
+//!   case: datasets number nodes `0..n`), the index is a direct-indexed
+//!   `Vec<u32>` — a lookup is one bounds-checked load;
+//! * when the id space is sparse (external ids, partial bundles), the
+//!   index falls back to a sorted-slice binary search: two cache-friendly
+//!   parallel arrays instead of a `HashMap`'s scattered buckets.
+//!
+//! Both layouts sit behind [`OwnershipIndex`]; callers never branch on
+//! the representation. Lookups allocate nothing.
+
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+
+/// Sentinel for "node not owned" in the dense layout.
+const NONE: u32 = u32::MAX;
+
+/// Dense layout is chosen when the id space is at least this full:
+/// `max_id + 1 <= DENSE_MAX_SPREAD * num_rows`. At spread 2 the dense
+/// table costs at most 8 bytes per served node — always cheaper than the
+/// `HashMap` it replaced — while genuinely sparse id spaces (e.g. a
+/// partial bundle of high external ids) fall back to binary search
+/// instead of allocating `max_id` slots.
+const DENSE_MAX_SPREAD: u64 = 2;
+
+/// Force a representation (tests and benches; production uses `Auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexLayout {
+    Auto,
+    Dense,
+    Sparse,
+}
+
+enum Repr {
+    /// `rows[v]` = global row of node `v`, [`NONE`] when unowned.
+    Dense(Vec<u32>),
+    /// Parallel arrays sorted by id: `ids[i]` is served at global row
+    /// `rows[i]`.
+    Sparse { ids: Vec<NodeId>, rows: Vec<u32> },
+}
+
+/// Immutable node → location index built once from shard headers.
+pub struct OwnershipIndex {
+    /// `offsets[s]` = first global row of shard `s`; `offsets[k]` = total
+    /// rows. Monotone non-decreasing (empty shards repeat a value).
+    offsets: Vec<u32>,
+    repr: Repr,
+}
+
+impl OwnershipIndex {
+    /// Build from per-shard node-id lists (row order), picking the layout
+    /// automatically. Rejects nodes owned by two shards.
+    pub fn build(shards: &[&[NodeId]]) -> Result<OwnershipIndex> {
+        Self::build_with_layout(shards, IndexLayout::Auto)
+    }
+
+    /// [`OwnershipIndex::build`] with a forced layout (equivalence tests
+    /// and micro-benches; `Auto` everywhere else).
+    pub fn build_with_layout(
+        shards: &[&[NodeId]],
+        layout: IndexLayout,
+    ) -> Result<OwnershipIndex> {
+        let mut offsets = Vec::with_capacity(shards.len() + 1);
+        let mut total: u64 = 0;
+        let mut max_id: u64 = 0;
+        offsets.push(0u32);
+        for nodes in shards {
+            total += nodes.len() as u64;
+            if total >= NONE as u64 {
+                return Err(Error::Serve(format!(
+                    "shard bundle has {total} rows — the packed row index holds \
+                     at most {}",
+                    NONE - 1
+                )));
+            }
+            offsets.push(total as u32);
+            for &v in *nodes {
+                max_id = max_id.max(v as u64);
+            }
+        }
+        let dense = match layout {
+            IndexLayout::Dense => true,
+            IndexLayout::Sparse => false,
+            IndexLayout::Auto => total > 0 && max_id + 1 <= DENSE_MAX_SPREAD * total,
+        };
+        let repr = if dense {
+            let slots = if total == 0 { 0 } else { max_id as usize + 1 };
+            let mut rows = vec![NONE; slots];
+            for (s, nodes) in shards.iter().enumerate() {
+                let base = offsets[s];
+                for (r, &v) in nodes.iter().enumerate() {
+                    let slot = &mut rows[v as usize];
+                    if *slot != NONE {
+                        return Err(dup_err(v));
+                    }
+                    *slot = base + r as u32;
+                }
+            }
+            Repr::Dense(rows)
+        } else {
+            let mut pairs: Vec<(NodeId, u32)> = Vec::with_capacity(total as usize);
+            for (s, nodes) in shards.iter().enumerate() {
+                let base = offsets[s];
+                for (r, &v) in nodes.iter().enumerate() {
+                    pairs.push((v, base + r as u32));
+                }
+            }
+            pairs.sort_unstable();
+            for w in pairs.windows(2) {
+                if w[0].0 == w[1].0 {
+                    return Err(dup_err(w[0].0));
+                }
+            }
+            let ids = pairs.iter().map(|&(v, _)| v).collect();
+            let rows = pairs.iter().map(|&(_, r)| r).collect();
+            Repr::Sparse { ids, rows }
+        };
+        Ok(OwnershipIndex { offsets, repr })
+    }
+
+    /// Total served nodes.
+    pub fn len(&self) -> usize {
+        self.offsets.last().copied().unwrap_or(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Whether the direct-indexed layout was chosen.
+    pub fn is_dense(&self) -> bool {
+        matches!(self.repr, Repr::Dense(_))
+    }
+
+    /// Global row of `v`, `None` when unowned. Allocation- and hash-free:
+    /// one load on the dense layout, a binary search on the sparse one.
+    #[inline]
+    pub fn global_row(&self, v: NodeId) -> Option<u32> {
+        match &self.repr {
+            Repr::Dense(rows) => rows.get(v as usize).copied().filter(|&r| r != NONE),
+            Repr::Sparse { ids, rows } => {
+                ids.binary_search(&v).ok().map(|i| rows[i])
+            }
+        }
+    }
+
+    /// Shard owning global row `gr` (which must be `< len()`).
+    #[inline]
+    pub fn shard_of_row(&self, gr: u32) -> u32 {
+        // offsets is sorted; the owner is the last shard starting at or
+        // before gr. partition_point over ~k+1 entries — k is the
+        // partition count, so this touches one or two cache lines.
+        (self.offsets.partition_point(|&o| o <= gr) - 1) as u32
+    }
+
+    /// Resolve `v` to `(shard, row-within-shard)`.
+    #[inline]
+    pub fn locate(&self, v: NodeId) -> Option<(u32, u32)> {
+        let gr = self.global_row(v)?;
+        let s = self.shard_of_row(gr);
+        Some((s, gr - self.offsets[s as usize]))
+    }
+
+    /// Every served node id, in unspecified order.
+    pub fn node_ids(&self) -> Box<dyn Iterator<Item = NodeId> + '_> {
+        match &self.repr {
+            Repr::Dense(rows) => Box::new(
+                rows.iter()
+                    .enumerate()
+                    .filter(|(_, &r)| r != NONE)
+                    .map(|(v, _)| v as NodeId),
+            ),
+            Repr::Sparse { ids, .. } => Box::new(ids.iter().copied()),
+        }
+    }
+}
+
+fn dup_err(v: NodeId) -> Error {
+    Error::Serve(format!(
+        "node {v} owned by two shards (partitions must be disjoint)"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+
+    fn build(shards: &[Vec<NodeId>], layout: IndexLayout) -> Result<OwnershipIndex> {
+        let views: Vec<&[NodeId]> = shards.iter().map(|s| s.as_slice()).collect();
+        OwnershipIndex::build_with_layout(&views, layout)
+    }
+
+    #[test]
+    fn dense_layout_resolves_compact_ids() {
+        let idx = build(&[vec![0, 2, 4], vec![1, 3]], IndexLayout::Auto).unwrap();
+        assert!(idx.is_dense());
+        assert_eq!(idx.len(), 5);
+        assert_eq!(idx.num_shards(), 2);
+        assert_eq!(idx.locate(0), Some((0, 0)));
+        assert_eq!(idx.locate(4), Some((0, 2)));
+        assert_eq!(idx.locate(1), Some((1, 0)));
+        assert_eq!(idx.locate(3), Some((1, 1)));
+        assert_eq!(idx.locate(5), None);
+        assert_eq!(idx.locate(999), None);
+    }
+
+    #[test]
+    fn sparse_ids_fall_back_to_binary_search() {
+        // two nodes with ids in the millions: dense would allocate 2M
+        // slots for 2 rows — Auto must pick the sorted layout
+        let idx = build(&[vec![2_000_000], vec![1_000]], IndexLayout::Auto).unwrap();
+        assert!(!idx.is_dense());
+        assert_eq!(idx.locate(2_000_000), Some((0, 0)));
+        assert_eq!(idx.locate(1_000), Some((1, 0)));
+        assert_eq!(idx.locate(0), None);
+        assert_eq!(idx.locate(1_999_999), None);
+    }
+
+    #[test]
+    fn empty_shards_do_not_shift_ownership() {
+        let idx =
+            build(&[vec![0, 1], vec![], vec![2]], IndexLayout::Auto).unwrap();
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.locate(2), Some((2, 0)));
+        assert_eq!(idx.node_ids().count(), 3);
+    }
+
+    #[test]
+    fn duplicate_ownership_is_rejected_in_both_layouts() {
+        for layout in [IndexLayout::Dense, IndexLayout::Sparse] {
+            let err = build(&[vec![0, 1], vec![1, 2]], layout).unwrap_err();
+            assert!(err.to_string().contains("two shards"), "{layout:?}: {err}");
+            // duplicate within one shard too
+            let err = build(&[vec![3, 3]], layout).unwrap_err();
+            assert!(err.to_string().contains("two shards"), "{layout:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_bundle_is_empty_index() {
+        let idx = build(&[], IndexLayout::Auto).unwrap();
+        assert_eq!(idx.len(), 0);
+        assert!(idx.is_empty());
+        assert_eq!(idx.locate(0), None);
+        assert_eq!(idx.node_ids().count(), 0);
+    }
+
+    /// Property: dense and sparse layouts answer identically to each other
+    /// and to a HashMap oracle, on random shard layouts (shuffled ids,
+    /// uneven shard sizes, empty shards, id-space gaps).
+    #[test]
+    fn prop_dense_sparse_equivalent() {
+        prop::check(
+            "ownership-dense-vs-sparse",
+            40,
+            0x0DE5,
+            |rng: &mut Rng| {
+                let k = 1 + rng.index(6);
+                let n = rng.index(200);
+                // spread controls density: 1 = compact ids, 8 = very sparse
+                let spread = 1 + rng.index(8);
+                let mut ids: Vec<NodeId> = Vec::with_capacity(n);
+                let mut used = std::collections::HashSet::new();
+                while ids.len() < n {
+                    let v = rng.index(n.max(1) * spread) as NodeId;
+                    if used.insert(v) {
+                        ids.push(v);
+                    }
+                }
+                let mut shards: Vec<Vec<NodeId>> = vec![Vec::new(); k];
+                for v in ids {
+                    shards[rng.index(k)].push(v);
+                }
+                shards
+            },
+            |shards| {
+                let dense = build(shards, IndexLayout::Dense)
+                    .map_err(|e| format!("dense build: {e}"))?;
+                let sparse = build(shards, IndexLayout::Sparse)
+                    .map_err(|e| format!("sparse build: {e}"))?;
+                let auto = build(shards, IndexLayout::Auto)
+                    .map_err(|e| format!("auto build: {e}"))?;
+                let mut oracle: HashMap<NodeId, (u32, u32)> = HashMap::new();
+                for (s, nodes) in shards.iter().enumerate() {
+                    for (r, &v) in nodes.iter().enumerate() {
+                        oracle.insert(v, (s as u32, r as u32));
+                    }
+                }
+                let max_probe = shards
+                    .iter()
+                    .flatten()
+                    .copied()
+                    .max()
+                    .map(|m| m as usize + 3)
+                    .unwrap_or(8);
+                for v in 0..max_probe as NodeId {
+                    let want = oracle.get(&v).copied();
+                    for (name, idx) in
+                        [("dense", &dense), ("sparse", &sparse), ("auto", &auto)]
+                    {
+                        if idx.locate(v) != want {
+                            return Err(format!(
+                                "{name} layout: node {v}: {:?} != oracle {:?}",
+                                idx.locate(v),
+                                want
+                            ));
+                        }
+                    }
+                }
+                if dense.len() != oracle.len() || sparse.len() != oracle.len() {
+                    return Err("len diverged from oracle".into());
+                }
+                let mut a: Vec<NodeId> = dense.node_ids().collect();
+                let mut b: Vec<NodeId> = sparse.node_ids().collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                if a != b {
+                    return Err("node_ids diverged between layouts".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

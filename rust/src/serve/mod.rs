@@ -10,25 +10,36 @@
 //!    (`shards.json`) and the trained integration-MLP checkpoint.
 //!    Leiden-Fusion partitions are disjoint connected components, so the
 //!    shards are an exact, communication-free cover of the node set.
-//! 2. **Store** ([`store`]) — [`ShardedEmbeddingStore`] opens a shard
-//!    directory, builds a `NodeId → (shard, row)` ownership index from
-//!    headers alone, and loads embedding rows lazily on first touch.
-//! 3. **Engine** ([`engine`]) — a worker thread pool batches
+//! 2. **Index** ([`index`]) — [`OwnershipIndex`] resolves `NodeId →
+//!    (shard, row)` with a direct-indexed dense table on compact id
+//!    spaces (one load, no hashing) and a sorted binary-search fallback
+//!    on sparse ones.
+//! 3. **Store** ([`store`]) — [`ShardedEmbeddingStore`] opens a shard
+//!    directory, builds the index from headers alone, and loads each
+//!    shard once into an immutable `Arc<[f32]>` slab: after first touch
+//!    (or an eager parallel [`ShardedEmbeddingStore::warm`]) row gathers
+//!    are lock-free and allocation-free.
+//! 4. **Engine** ([`engine`]) — a worker thread pool batches
 //!    node-classification queries (up to `batch_size` per PJRT forward)
-//!    against the trained MLP, with an LRU result cache ([`cache`]) in
-//!    front. Batched logits are bit-identical to the offline `classify`
-//!    path because the MLP is row-wise.
+//!    against the trained MLP, behind a striped, single-flight
+//!    [`ResultCache`]: cache hits answer on the client thread, concurrent
+//!    misses for one node coalesce into a single forward, and completions
+//!    wake only that node's waiters. Batched logits are bit-identical to
+//!    the offline `classify` path because the MLP is row-wise.
 //!
 //! Driven by the `serve` / `query` CLI subcommands and measured by
-//! `benches/bench_serve.rs` (QPS, p50/p99 latency).
+//! `benches/bench_serve.rs` (QPS, p50/p99 latency, hit rate, per-stage
+//! breakdown → `BENCH_serve.json`).
 
 pub mod cache;
 pub mod engine;
+pub mod index;
 pub mod shard;
 pub mod store;
 
-pub use cache::LruCache;
+pub use cache::{Flight, Lookup, LruCache, ResultCache, MAX_LRU_CAPACITY};
 pub use engine::{Engine, EngineConfig, EngineStats, Prediction};
+pub use index::{IndexLayout, OwnershipIndex};
 pub use shard::{
     read_shard, read_shard_header, shard_file_name, write_shard, ShardEntry, ShardHeader,
     ShardManifest, CLASSIFIER_FILE, SHARD_MANIFEST_FILE,

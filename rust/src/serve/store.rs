@@ -1,38 +1,46 @@
 //! Sharded embedding store: the serving-time view of the global embedding
 //! matrix.
 //!
-//! Opens a shard directory written by the coordinator, builds the
-//! `NodeId → (shard, row)` ownership index from shard *headers* only, and
-//! loads each shard's embedding rows lazily on first touch. Shards are
+//! Opens a shard directory written by the coordinator, builds an
+//! [`OwnershipIndex`] (`NodeId → (shard, row)`) from shard *headers* only,
+//! and loads each shard's embedding rows on first touch. Shards are
 //! disjoint by construction (one per Leiden-Fusion partition), so the
-//! ownership index is an exact cover and lookups never fan out across
-//! shards — the serving analogue of the paper's communication-free
-//! training.
+//! index is an exact cover and lookups never fan out across shards — the
+//! serving analogue of the paper's communication-free training.
 //!
-//! The store is `Send + Sync`: lazy shard data sits behind per-shard
-//! mutexes holding `Arc<[f32]>` blocks, so engine workers share one store.
+//! Hot-path contract (what the engine's gather loop relies on):
+//!
+//! * **ownership lookup** is a direct-indexed load (dense id spaces) or a
+//!   binary search (sparse) — no hashing, no allocation;
+//! * **slab access** is an immutable `Arc<[f32]>` behind a [`OnceLock`]:
+//!   after first touch it is one atomic load — no `Mutex`, no `Arc` clone,
+//!   no copy. Two threads racing the *first* touch may both read the file;
+//!   exactly one result is kept (the loser's read is dropped), which
+//!   trades a rare duplicate cold read for a lock-free steady state.
+//! * [`ShardedEmbeddingStore::warm`] preloads every slab (in parallel via
+//!   `util/parallel`) so serving starts with the cold I/O already paid.
 
-use super::shard::{read_shard, read_shard_header, ShardHeader, ShardManifest};
+use super::index::OwnershipIndex;
+use super::shard::{read_shard, read_shard_header, ShardManifest};
 use crate::error::{Error, Result};
 use crate::graph::NodeId;
-use std::collections::HashMap;
+use crate::util::parallel::map_chunks;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, OnceLock};
 
-struct LazyShard {
+struct Shard {
     path: PathBuf,
-    header: ShardHeader,
-    /// Embedding rows, populated on first access.
-    data: Mutex<Option<Arc<Vec<f32>>>>,
+    rows: usize,
+    /// Embedding rows, populated on first access and immutable after.
+    slab: OnceLock<Arc<[f32]>>,
 }
 
 /// Lazily-loaded, shard-per-partition embedding store.
 pub struct ShardedEmbeddingStore {
     dir: PathBuf,
     manifest: ShardManifest,
-    shards: Vec<LazyShard>,
-    /// node → (shard index, row within shard)
-    ownership: HashMap<NodeId, (u32, u32)>,
+    shards: Vec<Shard>,
+    index: OwnershipIndex,
 }
 
 impl ShardedEmbeddingStore {
@@ -42,8 +50,8 @@ impl ShardedEmbeddingStore {
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest = ShardManifest::load(dir)?;
         let mut shards = Vec::with_capacity(manifest.shards.len());
-        let mut ownership = HashMap::with_capacity(manifest.num_nodes);
-        for (idx, entry) in manifest.shards.iter().enumerate() {
+        let mut headers = Vec::with_capacity(manifest.shards.len());
+        for entry in &manifest.shards {
             let path = dir.join(&entry.file);
             let header = read_shard_header(&path)?;
             if header.part_id != entry.part_id {
@@ -70,23 +78,19 @@ impl ShardedEmbeddingStore {
                     manifest.dim
                 )));
             }
-            for (row, &v) in header.nodes.iter().enumerate() {
-                if ownership.insert(v, (idx as u32, row as u32)).is_some() {
-                    return Err(Error::Serve(format!(
-                        "node {v} owned by two shards (partitions must be disjoint)"
-                    )));
-                }
-            }
-            shards.push(LazyShard { path, header, data: Mutex::new(None) });
+            shards.push(Shard { path, rows: header.rows, slab: OnceLock::new() });
+            headers.push(header.nodes);
         }
-        if ownership.len() != manifest.num_nodes {
+        let views: Vec<&[NodeId]> = headers.iter().map(|n| n.as_slice()).collect();
+        let index = OwnershipIndex::build(&views)?;
+        if index.len() != manifest.num_nodes {
             return Err(Error::Serve(format!(
                 "shards cover {} nodes, manifest says {}",
-                ownership.len(),
+                index.len(),
                 manifest.num_nodes
             )));
         }
-        Ok(ShardedEmbeddingStore { dir: dir.to_path_buf(), manifest, shards, ownership })
+        Ok(ShardedEmbeddingStore { dir: dir.to_path_buf(), manifest, shards, index })
     }
 
     pub fn dir(&self) -> &Path {
@@ -103,61 +107,65 @@ impl ShardedEmbeddingStore {
 
     /// Total nodes across all shards.
     pub fn num_nodes(&self) -> usize {
-        self.ownership.len()
+        self.index.len()
     }
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// The ownership index (dense direct-indexed or sorted sparse).
+    pub fn index(&self) -> &OwnershipIndex {
+        &self.index
+    }
+
     /// Shards whose embedding rows are currently resident.
     pub fn loaded_shards(&self) -> usize {
-        self.shards
-            .iter()
-            .filter(|s| s.data.lock().map(|d| d.is_some()).unwrap_or(false))
-            .count()
+        self.shards.iter().filter(|s| s.slab.get().is_some()).count()
     }
 
     /// Resolve a node to `(shard index, row)` without touching data.
+    #[inline]
     pub fn locate(&self, v: NodeId) -> Option<(u32, u32)> {
-        self.ownership.get(&v).copied()
+        self.index.locate(v)
     }
 
     /// All node ids this store serves, in an arbitrary order.
     pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
-        self.ownership.keys().copied()
+        self.index.node_ids()
     }
 
-    /// Load (or fetch cached) shard data block.
-    fn shard_data(&self, idx: usize) -> Result<Arc<Vec<f32>>> {
+    /// One shard's embedding slab, loading it on first touch. Steady
+    /// state is a single atomic load — no lock, no refcount traffic.
+    fn slab(&self, idx: usize) -> Result<&[f32]> {
         let shard = &self.shards[idx];
-        let mut slot = shard.data.lock().map_err(|_| {
-            Error::Serve("shard data lock poisoned".into())
-        })?;
-        if let Some(data) = slot.as_ref() {
-            return Ok(Arc::clone(data));
+        if let Some(slab) = shard.slab.get() {
+            return Ok(slab);
         }
         let (header, data) = read_shard(&shard.path)?;
-        // open() validated the header; re-check rows defensively in case
-        // the file changed underneath a running server
-        if header.rows != shard.header.rows || header.dim != shard.header.dim {
+        // open() validated the header; re-check defensively in case the
+        // file changed underneath a running server
+        if header.rows != shard.rows || header.dim != self.manifest.dim {
             return Err(Error::Serve(format!(
                 "{}: shard changed on disk while serving",
                 shard.path.display()
             )));
         }
-        let data = Arc::new(data);
-        *slot = Some(Arc::clone(&data));
         log::debug!(
             "loaded shard {} ({} rows × {})",
             shard.path.display(),
             header.rows,
             header.dim
         );
-        Ok(data)
+        // On a first-touch race both threads read the file; set() keeps
+        // exactly one slab and the loser's copy is dropped here.
+        let _ = shard.slab.set(Arc::from(data));
+        Ok(shard.slab.get().expect("slab just initialised"))
     }
 
-    /// Copy one node's embedding row into `out` (len == dim).
+    /// Copy one node's embedding row into `out` (len == dim). After the
+    /// owning slab's first touch this is lookup + `copy_from_slice` —
+    /// no allocation, no lock.
     pub fn copy_embedding(&self, v: NodeId, out: &mut [f32]) -> Result<()> {
         if out.len() != self.manifest.dim {
             return Err(Error::Serve(format!(
@@ -169,26 +177,38 @@ impl ShardedEmbeddingStore {
         let (shard_idx, row) = self
             .locate(v)
             .ok_or_else(|| Error::Serve(format!("node {v} not in any shard")))?;
-        let data = self.shard_data(shard_idx as usize)?;
+        let slab = self.slab(shard_idx as usize)?;
         let dim = self.manifest.dim;
         let off = row as usize * dim;
-        out.copy_from_slice(&data[off..off + dim]);
+        out.copy_from_slice(&slab[off..off + dim]);
         Ok(())
     }
 
-    /// One node's embedding row as an owned vector.
+    /// One node's embedding row as an owned vector (convenience; the hot
+    /// path uses [`Self::copy_embedding`]).
     pub fn embedding(&self, v: NodeId) -> Result<Vec<f32>> {
         let mut out = vec![0.0; self.manifest.dim];
         self.copy_embedding(v, &mut out)?;
         Ok(out)
     }
 
-    /// Force-load every shard (used by benches to exclude cold I/O).
+    /// Eagerly load every shard slab, `threads`-wide (1 = sequential).
+    /// Serving after `warm` never touches disk or any lock.
+    pub fn warm(&self, threads: usize) -> Result<()> {
+        map_chunks(threads, self.shards.len(), 1, |_, range| {
+            for i in range {
+                self.slab(i)?;
+            }
+            Ok(())
+        })
+        .into_iter()
+        .collect()
+    }
+
+    /// Force-load every shard sequentially (legacy name; prefer
+    /// [`Self::warm`]).
     pub fn prefetch_all(&self) -> Result<()> {
-        for i in 0..self.shards.len() {
-            self.shard_data(i)?;
-        }
-        Ok(())
+        self.warm(1)
     }
 }
 
@@ -243,6 +263,7 @@ mod tests {
         assert_eq!(store.num_nodes(), 5);
         assert_eq!(store.num_shards(), 2);
         assert_eq!(store.loaded_shards(), 0, "open must not load embedding rows");
+        assert!(store.index().is_dense(), "compact ids take the dense layout");
 
         assert_eq!(store.embedding(4).unwrap(), vec![40.0, 41.0, 42.0]);
         assert_eq!(store.loaded_shards(), 1, "only the touched shard loads");
@@ -253,6 +274,35 @@ mod tests {
         assert_eq!(store.locate(3), Some((1, 1)));
         assert!(store.locate(99).is_none());
         assert!(store.embedding(99).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sparse_id_space_is_served_via_binary_search() {
+        let dir = bundle(
+            "sparse",
+            &[(0, vec![1_000, 500_000], 2), (1, vec![2_000_000], 2)],
+        );
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert!(!store.index().is_dense(), "wide id space must not allocate densely");
+        assert_eq!(store.embedding(2_000_000).unwrap(), vec![20_000_000.0, 20_000_001.0]);
+        assert_eq!(store.locate(1_000), Some((0, 0)));
+        assert!(store.locate(0).is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn warm_loads_everything_in_parallel() {
+        let dir = bundle(
+            "warm",
+            &[(0, vec![0, 1], 4), (1, vec![2], 4), (2, vec![3, 4, 5], 4)],
+        );
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        store.warm(4).unwrap();
+        assert_eq!(store.loaded_shards(), 3);
+        let mut row = [0.0f32; 4];
+        store.copy_embedding(5, &mut row).unwrap();
+        assert_eq!(row, [50.0, 51.0, 52.0, 53.0]);
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -292,7 +342,7 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_reads_share_one_load() {
+    fn concurrent_reads_agree_and_slab_loads_once_per_shard() {
         let dir = bundle("concurrent", &[(0, (0..64).collect(), 8)]);
         let store = std::sync::Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
         let mut handles = Vec::new();

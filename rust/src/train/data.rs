@@ -15,7 +15,10 @@
 
 use crate::data::{Dataset, Labels};
 use crate::error::{Error, Result};
-use crate::graph::{inner_subgraph, repli_subgraph, NodeId, Subgraph};
+use crate::graph::{
+    inner_subgraph_with, repli_subgraph_with, NodeId, Subgraph, SubgraphKind,
+    SubgraphScratch,
+};
 use crate::runtime::Tensor;
 
 /// Inner vs Repli subgraph construction (paper §5.2).
@@ -30,6 +33,15 @@ impl Mode {
         match self {
             Mode::Inner => "inner",
             Mode::Repli => "repli",
+        }
+    }
+
+    /// The graph-layer extraction this mode maps to (for
+    /// [`crate::graph::extract_subgraphs`]).
+    pub fn kind(&self) -> crate::graph::SubgraphKind {
+        match self {
+            Mode::Inner => crate::graph::SubgraphKind::Inner,
+            Mode::Repli => crate::graph::SubgraphKind::Repli,
         }
     }
 }
@@ -101,9 +113,22 @@ pub fn build_batch(
     mode: Mode,
     model: ModelKind,
 ) -> Result<PartitionBatch> {
-    let sub = match mode {
-        Mode::Inner => inner_subgraph(&dataset.graph, members)?,
-        Mode::Repli => repli_subgraph(&dataset.graph, members)?,
+    build_batch_with(dataset, members, mode, model, &mut SubgraphScratch::new())
+}
+
+/// [`build_batch`] with a caller-provided extraction scratch — workers
+/// that build batches for many partitions (the coordinator's machine
+/// loop) reuse one dense id map instead of re-allocating per partition.
+pub fn build_batch_with(
+    dataset: &Dataset,
+    members: &[NodeId],
+    mode: Mode,
+    model: ModelKind,
+    scratch: &mut SubgraphScratch,
+) -> Result<PartitionBatch> {
+    let sub = match mode.kind() {
+        SubgraphKind::Inner => inner_subgraph_with(&dataset.graph, members, scratch)?,
+        SubgraphKind::Repli => repli_subgraph_with(&dataset.graph, members, scratch)?,
     };
     let g = &sub.graph;
     let nl = g.num_nodes();

@@ -7,7 +7,7 @@ pub mod integrate;
 pub mod metrics;
 pub mod trainer;
 
-pub use data::{build_batch, pad_to_bucket, Mode, ModelKind, PartitionBatch};
+pub use data::{build_batch, build_batch_with, pad_to_bucket, Mode, ModelKind, PartitionBatch};
 pub use integrate::{
     classify, evaluate_classifier, train_classifier, Classifier, EmbeddingStore, EvalReport,
 };

@@ -1,14 +1,19 @@
 //! End-to-end serving tests: coordinator run → shard bundle → store →
-//! engine, checked against the offline classify path. All tests skip
-//! gracefully when `make artifacts` has not been run.
+//! engine, checked against the offline classify path — **bit-exactly**.
+//! The MLP is row-wise and the engine resolves the same pred artifact as
+//! the offline path (same bucket), so every logit the engine returns must
+//! equal the offline logit to the last bit, no matter how queries are
+//! batched, cached, coalesced, or interleaved across client threads.
+//! All tests skip gracefully when `make artifacts` has not been run.
 
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::data::karate_dataset;
 use leiden_fusion::graph::NodeId;
 use leiden_fusion::partition::leiden::leiden_fusion;
 use leiden_fusion::runtime::{default_artifacts_dir, Runtime, Tensor};
-use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
+use leiden_fusion::serve::{Engine, EngineConfig, Prediction, ShardedEmbeddingStore};
 use leiden_fusion::train::checkpoint::load_tensors;
+use leiden_fusion::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -41,25 +46,11 @@ fn argmax(row: &[f32]) -> usize {
         .0
 }
 
-#[test]
-fn engine_matches_offline_classify_path() {
-    if !artifacts_ready() {
-        return;
-    }
-    let dir = export_bundle("match");
-    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
-    let engine = Engine::new(
-        EngineConfig {
-            batch_size: 8,
-            workers: 2,
-            cache_capacity: 64,
-            ..Default::default()
-        },
-        Arc::clone(&store),
-    )
-    .unwrap();
-
-    // ---- offline reference: pred artifact over the full matrix --------
+/// Offline reference: run the pred artifact over the full embedding
+/// matrix exactly as `classify` does, returning the logit matrix and its
+/// column count. Uses the same bucket the engine resolves (n ≥
+/// `num_nodes`), so rows are comparable bit-for-bit.
+fn offline_logits(store: &ShardedEmbeddingStore, dir: &std::path::Path) -> (Vec<f32>, usize) {
     let rt = Runtime::new(&default_artifacts_dir()).unwrap();
     let m = store.manifest().clone();
     let params = load_tensors(&dir.join(&m.classifier_file)).unwrap();
@@ -75,30 +66,52 @@ fn engine_matches_offline_classify_path() {
     let mut inputs = params;
     inputs.push(Tensor::F32(x));
     let out = exe.run(&inputs).unwrap();
-    let offline_logits = out[0].as_f32().unwrap();
-    let c = dims.c;
+    (out[0].as_f32().unwrap().to_vec(), dims.c)
+}
 
-    // ---- the engine must agree on every node --------------------------
-    let nodes: Vec<NodeId> = (0..m.num_nodes as NodeId).collect();
+fn assert_bit_exact(p: &Prediction, offline: &[f32], c: usize, ctx: &str) {
+    let v = p.node as usize;
+    let row = &offline[v * c..(v + 1) * c];
+    assert_eq!(p.logits.len(), c, "{ctx}: node {} logit arity", p.node);
+    for (j, (a, b)) in p.logits.iter().zip(row).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx}: node {} logit {j} diverged from offline classify: {a:?} vs {b:?}",
+            p.node
+        );
+    }
+    assert_eq!(p.class, argmax(row), "{ctx}: node {} class", p.node);
+}
+
+#[test]
+fn engine_matches_offline_classify_path_bit_exactly() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = export_bundle("match");
+    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+    let num_nodes = store.num_nodes();
+    let engine = Engine::new(
+        EngineConfig {
+            // batch == num_nodes so the engine resolves the same bucket
+            // the offline reference uses
+            batch_size: num_nodes,
+            workers: 2,
+            cache_capacity: 64,
+            ..Default::default()
+        },
+        Arc::clone(&store),
+    )
+    .unwrap();
+    let (offline, c) = offline_logits(&store, &dir);
+
+    // ---- the engine must agree on every node, to the bit --------------
+    let nodes: Vec<NodeId> = (0..num_nodes as NodeId).collect();
     let preds = engine.query(&nodes).unwrap();
     assert_eq!(preds.len(), nodes.len());
     for p in &preds {
-        let v = p.node as usize;
-        let row = &offline_logits[v * c..(v + 1) * c];
-        assert_eq!(
-            p.class,
-            argmax(row),
-            "node {} class diverged from offline classify",
-            p.node
-        );
-        assert_eq!(p.logits.len(), c);
-        for (a, b) in p.logits.iter().zip(row) {
-            assert!(
-                (a - b).abs() < 1e-4,
-                "node {} logits diverged: {a} vs {b}",
-                p.node
-            );
-        }
+        assert_bit_exact(p, &offline, c, "full sweep");
     }
 
     // ---- cache serves repeats without new PJRT batches ----------------
@@ -109,9 +122,52 @@ fn engine_matches_offline_classify_path() {
     assert_eq!(after.cache_hits, before.cache_hits + 3);
     for (p, &v) in again.iter().zip(&[0 as NodeId, 5, 9]) {
         assert_eq!(p.node, v);
-        let offline = argmax(&offline_logits[v as usize * c..(v as usize + 1) * c]);
-        assert_eq!(p.class, offline);
+        assert_bit_exact(p, &offline, c, "cached repeat");
     }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Small batches resolve a smaller PJRT bucket than the offline
+/// reference, so logits are compared within tolerance (not bitwise) —
+/// this is the coverage for multi-forward serving: batch splitting,
+/// the stale-tail re-zeroing between batches, and row packing.
+#[test]
+fn small_batches_match_offline_within_tolerance() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = export_bundle("smallbatch");
+    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+    let engine = Engine::new(
+        EngineConfig {
+            batch_size: 8, // forces several forwards per full sweep
+            workers: 2,
+            cache_capacity: 0, // every sweep recomputes with fresh packing
+            ..Default::default()
+        },
+        Arc::clone(&store),
+    )
+    .unwrap();
+    let (offline, c) = offline_logits(&store, &dir);
+    let nodes: Vec<NodeId> = (0..store.num_nodes() as NodeId).collect();
+    // two sweeps: the second exercises prev_rows tail re-zeroing after
+    // the first sweep's final short batch
+    for sweep in 0..2 {
+        let preds = engine.query(&nodes).unwrap();
+        for p in &preds {
+            let v = p.node as usize;
+            let row = &offline[v * c..(v + 1) * c];
+            assert_eq!(p.class, argmax(row), "sweep {sweep} node {} class", p.node);
+            for (a, b) in p.logits.iter().zip(row) {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "sweep {sweep} node {} logits diverged: {a} vs {b}",
+                    p.node
+                );
+            }
+        }
+    }
+    assert!(engine.stats().batches >= 4, "8-wide batches must have split the sweep");
     std::fs::remove_dir_all(dir).ok();
 }
 
@@ -129,11 +185,85 @@ fn unknown_node_fails_cleanly_and_engine_survives() {
     let ok = engine.query(&[0, 1]).unwrap();
     assert_eq!(ok.len(), 2);
     assert!(engine.query(&[]).unwrap().is_empty());
+    // a failed node must not be cached as a failure either
+    assert!(engine.query(&[9999]).is_err());
+    assert!(engine.query(&[3]).is_ok());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// The adversarial concurrency test: many client threads, duplicated ids
+/// within and across calls, cache + single-flight on, a small LRU so
+/// entries churn through eviction and recompute, and arrival-order
+/// batching that packs the same node at different batch rows — every
+/// answer must still be bit-identical to the offline classify path.
+#[test]
+fn concurrent_load_is_bit_exact_vs_offline() {
+    if !artifacts_ready() {
+        return;
+    }
+    let dir = export_bundle("stress");
+    let store = Arc::new(ShardedEmbeddingStore::open(&dir).unwrap());
+    store.warm(4).unwrap();
+    let num_nodes = store.num_nodes();
+    let engine = Arc::new(
+        Engine::new(
+            EngineConfig {
+                batch_size: num_nodes,
+                workers: 3,
+                cache_capacity: 32, // small: force eviction + recompute churn
+                cache_stripes: 4,
+                ..Default::default()
+            },
+            Arc::clone(&store),
+        )
+        .unwrap(),
+    );
+    let (offline, c) = offline_logits(&store, &dir);
+    let offline = Arc::new(offline);
+
+    let clients = 8;
+    let rounds = 12;
+    let mut handles = Vec::new();
+    for t in 0..clients as u64 {
+        let engine = Arc::clone(&engine);
+        let offline = Arc::clone(&offline);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x57E5 + t);
+            for round in 0..rounds {
+                // random multiset of ids — duplicates exercise same-call
+                // flight joining, overlap across threads exercises
+                // cross-client single-flight
+                let len = 1 + rng.index(24);
+                let ids: Vec<NodeId> =
+                    (0..len).map(|_| rng.index(num_nodes) as NodeId).collect();
+                let preds = engine.query(&ids).unwrap();
+                assert_eq!(preds.len(), ids.len());
+                for (p, &v) in preds.iter().zip(&ids) {
+                    assert_eq!(p.node, v, "client {t} round {round}");
+                    assert_bit_exact(
+                        p,
+                        &offline,
+                        c,
+                        &format!("client {t} round {round}"),
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let st = engine.stats();
+    assert_eq!(
+        st.requests,
+        st.cache_hits + st.coalesced + st.computed,
+        "every request is a hit, a coalesced join, or a computed answer"
+    );
     std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]
-fn concurrent_clients_get_consistent_answers() {
+fn concurrent_clients_get_consistent_answers_without_cache() {
     if !artifacts_ready() {
         return;
     }
