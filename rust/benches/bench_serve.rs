@@ -22,7 +22,7 @@
 
 mod common;
 
-use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::benchkit::{report_json, Table};
 use leiden_fusion::cli::Args;
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::graph::NodeId;
@@ -47,14 +47,7 @@ fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
 }
 
 fn write_report(args: &Args, doc: &Json) {
-    save_json("bench_serve", doc);
-    if let Some(path) = args.get("json-out") {
-        std::fs::write(path, doc.to_string()).unwrap_or_else(|e| {
-            eprintln!("cannot write {path}: {e}");
-            std::process::exit(1);
-        });
-        println!("\nbench report written to {path}");
-    }
+    report_json(args, "bench_serve", doc);
 }
 
 fn main() {

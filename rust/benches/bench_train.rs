@@ -1,0 +1,208 @@
+//! **bench_train** — training hot-path throughput, and the perf-trajectory
+//! export behind `BENCH_train.json` (completing the BENCH_{partition,
+//! serve, train} trio).
+//!
+//! Partitions an arxiv-like dataset, then trains every partition twice:
+//! once through the device-resident `ExecSession` (invariants staged once,
+//! optimizer state resident, loss-scalar-only downloads) and once through
+//! the host round-trip reference loop. Reports epochs/sec for both, the
+//! speedup, per-call host↔device transfer bytes, and the session's
+//! stage/execute/download timer split.
+//!
+//! Flags (after `--` on `cargo bench`):
+//!   --json-out <path>   also write the machine-readable report there
+//!                       (the CI artifact / committed trajectory point).
+//!                       Written even when artifacts are missing — the
+//!                       report then carries `"skipped": true` so the CI
+//!                       artifact chain never breaks on an un-provisioned
+//!                       runner.
+//!   --k 4               partition count
+//!   --epochs 40         GNN epochs per partition
+//!
+//! Knobs: `LF_BENCH_QUICK` shrinks the run; `LF_BENCH_N` overrides the
+//! dataset size.
+
+mod common;
+
+use leiden_fusion::benchkit::{report_json, Table};
+use leiden_fusion::cli::Args;
+use leiden_fusion::runtime::{default_artifacts_dir, ExecStats, Runtime};
+use leiden_fusion::train::{
+    build_batch_with, train_partition_with, ExecPath, Mode, ModelKind, PadScratch,
+    TrainOptions,
+};
+use leiden_fusion::util::Stopwatch;
+
+fn main() {
+    use leiden_fusion::util::json::{num, obj, s, Json};
+    let args = Args::parse(std::env::args()).unwrap_or_else(|e| {
+        eprintln!("bad bench args: {e}");
+        std::process::exit(2);
+    });
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        println!("bench_train: artifacts missing (run `make artifacts`); skipping");
+        // still emit a (schema-carrying) report so CI's artifact upload
+        // and `test -s` smoke check hold on runners without XLA
+        report_json(
+            &args,
+            "bench_train",
+            &obj(vec![
+                ("bench", s("bench_train")),
+                ("skipped", Json::Bool(true)),
+                ("reason", s("artifacts missing (PJRT manifest not found)")),
+            ]),
+        );
+        return;
+    }
+
+    let k = args.usize_or("k", 4).unwrap_or_else(|e| {
+        eprintln!("bad --k: {e}");
+        std::process::exit(2);
+    });
+    let default_epochs = if common::quick() { 12 } else { 40 };
+    let epochs = args.usize_or("epochs", default_epochs).unwrap_or_else(|e| {
+        eprintln!("bad --epochs: {e}");
+        std::process::exit(2);
+    });
+    let ds = common::arxiv(2_000);
+    let p = common::partitioning(&ds.graph, "lf", k, 42);
+    let members = p.members();
+    println!(
+        "arxiv-like: {} nodes, {} edges; GCN, {} partitions, {} epochs each",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        k,
+        epochs
+    );
+
+    let rt = Runtime::new(&default_artifacts_dir()).expect("runtime");
+    let mut subgraph_scratch = leiden_fusion::graph::SubgraphScratch::new();
+    let mut pads = PadScratch::new();
+    let wall = Stopwatch::start();
+
+    // one A/B run over every partition, same batches, same seeds
+    let mut run_path = |exec: ExecPath| -> (f64, f64, ExecStats) {
+        let mut total_secs = 0.0;
+        let mut executed_epochs = 0f64;
+        let mut agg = ExecStats::default();
+        for (part_id, m) in members.iter().enumerate() {
+            if m.is_empty() {
+                continue;
+            }
+            let batch =
+                build_batch_with(&ds, m, Mode::Inner, ModelKind::Gcn, &mut subgraph_scratch)
+                    .expect("batch");
+            // the trainer rounds the requested epochs up to whole artifact
+            // calls; throughput must count what actually ran
+            let epc = rt
+                .load_for("gcn", "multiclass", "train", batch.num_local(),
+                          batch.num_directed_edges())
+                .expect("train artifact")
+                .meta
+                .dims
+                .epochs_per_call
+                .max(1);
+            let opts = TrainOptions {
+                model: ModelKind::Gcn,
+                epochs,
+                seed: 42 ^ (part_id as u64) << 8,
+                log_every: 0,
+                exec,
+            };
+            let out = train_partition_with(&rt, &batch, &opts, &mut pads)
+                .expect("train partition");
+            total_secs += out.train_secs;
+            executed_epochs += (out.losses.len() * epc) as f64;
+            if let Some(st) = out.exec_stats {
+                agg.steps += st.steps;
+                agg.stage_secs += st.stage_secs;
+                agg.execute_secs += st.execute_secs;
+                agg.download_secs += st.download_secs;
+                agg.bytes_to_device += st.bytes_to_device;
+                agg.bytes_to_host += st.bytes_to_host;
+                agg.tuple_fallback_steps += st.tuple_fallback_steps;
+            }
+        }
+        (total_secs, executed_epochs, agg)
+    };
+
+    let (ref_secs, ref_epochs, _) = run_path(ExecPath::Reference);
+    let (ses_secs, ses_epochs, st) = run_path(ExecPath::Session);
+    let wall_secs = wall.secs();
+
+    let ses_eps = ses_epochs / ses_secs.max(1e-12);
+    let ref_eps = ref_epochs / ref_secs.max(1e-12);
+    let speedup = ref_secs / ses_secs.max(1e-12);
+    let steps = st.steps.max(1) as u64;
+    let up_per_step = st.bytes_to_device / steps;
+    let down_per_step = st.bytes_to_host / steps;
+
+    let mut t = Table::new(
+        "bench_train: per-partition GNN training, session vs reference",
+        &["metric", "session", "reference"],
+    );
+    t.row(vec!["train secs (all parts)".into(), format!("{ses_secs:.2}"),
+               format!("{ref_secs:.2}")]);
+    t.row(vec!["epochs/sec".into(), format!("{ses_eps:.1}"), format!("{ref_eps:.1}")]);
+    t.row(vec!["speedup".into(), format!("{speedup:.2}x"), "1.00x".into()]);
+    t.row(vec!["host→device B/call".into(), up_per_step.to_string(),
+               "(full input set)".into()]);
+    t.row(vec!["device→host B/call".into(), down_per_step.to_string(),
+               "(full output set)".into()]);
+    t.row(vec!["stage: upload".into(), format!("{:.1}ms", st.stage_secs * 1e3),
+               "-".into()]);
+    t.row(vec!["stage: execute".into(), format!("{:.1}ms", st.execute_secs * 1e3),
+               "-".into()]);
+    t.row(vec!["stage: download".into(), format!("{:.1}ms", st.download_secs * 1e3),
+               "-".into()]);
+    t.row(vec!["tuple-fallback steps".into(), st.tuple_fallback_steps.to_string(),
+               "-".into()]);
+    t.print();
+
+    let doc = obj(vec![
+        ("bench", s("bench_train")),
+        ("skipped", Json::Bool(false)),
+        ("quick", Json::Bool(common::quick())),
+        (
+            "dataset",
+            obj(vec![
+                ("name", s("arxiv-like")),
+                ("nodes", num(ds.graph.num_nodes() as f64)),
+                ("edges", num(ds.graph.num_edges() as f64)),
+            ]),
+        ),
+        ("model", s("gcn")),
+        ("mode", s("inner")),
+        ("k", num(k as f64)),
+        ("epochs_per_partition", num(epochs as f64)),
+        ("epochs_executed", num(ses_epochs)),
+        (
+            "session",
+            obj(vec![
+                ("train_secs", num(ses_secs)),
+                ("epochs_per_sec", num(ses_eps)),
+                ("steps", num(st.steps as f64)),
+                ("stage_secs", num(st.stage_secs)),
+                ("execute_secs", num(st.execute_secs)),
+                ("download_secs", num(st.download_secs)),
+                ("bytes_to_device_per_call", num(up_per_step as f64)),
+                ("bytes_to_host_per_call", num(down_per_step as f64)),
+                ("tuple_fallback_steps", num(st.tuple_fallback_steps as f64)),
+            ]),
+        ),
+        (
+            "reference",
+            obj(vec![
+                ("train_secs", num(ref_secs)),
+                ("epochs_per_sec", num(ref_eps)),
+            ]),
+        ),
+        ("speedup", num(speedup)),
+        ("wall_secs", num(wall_secs)),
+    ]);
+    report_json(&args, "bench_train", &doc);
+    println!(
+        "\nshape check: session ≥ reference throughput; per-call downloads \
+         collapse to the loss scalar"
+    );
+}

@@ -3,19 +3,43 @@
 //!
 //! Paper's reported shape: makespan drops sharply with k (no communication
 //! ⇒ near-linear), and Repli adds only a small overhead over Inner.
+//!
+//! Training runs through the coordinator, which drives the device-resident
+//! `ExecSession` path (PR 5) — the same hot path `bench_train` measures in
+//! isolation.
+//!
+//! Flags (after `--` on `cargo bench`), matching `table3_partition_time`:
+//!   --json-out <path>   also write the machine-readable report there
+//!   --threads 1         partitioning-pipeline thread count
+//!   --ks 2,8            k grid override (k=1 is always prepended)
 
 mod common;
 
-use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::benchkit::{report_json, Table};
+use leiden_fusion::cli::Args;
+use leiden_fusion::partition::{PartitionPipeline, Partitioning};
 use leiden_fusion::train::{Mode, ModelKind};
 use leiden_fusion::util::json::{num, obj, s, Json};
 
 fn main() {
+    let args = Args::parse(std::env::args()).unwrap_or_else(|e| {
+        eprintln!("bad bench args: {e}");
+        std::process::exit(2);
+    });
     if common::skip_if_no_artifacts("fig7") {
         return;
     }
+    let threads = args.usize_or("threads", 1).unwrap_or_else(|e| {
+        eprintln!("bad --threads: {e}");
+        std::process::exit(2);
+    });
+    let default_ks: &[usize] = if common::quick() { &[2, 8] } else { &common::KS };
+    let ks = args.usize_list_or("ks", default_ks).unwrap_or_else(|e| {
+        eprintln!("bad --ks: {e}");
+        std::process::exit(2);
+    });
+
     let ds = common::arxiv(12_000);
-    let ks: &[usize] = if common::quick() { &[2, 8] } else { &common::KS };
     println!(
         "arxiv-like: {} nodes, {} edges; GCN, 40 epochs per partition",
         ds.graph.num_nodes(),
@@ -23,7 +47,7 @@ fn main() {
     );
 
     let mut all_ks = vec![1usize];
-    all_ks.extend_from_slice(ks);
+    all_ks.extend_from_slice(&ks);
     let headers = common::k_headers("mode", &all_ks);
     let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
     let mut table = Table::new(
@@ -35,10 +59,14 @@ fn main() {
         let mut row = vec![mode.as_str().to_string()];
         for &k in &all_ks {
             let p = if k == 1 {
-                leiden_fusion::partition::Partitioning::new(vec![0; ds.graph.num_nodes()], 1)
-                    .unwrap()
+                Partitioning::new(vec![0; ds.graph.num_nodes()], 1).unwrap()
             } else {
-                common::partitioning(&ds.graph, "lf", k, 42)
+                PartitionPipeline::parse("lf", 42)
+                    .expect("lf spec parses")
+                    .with_threads(threads)
+                    .run(&ds.graph, k)
+                    .expect("lf partitioning")
+                    .into_partitioning()
             };
             // machines = 1: contention-free per-partition timing (the
             // paper's own sequential emulation — §5 Setup)
@@ -47,6 +75,7 @@ fn main() {
             records.push(obj(vec![
                 ("mode", s(mode.as_str())),
                 ("k", num(k as f64)),
+                ("threads", num(threads as f64)),
                 ("makespan_s", num(rep.max_partition_train_secs)),
                 ("total_s", num(rep.total_train_secs)),
             ]));
@@ -54,6 +83,21 @@ fn main() {
         table.row(row);
     }
     table.print();
-    save_json("fig7_training_time", &Json::Arr(records));
+
+    let doc = obj(vec![
+        ("bench", s("fig7_training_time")),
+        (
+            "dataset",
+            obj(vec![
+                ("name", s("arxiv-like")),
+                ("nodes", num(ds.graph.num_nodes() as f64)),
+                ("edges", num(ds.graph.num_edges() as f64)),
+            ]),
+        ),
+        ("quick", Json::Bool(common::quick())),
+        ("threads", num(threads as f64)),
+        ("entries", Json::Arr(records)),
+    ]);
+    report_json(&args, "fig7_training_time", &doc);
     println!("\nshape check vs paper: makespan falls steeply with k; Repli ≈ Inner + ε");
 }

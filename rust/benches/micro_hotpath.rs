@@ -9,8 +9,10 @@ use leiden_fusion::partition::fusion::{fuse_communities, FusionConfig};
 use leiden_fusion::partition::leiden::{leiden, leiden_fusion as lf, LeidenConfig};
 use leiden_fusion::partition::scratch::NeighborWeights;
 use leiden_fusion::partition::PartitionPipeline;
-use leiden_fusion::runtime::Runtime;
-use leiden_fusion::train::{build_batch, pad_to_bucket, Mode, ModelKind};
+use leiden_fusion::runtime::{Runtime, Tensor};
+use leiden_fusion::train::{
+    build_batch, pad_to_bucket, pad_to_bucket_with, Mode, ModelKind, PadScratch,
+};
 use leiden_fusion::util::json::{obj, s, Json};
 use std::time::Duration;
 
@@ -276,11 +278,38 @@ fn main() {
         );
     }));
 
-    // 5. bucket padding
+    // 5. bucket padding: fresh allocation per call vs the reusable
+    // per-worker scratch (PR 5 — the retry/multi-partition path)
     let batch = build_batch(&ds, &members[0], Mode::Inner, ModelKind::Gcn).unwrap();
     add("pad_to_bucket (n4096/e65536)", bench(1, 20, budget, || {
         std::hint::black_box(pad_to_bucket(&batch, 4096, 65536, 40).unwrap());
     }));
+    let mut pads = PadScratch::new();
+    add("pad_to_bucket (reused scratch)", bench(1, 20, budget, || {
+        // the returned tensors drop at the end of each iteration, so the
+        // next one takes the in-place reuse path
+        std::hint::black_box(
+            pad_to_bucket_with(&batch, 4096, 65536, 40, &mut pads).unwrap(),
+        );
+    }));
+
+    // 5b. Arc-backed tensor clones vs the deep copies they replaced (the
+    // trainer clones 3p+7 tensors per call; the serving engine clones the
+    // params per worker)
+    {
+        let tensors: Vec<Tensor> =
+            (0..8).map(|i| Tensor::f32(vec![i as f32; 64 * 256])).collect();
+        add("tensor list clone (arc refcount)", bench(10, 2000, budget, || {
+            std::hint::black_box(tensors.clone());
+        }));
+        add("tensor list clone (deep-copy baseline)", bench(10, 2000, budget, || {
+            let deep: Vec<Tensor> = tensors
+                .iter()
+                .map(|t| Tensor::f32(t.as_f32().unwrap().to_vec()))
+                .collect();
+            std::hint::black_box(deep);
+        }));
+    }
 
     // 6. PJRT execute round-trip (eval artifact) — requires artifacts
     if common::artifacts_ready() {
@@ -291,12 +320,39 @@ fn main() {
         let padded = pad_to_bucket(&batch, dims.n, dims.e, dims.c).unwrap();
         let params = leiden_fusion::train::trainer::init_params(&exe, 0);
         let mut inputs = params;
-        inputs.push(padded.x);
-        inputs.push(padded.src);
-        inputs.push(padded.dst);
-        inputs.push(padded.ew);
+        inputs.push(padded.x.clone());
+        inputs.push(padded.src.clone());
+        inputs.push(padded.dst.clone());
+        inputs.push(padded.ew.clone());
         add("pjrt eval round-trip", bench(1, 10, budget, || {
             std::hint::black_box(exe.run(&inputs).unwrap());
+        }));
+
+        // 6b. one train call: staged device-resident session vs rebuilding
+        // every literal on the host (PR 5's headline kernel entry)
+        let train_exe = rt.load_for("gcn", "multiclass", "train",
+                                    batch.num_local(), batch.num_directed_edges())
+            .unwrap();
+        let params = leiden_fusion::train::init_params(&train_exe, 0);
+        let mut ref_inputs: Vec<Tensor> = params.clone();
+        ref_inputs.extend(leiden_fusion::train::zeros_like(&params));
+        ref_inputs.extend(leiden_fusion::train::zeros_like(&params));
+        ref_inputs.push(Tensor::f32(vec![0.0]));
+        ref_inputs.push(padded.x.clone());
+        ref_inputs.push(padded.src.clone());
+        ref_inputs.push(padded.dst.clone());
+        ref_inputs.push(padded.ew.clone());
+        ref_inputs.push(padded.y.clone());
+        ref_inputs.push(padded.mask.clone());
+        add("train call (rebuilt literals)", bench(1, 10, budget, || {
+            std::hint::black_box(train_exe.run(&ref_inputs).unwrap());
+        }));
+        let state_len = 3 * train_exe.meta.num_params() + 1;
+        let mut session = rt
+            .session(train_exe, &ref_inputs[..state_len], &ref_inputs[state_len..])
+            .unwrap();
+        add("train call (staged session)", bench(1, 10, budget, || {
+            std::hint::black_box(session.run_step().unwrap());
         }));
     }
 

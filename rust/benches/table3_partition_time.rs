@@ -17,7 +17,7 @@
 
 mod common;
 
-use leiden_fusion::benchkit::{save_json, Table};
+use leiden_fusion::benchkit::{report_json, Table};
 use leiden_fusion::cli::Args;
 use leiden_fusion::partition::PartitionPipeline;
 use leiden_fusion::util::json::{num, obj, s, Json};
@@ -154,13 +154,6 @@ fn main() {
         ),
         ("entries", Json::Arr(records)),
     ]);
-    save_json("table3_partition_time", &doc);
-    if let Some(path) = args.get("json-out") {
-        std::fs::write(path, doc.to_string()).unwrap_or_else(|e| {
-            eprintln!("cannot write {path}: {e}");
-            std::process::exit(1);
-        });
-        println!("\nbench report written to {path}");
-    }
+    report_json(&args, "table3_partition_time", &doc);
     println!("\nshape check vs paper: LF fusion ≪ LPA, decreasing in k");
 }

@@ -146,6 +146,22 @@ pub fn save_json(name: &str, value: &Json) {
     }
 }
 
+/// Persist a bench report: always through [`save_json`], plus an exact
+/// copy to `--json-out <path>` when the flag is present (the CI artifact
+/// / committed trajectory point). Exits non-zero when the explicit
+/// destination cannot be written — a silent miss would break the
+/// artifact chain.
+pub fn report_json(args: &crate::cli::Args, name: &str, doc: &Json) {
+    save_json(name, doc);
+    if let Some(path) = args.get("json-out") {
+        if let Err(e) = std::fs::write(path, doc.to_string()) {
+            eprintln!("cannot write {path}: {e}");
+            std::process::exit(1);
+        }
+        println!("\nbench report written to {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

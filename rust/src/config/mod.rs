@@ -9,7 +9,7 @@
 
 use crate::error::{Error, Result};
 use crate::partition::{PartitionSpec, StageSpec};
-use crate::train::{Mode, ModelKind};
+use crate::train::{ExecPath, Mode, ModelKind};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -152,6 +152,10 @@ pub struct ExperimentConfig {
     pub epochs: usize,
     pub mlp_epochs: usize,
     pub machines: usize,
+    /// PJRT execution strategy for the training loops (`[train] exec =
+    /// "session" | "reference"`, `--exec`): the device-resident session
+    /// (default) or the host round-trip reference path.
+    pub exec: ExecPath,
     pub artifacts_dir: PathBuf,
     /// When set, `train` exports a serving bundle (shards + classifier)
     /// here (`[serve] export_dir`, or `--shards` on the CLI).
@@ -242,6 +246,7 @@ impl Default for ExperimentConfig {
             epochs: 80,
             mlp_epochs: 200,
             machines: 4,
+            exec: ExecPath::Session,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             shards_out: None,
             serve: ServeConfig::default(),
@@ -331,6 +336,7 @@ impl ExperimentConfig {
             epochs: t.int_or("train", "epochs", d.epochs as i64) as usize,
             mlp_epochs: t.int_or("train", "mlp_epochs", d.mlp_epochs as i64) as usize,
             machines: t.int_or("train", "machines", d.machines as i64) as usize,
+            exec: ExecPath::parse(&t.str_or("train", "exec", d.exec.as_str()))?,
             artifacts_dir: match t.get("train", "artifacts_dir") {
                 Some(Value::Str(s)) => PathBuf::from(s),
                 _ => d.artifacts_dir,
@@ -510,6 +516,18 @@ machines = 2
         let t = Toml::parse("[train]\nmode = \"weird\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&t).is_err());
         let t = Toml::parse("[train]\nmodel = \"gat\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn train_exec_key_parses_and_rejects_unknown() {
+        // default: the device-resident session
+        let cfg = ExperimentConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.exec, ExecPath::Session);
+        let t = Toml::parse("[train]\nexec = \"reference\"\n").unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.exec, ExecPath::Reference);
+        let t = Toml::parse("[train]\nexec = \"device\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&t).is_err());
     }
 

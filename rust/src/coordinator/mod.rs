@@ -24,8 +24,8 @@ use crate::error::{Error, Result};
 use crate::partition::{PartitionReport, Partitioning, StageTiming};
 use crate::runtime::Runtime;
 use crate::train::{
-    checkpoint, evaluate_classifier, train_classifier, EmbeddingStore, EvalReport, Mode,
-    ModelKind,
+    checkpoint, evaluate_classifier, train_classifier_path, EmbeddingStore, EvalReport,
+    ExecPath, Mode, ModelKind,
 };
 use crate::util::Stopwatch;
 use std::collections::VecDeque;
@@ -49,6 +49,10 @@ pub struct CoordinatorConfig {
     pub seed: u64,
     /// Re-dispatch attempts for a failed partition.
     pub max_retries: u32,
+    /// PJRT execution strategy for the GNN and MLP training loops
+    /// (default: the device-resident session; `Reference` restores the
+    /// host round-trip for A/B runs and oracle checks).
+    pub exec: ExecPath,
     /// Artifacts directory (manifest + HLO text).
     pub artifacts_dir: PathBuf,
     /// When set, write a serving bundle here: one `LFS1` shard per
@@ -69,6 +73,7 @@ impl CoordinatorConfig {
             mlp_epochs: 200,
             seed: 0,
             max_retries: 1,
+            exec: ExecPath::Session,
             artifacts_dir,
             shard_dir: None,
             inject_failure: None,
@@ -265,12 +270,13 @@ impl Coordinator {
         // not after the full MLP training loop (compilation is cached for
         // the evaluation pass)
         leader_rt.load_for("mlp", dataset.labels.task_name(), "pred", store.n, 0)?;
-        let clf = train_classifier(
+        let clf = train_classifier_path(
             &leader_rt,
             dataset,
             &store,
             self.cfg.mlp_epochs,
             self.cfg.seed ^ 0x11,
+            self.cfg.exec,
         )?;
         let eval = evaluate_classifier(&leader_rt, dataset, &store, &clf)?;
 
@@ -327,19 +333,14 @@ mod tests {
     use super::*;
     use crate::data::karate_dataset;
     use crate::partition::leiden::leiden_fusion;
-    use crate::runtime::default_artifacts_dir;
+    use crate::testing::artifacts_if_built;
 
     fn cfg_if_built() -> Option<CoordinatorConfig> {
-        let dir = default_artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            let mut c = CoordinatorConfig::new(dir);
-            c.epochs = 10;
-            c.mlp_epochs = 30;
-            c.machines = 2;
-            Some(c)
-        } else {
-            None
-        }
+        let mut c = CoordinatorConfig::new(artifacts_if_built()?);
+        c.epochs = 10;
+        c.mlp_epochs = 30;
+        c.machines = 2;
+        Some(c)
     }
 
     #[test]
@@ -369,6 +370,28 @@ mod tests {
             .map(|s| s.name.as_str())
             .collect();
         assert_eq!(names, vec!["leiden", "fusion", "validate"]);
+    }
+
+    #[test]
+    fn session_and_reference_exec_agree_end_to_end() {
+        // Same seeds, same partitioning: the device-resident session and
+        // the host round-trip must land on identical metrics (the session
+        // is bit-exact per step, so the whole pipeline agrees).
+        let Some(cfg) = cfg_if_built() else { return };
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        let mut ref_cfg = cfg.clone();
+        ref_cfg.exec = ExecPath::Reference;
+        ref_cfg.machines = 1;
+        let mut ses_cfg = cfg;
+        ses_cfg.machines = 1;
+        let a = Coordinator::new(ses_cfg).run(&ds, &p).unwrap();
+        let b = Coordinator::new(ref_cfg).run(&ds, &p).unwrap();
+        assert_eq!(a.eval.test_metric, b.eval.test_metric);
+        assert_eq!(a.eval.val_metric, b.eval.val_metric);
+        for (x, y) in a.eval.mlp_losses.iter().zip(&b.eval.mlp_losses) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

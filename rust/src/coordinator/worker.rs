@@ -7,7 +7,9 @@ use crate::data::Dataset;
 use crate::error::Result;
 use crate::runtime::Runtime;
 use crate::graph::SubgraphScratch;
-use crate::train::{build_batch_with, train_partition, TrainOptions, TrainedPartition};
+use crate::train::{
+    build_batch_with, train_partition_with, PadScratch, TrainOptions, TrainedPartition,
+};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
@@ -43,9 +45,12 @@ pub fn worker_loop(
         }
     };
 
-    // One subgraph-extraction scratch reused across every partition this
-    // machine trains (the dense id map allocates once, not per job).
+    // One subgraph-extraction scratch and one bucket-padding scratch
+    // reused across every partition this machine trains (the dense id map
+    // and the padded tensor slabs allocate once, not per job — retries of
+    // a failed partition reuse them too).
     let mut scratch = SubgraphScratch::new();
+    let mut pads = PadScratch::new();
     loop {
         if remaining.load(Ordering::Acquire) == 0 {
             break;
@@ -59,7 +64,7 @@ pub fn worker_loop(
             }
         };
         let _ = tx.send(WorkerEvent::Started { worker, part_id: job.part_id });
-        match run_job(&rt, dataset, &job, cfg, &mut scratch) {
+        match run_job(&rt, dataset, &job, cfg, &mut scratch, &mut pads) {
             Ok((nodes, result)) => {
                 if tx
                     .send(WorkerEvent::Finished { worker, part_id: job.part_id, nodes, result })
@@ -90,6 +95,7 @@ fn run_job(
     job: &Job,
     cfg: &CoordinatorConfig,
     scratch: &mut SubgraphScratch,
+    pads: &mut PadScratch,
 ) -> Result<(Vec<crate::graph::NodeId>, TrainedPartition)> {
     // Test hook: simulate a machine fault on the first attempt.
     if cfg.inject_failure == Some(job.part_id) && job.attempt == 0 {
@@ -103,8 +109,9 @@ fn run_job(
         epochs: cfg.epochs,
         seed: cfg.seed ^ (job.part_id as u64) << 8,
         log_every: 0,
+        exec: cfg.exec,
     };
-    let result = train_partition(rt, &batch, &opts)?;
+    let result = train_partition_with(rt, &batch, &opts, pads)?;
     // Owned nodes only (prefix of sub.nodes) — replicas are discarded.
     let nodes = batch.sub.nodes[..batch.sub.num_owned].to_vec();
     Ok((nodes, result))

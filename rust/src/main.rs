@@ -49,6 +49,8 @@ USAGE:
   repro train     [--config file.toml] [--dataset arxiv] [--spec SPEC | --method NAME]
                   [--k 4] [--model gcn|sage] [--mode inner|repli] [--epochs 80]
                   [--machines 4] [--n 0] [--seed 42] [--threads 1] [--shards dir]
+                  [--exec session|reference]   (PJRT path: device-resident
+                   session (default) or the host round-trip reference loop)
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
   repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
                   [--cache-stripes 8] [--artifacts dir] [--warm]
@@ -253,6 +255,9 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.dataset_n = args.usize_or("n", cfg.dataset_n)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.partition_threads = args.usize_or("threads", cfg.partition_threads)?;
+    if let Some(e) = args.get("exec") {
+        cfg.exec = leiden_fusion::train::ExecPath::parse(e)?;
+    }
     if let Some(dir) = args.get("shards") {
         cfg.shards_out = Some(PathBuf::from(dir));
     }
@@ -274,6 +279,7 @@ fn run_experiment(
     ccfg.epochs = cfg.epochs;
     ccfg.mlp_epochs = cfg.mlp_epochs;
     ccfg.seed = cfg.seed;
+    ccfg.exec = cfg.exec;
     ccfg.shard_dir = cfg.shards_out.clone();
     let report = Coordinator::new(ccfg).run_report(ds, &preport)?;
     Ok((preport, report))
@@ -283,14 +289,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = experiment_config(args)?;
     let ds = load_dataset(&cfg.dataset, cfg.dataset_n, cfg.seed)?;
     println!(
-        "training {} on {}: k={} model={} mode={} epochs={} machines={}",
+        "training {} on {}: k={} model={} mode={} epochs={} machines={} exec={}",
         cfg.spec,
         ds.name,
         cfg.k,
         cfg.model.as_str(),
         cfg.mode.as_str(),
         cfg.epochs,
-        cfg.machines
+        cfg.machines,
+        cfg.exec.as_str()
     );
     let (preport, report) = run_experiment(&cfg, &ds)?;
     println!("partition stages: {}", preport.stage_summary());

@@ -4,6 +4,21 @@
 //! [`Runtime`] is **thread-local by construction**: every coordinator
 //! worker builds its own runtime and compiles the (few) artifacts it needs.
 //! Compilation results are cached per-runtime keyed by artifact name.
+//!
+//! Two execution paths (DESIGN.md "Training"):
+//!
+//! * [`Executable::run`] — the host round-trip: every input is rebuilt as
+//!   a literal, every output is downloaded. Simple, stateless, and kept as
+//!   the **reference** path the device-resident session is bit-exactness-
+//!   tested against.
+//! * [`ExecSession`] — stages invariant inputs as device buffers **once**,
+//!   keeps the mutable state block (params + Adam moments + step counter)
+//!   resident on the device between calls, and downloads only the loss
+//!   scalar per step. This is the training hot path.
+//!
+//! [`Tensor`] is `Arc`-backed: cloning a tensor is a refcount bump, never
+//! a data copy. Tensors are immutable once built; the only sanctioned
+//! mutation is [`Tensor::make_mut_f32`], which is copy-on-write.
 
 use super::manifest::{ArtifactMeta, DType, Manifest};
 use crate::error::{Error, Result};
@@ -11,15 +26,32 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Host-side tensor handed to / received from an executable.
+///
+/// Backed by `Arc<[_]>`: `clone()` bumps a refcount (the trainer clones
+/// `3p + 7` of these per call — with `Vec` backing that was a full deep
+/// copy of params, both moment vectors, and the padded feature matrix).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
+    F32(Arc<[f32]>),
+    I32(Arc<[i32]>),
 }
 
 impl Tensor {
+    /// Build an f32 tensor from a freshly computed buffer (one move, no
+    /// copy beyond the `Arc` allocation).
+    pub fn f32(v: Vec<f32>) -> Tensor {
+        Tensor::F32(v.into())
+    }
+
+    /// Build an i32 tensor from a freshly computed buffer.
+    pub fn i32(v: Vec<i32>) -> Tensor {
+        Tensor::I32(v.into())
+    }
+
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32(v) => v.len(),
@@ -29,6 +61,11 @@ impl Tensor {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Bytes this tensor occupies on the wire (both dtypes are 4-byte).
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
@@ -50,6 +87,33 @@ impl Tensor {
         v.first().copied().ok_or_else(|| Error::Runtime("empty tensor".into()))
     }
 
+    /// Mutable access to an f32 tensor, copy-on-write: a uniquely owned
+    /// buffer is handed out in place; a shared one is detached into a
+    /// fresh allocation first so existing clones never observe the write.
+    /// (The serving engine rewrites its reusable bucket-padded `x` buffer
+    /// through this — unique in steady state, so no copies there.)
+    pub fn make_mut_f32(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32(a) => {
+                if Arc::get_mut(a).is_none() {
+                    *a = a.to_vec().into();
+                }
+                Ok(Arc::get_mut(a).expect("freshly detached arc is unique"))
+            }
+            _ => Err(Error::Runtime("expected f32 tensor".into())),
+        }
+    }
+
+    /// Whether two tensors share one backing allocation (a clone does;
+    /// the micro benches and clone-contract tests assert this).
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        match (self, other) {
+            (Tensor::F32(a), Tensor::F32(b)) => Arc::ptr_eq(a, b),
+            (Tensor::I32(a), Tensor::I32(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+
     fn dtype(&self) -> DType {
         match self {
             Tensor::F32(_) => DType::F32,
@@ -58,15 +122,61 @@ impl Tensor {
     }
 }
 
+fn tensor_from_literal(lit: &xla::Literal, dtype: DType) -> Result<Tensor> {
+    Ok(match dtype {
+        DType::F32 => Tensor::f32(lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::i32(lit.to_vec::<i32>()?),
+    })
+}
+
 /// A compiled artifact bound to its metadata.
 pub struct Executable {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
+    /// Per-input literal dims in `i64`, precomputed at load time so no
+    /// `run`/staging call re-derives them from the manifest shapes.
+    input_dims: Vec<Vec<i64>>,
 }
 
 impl Executable {
+    /// Validate one host tensor against the artifact's input spec and
+    /// build its (reshaped) literal.
+    fn literal_of(&self, idx: usize, t: &Tensor) -> Result<xla::Literal> {
+        let spec = &self.meta.inputs[idx];
+        if t.len() != spec.num_elements() {
+            return Err(Error::Runtime(format!(
+                "{}: input {} has {} elements, expects {} {:?}",
+                self.meta.name,
+                spec.name,
+                t.len(),
+                spec.num_elements(),
+                spec.shape
+            )));
+        }
+        if t.dtype() != spec.dtype {
+            return Err(Error::Runtime(format!(
+                "{}: input {} dtype mismatch",
+                self.meta.name, spec.name
+            )));
+        }
+        let lit = match t {
+            Tensor::F32(v) => xla::Literal::vec1(v.as_ref()),
+            Tensor::I32(v) => xla::Literal::vec1(v.as_ref()),
+        };
+        if spec.shape.len() == 1 {
+            Ok(lit)
+        } else {
+            // covers scalars too: their precomputed dim list is empty
+            Ok(lit.reshape(&self.input_dims[idx])?)
+        }
+    }
+
     /// Execute with host tensors; validates shapes/dtypes against the
     /// manifest and returns outputs in manifest order.
+    ///
+    /// This is the **reference** host round-trip: every input is uploaded
+    /// and every output downloaded on every call. Training uses
+    /// [`ExecSession`] instead; serving and one-shot eval calls stay here.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         if inputs.len() != self.meta.inputs.len() {
             return Err(Error::Runtime(format!(
@@ -77,40 +187,8 @@ impl Executable {
             )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
-        for (t, spec) in inputs.iter().zip(&self.meta.inputs) {
-            if t.len() != spec.num_elements() {
-                return Err(Error::Runtime(format!(
-                    "{}: input {} has {} elements, expects {} {:?}",
-                    self.meta.name,
-                    spec.name,
-                    t.len(),
-                    spec.num_elements(),
-                    spec.shape
-                )));
-            }
-            if t.dtype() != spec.dtype {
-                return Err(Error::Runtime(format!(
-                    "{}: input {} dtype mismatch",
-                    self.meta.name, spec.name
-                )));
-            }
-            let dims: Vec<i64> = if spec.shape.is_empty() {
-                vec![]
-            } else {
-                spec.shape.iter().map(|&d| d as i64).collect()
-            };
-            let lit = match t {
-                Tensor::F32(v) => xla::Literal::vec1(v),
-                Tensor::I32(v) => xla::Literal::vec1(v),
-            };
-            let lit = if spec.shape.len() == 1 {
-                lit
-            } else if spec.shape.is_empty() {
-                lit.reshape(&[])?
-            } else {
-                lit.reshape(&dims)?
-            };
-            literals.push(lit);
+        for (i, t) in inputs.iter().enumerate() {
+            literals.push(self.literal_of(i, t)?);
         }
         let result = self.exe.execute::<xla::Literal>(&literals)?;
         let tuple = result[0][0].to_literal_sync()?;
@@ -126,13 +204,307 @@ impl Executable {
         parts
             .into_iter()
             .zip(&self.meta.outputs)
-            .map(|(lit, spec)| {
-                Ok(match spec.dtype {
-                    DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
-                    DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
-                })
-            })
+            .map(|(lit, spec)| tensor_from_literal(&lit, spec.dtype))
             .collect()
+    }
+}
+
+/// Transfer and phase counters of an [`ExecSession`] — the raw numbers
+/// behind `BENCH_train.json`.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// Completed executions (`run_step` + `run_outputs`).
+    pub steps: usize,
+    /// Host→device staging time: the one-time invariant upload plus any
+    /// tuple-fallback state re-upload.
+    pub stage_secs: f64,
+    /// Time inside PJRT execution calls.
+    pub execute_secs: f64,
+    /// Device→host download time (loss scalars, downloaded outputs, the
+    /// final state block).
+    pub download_secs: f64,
+    pub bytes_to_device: u64,
+    pub bytes_to_host: u64,
+    /// Steps that went through the tuple-download fallback because the
+    /// PJRT plugin returned one tuple buffer instead of untupled
+    /// per-output buffers (see [`ExecSession::run_step`]).
+    pub tuple_fallback_steps: usize,
+}
+
+/// Device-resident execution session.
+///
+/// Construction ([`Runtime::session`]) splits the artifact's inputs into a
+/// leading mutable **state block** and trailing **invariant inputs**, and
+/// uploads both as device buffers once. [`ExecSession::run_step`] then
+/// executes with no host-side tensor work at all: outputs feed back as the
+/// next call's state on the device, and only the trailing loss scalar is
+/// downloaded. [`ExecSession::state_tensors`] downloads the state block
+/// once at the end (final params); [`ExecSession::run_outputs`] serves the
+/// stateless eval/predict shape (`state = []`, all outputs downloaded).
+///
+/// PJRT plugins differ on whether an execution's tuple result comes back
+/// untupled (one buffer per output) or as a single tuple buffer. The fast
+/// path requires the untupled shape; when the plugin hands back one tuple
+/// buffer the session still works — it downloads the tuple, takes the
+/// loss, and re-stages the state — and counts the step in
+/// [`ExecStats::tuple_fallback_steps`] so benches surface which path ran.
+pub struct ExecSession {
+    client: xla::PjRtClient,
+    exe: Rc<Executable>,
+    /// Device buffers of the mutable state block (inputs `0..state_len`).
+    state: Vec<xla::PjRtBuffer>,
+    /// Device buffers of the invariant inputs (inputs `state_len..`),
+    /// uploaded once and reused every call.
+    staged: Vec<xla::PjRtBuffer>,
+    stats: ExecStats,
+}
+
+fn upload(
+    client: &xla::PjRtClient,
+    exe: &Executable,
+    idx: usize,
+    t: &Tensor,
+    stats: &mut ExecStats,
+) -> Result<xla::PjRtBuffer> {
+    let lit = exe.literal_of(idx, t)?;
+    let buf = client.buffer_from_host_literal(None, &lit)?;
+    stats.bytes_to_device += t.byte_len() as u64;
+    Ok(buf)
+}
+
+impl ExecSession {
+    fn new(
+        client: xla::PjRtClient,
+        exe: Rc<Executable>,
+        state: &[Tensor],
+        invariant: &[Tensor],
+    ) -> Result<ExecSession> {
+        let meta = &exe.meta;
+        if state.len() + invariant.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: session got {} state + {} invariant inputs, artifact \
+                 expects {}",
+                meta.name,
+                state.len(),
+                invariant.len(),
+                meta.inputs.len()
+            )));
+        }
+        if !state.is_empty() && meta.outputs.len() < state.len() + 1 {
+            return Err(Error::Runtime(format!(
+                "{}: {} state inputs but only {} outputs — a stateful \
+                 session needs the updated state plus a trailing loss",
+                meta.name,
+                state.len(),
+                meta.outputs.len()
+            )));
+        }
+        let mut stats = ExecStats::default();
+        let sw = Instant::now();
+        let mut state_bufs = Vec::with_capacity(state.len());
+        for (i, t) in state.iter().enumerate() {
+            state_bufs.push(upload(&client, &exe, i, t, &mut stats)?);
+        }
+        let mut staged = Vec::with_capacity(invariant.len());
+        for (j, t) in invariant.iter().enumerate() {
+            staged.push(upload(&client, &exe, state.len() + j, t, &mut stats)?);
+        }
+        stats.stage_secs += sw.elapsed().as_secs_f64();
+        Ok(ExecSession { client, exe, state: state_bufs, staged, stats })
+    }
+
+    /// The artifact this session drives.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.exe.meta
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    fn execute(&mut self) -> Result<Vec<xla::PjRtBuffer>> {
+        let sw = Instant::now();
+        let args: Vec<&xla::PjRtBuffer> =
+            self.state.iter().chain(self.staged.iter()).collect();
+        let mut result = self.exe.exe.execute_b(&args)?;
+        self.stats.execute_secs += sw.elapsed().as_secs_f64();
+        if result.is_empty() || result[0].is_empty() {
+            return Err(Error::Runtime(format!(
+                "{}: execution returned no buffers",
+                self.exe.meta.name
+            )));
+        }
+        Ok(result.swap_remove(0))
+    }
+
+    /// One training call: execute, feed the updated state back as the next
+    /// call's inputs **on the device**, download and return the loss
+    /// scalar. Steady state performs zero host-side tensor copies.
+    pub fn run_step(&mut self) -> Result<f32> {
+        let p = self.state.len();
+        if p == 0 {
+            return Err(Error::Runtime(format!(
+                "{}: run_step needs a mutable state block (use run_outputs \
+                 for stateless artifacts)",
+                self.exe.meta.name
+            )));
+        }
+        let mut outs = self.execute()?;
+        let n_out = self.exe.meta.outputs.len();
+        let loss = if outs.len() == n_out {
+            // Untupled outputs: the state prefix stays on device; only the
+            // trailing loss scalar crosses back to the host.
+            let sw = Instant::now();
+            let lit = outs.last().expect("non-empty by arity check").to_literal_sync()?;
+            let loss = lit
+                .to_vec::<f32>()?
+                .first()
+                .copied()
+                .ok_or_else(|| Error::Runtime("empty loss output".into()))?;
+            self.stats.download_secs += sw.elapsed().as_secs_f64();
+            self.stats.bytes_to_host += 4;
+            outs.truncate(p);
+            self.state = outs;
+            loss
+        } else if outs.len() == 1 {
+            self.tuple_fallback_step(&outs[0])?
+        } else {
+            return Err(Error::Runtime(format!(
+                "{}: got {} output buffers, manifest says {}",
+                self.exe.meta.name,
+                outs.len(),
+                n_out
+            )));
+        };
+        self.stats.steps += 1;
+        Ok(loss)
+    }
+
+    /// `run_step` for a plugin that returned one tuple buffer: download
+    /// the tuple, take the loss, re-stage the state block.
+    fn tuple_fallback_step(&mut self, tuple_buf: &xla::PjRtBuffer) -> Result<f32> {
+        let p = self.state.len();
+        let meta = &self.exe.meta;
+        self.stats.tuple_fallback_steps += 1;
+        let sw = Instant::now();
+        let tuple = tuple_buf.to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} outputs, manifest says {}",
+                meta.name,
+                parts.len(),
+                meta.outputs.len()
+            )));
+        }
+        let out_bytes: u64 =
+            meta.outputs.iter().map(|s| 4 * s.num_elements() as u64).sum();
+        self.stats.bytes_to_host += out_bytes;
+        self.stats.download_secs += sw.elapsed().as_secs_f64();
+        let loss = parts
+            .last()
+            .expect("outputs non-empty by construction check")
+            .to_vec::<f32>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Runtime("empty loss output".into()))?;
+        let sw = Instant::now();
+        let mut new_state = Vec::with_capacity(p);
+        for lit in parts.iter().take(p) {
+            new_state.push(self.client.buffer_from_host_literal(None, lit)?);
+        }
+        let state_bytes: u64 =
+            meta.inputs.iter().take(p).map(|s| 4 * s.num_elements() as u64).sum();
+        self.stats.bytes_to_device += state_bytes;
+        self.stats.stage_secs += sw.elapsed().as_secs_f64();
+        self.state = new_state;
+        Ok(loss)
+    }
+
+    /// Decompose a downloaded tuple literal into per-output tensors (the
+    /// tuple-buffer plugin shape, counted as a fallback step).
+    fn untuple_outputs(&mut self, tuple: xla::Literal) -> Result<Vec<Tensor>> {
+        self.stats.tuple_fallback_steps += 1;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.exe.meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: got {} outputs, manifest says {}",
+                self.exe.meta.name,
+                parts.len(),
+                self.exe.meta.outputs.len()
+            )));
+        }
+        let mut ts = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.iter().zip(&self.exe.meta.outputs) {
+            ts.push(tensor_from_literal(lit, spec.dtype)?);
+        }
+        Ok(ts)
+    }
+
+    /// Execute once over the staged inputs and download **every** output —
+    /// the eval/predict shape. Does not touch the state block (normally
+    /// used with `state = []`).
+    pub fn run_outputs(&mut self) -> Result<Vec<Tensor>> {
+        let outs = self.execute()?;
+        let n_out = self.exe.meta.outputs.len();
+        let sw = Instant::now();
+        let tensors: Vec<Tensor> = if outs.len() == 1 {
+            // One buffer is ambiguous when the artifact also has one
+            // output (the mlp `pred` shape): an untupled plain array and
+            // a tuple buffer arrive with the same count. Download once,
+            // try the plain read first (`to_vec` borrows, so a tuple
+            // literal fails it without consuming anything), then fall
+            // back to tuple decomposition.
+            let lit = outs[0].to_literal_sync()?;
+            let plain = if n_out == 1 {
+                let spec = &self.exe.meta.outputs[0];
+                tensor_from_literal(&lit, spec.dtype)
+                    .ok()
+                    .filter(|t| t.len() == spec.num_elements())
+            } else {
+                None
+            };
+            match plain {
+                Some(t) => vec![t],
+                None => self.untuple_outputs(lit)?,
+            }
+        } else if outs.len() == n_out {
+            let mut ts = Vec::with_capacity(outs.len());
+            for (buf, spec) in outs.iter().zip(&self.exe.meta.outputs) {
+                let lit = buf.to_literal_sync()?;
+                ts.push(tensor_from_literal(&lit, spec.dtype)?);
+            }
+            ts
+        } else {
+            return Err(Error::Runtime(format!(
+                "{}: got {} output buffers, manifest says {}",
+                self.exe.meta.name,
+                outs.len(),
+                n_out
+            )));
+        };
+        let bytes: u64 = tensors.iter().map(|t| t.byte_len() as u64).sum();
+        self.stats.bytes_to_host += bytes;
+        self.stats.download_secs += sw.elapsed().as_secs_f64();
+        self.stats.steps += 1;
+        Ok(tensors)
+    }
+
+    /// Download the current state block (params, moments, step counter) as
+    /// host tensors — the once-at-the-end transfer of a training run.
+    pub fn state_tensors(&mut self) -> Result<Vec<Tensor>> {
+        let sw = Instant::now();
+        let mut out = Vec::with_capacity(self.state.len());
+        let mut bytes = 0u64;
+        for (buf, spec) in self.state.iter().zip(&self.exe.meta.inputs) {
+            let lit = buf.to_literal_sync()?;
+            let t = tensor_from_literal(&lit, spec.dtype)?;
+            bytes += t.byte_len() as u64;
+            out.push(t);
+        }
+        self.stats.bytes_to_host += bytes;
+        self.stats.download_secs += sw.elapsed().as_secs_f64();
+        Ok(out)
     }
 }
 
@@ -155,7 +527,8 @@ impl Runtime {
         &self.manifest
     }
 
-    /// Load + compile an artifact by name (cached).
+    /// Load + compile an artifact by name (cached). Per-input literal
+    /// dims are precomputed here, not re-derived on every execution.
     pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
@@ -165,7 +538,12 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
-        let wrapped = Rc::new(Executable { meta, exe });
+        let input_dims = meta
+            .inputs
+            .iter()
+            .map(|spec| spec.shape.iter().map(|&d| d as i64).collect())
+            .collect();
+        let wrapped = Rc::new(Executable { meta, exe, input_dims });
         self.cache.borrow_mut().insert(name.to_string(), wrapped.clone());
         Ok(wrapped)
     }
@@ -182,35 +560,70 @@ impl Runtime {
         let name = self.manifest.select(model, task, role, n, e)?.name.clone();
         self.load(&name)
     }
+
+    /// Open a device-resident [`ExecSession`] over `exe`: `state` maps to
+    /// the leading mutable inputs (fed back between steps), `invariant` to
+    /// the trailing inputs (staged once). Pass `state = &[]` for the
+    /// stateless eval/predict shape.
+    pub fn session(
+        &self,
+        exe: Rc<Executable>,
+        state: &[Tensor],
+        invariant: &[Tensor],
+    ) -> Result<ExecSession> {
+        ExecSession::new(self.client.clone(), exe, state, invariant)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
-
-    fn artifacts_dir() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn runtime_if_built() -> Option<Runtime> {
-        let dir = artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Runtime::new(&dir).expect("runtime"))
-        } else {
-            None
-        }
-    }
+    use crate::testing::runtime_if_built;
 
     fn zeros_for(meta: &ArtifactMeta) -> Vec<Tensor> {
         meta.inputs
             .iter()
             .map(|s| match s.dtype {
-                DType::F32 => Tensor::F32(vec![0.0; s.num_elements()]),
-                DType::I32 => Tensor::I32(vec![0; s.num_elements()]),
+                DType::F32 => Tensor::f32(vec![0.0; s.num_elements()]),
+                DType::I32 => Tensor::i32(vec![0; s.num_elements()]),
             })
             .collect()
     }
+
+    // ---- Tensor clone contract (artifact-free) ------------------------
+
+    #[test]
+    fn clone_is_refcount_bump_not_deep_copy() {
+        let a = Tensor::f32(vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert!(a.shares_storage(&b), "clone must share the allocation");
+        assert_eq!(a, b);
+        let c = Tensor::f32(vec![1.0, 2.0, 3.0]);
+        assert!(!a.shares_storage(&c), "independent tensors don't share");
+        assert_eq!(a, c, "equality is by value, not by pointer");
+        let d = Tensor::i32(vec![1, 2, 3]);
+        assert!(!a.shares_storage(&d));
+    }
+
+    #[test]
+    fn make_mut_is_copy_on_write() {
+        let mut a = Tensor::f32(vec![1.0, 2.0]);
+        // unique: mutate in place, no reallocation
+        let before = a.as_f32().unwrap().as_ptr();
+        a.make_mut_f32().unwrap()[0] = 9.0;
+        assert_eq!(a.as_f32().unwrap(), &[9.0, 2.0]);
+        assert_eq!(a.as_f32().unwrap().as_ptr(), before);
+        // shared: writer detaches, the clone keeps the old values
+        let b = a.clone();
+        a.make_mut_f32().unwrap()[1] = 7.0;
+        assert_eq!(a.as_f32().unwrap(), &[9.0, 7.0]);
+        assert_eq!(b.as_f32().unwrap(), &[9.0, 2.0]);
+        assert!(!a.shares_storage(&b));
+        // dtype mismatch errors
+        assert!(Tensor::i32(vec![1]).make_mut_f32().is_err());
+    }
+
+    // ---- compiled-artifact tests (skip without `make artifacts`) ------
 
     #[test]
     fn compiles_and_runs_smoke_eval() {
@@ -237,8 +650,33 @@ mod tests {
         let exe = rt.load("gcn_smoke_eval").unwrap();
         assert!(exe.run(&[]).is_err());
         let mut bad = zeros_for(&exe.meta);
-        bad[0] = Tensor::F32(vec![0.0; 3]);
+        bad[0] = Tensor::f32(vec![0.0; 3]);
         assert!(exe.run(&bad).is_err());
+    }
+
+    /// Build the smoke-train inputs the session tests share: small-random
+    /// params, structured features, full mask, cycling labels.
+    fn smoke_train_inputs(exe: &Executable) -> Vec<Tensor> {
+        let meta = &exe.meta;
+        let p = meta.num_params();
+        let mut inputs = zeros_for(meta);
+        let mut seed = 1u64;
+        for t in inputs.iter_mut().take(p) {
+            for x in t.make_mut_f32().unwrap() {
+                seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+                *x = ((seed >> 33) as f32 / 2e9 - 1.0) * 0.2;
+            }
+        }
+        let idx_x = meta.inputs.iter().position(|s| s.name == "x").unwrap();
+        for (i, x) in inputs[idx_x].make_mut_f32().unwrap().iter_mut().enumerate() {
+            *x = ((i % 7) as f32 - 3.0) * 0.1;
+        }
+        let idx_mask = meta.inputs.iter().position(|s| s.name == "mask").unwrap();
+        inputs[idx_mask] = Tensor::f32(vec![1.0; meta.dims.n]);
+        let idx_y = meta.inputs.iter().position(|s| s.name == "y").unwrap();
+        inputs[idx_y] =
+            Tensor::i32((0..meta.dims.n as i32).map(|i| i % meta.dims.c as i32).collect());
+        inputs
     }
 
     #[test]
@@ -246,31 +684,8 @@ mod tests {
         // run two train calls; loss must be finite and change
         let Some(rt) = runtime_if_built() else { return };
         let exe = rt.load("gcn_smoke_train").unwrap();
-        let meta = &exe.meta;
-        let p = meta.num_params();
-        let mut inputs = zeros_for(meta);
-        // init params small-random, features nonzero, mask on
-        let mut seed = 1u64;
-        for t in inputs.iter_mut().take(p) {
-            if let Tensor::F32(v) = t {
-                for x in v.iter_mut() {
-                    seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
-                    *x = ((seed >> 33) as f32 / 2e9 - 1.0) * 0.2;
-                }
-            }
-        }
-        let idx_x = meta.inputs.iter().position(|s| s.name == "x").unwrap();
-        if let Tensor::F32(v) = &mut inputs[idx_x] {
-            for (i, x) in v.iter_mut().enumerate() {
-                *x = ((i % 7) as f32 - 3.0) * 0.1;
-            }
-        }
-        let idx_mask = meta.inputs.iter().position(|s| s.name == "mask").unwrap();
-        inputs[idx_mask] = Tensor::F32(vec![1.0; meta.dims.n]);
-        let idx_y = meta.inputs.iter().position(|s| s.name == "y").unwrap();
-        inputs[idx_y] =
-            Tensor::I32((0..meta.dims.n as i32).map(|i| i % meta.dims.c as i32).collect());
-
+        let p = exe.meta.num_params();
+        let mut inputs = smoke_train_inputs(&exe);
         let out1 = exe.run(&inputs).unwrap();
         let loss1 = out1.last().unwrap().scalar_f32().unwrap();
         // feed updated state back in
@@ -281,5 +696,60 @@ mod tests {
         let loss2 = out2.last().unwrap().scalar_f32().unwrap();
         assert!(loss1.is_finite() && loss2.is_finite());
         assert!(loss2 < loss1, "loss did not decrease: {loss1} → {loss2}");
+    }
+
+    #[test]
+    fn session_matches_host_roundtrip_bit_exactly() {
+        let Some(rt) = runtime_if_built() else { return };
+        let exe = rt.load("gcn_smoke_train").unwrap();
+        let p = exe.meta.num_params();
+        let state_len = 3 * p + 1;
+        let inputs = smoke_train_inputs(&exe);
+
+        // reference: host round-trip, state fed back through literals
+        let mut ref_inputs = inputs.clone();
+        let mut ref_losses = Vec::new();
+        for _ in 0..4 {
+            let out = exe.run(&ref_inputs).unwrap();
+            ref_losses.push(out.last().unwrap().scalar_f32().unwrap());
+            for (i, t) in out.into_iter().take(state_len).enumerate() {
+                ref_inputs[i] = t;
+            }
+        }
+
+        // session: state resident on device
+        let mut sess = rt
+            .session(exe.clone(), &inputs[..state_len], &inputs[state_len..])
+            .unwrap();
+        let losses: Vec<f32> = (0..4).map(|_| sess.run_step().unwrap()).collect();
+        for (i, (a, b)) in losses.iter().zip(&ref_losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "loss {i}: {a} vs {b}");
+        }
+        let final_state = sess.state_tensors().unwrap();
+        for (i, (a, b)) in final_state.iter().zip(&ref_inputs).enumerate() {
+            assert_eq!(a, b, "state tensor {i} diverged");
+        }
+        let st = sess.stats();
+        assert_eq!(st.steps, 4);
+        assert!(st.bytes_to_host > 0 && st.bytes_to_device > 0);
+        if st.tuple_fallback_steps == 0 {
+            // fast path: only the loss scalar crossed back per step (the
+            // rest of bytes_to_host is the final state download)
+            let state_bytes: u64 = final_state.iter().map(|t| t.byte_len() as u64).sum();
+            assert_eq!(st.bytes_to_host, 4 * 4 + state_bytes);
+        }
+    }
+
+    #[test]
+    fn session_rejects_bad_state_split() {
+        let Some(rt) = runtime_if_built() else { return };
+        let exe = rt.load("gcn_smoke_train").unwrap();
+        let inputs = zeros_for(&exe.meta);
+        // arity mismatch: one input missing
+        assert!(rt.session(exe.clone(), &inputs[..2], &inputs[3..]).is_err());
+        // stateless session over a train artifact is fine to build...
+        let mut sess = rt.session(exe.clone(), &[], &inputs).unwrap();
+        // ...but run_step needs a state block
+        assert!(sess.run_step().is_err());
     }
 }

@@ -205,17 +205,9 @@ impl Manifest {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     fn load_if_built() -> Option<Manifest> {
-        let dir = artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Manifest::load(&dir).expect("manifest parses"))
-        } else {
-            None
-        }
+        let dir = crate::testing::artifacts_if_built()?;
+        Some(Manifest::load(&dir).expect("manifest parses"))
     }
 
     #[test]

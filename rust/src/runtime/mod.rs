@@ -4,7 +4,7 @@
 pub mod client;
 pub mod manifest;
 
-pub use client::{Executable, Runtime, Tensor};
+pub use client::{ExecSession, ExecStats, Executable, Runtime, Tensor};
 pub use manifest::{ArtifactMeta, DType, Dims, Manifest, TensorSpec};
 
 use std::path::PathBuf;

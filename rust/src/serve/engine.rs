@@ -471,11 +471,12 @@ fn worker_loop(wid: usize, shared: Arc<Shared>) {
         dims.f,
         dims.c
     );
-    // Reusable PJRT input list: params are cloned once per worker, and the
-    // final slot is the bucket-sized `x` buffer rewritten per batch — the
-    // hot path allocates nothing.
+    // Reusable PJRT input list: the param clones are refcount bumps on the
+    // shared Arc-backed tensors, and the final slot is the bucket-sized
+    // `x` buffer rewritten in place per batch (uniquely owned, so
+    // `make_mut_f32` never copies) — the hot path allocates nothing.
     let mut inputs: Vec<Tensor> = shared.params.iter().cloned().collect();
-    inputs.push(Tensor::F32(vec![0f32; dims.n * dims.f]));
+    inputs.push(Tensor::f32(vec![0f32; dims.n * dims.f]));
     let mut prev_rows = 0usize;
 
     loop {
@@ -550,10 +551,11 @@ fn process_batch(
     // load) are answered individually with an error.
     let t_gather = Instant::now();
     {
-        let x = match inputs.last_mut() {
-            Some(Tensor::F32(x)) => x,
-            _ => unreachable!("worker inputs always end with the f32 x buffer"),
-        };
+        let x = inputs
+            .last_mut()
+            .expect("worker inputs are never empty")
+            .make_mut_f32()
+            .expect("worker inputs always end with the f32 x buffer");
         // rotate through the guard's deque (pop front, keep live at the
         // back — O(1) each way) so an unwind mid-loop still
         // error-completes everything not yet processed

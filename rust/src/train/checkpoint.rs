@@ -27,14 +27,14 @@ pub fn save_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
             Tensor::F32(v) => {
                 out.write_all(&[0u8])?;
                 out.write_all(&(v.len() as u64).to_le_bytes())?;
-                for x in v {
+                for x in v.iter() {
                     out.write_all(&x.to_le_bytes())?;
                 }
             }
             Tensor::I32(v) => {
                 out.write_all(&[1u8])?;
                 out.write_all(&(v.len() as u64).to_le_bytes())?;
-                for x in v {
+                for x in v.iter() {
                     out.write_all(&x.to_le_bytes())?;
                 }
             }
@@ -69,7 +69,7 @@ pub fn load_tensors(path: &Path) -> Result<Vec<Tensor>> {
                     r.read_exact(&mut b4)?;
                     *x = f32::from_le_bytes(b4);
                 }
-                tensors.push(Tensor::F32(v));
+                tensors.push(Tensor::f32(v));
             }
             1 => {
                 let mut v = vec![0i32; len];
@@ -77,7 +77,7 @@ pub fn load_tensors(path: &Path) -> Result<Vec<Tensor>> {
                     r.read_exact(&mut b4)?;
                     *x = i32::from_le_bytes(b4);
                 }
-                tensors.push(Tensor::I32(v));
+                tensors.push(Tensor::i32(v));
             }
             t => return Err(Error::Runtime(format!("unknown tensor tag {t}"))),
         }
@@ -105,9 +105,9 @@ mod tests {
     #[test]
     fn roundtrip_mixed_tensors() {
         let tensors = vec![
-            Tensor::F32(vec![1.5, -2.25, 0.0]),
-            Tensor::I32(vec![7, -9]),
-            Tensor::F32(vec![]),
+            Tensor::f32(vec![1.5, -2.25, 0.0]),
+            Tensor::i32(vec![7, -9]),
+            Tensor::f32(vec![]),
         ];
         let path = tmp("mixed.lfc");
         save_tensors(&path, &tensors).unwrap();
@@ -122,7 +122,7 @@ mod tests {
         std::fs::write(&path, b"XXXX").unwrap();
         assert!(load_tensors(&path).is_err());
         // truncated: valid header, missing trailer
-        let tensors = vec![Tensor::F32(vec![1.0; 10])];
+        let tensors = vec![Tensor::f32(vec![1.0; 10])];
         save_tensors(&path, &tensors).unwrap();
         let full = std::fs::read(&path).unwrap();
         std::fs::write(&path, &full[..full.len() - 2]).unwrap();

@@ -20,6 +20,7 @@ use crate::graph::{
     SubgraphScratch,
 };
 use crate::runtime::Tensor;
+use std::sync::Arc;
 
 /// Inner vs Repli subgraph construction (paper §5.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -214,13 +215,87 @@ pub fn build_batch_with(
     })
 }
 
+/// Reusable padding buffers for [`pad_to_bucket_with`].
+///
+/// Padded tensors are `Arc`-backed; the scratch keeps one reference to
+/// every buffer it hands out. When the previous call's [`PaddedTensors`]
+/// have been dropped (refcount back to one) and the bucket size matches,
+/// the allocation is rewritten **in place** — only the stale pad tail is
+/// re-zeroed — so coordinator retries and workers that train several
+/// partitions against the same bucket stop reallocating multi-megabyte
+/// padded buffers per job. While previously handed-out tensors are still
+/// alive the scratch falls back to a fresh allocation, which is what
+/// keeps the tensors themselves immutable. Either way the output is
+/// byte-identical to a fresh [`pad_to_bucket`] (property-tested).
+pub struct PadScratch {
+    x: Arc<[f32]>,
+    src: Arc<[i32]>,
+    dst: Arc<[i32]>,
+    ew: Arc<[f32]>,
+    y_f: Arc<[f32]>,
+    y_i: Arc<[i32]>,
+    mask: Arc<[f32]>,
+}
+
+impl PadScratch {
+    pub fn new() -> PadScratch {
+        PadScratch {
+            x: Arc::from(Vec::new()),
+            src: Arc::from(Vec::new()),
+            dst: Arc::from(Vec::new()),
+            ew: Arc::from(Vec::new()),
+            y_f: Arc::from(Vec::new()),
+            y_i: Arc::from(Vec::new()),
+            mask: Arc::from(Vec::new()),
+        }
+    }
+}
+
+impl Default for PadScratch {
+    fn default() -> Self {
+        PadScratch::new()
+    }
+}
+
+/// Hand out a uniquely owned `len`-element buffer from `slot`, reusing
+/// the existing allocation when the size matches and no previous tensor
+/// still references it. The caller overwrites exactly `[..live]`; the pad
+/// tail `[live..]` is zeroed here.
+fn reuse_slot<T: Copy + Default>(
+    slot: &mut Arc<[T]>,
+    len: usize,
+    live: usize,
+) -> &mut [T] {
+    if slot.len() != len || Arc::get_mut(slot).is_none() {
+        *slot = vec![T::default(); len].into();
+    }
+    let buf = Arc::get_mut(slot).expect("uniquely owned after the reset above");
+    buf[live..].fill(T::default());
+    buf
+}
+
 /// Pad the batch tensors to artifact buckets `(n_bucket, e_bucket)` and
 /// return them in the artifact's input layout (x, src, dst, ew, y, mask).
+///
+/// Allocates fresh buffers every call; hot paths (the coordinator worker
+/// loop) use [`pad_to_bucket_with`] and a per-worker [`PadScratch`].
 pub fn pad_to_bucket(
     batch: &PartitionBatch,
     n_bucket: usize,
     e_bucket: usize,
     classes: usize,
+) -> Result<PaddedTensors> {
+    pad_to_bucket_with(batch, n_bucket, e_bucket, classes, &mut PadScratch::new())
+}
+
+/// [`pad_to_bucket`] against a caller-provided [`PadScratch`] so repeat
+/// pads against the same bucket reuse their allocations.
+pub fn pad_to_bucket_with(
+    batch: &PartitionBatch,
+    n_bucket: usize,
+    e_bucket: usize,
+    classes: usize,
+    scratch: &mut PadScratch,
 ) -> Result<PaddedTensors> {
     let nl = batch.num_local();
     let el = batch.num_directed_edges();
@@ -231,36 +306,36 @@ pub fn pad_to_bucket(
         )));
     }
     let f = batch.feat_dim;
-    let mut x = vec![0f32; n_bucket * f];
+    let x = reuse_slot(&mut scratch.x, n_bucket * f, nl * f);
     x[..nl * f].copy_from_slice(&batch.x);
-    let mut src = vec![0i32; e_bucket];
+    let src = reuse_slot(&mut scratch.src, e_bucket, el);
     src[..el].copy_from_slice(&batch.src);
-    let mut dst = vec![0i32; e_bucket];
+    let dst = reuse_slot(&mut scratch.dst, e_bucket, el);
     dst[..el].copy_from_slice(&batch.dst);
-    let mut ew = vec![0f32; e_bucket];
+    let ew = reuse_slot(&mut scratch.ew, e_bucket, el);
     ew[..el].copy_from_slice(&batch.ew);
-    let mut mask = vec![0f32; n_bucket];
+    let mask = reuse_slot(&mut scratch.mask, n_bucket, nl);
     mask[..nl].copy_from_slice(&batch.train_mask);
     let y = match &batch.y {
         LabelSlice::Multiclass(labels) => {
-            let mut yy = vec![0i32; n_bucket];
+            let yy = reuse_slot(&mut scratch.y_i, n_bucket, nl);
             yy[..nl].copy_from_slice(labels);
-            Tensor::I32(yy)
+            Tensor::I32(Arc::clone(&scratch.y_i))
         }
         LabelSlice::Multilabel { tasks, targets } => {
             debug_assert_eq!(*tasks, classes);
-            let mut yy = vec![0f32; n_bucket * classes];
+            let yy = reuse_slot(&mut scratch.y_f, n_bucket * classes, nl * classes);
             yy[..nl * classes].copy_from_slice(targets);
-            Tensor::F32(yy)
+            Tensor::F32(Arc::clone(&scratch.y_f))
         }
     };
     Ok(PaddedTensors {
-        x: Tensor::F32(x),
-        src: Tensor::I32(src),
-        dst: Tensor::I32(dst),
-        ew: Tensor::F32(ew),
+        x: Tensor::F32(Arc::clone(&scratch.x)),
+        src: Tensor::I32(Arc::clone(&scratch.src)),
+        dst: Tensor::I32(Arc::clone(&scratch.dst)),
+        ew: Tensor::F32(Arc::clone(&scratch.ew)),
         y,
-        mask: Tensor::F32(mask),
+        mask: Tensor::F32(Arc::clone(&scratch.mask)),
     })
 }
 
@@ -359,5 +434,85 @@ mod tests {
         assert!(mask[34..].iter().all(|&m| m == 0.0));
         // too-small bucket errors
         assert!(pad_to_bucket(&b, 16, 256, 2).is_err());
+    }
+
+    fn assert_padded_eq(a: &PaddedTensors, b: &PaddedTensors) -> Result<(), String> {
+        for (name, x, y) in [
+            ("x", &a.x, &b.x),
+            ("src", &a.src, &b.src),
+            ("dst", &a.dst, &b.dst),
+            ("ew", &a.ew, &b.ew),
+            ("y", &a.y, &b.y),
+            ("mask", &a.mask, &b.mask),
+        ] {
+            if x != y {
+                return Err(format!("{name} differs between scratch and fresh pad"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn pad_scratch_reuse_is_byte_identical_to_fresh() {
+        // One scratch carried across random batches, modes, models, and
+        // bucket sizes (size changes force reallocation mid-sequence) must
+        // produce exactly what a fresh allocation produces.
+        let ds = karate_dataset(0);
+        let scratch = std::cell::RefCell::new(PadScratch::new());
+        crate::testing::prop::check(
+            "pad-scratch-reuse",
+            40,
+            11,
+            |rng| {
+                let n = 4 + rng.index(30);
+                let mut members: Vec<NodeId> = (0..34).collect();
+                for i in 0..n {
+                    let j = i + rng.index(34 - i);
+                    members.swap(i, j);
+                }
+                members.truncate(n);
+                let mode = if rng.index(2) == 0 { Mode::Inner } else { Mode::Repli };
+                let model =
+                    if rng.index(2) == 0 { ModelKind::Gcn } else { ModelKind::Sage };
+                let nb = 64 + 32 * rng.index(3);
+                let eb = 512 + 256 * rng.index(2);
+                (members, mode, model, nb, eb)
+            },
+            |(members, mode, model, nb, eb)| {
+                let b = build_batch(&ds, members, *mode, *model)
+                    .map_err(|e| e.to_string())?;
+                let fresh = pad_to_bucket(&b, *nb, *eb, 2).map_err(|e| e.to_string())?;
+                let reused =
+                    pad_to_bucket_with(&b, *nb, *eb, 2, &mut scratch.borrow_mut())
+                        .map_err(|e| e.to_string())?;
+                assert_padded_eq(&reused, &fresh)
+            },
+        );
+    }
+
+    #[test]
+    fn pad_scratch_reuses_allocation_when_tensors_dropped() {
+        let ds = karate_dataset(0);
+        let members: Vec<NodeId> = (0..34).collect();
+        let b = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+        let mut scratch = PadScratch::new();
+        let first = pad_to_bucket_with(&b, 64, 256, 2, &mut scratch).unwrap();
+        let first_ptr = first.x.as_f32().unwrap().as_ptr();
+        drop(first);
+        // previous tensors gone → same allocation comes back
+        let second = pad_to_bucket_with(&b, 64, 256, 2, &mut scratch).unwrap();
+        assert_eq!(
+            second.x.as_f32().unwrap().as_ptr(),
+            first_ptr,
+            "scratch did not reuse the dropped buffer"
+        );
+        // previous tensors alive → fresh allocation, old tensor untouched
+        let snapshot = second.x.as_f32().unwrap().to_vec();
+        let third = pad_to_bucket_with(&b, 64, 256, 2, &mut scratch).unwrap();
+        assert!(
+            !third.x.shares_storage(&second.x),
+            "live tensor must not be rewritten in place"
+        );
+        assert_eq!(second.x.as_f32().unwrap(), &snapshot[..]);
     }
 }

@@ -12,11 +12,12 @@
 //! replays the same row-wise MLP forward at query time.
 
 use super::metrics;
-use super::trainer::init_params;
+use super::trainer::{adam_state, init_params, zeros_like, ExecPath};
 use crate::data::{Dataset, Labels};
 use crate::error::{Error, Result};
 use crate::graph::NodeId;
 use crate::runtime::{Runtime, Tensor};
+use std::rc::Rc;
 
 /// Global embedding matrix under assembly.
 pub struct EmbeddingStore {
@@ -145,7 +146,7 @@ fn padded_x(store: &EmbeddingStore, bucket_n: usize, feat_dim: usize) -> Tensor 
     let n = store.n;
     let mut x = vec![0f32; bucket_n * feat_dim];
     x[..n * feat_dim].copy_from_slice(store.matrix());
-    Tensor::F32(x)
+    Tensor::f32(x)
 }
 
 /// Pad labels + train mask to the bucket (train path only — the pred
@@ -155,29 +156,55 @@ fn padded_targets(dataset: &Dataset, n: usize, bucket_n: usize) -> (Tensor, Tens
         Labels::Multiclass { labels, .. } => {
             let mut yy = vec![0i32; bucket_n];
             yy[..n].copy_from_slice(labels);
-            Tensor::I32(yy)
+            Tensor::i32(yy)
         }
         Labels::Multilabel { tasks, targets } => {
             let mut yy = vec![0f32; bucket_n * tasks];
             yy[..n * tasks].copy_from_slice(targets);
-            Tensor::F32(yy)
+            Tensor::f32(yy)
         }
     };
     let mut mask = vec![0f32; bucket_n];
     for v in 0..n {
         mask[v] = dataset.train_mask[v] as u8 as f32;
     }
-    (y, Tensor::F32(mask))
+    (y, Tensor::f32(mask))
 }
 
 /// Train the integration MLP on the embeddings (train-split rows only)
-/// and return the fitted parameters.
+/// and return the fitted parameters. Runs on the device-resident session
+/// path; [`train_classifier_reference`] is the host round-trip oracle.
 pub fn train_classifier(
     rt: &Runtime,
     dataset: &Dataset,
     store: &EmbeddingStore,
     epochs: usize,
     seed: u64,
+) -> Result<Classifier> {
+    train_classifier_path(rt, dataset, store, epochs, seed, ExecPath::Session)
+}
+
+/// [`train_classifier`] through the original host round-trip loop — kept
+/// as the bit-exactness oracle (`tests/train_session.rs`) and for A/B
+/// timing.
+pub fn train_classifier_reference(
+    rt: &Runtime,
+    dataset: &Dataset,
+    store: &EmbeddingStore,
+    epochs: usize,
+    seed: u64,
+) -> Result<Classifier> {
+    train_classifier_path(rt, dataset, store, epochs, seed, ExecPath::Reference)
+}
+
+/// [`train_classifier`] with an explicit [`ExecPath`].
+pub fn train_classifier_path(
+    rt: &Runtime,
+    dataset: &Dataset,
+    store: &EmbeddingStore,
+    epochs: usize,
+    seed: u64,
+    exec: ExecPath,
 ) -> Result<Classifier> {
     if !store.is_complete() {
         return Err(Error::Coordinator(format!(
@@ -201,26 +228,42 @@ pub fn train_classifier(
 
     let p = train_exe.meta.num_params();
     let mut params = init_params(&train_exe, seed);
-    let mut m: Vec<Tensor> = params.iter().map(|t| Tensor::F32(vec![0.0; t.len()])).collect();
-    let mut v: Vec<Tensor> = m.clone();
-    let mut t = Tensor::F32(vec![0.0]);
     let calls = epochs.div_ceil(dims.epochs_per_call.max(1));
     let mut losses = Vec::with_capacity(calls);
-    for _ in 0..calls {
-        let mut inputs = Vec::with_capacity(3 * p + 4);
-        inputs.extend(params.iter().cloned());
-        inputs.extend(m.iter().cloned());
-        inputs.extend(v.iter().cloned());
-        inputs.push(t.clone());
-        inputs.push(x.clone());
-        inputs.push(y.clone());
-        inputs.push(mask.clone());
-        let mut out = train_exe.run(&inputs)?;
-        losses.push(out.last().unwrap().scalar_f32()?);
-        t = out[3 * p].clone();
-        v = out.drain(2 * p..3 * p).collect();
-        m = out.drain(p..2 * p).collect();
-        params = out.drain(..p).collect();
+    match exec {
+        ExecPath::Session => {
+            // x/y/mask staged once; the Adam state never leaves the device
+            let state = adam_state(params);
+            let mut session = rt.session(Rc::clone(&train_exe), &state, &[x, y, mask])?;
+            drop(state);
+            for _ in 0..calls {
+                losses.push(session.run_step()?);
+            }
+            let mut final_state = session.state_tensors()?;
+            final_state.truncate(p);
+            params = final_state;
+        }
+        ExecPath::Reference => {
+            let mut m = zeros_like(&params);
+            let mut v = zeros_like(&params);
+            let mut t = Tensor::f32(vec![0.0]);
+            for _ in 0..calls {
+                let mut inputs = Vec::with_capacity(3 * p + 4);
+                inputs.extend(params.iter().cloned());
+                inputs.extend(m.iter().cloned());
+                inputs.extend(v.iter().cloned());
+                inputs.push(t.clone());
+                inputs.push(x.clone());
+                inputs.push(y.clone());
+                inputs.push(mask.clone());
+                let mut out = train_exe.run(&inputs)?;
+                losses.push(out.last().unwrap().scalar_f32()?);
+                t = out[3 * p].clone();
+                v = out.drain(2 * p..3 * p).collect();
+                m = out.drain(p..2 * p).collect();
+                params = out.drain(..p).collect();
+            }
+        }
     }
 
     Ok(Classifier { params, losses, task, feat_dim: dims.f, classes: dims.c })
@@ -245,9 +288,12 @@ pub fn evaluate_classifier(
         )));
     }
     let x = padded_x(store, dims.n, dims.f);
+    // params clones are refcount bumps; the single forward runs through a
+    // stateless session (same staged-buffer path the trainer uses)
     let mut inputs = clf.params.clone();
     inputs.push(x);
-    let out = pred_exe.run(&inputs)?;
+    let mut session = rt.session(pred_exe, &[], &inputs)?;
+    let out = session.run_outputs()?;
     let logits_full = out[0].as_f32()?;
     let c = dims.c;
     let logits = &logits_full[..n * c];

@@ -7,8 +7,15 @@ pub mod integrate;
 pub mod metrics;
 pub mod trainer;
 
-pub use data::{build_batch, build_batch_with, pad_to_bucket, Mode, ModelKind, PartitionBatch};
-pub use integrate::{
-    classify, evaluate_classifier, train_classifier, Classifier, EmbeddingStore, EvalReport,
+pub use data::{
+    build_batch, build_batch_with, pad_to_bucket, pad_to_bucket_with, Mode, ModelKind,
+    PadScratch, PartitionBatch,
 };
-pub use trainer::{train_partition, TrainOptions, TrainedPartition};
+pub use integrate::{
+    classify, evaluate_classifier, train_classifier, train_classifier_path,
+    train_classifier_reference, Classifier, EmbeddingStore, EvalReport,
+};
+pub use trainer::{
+    init_params, train_partition, train_partition_with, zeros_like, ExecPath,
+    TrainOptions, TrainedPartition,
+};

@@ -2,13 +2,49 @@
 //! eval artifact to extract embeddings + logits for the owned nodes.
 //!
 //! This is the "no communication during training" core of the paper: the
-//! whole loop touches only partition-local tensors; state (params + Adam
-//! moments) round-trips through PJRT between calls.
+//! whole loop touches only partition-local tensors. By default it runs on
+//! a device-resident [`ExecSession`] ([`ExecPath::Session`]): invariant
+//! inputs (features, edges, labels, mask) are staged once, the mutable
+//! state (params + Adam moments + step counter) never leaves the device
+//! between calls, and only the loss scalar crosses back per call. The
+//! original host round-trip loop survives as [`ExecPath::Reference`] —
+//! the bit-exactness oracle (`tests/train_session.rs`).
 
-use super::data::{pad_to_bucket, ModelKind, PartitionBatch};
-use crate::error::Result;
-use crate::runtime::{Executable, Runtime, Tensor};
+use super::data::{pad_to_bucket_with, ModelKind, PadScratch, PartitionBatch};
+use crate::error::{Error, Result};
+use crate::runtime::{ExecStats, Executable, Runtime, Tensor};
 use crate::util::rng::Rng;
+use crate::util::Stopwatch;
+use std::rc::Rc;
+
+/// How a training loop drives PJRT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPath {
+    /// Device-resident [`crate::runtime::ExecSession`]: stage invariants
+    /// once, keep optimizer state on device, download only the loss.
+    Session,
+    /// The original host round-trip: rebuild every input literal and
+    /// download every output, every call. Kept as the bit-exactness
+    /// oracle and for A/B timing (`bench_train`).
+    Reference,
+}
+
+impl ExecPath {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecPath::Session => "session",
+            ExecPath::Reference => "reference",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "session" => Ok(ExecPath::Session),
+            "reference" => Ok(ExecPath::Reference),
+            other => Err(Error::Config(format!("unknown exec path {other:?}"))),
+        }
+    }
+}
 
 /// Hyper-parameters of one partition-training run.
 #[derive(Clone, Debug)]
@@ -19,11 +55,19 @@ pub struct TrainOptions {
     pub seed: u64,
     /// Report a loss sample every `log_every` calls (0 = never).
     pub log_every: usize,
+    /// PJRT execution strategy (default: device-resident session).
+    pub exec: ExecPath,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        TrainOptions { model: ModelKind::Gcn, epochs: 80, seed: 0, log_every: 0 }
+        TrainOptions {
+            model: ModelKind::Gcn,
+            epochs: 80,
+            seed: 0,
+            log_every: 0,
+            exec: ExecPath::Session,
+        }
     }
 }
 
@@ -40,8 +84,12 @@ pub struct TrainedPartition {
     pub num_classes: usize,
     /// Replica (halo) nodes the subgraph carried (0 for Inner mode).
     pub num_replicas: usize,
-    /// Wall-clock seconds spent in train executions.
+    /// Wall-clock seconds spent in train executions (session path: incl.
+    /// the one-time staging upload).
     pub train_secs: f64,
+    /// Transfer/phase counters of the training session (`None` on the
+    /// reference path).
+    pub exec_stats: Option<ExecStats>,
 }
 
 /// Glorot-uniform init for the artifact's parameter tensors (matches the
@@ -55,23 +103,35 @@ pub fn init_params(exe: &Executable, seed: u64) -> Vec<Tensor> {
         .map(|spec| {
             if spec.shape.len() == 2 {
                 let lim = (6.0 / (spec.shape[0] + spec.shape[1]) as f64).sqrt();
-                Tensor::F32(
+                Tensor::f32(
                     (0..spec.num_elements())
                         .map(|_| ((rng.f64() * 2.0 - 1.0) * lim) as f32)
                         .collect(),
                 )
             } else {
-                Tensor::F32(vec![0.0; spec.num_elements()])
+                Tensor::f32(vec![0.0; spec.num_elements()])
             }
         })
         .collect()
 }
 
-fn zeros_like(params: &[Tensor]) -> Vec<Tensor> {
-    params
-        .iter()
-        .map(|t| Tensor::F32(vec![0.0; t.len()]))
-        .collect()
+/// All-zero tensors shaped like `params` — the Adam moment init, shared
+/// by this trainer and the integration classifier (one definition, not
+/// two hand-rolled copies).
+pub fn zeros_like(params: &[Tensor]) -> Vec<Tensor> {
+    params.iter().map(|t| Tensor::f32(vec![0.0; t.len()])).collect()
+}
+
+/// Assemble the full Adam state block `[params, m, v, t]` in artifact
+/// input order.
+pub(crate) fn adam_state(params: Vec<Tensor>) -> Vec<Tensor> {
+    let m = zeros_like(&params);
+    let v = zeros_like(&params);
+    let mut state = params;
+    state.extend(m);
+    state.extend(v);
+    state.push(Tensor::f32(vec![0.0]));
+    state
 }
 
 /// Train one partition end-to-end and extract owned-node outputs.
@@ -79,6 +139,18 @@ pub fn train_partition(
     rt: &Runtime,
     batch: &PartitionBatch,
     opts: &TrainOptions,
+) -> Result<TrainedPartition> {
+    train_partition_with(rt, batch, opts, &mut PadScratch::new())
+}
+
+/// [`train_partition`] with a caller-provided padding scratch — workers
+/// that train many partitions (and coordinator retries) reuse the padded
+/// bucket allocations instead of rebuilding them per job.
+pub fn train_partition_with(
+    rt: &Runtime,
+    batch: &PartitionBatch,
+    opts: &TrainOptions,
+    pad: &mut PadScratch,
 ) -> Result<TrainedPartition> {
     let task = match &batch.y {
         super::data::LabelSlice::Multiclass(_) => "multiclass",
@@ -92,52 +164,94 @@ pub fn train_partition(
     let eval_exe = rt.load_for(model, task, "eval", nl, el)?;
     // train/eval pair must share buckets so params transfer directly
     debug_assert_eq!(train_exe.meta.dims.n, eval_exe.meta.dims.n);
-    let dims = &train_exe.meta.dims;
-    let padded = pad_to_bucket(batch, dims.n, dims.e, dims.c)?;
+    let dims = train_exe.meta.dims.clone();
+    let padded = pad_to_bucket_with(batch, dims.n, dims.e, dims.c, pad)?;
 
     let p = train_exe.meta.num_params();
-    let mut params = init_params(&train_exe, opts.seed);
-    let mut m = zeros_like(&params);
-    let mut v = zeros_like(&params);
-    let mut t = Tensor::F32(vec![0.0]);
-
+    let params = init_params(&train_exe, opts.seed);
     let calls = opts.epochs.div_ceil(dims.epochs_per_call.max(1));
-    let mut losses = Vec::with_capacity(calls);
-    let sw = crate::util::Stopwatch::start();
-    for call in 0..calls {
-        let mut inputs = Vec::with_capacity(3 * p + 7);
-        inputs.extend(params.iter().cloned());
-        inputs.extend(m.iter().cloned());
-        inputs.extend(v.iter().cloned());
-        inputs.push(t.clone());
-        inputs.push(padded.x.clone());
-        inputs.push(padded.src.clone());
-        inputs.push(padded.dst.clone());
-        inputs.push(padded.ew.clone());
-        inputs.push(padded.y.clone());
-        inputs.push(padded.mask.clone());
-        let mut out = train_exe.run(&inputs)?;
-        let loss = out.last().unwrap().scalar_f32()?;
-        losses.push(loss);
-        t = out[3 * p].clone();
-        // reclaim updated state without copying
-        v = out.drain(2 * p..3 * p).collect();
-        m = out.drain(p..2 * p).collect();
-        params = out.drain(..p).collect();
-        if opts.log_every > 0 && call % opts.log_every == 0 {
-            log::debug!("train call {call}/{calls}: loss {loss:.4}");
-        }
-    }
-    let train_secs = sw.secs();
 
-    // ---- eval: embeddings + logits ----------------------------------
-    let mut eval_inputs = Vec::with_capacity(p + 4);
-    eval_inputs.extend(params.iter().cloned());
+    // ---- train loop: state stays where the path puts it ---------------
+    let (losses, final_state, train_secs, exec_stats) = match opts.exec {
+        ExecPath::Session => {
+            let invariant = [
+                padded.x.clone(),
+                padded.src.clone(),
+                padded.dst.clone(),
+                padded.ew.clone(),
+                padded.y.clone(),
+                padded.mask.clone(),
+            ];
+            let state = adam_state(params);
+            let sw = Stopwatch::start();
+            let mut session = rt.session(Rc::clone(&train_exe), &state, &invariant)?;
+            drop(state);
+            let mut losses = Vec::with_capacity(calls);
+            for call in 0..calls {
+                let loss = session.run_step()?;
+                losses.push(loss);
+                if opts.log_every > 0 && call % opts.log_every == 0 {
+                    log::debug!("train call {call}/{calls}: loss {loss:.4}");
+                }
+            }
+            let train_secs = sw.secs();
+            // the one download of the run: final params (+ moments)
+            let final_state = session.state_tensors()?;
+            (losses, final_state, train_secs, Some(session.stats().clone()))
+        }
+        ExecPath::Reference => {
+            let mut params = params;
+            let mut m = zeros_like(&params);
+            let mut v = zeros_like(&params);
+            let mut t = Tensor::f32(vec![0.0]);
+            let mut losses = Vec::with_capacity(calls);
+            let sw = Stopwatch::start();
+            for call in 0..calls {
+                let mut inputs = Vec::with_capacity(3 * p + 7);
+                inputs.extend(params.iter().cloned());
+                inputs.extend(m.iter().cloned());
+                inputs.extend(v.iter().cloned());
+                inputs.push(t.clone());
+                inputs.push(padded.x.clone());
+                inputs.push(padded.src.clone());
+                inputs.push(padded.dst.clone());
+                inputs.push(padded.ew.clone());
+                inputs.push(padded.y.clone());
+                inputs.push(padded.mask.clone());
+                let mut out = train_exe.run(&inputs)?;
+                let loss = out.last().unwrap().scalar_f32()?;
+                losses.push(loss);
+                t = out[3 * p].clone();
+                // reclaim updated state without copying
+                v = out.drain(2 * p..3 * p).collect();
+                m = out.drain(p..2 * p).collect();
+                params = out.drain(..p).collect();
+                if opts.log_every > 0 && call % opts.log_every == 0 {
+                    log::debug!("train call {call}/{calls}: loss {loss:.4}");
+                }
+            }
+            let train_secs = sw.secs();
+            let mut state = params;
+            state.extend(m);
+            state.extend(v);
+            state.push(t);
+            (losses, state, train_secs, None)
+        }
+    };
+
+    // ---- eval: embeddings + logits ------------------------------------
+    let mut eval_inputs: Vec<Tensor> = final_state[..p].to_vec(); // refcount bumps
     eval_inputs.push(padded.x);
     eval_inputs.push(padded.src);
     eval_inputs.push(padded.dst);
     eval_inputs.push(padded.ew);
-    let out = eval_exe.run(&eval_inputs)?;
+    let out = match opts.exec {
+        ExecPath::Session => {
+            let mut sess = rt.session(Rc::clone(&eval_exe), &[], &eval_inputs)?;
+            sess.run_outputs()?
+        }
+        ExecPath::Reference => eval_exe.run(&eval_inputs)?,
+    };
     let emb_full = out[0].as_f32()?;
     let logits_full = out[1].as_f32()?;
     let h = eval_exe.meta.dims.h;
@@ -154,6 +268,7 @@ pub fn train_partition(
         num_classes: c,
         num_replicas: batch.sub.num_replicas(),
         train_secs,
+        exec_stats,
     })
 }
 
@@ -162,17 +277,8 @@ mod tests {
     use super::*;
     use crate::data::karate_dataset;
     use crate::graph::NodeId;
-    use crate::runtime::default_artifacts_dir;
+    use crate::testing::runtime_if_built;
     use crate::train::data::{build_batch, Mode};
-
-    fn runtime_if_built() -> Option<Runtime> {
-        let dir = default_artifacts_dir();
-        if dir.join("manifest.json").exists() {
-            Some(Runtime::new(&dir).unwrap())
-        } else {
-            None
-        }
-    }
 
     #[test]
     fn trains_karate_full_graph_loss_decreases() {
@@ -191,6 +297,10 @@ mod tests {
         assert_eq!(out.embeddings.len(), 34 * out.emb_dim);
         assert_eq!(out.logits.len(), 34 * out.num_classes);
         assert!(out.embeddings.iter().all(|x| x.is_finite()));
+        // default path is the session: transfer counters must exist
+        let stats = out.exec_stats.expect("session path reports stats");
+        assert_eq!(stats.steps, out.losses.len());
+        assert!(stats.bytes_to_device > 0);
     }
 
     #[test]
@@ -228,6 +338,28 @@ mod tests {
                 let lim = (6.0 / (spec.shape[0] + spec.shape[1]) as f64).sqrt() as f32;
                 assert!(v.iter().all(|&x| x.abs() <= lim));
             }
+        }
+    }
+
+    #[test]
+    fn exec_path_parses_and_round_trips() {
+        assert_eq!(ExecPath::parse("session").unwrap(), ExecPath::Session);
+        assert_eq!(ExecPath::parse("reference").unwrap(), ExecPath::Reference);
+        assert!(ExecPath::parse("device").is_err());
+        for p in [ExecPath::Session, ExecPath::Reference] {
+            assert_eq!(ExecPath::parse(p.as_str()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes_and_is_zero() {
+        let params =
+            vec![Tensor::f32(vec![1.0, 2.0, 3.0]), Tensor::f32(vec![4.0; 5])];
+        let z = zeros_like(&params);
+        assert_eq!(z.len(), 2);
+        for (zt, pt) in z.iter().zip(&params) {
+            assert_eq!(zt.len(), pt.len());
+            assert!(zt.as_f32().unwrap().iter().all(|&x| x == 0.0));
         }
     }
 }

@@ -11,7 +11,7 @@ use leiden_fusion::runtime::default_artifacts_dir;
 use leiden_fusion::train::{build_batch, train_partition, Mode, ModelKind, TrainOptions};
 
 fn artifacts_ready() -> bool {
-    default_artifacts_dir().join("manifest.json").exists()
+    leiden_fusion::testing::artifacts_if_built().is_some()
 }
 
 fn small_cfg(machines: usize) -> CoordinatorConfig {
@@ -111,7 +111,7 @@ fn sage_and_gcn_both_train_through_runtime() {
         let out = train_partition(
             &rt,
             &batch,
-            &TrainOptions { model, epochs: 10, seed: 3, log_every: 0 },
+            &TrainOptions { model, epochs: 10, seed: 3, ..Default::default() },
         )
         .unwrap();
         assert!(out.losses.iter().all(|l| l.is_finite()), "{model:?}");

@@ -11,8 +11,8 @@ fn probe_buckets() {
         let exe = rt.load(name).unwrap();
         println!("{name}: compile {:.2}s", sw.secs());
         let inputs: Vec<Tensor> = exe.meta.inputs.iter().map(|s| match s.dtype {
-            DType::F32 => Tensor::F32(vec![0.0; s.num_elements()]),
-            DType::I32 => Tensor::I32(vec![0; s.num_elements()]),
+            DType::F32 => Tensor::f32(vec![0.0; s.num_elements()]),
+            DType::I32 => Tensor::i32(vec![0; s.num_elements()]),
         }).collect();
         let sw = Stopwatch::start();
         let _ = exe.run(&inputs).unwrap();

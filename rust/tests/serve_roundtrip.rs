@@ -18,7 +18,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 fn artifacts_ready() -> bool {
-    default_artifacts_dir().join("manifest.json").exists()
+    leiden_fusion::testing::artifacts_if_built().is_some()
 }
 
 /// Train karate with shard export and return the bundle directory.
@@ -64,7 +64,7 @@ fn offline_logits(store: &ShardedEmbeddingStore, dir: &std::path::Path) -> (Vec<
             .unwrap();
     }
     let mut inputs = params;
-    inputs.push(Tensor::F32(x));
+    inputs.push(Tensor::f32(x));
     let out = exe.run(&inputs).unwrap();
     (out[0].as_f32().unwrap().to_vec(), dims.c)
 }

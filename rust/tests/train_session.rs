@@ -1,0 +1,129 @@
+//! Bit-exactness oracles for the device-resident training session: the
+//! [`ExecPath::Session`] path must reproduce the host round-trip
+//! ([`ExecPath::Reference`]) **to the bit** — same loss trajectory, same
+//! embeddings, same logits, same classifier parameters — for every model
+//! kind and subgraph mode. The session moves the state feedback loop onto
+//! the device; it must never change a single value.
+//!
+//! All tests skip gracefully when `make artifacts` has not been run.
+
+use leiden_fusion::data::karate_dataset;
+use leiden_fusion::graph::NodeId;
+use leiden_fusion::testing::runtime_if_built;
+use leiden_fusion::train::{
+    build_batch, evaluate_classifier, train_classifier, train_classifier_reference,
+    train_partition, EmbeddingStore, ExecPath, Mode, ModelKind, TrainOptions,
+};
+
+fn assert_bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: element {i} diverged: {x:?} vs {y:?}"
+        );
+    }
+}
+
+#[test]
+fn session_matches_reference_for_all_models_and_modes() {
+    let Some(rt) = runtime_if_built() else { return };
+    let ds = karate_dataset(3);
+    for model in [ModelKind::Gcn, ModelKind::Sage] {
+        for mode in [Mode::Inner, Mode::Repli] {
+            let ctx = format!("{}/{}", model.as_str(), mode.as_str());
+            let members: Vec<NodeId> = (0..20).collect();
+            let batch = build_batch(&ds, &members, mode, model).unwrap();
+            let opts = |exec| TrainOptions {
+                model,
+                epochs: 8,
+                seed: 5,
+                log_every: 0,
+                exec,
+            };
+            let ses = train_partition(&rt, &batch, &opts(ExecPath::Session)).unwrap();
+            let reference =
+                train_partition(&rt, &batch, &opts(ExecPath::Reference)).unwrap();
+            assert_bits_eq(&ses.losses, &reference.losses, &format!("{ctx} losses"));
+            assert_bits_eq(
+                &ses.embeddings,
+                &reference.embeddings,
+                &format!("{ctx} embeddings"),
+            );
+            assert_bits_eq(&ses.logits, &reference.logits, &format!("{ctx} logits"));
+            assert!(ses.exec_stats.is_some(), "{ctx}: session reports stats");
+            assert!(reference.exec_stats.is_none(), "{ctx}: reference has none");
+        }
+    }
+}
+
+#[test]
+fn session_downloads_only_loss_per_step_on_fast_path() {
+    let Some(rt) = runtime_if_built() else { return };
+    let ds = karate_dataset(3);
+    let members: Vec<NodeId> = (0..34).collect();
+    let batch = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+    let out = train_partition(
+        &rt,
+        &batch,
+        &TrainOptions { epochs: 12, seed: 1, ..Default::default() },
+    )
+    .unwrap();
+    let stats = out.exec_stats.expect("session stats");
+    assert_eq!(stats.steps, out.losses.len());
+    if stats.tuple_fallback_steps == 0 {
+        // steady state: 4 bytes of loss per step, plus the one final
+        // state download (params + both moments + the step counter)
+        let exe = rt
+            .load_for("gcn", "multiclass", "train", batch.num_local(),
+                      batch.num_directed_edges())
+            .unwrap();
+        let p = exe.meta.num_params();
+        let state_bytes: u64 = exe.meta.inputs[..3 * p + 1]
+            .iter()
+            .map(|s| 4 * s.num_elements() as u64)
+            .sum();
+        assert_eq!(
+            stats.bytes_to_host,
+            4 * stats.steps as u64 + state_bytes,
+            "more than the loss scalar crossed back per step"
+        );
+    } else {
+        // plugin returned tuple buffers: the fallback must at least have
+        // accounted every step
+        assert_eq!(stats.tuple_fallback_steps, stats.steps);
+    }
+}
+
+#[test]
+fn classifier_session_matches_reference() {
+    let Some(rt) = runtime_if_built() else { return };
+    let ds = karate_dataset(3);
+    let members: Vec<NodeId> = (0..34).collect();
+    let batch = build_batch(&ds, &members, Mode::Inner, ModelKind::Gcn).unwrap();
+    let trained = train_partition(
+        &rt,
+        &batch,
+        &TrainOptions { epochs: 8, seed: 1, ..Default::default() },
+    )
+    .unwrap();
+    let mut store = EmbeddingStore::new(34, trained.emb_dim);
+    store.insert(&members, &trained.embeddings).unwrap();
+
+    let a = train_classifier(&rt, &ds, &store, 20, 9).unwrap();
+    let b = train_classifier_reference(&rt, &ds, &store, 20, 9).unwrap();
+    assert_bits_eq(&a.losses, &b.losses, "mlp losses");
+    assert_eq!(a.params.len(), b.params.len());
+    for (i, (x, y)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_bits_eq(
+            x.as_f32().unwrap(),
+            y.as_f32().unwrap(),
+            &format!("mlp param {i}"),
+        );
+    }
+    let ea = evaluate_classifier(&rt, &ds, &store, &a).unwrap();
+    let eb = evaluate_classifier(&rt, &ds, &store, &b).unwrap();
+    assert_eq!(ea.test_metric, eb.test_metric);
+    assert_eq!(ea.val_metric, eb.val_metric);
+}
