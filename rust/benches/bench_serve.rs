@@ -4,7 +4,7 @@
 //! Trains a small LF run with shard export, then hammers the query engine
 //! from several client threads with a hot-set-skewed workload (80% of
 //! queries hit 10% of nodes, the usual shape of read-heavy serving
-//! traffic) and reports QPS, p50/p99 per-call latency, cache hit rate,
+//! traffic) and reports QPS, p50/p99/p999 per-call latency, cache hit rate,
 //! coalesced (single-flight) answers, and the per-stage worker breakdown
 //! (gather / PJRT forward / publish).
 //!
@@ -22,7 +22,7 @@
 
 mod common;
 
-use leiden_fusion::benchkit::{report_json, Table};
+use leiden_fusion::benchkit::{report_json, Stats, Table};
 use leiden_fusion::cli::Args;
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::graph::NodeId;
@@ -36,14 +36,6 @@ use std::time::Instant;
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
-}
-
-fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
-    if sorted_secs.is_empty() {
-        return f64::NAN;
-    }
-    let idx = ((sorted_secs.len() - 1) as f64 * p).round() as usize;
-    sorted_secs[idx] * 1e3
 }
 
 fn write_report(args: &Args, doc: &Json) {
@@ -153,12 +145,12 @@ fn main() {
     let wall_secs = wall.elapsed().as_secs_f64();
 
     // ---- report -------------------------------------------------------
-    let mut lats = latencies.lock().unwrap().clone();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lat = Stats::of_samples(&latencies.lock().unwrap());
     let answered = (per_client * clients * qbatch) as f64;
     let qps = answered / wall_secs;
-    let p50 = percentile_ms(&lats, 0.50);
-    let p99 = percentile_ms(&lats, 0.99);
+    let p50 = lat.p50_s * 1e3;
+    let p99 = lat.p99_s * 1e3;
+    let p999 = lat.p999_s * 1e3;
     let st = engine.stats();
     let hit_pct = st.cache_hits as f64 / st.requests.max(1) as f64 * 100.0;
     let coalesced_pct = st.coalesced as f64 / st.requests.max(1) as f64 * 100.0;
@@ -178,6 +170,7 @@ fn main() {
     t.row(vec!["QPS (nodes/s)".into(), format!("{qps:.0}")]);
     t.row(vec!["p50 latency".into(), format!("{p50:.3}ms")]);
     t.row(vec!["p99 latency".into(), format!("{p99:.3}ms")]);
+    t.row(vec!["p999 latency".into(), format!("{p999:.3}ms")]);
     t.row(vec!["cache hit rate".into(), format!("{hit_pct:.1}%")]);
     t.row(vec!["coalesced (single-flight)".into(), format!("{coalesced_pct:.1}%")]);
     t.row(vec!["PJRT batches".into(), st.batches.to_string()]);
@@ -201,6 +194,8 @@ fn main() {
         ("qps", num(qps)),
         ("p50_ms", num(p50)),
         ("p99_ms", num(p99)),
+        ("p999_ms", num(p999)),
+        ("latency", lat.to_json()),
         ("cache_hit_pct", num(hit_pct)),
         ("coalesced_pct", num(coalesced_pct)),
         ("pjrt_batches", num(st.batches as f64)),

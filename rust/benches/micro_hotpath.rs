@@ -34,6 +34,43 @@ fn main() {
         records.push(obj(vec![("stage", s(name)), ("stats", st.to_json())]));
     };
 
+    // 0. the observability disabled-path contract: with tracing off, a
+    // span() call must cost roughly one relaxed atomic load (DESIGN.md
+    // "Observability"). Compare against the bare load it is specified
+    // as, and against the enabled path to show what turning it on buys.
+    {
+        use leiden_fusion::obs;
+        use std::sync::atomic::{AtomicBool, Ordering};
+        static FLAG: AtomicBool = AtomicBool::new(false);
+        obs::set_enabled(false);
+        add("relaxed atomic load x10k (floor)", bench(10, 2000, budget, || {
+            let mut acc = 0u32;
+            for _ in 0..10_000 {
+                acc += std::hint::black_box(&FLAG).load(Ordering::Relaxed) as u32;
+            }
+            std::hint::black_box(acc);
+        }));
+        add("obs span x10k (disabled)", bench(10, 2000, budget, || {
+            for _ in 0..10_000 {
+                std::hint::black_box(obs::span("bench", "noop"));
+            }
+        }));
+        add("obs event x10k (disabled)", bench(10, 2000, budget, || {
+            for _ in 0..10_000 {
+                obs::event("bench", "noop", Vec::new());
+            }
+        }));
+        obs::set_enabled(true);
+        add("obs span x10k (enabled)", bench(1, 50, budget, || {
+            for _ in 0..10_000 {
+                std::hint::black_box(obs::span("bench", "noop"));
+            }
+        }));
+        obs::set_enabled(false);
+        // free the recorded spans so the rest of the bench run is unaffected
+        drop(obs::trace::drain());
+    }
+
     // 1. Leiden community detection (the paper's "preprocessing")
     let cap = ((ds.graph.num_nodes() as f64 / 16.0) * 1.05 * 0.5).ceil() as usize;
     let cfg = LeidenConfig { max_community_size: cap, seed: 7, ..Default::default() };

@@ -63,6 +63,40 @@ LF_BENCH_QUICK=1 cargo bench --bench bench_train -- \
   --json-out target/bench-results/BENCH_train.json
 test -s target/bench-results/BENCH_train.json
 
+# Observability smoke: `--trace-out` must emit a valid Chrome-trace JSON
+# covering every pipeline stage span, and `repro metrics` must emit a
+# valid registry snapshot (both uploaded as CI artifacts next to the
+# BENCH_*.json trio).
+echo "== obs smoke: partition --trace-out + metrics =="
+cargo run --quiet --release --bin repro -- partition \
+  --dataset karate --spec "leiden+fusion+balance" --k 2 --seed 7 \
+  --trace-out target/bench-results/trace_partition.json > /dev/null
+test -s target/bench-results/trace_partition.json
+cargo run --quiet --release --bin repro -- metrics \
+  --dataset karate --k 2 --format json \
+  --out target/bench-results/metrics_snapshot.json > /dev/null
+test -s target/bench-results/metrics_snapshot.json
+cargo run --quiet --release --bin repro -- metrics \
+  --dataset karate --k 2 --format prom \
+  --out target/bench-results/metrics_snapshot.prom > /dev/null
+test -s target/bench-results/metrics_snapshot.prom
+if command -v python3 > /dev/null; then
+  python3 - <<'PYEOF'
+import json
+t = json.load(open("target/bench-results/trace_partition.json"))
+assert t["traceEvents"], "empty trace"
+names = {e["name"] for e in t["traceEvents"]}
+for span in ("pipeline", "leiden", "fusion", "balance", "validate"):
+    assert span in names, f"missing {span} span in trace"
+m = json.load(open("target/bench-results/metrics_snapshot.json"))
+assert m["counters"].get("partition.runs", 0) >= 1, "partition.runs not recorded"
+assert "partition.stage_secs" in m["histograms"], "stage histogram missing"
+print("obs smoke: trace + metrics JSON valid")
+PYEOF
+else
+  echo "note: python3 absent — skipped JSON validation of the obs artifacts"
+fi
+
 # Determinism: same seed must yield byte-identical partitionings across
 # runs AND across thread counts (DESIGN.md "Performance" contract).
 echo "== determinism: threads=1 vs threads=4, same seed =="
@@ -76,5 +110,12 @@ run_partition 4 target/assign_t4.txt
 run_partition 4 target/assign_t4_rerun.txt
 cmp target/assign_t1.txt target/assign_t4.txt
 cmp target/assign_t4.txt target/assign_t4_rerun.txt
+# ... and enabling span tracing must not perturb the partitioning
+# (DESIGN.md "Observability": instrumentation observes, never steers)
+cargo run --quiet --release --bin repro -- partition \
+  --dataset arxiv --n 4000 --k 4 --seed 7 --threads 4 \
+  --trace-out target/bench-results/trace_determinism.json \
+  --assignments-out target/assign_t4_traced.txt > /dev/null
+cmp target/assign_t4.txt target/assign_t4_traced.txt
 
 echo "tier1: OK"

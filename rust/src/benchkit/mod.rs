@@ -1,32 +1,55 @@
 //! Benchmark harness (no `criterion` offline): warmup + timed iterations
-//! with mean/p50/p95, aligned table rendering for the paper's tables and
-//! figures, and JSON export for EXPERIMENTS.md bookkeeping.
+//! with mean/p50/p95/p99/p999, aligned table rendering for the paper's
+//! tables and figures, and JSON export for EXPERIMENTS.md bookkeeping.
 
 use crate::util::json::{num, obj, s, Json};
 use crate::util::Stopwatch;
 use std::time::Duration;
 
-/// Timing statistics over bench iterations.
+/// Timing statistics over bench iterations. An empty sample set (e.g.
+/// `bench(_, 0, ..)`, or a budget that expires before the first run)
+/// yields the all-zero `Stats { iters: 0, .. }` rather than a panic.
 #[derive(Clone, Debug)]
 pub struct Stats {
     pub iters: usize,
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
     pub min_s: f64,
 }
 
 impl Stats {
+    /// Stats over externally collected timing samples (seconds). Sorts a
+    /// copy; quantiles pick rank `round((n−1)·q)`.
+    pub fn of_samples(samples: &[f64]) -> Stats {
+        Stats::from_samples(samples.to_vec())
+    }
+
     fn from_samples(mut samples: Vec<f64>) -> Stats {
+        if samples.is_empty() {
+            return Stats {
+                iters: 0,
+                mean_s: 0.0,
+                p50_s: 0.0,
+                p95_s: 0.0,
+                p99_s: 0.0,
+                p999_s: 0.0,
+                min_s: 0.0,
+            };
+        }
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = samples.len().max(1);
+        let n = samples.len();
         let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
         Stats {
-            iters: samples.len(),
+            iters: n,
             mean_s: samples.iter().sum::<f64>() / n as f64,
             p50_s: pick(0.5),
             p95_s: pick(0.95),
-            min_s: samples.first().copied().unwrap_or(0.0),
+            p99_s: pick(0.99),
+            p999_s: pick(0.999),
+            min_s: samples[0],
         }
     }
 
@@ -36,6 +59,8 @@ impl Stats {
             ("mean_s", num(self.mean_s)),
             ("p50_s", num(self.p50_s)),
             ("p95_s", num(self.p95_s)),
+            ("p99_s", num(self.p99_s)),
+            ("p999_s", num(self.p999_s)),
             ("min_s", num(self.min_s)),
         ])
     }
@@ -173,6 +198,30 @@ mod tests {
         assert_eq!(s.p50_s, 3.0);
         assert_eq!(s.mean_s, 3.0);
         assert_eq!(s.iters, 5);
+        // tail quantiles of a small sample collapse to the max
+        assert_eq!(s.p99_s, 5.0);
+        assert_eq!(s.p999_s, 5.0);
+    }
+
+    #[test]
+    fn empty_samples_yield_zeroed_stats() {
+        // regression: used to panic indexing samples[0]
+        let s = Stats::from_samples(vec![]);
+        assert_eq!(s.iters, 0);
+        assert_eq!(s.mean_s, 0.0);
+        assert_eq!(s.p50_s, 0.0);
+        assert_eq!(s.p999_s, 0.0);
+        assert_eq!(s.min_s, 0.0);
+        let b = bench(0, 0, Duration::from_secs(1), || {});
+        assert_eq!(b.iters, 0);
+    }
+
+    #[test]
+    fn of_samples_matches_from_samples() {
+        let s = Stats::of_samples(&[0.2, 0.1, 0.3]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.min_s, 0.1);
+        assert_eq!(s.p50_s, 0.2);
     }
 
     #[test]

@@ -219,6 +219,19 @@ impl ServeConfig {
     }
 }
 
+/// `[obs] trace = "path"` — when set, the launcher enables span tracing
+/// at startup and writes a Chrome-trace JSON here on exit. The CLI
+/// `--trace-out` flag wins over this key.
+pub fn obs_trace_path(t: &Toml) -> Result<Option<PathBuf>> {
+    match t.get("obs", "trace") {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(PathBuf::from(s))),
+        Some(other) => Err(Error::Config(format!(
+            "[obs] trace must be a string path, got {other:?}"
+        ))),
+    }
+}
+
 /// Numeric key as a float, accepting integer literals; `None` if absent,
 /// a clear error if present with a non-numeric type.
 fn float_opt(t: &Toml, section: &str, key: &str) -> Result<Option<f64>> {
@@ -529,6 +542,20 @@ machines = 2
         assert_eq!(cfg.exec, ExecPath::Reference);
         let t = Toml::parse("[train]\nexec = \"device\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn obs_trace_key_parses_and_rejects_non_string() {
+        let t = Toml::parse("[obs]\ntrace = \"out/trace.json\"\n").unwrap();
+        assert_eq!(
+            obs_trace_path(&t).unwrap(),
+            Some(PathBuf::from("out/trace.json"))
+        );
+        // absent section/key → no trace output configured
+        assert_eq!(obs_trace_path(&Toml::parse(SAMPLE).unwrap()).unwrap(), None);
+        // a mistyped value must error, not silently disable tracing
+        let t = Toml::parse("[obs]\ntrace = true\n").unwrap();
+        assert!(obs_trace_path(&t).is_err());
     }
 
     #[test]

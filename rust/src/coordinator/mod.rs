@@ -21,12 +21,14 @@ pub use messages::{Job, WorkerEvent};
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::partition::{PartitionReport, Partitioning, StageTiming};
 use crate::runtime::Runtime;
 use crate::train::{
     checkpoint, evaluate_classifier, train_classifier_path, EmbeddingStore, EvalReport,
     ExecPath, Mode, ModelKind,
 };
+use crate::util::json::num;
 use crate::util::Stopwatch;
 use std::collections::VecDeque;
 use std::path::PathBuf;
@@ -128,8 +130,16 @@ impl Coordinator {
         dataset: &Dataset,
         partition: &PartitionReport,
     ) -> Result<TrainReport> {
+        // Progress chatter goes to the trace as structured events (the
+        // pipeline already recorded the stage spans themselves) and to the
+        // logger only at debug level — quiet runs stay quiet.
         for st in &partition.stages {
-            log::info!(
+            obs::event(
+                "coordinator",
+                "partition.stage",
+                vec![("secs", num(st.secs)), ("parts", num(st.parts as f64))],
+            );
+            log::debug!(
                 "partition stage {}: {:.1}ms → {} parts",
                 st.name,
                 st.secs * 1e3,
@@ -144,6 +154,12 @@ impl Coordinator {
     /// Run distributed training of `dataset` over `partitioning`.
     pub fn run(&self, dataset: &Dataset, partitioning: &Partitioning) -> Result<TrainReport> {
         let sw = Stopwatch::start();
+        let mut run_span = obs::span("coordinator", "run");
+        if obs::tracing_enabled() {
+            run_span.attr("k", num(partitioning.k() as f64));
+            run_span.attr("nodes", num(dataset.num_nodes() as f64));
+            run_span.attr("machines", num(self.cfg.machines as f64));
+        }
         // Invalidate any pre-existing bundle before writing the first
         // shard: the manifest is deleted now and rewritten only after a
         // fully successful run, so an aborted run can never leave a
@@ -201,7 +217,18 @@ impl Coordinator {
                         log::debug!("worker {worker} started partition {part_id}");
                     }
                     WorkerEvent::Finished { worker, part_id, nodes, result } => {
-                        log::info!(
+                        obs::event(
+                            "coordinator",
+                            "partition.finished",
+                            vec![
+                                ("worker", num(worker as f64)),
+                                ("part", num(part_id as f64)),
+                                ("nodes", num(nodes.len() as f64)),
+                                ("train_secs", num(result.train_secs)),
+                            ],
+                        );
+                        obs::registry().counter("coordinator.partitions_trained").inc();
+                        log::debug!(
                             "worker {worker} finished partition {part_id}: \
                              {} nodes, final loss {:.4}, {:.2}s",
                             nodes.len(),
@@ -244,6 +271,16 @@ impl Coordinator {
                                  (worker {worker}): {error}"
                             )));
                         }
+                        obs::event(
+                            "coordinator",
+                            "partition.retry",
+                            vec![
+                                ("worker", num(worker as f64)),
+                                ("part", num(part_id as f64)),
+                                ("attempt", num(tries as f64)),
+                            ],
+                        );
+                        obs::registry().counter("coordinator.retries").inc();
                         log::warn!(
                             "partition {part_id} failed on worker {worker} \
                              (attempt {tries}): {error}; requeueing"
@@ -270,15 +307,21 @@ impl Coordinator {
         // not after the full MLP training loop (compilation is cached for
         // the evaluation pass)
         leader_rt.load_for("mlp", dataset.labels.task_name(), "pred", store.n, 0)?;
-        let clf = train_classifier_path(
-            &leader_rt,
-            dataset,
-            &store,
-            self.cfg.mlp_epochs,
-            self.cfg.seed ^ 0x11,
-            self.cfg.exec,
-        )?;
-        let eval = evaluate_classifier(&leader_rt, dataset, &store, &clf)?;
+        let clf = {
+            let _sp = obs::span("coordinator", "integrate");
+            train_classifier_path(
+                &leader_rt,
+                dataset,
+                &store,
+                self.cfg.mlp_epochs,
+                self.cfg.seed ^ 0x11,
+                self.cfg.exec,
+            )?
+        };
+        let eval = {
+            let _sp = obs::span("coordinator", "evaluate");
+            evaluate_classifier(&leader_rt, dataset, &store, &clf)?
+        };
 
         stats.sort_by_key(|s| s.part_id);
 
@@ -303,7 +346,15 @@ impl Coordinator {
                     .collect(),
             };
             manifest.save(dir)?;
-            log::info!(
+            obs::event(
+                "coordinator",
+                "bundle.written",
+                vec![
+                    ("shards", num(manifest.shards.len() as f64)),
+                    ("nodes", num(manifest.num_nodes as f64)),
+                ],
+            );
+            log::debug!(
                 "serving bundle written to {} ({} shards, {} nodes, dim {})",
                 dir.display(),
                 manifest.shards.len(),

@@ -5,8 +5,10 @@ use super::messages::{Job, WorkerEvent};
 use super::CoordinatorConfig;
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::runtime::Runtime;
 use crate::graph::SubgraphScratch;
+use crate::obs;
+use crate::runtime::Runtime;
+use crate::util::json::num;
 use crate::train::{
     build_batch_with, train_partition_with, PadScratch, TrainOptions, TrainedPartition,
 };
@@ -51,6 +53,9 @@ pub fn worker_loop(
     // a failed partition reuse them too).
     let mut scratch = SubgraphScratch::new();
     let mut pads = PadScratch::new();
+    // One span per worker lifetime — the trace shows each simulated
+    // machine as a lane of per-partition training spans.
+    let _worker_span = obs::span("coordinator", "worker").with("worker", num(worker as f64));
     loop {
         if remaining.load(Ordering::Acquire) == 0 {
             break;
@@ -64,6 +69,13 @@ pub fn worker_loop(
             }
         };
         let _ = tx.send(WorkerEvent::Started { worker, part_id: job.part_id });
+        let mut job_span = obs::span("coordinator", "train_partition");
+        if obs::tracing_enabled() {
+            job_span.attr("worker", num(worker as f64));
+            job_span.attr("part", num(job.part_id as f64));
+            job_span.attr("nodes", num(job.members.len() as f64));
+            job_span.attr("attempt", num(job.attempt as f64));
+        }
         match run_job(&rt, dataset, &job, cfg, &mut scratch, &mut pads) {
             Ok((nodes, result)) => {
                 if tx

@@ -11,7 +11,8 @@
 //!   shards written by the coordinator, a lazily-loading
 //!   [`serve::ShardedEmbeddingStore`], and a batched, cached query
 //!   [`serve::Engine`] answering node-classification requests through the
-//!   trained integration MLP.
+//!   trained integration MLP — all instrumented by the [`obs`]
+//!   observability layer (tracing spans + a metrics registry).
 //! * **L2/L1 (python/, build-time only)** — JAX GCN/GraphSAGE/MLP models on
 //!   Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!
@@ -34,6 +35,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod graph;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod serve;

@@ -8,7 +8,12 @@
 //!   pipeline   — `train` for LF vs baselines side by side
 //!   serve      — load a shard bundle and answer queries interactively
 //!   query      — one-shot classification of --nodes against a bundle
+//!   metrics    — run a small workload and dump the obs metrics registry
 //!   info       — dataset + artifact inventory
+//!
+//! Every subcommand takes `--trace-out <path>` (or `[obs] trace = "path"`
+//! in a `--config` file) to record nested tracing spans and write them as
+//! Chrome-trace JSON (`chrome://tracing` / Perfetto) on exit.
 //!
 //! Examples:
 //!   repro partition --dataset arxiv --spec "leiden(gamma=0.7)+fusion(alpha=0.05)" --k 8
@@ -21,13 +26,14 @@
 
 use leiden_fusion::benchkit::Table;
 use leiden_fusion::cli::Args;
-use leiden_fusion::config::{ExperimentConfig, ServeConfig, Toml};
+use leiden_fusion::config::{obs_trace_path, ExperimentConfig, ServeConfig, Toml};
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::data::{
     karate_dataset, synth_arxiv, synth_proteins, ArxivLikeConfig, Dataset,
     ProteinsLikeConfig,
 };
 use leiden_fusion::graph::NodeId;
+use leiden_fusion::obs;
 use leiden_fusion::partition::{
     PartitionPipeline, PartitionReport, PartitionSpec, PipelineEvent,
 };
@@ -58,7 +64,17 @@ USAGE:
                    shard slab in parallel before the first query)
   repro query     --shards dir --nodes 0,5,9 [--batch 64] [--workers 2]
                   [--cache 4096] [--cache-stripes 8]
+  repro metrics   [--dataset karate] [--k 2] [--seed 42] [--n 0]
+                  [--shards dir] [--train] [--epochs 2]
+                  [--format json|prom] [--out file]
+                  (runs a small partition workload — plus the serving
+                   engine when --shards is given and a tiny training run
+                   when --train is given — then dumps the metrics
+                   registry as JSON or Prometheus text)
   repro info      (dataset defaults + compiled artifact inventory)
+
+  any subcommand: --trace-out trace.json   (record tracing spans; write
+                   Chrome-trace JSON on exit; config: [obs] trace = "...")
 
 SPEC grammar (stages joined by '+', optional key=value parameters):
   detect:     leiden(gamma,beta,theta) | louvain(gamma,beta) |
@@ -73,7 +89,7 @@ SPEC grammar (stages joined by '+', optional key=value parameters):
 ";
 
 /// Boolean switches (never bind the next token as a value).
-const SWITCHES: &[&str] = &["help", "warm"];
+const SWITCHES: &[&str] = &["help", "warm", "train"];
 
 fn main() {
     init_logging();
@@ -99,18 +115,49 @@ fn run(args: &Args) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     }
+    let trace_out = trace_out_path(args)?;
+    if trace_out.is_some() {
+        obs::set_enabled(true);
+    }
+    let result = dispatch(args);
+    if let Some(path) = trace_out {
+        // write the trace even when the command failed — a trace of a
+        // failing run is exactly when you want one
+        obs::write_chrome_trace(&path)?;
+        eprintln!("trace written to {path}");
+    }
+    result
+}
+
+fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("partition") => cmd_partition(args),
         Some("train") => cmd_train(args),
         Some("pipeline") => cmd_pipeline(args),
         Some("serve") => cmd_serve(args),
         Some("query") => cmd_query(args),
+        Some("metrics") => cmd_metrics(args),
         Some("info") => cmd_info(),
         _ => {
             println!("{USAGE}");
             Ok(())
         }
     }
+}
+
+/// Resolve the trace destination: `--trace-out` wins, then the
+/// `[obs] trace` key of a `--config` file.
+fn trace_out_path(args: &Args) -> Result<Option<String>> {
+    if let Some(p) = args.get("trace-out") {
+        return Ok(Some(p.to_string()));
+    }
+    if let Some(cfg) = args.get("config") {
+        let text = std::fs::read_to_string(cfg)?;
+        if let Some(p) = obs_trace_path(&Toml::parse(&text)?)? {
+            return Ok(Some(p.display().to_string()));
+        }
+    }
+    Ok(None)
 }
 
 /// Resolve a dataset by name with optional size override.
@@ -438,6 +485,75 @@ fn cmd_query(args: &Args) -> Result<()> {
     let preds = engine.query(&nodes)?;
     print_predictions(&preds);
     print_engine_stats(&engine);
+    Ok(())
+}
+
+/// `repro metrics` — exercise the instrumented hot paths inside this
+/// process, then snapshot the global metrics registry.
+///
+/// The registry is in-process state, so the subcommand generates its own
+/// activity: the partitioning pipeline always runs (artifact-free,
+/// `partition.*` series); `--shards <dir>` additionally drives the
+/// serving engine (`serve.*`); `--train` additionally runs a tiny
+/// end-to-end training job (`session.*` + `coordinator.*`), skipping
+/// itself with a note when PJRT artifacts are absent.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let dataset = args.str_or("dataset", "karate");
+    let spec = spec_from_args(args)?;
+    let k = args.usize_or("k", 2)?;
+    let seed = args.u64_or("seed", 42)?;
+    let n = args.usize_or("n", 0)?;
+    let format = args.str_or("format", "json");
+
+    let ds = load_dataset(&dataset, n, seed)?;
+    let report = PartitionPipeline::new(spec, seed).run(&ds.graph, k)?;
+
+    if args.get("shards").is_some() {
+        let (store, engine, _) = serve_setup(args)?;
+        let probe = store.num_nodes().min(64) as NodeId;
+        let nodes: Vec<NodeId> = (0..probe).collect();
+        engine.query(&nodes)?;
+        // a second pass over the same ids exercises the cache-hit path
+        engine.query(&nodes)?;
+    }
+
+    if args.has("train") {
+        let artifacts = match args.get("artifacts") {
+            Some(p) => PathBuf::from(p),
+            None => default_artifacts_dir(),
+        };
+        if artifacts.join("manifest.json").exists() {
+            let mut ccfg = CoordinatorConfig::new(artifacts);
+            ccfg.machines = 1;
+            ccfg.epochs = args.usize_or("epochs", 2)?;
+            ccfg.mlp_epochs = 10;
+            ccfg.seed = seed;
+            Coordinator::new(ccfg).run(&ds, &report.partitioning)?;
+        } else {
+            eprintln!(
+                "note: --train skipped — PJRT artifacts absent \
+                 (run `make artifacts`); session.* series will be empty"
+            );
+        }
+    }
+
+    let reg = obs::registry();
+    let text = match format.as_str() {
+        "json" => reg.snapshot_json().to_string(),
+        "prom" | "prometheus" => reg.render_prometheus(),
+        other => {
+            return Err(Error::Config(format!(
+                "--format expects json or prom, got {other:?}"
+            )))
+        }
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("metrics written to {path}");
+        }
+        None => println!("{text}"),
+    }
     Ok(())
 }
 

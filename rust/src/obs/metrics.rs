@@ -1,0 +1,637 @@
+//! Named counters, gauges, and log-bucketed histograms in a process-wide
+//! registry, snapshotable as JSON and Prometheus-style text.
+//!
+//! Handles are `Arc`-backed and lock-free to update: counters and gauges
+//! are single relaxed atomics, histograms add one `ln` plus two atomic
+//! adds per sample. The [`Registry`] keeps every instance alive forever
+//! (Prometheus-style — metrics never disappear mid-run).
+//!
+//! ## Shared vs owned instances
+//!
+//! `registry().counter("x")` returns a handle to **the** instance named
+//! `x` — every caller shares it. `owned_counter("x")` appends a **fresh**
+//! instance under the same name and hands it out exclusively; snapshots
+//! sum (counters) or merge (histograms) across instances. Owned instances
+//! are how per-object stats (each serve `Engine`, each `ExecSession`)
+//! keep their local view — `EngineStats` reads its own instances — while
+//! `repro metrics` still sees one aggregate per name.
+//!
+//! ## Histogram error bound
+//!
+//! Buckets are logarithmic: bucket `i` covers `[MIN·γ^i, MIN·γ^(i+1))`
+//! with `γ = 1.0201` and representative value `MIN·γ^(i+0.5)`. For any
+//! recorded `v` in `[MIN, MAX]`, the representative `r` of its bucket
+//! satisfies `γ^-0.5 < r/v ≤ γ^0.5`, i.e. relative error ≤ `√γ − 1 =
+//! 1%` exactly (1.01² = 1.0201). Quantiles pick the same rank as a
+//! sorted oracle (`round((n−1)·q)`), so a quantile estimate is within 1%
+//! of the exact order statistic — property-tested below. Values below
+//! `MIN = 1e-9` s clamp to bucket 0, values above `MAX = 1e6` s clamp to
+//! the last bucket; outside `[MIN, MAX]` the bound does not apply.
+
+use crate::util::json::{num, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Smallest representable sample (seconds): 1 ns.
+const MIN: f64 = 1e-9;
+/// Bucket growth factor; √γ − 1 = exactly 1% relative error.
+const GAMMA: f64 = 1.0201;
+/// `ceil(ln(1e6 / 1e-9) / ln γ)` — buckets spanning 1 ns ..= ~11.6 days.
+const NBUCKETS: usize = 1736;
+
+/// Monotone counter. Cloning shares the underlying cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Last-write-wins float value (f64 bits in an atomic).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits())))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// CAS-accumulate `v` into an f64 stored as bits.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+struct HistCore {
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+/// Log-bucketed histogram of seconds (see module docs for the 1%
+/// relative-error bound). Cloning shares the underlying buckets.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCore>);
+
+fn bucket_index(v: f64) -> usize {
+    if v <= MIN {
+        return 0;
+    }
+    let i = ((v / MIN).ln() / GAMMA.ln()).floor();
+    (i as usize).min(NBUCKETS - 1)
+}
+
+fn representative(i: usize) -> f64 {
+    MIN * ((i as f64 + 0.5) * GAMMA.ln()).exp()
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram(Arc::new(HistCore {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }))
+    }
+
+    /// Record one sample (seconds).
+    #[inline]
+    pub fn record(&self, v: f64) {
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.0.sum_bits, v);
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact running sum of all recorded samples (seconds) — this is the
+    /// one histogram read that carries no bucketing error, which is why
+    /// stage-seconds fields (`EngineStats`, `ExecStats`) can be views
+    /// over histograms without changing their reported totals.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Copy out a consistent-enough snapshot (relaxed reads; exact once
+    /// writers are quiescent).
+    pub fn snapshot(&self) -> HistogramData {
+        HistogramData {
+            count: self.count(),
+            sum: self.sum(),
+            buckets: self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
+    /// Quantile estimate over everything recorded so far (0 if empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.snapshot().quantile(q)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data histogram snapshot; merging snapshots is exactly the
+/// histogram of the concatenated samples (property-tested below).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramData {
+    pub count: u64,
+    pub sum: f64,
+    pub buckets: Vec<u64>,
+}
+
+impl HistogramData {
+    pub fn empty() -> Self {
+        HistogramData { count: 0, sum: 0.0, buckets: vec![0; NBUCKETS] }
+    }
+
+    pub fn merge(&mut self, other: &HistogramData) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Representative value of the bucket holding the rank-`round((n−1)q)`
+    /// sample — the same rank rule as `benchkit::Stats`, so estimates are
+    /// comparable to a sorted oracle.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > target {
+                return representative(i);
+            }
+        }
+        representative(NBUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+enum Family {
+    Counter(Vec<Counter>),
+    Gauge(Vec<Gauge>),
+    Histogram(Vec<Histogram>),
+}
+
+impl Family {
+    fn kind(&self) -> &'static str {
+        match self {
+            Family::Counter(_) => "counter",
+            Family::Gauge(_) => "gauge",
+            Family::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Named metric families. One process-wide instance lives behind
+/// [`registry`]; `Registry::new()` exists for tests.
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { families: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn with_family<T>(
+        &self,
+        name: &str,
+        make: impl FnOnce() -> Family,
+        pick: impl FnOnce(&mut Family) -> T,
+    ) -> T {
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(make);
+        pick(fam)
+    }
+
+    /// The shared counter named `name` (created on first use). Panics if
+    /// `name` is already registered as a different metric kind — names
+    /// are static strings in code, so that is a programming error.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.with_family(name, || Family::Counter(vec![Counter::new()]), |f| match f {
+            Family::Counter(v) => v[0].clone(),
+            other => panic!("metric {name:?} is a {}, not a counter", other.kind()),
+        })
+    }
+
+    /// A fresh counter instance under `name`, exclusive to the caller;
+    /// snapshots report the sum over all instances.
+    pub fn owned_counter(&self, name: &str) -> Counter {
+        self.with_family(name, || Family::Counter(Vec::new()), |f| match f {
+            Family::Counter(v) => {
+                let c = Counter::new();
+                v.push(c.clone());
+                c
+            }
+            other => panic!("metric {name:?} is a {}, not a counter", other.kind()),
+        })
+    }
+
+    /// The shared gauge named `name` (created on first use).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.with_family(name, || Family::Gauge(vec![Gauge::new()]), |f| match f {
+            Family::Gauge(v) => v[0].clone(),
+            other => panic!("metric {name:?} is a {}, not a gauge", other.kind()),
+        })
+    }
+
+    /// The shared histogram named `name` (created on first use).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.with_family(name, || Family::Histogram(vec![Histogram::new()]), |f| match f {
+            Family::Histogram(v) => v[0].clone(),
+            other => panic!("metric {name:?} is a {}, not a histogram", other.kind()),
+        })
+    }
+
+    /// A fresh histogram instance under `name`; snapshots merge all
+    /// instances (merge == histogram of concatenation).
+    pub fn owned_histogram(&self, name: &str) -> Histogram {
+        self.with_family(name, || Family::Histogram(Vec::new()), |f| match f {
+            Family::Histogram(v) => {
+                let h = Histogram::new();
+                v.push(h.clone());
+                h
+            }
+            other => panic!("metric {name:?} is a {}, not a histogram", other.kind()),
+        })
+    }
+
+    /// Aggregate every family: counters sum, gauges sum, histograms
+    /// merge.
+    fn aggregate(&self) -> Vec<(String, Aggregated)> {
+        let fams = self.families.lock().unwrap();
+        fams.iter()
+            .map(|(name, fam)| {
+                let agg = match fam {
+                    Family::Counter(v) => {
+                        Aggregated::Counter(v.iter().map(|c| c.get()).sum())
+                    }
+                    Family::Gauge(v) => Aggregated::Gauge(v.iter().map(|g| g.get()).sum()),
+                    Family::Histogram(v) => {
+                        let mut data = HistogramData::empty();
+                        for h in v {
+                            data.merge(&h.snapshot());
+                        }
+                        Aggregated::Histogram(data)
+                    }
+                };
+                (name.clone(), agg)
+            })
+            .collect()
+    }
+
+    /// JSON snapshot: `{"counters": {..}, "gauges": {..},
+    /// "histograms": {name: {count, sum, mean, p50, p95, p99, p999}}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for (name, agg) in self.aggregate() {
+            match agg {
+                Aggregated::Counter(n) => {
+                    counters.insert(name, num(n as f64));
+                }
+                Aggregated::Gauge(v) => {
+                    gauges.insert(name, num(v));
+                }
+                Aggregated::Histogram(d) => {
+                    let h = Json::Obj(BTreeMap::from([
+                        ("count".to_string(), num(d.count as f64)),
+                        ("sum".to_string(), num(d.sum)),
+                        ("mean".to_string(), num(d.mean())),
+                        ("p50".to_string(), num(d.quantile(0.50))),
+                        ("p95".to_string(), num(d.quantile(0.95))),
+                        ("p99".to_string(), num(d.quantile(0.99))),
+                        ("p999".to_string(), num(d.quantile(0.999))),
+                    ]));
+                    hists.insert(name, h);
+                }
+            }
+        }
+        Json::Obj(BTreeMap::from([
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(hists)),
+        ]))
+    }
+
+    /// Prometheus-style exposition text: counters and gauges as single
+    /// samples, histograms as summaries with quantile labels.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, agg) in self.aggregate() {
+            let pname = sanitize(&name);
+            match agg {
+                Aggregated::Counter(n) => {
+                    out.push_str(&format!("# TYPE {pname} counter\n{pname} {n}\n"));
+                }
+                Aggregated::Gauge(v) => {
+                    out.push_str(&format!("# TYPE {pname} gauge\n{pname} {v}\n"));
+                }
+                Aggregated::Histogram(d) => {
+                    out.push_str(&format!("# TYPE {pname} summary\n"));
+                    for (label, q) in
+                        [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99), ("0.999", 0.999)]
+                    {
+                        out.push_str(&format!(
+                            "{pname}{{quantile=\"{label}\"}} {}\n",
+                            d.quantile(q)
+                        ));
+                    }
+                    out.push_str(&format!("{pname}_sum {}\n", d.sum));
+                    out.push_str(&format!("{pname}_count {}\n", d.count));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+enum Aggregated {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramData),
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; map everything else
+/// (our `.`-separated names) to `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(-2.5);
+        assert_eq!(g.get(), -2.5);
+    }
+
+    #[test]
+    fn histogram_sum_is_exact_and_count_tracks() {
+        let h = Histogram::new();
+        for v in [0.001, 0.002, 0.003] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 0.006).abs() < 1e-12);
+        let p50 = h.quantile(0.5);
+        assert!((p50 - 0.002).abs() / 0.002 <= 0.0101, "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let h = Histogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(1e12);
+        assert_eq!(h.count(), 3);
+        let d = h.snapshot();
+        assert_eq!(d.buckets[0], 2);
+        assert_eq!(d.buckets[NBUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+        assert_eq!(HistogramData::empty().quantile(0.99), 0.0);
+    }
+
+    // Satellite: quantile estimates vs an exact sorted oracle, within the
+    // documented √γ − 1 = 1% relative-error bound.
+    #[test]
+    fn prop_quantiles_match_sorted_oracle_within_bound() {
+        check(
+            "hist-quantile-vs-oracle",
+            40,
+            11,
+            |rng| {
+                let n = 1 + rng.index(200);
+                // log-uniform over ~1e-8 .. 1e4 seconds
+                (0..n).map(|_| 10f64.powf(rng.f64() * 12.0 - 8.0)).collect::<Vec<f64>>()
+            },
+            |samples| {
+                let h = Histogram::new();
+                for &v in samples {
+                    h.record(v);
+                }
+                let mut sorted = samples.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = sorted.len();
+                for q in [0.5, 0.95, 0.99, 0.999] {
+                    let oracle = sorted[((n as f64 - 1.0) * q).round() as usize];
+                    let est = h.quantile(q);
+                    let rel = (est - oracle).abs() / oracle;
+                    if rel > 0.0101 {
+                        return Err(format!(
+                            "q={q}: est {est} vs oracle {oracle} (rel err {rel:.4})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // Satellite: merge-of-histograms == histogram-of-concatenation,
+    // exactly on counts and buckets (sum is float-add-order sensitive,
+    // so approximately there).
+    #[test]
+    fn prop_merge_equals_concatenation() {
+        check(
+            "hist-merge-vs-concat",
+            40,
+            23,
+            |rng| {
+                let n = rng.index(150);
+                let split = if n == 0 { 0 } else { rng.index(n + 1) };
+                let all: Vec<f64> =
+                    (0..n).map(|_| 10f64.powf(rng.f64() * 12.0 - 8.0)).collect();
+                (all, split)
+            },
+            |(all, split)| {
+                let (h1, h2, hcat) = (Histogram::new(), Histogram::new(), Histogram::new());
+                for (i, &v) in all.iter().enumerate() {
+                    if i < *split {
+                        h1.record(v);
+                    } else {
+                        h2.record(v);
+                    }
+                    hcat.record(v);
+                }
+                let mut merged = h1.snapshot();
+                merged.merge(&h2.snapshot());
+                let cat = hcat.snapshot();
+                if merged.count != cat.count {
+                    return Err(format!("count {} vs {}", merged.count, cat.count));
+                }
+                if merged.buckets != cat.buckets {
+                    return Err("bucket mismatch".to_string());
+                }
+                let tol = 1e-9 * cat.sum.abs().max(1e-30);
+                if (merged.sum - cat.sum).abs() > tol {
+                    return Err(format!("sum {} vs {}", merged.sum, cat.sum));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn registry_shared_vs_owned_instances() {
+        let reg = Registry::new();
+        let a = reg.counter("shared.hits");
+        let b = reg.counter("shared.hits");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "shared handles alias one cell");
+
+        let o1 = reg.owned_counter("owned.hits");
+        let o2 = reg.owned_counter("owned.hits");
+        o1.add(3);
+        o2.add(4);
+        assert_eq!(o1.get(), 3, "owned instances are private");
+        assert_eq!(o2.get(), 4);
+
+        let snap = reg.snapshot_json();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("shared.hits").unwrap().as_f64(), Some(2.0));
+        assert_eq!(counters.get("owned.hits").unwrap().as_f64(), Some(7.0));
+    }
+
+    #[test]
+    fn registry_merges_owned_histograms_in_snapshot() {
+        let reg = Registry::new();
+        let h1 = reg.owned_histogram("stage.secs");
+        let h2 = reg.owned_histogram("stage.secs");
+        h1.record(0.010);
+        h2.record(0.020);
+        let snap = reg.snapshot_json();
+        let h = snap.get("histograms").unwrap().get("stage.secs").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(2.0));
+        assert!((h.get("sum").unwrap().as_f64().unwrap() - 0.030).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a counter")]
+    fn registry_rejects_kind_mismatch() {
+        let reg = Registry::new();
+        let _ = reg.histogram("x");
+        let _ = reg.counter("x");
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let reg = Registry::new();
+        reg.counter("serve.requests").add(9);
+        reg.gauge("parts").set(4.0);
+        let h = reg.histogram("serve.gather_secs");
+        h.record(0.001);
+        h.record(0.002);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE serve_requests counter\nserve_requests 9\n"));
+        assert!(text.contains("# TYPE parts gauge\nparts 4\n"));
+        assert!(text.contains("# TYPE serve_gather_secs summary\n"));
+        assert!(text.contains("serve_gather_secs{quantile=\"0.5\"}"));
+        assert!(text.contains("serve_gather_secs_count 2\n"));
+    }
+
+    #[test]
+    fn snapshot_json_parses_back() {
+        let reg = Registry::new();
+        reg.counter("a.b").inc();
+        reg.histogram("c.d").record(0.5);
+        let text = reg.snapshot_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(parsed.get("counters").is_some());
+        assert!(parsed.get("histograms").unwrap().get("c.d").unwrap().get("p999").is_some());
+    }
+}

@@ -1,0 +1,29 @@
+//! Observability: tracing spans + a metrics registry (offline build — no
+//! `tracing`, no `prometheus`).
+//!
+//! Two halves, one switch:
+//!
+//! - [`trace`]: nested, thread-aware spans behind RAII guards. Each thread
+//!   records into a thread-local buffer that drains into a global
+//!   collector; [`trace::write_chrome_trace`] exports the collected events
+//!   in Chrome `trace_event` JSON (load it in `about:tracing` / Perfetto).
+//! - [`metrics`]: named counters, gauges, and log-bucketed histograms
+//!   (p50/p95/p99/p999 within a documented relative-error bound) in a
+//!   process-wide [`metrics::Registry`], snapshotable as JSON and as
+//!   Prometheus-style text (`repro metrics`).
+//!
+//! Tracing is **disabled by default** and costs ~one relaxed atomic load
+//! per call site when off (`micro_hotpath` proves this): `span()` returns
+//! an inert guard without touching thread-local state or the clock.
+//! Metric handles are always-on relaxed atomics — the same cost as the
+//! ad-hoc `AtomicU64` stats they replaced in the serving engine and exec
+//! session. Enabling tracing must not perturb results — the
+//! byte-identical determinism contracts (partition labels, serve logits,
+//! session training) hold with tracing on, because spans only observe
+//! timestamps and never branch the instrumented code.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
+pub use trace::{event, set_enabled, span, tracing_enabled, write_chrome_trace, Span};

@@ -1,0 +1,379 @@
+//! Thread-aware span tracer with Chrome `trace_event` export.
+//!
+//! A [`Span`] is an RAII guard: [`span`] stamps the start time, `Drop`
+//! stamps the duration and records a complete ("X") event. Each thread
+//! appends to its own fixed-capacity ring buffer; a full buffer — or the
+//! thread exiting — drains into the global collector, so the hot path
+//! never contends on a lock. [`write_chrome_trace`] serializes the
+//! collector as `{"traceEvents": [...]}`, loadable in `about:tracing` or
+//! Perfetto; nesting is reconstructed from timestamps per thread id.
+//!
+//! Tracing is off unless [`set_enabled`]`(true)` ran (the CLI does this
+//! when `--trace-out` / `[obs] trace` is set). The off path is a single
+//! relaxed atomic load: no clock read, no allocation, no thread-local
+//! access (`micro_hotpath`'s "obs span (disabled)" entry measures it,
+//! next to the bare-load floor it is specified against). Spans
+//! only observe the instrumented code — timestamps never feed back into
+//! results — so determinism contracts hold with tracing enabled.
+
+use crate::util::json::{obj, num, Json};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Global on/off switch; every recording call checks this first.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// t=0 of the trace, set when tracing is first enabled.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+/// Completed events drained from per-thread buffers.
+static COLLECTOR: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+/// Events discarded after [`MAX_EVENTS`] was reached.
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// Monotonic thread-id source (0 is reserved so tids start at 1).
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+/// Per-thread ring capacity before draining into the collector.
+const RING_CAPACITY: usize = 256;
+/// Collector cap — beyond this, events are counted as dropped, not kept.
+const MAX_EVENTS: usize = 1 << 20;
+
+/// One recorded event in Chrome `trace_event` terms: `ph` is `"X"` for a
+/// complete span (has `dur`) or `"i"` for an instant event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: &'static str,
+    pub ph: char,
+    /// Microseconds since the trace epoch.
+    pub ts_us: f64,
+    /// Span duration in microseconds (0 for instant events).
+    pub dur_us: f64,
+    pub tid: u32,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+struct LocalRing {
+    tid: u32,
+    events: Vec<TraceEvent>,
+}
+
+impl LocalRing {
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut global = COLLECTOR.lock().unwrap();
+        let room = MAX_EVENTS.saturating_sub(global.len());
+        let take = self.events.len().min(room);
+        let dropped = self.events.len() - take;
+        global.extend(self.events.drain(..take));
+        self.events.clear();
+        if dropped > 0 {
+            DROPPED.fetch_add(dropped as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+        if self.events.len() >= RING_CAPACITY {
+            self.flush();
+        }
+    }
+}
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static RING: RefCell<LocalRing> = RefCell::new(LocalRing {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        events: Vec::with_capacity(RING_CAPACITY),
+    });
+}
+
+/// Turn tracing on or off. The first enable fixes the trace epoch.
+pub fn set_enabled(on: bool) {
+    if on {
+        EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether tracing is currently recording.
+#[inline]
+pub fn tracing_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn now_us() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6
+}
+
+/// RAII span guard. Inert (all-`None`) when tracing is disabled; records
+/// a complete event covering `span(..)`→`Drop` otherwise.
+pub struct Span {
+    data: Option<SpanData>,
+}
+
+struct SpanData {
+    name: String,
+    cat: &'static str,
+    start_us: f64,
+    args: Vec<(&'static str, Json)>,
+}
+
+impl Span {
+    /// Attach an attribute (rendered under `args` in the trace). No-op on
+    /// an inert span, so callers never pay for attribute construction
+    /// inside — only for building the `Json` argument, which should be
+    /// cheap scalars on hot paths.
+    pub fn attr(&mut self, key: &'static str, value: Json) {
+        if let Some(d) = &mut self.data {
+            d.args.push((key, value));
+        }
+    }
+
+    /// Builder-style [`Span::attr`].
+    pub fn with(mut self, key: &'static str, value: Json) -> Self {
+        self.attr(key, value);
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(d) = self.data.take() {
+            let end_us = now_us();
+            let ev = TraceEvent {
+                name: d.name,
+                cat: d.cat,
+                ph: 'X',
+                ts_us: d.start_us,
+                dur_us: (end_us - d.start_us).max(0.0),
+                tid: 0, // stamped below from the thread-local ring
+                args: d.args,
+            };
+            RING.with(|r| {
+                let mut r = r.borrow_mut();
+                let tid = r.tid;
+                r.push(TraceEvent { tid, ..ev });
+            });
+        }
+    }
+}
+
+/// Open a span. Returns an inert guard (one relaxed atomic load, nothing
+/// else) when tracing is disabled.
+#[inline]
+pub fn span(cat: &'static str, name: &str) -> Span {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { data: None };
+    }
+    Span {
+        data: Some(SpanData {
+            name: name.to_string(),
+            cat,
+            start_us: now_us(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+/// Record an instant event (a point-in-time marker, `ph = "i"`). This is
+/// how progress lines that used to be `log::info!` chatter land in the
+/// trace without touching stderr.
+#[inline]
+pub fn event(cat: &'static str, name: &str, args: Vec<(&'static str, Json)>) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let ts_us = now_us();
+    RING.with(|r| {
+        let mut r = r.borrow_mut();
+        let tid = r.tid;
+        r.push(TraceEvent {
+            name: name.to_string(),
+            cat,
+            ph: 'i',
+            ts_us,
+            dur_us: 0.0,
+            tid,
+            args,
+        });
+    });
+}
+
+/// Flush this thread's ring and take every collected event. Buffers of
+/// *live* other threads are drained only when full or at thread exit, so
+/// call this after worker threads have joined (the CLI writes traces
+/// after engines and pools are dropped).
+pub fn drain() -> Vec<TraceEvent> {
+    RING.with(|r| r.borrow_mut().flush());
+    std::mem::take(&mut *COLLECTOR.lock().unwrap())
+}
+
+/// Events discarded because the collector cap was reached.
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Render events as a Chrome `trace_event` document.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let arr = events
+        .iter()
+        .map(|e| {
+            let mut pairs = vec![
+                ("name", Json::Str(e.name.clone())),
+                ("cat", Json::Str(e.cat.to_string())),
+                ("ph", Json::Str(e.ph.to_string())),
+                ("ts", num(e.ts_us)),
+                ("pid", num(1.0)),
+                ("tid", num(e.tid as f64)),
+            ];
+            if e.ph == 'X' {
+                pairs.push(("dur", num(e.dur_us)));
+            }
+            if e.ph == 'i' {
+                // instant scope: thread
+                pairs.push(("s", Json::Str("t".to_string())));
+            }
+            if !e.args.is_empty() {
+                pairs.push((
+                    "args",
+                    obj(e.args.iter().map(|(k, v)| (*k, v.clone())).collect()),
+                ));
+            }
+            obj(pairs)
+        })
+        .collect();
+    obj(vec![
+        ("traceEvents", Json::Arr(arr)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Drain all collected events and write them to `path` as Chrome-trace
+/// JSON. Logs (debug level) how many events were written or dropped.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    let events = drain();
+    let doc = chrome_trace_json(&events);
+    std::fs::write(path, doc.to_string())?;
+    let dropped = dropped_events();
+    if dropped > 0 {
+        log::warn!("trace collector overflowed: {dropped} events dropped");
+    }
+    log::debug!("wrote {} trace events to {path}", events.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global and cargo runs tests in parallel,
+    // so these tests serialize on a lock, assert only on their own
+    // uniquely-named events, and re-disable tracing when done.
+
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn my_events(tag: &str) -> Vec<TraceEvent> {
+        drain().into_iter().filter(|e| e.name.starts_with(tag)).collect()
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = serial();
+        set_enabled(false);
+        {
+            let mut s = span("test", "disabled_span_records_nothing.s");
+            s.attr("k", num(1.0));
+        }
+        event("test", "disabled_span_records_nothing.e", vec![]);
+        assert!(my_events("disabled_span_records_nothing").is_empty());
+    }
+
+    #[test]
+    fn span_and_event_round_trip_through_collector() {
+        let _g = serial();
+        set_enabled(true);
+        {
+            let _s = span("test", "round_trip.outer").with("k", num(7.0));
+            let _inner = span("test", "round_trip.inner");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        event("test", "round_trip.mark", vec![("part", num(3.0))]);
+        set_enabled(false);
+        let evs = my_events("round_trip");
+        assert_eq!(evs.len(), 3);
+        let outer = evs.iter().find(|e| e.name == "round_trip.outer").unwrap();
+        assert_eq!(outer.ph, 'X');
+        assert!(outer.dur_us > 0.0);
+        assert_eq!(outer.args[0].0, "k");
+        let inner = evs.iter().find(|e| e.name == "round_trip.inner").unwrap();
+        // inner nests within outer: starts later, ends no later
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1.0);
+        let mark = evs.iter().find(|e| e.name == "round_trip.mark").unwrap();
+        assert_eq!(mark.ph, 'i');
+        assert_eq!(mark.dur_us, 0.0);
+    }
+
+    #[test]
+    fn threads_get_distinct_tids_and_flush_on_exit() {
+        let _g = serial();
+        set_enabled(true);
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let _s = span("test", &format!("tid_test.worker{i}"));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        set_enabled(false);
+        let evs = my_events("tid_test");
+        assert_eq!(evs.len(), 3);
+        let mut tids: Vec<u32> = evs.iter().map(|e| e.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), 3, "each thread has its own tid");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_required_keys() {
+        let _g = serial();
+        set_enabled(true);
+        {
+            let _s = span("test", "export_test.phase").with("n", num(34.0));
+        }
+        event("test", "export_test.note", vec![]);
+        set_enabled(false);
+        let events = my_events("export_test");
+        let doc = chrome_trace_json(&events);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let arr = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        for e in arr {
+            assert!(e.get("name").unwrap().as_str().is_some());
+            assert!(e.get("ts").unwrap().as_f64().is_some());
+            assert!(e.get("pid").unwrap().as_f64().is_some());
+            assert!(e.get("tid").unwrap().as_f64().is_some());
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            match ph {
+                "X" => assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0),
+                "i" => assert_eq!(e.get("s").unwrap().as_str(), Some("t")),
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+    }
+}

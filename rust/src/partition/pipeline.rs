@@ -23,6 +23,8 @@ use super::spec::{
 use super::{Partitioner, Partitioning};
 use crate::error::{Error, Result};
 use crate::graph::{is_connected, CsrGraph};
+use crate::obs;
+use crate::util::json;
 use crate::util::{fmt_duration, Stopwatch};
 use std::cell::OnceCell;
 
@@ -194,6 +196,16 @@ impl PartitionPipeline {
         if k == 0 {
             return Err(Error::Partition("k must be positive".into()));
         }
+        let mut run_span = obs::span("partition", "pipeline");
+        if obs::tracing_enabled() {
+            run_span.attr("spec", json::s(&self.spec.to_string()));
+            run_span.attr("k", json::num(k as f64));
+            run_span.attr("nodes", json::num(g.num_nodes() as f64));
+            run_span.attr("edges", json::num(g.num_edges() as f64));
+            run_span.attr("threads", json::num(self.threads as f64));
+        }
+        obs::registry().counter("partition.runs").inc();
+        let stage_hist = obs::registry().histogram("partition.stage_secs");
         observer(&PipelineEvent::PipelineStarted {
             spec: &self.spec,
             k,
@@ -204,9 +216,14 @@ impl PartitionPipeline {
         let mut timings = Vec::with_capacity(self.stages.len());
         for (index, stage) in self.stages.iter().enumerate() {
             observer(&PipelineEvent::StageStarted { index, name: stage.name() });
+            let mut sp = obs::span("partition", stage.name());
+            sp.attr("index", json::num(index as f64));
             let sw = Stopwatch::start();
             let next = stage.run(&ctx, current.take())?;
             let secs = sw.secs();
+            sp.attr("parts", json::num(next.k() as f64));
+            drop(sp);
+            stage_hist.record(secs);
             observer(&PipelineEvent::StageFinished {
                 index,
                 name: stage.name(),

@@ -22,6 +22,7 @@
 
 use super::manifest::{ArtifactMeta, DType, Manifest};
 use crate::error::{Error, Result};
+use crate::obs::{self, Counter, Histogram};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
@@ -210,7 +211,11 @@ impl Executable {
 }
 
 /// Transfer and phase counters of an [`ExecSession`] — the raw numbers
-/// behind `BENCH_train.json`.
+/// behind `BENCH_train.json`. Snapshot of the session's owned [`obs`]
+/// registry instances ([`ExecSession::stats`]): the same numbers surface
+/// globally under `session.*` in `repro metrics`, while each session
+/// reads only its own instances here. The `*_secs` totals are histogram
+/// sums, which are exact.
 #[derive(Clone, Debug, Default)]
 pub struct ExecStats {
     /// Completed executions (`run_step` + `run_outputs`).
@@ -229,6 +234,48 @@ pub struct ExecStats {
     /// PJRT plugin returned one tuple buffer instead of untupled
     /// per-output buffers (see [`ExecSession::run_step`]).
     pub tuple_fallback_steps: usize,
+}
+
+/// This session's owned instances in the global metrics registry:
+/// private cells for the per-session [`ExecStats`] view, merged across
+/// sessions by `repro metrics` snapshots. Phase durations land in
+/// histograms (per-call latency distributions); the histogram sums are
+/// the cumulative `*_secs` the view reports.
+struct SessionMetrics {
+    steps: Counter,
+    stage: Histogram,
+    execute: Histogram,
+    download: Histogram,
+    bytes_to_device: Counter,
+    bytes_to_host: Counter,
+    tuple_fallback_steps: Counter,
+}
+
+impl SessionMetrics {
+    fn new() -> SessionMetrics {
+        let reg = obs::registry();
+        SessionMetrics {
+            steps: reg.owned_counter("session.steps"),
+            stage: reg.owned_histogram("session.stage_secs"),
+            execute: reg.owned_histogram("session.execute_secs"),
+            download: reg.owned_histogram("session.download_secs"),
+            bytes_to_device: reg.owned_counter("session.bytes_to_device"),
+            bytes_to_host: reg.owned_counter("session.bytes_to_host"),
+            tuple_fallback_steps: reg.owned_counter("session.tuple_fallback_steps"),
+        }
+    }
+
+    fn snapshot(&self) -> ExecStats {
+        ExecStats {
+            steps: self.steps.get() as usize,
+            stage_secs: self.stage.sum(),
+            execute_secs: self.execute.sum(),
+            download_secs: self.download.sum(),
+            bytes_to_device: self.bytes_to_device.get(),
+            bytes_to_host: self.bytes_to_host.get(),
+            tuple_fallback_steps: self.tuple_fallback_steps.get() as usize,
+        }
+    }
 }
 
 /// Device-resident execution session.
@@ -256,7 +303,7 @@ pub struct ExecSession {
     /// Device buffers of the invariant inputs (inputs `state_len..`),
     /// uploaded once and reused every call.
     staged: Vec<xla::PjRtBuffer>,
-    stats: ExecStats,
+    metrics: SessionMetrics,
 }
 
 fn upload(
@@ -264,11 +311,11 @@ fn upload(
     exe: &Executable,
     idx: usize,
     t: &Tensor,
-    stats: &mut ExecStats,
+    metrics: &SessionMetrics,
 ) -> Result<xla::PjRtBuffer> {
     let lit = exe.literal_of(idx, t)?;
     let buf = client.buffer_from_host_literal(None, &lit)?;
-    stats.bytes_to_device += t.byte_len() as u64;
+    metrics.bytes_to_device.add(t.byte_len() as u64);
     Ok(buf)
 }
 
@@ -299,18 +346,23 @@ impl ExecSession {
                 meta.outputs.len()
             )));
         }
-        let mut stats = ExecStats::default();
+        let metrics = SessionMetrics::new();
+        let mut sp = obs::span("runtime", "session.stage");
+        sp.attr(
+            "inputs",
+            crate::util::json::num((state.len() + invariant.len()) as f64),
+        );
         let sw = Instant::now();
         let mut state_bufs = Vec::with_capacity(state.len());
         for (i, t) in state.iter().enumerate() {
-            state_bufs.push(upload(&client, &exe, i, t, &mut stats)?);
+            state_bufs.push(upload(&client, &exe, i, t, &metrics)?);
         }
         let mut staged = Vec::with_capacity(invariant.len());
         for (j, t) in invariant.iter().enumerate() {
-            staged.push(upload(&client, &exe, state.len() + j, t, &mut stats)?);
+            staged.push(upload(&client, &exe, state.len() + j, t, &metrics)?);
         }
-        stats.stage_secs += sw.elapsed().as_secs_f64();
-        Ok(ExecSession { client, exe, state: state_bufs, staged, stats })
+        metrics.stage.record(sw.elapsed().as_secs_f64());
+        Ok(ExecSession { client, exe, state: state_bufs, staged, metrics })
     }
 
     /// The artifact this session drives.
@@ -318,16 +370,18 @@ impl ExecSession {
         &self.exe.meta
     }
 
-    pub fn stats(&self) -> &ExecStats {
-        &self.stats
+    /// Snapshot of this session's transfer/phase counters.
+    pub fn stats(&self) -> ExecStats {
+        self.metrics.snapshot()
     }
 
     fn execute(&mut self) -> Result<Vec<xla::PjRtBuffer>> {
+        let _sp = obs::span("runtime", "session.execute");
         let sw = Instant::now();
         let args: Vec<&xla::PjRtBuffer> =
             self.state.iter().chain(self.staged.iter()).collect();
         let mut result = self.exe.exe.execute_b(&args)?;
-        self.stats.execute_secs += sw.elapsed().as_secs_f64();
+        self.metrics.execute.record(sw.elapsed().as_secs_f64());
         if result.is_empty() || result[0].is_empty() {
             return Err(Error::Runtime(format!(
                 "{}: execution returned no buffers",
@@ -361,8 +415,8 @@ impl ExecSession {
                 .first()
                 .copied()
                 .ok_or_else(|| Error::Runtime("empty loss output".into()))?;
-            self.stats.download_secs += sw.elapsed().as_secs_f64();
-            self.stats.bytes_to_host += 4;
+            self.metrics.download.record(sw.elapsed().as_secs_f64());
+            self.metrics.bytes_to_host.add(4);
             outs.truncate(p);
             self.state = outs;
             loss
@@ -376,7 +430,7 @@ impl ExecSession {
                 n_out
             )));
         };
-        self.stats.steps += 1;
+        self.metrics.steps.inc();
         Ok(loss)
     }
 
@@ -385,7 +439,7 @@ impl ExecSession {
     fn tuple_fallback_step(&mut self, tuple_buf: &xla::PjRtBuffer) -> Result<f32> {
         let p = self.state.len();
         let meta = &self.exe.meta;
-        self.stats.tuple_fallback_steps += 1;
+        self.metrics.tuple_fallback_steps.inc();
         let sw = Instant::now();
         let tuple = tuple_buf.to_literal_sync()?;
         let parts = tuple.to_tuple()?;
@@ -399,8 +453,8 @@ impl ExecSession {
         }
         let out_bytes: u64 =
             meta.outputs.iter().map(|s| 4 * s.num_elements() as u64).sum();
-        self.stats.bytes_to_host += out_bytes;
-        self.stats.download_secs += sw.elapsed().as_secs_f64();
+        self.metrics.bytes_to_host.add(out_bytes);
+        self.metrics.download.record(sw.elapsed().as_secs_f64());
         let loss = parts
             .last()
             .expect("outputs non-empty by construction check")
@@ -415,8 +469,8 @@ impl ExecSession {
         }
         let state_bytes: u64 =
             meta.inputs.iter().take(p).map(|s| 4 * s.num_elements() as u64).sum();
-        self.stats.bytes_to_device += state_bytes;
-        self.stats.stage_secs += sw.elapsed().as_secs_f64();
+        self.metrics.bytes_to_device.add(state_bytes);
+        self.metrics.stage.record(sw.elapsed().as_secs_f64());
         self.state = new_state;
         Ok(loss)
     }
@@ -424,7 +478,7 @@ impl ExecSession {
     /// Decompose a downloaded tuple literal into per-output tensors (the
     /// tuple-buffer plugin shape, counted as a fallback step).
     fn untuple_outputs(&mut self, tuple: xla::Literal) -> Result<Vec<Tensor>> {
-        self.stats.tuple_fallback_steps += 1;
+        self.metrics.tuple_fallback_steps.inc();
         let parts = tuple.to_tuple()?;
         if parts.len() != self.exe.meta.outputs.len() {
             return Err(Error::Runtime(format!(
@@ -484,15 +538,16 @@ impl ExecSession {
             )));
         };
         let bytes: u64 = tensors.iter().map(|t| t.byte_len() as u64).sum();
-        self.stats.bytes_to_host += bytes;
-        self.stats.download_secs += sw.elapsed().as_secs_f64();
-        self.stats.steps += 1;
+        self.metrics.bytes_to_host.add(bytes);
+        self.metrics.download.record(sw.elapsed().as_secs_f64());
+        self.metrics.steps.inc();
         Ok(tensors)
     }
 
     /// Download the current state block (params, moments, step counter) as
     /// host tensors — the once-at-the-end transfer of a training run.
     pub fn state_tensors(&mut self) -> Result<Vec<Tensor>> {
+        let _sp = obs::span("runtime", "session.download_state");
         let sw = Instant::now();
         let mut out = Vec::with_capacity(self.state.len());
         let mut bytes = 0u64;
@@ -502,8 +557,8 @@ impl ExecSession {
             bytes += t.byte_len() as u64;
             out.push(t);
         }
-        self.stats.bytes_to_host += bytes;
-        self.stats.download_secs += sw.elapsed().as_secs_f64();
+        self.metrics.bytes_to_host.add(bytes);
+        self.metrics.download.record(sw.elapsed().as_secs_f64());
         Ok(out)
     }
 }

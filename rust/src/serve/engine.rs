@@ -22,11 +22,13 @@ use super::cache::{Flight, Lookup, ResultCache};
 use super::store::ShardedEmbeddingStore;
 use crate::error::{Error, Result};
 use crate::graph::NodeId;
+use crate::obs::{self, Counter, Histogram};
 use crate::runtime::{ArtifactMeta, Manifest, Runtime, Tensor};
 use crate::train::checkpoint::load_tensors;
+use crate::util::json::num;
 use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -82,7 +84,12 @@ pub struct Prediction {
     pub logits: Vec<f32>,
 }
 
-/// Monotonic serving counters (snapshot via [`Engine::stats`]).
+/// Monotonic serving counters (snapshot via [`Engine::stats`]). This is
+/// a *view* over the engine's owned [`obs`] registry instances: the same
+/// numbers surface globally under `serve.*` in `repro metrics`, while
+/// each engine still reads only its own instances here (the `*_secs`
+/// totals are histogram sums, which are exact — see
+/// [`obs::metrics::Histogram::sum`]).
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub requests: u64,
@@ -147,6 +154,38 @@ struct QueueState {
     poisoned: Option<String>,
 }
 
+/// This engine's owned instances in the global metrics registry: private
+/// cells for the per-engine [`EngineStats`] view, merged across engines
+/// by `repro metrics` snapshots.
+struct EngineMetrics {
+    requests: Counter,
+    cache_hits: Counter,
+    coalesced: Counter,
+    batches: Counter,
+    computed: Counter,
+    /// Per-batch gather/forward/publish latencies; sums are the
+    /// cumulative stage seconds `EngineStats` reports.
+    gather: Histogram,
+    forward: Histogram,
+    publish: Histogram,
+}
+
+impl EngineMetrics {
+    fn new() -> EngineMetrics {
+        let reg = obs::registry();
+        EngineMetrics {
+            requests: reg.owned_counter("serve.requests"),
+            cache_hits: reg.owned_counter("serve.cache_hits"),
+            coalesced: reg.owned_counter("serve.coalesced"),
+            batches: reg.owned_counter("serve.batches"),
+            computed: reg.owned_counter("serve.computed"),
+            gather: reg.owned_histogram("serve.gather_secs"),
+            forward: reg.owned_histogram("serve.forward_secs"),
+            publish: reg.owned_histogram("serve.publish_secs"),
+        }
+    }
+}
+
 struct Shared {
     state: Mutex<QueueState>,
     notify: Condvar,
@@ -158,14 +197,7 @@ struct Shared {
     /// Pred-artifact metadata resolved at construction time.
     meta: ArtifactMeta,
     cfg: EngineConfig,
-    requests: AtomicU64,
-    cache_hits: AtomicU64,
-    coalesced: AtomicU64,
-    batches: AtomicU64,
-    computed: AtomicU64,
-    gather_nanos: AtomicU64,
-    forward_nanos: AtomicU64,
-    publish_nanos: AtomicU64,
+    metrics: EngineMetrics,
 }
 
 /// The serving engine. `&self` methods are thread-safe; clone node lists
@@ -243,14 +275,7 @@ impl Engine {
             params,
             meta,
             cfg,
-            requests: AtomicU64::new(0),
-            cache_hits: AtomicU64::new(0),
-            coalesced: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            computed: AtomicU64::new(0),
-            gather_nanos: AtomicU64::new(0),
-            forward_nanos: AtomicU64::new(0),
-            publish_nanos: AtomicU64::new(0),
+            metrics: EngineMetrics::new(),
         });
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
@@ -281,7 +306,8 @@ impl Engine {
         if nodes.is_empty() {
             return Ok(Vec::new());
         }
-        self.shared.requests.fetch_add(nodes.len() as u64, Ordering::Relaxed);
+        let _sp = obs::span("serve", "query").with("n", num(nodes.len() as f64));
+        self.shared.metrics.requests.add(nodes.len() as u64);
         let mut out: Vec<Option<Prediction>> = vec![None; nodes.len()];
 
         // ---- cache / single-flight triage on the client thread ----------
@@ -308,8 +334,8 @@ impl Engine {
                 }
             }
         }
-        self.shared.cache_hits.fetch_add(hits, Ordering::Relaxed);
-        self.shared.coalesced.fetch_add(joins, Ordering::Relaxed);
+        self.shared.metrics.cache_hits.add(hits);
+        self.shared.metrics.coalesced.add(joins);
 
         if !compute.is_empty() {
             let enqueue_err = {
@@ -365,16 +391,16 @@ impl Engine {
     }
 
     pub fn stats(&self) -> EngineStats {
-        let nanos = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64 / 1e9;
+        let m = &self.shared.metrics;
         EngineStats {
-            requests: self.shared.requests.load(Ordering::Relaxed),
-            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
-            coalesced: self.shared.coalesced.load(Ordering::Relaxed),
-            batches: self.shared.batches.load(Ordering::Relaxed),
-            computed: self.shared.computed.load(Ordering::Relaxed),
-            gather_secs: nanos(&self.shared.gather_nanos),
-            forward_secs: nanos(&self.shared.forward_nanos),
-            publish_secs: nanos(&self.shared.publish_nanos),
+            requests: m.requests.get(),
+            cache_hits: m.cache_hits.get(),
+            coalesced: m.coalesced.get(),
+            batches: m.batches.get(),
+            computed: m.computed.get(),
+            gather_secs: m.gather.sum(),
+            forward_secs: m.forward.sum(),
+            publish_secs: m.publish.sum(),
         }
     }
 
@@ -539,9 +565,11 @@ fn process_batch(
     prev_rows: &mut usize,
     batch: Vec<Request>,
 ) {
-    shared.batches.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.batches.inc();
     let f = dims.f;
     let c = dims.c;
+    let mut sp = obs::span("serve", "batch");
+    sp.attr("rows", num(batch.len() as f64));
     let mut pending = PendingBatch { shared, reqs: batch.into() };
 
     // Gather embedding rows into the reusable x buffer: lookup is a dense
@@ -578,9 +606,7 @@ fn process_batch(
             x[pending.reqs.len() * f..*prev_rows * f].fill(0.0);
         }
     }
-    shared
-        .gather_nanos
-        .fetch_add(t_gather.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    shared.metrics.gather.record(t_gather.elapsed().as_secs_f64());
     *prev_rows = pending.reqs.len();
     if pending.reqs.is_empty() {
         return;
@@ -604,9 +630,7 @@ fn process_batch(
             return;
         }
     };
-    shared
-        .forward_nanos
-        .fetch_add(t_forward.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    shared.metrics.forward.record(t_forward.elapsed().as_secs_f64());
 
     // Publish: cache insert + flight completion per row. Each completion
     // wakes only that node's waiters (per-flight condvar).
@@ -622,10 +646,8 @@ fn process_batch(
                 if v > bs { (i, v) } else { (bi, bs) }
             });
         let p = Prediction { node: r.node, class, score, logits: slice.to_vec() };
-        shared.computed.fetch_add(1, Ordering::Relaxed);
+        shared.metrics.computed.inc();
         r.finish(&shared.cache, Ok(p));
     }
-    shared
-        .publish_nanos
-        .fetch_add(t_publish.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    shared.metrics.publish.record(t_publish.elapsed().as_secs_f64());
 }

@@ -197,7 +197,7 @@ pub fn train_partition_with(
             let train_secs = sw.secs();
             // the one download of the run: final params (+ moments)
             let final_state = session.state_tensors()?;
-            (losses, final_state, train_secs, Some(session.stats().clone()))
+            (losses, final_state, train_secs, Some(session.stats()))
         }
         ExecPath::Reference => {
             let mut params = params;

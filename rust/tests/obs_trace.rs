@@ -1,0 +1,105 @@
+//! Integration tests of the observability layer against the real
+//! partitioning pipeline: the Chrome-trace export must be valid JSON
+//! covering every stage span, the metrics registry must see the run, and
+//! — the load-bearing contract — tracing must *observe* the pipeline
+//! without perturbing it (byte-identical partitionings either way).
+//!
+//! Tracing state is process-global, so every test serialises on one lock
+//! (the same discipline as the `obs::trace` unit tests).
+
+use leiden_fusion::data::{synth_arxiv, ArxivLikeConfig};
+use leiden_fusion::obs;
+use leiden_fusion::partition::PartitionPipeline;
+use leiden_fusion::util::json::Json;
+use std::sync::{Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn graph() -> leiden_fusion::graph::CsrGraph {
+    let cfg = ArxivLikeConfig { n: 2000, seed: 9, ..Default::default() };
+    synth_arxiv(&cfg).unwrap().graph
+}
+
+#[test]
+fn trace_export_is_valid_chrome_json_covering_every_stage() {
+    let _g = serial();
+    obs::set_enabled(true);
+    drop(obs::trace::drain()); // start from a clean collector
+    let g = graph();
+    let pipeline = PartitionPipeline::parse("leiden+fusion+balance", 7).unwrap();
+    pipeline.run(&g, 4).unwrap();
+
+    let path = std::env::temp_dir()
+        .join(format!("lf_obs_trace_{}.json", std::process::id()));
+    let path_str = path.to_str().unwrap().to_string();
+    obs::write_chrome_trace(&path_str).unwrap();
+    obs::set_enabled(false);
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc = Json::parse(&text).expect("trace must be valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty(), "trace recorded no events");
+    // every event carries the Chrome-trace required keys
+    for e in events {
+        for key in ["name", "ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "event missing {key}: {}", e.to_string());
+        }
+    }
+    // the run span plus every stage of the spec (validate auto-appended)
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(Json::as_str)).collect();
+    for span in ["pipeline", "leiden", "fusion", "balance", "validate"] {
+        assert!(names.contains(&span), "missing span {span:?} in {names:?}");
+    }
+}
+
+#[test]
+fn metrics_registry_sees_pipeline_runs() {
+    let _g = serial();
+    let runs = obs::registry().counter("partition.runs");
+    let stage_hist = obs::registry().histogram("partition.stage_secs");
+    let before_runs = runs.get();
+    let before_stages = stage_hist.count();
+    let g = graph();
+    PartitionPipeline::parse("lf", 3).unwrap().run(&g, 4).unwrap();
+    assert_eq!(runs.get(), before_runs + 1);
+    // lf = leiden+fusion plus the auto-appended validate stage
+    assert!(
+        stage_hist.count() >= before_stages + 3,
+        "expected ≥3 new stage timings, got {}",
+        stage_hist.count() - before_stages
+    );
+}
+
+#[test]
+fn partitioning_is_byte_identical_with_tracing_enabled() {
+    let _g = serial();
+    let g = graph();
+    let run = |threads: usize| {
+        PartitionPipeline::parse("lf", 7)
+            .unwrap()
+            .with_threads(threads)
+            .run(&g, 4)
+            .unwrap()
+            .into_partitioning()
+            .assignments()
+            .to_vec()
+    };
+    obs::set_enabled(false);
+    let plain = run(1);
+    obs::set_enabled(true);
+    let traced = run(1);
+    let traced_mt = run(4);
+    obs::set_enabled(false);
+    drop(obs::trace::drain());
+    assert_eq!(plain, traced, "tracing changed the single-threaded result");
+    assert_eq!(plain, traced_mt, "tracing changed the multi-threaded result");
+}
