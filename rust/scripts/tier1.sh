@@ -25,6 +25,16 @@ if [ ! -f artifacts/manifest.json ]; then
        "sites ran as skips (run \`make artifacts\` for full coverage)"
 fi
 
+# Static analysis: the in-crate linter is a hard gate — zero unannotated
+# violations across src/. The machine-readable report lands next to the
+# BENCH_*.json artifacts, and --fixable prints the justified-suppression
+# inventory so the exception list stays reviewable.
+echo "== repro lint =="
+mkdir -p target/bench-results
+cargo run --quiet --release --bin repro -- lint \
+  --src src --json-out target/bench-results/LINT.json --fixable
+test -s target/bench-results/LINT.json
+
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 

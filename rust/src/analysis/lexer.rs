@@ -1,0 +1,520 @@
+//! A lightweight Rust lexer for the in-crate linter.
+//!
+//! Produces a flat token stream (identifiers, literals, punctuation) plus
+//! a side list of comments — enough surface syntax for the pattern rules
+//! in [`super::rules`] without building an AST. The tricky corners a
+//! naive regex scan gets wrong are handled properly:
+//!
+//! * **raw strings** `r"…"`, `r#"…"#` (any hash depth), byte and
+//!   raw-byte strings `b"…"`, `br#"…"#` — a `"unwrap()"` inside one must
+//!   not look like a call;
+//! * **raw identifiers** `r#match` (lexed as the identifier `match`);
+//! * **nested block comments** `/* a /* b */ c */` per the Rust grammar;
+//! * **char literals vs lifetimes**: `'a'` is a char, `'a` is a
+//!   lifetime, `'\''` and `'∀'` are chars — disambiguated by looking for
+//!   the closing tick after exactly one (possibly escaped, possibly
+//!   multi-byte) character;
+//! * **multi-char operators** (`::`, `!=`, `..=`, …) lexed as single
+//!   tokens so `x != y` can never read as a macro bang.
+//!
+//! Tokens carry 1-based line numbers; rules report and suppress by line.
+
+/// Token classification — deliberately coarse: the rules match on
+/// `(kind, text)` pairs and adjacency, never on deeper structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `HashMap`, …).
+    Ident,
+    /// String literal of any flavor: `"…"`, `r#"…"#`, `b"…"`, `br"…"`.
+    Str,
+    /// Char or byte-char literal: `'x'`, `'\n'`, `b'\0'`.
+    Char,
+    /// Lifetime (or loop label): `'a`, `'static`.
+    Lifetime,
+    /// Numeric literal, suffix included: `42`, `0xFF`, `1.5e-3_f64`.
+    Num,
+    /// Punctuation / operator, multi-char operators as one token.
+    Punct,
+}
+
+/// One lexed token. `text` is the exact source slice (quotes included
+/// for literals); `line` is 1-based.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    /// Literal payload of a [`TokenKind::Str`] token: quotes, raw-string
+    /// hashes, and `b`/`r` prefixes stripped. Escape sequences are left
+    /// as written — the rules only compare short ASCII names, which
+    /// never contain escapes.
+    pub fn str_value(&self) -> &str {
+        let t = self.text.as_str();
+        let t = t.strip_prefix('b').unwrap_or(t);
+        if let Some(raw) = t.strip_prefix('r') {
+            let hashes = raw.bytes().take_while(|&b| b == b'#').count();
+            let inner = &raw[hashes..];
+            let inner = inner.strip_prefix('"').unwrap_or(inner);
+            let end = inner.len().saturating_sub(1 + hashes);
+            return inner.get(..end).unwrap_or(inner);
+        }
+        let t = t.strip_prefix('"').unwrap_or(t);
+        t.strip_suffix('"').unwrap_or(t)
+    }
+}
+
+/// A comment (line or block), with the line it starts on. Block comment
+/// text keeps its newlines; suppression comments are single-line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+}
+
+/// Multi-char operators, longest first so `>>=` wins over `>>` over `>`.
+const MULTI_OPS: &[&str] = &[
+    "<<=", ">>=", "..=", "::", "==", "!=", "<=", ">=", "->", "=>", "+=", "-=", "*=", "/=",
+    "%=", "^=", "&=", "|=", "..", "&&", "||", "<<", ">>",
+];
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte length of the UTF-8 character starting at `b` (1 for ASCII and
+/// for malformed lead bytes, so the scanner always makes progress).
+fn char_len(b: u8) -> usize {
+    match b {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        0xF0..=0xF7 => 4,
+        _ => 1,
+    }
+}
+
+/// Lex `src` into tokens and comments. Never fails: unterminated
+/// literals and comments extend to end-of-file (the linter must degrade
+/// gracefully on code mid-edit), and unknown bytes become one-char
+/// `Punct` tokens.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    Lexer { b: src.as_bytes(), src, i: 0, line: 1 }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: u32,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> (Vec<Token>, Vec<Comment>) {
+        let mut tokens = Vec::new();
+        let mut comments = Vec::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.starts_with("//") => {
+                    let start = self.i;
+                    while self.i < self.b.len() && self.b[self.i] != b'\n' {
+                        self.i += 1;
+                    }
+                    comments.push(Comment {
+                        text: self.src[start..self.i].to_string(),
+                        line: self.line,
+                    });
+                }
+                b'/' if self.starts_with("/*") => {
+                    let (start, start_line) = (self.i, self.line);
+                    self.i += 2;
+                    let mut depth = 1usize;
+                    while self.i < self.b.len() && depth > 0 {
+                        if self.starts_with("/*") {
+                            depth += 1;
+                            self.i += 2;
+                        } else if self.starts_with("*/") {
+                            depth -= 1;
+                            self.i += 2;
+                        } else {
+                            if self.b[self.i] == b'\n' {
+                                self.line += 1;
+                            }
+                            self.i += char_len(self.b[self.i]);
+                        }
+                    }
+                    comments.push(Comment {
+                        text: self.src[start..self.i].to_string(),
+                        line: start_line,
+                    });
+                }
+                b'r' | b'b' => {
+                    if let Some(tok) = self.raw_or_byte_literal() {
+                        tokens.push(tok);
+                    } else {
+                        tokens.push(self.ident());
+                    }
+                }
+                _ if is_ident_start(c) => tokens.push(self.ident()),
+                b'"' => tokens.push(self.string_literal(self.i)),
+                b'\'' => tokens.push(self.tick()),
+                b'0'..=b'9' => tokens.push(self.number()),
+                _ => tokens.push(self.punct()),
+            }
+        }
+        (tokens, comments)
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.b[self.i..].starts_with(s.as_bytes())
+    }
+
+    fn slice_token(&self, kind: TokenKind, start: usize, line: u32) -> Token {
+        Token { kind, text: self.src[start..self.i].to_string(), line }
+    }
+
+    /// `r"…"`, `r#"…"#`, `br"…"`, `b"…"`, or raw identifier `r#name`.
+    /// Returns `None` when the `r`/`b` here is just the start of a plain
+    /// identifier (`rows`, `buf`), letting the caller lex it as one.
+    fn raw_or_byte_literal(&mut self) -> Option<Token> {
+        let start = self.i;
+        let start_line = self.line;
+        let two = self.b.get(self.i..self.i + 2);
+        let prefix_len = match two {
+            Some(b"br") | Some(b"rb") => 2,
+            _ => 1,
+        };
+        let has_r = self.b[self.i] == b'r' || prefix_len == 2;
+        let mut j = self.i + prefix_len;
+        if has_r {
+            let mut hashes = 0usize;
+            while self.b.get(j) == Some(&b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if self.b.get(j) == Some(&b'"') {
+                // raw string: scan for `"###...` of the same depth
+                self.i = j + 1;
+                loop {
+                    match self.b.get(self.i) {
+                        None => break,
+                        Some(b'"') => {
+                            let tail = &self.b[self.i + 1..];
+                            if tail.len() >= hashes
+                                && tail[..hashes].iter().all(|&h| h == b'#')
+                            {
+                                self.i += 1 + hashes;
+                                break;
+                            }
+                            self.i += 1;
+                        }
+                        Some(b'\n') => {
+                            self.line += 1;
+                            self.i += 1;
+                        }
+                        Some(&b) => self.i += char_len(b),
+                    }
+                }
+                return Some(self.slice_token(TokenKind::Str, start, start_line));
+            }
+            if prefix_len == 1 && hashes == 1 {
+                if let Some(&b) = self.b.get(j) {
+                    if is_ident_start(b) {
+                        // raw identifier r#name → the identifier `name`
+                        let name_start = j;
+                        while self.b.get(j).is_some_and(|&b| is_ident_cont(b)) {
+                            j += 1;
+                        }
+                        self.i = j;
+                        return Some(Token {
+                            kind: TokenKind::Ident,
+                            text: self.src[name_start..j].to_string(),
+                            line: start_line,
+                        });
+                    }
+                }
+            }
+        }
+        if self.b[self.i] == b'b' {
+            match self.b.get(self.i + 1) {
+                Some(b'"') => return Some(self.string_literal(start)),
+                Some(b'\'') => {
+                    self.i += 1; // consume the `b`; tick() scans from `'`
+                    let mut tok = self.tick();
+                    tok.text = self.src[start..self.i].to_string();
+                    return Some(tok);
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+
+    fn ident(&mut self) -> Token {
+        let start = self.i;
+        while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+            self.i += 1;
+        }
+        self.slice_token(TokenKind::Ident, start, self.line)
+    }
+
+    /// Plain (or byte) string literal; `start` marks any `b` prefix.
+    /// `self.i` may point at the prefix or the quote — scanning begins at
+    /// the first `"` at or after it.
+    fn string_literal(&mut self, start: usize) -> Token {
+        let start_line = self.line;
+        while self.b.get(self.i) != Some(&b'"') && self.i < self.b.len() {
+            self.i += 1;
+        }
+        self.i += 1; // opening quote
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => self.i += 2,
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b => self.i += char_len(b),
+            }
+        }
+        self.slice_token(TokenKind::Str, start, start_line)
+    }
+
+    /// A tick: char literal (`'x'`, `'\n'`, `'∀'`), lifetime (`'a`), or
+    /// a stray `'`. One (possibly escaped) character followed by a
+    /// closing tick is a char literal; an identifier tail is a lifetime.
+    fn tick(&mut self) -> Token {
+        let start = self.i;
+        self.i += 1; // the tick
+        match self.b.get(self.i) {
+            Some(b'\\') => {
+                // escaped char literal: scan to the closing tick
+                self.i += 2; // backslash + escape head (n, ', u, x, …)
+                while self.i < self.b.len() && self.b[self.i] != b'\'' {
+                    self.i += char_len(self.b[self.i]);
+                }
+                self.i = (self.i + 1).min(self.b.len());
+                self.slice_token(TokenKind::Char, start, self.line)
+            }
+            Some(&b) => {
+                let advance = char_len(b);
+                if self.b.get(self.i + advance) == Some(&b'\'') {
+                    self.i += advance + 1;
+                    self.slice_token(TokenKind::Char, start, self.line)
+                } else if is_ident_start(b) {
+                    self.i += 1;
+                    while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+                        self.i += 1;
+                    }
+                    self.slice_token(TokenKind::Lifetime, start, self.line)
+                } else {
+                    self.slice_token(TokenKind::Punct, start, self.line)
+                }
+            }
+            None => self.slice_token(TokenKind::Punct, start, self.line),
+        }
+    }
+
+    fn number(&mut self) -> Token {
+        let start = self.i;
+        while self.i < self.b.len() && matches!(self.b[self.i], b'0'..=b'9' | b'_') {
+            self.i += 1;
+        }
+        // fraction only when a digit follows the dot — `0..n` stays a range
+        if self.b.get(self.i) == Some(&b'.')
+            && self.b.get(self.i + 1).is_some_and(|b| b.is_ascii_digit())
+        {
+            self.i += 1;
+            while self.i < self.b.len() && matches!(self.b[self.i], b'0'..=b'9' | b'_') {
+                self.i += 1;
+            }
+        }
+        if matches!(self.b.get(self.i), Some(b'e') | Some(b'E'))
+            && self
+                .b
+                .get(self.i + 1)
+                .is_some_and(|&b| b.is_ascii_digit() || b == b'+' || b == b'-')
+        {
+            self.i += 2;
+            while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        // hex/binary digits and type suffixes: 0xFF, 42u64, 1.0f32
+        while self.i < self.b.len() && is_ident_cont(self.b[self.i]) {
+            self.i += 1;
+        }
+        self.slice_token(TokenKind::Num, start, self.line)
+    }
+
+    fn punct(&mut self) -> Token {
+        for op in MULTI_OPS {
+            if self.starts_with(op) {
+                let start = self.i;
+                self.i += op.len();
+                return self.slice_token(TokenKind::Punct, start, self.line);
+            }
+        }
+        let start = self.i;
+        self.i += char_len(self.b[self.i]);
+        self.slice_token(TokenKind::Punct, start, self.line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let toks = kinds("let x = a.unwrap();");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, vec!["let", "x", "=", "a", ".", "unwrap", "(", ")", ";"]);
+    }
+
+    #[test]
+    fn raw_string_hides_call_syntax() {
+        let toks = kinds(r##"let s = r#"x.unwrap()"#;"##);
+        assert_eq!(toks[3].0, TokenKind::Str);
+        assert!(!toks.iter().any(|(k, t)| *k == TokenKind::Ident && t == "unwrap"));
+    }
+
+    #[test]
+    fn raw_string_hash_depth_matters() {
+        // the inner `"#` must not close an r##"…"## string
+        let src = "r##\"contains \"# inside\"## rest";
+        let (toks, _) = lex(src);
+        assert_eq!(toks[0].kind, TokenKind::Str);
+        assert_eq!(toks[0].str_value(), "contains \"# inside");
+        assert_eq!(toks[1].text, "rest");
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let toks = kinds(r#"b"abc" br"def" b'x' rb"ghi""#);
+        assert_eq!(toks[0], (TokenKind::Str, "b\"abc\"".to_string()));
+        assert_eq!(toks[1], (TokenKind::Str, "br\"def\"".to_string()));
+        assert_eq!(toks[2], (TokenKind::Char, "b'x'".to_string()));
+        assert_eq!(toks[3].0, TokenKind::Str);
+    }
+
+    #[test]
+    fn raw_identifier_is_an_ident() {
+        let toks = kinds("let r#match = 1;");
+        assert_eq!(toks[1], (TokenKind::Ident, "match".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let (toks, comments) = lex("a /* one /* two */ still one */ b");
+        assert_eq!(toks.len(), 2);
+        assert_eq!(toks[1].text, "b");
+        assert_eq!(comments.len(), 1);
+        assert!(comments[0].text.contains("still one"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds(r"'a' 'b 'static '\'' '\n' '∀'");
+        let got: Vec<TokenKind> = toks.iter().map(|(k, _)| *k).collect();
+        assert_eq!(
+            got,
+            vec![
+                TokenKind::Char,
+                TokenKind::Lifetime,
+                TokenKind::Lifetime,
+                TokenKind::Char,
+                TokenKind::Char,
+                TokenKind::Char,
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetime_in_generics() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> &'a str { x }");
+        let lifetimes = toks.iter().filter(|(k, _)| *k == TokenKind::Lifetime).count();
+        assert_eq!(lifetimes, 3);
+    }
+
+    #[test]
+    fn multi_char_operators_stay_whole() {
+        let toks = kinds("if x != y && a..=b { p ->q }");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert!(texts.contains(&"!="));
+        assert!(texts.contains(&"&&"));
+        assert!(texts.contains(&"..="));
+        assert!(texts.contains(&"->"));
+        // crucially, no bare `!` token that could read as a macro bang
+        assert!(!texts.contains(&"!"));
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let toks = kinds("for i in 0..len { x[i] = 1.5e-3; }");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert!(texts.contains(&"0"));
+        assert!(texts.contains(&".."));
+        assert!(texts.contains(&"len"));
+        assert!(texts.contains(&"1.5e-3"));
+    }
+
+    #[test]
+    fn line_numbers_track_all_literal_forms() {
+        let src = "a\n\"two\nlines\"\nb /* c\nd */ e\nf";
+        let (toks, comments) = lex(src);
+        let find = |name: &str| toks.iter().find(|t| t.text == name).map(|t| t.line);
+        assert_eq!(find("a"), Some(1));
+        assert_eq!(find("b"), Some(4));
+        assert_eq!(find("e"), Some(5));
+        assert_eq!(find("f"), Some(6));
+        assert_eq!(comments[0].line, 4);
+    }
+
+    #[test]
+    fn attribute_tokens_surface_in_order() {
+        let toks = kinds("#[cfg(test)]\nmod tests {}");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts[..6], ["#", "[", "cfg", "(", "test", ")"]);
+    }
+
+    #[test]
+    fn str_value_strips_every_quoting_form() {
+        let cases = [
+            ("\"plain\"", "plain"),
+            ("r\"raw\"", "raw"),
+            ("r#\"hashed\"#", "hashed"),
+            ("b\"bytes\"", "bytes"),
+        ];
+        for (src, want) in cases {
+            let (toks, _) = lex(src);
+            assert_eq!(toks[0].str_value(), want, "{src}");
+        }
+    }
+
+    #[test]
+    fn unterminated_forms_reach_eof_without_panicking() {
+        for src in ["\"open", "r#\"open", "/* open", "'"] {
+            let _ = lex(src); // must not panic or loop
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! `pallas-lint`: the in-crate static analysis pass behind `repro lint`.
+//!
+//! The repo's scientific claims rest on invariants nothing checked
+//! statically until now: byte-identical partitions across thread
+//! counts, bit-exact serve-vs-offline logits, bit-exact
+//! session-vs-reference training. One stray `HashMap` iteration in a
+//! partition kernel, or an `unwrap()` that poisons a worker's lock,
+//! silently breaks those contracts — and tests only catch the
+//! regression after the fact. This module catches the *pattern* at
+//! review time.
+//!
+//! Like the crate's JSON/TOML/proptest layers, the subsystem is
+//! dependency-free by design (the build must work offline): a
+//! hand-rolled lexer ([`lexer`]) feeds a token-pattern rule engine
+//! ([`rules`]) that produces per-file, per-line diagnostics
+//! ([`report`]) with human, JSON, and `--fixable` renderings.
+//!
+//! Entry points:
+//! - [`lint_root`] — lex and lint every `.rs` file under a directory
+//!   (what `repro lint --src <dir>` calls);
+//! - [`lint_sources`] — the same over in-memory `(path, source)` pairs
+//!   (what the fixture tests call).
+//!
+//! Exceptions are granted *inline and justified only*:
+//!
+//! ```text
+//! // lint: allow(<rule>) — <justification>
+//! ```
+//!
+//! on the violating line or the line directly above. An `allow`
+//! without a justification still fails the run. See DESIGN.md
+//! "Static analysis" for the rule catalog and how to add a rule.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use crate::error::Result;
+use std::path::Path;
+
+pub use report::{Diagnostic, Report, Suppression};
+pub use rules::{all_rules, FileSet, Rule};
+
+/// Lint every `.rs` file under `root` (recursively, in sorted path
+/// order) and return the full report. The caller decides whether
+/// unannotated findings are fatal (`repro lint` exits non-zero).
+pub fn lint_root(root: &Path) -> Result<Report> {
+    let set = FileSet::load(root)?;
+    Ok(rules::run_rules(&set))
+}
+
+/// Lint in-memory `(relative_path, source)` pairs — used by the
+/// golden-fixture tests and anyone embedding the linter.
+pub fn lint_sources(sources: &[(&str, &str)]) -> Report {
+    rules::run_rules(&FileSet::from_sources(sources))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_sources_end_to_end() {
+        let report = lint_sources(&[(
+            "partition/fusion.rs",
+            "use std::collections::HashMap;\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        )]);
+        assert_eq!(report.files_scanned, 1);
+        assert_eq!(report.unannotated_count(), 2);
+        let rules: Vec<_> = report.unannotated().map(|d| d.rule).collect();
+        assert_eq!(rules, vec!["nondet_iter", "panic_in_lib"]);
+    }
+
+    #[test]
+    fn lint_root_walks_a_directory() {
+        let dir =
+            std::env::temp_dir().join(format!("lf_lint_root_{}", std::process::id()));
+        let sub = dir.join("graph");
+        std::fs::create_dir_all(&sub).expect("create fixture dir");
+        std::fs::write(sub.join("a.rs"), "use std::collections::HashSet;\n")
+            .expect("write fixture");
+        std::fs::write(dir.join("b.rs"), "fn ok() {}\n").expect("write fixture");
+        let report = lint_root(&dir).expect("lint fixture tree");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(report.files_scanned, 2);
+        assert_eq!(report.unannotated_count(), 1);
+        assert_eq!(report.diagnostics[0].file, "graph/a.rs");
+    }
+}

@@ -1,0 +1,235 @@
+//! Lint diagnostics and report rendering (human, JSON, `--fixable`).
+//!
+//! A [`Diagnostic`] is one finding: rule, file, line, message, and its
+//! suppression state. Suppression is per-line via the inline comment
+//! syntax
+//!
+//! ```text
+//! // lint: allow(<rule>) — <justification>
+//! ```
+//!
+//! placed on the violating line or the line directly above it. The
+//! justification is **required**: an `allow` without one downgrades
+//! nothing — it surfaces as an unannotated violation of its own, so
+//! every exception in the tree stays visible and explained. Suppressed
+//! findings are still recorded (and listed by `repro lint --fixable`)
+//! so future PRs can triage and burn them down.
+
+use crate::util::json::{num, obj, Json};
+use std::fmt::Write as _;
+
+/// Suppression state of one diagnostic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Suppression {
+    /// No `lint: allow` comment covers the line: a hard violation.
+    None,
+    /// Covered by an `allow` with a justification: recorded, not fatal.
+    Justified(String),
+    /// Covered by an `allow` **without** a justification — treated as a
+    /// violation so silent exceptions cannot accumulate.
+    MissingJustification,
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    pub message: String,
+    pub suppression: Suppression,
+}
+
+impl Diagnostic {
+    /// Whether this finding fails the build.
+    pub fn is_unannotated(&self) -> bool {
+        !matches!(self.suppression, Suppression::Justified(_))
+    }
+}
+
+/// The result of a lint run over a file set.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// All findings, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn new(mut diagnostics: Vec<Diagnostic>, files_scanned: usize) -> Report {
+        diagnostics.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+        Report { diagnostics, files_scanned }
+    }
+
+    /// Findings that fail the build (no justified suppression).
+    pub fn unannotated(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| d.is_unannotated())
+    }
+
+    /// Findings excused by a justified `lint: allow`.
+    pub fn suppressed(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diagnostics.iter().filter(|d| !d.is_unannotated())
+    }
+
+    pub fn unannotated_count(&self) -> usize {
+        self.unannotated().count()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.suppressed().count()
+    }
+
+    /// Machine-readable report (the `LINT.json` CI artifact).
+    pub fn to_json(&self) -> Json {
+        let diags = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut pairs = vec![
+                    ("rule", Json::Str(d.rule.to_string())),
+                    ("file", Json::Str(d.file.clone())),
+                    ("line", num(d.line as f64)),
+                    ("message", Json::Str(d.message.clone())),
+                    ("suppressed", Json::Bool(!d.is_unannotated())),
+                ];
+                match &d.suppression {
+                    Suppression::Justified(j) => {
+                        pairs.push(("justification", Json::Str(j.clone())));
+                    }
+                    Suppression::MissingJustification => {
+                        pairs.push(("justification", Json::Null));
+                    }
+                    Suppression::None => {}
+                }
+                obj(pairs)
+            })
+            .collect();
+        obj(vec![
+            ("version", num(1.0)),
+            ("files_scanned", num(self.files_scanned as f64)),
+            ("violations", num(self.unannotated_count() as f64)),
+            ("suppressed", num(self.suppressed_count() as f64)),
+            ("diagnostics", Json::Arr(diags)),
+        ])
+    }
+
+    /// Compiler-style listing of the findings that fail the build.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for d in self.unannotated() {
+            let note = match d.suppression {
+                Suppression::MissingJustification => {
+                    " (suppression present but missing a justification)"
+                }
+                _ => "",
+            };
+            let _ = writeln!(
+                out,
+                "lint[{}] {}:{}: {}{}",
+                d.rule, d.file, d.line, d.message, note
+            );
+        }
+        let _ = writeln!(
+            out,
+            "lint: {} file(s), {} violation(s), {} suppressed",
+            self.files_scanned,
+            self.unannotated_count(),
+            self.suppressed_count()
+        );
+        out
+    }
+
+    /// `--fixable` triage listing: every justified suppression, with its
+    /// justification, so future PRs can burn annotated exceptions down.
+    pub fn render_fixable(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "annotated suppressions ({}):", self.suppressed_count());
+        for d in self.suppressed() {
+            let just = match &d.suppression {
+                Suppression::Justified(j) => j.as_str(),
+                _ => "",
+            };
+            let _ = writeln!(out, "  [{}] {}:{} — {}", d.rule, d.file, d.line, just);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(rule: &'static str, file: &str, line: u32, sup: Suppression) -> Diagnostic {
+        Diagnostic {
+            rule,
+            file: file.to_string(),
+            line,
+            message: format!("{rule} violated"),
+            suppression: sup,
+        }
+    }
+
+    #[test]
+    fn sorting_and_counts() {
+        let r = Report::new(
+            vec![
+                diag("b_rule", "z.rs", 9, Suppression::None),
+                diag("a_rule", "a.rs", 5, Suppression::Justified("ok".into())),
+                diag("a_rule", "a.rs", 2, Suppression::None),
+            ],
+            3,
+        );
+        assert_eq!(r.diagnostics[0].line, 2);
+        assert_eq!(r.diagnostics[2].file, "z.rs");
+        assert_eq!(r.unannotated_count(), 2);
+        assert_eq!(r.suppressed_count(), 1);
+    }
+
+    #[test]
+    fn missing_justification_counts_as_violation() {
+        let r = Report::new(
+            vec![diag("a_rule", "a.rs", 1, Suppression::MissingJustification)],
+            1,
+        );
+        assert_eq!(r.unannotated_count(), 1);
+        assert!(r.render_human().contains("missing a justification"));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let r = Report::new(
+            vec![
+                diag("a_rule", "a.rs", 3, Suppression::None),
+                diag("b_rule", "b.rs", 7, Suppression::Justified("reviewed".into())),
+            ],
+            2,
+        );
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("violations").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("suppressed").unwrap().as_usize(), Some(1));
+        let diags = parsed.get("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(diags.len(), 2);
+        assert_eq!(diags[0].get("rule").unwrap().as_str(), Some("a_rule"));
+        assert_eq!(diags[1].get("suppressed").unwrap().as_bool(), Some(true));
+        assert_eq!(diags[1].get("justification").unwrap().as_str(), Some("reviewed"));
+    }
+
+    #[test]
+    fn fixable_lists_only_suppressed() {
+        let r = Report::new(
+            vec![
+                diag("a_rule", "a.rs", 3, Suppression::None),
+                diag("b_rule", "b.rs", 7, Suppression::Justified("oracle only".into())),
+            ],
+            2,
+        );
+        let fixable = r.render_fixable();
+        assert!(fixable.contains("b.rs:7"));
+        assert!(fixable.contains("oracle only"));
+        assert!(!fixable.contains("a.rs:3"));
+    }
+}

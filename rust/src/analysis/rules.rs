@@ -1,0 +1,840 @@
+//! The lint rule engine: source model, suppression handling, and the
+//! rule set grounded in this repo's invariants.
+//!
+//! Each rule is a token-pattern check over [`SourceFile`]s — no AST, no
+//! type information — chosen so that every rule is *decidable from the
+//! token stream* and cheap enough to run on every tier-1 invocation.
+//! The trade-off is that rules are deliberately conservative: they flag
+//! the syntactic pattern wherever it appears in non-test library code,
+//! and legitimate uses carry an inline justified suppression
+//! (`// lint: allow(<rule>) — <why this one is sound>`), which keeps
+//! every exception reviewable in the diff and in `repro lint --fixable`.
+//!
+//! Rule catalog (see DESIGN.md "Static analysis" for the rationale):
+//!
+//! | rule | invariant it protects |
+//! |------|----------------------|
+//! | `nondet_iter` | byte-identical partitions: no unordered `HashMap`/`HashSet` in determinism-contract modules |
+//! | `panic_in_lib` | panic-safety: no `unwrap`/`expect`/`panic!`/`todo!`/`unreachable!`/`unimplemented!` in library code (a worker panic poisons shared `Mutex`es) |
+//! | `spawn_outside_parallel` | all threading goes through `util::parallel`'s ordered fork-join |
+//! | `bare_instant` | timing flows through `util::Stopwatch`/`obs` so it stays observable |
+//! | `dropped_span_guard` | an `obs::trace` span bound to `_` (or unbound) dies immediately — always a bug |
+//! | `undeclared_switch` | every `args.has("x")` switch is declared in `main.rs` `SWITCHES` (closes the `--switch positional` misparse class) |
+//!
+//! To add a rule: implement [`Rule`], add it to [`all_rules`], document
+//! it in DESIGN.md, and add one violating + one clean + one suppressed
+//! fixture under `tests/lint_fixtures/` (the golden tests iterate the
+//! catalog).
+
+use super::lexer::{lex, Comment, Token, TokenKind};
+use super::report::{Diagnostic, Report, Suppression};
+use crate::error::Result;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// Modules whose outputs are under a byte-identical determinism
+/// contract (DESIGN.md "Performance"): partition labels, graph
+/// coarsening, subgraph extraction, training batch assembly, the serve
+/// ownership index, and the coordinator's result handling.
+const DETERMINISM_PREFIXES: &[&str] = &["partition/", "graph/"];
+const DETERMINISM_FILES: &[&str] =
+    &["serve/index.rs", "train/data.rs", "coordinator/mod.rs", "coordinator/worker.rs"];
+
+/// Macros that abort the surrounding thread.
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+/// Where `Instant::now` may appear bare: the observability layer and
+/// the bench harness are the designated owners of wall-clock access.
+const INSTANT_EXEMPT_PREFIXES: &[&str] = &["obs/", "benchkit/"];
+
+/// The one module allowed to touch `std::thread` directly.
+const THREADING_MODULE: &str = "util/parallel.rs";
+
+/// One lexed, region-annotated source file.
+pub struct SourceFile {
+    /// Path relative to the lint root, `/`-separated.
+    pub path: String,
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+    /// Inclusive line ranges covered by `#[cfg(test)]` / `#[test]` items.
+    test_regions: Vec<(u32, u32)>,
+    /// line → `lint: allow` entries: (rule, justification).
+    suppressions: BTreeMap<u32, Vec<(String, Option<String>)>>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, src: &str) -> SourceFile {
+        let (tokens, comments) = lex(src);
+        let test_regions = test_regions(&tokens);
+        let suppressions = parse_suppressions(&comments);
+        SourceFile { path: path.to_string(), tokens, comments, test_regions, suppressions }
+    }
+
+    /// Whether `line` falls inside a `#[cfg(test)]` module or `#[test]`
+    /// function — rules skip test code (tests may unwrap freely).
+    pub fn in_test_code(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Suppression state for a finding of `rule` at `line`: an allow
+    /// comment counts when it sits on the line itself or directly above.
+    fn suppression_for(&self, rule: &str, line: u32) -> Suppression {
+        for l in [line, line.saturating_sub(1)] {
+            if let Some(entries) = self.suppressions.get(&l) {
+                for (r, just) in entries {
+                    if r == rule {
+                        return match just {
+                            Some(j) => Suppression::Justified(j.clone()),
+                            None => Suppression::MissingJustification,
+                        };
+                    }
+                }
+            }
+        }
+        Suppression::None
+    }
+}
+
+/// The set of files a lint run covers, in sorted path order.
+pub struct FileSet {
+    pub files: Vec<SourceFile>,
+}
+
+impl FileSet {
+    /// Load every `.rs` file under `root` (recursively, sorted), paths
+    /// stored relative to `root`.
+    pub fn load(root: &Path) -> Result<FileSet> {
+        let mut paths = Vec::new();
+        collect_rs_files(root, root, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::with_capacity(paths.len());
+        for rel in paths {
+            let src = std::fs::read_to_string(root.join(&rel))?;
+            files.push(SourceFile::parse(&rel, &src));
+        }
+        Ok(FileSet { files })
+    }
+
+    /// Build a set from in-memory sources — the fixture-test entry point.
+    pub fn from_sources(sources: &[(&str, &str)]) -> FileSet {
+        FileSet {
+            files: sources.iter().map(|(p, s)| SourceFile::parse(p, s)).collect(),
+        }
+    }
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            let rel = rel
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Find the index of the delimiter matching `tokens[open]` (which must
+/// be `open_text`). Returns `tokens.len() - 1` on unbalanced input so
+/// callers always make progress.
+fn matching_delim(tokens: &[Token], open: usize, open_text: &str, close_text: &str) -> usize {
+    let mut depth = 0usize;
+    for (idx, t) in tokens.iter().enumerate().skip(open) {
+        if t.text == open_text {
+            depth += 1;
+        } else if t.text == close_text {
+            depth -= 1;
+            if depth == 0 {
+                return idx;
+            }
+        }
+    }
+    tokens.len().saturating_sub(1)
+}
+
+/// Line ranges covered by `#[cfg(test)]`- or `#[test]`-attributed items.
+/// `#[cfg(not(test))]` is recognised and *not* treated as test code.
+fn test_regions(tokens: &[Token]) -> Vec<(u32, u32)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        let is_attr_start = tokens[i].text == "#"
+            && tokens.get(i + 1).is_some_and(|t| t.text == "[");
+        if !is_attr_start {
+            i += 1;
+            continue;
+        }
+        let close = matching_delim(tokens, i + 1, "[", "]");
+        let inner = &tokens[i + 2..close.max(i + 2)];
+        let mut is_test = false;
+        for (k, t) in inner.iter().enumerate() {
+            if t.kind == TokenKind::Ident && t.text == "test" {
+                let negated = k >= 2
+                    && inner[k - 2].text == "not"
+                    && inner[k - 1].text == "(";
+                if !negated {
+                    is_test = true;
+                    break;
+                }
+            }
+        }
+        if !is_test {
+            i = close + 1;
+            continue;
+        }
+        let start_line = tokens[i].line;
+        // skip any further attributes between this one and the item
+        let mut m = close + 1;
+        while m + 1 < tokens.len()
+            && tokens[m].text == "#"
+            && tokens[m + 1].text == "["
+        {
+            m = matching_delim(tokens, m + 1, "[", "]") + 1;
+        }
+        // the item body: first `{` at header depth (match to its close),
+        // or a `;` for body-less items (`mod tests;`)
+        let mut d_paren = 0i32;
+        let mut d_brack = 0i32;
+        let mut end_line = tokens.last().map(|t| t.line).unwrap_or(start_line);
+        while m < tokens.len() {
+            match tokens[m].text.as_str() {
+                "(" => d_paren += 1,
+                ")" => d_paren -= 1,
+                "[" => d_brack += 1,
+                "]" => d_brack -= 1,
+                ";" if d_paren == 0 && d_brack == 0 => {
+                    end_line = tokens[m].line;
+                    break;
+                }
+                "{" if d_paren == 0 && d_brack == 0 => {
+                    let body_close = matching_delim(tokens, m, "{", "}");
+                    end_line = tokens[body_close].line;
+                    m = body_close;
+                    break;
+                }
+                _ => {}
+            }
+            m += 1;
+        }
+        regions.push((start_line, end_line));
+        i = m + 1;
+    }
+    regions
+}
+
+/// Extract `lint: allow(rule, …) — justification` entries per line.
+fn parse_suppressions(
+    comments: &[Comment],
+) -> BTreeMap<u32, Vec<(String, Option<String>)>> {
+    const MARKER: &str = "lint: allow(";
+    let mut map: BTreeMap<u32, Vec<(String, Option<String>)>> = BTreeMap::new();
+    for c in comments {
+        let Some(idx) = c.text.find(MARKER) else { continue };
+        let rest = &c.text[idx + MARKER.len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let mut just = rest[close + 1..].trim();
+        for sep in ["—", "--", "-", ":"] {
+            if let Some(stripped) = just.strip_prefix(sep) {
+                just = stripped.trim();
+                break;
+            }
+        }
+        let just = if just.is_empty() { None } else { Some(just.to_string()) };
+        for rule in rest[..close].split(',') {
+            let rule = rule.trim();
+            if !rule.is_empty() {
+                map.entry(c.line).or_default().push((rule.to_string(), just.clone()));
+            }
+        }
+    }
+    map
+}
+
+/// A lint rule: a named, documented check over the whole file set.
+pub trait Rule {
+    fn name(&self) -> &'static str;
+    /// One-line description for reports and the DESIGN.md catalog.
+    fn summary(&self) -> &'static str;
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>);
+}
+
+/// The full rule set, in catalog order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(NondetIter),
+        Box::new(PanicInLib),
+        Box::new(SpawnOutsideParallel),
+        Box::new(BareInstant),
+        Box::new(DroppedSpanGuard),
+        Box::new(UndeclaredSwitch),
+    ]
+}
+
+/// Run every rule over `set` and assemble the sorted report.
+pub fn run_rules(set: &FileSet) -> Report {
+    let mut out = Vec::new();
+    for rule in all_rules() {
+        rule.check(set, &mut out);
+    }
+    Report::new(out, set.files.len())
+}
+
+/// Emit at most one diagnostic per (rule, line) per file, resolving the
+/// suppression state from the file's `lint: allow` comments.
+fn emit(
+    file: &SourceFile,
+    rule: &'static str,
+    line: u32,
+    message: String,
+    seen: &mut BTreeSet<u32>,
+    out: &mut Vec<Diagnostic>,
+) {
+    if !seen.insert(line) {
+        return;
+    }
+    out.push(Diagnostic {
+        rule,
+        file: file.path.clone(),
+        line,
+        message,
+        suppression: file.suppression_for(rule, line),
+    });
+}
+
+fn is_determinism_module(path: &str) -> bool {
+    DETERMINISM_PREFIXES.iter().any(|p| path.starts_with(p))
+        || DETERMINISM_FILES.contains(&path)
+}
+
+// ---- nondet_iter ----------------------------------------------------------
+
+/// Unordered containers are banned from determinism-contract modules:
+/// one `HashMap` iteration in a partition kernel silently breaks the
+/// byte-identical-across-thread-counts contract. Ordered accumulation
+/// (integer sums, membership tests) is legitimate — and must say so via
+/// a justified suppression, which is the point: every unordered
+/// container in the contract modules is visible and reviewed.
+struct NondetIter;
+
+impl Rule for NondetIter {
+    fn name(&self) -> &'static str {
+        "nondet_iter"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no unordered HashMap/HashSet in determinism-contract modules"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            if !is_determinism_module(&file.path) {
+                continue;
+            }
+            let mut seen = BTreeSet::new();
+            for t in &file.tokens {
+                if t.kind == TokenKind::Ident
+                    && (t.text == "HashMap" || t.text == "HashSet")
+                    && !file.in_test_code(t.line)
+                {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        format!(
+                            "unordered {} in determinism-contract module \
+                             (iteration order varies run to run)",
+                            t.text
+                        ),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- panic_in_lib ---------------------------------------------------------
+
+/// `unwrap`/`expect`/`panic!`-family calls in library code: a panic in
+/// a coordinator worker or serve thread poisons every `Mutex` it holds
+/// and cascades. Library code propagates `Error` instead; provably
+/// infallible uses carry a justified suppression stating the invariant.
+struct PanicInLib;
+
+impl Rule for PanicInLib {
+    fn name(&self) -> &'static str {
+        "panic_in_lib"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no unwrap/expect/panic!/todo! in non-test library code"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                if t.kind != TokenKind::Ident || file.in_test_code(t.line) {
+                    continue;
+                }
+                let name = t.text.as_str();
+                if name == "unwrap" || name == "expect" {
+                    let is_method_call = i > 0
+                        && toks[i - 1].text == "."
+                        && toks.get(i + 1).is_some_and(|n| n.text == "(");
+                    if is_method_call {
+                        emit(
+                            file,
+                            self.name(),
+                            t.line,
+                            format!(".{name}() can panic in library code"),
+                            &mut seen,
+                            out,
+                        );
+                    }
+                } else if PANIC_MACROS.contains(&name)
+                    && toks.get(i + 1).is_some_and(|n| n.text == "!")
+                {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        format!("{name}! aborts the surrounding thread in library code"),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- spawn_outside_parallel -----------------------------------------------
+
+/// Direct `std::thread` use outside `util::parallel`: the fork-join
+/// helper is where the ordered-reduction determinism argument lives,
+/// so ad-hoc threading elsewhere needs an explicit, justified opt-out
+/// (e.g. the coordinator's long-lived worker topology).
+struct SpawnOutsideParallel;
+
+impl Rule for SpawnOutsideParallel {
+    fn name(&self) -> &'static str {
+        "spawn_outside_parallel"
+    }
+
+    fn summary(&self) -> &'static str {
+        "all threading goes through util::parallel"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            if file.path == THREADING_MODULE {
+                continue;
+            }
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                let hit = t.kind == TokenKind::Ident
+                    && t.text == "thread"
+                    && toks.get(i + 1).is_some_and(|n| n.text == "::")
+                    && toks.get(i + 2).is_some_and(|n| {
+                        matches!(n.text.as_str(), "spawn" | "scope" | "Builder")
+                    });
+                if hit && !file.in_test_code(t.line) {
+                    let what = toks[i + 2].text.clone();
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        format!("thread::{what} outside util::parallel"),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- bare_instant ---------------------------------------------------------
+
+/// `Instant::now` in kernels bypasses `util::Stopwatch` and the PR 6
+/// observability registry — timings taken this way never reach traces
+/// or metrics. Only `obs/` and `benchkit/` own the clock.
+struct BareInstant;
+
+impl Rule for BareInstant {
+    fn name(&self) -> &'static str {
+        "bare_instant"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no bare Instant::now outside obs/ and benchkit/"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            if INSTANT_EXEMPT_PREFIXES.iter().any(|p| file.path.starts_with(p)) {
+                continue;
+            }
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                let hit = t.kind == TokenKind::Ident
+                    && t.text == "Instant"
+                    && toks.get(i + 1).is_some_and(|n| n.text == "::")
+                    && toks.get(i + 2).is_some_and(|n| n.text == "now");
+                if hit && !file.in_test_code(t.line) {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        "bare Instant::now — time through util::Stopwatch / obs \
+                         so the reading stays observable"
+                            .to_string(),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- dropped_span_guard ---------------------------------------------------
+
+/// An `obs::trace` span is an RAII guard: binding it to `_` (or not
+/// binding it at all) drops it on the same statement, recording a
+/// zero-length span. Always a bug — bind to `_span` or a named guard.
+struct DroppedSpanGuard;
+
+impl Rule for DroppedSpanGuard {
+    fn name(&self) -> &'static str {
+        "dropped_span_guard"
+    }
+
+    fn summary(&self) -> &'static str {
+        "span guards must outlive their statement"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                let is_call = t.kind == TokenKind::Ident
+                    && t.text == "span"
+                    && toks.get(i + 1).is_some_and(|n| n.text == "(");
+                if !is_call || file.in_test_code(t.line) {
+                    continue;
+                }
+                // walk back over a `path::` prefix (obs::span, trace::span)
+                let mut j = i;
+                while j >= 2
+                    && toks[j - 1].text == "::"
+                    && toks[j - 2].kind == TokenKind::Ident
+                {
+                    j -= 2;
+                }
+                let prev = j.checked_sub(1).map(|p| toks[p].text.as_str());
+                let bound_to_underscore = prev == Some("=")
+                    && j >= 3
+                    && toks[j - 2].text == "_"
+                    && toks[j - 3].text == "let";
+                if bound_to_underscore {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        "span guard bound to _ is dropped immediately \
+                         (bind to _span or a named guard)"
+                            .to_string(),
+                        &mut seen,
+                        out,
+                    );
+                    continue;
+                }
+                let statement_position =
+                    matches!(prev, None | Some(";") | Some("{") | Some("}"));
+                if statement_position && call_is_discarded(toks, i + 1) {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        "unbound span guard is dropped at the end of its own \
+                         statement"
+                            .to_string(),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// With `tokens[open]` the `(` of a call, determine whether the whole
+/// expression — including any chained `.method(…)` calls — is
+/// terminated by `;` (i.e. its value is discarded).
+fn call_is_discarded(tokens: &[Token], open: usize) -> bool {
+    let mut p = matching_delim(tokens, open, "(", ")") + 1;
+    while p + 1 < tokens.len()
+        && tokens[p].text == "."
+        && tokens[p + 1].kind == TokenKind::Ident
+    {
+        p += 2;
+        if tokens.get(p).is_some_and(|t| t.text == "(") {
+            p = matching_delim(tokens, p, "(", ")") + 1;
+        }
+    }
+    tokens.get(p).is_some_and(|t| t.text == ";")
+}
+
+// ---- undeclared_switch ----------------------------------------------------
+
+/// Every switch queried via `args.has("x")` must be listed in the
+/// `SWITCHES` registry in `main.rs` — an undeclared switch silently
+/// swallows the next CLI token as its value (the PR 1 misparse class).
+/// Inert when the file set has no `main.rs` with a `SWITCHES` const.
+struct UndeclaredSwitch;
+
+impl Rule for UndeclaredSwitch {
+    fn name(&self) -> &'static str {
+        "undeclared_switch"
+    }
+
+    fn summary(&self) -> &'static str {
+        "every args.has(name) appears in main.rs SWITCHES"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        let Some(declared) = declared_switches(set) else { return };
+        for file in &set.files {
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                let is_has_call = t.kind == TokenKind::Ident
+                    && t.text == "has"
+                    && i >= 1
+                    && toks[i - 1].text == "."
+                    && toks.get(i + 1).is_some_and(|n| n.text == "(")
+                    && toks.get(i + 2).is_some_and(|n| n.kind == TokenKind::Str);
+                if !is_has_call || file.in_test_code(t.line) {
+                    continue;
+                }
+                let name = toks[i + 2].str_value().to_string();
+                if !declared.contains(&name) {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        format!(
+                            "switch {name:?} queried but not declared in \
+                             main.rs SWITCHES (undeclared switches swallow \
+                             the next CLI token)"
+                        ),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Parse the string literals of `const SWITCHES: … = &[…];` in
+/// `main.rs`. `None` when no such registry exists in the set.
+fn declared_switches(set: &FileSet) -> Option<BTreeSet<String>> {
+    let main = set
+        .files
+        .iter()
+        .find(|f| f.path == "main.rs" || f.path.ends_with("/main.rs"))?;
+    let toks = &main.tokens;
+    let at = toks
+        .iter()
+        .position(|t| t.kind == TokenKind::Ident && t.text == "SWITCHES")?;
+    // skip the type annotation: the initializer list is the first `[`
+    // after the `=`
+    let eq = toks[at..].iter().position(|t| t.text == "=")? + at;
+    let open = toks[eq..].iter().position(|t| t.text == "[")? + eq;
+    let close = matching_delim(toks, open, "[", "]");
+    let mut names = BTreeSet::new();
+    for t in &toks[open + 1..close] {
+        if t.kind == TokenKind::Str {
+            names.insert(t.str_value().to_string());
+        }
+    }
+    Some(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, src: &str) -> Report {
+        run_rules(&FileSet::from_sources(&[(path, src)]))
+    }
+
+    fn rules_hit(report: &Report) -> Vec<&'static str> {
+        report.unannotated().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn catalog_names_are_unique_and_documented() {
+        let rules = all_rules();
+        let names: BTreeSet<&str> = rules.iter().map(|r| r.name()).collect();
+        assert_eq!(names.len(), rules.len());
+        for r in &rules {
+            assert!(!r.summary().is_empty(), "{} lacks a summary", r.name());
+        }
+    }
+
+    #[test]
+    fn nondet_iter_only_fires_in_contract_modules() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        let hit = lint_one("partition/leiden.rs", src);
+        assert_eq!(rules_hit(&hit), vec!["nondet_iter", "nondet_iter"]);
+        let clean = lint_one("cli/mod.rs", src);
+        assert!(rules_hit(&clean).is_empty());
+    }
+
+    #[test]
+    fn nondet_iter_skips_test_modules() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn oracle() { let _m: HashMap<u32, u32> = HashMap::new(); }\n}\n";
+        assert!(rules_hit(&lint_one("graph/csr.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn panic_in_lib_flags_methods_and_macros() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    let a = x.unwrap();\n    let b = x.expect(\"msg\");\n    if a > b { panic!(\"boom\"); }\n    todo!()\n}\n";
+        let report = lint_one("train/trainer.rs", src);
+        assert_eq!(report.unannotated_count(), 4);
+    }
+
+    #[test]
+    fn panic_in_lib_ignores_unwrap_or_variants_and_strings() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    let s = \"call .unwrap() later\";\n    let _ = s;\n    x.unwrap_or_else(|| 0).max(x.unwrap_or(1)).max(x.unwrap_or_default())\n}\n";
+        assert!(rules_hit(&lint_one("train/trainer.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn panic_in_lib_skips_test_fns_and_modules() {
+        let src = "#[test]\nfn t() { None::<u32>.unwrap(); }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn u() { panic!(\"fine in tests\"); }\n}\n";
+        assert!(rules_hit(&lint_one("serve/engine.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn cfg_not_test_is_still_library_code() {
+        let src = "#[cfg(not(test))]\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_hit(&lint_one("serve/engine.rs", src)), vec!["panic_in_lib"]);
+    }
+
+    #[test]
+    fn spawn_rule_exempts_the_parallel_module() {
+        let src = "fn go() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(
+            rules_hit(&lint_one("serve/engine.rs", src)),
+            vec!["spawn_outside_parallel"]
+        );
+        assert!(rules_hit(&lint_one("util/parallel.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn spawn_rule_covers_scope_and_builder() {
+        let src = "fn go() { std::thread::scope(|s| { let _ = s; }); }\nfn b() { let _ = std::thread::Builder::new(); }\n";
+        assert_eq!(
+            rules_hit(&lint_one("coordinator/mod.rs", src)),
+            vec!["spawn_outside_parallel", "spawn_outside_parallel"]
+        );
+    }
+
+    #[test]
+    fn bare_instant_exempts_obs_and_benchkit() {
+        let src = "fn t() { let _now = std::time::Instant::now(); }\n";
+        assert_eq!(rules_hit(&lint_one("runtime/client.rs", src)), vec!["bare_instant"]);
+        assert!(rules_hit(&lint_one("obs/trace.rs", src)).is_empty());
+        assert!(rules_hit(&lint_one("benchkit/mod.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn dropped_span_guard_flags_underscore_and_unbound() {
+        let src = "fn f() {\n    let _ = obs::span(\"cat\", \"dead\");\n    obs::span(\"cat\", \"also dead\");\n    obs::span(\"cat\", \"chained\").with(\"k\", num(1.0));\n}\n";
+        let report = lint_one("coordinator/mod.rs", src);
+        assert_eq!(report.unannotated_count(), 3);
+    }
+
+    #[test]
+    fn dropped_span_guard_accepts_live_bindings() {
+        let src = "fn f() -> Span {\n    let _sp = obs::span(\"cat\", \"live\");\n    let mut named = obs::span(\"cat\", \"live2\");\n    named.attr(\"k\", num(1.0));\n    drop(_sp);\n    span(\"cat\", \"returned\")\n}\n";
+        assert!(rules_hit(&lint_one("coordinator/mod.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn undeclared_switch_checks_against_main_registry() {
+        let main = "const SWITCHES: &[&str] = &[\"help\", \"warm\"];\nfn f(args: &Args) { let _ = args.has(\"help\"); let _ = args.has(\"verbose\"); }\n";
+        let report = run_rules(&FileSet::from_sources(&[("main.rs", main)]));
+        let hits: Vec<_> = report.unannotated().collect();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "undeclared_switch");
+        assert!(hits[0].message.contains("verbose"));
+    }
+
+    #[test]
+    fn undeclared_switch_inert_without_a_registry() {
+        let src = "fn f(args: &Args) { let _ = args.has(\"anything\"); }\n";
+        assert!(rules_hit(&lint_one("coordinator/mod.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn suppression_with_justification_downgrades() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic_in_lib) — checked non-empty two lines up\n    x.unwrap()\n}\n";
+        let report = lint_one("train/trainer.rs", src);
+        assert_eq!(report.unannotated_count(), 0);
+        assert_eq!(report.suppressed_count(), 1);
+    }
+
+    #[test]
+    fn suppression_on_same_line_works() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // lint: allow(panic_in_lib) — infallible: len checked\n}\n";
+        let report = lint_one("train/trainer.rs", src);
+        assert_eq!(report.unannotated_count(), 0);
+        assert_eq!(report.suppressed_count(), 1);
+    }
+
+    #[test]
+    fn suppression_without_justification_still_fails() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic_in_lib)\n    x.unwrap()\n}\n";
+        let report = lint_one("train/trainer.rs", src);
+        assert_eq!(report.unannotated_count(), 1);
+        assert!(matches!(
+            report.diagnostics[0].suppression,
+            Suppression::MissingJustification
+        ));
+    }
+
+    #[test]
+    fn suppression_for_wrong_rule_does_not_apply() {
+        let src = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(nondet_iter) — wrong rule\n    x.unwrap()\n}\n";
+        assert_eq!(lint_one("train/trainer.rs", src).unannotated_count(), 1);
+    }
+
+    #[test]
+    fn suppression_list_covers_multiple_rules() {
+        let src = "fn f() {\n    // lint: allow(panic_in_lib, bare_instant) — startup-only path\n    let _t = std::time::Instant::now(); panic!(\"x\");\n}\n";
+        let report = lint_one("runtime/client.rs", src);
+        // the comment is on the line above both findings
+        assert_eq!(report.unannotated_count(), 0);
+        assert_eq!(report.suppressed_count(), 2);
+    }
+}

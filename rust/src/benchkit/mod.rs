@@ -39,7 +39,7 @@ impl Stats {
                 min_s: 0.0,
             };
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
         Stats {

@@ -66,8 +66,8 @@ impl Args {
                     }
                 } else if declared.contains(&name) {
                     out.switches.push(name.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), v);
                 } else {
                     out.switches.push(name.to_string());
                 }

@@ -187,7 +187,12 @@ impl Coordinator {
                 })
                 .collect(),
         ));
-        let live_jobs = queue.lock().unwrap().len();
+        // queue ops are a pop/push of plain Jobs — never left mid-update,
+        // so a poisoned lock (panicked worker) is safe to recover
+        let live_jobs = queue
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .len();
         let remaining = Arc::new(AtomicUsize::new(live_jobs));
         let (tx, rx) = mpsc::channel::<WorkerEvent>();
 
@@ -195,6 +200,7 @@ impl Coordinator {
         let mut stats: Vec<PartitionStats> = Vec::with_capacity(live_jobs);
         let mut attempts = vec![0u32; k];
 
+        // lint: allow(spawn_outside_parallel) — leader/worker topology over an mpsc channel with retries, not the ordered fork-join map util::parallel models
         let run_result = std::thread::scope(|scope| -> Result<()> {
             for wid in 0..workers {
                 let queue = Arc::clone(&queue);
@@ -285,7 +291,10 @@ impl Coordinator {
                             "partition {part_id} failed on worker {worker} \
                              (attempt {tries}): {error}; requeueing"
                         );
-                        queue.lock().unwrap().push_back(Job {
+                        let mut q = queue
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        q.push_back(Job {
                             part_id,
                             members: members[part_id as usize].clone(),
                             attempt: tries,

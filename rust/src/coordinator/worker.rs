@@ -36,7 +36,13 @@ pub fn worker_loop(
             // Without a runtime this worker can do nothing; report failure
             // for the next job so the leader can retry elsewhere.
             log::error!("worker {worker}: runtime init failed: {e}");
-            if let Some(job) = queue.lock().unwrap().pop_front() {
+            // recover a poisoned queue: it only ever holds complete Jobs,
+            // and stalling here would hang the leader's recv loop
+            let next = queue
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .pop_front();
+            if let Some(job) = next {
                 let _ = tx.send(WorkerEvent::Failed {
                     worker,
                     part_id: job.part_id,
@@ -60,7 +66,11 @@ pub fn worker_loop(
         if remaining.load(Ordering::Acquire) == 0 {
             break;
         }
-        let job = match queue.lock().unwrap().pop_front() {
+        let next = queue
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .pop_front();
+        let job = match next {
             Some(j) => j,
             None => {
                 // queue drained but work may be re-queued on failure

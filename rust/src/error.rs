@@ -30,6 +30,9 @@ pub enum Error {
 
     #[error("xla error: {0}")]
     Xla(String),
+
+    #[error("lint error: {0}")]
+    Lint(String),
 }
 
 impl From<xla::Error> for Error {

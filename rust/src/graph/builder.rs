@@ -7,18 +7,21 @@
 
 use super::csr::{CsrGraph, NodeId};
 use crate::error::Result;
+// lint: allow(nondet_iter) — O(1) keyed dedup only; build() sorts the pairs before CSR construction so no output depends on hash order
 use std::collections::HashMap;
 
 /// Accumulates edges, then builds a [`CsrGraph`].
 #[derive(Default)]
 pub struct GraphBuilder {
     n: usize,
+    // lint: allow(nondet_iter) — keyed access only; iterated once in build() where the result is immediately sorted
     edges: HashMap<(NodeId, NodeId), f32>,
     weighted: bool,
 }
 
 impl GraphBuilder {
     pub fn new(n: usize) -> Self {
+        // lint: allow(nondet_iter) — see the field note: dedup map, sorted on build
         GraphBuilder { n, edges: HashMap::new(), weighted: false }
     }
 

@@ -101,6 +101,7 @@ pub fn components_within(g: &CsrGraph, member: &[bool]) -> ComponentInfo {
     let mut labels = vec![u32::MAX; n];
     let mut sizes = Vec::new();
     let mut isolated = 0usize;
+    // lint: allow(nondet_iter) — keyed entry() only, never iterated; labels follow first-encounter order of the sorted ids loop
     let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
     for &v in &ids {
         let root = uf.find(v);
@@ -126,6 +127,7 @@ fn finalize(
 ) -> ComponentInfo {
     let mut labels = vec![0u32; n];
     let mut sizes = Vec::new();
+    // lint: allow(nondet_iter) — keyed entry() only, never iterated; labels follow first-encounter order of the 0..n loop
     let mut remap: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
     let mut isolated = 0usize;
     for v in 0..n as u32 {

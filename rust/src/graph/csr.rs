@@ -261,7 +261,7 @@ impl CsrGraph {
         // single chunk (the sequential default): take the buffer as-is —
         // only the multi-chunk path pays the ordered concat
         let mut triples: Vec<(u32, u32, f64)> = if chunks.len() == 1 {
-            chunks.pop().expect("map_chunks returns at least one chunk")
+            chunks.pop().unwrap_or_default()
         } else {
             let mut all = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
             for c in chunks {
@@ -306,8 +306,9 @@ impl CsrGraph {
     #[doc(hidden)]
     pub fn coarsen_reference(&self, labels: &[u32], n_coarse: usize) -> (CsrGraph, Vec<f64>) {
         let mut self_weight = vec![0.0f64; n_coarse];
+        // lint: allow(nondet_iter) — the HashMap *is* what makes this the oracle; keys are sorted before building and sums follow deterministic CSR edge order
         let mut agg: std::collections::HashMap<(u32, u32), f64> =
-            std::collections::HashMap::new();
+            std::collections::HashMap::new(); // lint: allow(nondet_iter) — same oracle map as the line above
         for (u, v, w) in self.edges() {
             let (cu, cv) = (labels[u as usize], labels[v as usize]);
             if cu == cv {
@@ -321,7 +322,7 @@ impl CsrGraph {
         edges.sort_unstable();
         let weights: Vec<f32> = edges.iter().map(|k| agg[k] as f32).collect();
         let g = CsrGraph::from_weighted_edges(n_coarse, &edges, Some(&weights))
-            .expect("reference coarse graph is valid");
+            .expect("reference coarse graph is valid"); // lint: allow(panic_in_lib) — doc(hidden) property-test oracle; sorted deduped edges cannot fail CSR validation
         (g, self_weight)
     }
 
@@ -355,8 +356,11 @@ impl CsrGraph {
             if fast.neighbors(v) != reference.neighbors(v) {
                 return Err(format!("adjacency mismatch at supernode {v}"));
             }
-            let fw = fast.neighbor_weights(v).unwrap();
-            let rw = reference.neighbor_weights(v).unwrap();
+            let (Some(fw), Some(rw)) =
+                (fast.neighbor_weights(v), reference.neighbor_weights(v))
+            else {
+                return Err(format!("missing weights at supernode {v}"));
+            };
             for (i, (a, b)) in fw.iter().zip(rw).enumerate() {
                 if (a - b).abs() > 1e-4 * a.abs().max(b.abs()).max(1.0) {
                     return Err(format!("weight mismatch at {v}[{i}]: {a} vs {b}"));

@@ -46,6 +46,7 @@ pub const KARATE_FACTIONS: [u8; 34] = [
 
 /// Build the karate graph.
 pub fn karate_graph() -> CsrGraph {
+    // lint: allow(panic_in_lib) — compile-time constant edge list, validated by the has_canonical_size test
     CsrGraph::from_edges(34, &KARATE_EDGES).expect("karate edge list is valid")
 }
 

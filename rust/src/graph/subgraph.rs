@@ -22,7 +22,7 @@
 //! never depends on the thread count.
 
 use super::csr::{CsrGraph, NodeId};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::util::parallel::map_chunks;
 
 /// A local training graph with its mapping back to global node ids.
@@ -180,7 +180,9 @@ pub fn repli_subgraph_with(
     let mut weights = Vec::new();
     for (i, &v) in members.iter().enumerate() {
         for (j, &u) in g.neighbors(v).iter().enumerate() {
-            let lu = scratch.get(u).expect("every neighbour was registered");
+            let lu = scratch
+                .get(u)
+                .ok_or_else(|| Error::Graph(format!("neighbour {u} not registered")))?;
             let owned_u = (lu as usize) < num_owned;
             // Keep each edge once: owned-owned when v < u; owned-replica
             // always emitted from the owned side.

@@ -28,6 +28,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::unnecessary_map_or)]
 
+pub mod analysis;
 pub mod benchkit;
 pub mod cli;
 pub mod config;

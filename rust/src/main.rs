@@ -9,6 +9,8 @@
 //!   serve      — load a shard bundle and answer queries interactively
 //!   query      — one-shot classification of --nodes against a bundle
 //!   metrics    — run a small workload and dump the obs metrics registry
+//!   lint       — run the in-crate static analysis pass over `src/`
+//!                (exits non-zero on unannotated violations)
 //!   info       — dataset + artifact inventory
 //!
 //! Every subcommand takes `--trace-out <path>` (or `[obs] trace = "path"`
@@ -71,6 +73,10 @@ USAGE:
                    engine when --shards is given and a tiny training run
                    when --train is given — then dumps the metrics
                    registry as JSON or Prometheus text)
+  repro lint      [--src dir] [--json-out LINT.json] [--fixable]
+                  (static analysis: determinism, panic-safety, and
+                   concurrency invariants; non-zero exit on unannotated
+                   violations; --fixable lists justified suppressions)
   repro info      (dataset defaults + compiled artifact inventory)
 
   any subcommand: --trace-out trace.json   (record tracing spans; write
@@ -89,7 +95,7 @@ SPEC grammar (stages joined by '+', optional key=value parameters):
 ";
 
 /// Boolean switches (never bind the next token as a value).
-const SWITCHES: &[&str] = &["help", "warm", "train"];
+const SWITCHES: &[&str] = &["help", "warm", "train", "fixable"];
 
 fn main() {
     init_logging();
@@ -137,6 +143,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("query") => cmd_query(args),
         Some("metrics") => cmd_metrics(args),
+        Some("lint") => cmd_lint(args),
         Some("info") => cmd_info(),
         _ => {
             println!("{USAGE}");
@@ -621,6 +628,37 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// `repro lint`: the in-crate static analysis pass (`analysis/`) over a
+/// source tree. Exits non-zero when any unannotated violation remains;
+/// `--json-out` writes the machine-readable report (the CI artifact) and
+/// `--fixable` lists justified suppressions for triage.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let src = args.str_or("src", "src");
+    let root = PathBuf::from(&src);
+    if !root.is_dir() {
+        return Err(Error::Lint(format!("--src {src}: not a directory")));
+    }
+    let report = leiden_fusion::analysis::lint_root(&root)?;
+    if let Some(path) = args.get("json-out") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, report.to_json().to_string())?;
+        eprintln!("lint report written to {path}");
+    }
+    print!("{}", report.render_human());
+    if args.has("fixable") {
+        print!("{}", report.render_fixable());
+    }
+    let violations = report.unannotated_count();
+    if violations > 0 {
+        return Err(Error::Lint(format!("{violations} unannotated violation(s)")));
+    }
     Ok(())
 }
 

@@ -265,7 +265,12 @@ impl Registry {
         make: impl FnOnce() -> Family,
         pick: impl FnOnce(&mut Family) -> T,
     ) -> T {
-        let mut fams = self.families.lock().unwrap();
+        // recover a poisoned registry: families hold only complete
+        // metric handles, and metrics must survive a panicking worker
+        let mut fams = self
+            .families
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let fam = fams.entry(name.to_string()).or_insert_with(make);
         pick(fam)
     }
@@ -276,6 +281,7 @@ impl Registry {
     pub fn counter(&self, name: &str) -> Counter {
         self.with_family(name, || Family::Counter(vec![Counter::new()]), |f| match f {
             Family::Counter(v) => v[0].clone(),
+            // lint: allow(panic_in_lib) — kind mismatch on a static metric name is a programming error, caught by any test touching the path
             other => panic!("metric {name:?} is a {}, not a counter", other.kind()),
         })
     }
@@ -289,6 +295,7 @@ impl Registry {
                 v.push(c.clone());
                 c
             }
+            // lint: allow(panic_in_lib) — kind mismatch on a static metric name is a programming error, caught by any test touching the path
             other => panic!("metric {name:?} is a {}, not a counter", other.kind()),
         })
     }
@@ -297,6 +304,7 @@ impl Registry {
     pub fn gauge(&self, name: &str) -> Gauge {
         self.with_family(name, || Family::Gauge(vec![Gauge::new()]), |f| match f {
             Family::Gauge(v) => v[0].clone(),
+            // lint: allow(panic_in_lib) — kind mismatch on a static metric name is a programming error, caught by any test touching the path
             other => panic!("metric {name:?} is a {}, not a gauge", other.kind()),
         })
     }
@@ -305,6 +313,7 @@ impl Registry {
     pub fn histogram(&self, name: &str) -> Histogram {
         self.with_family(name, || Family::Histogram(vec![Histogram::new()]), |f| match f {
             Family::Histogram(v) => v[0].clone(),
+            // lint: allow(panic_in_lib) — kind mismatch on a static metric name is a programming error, caught by any test touching the path
             other => panic!("metric {name:?} is a {}, not a histogram", other.kind()),
         })
     }
@@ -318,6 +327,7 @@ impl Registry {
                 v.push(h.clone());
                 h
             }
+            // lint: allow(panic_in_lib) — kind mismatch on a static metric name is a programming error, caught by any test touching the path
             other => panic!("metric {name:?} is a {}, not a histogram", other.kind()),
         })
     }
@@ -325,7 +335,10 @@ impl Registry {
     /// Aggregate every family: counters sum, gauges sum, histograms
     /// merge.
     fn aggregate(&self) -> Vec<(String, Aggregated)> {
-        let fams = self.families.lock().unwrap();
+        let fams = self
+            .families
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         fams.iter()
             .map(|(name, fam)| {
                 let agg = match fam {

@@ -63,7 +63,12 @@ impl LocalRing {
         if self.events.is_empty() {
             return;
         }
-        let mut global = COLLECTOR.lock().unwrap();
+        // a panicking thread flushes its ring on unwind — recover the
+        // poisoned collector (it only ever holds complete events) rather
+        // than double-panicking and aborting
+        let mut global = COLLECTOR
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let room = MAX_EVENTS.saturating_sub(global.len());
         let take = self.events.len().min(room);
         let dropped = self.events.len() - take;
@@ -213,7 +218,10 @@ pub fn event(cat: &'static str, name: &str, args: Vec<(&'static str, Json)>) {
 /// after engines and pools are dropped).
 pub fn drain() -> Vec<TraceEvent> {
     RING.with(|r| r.borrow_mut().flush());
-    std::mem::take(&mut *COLLECTOR.lock().unwrap())
+    let mut global = COLLECTOR
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    std::mem::take(&mut *global)
 }
 
 /// Events discarded because the collector cap was reached.

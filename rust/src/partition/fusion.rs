@@ -12,6 +12,7 @@ use crate::error::{Error, Result};
 use crate::graph::{components_within, CsrGraph, NodeId};
 use crate::util::parallel::map_chunks;
 use std::cmp::Reverse;
+// lint: allow(nondet_iter) — CutMap values are u64 counts folded with commutative sums, and every min/max over it uses a total-order key; see the field note on CutMap::per
 use std::collections::{BinaryHeap, HashMap};
 
 /// Fusion parameters (Algorithm 1 inputs).
@@ -78,6 +79,9 @@ impl FusionState {
 /// query O(neighbouring communities) and each merge O(degree of `from`
 /// in the community graph).
 struct CutMap {
+    /// Iteration order never leaks: merges fold commutative u64 sums and
+    /// both selection sites key on a total order over (count, community).
+    // lint: allow(nondet_iter) — order-independent by the argument above, asserted against a from-scratch recomputation under debug_assertions
     per: Vec<HashMap<u32, u64>>,
 }
 
@@ -108,6 +112,7 @@ impl CutMap {
             }
             enc
         });
+        // lint: allow(nondet_iter) — see the CutMap::per note: commutative counts, total-order selection
         let mut per: Vec<HashMap<u32, u64>> = vec![HashMap::new(); n_comms];
         for enc in chunks {
             for (a, b, cnt) in enc {
@@ -152,6 +157,7 @@ fn largest_edge_cut_neighbor(
     // of the queried community's cut (the pre-overhaul code path).
     #[cfg(debug_assertions)]
     {
+        // lint: allow(nondet_iter) — debug-only oracle compared for set equality, never iterated into an ordered result
         let mut reference: HashMap<u32, u64> = HashMap::new();
         for &v in &st.members[v_comm as usize] {
             for &u in _g.neighbors(v) {

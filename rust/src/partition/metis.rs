@@ -230,7 +230,7 @@ fn greedy_growing(
     }
     for v in 0..n {
         if assign[v] == u32::MAX {
-            let lightest = (0..k).min_by_key(|&p| loads[p]).unwrap() as u32;
+            let lightest = (0..k).min_by_key(|&p| loads[p]).unwrap_or(0) as u32;
             assign[v] = lightest;
             loads[lightest as usize] += weights[v];
         }

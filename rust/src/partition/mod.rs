@@ -84,6 +84,7 @@ impl Partitioning {
 
     /// Compact arbitrary (possibly sparse) labels to dense `0..k`.
     pub fn from_labels(labels: &[u32]) -> Self {
+        // lint: allow(nondet_iter) — keyed entry() only, never iterated; dense ids follow first-encounter order of the labels slice
         let mut remap = std::collections::HashMap::new();
         let assign: Vec<u32> = labels
             .iter()

@@ -6,6 +6,7 @@
 
 use super::Partitioning;
 use crate::graph::{components_within, CsrGraph};
+// lint: allow(nondet_iter) — membership + len() only (replication-factor counting); the set is never iterated
 use std::collections::HashSet;
 
 /// Full §5.1 metric set for one (graph, partitioning) pair.
@@ -69,6 +70,7 @@ impl PartitionQuality {
         // Replication factor: copies of v = 1 + #distinct foreign partitions
         // among its neighbours.
         let mut total_copies = 0usize;
+        // lint: allow(nondet_iter) — distinct-count scratch: insert + len(), never iterated
         let mut seen: HashSet<u32> = HashSet::new();
         for v in 0..n as u32 {
             seen.clear();

@@ -510,6 +510,7 @@ pub fn registered_specs() -> Vec<(&'static str, PartitionSpec)> {
     ]
     .iter()
     .map(|&name| {
+        // lint: allow(panic_in_lib) — static literal registry; the spec round-trip tests parse every entry
         let spec: PartitionSpec = name.parse().expect("registered spec parses");
         (name, spec)
     })

@@ -23,12 +23,12 @@
 use super::manifest::{ArtifactMeta, DType, Manifest};
 use crate::error::{Error, Result};
 use crate::obs::{self, Counter, Histogram};
+use crate::util::Stopwatch;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::Arc;
-use std::time::Instant;
 
 /// Host-side tensor handed to / received from an executable.
 ///
@@ -99,7 +99,8 @@ impl Tensor {
                 if Arc::get_mut(a).is_none() {
                     *a = a.to_vec().into();
                 }
-                Ok(Arc::get_mut(a).expect("freshly detached arc is unique"))
+                Arc::get_mut(a)
+                    .ok_or_else(|| Error::Runtime("detached tensor arc still shared".into()))
             }
             _ => Err(Error::Runtime("expected f32 tensor".into())),
         }
@@ -352,7 +353,7 @@ impl ExecSession {
             "inputs",
             crate::util::json::num((state.len() + invariant.len()) as f64),
         );
-        let sw = Instant::now();
+        let sw = Stopwatch::start();
         let mut state_bufs = Vec::with_capacity(state.len());
         for (i, t) in state.iter().enumerate() {
             state_bufs.push(upload(&client, &exe, i, t, &metrics)?);
@@ -361,7 +362,7 @@ impl ExecSession {
         for (j, t) in invariant.iter().enumerate() {
             staged.push(upload(&client, &exe, state.len() + j, t, &metrics)?);
         }
-        metrics.stage.record(sw.elapsed().as_secs_f64());
+        metrics.stage.record(sw.secs());
         Ok(ExecSession { client, exe, state: state_bufs, staged, metrics })
     }
 
@@ -377,11 +378,11 @@ impl ExecSession {
 
     fn execute(&mut self) -> Result<Vec<xla::PjRtBuffer>> {
         let _sp = obs::span("runtime", "session.execute");
-        let sw = Instant::now();
+        let sw = Stopwatch::start();
         let args: Vec<&xla::PjRtBuffer> =
             self.state.iter().chain(self.staged.iter()).collect();
         let mut result = self.exe.exe.execute_b(&args)?;
-        self.metrics.execute.record(sw.elapsed().as_secs_f64());
+        self.metrics.execute.record(sw.secs());
         if result.is_empty() || result[0].is_empty() {
             return Err(Error::Runtime(format!(
                 "{}: execution returned no buffers",
@@ -408,14 +409,17 @@ impl ExecSession {
         let loss = if outs.len() == n_out {
             // Untupled outputs: the state prefix stays on device; only the
             // trailing loss scalar crosses back to the host.
-            let sw = Instant::now();
-            let lit = outs.last().expect("non-empty by arity check").to_literal_sync()?;
+            let sw = Stopwatch::start();
+            let lit = outs
+                .last()
+                .ok_or_else(|| Error::Runtime("execution returned no buffers".into()))?
+                .to_literal_sync()?;
             let loss = lit
                 .to_vec::<f32>()?
                 .first()
                 .copied()
                 .ok_or_else(|| Error::Runtime("empty loss output".into()))?;
-            self.metrics.download.record(sw.elapsed().as_secs_f64());
+            self.metrics.download.record(sw.secs());
             self.metrics.bytes_to_host.add(4);
             outs.truncate(p);
             self.state = outs;
@@ -440,7 +444,7 @@ impl ExecSession {
         let p = self.state.len();
         let meta = &self.exe.meta;
         self.metrics.tuple_fallback_steps.inc();
-        let sw = Instant::now();
+        let sw = Stopwatch::start();
         let tuple = tuple_buf.to_literal_sync()?;
         let parts = tuple.to_tuple()?;
         if parts.len() != meta.outputs.len() {
@@ -454,15 +458,15 @@ impl ExecSession {
         let out_bytes: u64 =
             meta.outputs.iter().map(|s| 4 * s.num_elements() as u64).sum();
         self.metrics.bytes_to_host.add(out_bytes);
-        self.metrics.download.record(sw.elapsed().as_secs_f64());
+        self.metrics.download.record(sw.secs());
         let loss = parts
             .last()
-            .expect("outputs non-empty by construction check")
+            .ok_or_else(|| Error::Runtime("tuple output has no loss element".into()))?
             .to_vec::<f32>()?
             .first()
             .copied()
             .ok_or_else(|| Error::Runtime("empty loss output".into()))?;
-        let sw = Instant::now();
+        let sw = Stopwatch::start();
         let mut new_state = Vec::with_capacity(p);
         for lit in parts.iter().take(p) {
             new_state.push(self.client.buffer_from_host_literal(None, lit)?);
@@ -470,7 +474,7 @@ impl ExecSession {
         let state_bytes: u64 =
             meta.inputs.iter().take(p).map(|s| 4 * s.num_elements() as u64).sum();
         self.metrics.bytes_to_device.add(state_bytes);
-        self.metrics.stage.record(sw.elapsed().as_secs_f64());
+        self.metrics.stage.record(sw.secs());
         self.state = new_state;
         Ok(loss)
     }
@@ -501,7 +505,7 @@ impl ExecSession {
     pub fn run_outputs(&mut self) -> Result<Vec<Tensor>> {
         let outs = self.execute()?;
         let n_out = self.exe.meta.outputs.len();
-        let sw = Instant::now();
+        let sw = Stopwatch::start();
         let tensors: Vec<Tensor> = if outs.len() == 1 {
             // One buffer is ambiguous when the artifact also has one
             // output (the mlp `pred` shape): an untupled plain array and
@@ -539,7 +543,7 @@ impl ExecSession {
         };
         let bytes: u64 = tensors.iter().map(|t| t.byte_len() as u64).sum();
         self.metrics.bytes_to_host.add(bytes);
-        self.metrics.download.record(sw.elapsed().as_secs_f64());
+        self.metrics.download.record(sw.secs());
         self.metrics.steps.inc();
         Ok(tensors)
     }
@@ -548,7 +552,7 @@ impl ExecSession {
     /// host tensors — the once-at-the-end transfer of a training run.
     pub fn state_tensors(&mut self) -> Result<Vec<Tensor>> {
         let _sp = obs::span("runtime", "session.download_state");
-        let sw = Instant::now();
+        let sw = Stopwatch::start();
         let mut out = Vec::with_capacity(self.state.len());
         let mut bytes = 0u64;
         for (buf, spec) in self.state.iter().zip(&self.exe.meta.inputs) {
@@ -558,7 +562,7 @@ impl ExecSession {
             out.push(t);
         }
         self.metrics.bytes_to_host.add(bytes);
-        self.metrics.download.record(sw.elapsed().as_secs_f64());
+        self.metrics.download.record(sw.secs());
         Ok(out)
     }
 }

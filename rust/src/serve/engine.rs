@@ -26,12 +26,12 @@ use crate::obs::{self, Counter, Histogram};
 use crate::runtime::{ArtifactMeta, Manifest, Runtime, Tensor};
 use crate::train::checkpoint::load_tensors;
 use crate::util::json::num;
+use crate::util::Stopwatch;
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// Engine tuning knobs (see the `[serve]` config section).
 #[derive(Clone, Debug)]
@@ -280,6 +280,7 @@ impl Engine {
         let mut handles = Vec::with_capacity(workers);
         for wid in 0..workers {
             let worker_shared = Arc::clone(&shared);
+            // lint: allow(spawn_outside_parallel) — long-lived named worker threads driving a condvar queue, not the fork-join kernel util::parallel models
             match std::thread::Builder::new()
                 .name(format!("lf-serve-{wid}"))
                 .spawn(move || worker_loop(wid, worker_shared))
@@ -382,12 +383,16 @@ impl Engine {
                 Err(msg) => return Err(Error::Serve(msg)),
             }
         }
-        Ok(out.into_iter().map(|p| p.expect("every slot answered")).collect())
+        out.into_iter()
+            .map(|p| p.ok_or_else(|| Error::Serve("query slot left unanswered".into())))
+            .collect()
     }
 
     /// Convenience single-node query.
     pub fn query_one(&self, node: NodeId) -> Result<Prediction> {
-        Ok(self.query(&[node])?.pop().expect("one answer"))
+        self.query(&[node])?
+            .pop()
+            .ok_or_else(|| Error::Serve("single-node query returned no answer".into()))
     }
 
     pub fn stats(&self) -> EngineStats {
@@ -577,20 +582,28 @@ fn process_batch(
     // straight into the bucket-padded tensor — nothing per-row is
     // allocated. Requests whose node is unknown (or whose shard fails to
     // load) are answered individually with an error.
-    let t_gather = Instant::now();
+    let t_gather = Stopwatch::start();
     {
-        let x = inputs
-            .last_mut()
-            .expect("worker inputs are never empty")
-            .make_mut_f32()
-            .expect("worker inputs always end with the f32 x buffer");
+        // a worker must never panic (it would poison the shared queue
+        // mutex): a missing or non-f32 x buffer error-completes the whole
+        // batch instead
+        let x = match inputs.last_mut().map(Tensor::make_mut_f32) {
+            Some(Ok(x)) => x,
+            _ => {
+                let msg = "worker x buffer missing or not f32".to_string();
+                for r in pending.reqs.drain(..) {
+                    r.finish(&shared.cache, Err(msg.clone()));
+                }
+                return;
+            }
+        };
         // rotate through the guard's deque (pop front, keep live at the
         // back — O(1) each way) so an unwind mid-loop still
         // error-completes everything not yet processed
         let total = pending.reqs.len();
         let mut live = 0usize;
         for _ in 0..total {
-            let r = pending.reqs.pop_front().expect("rotation stays within len");
+            let Some(r) = pending.reqs.pop_front() else { break };
             match shared.store.copy_embedding(r.node, &mut x[live * f..(live + 1) * f]) {
                 Ok(()) => {
                     pending.reqs.push_back(r);
@@ -606,14 +619,14 @@ fn process_batch(
             x[pending.reqs.len() * f..*prev_rows * f].fill(0.0);
         }
     }
-    shared.metrics.gather.record(t_gather.elapsed().as_secs_f64());
+    shared.metrics.gather.record(t_gather.secs());
     *prev_rows = pending.reqs.len();
     if pending.reqs.is_empty() {
         return;
     }
 
     // One MLP forward for the whole batch.
-    let t_forward = Instant::now();
+    let t_forward = Stopwatch::start();
     let logits = match exe.run(inputs).and_then(|out| {
         out.into_iter()
             .next()
@@ -630,11 +643,11 @@ fn process_batch(
             return;
         }
     };
-    shared.metrics.forward.record(t_forward.elapsed().as_secs_f64());
+    shared.metrics.forward.record(t_forward.secs());
 
     // Publish: cache insert + flight completion per row. Each completion
     // wakes only that node's waiters (per-flight condvar).
-    let t_publish = Instant::now();
+    let t_publish = Stopwatch::start();
     let mut row = 0usize;
     while let Some(r) = pending.reqs.pop_front() {
         let slice = &logits[row * c..(row + 1) * c];
@@ -649,5 +662,5 @@ fn process_batch(
         shared.metrics.computed.inc();
         r.finish(&shared.cache, Ok(p));
     }
-    shared.metrics.publish.record(t_publish.elapsed().as_secs_f64());
+    shared.metrics.publish.record(t_publish.secs());
 }

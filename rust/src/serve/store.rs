@@ -160,7 +160,10 @@ impl ShardedEmbeddingStore {
         // On a first-touch race both threads read the file; set() keeps
         // exactly one slab and the loser's copy is dropped here.
         let _ = shard.slab.set(Arc::from(data));
-        Ok(shard.slab.get().expect("slab just initialised"))
+        shard
+            .slab
+            .get()
+            .ok_or_else(|| Error::Serve("slab vanished after first-touch set".into()))
     }
 
     /// Copy one node's embedding row into `out` (len == dim). After the

@@ -269,6 +269,7 @@ fn reuse_slot<T: Copy + Default>(
     if slot.len() != len || Arc::get_mut(slot).is_none() {
         *slot = vec![T::default(); len].into();
     }
+    // lint: allow(panic_in_lib) — infallible: the branch above replaces any shared or wrong-size allocation with a fresh unique one
     let buf = Arc::get_mut(slot).expect("uniquely owned after the reset above");
     buf[live..].fill(T::default());
     buf

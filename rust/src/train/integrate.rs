@@ -257,7 +257,11 @@ pub fn train_classifier_path(
                 inputs.push(y.clone());
                 inputs.push(mask.clone());
                 let mut out = train_exe.run(&inputs)?;
-                losses.push(out.last().unwrap().scalar_f32()?);
+                let loss = out
+                    .last()
+                    .ok_or_else(|| Error::Runtime("train step returned no outputs".into()))?
+                    .scalar_f32()?;
+                losses.push(loss);
                 t = out[3 * p].clone();
                 v = out.drain(2 * p..3 * p).collect();
                 m = out.drain(p..2 * p).collect();

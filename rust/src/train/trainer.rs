@@ -219,7 +219,10 @@ pub fn train_partition_with(
                 inputs.push(padded.y.clone());
                 inputs.push(padded.mask.clone());
                 let mut out = train_exe.run(&inputs)?;
-                let loss = out.last().unwrap().scalar_f32()?;
+                let loss = out
+                    .last()
+                    .ok_or_else(|| Error::Runtime("train step returned no outputs".into()))?
+                    .scalar_f32()?;
                 losses.push(loss);
                 t = out[3 * p].clone();
                 // reclaim updated state without copying

@@ -56,6 +56,7 @@ where
         // join in spawn order — the ordered reduction
         handles
             .into_iter()
+            // lint: allow(panic_in_lib) — re-raising a worker panic on the caller thread is the fork-join contract; swallowing it would return partial results
             .map(|h| h.join().expect("parallel worker panicked"))
             .collect()
     })

@@ -1,0 +1,7 @@
+//! Suppressed fixture: a justified direct clock read
+//! (linted under the virtual path `runtime/timer.rs`).
+
+pub fn startup_stamp() -> std::time::Instant {
+    // lint: allow(bare_instant) — one-shot startup stamp, never a kernel measurement
+    std::time::Instant::now()
+}

@@ -1,0 +1,8 @@
+//! Violating fixture: bare wall-clock access in a kernel
+//! (linted under the virtual path `runtime/timer.rs`).
+
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = std::time::Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}

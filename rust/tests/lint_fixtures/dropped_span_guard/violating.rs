@@ -1,0 +1,15 @@
+//! Violating fixture: tracing span guards discarded on creation
+//! (linted under the virtual path `coordinator/mod.rs`). The stand-in
+//! span() mirrors obs::trace::span's guard-returning shape.
+
+pub struct Guard;
+
+pub fn span(_name: &str) -> Guard {
+    Guard
+}
+
+pub fn run_round(round: u32) -> u32 {
+    let _ = span("coordinator.round");
+    span("coordinator.requeue");
+    round + 1
+}

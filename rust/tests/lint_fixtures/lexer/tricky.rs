@@ -1,0 +1,59 @@
+//! Lexer stress fixture: every construct that could fool a naive
+//! tokenizer into reporting false positives. Linting this file (under a
+//! determinism-contract path) must produce ZERO findings — all the
+//! alarming text below lives in strings, comments, or test code.
+
+/* block comment mentioning .unwrap() and HashMap
+   /* nested: panic!("nope") and Instant::now() */
+   still the same comment: thread::spawn(|| {})
+*/
+
+pub fn strings_hide_everything() -> (&'static str, &'static str, &'static str) {
+    let plain = "call .unwrap() then panic!(\"boom\") via HashMap iteration";
+    let raw = r#"thread::spawn(|| Instant::now()); obs::span("x", "y");"#;
+    let deep = r##"a raw string with "#hash# quoting: .expect("inner")"##;
+    let bytes = b"unwrap() in a byte string";
+    let raw_bytes = br#"HashSet::new() in raw bytes"#;
+    let _ = (bytes, raw_bytes);
+    (plain, raw, deep)
+}
+
+pub fn char_vs_lifetime<'a>(x: &'a u32) -> (&'a u32, char, char, char) {
+    let tick: char = '\'';
+    let escape: char = '\u{1F600}';
+    let letter: char = 'x';
+    (x, tick, escape, letter)
+}
+
+pub struct Generic<'long, T>(pub &'long T);
+
+#[derive(Clone)]
+pub struct Attributed {
+    pub field: u32,
+}
+
+pub fn ranges_and_floats() -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..10 {
+        acc += i as f64 * 1.5e-3;
+    }
+    acc
+}
+
+// an identifier that merely *contains* a banned name must not match
+pub fn unwrap_adjacent_names() -> u32 {
+    let unwrap_count = 1u32;
+    let has_unwrapped = unwrap_count;
+    has_unwrapped
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap_freely() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let m: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        assert!(m.is_empty());
+    }
+}

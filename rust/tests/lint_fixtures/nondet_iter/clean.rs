@@ -1,0 +1,19 @@
+//! Clean fixture: the same computation with ordered containers
+//! (linted under the virtual path `partition/kernel.rs`).
+
+use std::collections::BTreeMap;
+
+pub fn community_sizes(labels: &[u32]) -> Vec<(u32, usize)> {
+    let mut sizes: BTreeMap<u32, usize> = BTreeMap::new();
+    for &l in labels {
+        *sizes.entry(l).or_insert(0) += 1;
+    }
+    sizes.into_iter().collect()
+}
+
+pub fn distinct(labels: &[u32]) -> Vec<u32> {
+    let mut out = labels.to_vec();
+    out.sort_unstable();
+    out.dedup();
+    out
+}

@@ -1,0 +1,11 @@
+//! Suppressed fixture: a justified unordered container in a
+//! determinism-contract module (virtual path `partition/kernel.rs`).
+
+// lint: allow(nondet_iter) — membership tests only; the set is never iterated
+use std::collections::HashSet;
+
+pub fn count_members(labels: &[u32], wanted: &[u32]) -> usize {
+    // lint: allow(nondet_iter) — built once, queried by key, never iterated
+    let set: HashSet<u32> = wanted.iter().copied().collect();
+    labels.iter().filter(|l| set.contains(l)).count()
+}

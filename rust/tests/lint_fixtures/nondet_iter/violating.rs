@@ -1,0 +1,18 @@
+//! Violating fixture: unordered containers in a determinism-contract
+//! module (linted under the virtual path `partition/kernel.rs`).
+
+use std::collections::{HashMap, HashSet};
+
+pub fn community_sizes(labels: &[u32]) -> Vec<(u32, usize)> {
+    let mut sizes: HashMap<u32, usize> = HashMap::new();
+    for &l in labels {
+        *sizes.entry(l).or_insert(0) += 1;
+    }
+    // iteration order leaks straight into the output vector
+    sizes.into_iter().collect()
+}
+
+pub fn distinct(labels: &[u32]) -> Vec<u32> {
+    let set: HashSet<u32> = labels.iter().copied().collect();
+    set.into_iter().collect()
+}

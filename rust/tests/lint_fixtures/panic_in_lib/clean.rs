@@ -1,0 +1,22 @@
+//! Clean fixture: the same logic with propagated errors and defaults
+//! (linted under the virtual path `train/mod.rs`).
+
+pub fn read_config(path: &str) -> Result<String, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    if text.is_empty() {
+        return Err(format!("empty config at {path}"));
+    }
+    Ok(text)
+}
+
+pub fn first_line(text: &str) -> &str {
+    text.lines().next().unwrap_or("")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        super::read_config("/definitely/missing").unwrap_err();
+    }
+}

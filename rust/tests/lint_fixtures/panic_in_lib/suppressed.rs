@@ -1,0 +1,7 @@
+//! Suppressed fixture: a justified infallible unwrap
+//! (linted under the virtual path `train/mod.rs`).
+
+pub fn last_of_three(values: [u32; 3]) -> u32 {
+    // lint: allow(panic_in_lib) — infallible: a [u32; 3] always has a last element
+    *values.iter().last().expect("fixed-size array")
+}

@@ -1,0 +1,18 @@
+//! Violating fixture: panicking calls in library code
+//! (linted under the virtual path `train/mod.rs`).
+
+pub fn read_config(path: &str) -> String {
+    let text = std::fs::read_to_string(path).unwrap();
+    if text.is_empty() {
+        panic!("empty config at {path}");
+    }
+    text
+}
+
+pub fn first_line(text: &str) -> &str {
+    text.lines().next().expect("at least one line")
+}
+
+pub fn not_written_yet() -> u32 {
+    todo!()
+}

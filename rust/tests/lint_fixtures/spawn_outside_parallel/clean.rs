@@ -1,0 +1,7 @@
+//! Clean fixture: no direct std::thread use
+//! (linted under the virtual path `serve/pool.rs`). Real code would call
+//! util::parallel::map_chunks; this fixture just stays sequential.
+
+pub fn fan_out(jobs: Vec<u64>) -> u64 {
+    jobs.into_iter().map(|j| j * 2).sum()
+}

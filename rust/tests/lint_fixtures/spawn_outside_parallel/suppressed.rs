@@ -1,0 +1,9 @@
+//! Suppressed fixture: a justified long-lived thread
+//! (linted under the virtual path `serve/pool.rs`).
+
+pub fn watchdog() -> std::thread::JoinHandle<()> {
+    // lint: allow(spawn_outside_parallel) — long-lived watchdog, not a fork-join kernel
+    std::thread::spawn(|| loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+    })
+}

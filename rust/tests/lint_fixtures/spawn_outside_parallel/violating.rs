@@ -1,0 +1,10 @@
+//! Violating fixture: ad-hoc threading outside util::parallel
+//! (linted under the virtual path `serve/pool.rs`).
+
+pub fn fan_out(jobs: Vec<u64>) -> u64 {
+    let handles: Vec<_> = jobs
+        .into_iter()
+        .map(|j| std::thread::spawn(move || j * 2))
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap_or(0)).sum()
+}

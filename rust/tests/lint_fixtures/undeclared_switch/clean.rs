@@ -1,0 +1,14 @@
+//! Clean fixture: only queries switch names present in the registry
+//! (linted alongside the companion main_registry.rs fixture).
+
+pub struct Args;
+
+impl Args {
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+}
+
+pub fn wants_warmup(args: &Args) -> bool {
+    args.has("warm") || args.has("help")
+}

@@ -1,0 +1,8 @@
+//! Companion registry fixture: stands in for the binary's main.rs,
+//! declaring the canonical switch names.
+
+const SWITCHES: &[&str] = &["help", "warm", "train"];
+
+pub fn registry_len() -> usize {
+    SWITCHES.len()
+}

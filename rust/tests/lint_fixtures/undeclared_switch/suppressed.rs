@@ -1,0 +1,15 @@
+//! Suppressed fixture: a justified query for a deliberately hidden switch
+//! (linted alongside the companion main_registry.rs fixture).
+
+pub struct Args;
+
+impl Args {
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+}
+
+pub fn wants_debug_dump(args: &Args) -> bool {
+    // lint: allow(undeclared_switch) — internal debug switch, intentionally undocumented in USAGE
+    args.has("debug-dump")
+}

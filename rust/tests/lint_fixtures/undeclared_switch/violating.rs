@@ -1,0 +1,14 @@
+//! Violating fixture: queries a switch name missing from the registry
+//! (linted alongside the companion main_registry.rs fixture).
+
+pub struct Args;
+
+impl Args {
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+}
+
+pub fn wants_warmup(args: &Args) -> bool {
+    args.has("wurm")
+}

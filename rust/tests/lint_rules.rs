@@ -1,0 +1,222 @@
+//! Golden-file tests for the in-crate linter (`analysis` module).
+//!
+//! Each rule has a fixture triple under `tests/lint_fixtures/<rule>/`:
+//! `violating.rs` must trip the rule, `clean.rs` must lint with no
+//! findings at all, and `suppressed.rs` must lint with zero unannotated
+//! violations while recording at least one justified suppression.
+//!
+//! Fixture files are plain data — cargo compiles only top-level
+//! `tests/*.rs`, never these subdirectories — so each test assigns a
+//! virtual in-crate path here, which is how path-scoped rules (the
+//! determinism scope, the threading-module exemption, the `obs/`
+//! timing exemption) get exercised.
+
+use leiden_fusion::analysis::{lint_root, lint_sources, Diagnostic, Report, Suppression};
+
+fn fixture(rel: &str) -> String {
+    let path = format!("{}/tests/lint_fixtures/{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+fn rule_hits<'a>(report: &'a Report, rule: &str) -> Vec<&'a Diagnostic> {
+    report.diagnostics.iter().filter(|d| d.rule == rule).collect()
+}
+
+/// Run the violating/clean/suppressed triple for one rule, linting each
+/// fixture under `virtual_path`.
+fn check_triple(rule: &str, virtual_path: &str) {
+    let violating = fixture(&format!("{rule}/violating.rs"));
+    let report = lint_sources(&[(virtual_path, violating.as_str())]);
+    let hits = rule_hits(&report, rule);
+    assert!(
+        !hits.is_empty(),
+        "{rule}: violating fixture produced no {rule} findings"
+    );
+    assert!(
+        hits.iter().all(|d| d.is_unannotated()),
+        "{rule}: violating fixture findings must be unannotated"
+    );
+
+    let clean = fixture(&format!("{rule}/clean.rs"));
+    let report = lint_sources(&[(virtual_path, clean.as_str())]);
+    assert!(
+        report.diagnostics.is_empty(),
+        "{rule}: clean fixture must produce no findings, got {:?}",
+        report.diagnostics
+    );
+
+    let suppressed = fixture(&format!("{rule}/suppressed.rs"));
+    let report = lint_sources(&[(virtual_path, suppressed.as_str())]);
+    assert_eq!(
+        report.unannotated_count(),
+        0,
+        "{rule}: suppressed fixture must have no unannotated findings, got {:?}",
+        report.diagnostics
+    );
+    let excused = rule_hits(&report, rule);
+    assert!(
+        !excused.is_empty(),
+        "{rule}: suppressed fixture must still record the finding"
+    );
+    assert!(
+        excused
+            .iter()
+            .all(|d| matches!(&d.suppression, Suppression::Justified(j) if !j.is_empty())),
+        "{rule}: suppressions must carry a non-empty justification"
+    );
+}
+
+#[test]
+fn nondet_iter_triple() {
+    check_triple("nondet_iter", "partition/kernel.rs");
+}
+
+#[test]
+fn nondet_iter_is_scoped_to_determinism_paths() {
+    // The same violating source outside the determinism scope is legal.
+    let violating = fixture("nondet_iter/violating.rs");
+    let report = lint_sources(&[("serve/scratch.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "nondet_iter").is_empty());
+}
+
+#[test]
+fn panic_in_lib_triple() {
+    check_triple("panic_in_lib", "train/mod.rs");
+}
+
+#[test]
+fn spawn_outside_parallel_triple() {
+    check_triple("spawn_outside_parallel", "serve/pool.rs");
+}
+
+#[test]
+fn spawn_is_legal_inside_the_threading_module() {
+    let violating = fixture("spawn_outside_parallel/violating.rs");
+    let report = lint_sources(&[("util/parallel.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "spawn_outside_parallel").is_empty());
+}
+
+#[test]
+fn bare_instant_triple() {
+    check_triple("bare_instant", "runtime/timer.rs");
+}
+
+#[test]
+fn bare_instant_is_legal_in_obs_and_benchkit() {
+    let violating = fixture("bare_instant/violating.rs");
+    for exempt in ["obs/trace.rs", "benchkit/mod.rs"] {
+        let report = lint_sources(&[(exempt, violating.as_str())]);
+        assert!(rule_hits(&report, "bare_instant").is_empty(), "{exempt}");
+    }
+}
+
+#[test]
+fn dropped_span_guard_triple() {
+    check_triple("dropped_span_guard", "coordinator/mod.rs");
+}
+
+#[test]
+fn undeclared_switch_triple() {
+    let registry = fixture("undeclared_switch/main_registry.rs");
+
+    let violating = fixture("undeclared_switch/violating.rs");
+    let report = lint_sources(&[
+        ("main.rs", registry.as_str()),
+        ("cli/run.rs", violating.as_str()),
+    ]);
+    let hits = rule_hits(&report, "undeclared_switch");
+    assert_eq!(hits.len(), 1, "got {:?}", report.diagnostics);
+    assert!(hits[0].is_unannotated());
+    assert!(hits[0].message.contains("wurm"));
+
+    let clean = fixture("undeclared_switch/clean.rs");
+    let report = lint_sources(&[
+        ("main.rs", registry.as_str()),
+        ("cli/run.rs", clean.as_str()),
+    ]);
+    assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+
+    let suppressed = fixture("undeclared_switch/suppressed.rs");
+    let report = lint_sources(&[
+        ("main.rs", registry.as_str()),
+        ("cli/run.rs", suppressed.as_str()),
+    ]);
+    assert_eq!(report.unannotated_count(), 0, "{:?}", report.diagnostics);
+    assert_eq!(rule_hits(&report, "undeclared_switch").len(), 1);
+}
+
+#[test]
+fn undeclared_switch_is_inert_without_a_registry() {
+    // A file set with no main.rs SWITCHES declaration cannot know the
+    // canonical names, so the rule must stay silent rather than guess.
+    let violating = fixture("undeclared_switch/violating.rs");
+    let report = lint_sources(&[("cli/run.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "undeclared_switch").is_empty());
+}
+
+#[test]
+fn lexer_stress_fixture_lints_clean() {
+    // tricky.rs hides every banned pattern inside strings, comments,
+    // raw strings, and test code; linted under the strictest path
+    // (determinism scope) it must still produce zero findings.
+    let tricky = fixture("lexer/tricky.rs");
+    let report = lint_sources(&[("partition/tricky.rs", tricky.as_str())]);
+    assert!(
+        report.diagnostics.is_empty(),
+        "lexer fixture leaked findings: {:?}",
+        report.diagnostics
+    );
+}
+
+/// The tree itself must lint clean: zero unannotated violations across
+/// `src/`. This is the same gate `repro lint` enforces in tier1/CI,
+/// locked in at unit-test granularity so a regression fails fast.
+#[test]
+fn self_lint_src_is_clean() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_root(&src).unwrap_or_else(|e| panic!("lint_root: {e}"));
+    let violations: Vec<String> = report
+        .unannotated()
+        .map(|d| format!("[{}] {}:{} — {}", d.rule, d.file, d.line, d.message))
+        .collect();
+    assert!(
+        violations.is_empty(),
+        "unannotated lint violations in src/:\n{}",
+        violations.join("\n")
+    );
+    assert!(report.files_scanned > 20, "suspiciously small scan");
+}
+
+/// Regression lock for the span-guard / switch-registry sweep: main.rs
+/// and coordinator/ carry no dropped_span_guard or undeclared_switch
+/// findings at all — not even suppressed ones.
+#[test]
+fn main_and_coordinator_are_span_and_switch_clean() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_root(&src).unwrap_or_else(|e| panic!("lint_root: {e}"));
+    let offenders: Vec<&Diagnostic> = report
+        .diagnostics
+        .iter()
+        .filter(|d| d.file == "main.rs" || d.file.starts_with("coordinator/"))
+        .filter(|d| d.rule == "dropped_span_guard" || d.rule == "undeclared_switch")
+        .collect();
+    assert!(offenders.is_empty(), "{offenders:?}");
+}
+
+/// A suppression without a justification is still a violation — the
+/// escape hatch must not allow silent exceptions to accumulate.
+#[test]
+fn suppression_without_justification_still_fails() {
+    let src = concat!(
+        "pub fn f(v: &[u32]) -> u32 {\n",
+        "    // lint: allow(panic_in_lib)\n",
+        "    *v.first().unwrap()\n",
+        "}\n"
+    );
+    let report = lint_sources(&[("train/mod.rs", src)]);
+    assert_eq!(report.unannotated_count(), 1);
+    assert!(matches!(
+        report.diagnostics[0].suppression,
+        Suppression::MissingJustification
+    ));
+}
