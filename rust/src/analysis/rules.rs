@@ -20,6 +20,8 @@
 //! | `bare_instant` | timing flows through `util::Stopwatch`/`obs` so it stays observable |
 //! | `dropped_span_guard` | an `obs::trace` span bound to `_` (or unbound) dies immediately — always a bug |
 //! | `undeclared_switch` | every `args.has("x")` switch is declared in `main.rs` `SWITCHES` (closes the `--switch positional` misparse class) |
+//! | `undeclared_fault_point` | every `fault::point("x")` is declared in the `FAULT_POINTS` registry (an undeclared point is invisible to plan validation and the chaos sweep) |
+//! | `sleep_outside_backoff` | no raw `thread::sleep` outside `fault/` — delays flow through `fault::Backoff` (seeded, metered) or the job queue |
 //!
 //! To add a rule: implement [`Rule`], add it to [`all_rules`], document
 //! it in DESIGN.md, and add one violating + one clean + one suppressed
@@ -49,6 +51,12 @@ const INSTANT_EXEMPT_PREFIXES: &[&str] = &["obs/", "benchkit/"];
 
 /// The one module allowed to touch `std::thread` directly.
 const THREADING_MODULE: &str = "util/parallel.rs";
+
+/// The one module allowed to call `thread::sleep` directly: `fault/`
+/// owns both sanctioned delays (`Backoff::sleep`, injected
+/// `delay(ms)` actions). Everything else either backs off through
+/// [`crate::fault::Backoff`] or parks on a condvar.
+const SLEEP_MODULE_PREFIX: &str = "fault/";
 
 /// One lexed, region-annotated source file.
 pub struct SourceFile {
@@ -276,6 +284,8 @@ pub fn all_rules() -> Vec<Box<dyn Rule>> {
         Box::new(BareInstant),
         Box::new(DroppedSpanGuard),
         Box::new(UndeclaredSwitch),
+        Box::new(UndeclaredFaultPoint),
+        Box::new(SleepOutsideBackoff),
     ]
 }
 
@@ -678,6 +688,137 @@ fn declared_switches(set: &FileSet) -> Option<BTreeSet<String>> {
     Some(names)
 }
 
+// ---- undeclared_fault_point -----------------------------------------------
+
+/// Every `fault::point("x")` call site must name a point listed in the
+/// `FAULT_POINTS` registry (`fault/mod.rs`): plan validation and the
+/// nightly chaos sweep iterate that const, so an undeclared point is
+/// injectable by accident yet invisible to `--fault-plan` validation
+/// and never exercised by CI. Inert when the file set carries no
+/// registry (fixture sets, other codebases).
+struct UndeclaredFaultPoint;
+
+impl Rule for UndeclaredFaultPoint {
+    fn name(&self) -> &'static str {
+        "undeclared_fault_point"
+    }
+
+    fn summary(&self) -> &'static str {
+        "every fault::point(name) appears in the FAULT_POINTS registry"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        let Some(declared) = declared_fault_points(set) else { return };
+        for file in &set.files {
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                let is_point_call = t.kind == TokenKind::Ident
+                    && t.text == "point"
+                    && i >= 2
+                    && toks[i - 1].text == "::"
+                    && toks[i - 2].text == "fault"
+                    && toks.get(i + 1).is_some_and(|n| n.text == "(")
+                    && toks.get(i + 2).is_some_and(|n| n.kind == TokenKind::Str);
+                if !is_point_call || file.in_test_code(t.line) {
+                    continue;
+                }
+                let name = toks[i + 2].str_value().to_string();
+                if !declared.contains(&name) {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        format!(
+                            "fault point {name:?} is not declared in FAULT_POINTS \
+                             (plan validation and the chaos sweep cannot see it)"
+                        ),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Parse the string literals of `const FAULT_POINTS: … = &[…];`
+/// wherever it lives in the set. `None` when no registry exists.
+fn declared_fault_points(set: &FileSet) -> Option<BTreeSet<String>> {
+    for file in &set.files {
+        let toks = &file.tokens;
+        let Some(at) = toks
+            .iter()
+            .position(|t| t.kind == TokenKind::Ident && t.text == "FAULT_POINTS")
+        else {
+            continue;
+        };
+        // the declaration site (preceded by `const`), not a use site
+        if !(at >= 1 && toks[at - 1].text == "const") {
+            continue;
+        }
+        let eq = toks[at..].iter().position(|t| t.text == "=")? + at;
+        let open = toks[eq..].iter().position(|t| t.text == "[")? + eq;
+        let close = matching_delim(toks, open, "[", "]");
+        let mut names = BTreeSet::new();
+        for t in &toks[open + 1..close] {
+            if t.kind == TokenKind::Str {
+                names.insert(t.str_value().to_string());
+            }
+        }
+        return Some(names);
+    }
+    None
+}
+
+// ---- sleep_outside_backoff ------------------------------------------------
+
+/// Raw `thread::sleep` outside `fault/` is either an unmetered retry
+/// delay (belongs in [`crate::fault::Backoff`], where it is seeded,
+/// bounded, and recorded in `coordinator.backoff_secs`) or a disguised
+/// busy-wait (belongs on a condvar, like the coordinator's job queue).
+/// Either way the duration is invisible to observability and to the
+/// determinism argument, so the pattern needs a justified opt-out.
+struct SleepOutsideBackoff;
+
+impl Rule for SleepOutsideBackoff {
+    fn name(&self) -> &'static str {
+        "sleep_outside_backoff"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no raw thread::sleep outside fault/ (use Backoff or a condvar)"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            if file.path.starts_with(SLEEP_MODULE_PREFIX) {
+                continue;
+            }
+            let mut seen = BTreeSet::new();
+            let toks = &file.tokens;
+            for (i, t) in toks.iter().enumerate() {
+                let hit = t.kind == TokenKind::Ident
+                    && t.text == "thread"
+                    && toks.get(i + 1).is_some_and(|n| n.text == "::")
+                    && toks.get(i + 2).is_some_and(|n| n.text == "sleep");
+                if hit && !file.in_test_code(t.line) {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        "raw thread::sleep — back off through fault::Backoff \
+                         (seeded + metered) or wait on a condvar"
+                            .to_string(),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -794,6 +935,45 @@ mod tests {
     fn undeclared_switch_inert_without_a_registry() {
         let src = "fn f(args: &Args) { let _ = args.has(\"anything\"); }\n";
         assert!(rules_hit(&lint_one("coordinator/mod.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn undeclared_fault_point_checks_against_registry() {
+        let registry = "pub const FAULT_POINTS: &[&str] = &[\"worker.train\", \"shard.read\"];\n";
+        let user = "fn f() {\n    let _ = fault::point(\"worker.train\").fire();\n    let _ = fault::point(\"worker.trian\").fire();\n}\n";
+        let report = run_rules(&FileSet::from_sources(&[
+            ("fault/mod.rs", registry),
+            ("coordinator/worker.rs", user),
+        ]));
+        let hits: Vec<_> = report
+            .unannotated()
+            .filter(|d| d.rule == "undeclared_fault_point")
+            .collect();
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].message.contains("worker.trian"));
+    }
+
+    #[test]
+    fn undeclared_fault_point_inert_without_registry_and_in_tests() {
+        let user = "fn f() { let _ = fault::point(\"anything\").fire(); }\n";
+        assert!(rules_hit(&lint_one("coordinator/worker.rs", user)).is_empty());
+        let registry = "pub const FAULT_POINTS: &[&str] = &[\"worker.train\"];\n";
+        let test_user = "#[cfg(test)]\nmod tests {\n    fn t() { let _ = fault::point(\"test.synthetic\").fire(); }\n}\n";
+        let report = run_rules(&FileSet::from_sources(&[
+            ("fault/mod.rs", registry),
+            ("serve/shard.rs", test_user),
+        ]));
+        assert_eq!(report.unannotated_count(), 0, "test regions are exempt");
+    }
+
+    #[test]
+    fn sleep_rule_exempts_fault_module_and_tests() {
+        let src = "fn f() { std::thread::sleep(std::time::Duration::from_millis(5)); }\n";
+        assert!(rules_hit(&lint_one("coordinator/worker.rs", src))
+            .contains(&"sleep_outside_backoff"));
+        assert!(rules_hit(&lint_one("fault/backoff.rs", src)).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { std::thread::sleep(std::time::Duration::from_millis(5)); }\n}\n";
+        assert!(rules_hit(&lint_one("serve/cache.rs", test_src)).is_empty());
     }
 
     #[test]

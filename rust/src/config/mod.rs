@@ -7,6 +7,7 @@
 //! every config the launcher reads; nested tables/arrays are rejected with
 //! a clear error rather than mis-parsed.
 
+use crate::coordinator::FailurePolicy;
 use crate::error::{Error, Result};
 use crate::partition::{PartitionSpec, StageSpec};
 use crate::train::{ExecPath, Mode, ModelKind};
@@ -156,6 +157,21 @@ pub struct ExperimentConfig {
     /// "session" | "reference"`, `--exec`): the device-resident session
     /// (default) or the host round-trip reference path.
     pub exec: ExecPath,
+    /// Retry budget for a transiently-failed partition (`[train]
+    /// max_retries`).
+    pub max_retries: u32,
+    /// Policy for a partition that exhausts its retries (`[train]
+    /// on_failure = "abort" | "skip"`, `--on-failure`).
+    pub on_failure: FailurePolicy,
+    /// Per-partition training deadline in seconds (`[train] deadline`,
+    /// `--deadline`; 0 disables the watchdog).
+    pub deadline_secs: f64,
+    /// Fault-injection plan spec (`[fault] plan`, `--fault-plan`) —
+    /// parsed and installed by the launcher at startup.
+    pub fault_plan: Option<String>,
+    /// Replay journaled partitions instead of retraining them
+    /// (`[train] resume`, `--resume`; needs a shard dir).
+    pub resume: bool,
     pub artifacts_dir: PathBuf,
     /// When set, `train` exports a serving bundle (shards + classifier)
     /// here (`[serve] export_dir`, or `--shards` on the CLI).
@@ -260,6 +276,11 @@ impl Default for ExperimentConfig {
             mlp_epochs: 200,
             machines: 4,
             exec: ExecPath::Session,
+            max_retries: 1,
+            on_failure: FailurePolicy::Abort,
+            deadline_secs: 0.0,
+            fault_plan: None,
+            resume: false,
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             shards_out: None,
             serve: ServeConfig::default(),
@@ -350,6 +371,33 @@ impl ExperimentConfig {
             mlp_epochs: t.int_or("train", "mlp_epochs", d.mlp_epochs as i64) as usize,
             machines: t.int_or("train", "machines", d.machines as i64) as usize,
             exec: ExecPath::parse(&t.str_or("train", "exec", d.exec.as_str()))?,
+            max_retries: t
+                .int_or("train", "max_retries", d.max_retries as i64)
+                .max(0) as u32,
+            on_failure: FailurePolicy::parse(&t.str_or(
+                "train",
+                "on_failure",
+                d.on_failure.as_str(),
+            ))?,
+            deadline_secs: {
+                let v = float_opt(t, "train", "deadline")?.unwrap_or(d.deadline_secs);
+                if v < 0.0 {
+                    return Err(Error::Config(format!(
+                        "[train] deadline must be >= 0 seconds, got {v}"
+                    )));
+                }
+                v
+            },
+            fault_plan: match t.get("fault", "plan") {
+                Some(Value::Str(s)) => Some(s.clone()),
+                Some(other) => {
+                    return Err(Error::Config(format!(
+                        "[fault] plan must be a string, got {other:?}"
+                    )))
+                }
+                None => None,
+            },
+            resume: t.bool_or("train", "resume", d.resume),
             artifacts_dir: match t.get("train", "artifacts_dir") {
                 Some(Value::Str(s)) => PathBuf::from(s),
                 _ => d.artifacts_dir,
@@ -542,6 +590,39 @@ machines = 2
         assert_eq!(cfg.exec, ExecPath::Reference);
         let t = Toml::parse("[train]\nexec = \"device\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn fault_and_failure_keys_parse() {
+        let t = Toml::parse(
+            "[train]\non_failure = \"skip\"\ndeadline = 30\nmax_retries = 3\n\
+             [fault]\nplan = \"worker.train:part=0:fail\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.on_failure, FailurePolicy::Skip);
+        assert_eq!(cfg.deadline_secs, 30.0);
+        assert_eq!(cfg.max_retries, 3);
+        assert_eq!(cfg.fault_plan.as_deref(), Some("worker.train:part=0:fail"));
+        // defaults: strict abort, no watchdog, no plan
+        let cfg = ExperimentConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.on_failure, FailurePolicy::Abort);
+        assert_eq!(cfg.deadline_secs, 0.0);
+        assert_eq!(cfg.max_retries, 1);
+        assert_eq!(cfg.fault_plan, None);
+    }
+
+    #[test]
+    fn fault_and_failure_keys_reject_bad_values() {
+        let t = Toml::parse("[train]\non_failure = \"retry\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[train]\ndeadline = -1\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        let t = Toml::parse("[fault]\nplan = 5\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_err());
+        // negative retry budgets clamp to zero rather than wrapping
+        let t = Toml::parse("[train]\nmax_retries = -4\n").unwrap();
+        assert_eq!(ExperimentConfig::from_toml(&t).unwrap().max_retries, 0);
     }
 
     #[test]

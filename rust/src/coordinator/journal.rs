@@ -1,0 +1,338 @@
+//! Append-only run journal: crash recovery for distributed training.
+//!
+//! The coordinator writes `journal.jsonl` next to the shard directory —
+//! one header line identifying the run, then one line per partition the
+//! moment its shard hits disk. A killed run leaves the journal and the
+//! already-written shards behind; `repro train --resume` replays them:
+//! the fingerprint is validated (same graph, partitioning, seed, and
+//! training config — resuming under a different config would silently
+//! mix incompatible embeddings), each journaled shard is re-read and
+//! verified via its `LFS1` checksums, and only the missing or damaged
+//! partitions are retrained.
+//!
+//! Format (JSONL, one object per line):
+//!
+//! ```text
+//! {"kind":"run","version":1,"fingerprint":"<16 hex>", "dataset":"...","k":N}
+//! {"kind":"part","part_id":0,"rows":18,"attempts":1,"train_secs":1.25,"num_replicas":0}
+//! ```
+//!
+//! The tail line of a killed run may be torn; the loader tolerates a
+//! single unparseable *final* line (garbage anywhere else is an error —
+//! it means something other than a mid-write crash damaged the file).
+
+use crate::error::{Error, Result};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::Fnv64;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+/// One completed partition, as recorded in the journal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartRecord {
+    pub part_id: u32,
+    pub rows: usize,
+    pub attempts: u32,
+    pub train_secs: f64,
+    pub num_replicas: usize,
+}
+
+/// Journal contents after a (possibly interrupted) run.
+#[derive(Clone, Debug)]
+pub struct JournalState {
+    pub fingerprint: u64,
+    /// Completed partitions, deduplicated by `part_id` (last write wins —
+    /// a partition retrained after a damaged-shard resume appears twice).
+    pub parts: Vec<PartRecord>,
+}
+
+/// Writer handle for the current run's journal.
+pub struct RunJournal {
+    path: PathBuf,
+}
+
+impl RunJournal {
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(JOURNAL_FILE)
+    }
+
+    /// Fingerprint of everything that determines the run's output:
+    /// dataset identity, the exact partition membership, and every
+    /// training knob. Two runs agree on the fingerprint iff their
+    /// completed shards are interchangeable.
+    pub fn fingerprint(
+        dataset_name: &str,
+        num_nodes: usize,
+        members: &[Vec<crate::graph::NodeId>],
+        seed: u64,
+        epochs: usize,
+        mlp_epochs: usize,
+        mode: &str,
+        model: &str,
+        exec: &str,
+    ) -> u64 {
+        let mut h = Fnv64::new();
+        h.write(dataset_name.as_bytes());
+        h.write(&[0]);
+        h.write_u64(num_nodes as u64);
+        h.write_u64(members.len() as u64);
+        for (part, m) in members.iter().enumerate() {
+            h.write_u64(part as u64);
+            h.write_u64(m.len() as u64);
+            for &v in m {
+                h.write(&v.to_le_bytes());
+            }
+        }
+        h.write_u64(seed);
+        h.write_u64(epochs as u64);
+        h.write_u64(mlp_epochs as u64);
+        h.write(mode.as_bytes());
+        h.write(&[0]);
+        h.write(model.as_bytes());
+        h.write(&[0]);
+        h.write(exec.as_bytes());
+        h.finish()
+    }
+
+    /// Start a fresh journal (truncates any previous one) with the run
+    /// header line.
+    pub fn create(dir: &Path, fingerprint: u64, dataset: &str, k: usize) -> Result<RunJournal> {
+        std::fs::create_dir_all(dir)?;
+        let path = Self::path_in(dir);
+        let header = obj(vec![
+            ("kind", s("run")),
+            ("version", num(1.0)),
+            ("fingerprint", s(&format!("{fingerprint:016x}"))),
+            ("dataset", s(dataset)),
+            ("k", num(k as f64)),
+        ]);
+        let mut text = header.to_string();
+        text.push('\n');
+        std::fs::write(&path, text)?;
+        Ok(RunJournal { path })
+    }
+
+    /// Reopen an existing journal for appending (resume path). The caller
+    /// has already validated the fingerprint via [`RunJournal::load`].
+    pub fn reopen(dir: &Path) -> RunJournal {
+        RunJournal { path: Self::path_in(dir) }
+    }
+
+    /// Record one completed partition. Append + flush so a kill after
+    /// this call never loses the line.
+    pub fn append_partition(&self, rec: &PartRecord) -> Result<()> {
+        let line = obj(vec![
+            ("kind", s("part")),
+            ("part_id", num(rec.part_id as f64)),
+            ("rows", num(rec.rows as f64)),
+            ("attempts", num(rec.attempts as f64)),
+            ("train_secs", num(rec.train_secs)),
+            ("num_replicas", num(rec.num_replicas as f64)),
+        ]);
+        let mut text = line.to_string();
+        text.push('\n');
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&self.path)?;
+        f.write_all(text.as_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Load a journal: `Ok(None)` if the file doesn't exist, an error if
+    /// it exists but is unusable (bad header, garbage before the last
+    /// line), `Ok(Some(state))` otherwise. A torn final line — the
+    /// signature of a mid-write kill — is dropped silently.
+    pub fn load(dir: &Path) -> Result<Option<JournalState>> {
+        let path = Self::path_in(dir);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        let Some(first) = lines.first() else {
+            return Err(Error::Coordinator(format!(
+                "{}: journal is empty",
+                path.display()
+            )));
+        };
+        let header = Json::parse(first).map_err(|e| {
+            Error::Coordinator(format!("{}: bad journal header: {e}", path.display()))
+        })?;
+        if header.get("kind").and_then(Json::as_str) != Some("run") {
+            return Err(Error::Coordinator(format!(
+                "{}: journal does not start with a run header",
+                path.display()
+            )));
+        }
+        let fingerprint = header
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .and_then(|hex| u64::from_str_radix(hex, 16).ok())
+            .ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "{}: journal header missing fingerprint",
+                    path.display()
+                ))
+            })?;
+        let mut parts: Vec<PartRecord> = Vec::new();
+        for (i, line) in lines.iter().enumerate().skip(1) {
+            let last = i + 1 == lines.len();
+            let rec = Json::parse(line).ok().and_then(|j| {
+                if j.get("kind").and_then(Json::as_str) != Some("part") {
+                    return None;
+                }
+                Some(PartRecord {
+                    part_id: j.get("part_id").and_then(Json::as_usize)? as u32,
+                    rows: j.get("rows").and_then(Json::as_usize)?,
+                    attempts: j.get("attempts").and_then(Json::as_usize)? as u32,
+                    train_secs: j.get("train_secs").and_then(Json::as_f64)?,
+                    num_replicas: j.get("num_replicas").and_then(Json::as_usize)?,
+                })
+            });
+            match rec {
+                Some(r) => {
+                    // last write wins: a partition retrained after a
+                    // damaged-shard resume is listed twice
+                    parts.retain(|p| p.part_id != r.part_id);
+                    parts.push(r);
+                }
+                None if last => {
+                    log::warn!(
+                        "{}: dropping torn final journal line (mid-write kill)",
+                        path.display()
+                    );
+                }
+                None => {
+                    return Err(Error::Coordinator(format!(
+                        "{}: journal line {} is corrupt",
+                        path.display(),
+                        i + 1
+                    )));
+                }
+            }
+        }
+        Ok(Some(JournalState { fingerprint, parts }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lf_journal_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn rec(part_id: u32, rows: usize) -> PartRecord {
+        PartRecord { part_id, rows, attempts: 1, train_secs: 0.5, num_replicas: 0 }
+    }
+
+    #[test]
+    fn roundtrip_header_and_parts() {
+        let dir = tmp("roundtrip");
+        let j = RunJournal::create(&dir, 0xABCD, "karate", 2).unwrap();
+        j.append_partition(&rec(0, 18)).unwrap();
+        j.append_partition(&rec(1, 16)).unwrap();
+        let state = RunJournal::load(&dir).unwrap().unwrap();
+        assert_eq!(state.fingerprint, 0xABCD);
+        assert_eq!(state.parts, vec![rec(0, 18), rec(1, 16)]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_journal_is_none() {
+        let dir = tmp("missing");
+        assert!(RunJournal::load(&dir).unwrap().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped() {
+        let dir = tmp("torn");
+        let j = RunJournal::create(&dir, 7, "karate", 2).unwrap();
+        j.append_partition(&rec(0, 18)).unwrap();
+        // simulate a kill mid-append: half a JSON object, no newline
+        let path = RunJournal::path_in(&dir);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"kind\":\"part\",\"part_id\":1,\"ro");
+        std::fs::write(&path, text).unwrap();
+        let state = RunJournal::load(&dir).unwrap().unwrap();
+        assert_eq!(state.parts, vec![rec(0, 18)], "torn tail dropped, prefix kept");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn garbage_before_the_tail_is_an_error() {
+        let dir = tmp("garbage");
+        let j = RunJournal::create(&dir, 7, "karate", 2).unwrap();
+        j.append_partition(&rec(0, 18)).unwrap();
+        let path = RunJournal::path_in(&dir);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not json at all\n");
+        std::fs::write(&path, text).unwrap();
+        let j2 = RunJournal::reopen(&dir);
+        j2.append_partition(&rec(1, 16)).unwrap();
+        assert!(RunJournal::load(&dir).is_err(), "mid-file garbage must not be silent");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn duplicate_part_lines_keep_the_last_write() {
+        let dir = tmp("dup");
+        let j = RunJournal::create(&dir, 7, "karate", 2).unwrap();
+        j.append_partition(&rec(0, 18)).unwrap();
+        let mut retrained = rec(0, 18);
+        retrained.attempts = 3;
+        j.append_partition(&retrained).unwrap();
+        let state = RunJournal::load(&dir).unwrap().unwrap();
+        assert_eq!(state.parts, vec![retrained]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_header_is_an_error() {
+        let dir = tmp("badheader");
+        std::fs::write(RunJournal::path_in(&dir), "{\"kind\":\"part\"}\n").unwrap();
+        assert!(RunJournal::load(&dir).is_err());
+        std::fs::write(RunJournal::path_in(&dir), "").unwrap();
+        assert!(RunJournal::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_is_sensitive_to_each_input() {
+        let members = vec![vec![0, 1], vec![2, 3]];
+        let base = RunJournal::fingerprint(
+            "karate", 4, &members, 42, 10, 30, "inner", "gcn", "session",
+        );
+        assert_eq!(
+            base,
+            RunJournal::fingerprint(
+                "karate", 4, &members, 42, 10, 30, "inner", "gcn", "session",
+            ),
+            "fingerprint must be deterministic"
+        );
+        let other_members = vec![vec![0, 1, 2], vec![3]];
+        for different in [
+            RunJournal::fingerprint("karate2", 4, &members, 42, 10, 30, "inner", "gcn", "session"),
+            RunJournal::fingerprint("karate", 5, &members, 42, 10, 30, "inner", "gcn", "session"),
+            RunJournal::fingerprint("karate", 4, &other_members, 42, 10, 30, "inner", "gcn", "session"),
+            RunJournal::fingerprint("karate", 4, &members, 43, 10, 30, "inner", "gcn", "session"),
+            RunJournal::fingerprint("karate", 4, &members, 42, 11, 30, "inner", "gcn", "session"),
+            RunJournal::fingerprint("karate", 4, &members, 42, 10, 31, "inner", "gcn", "session"),
+            RunJournal::fingerprint("karate", 4, &members, 42, 10, 30, "repli", "gcn", "session"),
+            RunJournal::fingerprint("karate", 4, &members, 42, 10, 30, "inner", "sage", "session"),
+            RunJournal::fingerprint("karate", 4, &members, 42, 10, 30, "inner", "gcn", "reference"),
+        ] {
+            assert_ne!(base, different);
+        }
+    }
+}

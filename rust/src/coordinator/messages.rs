@@ -34,5 +34,18 @@ pub enum WorkerEvent {
         worker: usize,
         part_id: u32,
         error: String,
+        /// [`crate::error::Error::is_transient`] of the underlying error,
+        /// classified worker-side (the typed error doesn't cross the
+        /// channel). Transient failures earn backoff + retry; permanent
+        /// ones go straight to the leader's `on_failure` policy.
+        transient: bool,
+    },
+    /// The worker is permanently out of service (runtime init failed —
+    /// without a PJRT client it can train nothing). The leader removes
+    /// it from the schedulable pool; remaining jobs redistribute over
+    /// the survivors, and a run with zero live workers aborts.
+    Retired {
+        worker: usize,
+        error: String,
     },
 }

@@ -8,19 +8,46 @@
 //! for physical machines (the paper itself emulates the cluster by training
 //! partitions sequentially on one host; §5 Setup).
 //!
-//! Topology: a work queue feeds `min(machines, k)` workers; each worker
-//! owns a thread-local [`Runtime`] (PJRT clients are not `Send`), trains
-//! whole partitions, and streams [`WorkerEvent`]s back to the leader, which
-//! assembles the embedding store, retries failed jobs, and finally runs the
+//! Topology: a condvar [`JobQueue`] feeds `min(machines, jobs)` workers;
+//! each worker owns a thread-local [`Runtime`] (PJRT clients are not
+//! `Send`), trains whole partitions, and streams [`WorkerEvent`]s back to
+//! the leader, which assembles the embedding store and finally runs the
 //! integration MLP + evaluation.
+//!
+//! Fault tolerance (see DESIGN.md *Robustness*):
+//!
+//! * **Retries with backoff** — a transiently-failed partition is
+//!   requeued after a seeded-jitter exponential delay
+//!   ([`crate::fault::Backoff`]); the delay lives on the queue, the
+//!   leader's event loop never sleeps. Permanent errors skip the retry
+//!   budget entirely.
+//! * **Deadline watchdog** — with `deadline_secs` set, a partition
+//!   running past the deadline is requeued elsewhere and the worker is
+//!   marked suspect; two expiries retire the worker.
+//! * **`on_failure` policy** — a partition that exhausts its retries
+//!   either aborts the run (`Abort`, the default) or becomes a recorded
+//!   hole (`Skip`): integration and evaluation run over the survivors
+//!   and [`TrainReport::coverage`] drops below 1.0.
+//! * **Run journal + resume** — with a shard dir, every completed
+//!   partition is journaled ([`RunJournal`]); `--resume` replays intact
+//!   journaled shards and retrains only what's missing.
+//! * **Worker retirement** — a worker whose PJRT runtime fails to
+//!   initialise sends [`WorkerEvent::Retired`]; its jobs redistribute
+//!   over the survivors and a run with zero live workers aborts.
 
+pub mod journal;
 pub mod messages;
+pub mod queue;
 pub mod worker;
 
+pub use journal::{JournalState, PartRecord, RunJournal};
 pub use messages::{Job, WorkerEvent};
+pub use queue::JobQueue;
 
 use crate::data::Dataset;
 use crate::error::{Error, Result};
+use crate::fault::Backoff;
+use crate::graph::NodeId;
 use crate::obs;
 use crate::partition::{PartitionReport, Partitioning, StageTiming};
 use crate::runtime::Runtime;
@@ -30,11 +57,49 @@ use crate::train::{
 };
 use crate::util::json::num;
 use crate::util::Stopwatch;
-use std::collections::VecDeque;
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Watchdog granularity: how often the leader scans for deadline
+/// expiries while waiting for worker events.
+const WATCHDOG_TICK_MS: u64 = 20;
+
+/// Deadline expiries before a worker is retired as unhealthy.
+const SUSPECT_RETIRE_THRESHOLD: u32 = 2;
+
+/// Leader-side attempts for one shard write (first try + retries).
+const SHARD_WRITE_ATTEMPTS: u32 = 3;
+
+/// What to do with a partition that exhausted its retry budget (or
+/// failed permanently).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Fail the whole run (the strict default).
+    Abort,
+    /// Record the partition as a hole and train/evaluate over the
+    /// survivors; [`TrainReport::coverage`] reports the damage.
+    Skip,
+}
+
+impl FailurePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FailurePolicy::Abort => "abort",
+            FailurePolicy::Skip => "skip",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "abort" => Ok(FailurePolicy::Abort),
+            "skip" => Ok(FailurePolicy::Skip),
+            other => Err(Error::Config(format!(
+                "unknown on_failure policy {other:?} (expected abort|skip)"
+            ))),
+        }
+    }
+}
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -49,7 +114,7 @@ pub struct CoordinatorConfig {
     /// Integration-MLP epochs.
     pub mlp_epochs: usize,
     pub seed: u64,
-    /// Re-dispatch attempts for a failed partition.
+    /// Re-dispatch attempts for a transiently-failed partition.
     pub max_retries: u32,
     /// PJRT execution strategy for the GNN and MLP training loops
     /// (default: the device-resident session; `Reference` restores the
@@ -59,10 +124,15 @@ pub struct CoordinatorConfig {
     pub artifacts_dir: PathBuf,
     /// When set, write a serving bundle here: one `LFS1` shard per
     /// partition (emitted as each partition finishes), the trained
-    /// integration-MLP checkpoint, and `shards.json`.
+    /// integration-MLP checkpoint, `shards.json`, and the run journal.
     pub shard_dir: Option<PathBuf>,
-    /// Test hook: partition id that fails on its first attempt.
-    pub inject_failure: Option<u32>,
+    /// Policy for partitions that exhaust their retries.
+    pub on_failure: FailurePolicy,
+    /// Per-partition training deadline in seconds (0 = no watchdog).
+    pub deadline_secs: f64,
+    /// Replay intact journaled partitions instead of retraining them
+    /// (requires `shard_dir`; see [`RunJournal`]).
+    pub resume: bool,
 }
 
 impl CoordinatorConfig {
@@ -78,7 +148,9 @@ impl CoordinatorConfig {
             exec: ExecPath::Session,
             artifacts_dir,
             shard_dir: None,
-            inject_failure: None,
+            on_failure: FailurePolicy::Abort,
+            deadline_secs: 0.0,
+            resume: false,
         }
     }
 }
@@ -89,6 +161,8 @@ pub struct PartitionStats {
     pub part_id: u32,
     pub num_nodes: usize,
     pub num_replicas: usize,
+    /// Per-call training losses (empty for a partition replayed from the
+    /// journal — the numbers were not retained, only the embeddings).
     pub losses: Vec<f32>,
     pub train_secs: f64,
     pub attempts: u32,
@@ -110,6 +184,115 @@ pub struct TrainReport {
     pub max_partition_train_secs: f64,
     /// Σ per-partition training time (= sequential-emulation cost).
     pub total_train_secs: f64,
+    /// Fraction of dataset nodes with a trained embedding: 1.0 for a
+    /// clean run, < 1.0 when `on_failure = skip` recorded holes.
+    pub coverage: f64,
+    /// Partitions skipped under `on_failure = skip`, ascending.
+    pub skipped_partitions: Vec<u32>,
+}
+
+/// Outcome of one exhausted/failed partition attempt.
+enum Verdict {
+    Requeued,
+    Skipped,
+    Abort(String),
+}
+
+/// Classify a partition failure and perform the retry/skip bookkeeping.
+/// Transient failures inside the retry budget are requeued with seeded
+/// exponential backoff; everything else falls to the `on_failure` policy.
+fn handle_failure(
+    cfg: &CoordinatorConfig,
+    queue: &JobQueue,
+    members: &[Vec<NodeId>],
+    backoff: &mut Backoff,
+    part_id: u32,
+    tries: u32,
+    transient: bool,
+    error: &str,
+) -> Verdict {
+    if transient && tries <= cfg.max_retries {
+        let delay_ms = backoff.delay_ms(tries);
+        obs::registry().counter("coordinator.retries").inc();
+        obs::registry()
+            .histogram("coordinator.backoff_secs")
+            .record(delay_ms as f64 / 1e3);
+        obs::event(
+            "coordinator",
+            "partition.retry",
+            vec![
+                ("part", num(part_id as f64)),
+                ("attempt", num(tries as f64)),
+                ("backoff_ms", num(delay_ms as f64)),
+            ],
+        );
+        log::warn!(
+            "partition {part_id} failed (attempt {tries}): {error}; \
+             requeueing after {delay_ms}ms backoff"
+        );
+        queue.push_delayed(
+            Job {
+                part_id,
+                members: members[part_id as usize].clone(),
+                attempt: tries,
+            },
+            delay_ms,
+        );
+        Verdict::Requeued
+    } else {
+        match cfg.on_failure {
+            FailurePolicy::Abort => Verdict::Abort(format!(
+                "partition {part_id} failed after {tries} attempt(s): {error}"
+            )),
+            FailurePolicy::Skip => {
+                obs::registry().counter("coordinator.skipped_partitions").inc();
+                obs::event(
+                    "coordinator",
+                    "partition.skipped",
+                    vec![("part", num(part_id as f64)), ("attempts", num(tries as f64))],
+                );
+                log::warn!(
+                    "partition {part_id} failed after {tries} attempt(s): {error}; \
+                     skipping (on_failure = skip)"
+                );
+                Verdict::Skipped
+            }
+        }
+    }
+}
+
+/// Leader-side durable shard write: transient failures (I/O, injected
+/// `shard.write` faults) are retried with backoff; a persistent failure
+/// is fatal regardless of `on_failure` — the partition trained fine, but
+/// a bundle the run cannot complete must not be reported as written
+/// (crash-recover via `--resume` instead).
+fn write_shard_with_retry(
+    path: &Path,
+    part_id: u32,
+    nodes: &[NodeId],
+    emb: &[f32],
+    dim: usize,
+    backoff: &mut Backoff,
+) -> Result<()> {
+    let mut attempt = 0u32;
+    loop {
+        match crate::serve::write_shard(path, part_id, nodes, emb, dim) {
+            Ok(()) => return Ok(()),
+            Err(e) if e.is_transient() && attempt + 1 < SHARD_WRITE_ATTEMPTS => {
+                attempt += 1;
+                obs::registry().counter("coordinator.shard_write_retries").inc();
+                let slept = backoff.sleep(attempt);
+                obs::registry()
+                    .histogram("coordinator.backoff_secs")
+                    .record(slept as f64 / 1e3);
+                log::warn!(
+                    "shard write for partition {part_id} failed (attempt {attempt}): \
+                     {e}; retried after {slept}ms"
+                );
+            }
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 /// The leader. Owns the job queue and the result channel.
@@ -160,157 +343,488 @@ impl Coordinator {
             run_span.attr("nodes", num(dataset.num_nodes() as f64));
             run_span.attr("machines", num(self.cfg.machines as f64));
         }
-        // Invalidate any pre-existing bundle before writing the first
-        // shard: the manifest is deleted now and rewritten only after a
-        // fully successful run, so an aborted run can never leave a
-        // readable bundle that mixes shards from different runs.
+        if self.cfg.resume && self.cfg.shard_dir.is_none() {
+            return Err(Error::Config(
+                "--resume requires a shard directory (--shards): the journal and the \
+                 completed shards live there"
+                    .into(),
+            ));
+        }
+        let k = partitioning.k();
+        let members = partitioning.members();
+        let fingerprint = RunJournal::fingerprint(
+            &dataset.name,
+            dataset.num_nodes(),
+            &members,
+            self.cfg.seed,
+            self.cfg.epochs,
+            self.cfg.mlp_epochs,
+            self.cfg.mode.as_str(),
+            self.cfg.model.as_str(),
+            self.cfg.exec.as_str(),
+        );
+
+        let mut store: Option<EmbeddingStore> = None;
+        let mut stats: Vec<PartitionStats> = Vec::with_capacity(k);
+        // finished or permanently skipped, by part_id — late duplicate
+        // results for a resolved partition are ignored
+        let mut resolved = vec![false; k];
+        let mut attempts = vec![0u32; k];
+
+        // ---- journal: create fresh, or replay for --resume --------------
+        let mut journal: Option<RunJournal> = None;
         if let Some(dir) = &self.cfg.shard_dir {
             std::fs::create_dir_all(dir)?;
+            // Invalidate any pre-existing bundle before writing the first
+            // shard: the manifest is deleted now and rewritten only after a
+            // fully successful run, so an aborted run can never leave a
+            // readable bundle that mixes shards from different runs. The
+            // shards themselves stay — `--resume` replays them.
             let manifest_path = crate::serve::ShardManifest::path_in(dir);
             if manifest_path.exists() {
                 std::fs::remove_file(&manifest_path)?;
             }
-        }
-        let k = partitioning.k();
-        let members = partitioning.members();
-        let workers = self.cfg.machines.min(k).max(1);
-
-        let queue: Arc<Mutex<VecDeque<Job>>> = Arc::new(Mutex::new(
-            members
-                .iter()
-                .enumerate()
-                .filter(|(_, m)| !m.is_empty())
-                .map(|(part_id, m)| Job {
-                    part_id: part_id as u32,
-                    members: m.clone(),
-                    attempt: 0,
-                })
-                .collect(),
-        ));
-        // queue ops are a pop/push of plain Jobs — never left mid-update,
-        // so a poisoned lock (panicked worker) is safe to recover
-        let live_jobs = queue
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner)
-            .len();
-        let remaining = Arc::new(AtomicUsize::new(live_jobs));
-        let (tx, rx) = mpsc::channel::<WorkerEvent>();
-
-        let mut store: Option<EmbeddingStore> = None;
-        let mut stats: Vec<PartitionStats> = Vec::with_capacity(live_jobs);
-        let mut attempts = vec![0u32; k];
-
-        // lint: allow(spawn_outside_parallel) — leader/worker topology over an mpsc channel with retries, not the ordered fork-join map util::parallel models
-        let run_result = std::thread::scope(|scope| -> Result<()> {
-            for wid in 0..workers {
-                let queue = Arc::clone(&queue);
-                let remaining = Arc::clone(&remaining);
-                let tx = tx.clone();
-                let cfg = self.cfg.clone();
-                scope.spawn(move || {
-                    worker::worker_loop(wid, dataset, queue, remaining, tx, &cfg);
-                });
-            }
-            drop(tx);
-
-            let mut done = 0usize;
-            while done < live_jobs {
-                let event = rx.recv().map_err(|_| {
-                    Error::Coordinator("all workers exited before completion".into())
-                })?;
-                match event {
-                    WorkerEvent::Started { worker, part_id } => {
-                        log::debug!("worker {worker} started partition {part_id}");
+            let prior = if self.cfg.resume { RunJournal::load(dir)? } else { None };
+            match prior {
+                Some(state) => {
+                    if state.fingerprint != fingerprint {
+                        return Err(Error::Coordinator(format!(
+                            "cannot resume: journal fingerprint {:016x} does not match \
+                             this run ({fingerprint:016x}) — dataset, partitioning, seed, \
+                             or training config changed",
+                            state.fingerprint
+                        )));
                     }
-                    WorkerEvent::Finished { worker, part_id, nodes, result } => {
-                        obs::event(
-                            "coordinator",
-                            "partition.finished",
-                            vec![
-                                ("worker", num(worker as f64)),
-                                ("part", num(part_id as f64)),
-                                ("nodes", num(nodes.len() as f64)),
-                                ("train_secs", num(result.train_secs)),
-                            ],
-                        );
-                        obs::registry().counter("coordinator.partitions_trained").inc();
-                        log::debug!(
-                            "worker {worker} finished partition {part_id}: \
-                             {} nodes, final loss {:.4}, {:.2}s",
-                            nodes.len(),
-                            result.losses.last().copied().unwrap_or(f32::NAN),
-                            result.train_secs
-                        );
-                        let st = store.get_or_insert_with(|| {
-                            EmbeddingStore::new(dataset.num_nodes(), result.emb_dim)
-                        });
-                        st.insert(&nodes, &result.embeddings)?;
-                        // shard-per-partition export: write while the rest
-                        // of the cluster is still training
-                        if let Some(dir) = &self.cfg.shard_dir {
-                            crate::serve::write_shard(
-                                &dir.join(crate::serve::shard_file_name(part_id)),
-                                part_id,
-                                &nodes,
-                                &result.embeddings,
-                                result.emb_dim,
-                            )?;
-                        }
-                        stats.push(PartitionStats {
-                            part_id,
-                            num_nodes: nodes.len(),
-                            num_replicas: result.num_replicas,
-                            losses: result.losses,
-                            train_secs: result.train_secs,
-                            attempts: attempts[part_id as usize] + 1,
-                        });
-                        done += 1;
-                        remaining.fetch_sub(1, Ordering::Release);
-                    }
-                    WorkerEvent::Failed { worker, part_id, error } => {
-                        attempts[part_id as usize] += 1;
-                        let tries = attempts[part_id as usize];
-                        if tries > self.cfg.max_retries {
-                            remaining.store(0, Ordering::Release); // stop workers
+                    let mut resumed = 0usize;
+                    for rec in &state.parts {
+                        let p = rec.part_id as usize;
+                        if p >= k {
                             return Err(Error::Coordinator(format!(
-                                "partition {part_id} failed {tries} times \
-                                 (worker {worker}): {error}"
+                                "cannot resume: journal records partition {} but the \
+                                 run has k = {k}",
+                                rec.part_id
                             )));
                         }
-                        obs::event(
-                            "coordinator",
-                            "partition.retry",
-                            vec![
-                                ("worker", num(worker as f64)),
-                                ("part", num(part_id as f64)),
-                                ("attempt", num(tries as f64)),
-                            ],
-                        );
-                        obs::registry().counter("coordinator.retries").inc();
-                        log::warn!(
-                            "partition {part_id} failed on worker {worker} \
-                             (attempt {tries}): {error}; requeueing"
-                        );
-                        let mut q = queue
-                            .lock()
-                            .unwrap_or_else(std::sync::PoisonError::into_inner);
-                        q.push_back(Job {
-                            part_id,
-                            members: members[part_id as usize].clone(),
-                            attempt: tries,
+                        let path = dir.join(crate::serve::shard_file_name(rec.part_id));
+                        // full read: the LFS1 section checksums re-verify
+                        // every byte before the rows are trusted
+                        let verified = match crate::serve::read_shard(&path) {
+                            Ok((header, data))
+                                if header.part_id == rec.part_id
+                                    && header.rows == rec.rows =>
+                            {
+                                Some((header, data))
+                            }
+                            Ok(_) => {
+                                log::warn!(
+                                    "--resume: shard {} does not match its journal \
+                                     record; partition {} will retrain",
+                                    path.display(),
+                                    rec.part_id
+                                );
+                                None
+                            }
+                            Err(e) => {
+                                log::warn!(
+                                    "--resume: cannot verify shard {} ({e}); \
+                                     partition {} will retrain",
+                                    path.display(),
+                                    rec.part_id
+                                );
+                                None
+                            }
+                        };
+                        let Some((header, data)) = verified else { continue };
+                        let st = store.get_or_insert_with(|| {
+                            EmbeddingStore::new(dataset.num_nodes(), header.dim)
                         });
+                        if header.dim != st.dim {
+                            log::warn!(
+                                "--resume: shard {} has dim {} (expected {}); \
+                                 partition {} will retrain",
+                                path.display(),
+                                header.dim,
+                                st.dim,
+                                rec.part_id
+                            );
+                            continue;
+                        }
+                        st.insert(&header.nodes, &data)?;
+                        stats.push(PartitionStats {
+                            part_id: rec.part_id,
+                            num_nodes: rec.rows,
+                            num_replicas: rec.num_replicas,
+                            losses: Vec::new(),
+                            train_secs: rec.train_secs,
+                            attempts: rec.attempts,
+                        });
+                        resolved[p] = true;
+                        resumed += 1;
                     }
+                    obs::registry()
+                        .counter("resume.partitions_skipped")
+                        .add(resumed as u64);
+                    obs::event(
+                        "coordinator",
+                        "resume",
+                        vec![("skipped", num(resumed as f64)), ("k", num(k as f64))],
+                    );
+                    log::info!(
+                        "--resume: {resumed} partition(s) intact in the journal; \
+                         retraining the rest"
+                    );
+                    journal = Some(RunJournal::reopen(dir));
+                }
+                None => {
+                    if self.cfg.resume {
+                        log::warn!(
+                            "--resume: no journal at {}; running from scratch",
+                            dir.display()
+                        );
+                    }
+                    journal = Some(RunJournal::create(dir, fingerprint, &dataset.name, k)?);
                 }
             }
-            Ok(())
-        });
-        remaining.store(0, Ordering::Release);
-        run_result?;
+        }
+
+        // ---- dispatch the unresolved partitions -------------------------
+        let jobs: Vec<Job> = members
+            .iter()
+            .enumerate()
+            .filter(|(p, m)| !m.is_empty() && !resolved[*p])
+            .map(|(part_id, m)| Job {
+                part_id: part_id as u32,
+                members: m.clone(),
+                attempt: 0,
+            })
+            .collect();
+        let live_jobs = jobs.len();
+        let mut skipped: Vec<u32> = Vec::new();
+
+        if live_jobs > 0 {
+            let workers = self.cfg.machines.min(live_jobs).max(1);
+            let queue = JobQueue::new(jobs, workers);
+            let (tx, rx) = mpsc::channel::<WorkerEvent>();
+            // per-partition retry backoff, seeded so a rerun schedules
+            // the same jitter (splitmix decorrelates adjacent parts)
+            let mut backoffs: Vec<Backoff> = (0..k)
+                .map(|p| {
+                    Backoff::new(
+                        self.cfg.seed ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    )
+                })
+                .collect();
+            let mut shard_backoff = Backoff::new(self.cfg.seed ^ 0x5AD0);
+            // (worker, started-at) per in-flight partition, for the
+            // deadline watchdog and stale-event attribution
+            let mut running: Vec<Option<(usize, f64)>> = vec![None; k];
+            let mut suspect = vec![0u32; workers];
+            let mut retired = vec![false; workers];
+            let mut live_workers = workers;
+            let clock = Stopwatch::start();
+
+            // lint: allow(spawn_outside_parallel) — leader/worker topology over an mpsc channel with retries, not the ordered fork-join map util::parallel models
+            let run_result = std::thread::scope(|scope| -> Result<()> {
+                let q = &queue;
+                for wid in 0..workers {
+                    let tx = tx.clone();
+                    let cfg = self.cfg.clone();
+                    scope.spawn(move || worker::worker_loop(wid, dataset, q, tx, &cfg));
+                }
+                drop(tx);
+
+                // every exit path must shut the queue down, or idle
+                // workers would block the scope join forever
+                let r = (|| -> Result<()> {
+                    let mut completed = 0usize;
+                    while completed < live_jobs {
+                        let event = if self.cfg.deadline_secs > 0.0 {
+                            match rx.recv_timeout(Duration::from_millis(WATCHDOG_TICK_MS)) {
+                                Ok(ev) => Some(ev),
+                                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    return Err(Error::Coordinator(
+                                        "all workers exited before completion".into(),
+                                    ))
+                                }
+                            }
+                        } else {
+                            Some(rx.recv().map_err(|_| {
+                                Error::Coordinator(
+                                    "all workers exited before completion".into(),
+                                )
+                            })?)
+                        };
+
+                        let Some(event) = event else {
+                            // ---- deadline watchdog tick ----------------
+                            let now = clock.secs();
+                            for part in 0..k {
+                                let Some((w, started)) = running[part] else { continue };
+                                if now - started <= self.cfg.deadline_secs {
+                                    continue;
+                                }
+                                running[part] = None;
+                                obs::registry().counter("coordinator.deadline_kills").inc();
+                                obs::event(
+                                    "coordinator",
+                                    "deadline.expired",
+                                    vec![
+                                        ("part", num(part as f64)),
+                                        ("worker", num(w as f64)),
+                                        ("secs", num(now - started)),
+                                    ],
+                                );
+                                suspect[w] += 1;
+                                log::warn!(
+                                    "partition {part} exceeded the {:.1}s deadline on \
+                                     worker {w} (expiry {} for this worker)",
+                                    self.cfg.deadline_secs,
+                                    suspect[w]
+                                );
+                                if suspect[w] >= SUSPECT_RETIRE_THRESHOLD && !retired[w] {
+                                    retired[w] = true;
+                                    live_workers -= 1;
+                                    queue.retire_worker(w);
+                                    obs::registry()
+                                        .counter("coordinator.workers_retired")
+                                        .inc();
+                                    log::warn!(
+                                        "worker {w} exceeded the deadline {} times; retired",
+                                        suspect[w]
+                                    );
+                                }
+                                attempts[part] += 1;
+                                // an expiry is transient by definition —
+                                // the same partition may finish in time
+                                // on a healthy worker
+                                match handle_failure(
+                                    &self.cfg,
+                                    &queue,
+                                    &members,
+                                    &mut backoffs[part],
+                                    part as u32,
+                                    attempts[part],
+                                    true,
+                                    "deadline expired",
+                                ) {
+                                    Verdict::Requeued => {}
+                                    Verdict::Skipped => {
+                                        resolved[part] = true;
+                                        skipped.push(part as u32);
+                                        completed += 1;
+                                        queue.resolve_job();
+                                    }
+                                    Verdict::Abort(msg) => {
+                                        return Err(Error::Coordinator(msg))
+                                    }
+                                }
+                            }
+                            if live_workers == 0 && completed < live_jobs {
+                                return Err(Error::Coordinator(
+                                    "all workers retired before completion".into(),
+                                ));
+                            }
+                            continue;
+                        };
+
+                        match event {
+                            WorkerEvent::Started { worker, part_id } => {
+                                log::debug!("worker {worker} started partition {part_id}");
+                                let p = part_id as usize;
+                                if !resolved[p] {
+                                    running[p] = Some((worker, clock.secs()));
+                                }
+                            }
+                            WorkerEvent::Finished { worker, part_id, nodes, result } => {
+                                let p = part_id as usize;
+                                if resolved[p] {
+                                    // duplicate attempt (deadline expiry
+                                    // requeued it, both finished)
+                                    log::debug!(
+                                        "ignoring duplicate result for partition \
+                                         {part_id} from worker {worker}"
+                                    );
+                                    continue;
+                                }
+                                running[p] = None;
+                                obs::event(
+                                    "coordinator",
+                                    "partition.finished",
+                                    vec![
+                                        ("worker", num(worker as f64)),
+                                        ("part", num(part_id as f64)),
+                                        ("nodes", num(nodes.len() as f64)),
+                                        ("train_secs", num(result.train_secs)),
+                                    ],
+                                );
+                                obs::registry()
+                                    .counter("coordinator.partitions_trained")
+                                    .inc();
+                                log::debug!(
+                                    "worker {worker} finished partition {part_id}: \
+                                     {} nodes, final loss {:.4}, {:.2}s",
+                                    nodes.len(),
+                                    result.losses.last().copied().unwrap_or(f32::NAN),
+                                    result.train_secs
+                                );
+                                let st = store.get_or_insert_with(|| {
+                                    EmbeddingStore::new(dataset.num_nodes(), result.emb_dim)
+                                });
+                                st.insert(&nodes, &result.embeddings)?;
+                                let tries = attempts[p] + 1;
+                                // shard-per-partition export: write while
+                                // the rest of the cluster is still training
+                                if let Some(dir) = &self.cfg.shard_dir {
+                                    write_shard_with_retry(
+                                        &dir.join(crate::serve::shard_file_name(part_id)),
+                                        part_id,
+                                        &nodes,
+                                        &result.embeddings,
+                                        result.emb_dim,
+                                        &mut shard_backoff,
+                                    )?;
+                                }
+                                // journal only after the shard is durable
+                                if let Some(j) = &journal {
+                                    j.append_partition(&PartRecord {
+                                        part_id,
+                                        rows: nodes.len(),
+                                        attempts: tries,
+                                        train_secs: result.train_secs,
+                                        num_replicas: result.num_replicas,
+                                    })?;
+                                }
+                                stats.push(PartitionStats {
+                                    part_id,
+                                    num_nodes: nodes.len(),
+                                    num_replicas: result.num_replicas,
+                                    losses: result.losses,
+                                    train_secs: result.train_secs,
+                                    attempts: tries,
+                                });
+                                resolved[p] = true;
+                                completed += 1;
+                                queue.resolve_job();
+                            }
+                            WorkerEvent::Failed { worker, part_id, error, transient } => {
+                                let p = part_id as usize;
+                                if resolved[p] {
+                                    log::debug!(
+                                        "ignoring stale failure for resolved partition \
+                                         {part_id}: {error}"
+                                    );
+                                    continue;
+                                }
+                                // only the attempt we believe is running
+                                // may fail; anything else is a late echo
+                                // of a deadline-expired attempt that was
+                                // already counted and requeued
+                                match running[p] {
+                                    Some((w, _)) if w == worker => running[p] = None,
+                                    _ => {
+                                        log::debug!(
+                                            "ignoring failure from expired attempt on \
+                                             partition {part_id} (worker {worker}): {error}"
+                                        );
+                                        continue;
+                                    }
+                                }
+                                attempts[p] += 1;
+                                match handle_failure(
+                                    &self.cfg,
+                                    &queue,
+                                    &members,
+                                    &mut backoffs[p],
+                                    part_id,
+                                    attempts[p],
+                                    transient,
+                                    &error,
+                                ) {
+                                    Verdict::Requeued => {}
+                                    Verdict::Skipped => {
+                                        resolved[p] = true;
+                                        skipped.push(part_id);
+                                        completed += 1;
+                                        queue.resolve_job();
+                                    }
+                                    Verdict::Abort(msg) => {
+                                        return Err(Error::Coordinator(msg))
+                                    }
+                                }
+                            }
+                            WorkerEvent::Retired { worker, error } => {
+                                if worker < retired.len() && !retired[worker] {
+                                    retired[worker] = true;
+                                    live_workers -= 1;
+                                    queue.retire_worker(worker);
+                                    obs::registry()
+                                        .counter("coordinator.workers_retired")
+                                        .inc();
+                                    obs::event(
+                                        "coordinator",
+                                        "worker.retired",
+                                        vec![("worker", num(worker as f64))],
+                                    );
+                                    log::error!("worker {worker} retired: {error}");
+                                }
+                                if live_workers == 0 && completed < live_jobs {
+                                    return Err(Error::Coordinator(format!(
+                                        "all workers retired before completion \
+                                         (last: {error})"
+                                    )));
+                                }
+                            }
+                        }
+                    }
+                    Ok(())
+                })();
+                queue.shutdown();
+                r
+            });
+            run_result?;
+        }
 
         let store = store
             .ok_or_else(|| Error::Coordinator("no partitions produced output".into()))?;
 
+        // ---- coverage accounting ----------------------------------------
+        let covered: usize = stats.iter().map(|s| s.num_nodes).sum();
+        let coverage = if dataset.num_nodes() == 0 {
+            1.0
+        } else {
+            covered as f64 / dataset.num_nodes() as f64
+        };
+        obs::registry().gauge("coordinator.coverage").set(coverage);
+        skipped.sort_unstable();
+        if !skipped.is_empty() {
+            log::warn!(
+                "run degraded: {} partition(s) skipped, coverage {coverage:.3}",
+                skipped.len()
+            );
+        }
+
         // ---- integration + evaluation on the leader ---------------------
+        // With holes, train and evaluate over the survivors only: nodes of
+        // skipped partitions leave every split mask (their embedding rows
+        // are zeros — including them would silently poison the classifier
+        // and the reported metrics).
+        let masked;
+        let eval_ds: &Dataset = if skipped.is_empty() {
+            dataset
+        } else {
+            let mut d = dataset.clone();
+            for &pid in &skipped {
+                for &v in &members[pid as usize] {
+                    let vi = v as usize;
+                    d.train_mask[vi] = false;
+                    d.val_mask[vi] = false;
+                    d.test_mask[vi] = false;
+                }
+            }
+            masked = d;
+            &masked
+        };
         let leader_rt = Runtime::new(&self.cfg.artifacts_dir)?;
         // preflight the pred artifact so a train-only manifest fails here,
         // not after the full MLP training loop (compilation is cached for
@@ -320,7 +834,7 @@ impl Coordinator {
             let _sp = obs::span("coordinator", "integrate");
             train_classifier_path(
                 &leader_rt,
-                dataset,
+                eval_ds,
                 &store,
                 self.cfg.mlp_epochs,
                 self.cfg.seed ^ 0x11,
@@ -329,7 +843,7 @@ impl Coordinator {
         };
         let eval = {
             let _sp = obs::span("coordinator", "evaluate");
-            evaluate_classifier(&leader_rt, dataset, &store, &clf)?
+            evaluate_classifier(&leader_rt, eval_ds, &store, &clf)?
         };
 
         stats.sort_by_key(|s| s.part_id);
@@ -341,7 +855,7 @@ impl Coordinator {
                 version: 1,
                 dataset: dataset.name.clone(),
                 task: clf.task.to_string(),
-                num_nodes: dataset.num_nodes(),
+                num_nodes: covered,
                 dim: store.dim,
                 classes: clf.classes,
                 classifier_file: crate::serve::CLASSIFIER_FILE.to_string(),
@@ -384,6 +898,8 @@ impl Coordinator {
             wall_secs: sw.secs(),
             max_partition_train_secs,
             total_train_secs,
+            coverage,
+            skipped_partitions: skipped,
         })
     }
 }
@@ -404,6 +920,24 @@ mod tests {
     }
 
     #[test]
+    fn failure_policy_parses() {
+        assert_eq!(FailurePolicy::parse("abort").unwrap(), FailurePolicy::Abort);
+        assert_eq!(FailurePolicy::parse("skip").unwrap(), FailurePolicy::Skip);
+        assert!(FailurePolicy::parse("retry").is_err());
+        assert_eq!(FailurePolicy::Skip.as_str(), "skip");
+    }
+
+    #[test]
+    fn resume_requires_shard_dir() {
+        let mut cfg = CoordinatorConfig::new(PathBuf::from("/nonexistent_artifacts"));
+        cfg.resume = true;
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        let err = Coordinator::new(cfg).run(&ds, &p).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
     fn end_to_end_karate_two_partitions() {
         let Some(cfg) = cfg_if_built() else { return };
         let ds = karate_dataset(5);
@@ -413,6 +947,8 @@ mod tests {
         assert!(report.eval.test_metric >= 0.0);
         assert!(report.max_partition_train_secs > 0.0);
         assert!(report.total_train_secs >= report.max_partition_train_secs);
+        assert_eq!(report.coverage, 1.0);
+        assert!(report.skipped_partitions.is_empty());
     }
 
     #[test]
@@ -455,18 +991,6 @@ mod tests {
     }
 
     #[test]
-    fn failure_injection_retries_and_succeeds() {
-        let Some(mut cfg) = cfg_if_built() else { return };
-        cfg.inject_failure = Some(0);
-        cfg.max_retries = 1;
-        let ds = karate_dataset(5);
-        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
-        let report = Coordinator::new(cfg).run(&ds, &p).unwrap();
-        let p0 = report.per_partition.iter().find(|s| s.part_id == 0).unwrap();
-        assert_eq!(p0.attempts, 2, "partition 0 should have been retried");
-    }
-
-    #[test]
     fn writes_serving_bundle_when_shard_dir_set() {
         let Some(mut cfg) = cfg_if_built() else { return };
         let dir = std::env::temp_dir().join(format!("lf_bundle_{}", std::process::id()));
@@ -487,16 +1011,57 @@ mod tests {
             .unwrap();
             assert_eq!(header.rows, s.num_nodes);
         }
+        // the run journal records every partition
+        let state = RunJournal::load(&dir).unwrap().expect("journal written");
+        assert_eq!(state.parts.len(), report.per_partition.len());
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
-    fn failure_exhausts_retries() {
+    fn resume_retrains_only_missing_partitions() {
         let Some(mut cfg) = cfg_if_built() else { return };
-        cfg.inject_failure = Some(0);
-        cfg.max_retries = 0;
+        let dir = std::env::temp_dir().join(format!("lf_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.shard_dir = Some(dir.clone());
         let ds = karate_dataset(5);
         let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
-        assert!(Coordinator::new(cfg).run(&ds, &p).is_err());
+        let first = Coordinator::new(cfg.clone()).run(&ds, &p).unwrap();
+
+        // simulate a mid-run kill: partition 0's shard never landed
+        std::fs::remove_file(dir.join(crate::serve::shard_file_name(0))).unwrap();
+        cfg.resume = true;
+        let second = Coordinator::new(cfg).run(&ds, &p).unwrap();
+
+        assert_eq!(second.per_partition.len(), first.per_partition.len());
+        // partition 1 was replayed from its journaled shard (no losses
+        // retained), partition 0 retrained from scratch
+        let p0 = second.per_partition.iter().find(|s| s.part_id == 0).unwrap();
+        let p1 = second.per_partition.iter().find(|s| s.part_id == 1).unwrap();
+        assert!(!p0.losses.is_empty(), "partition 0 must retrain");
+        assert!(p1.losses.is_empty(), "partition 1 must replay from the journal");
+        // identical embeddings in, identical metrics out — bit-exact
+        assert_eq!(
+            first.eval.test_metric.to_bits(),
+            second.eval.test_metric.to_bits()
+        );
+        assert_eq!(second.coverage, 1.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_fingerprint_mismatch() {
+        let Some(mut cfg) = cfg_if_built() else { return };
+        let dir = std::env::temp_dir().join(format!("lf_resume_fp_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.shard_dir = Some(dir.clone());
+        let ds = karate_dataset(5);
+        let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+        Coordinator::new(cfg.clone()).run(&ds, &p).unwrap();
+
+        cfg.resume = true;
+        cfg.seed ^= 1; // different run → different embeddings → refuse
+        let err = Coordinator::new(cfg).run(&ds, &p).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
     }
 }

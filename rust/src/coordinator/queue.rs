@@ -1,0 +1,245 @@
+//! Condvar-backed job queue shared by the leader and machine workers.
+//!
+//! Replaces the old poll-and-sleep loop (workers spinning on an empty
+//! `VecDeque` every 2ms) with a blocking queue that still preserves the
+//! determinism contract: *which* worker trains *which* partition may vary
+//! run to run, but results are keyed by `part_id` and each job's training
+//! seed is derived from `part_id` alone, so the assembled output is
+//! bit-identical regardless of pop order.
+//!
+//! Two features beyond a plain blocking queue:
+//!
+//! * **Delayed jobs** — the leader's retry backoff (see the event loop
+//!   in `mod.rs`) never sleeps; it schedules the requeued job with a
+//!   due time and workers promote it when the delay elapses (waiting with
+//!   a timeout capped by the earliest due job, so a delayed job is picked
+//!   up promptly without polling).
+//! * **Per-worker retirement** — a worker the leader has declared dead
+//!   (repeated deadline expiries) stops receiving jobs: its next
+//!   [`JobQueue::pop`] returns `None` and its thread exits.
+//!
+//! `pop` returns `None` exactly when this worker should exit: shutdown,
+//! retirement, or no open jobs left (merely *empty* is not enough — a
+//! running job may fail and be requeued).
+
+use super::messages::Job;
+use crate::util::Stopwatch;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Upper bound on a single condvar wait when delayed jobs are pending —
+/// a lost wakeup can delay a retry by at most this much.
+const MAX_WAIT_MS: u64 = 100;
+
+struct Inner {
+    ready: VecDeque<Job>,
+    /// `(due_secs, job)` — promoted to `ready` once the queue clock
+    /// passes `due_secs`. Small (≤ in-flight retries), so a linear scan
+    /// beats a heap.
+    delayed: Vec<(f64, Job)>,
+    /// Jobs not yet successfully finished or permanently skipped. While
+    /// this is non-zero an idle worker must keep waiting: a running job
+    /// may fail and be requeued.
+    open: usize,
+    retired: Vec<bool>,
+    shutdown: bool,
+}
+
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    notify: Condvar,
+    /// Time base for delayed-job due times.
+    clock: Stopwatch,
+}
+
+impl JobQueue {
+    pub fn new(jobs: Vec<Job>, workers: usize) -> Self {
+        let open = jobs.len();
+        JobQueue {
+            inner: Mutex::new(Inner {
+                ready: jobs.into(),
+                delayed: Vec::new(),
+                open,
+                retired: vec![false; workers],
+                shutdown: false,
+            }),
+            notify: Condvar::new(),
+            clock: Stopwatch::start(),
+        }
+    }
+
+    // queue state is plain data never left mid-update, so a poisoned
+    // lock (panicked worker) is safe to recover everywhere below
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Blocking pop for `worker`. Returns `None` when this worker should
+    /// exit: shutdown, retirement, or zero open jobs.
+    pub fn pop(&self, worker: usize) -> Option<Job> {
+        let mut st = self.lock();
+        loop {
+            if st.shutdown
+                || st.open == 0
+                || st.retired.get(worker).copied().unwrap_or(false)
+            {
+                return None;
+            }
+            let now = self.clock.secs();
+            // promote due delayed jobs (stable: scan order = insert order)
+            let mut i = 0;
+            while i < st.delayed.len() {
+                if st.delayed[i].0 <= now {
+                    let (_, job) = st.delayed.remove(i);
+                    st.ready.push_back(job);
+                } else {
+                    i += 1;
+                }
+            }
+            if let Some(job) = st.ready.pop_front() {
+                return Some(job);
+            }
+            // next wakeup: earliest delayed due time, capped so state
+            // changes we might have raced are re-checked promptly
+            let wait_ms = st
+                .delayed
+                .iter()
+                .map(|(due, _)| ((due - now).max(0.0) * 1e3) as u64 + 1)
+                .min()
+                .unwrap_or(MAX_WAIT_MS)
+                .min(MAX_WAIT_MS);
+            let (guard, _) = self
+                .notify
+                .wait_timeout(st, Duration::from_millis(wait_ms))
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            st = guard;
+        }
+    }
+
+    /// Requeue a job immediately.
+    pub fn push_ready(&self, job: Job) {
+        let mut st = self.lock();
+        st.ready.push_back(job);
+        drop(st);
+        self.notify.notify_one();
+    }
+
+    /// Requeue a job after `delay_ms` (retry backoff). The leader never
+    /// sleeps — the delay lives in the queue and workers promote the job
+    /// when it comes due.
+    pub fn push_delayed(&self, job: Job, delay_ms: u64) {
+        let due = self.clock.secs() + delay_ms as f64 / 1e3;
+        let mut st = self.lock();
+        st.delayed.push((due, job));
+        drop(st);
+        // wake everyone: sleepers must re-derive their wait bound from
+        // the new earliest due time
+        self.notify.notify_all();
+    }
+
+    /// One open job resolved (finished or permanently skipped). At zero,
+    /// idle workers wake up and exit.
+    pub fn resolve_job(&self) {
+        let mut st = self.lock();
+        st.open = st.open.saturating_sub(1);
+        let drained = st.open == 0;
+        drop(st);
+        if drained {
+            self.notify.notify_all();
+        }
+    }
+
+    pub fn open_jobs(&self) -> usize {
+        self.lock().open
+    }
+
+    /// Stop handing jobs to `worker`; its next `pop` returns `None`.
+    pub fn retire_worker(&self, worker: usize) {
+        let mut st = self.lock();
+        if let Some(flag) = st.retired.get_mut(worker) {
+            *flag = true;
+        }
+        drop(st);
+        self.notify.notify_all();
+    }
+
+    /// Abort: every `pop` (current and future) returns `None`.
+    pub fn shutdown(&self) {
+        let mut st = self.lock();
+        st.shutdown = true;
+        drop(st);
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn job(part_id: u32) -> Job {
+        Job { part_id, members: vec![part_id], attempt: 0 }
+    }
+
+    #[test]
+    fn pops_in_fifo_order_and_exits_at_zero_open() {
+        let q = JobQueue::new(vec![job(0), job(1)], 1);
+        assert_eq!(q.pop(0).unwrap().part_id, 0);
+        assert_eq!(q.pop(0).unwrap().part_id, 1);
+        q.resolve_job();
+        q.resolve_job();
+        assert_eq!(q.open_jobs(), 0);
+        assert!(q.pop(0).is_none(), "no open jobs → exit signal");
+    }
+
+    #[test]
+    fn empty_but_open_queue_blocks_until_requeue() {
+        let q = Arc::new(JobQueue::new(vec![job(0)], 2));
+        assert_eq!(q.pop(0).unwrap().part_id, 0);
+        // worker 1 blocks on the empty-but-open queue until the leader
+        // requeues the failed job
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop(1).map(|j| j.part_id));
+        q.push_ready(job(0));
+        assert_eq!(h.join().unwrap(), Some(0));
+    }
+
+    #[test]
+    fn delayed_jobs_become_visible_after_their_due_time() {
+        let q = JobQueue::new(Vec::new(), 1);
+        {
+            let mut st = q.lock();
+            st.open = 1; // keep pop waiting instead of exiting
+        }
+        let sw = Stopwatch::start();
+        q.push_delayed(job(7), 30);
+        let got = q.pop(0).expect("delayed job must surface");
+        assert_eq!(got.part_id, 7);
+        assert!(
+            sw.millis() >= 25.0,
+            "promoted after ~{}ms, expected ≥ ~30ms",
+            sw.millis()
+        );
+    }
+
+    #[test]
+    fn retired_worker_gets_none_while_others_still_pop() {
+        let q = JobQueue::new(vec![job(0)], 2);
+        q.retire_worker(0);
+        assert!(q.pop(0).is_none());
+        assert_eq!(q.pop(1).unwrap().part_id, 0);
+    }
+
+    #[test]
+    fn shutdown_unblocks_waiting_workers() {
+        let q = Arc::new(JobQueue::new(vec![job(0)], 2));
+        assert!(q.pop(0).is_some());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop(1));
+        q.shutdown();
+        assert!(h.join().unwrap().is_none());
+    }
+}

@@ -1,54 +1,45 @@
 //! Machine worker: owns a thread-local PJRT runtime and trains partitions
-//! pulled from the shared job queue until the queue drains.
+//! pulled from the shared [`JobQueue`] until the queue signals exit.
+//!
+//! Fault surface (see `fault/`): `runtime.init` fires before the PJRT
+//! client comes up — an injected (or real) init failure retires the
+//! worker via [`WorkerEvent::Retired`]; `worker.batch` fires around
+//! subgraph/tensor assembly and `worker.train` around the training loop —
+//! both surface as ordinary job failures for the leader's retry/backoff
+//! machinery.
 
 use super::messages::{Job, WorkerEvent};
+use super::queue::JobQueue;
 use super::CoordinatorConfig;
 use crate::data::Dataset;
 use crate::error::Result;
+use crate::fault;
 use crate::graph::SubgraphScratch;
 use crate::obs;
 use crate::runtime::Runtime;
-use crate::util::json::num;
 use crate::train::{
     build_batch_with, train_partition_with, PadScratch, TrainOptions, TrainedPartition,
 };
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::json::num;
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
 
-/// Worker main loop. Runs until `remaining` (jobs not yet successfully
-/// finished, maintained by the leader) reaches zero — merely draining the
-/// queue is not enough because a failed job may be re-queued by the leader
-/// after this worker observes an empty queue.
+/// Worker main loop. Pops jobs until [`JobQueue::pop`] returns `None`
+/// (shutdown, retirement, or no open jobs left).
 pub fn worker_loop(
     worker: usize,
     dataset: &Dataset,
-    queue: Arc<Mutex<VecDeque<Job>>>,
-    remaining: Arc<AtomicUsize>,
+    queue: &JobQueue,
     tx: Sender<WorkerEvent>,
     cfg: &CoordinatorConfig,
 ) {
     // One PJRT client per machine (PjRtClient is thread-local by design).
-    let rt = match Runtime::new(&cfg.artifacts_dir) {
+    let rt = match init_runtime(cfg) {
         Ok(rt) => rt,
         Err(e) => {
-            // Without a runtime this worker can do nothing; report failure
-            // for the next job so the leader can retry elsewhere.
+            // Without a runtime this worker can do nothing: retire it so
+            // the leader re-plans over the survivors (or aborts at zero).
             log::error!("worker {worker}: runtime init failed: {e}");
-            // recover a poisoned queue: it only ever holds complete Jobs,
-            // and stalling here would hang the leader's recv loop
-            let next = queue
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .pop_front();
-            if let Some(job) = next {
-                let _ = tx.send(WorkerEvent::Failed {
-                    worker,
-                    part_id: job.part_id,
-                    error: format!("runtime init: {e}"),
-                });
-            }
+            let _ = tx.send(WorkerEvent::Retired { worker, error: e.to_string() });
             return;
         }
     };
@@ -62,22 +53,7 @@ pub fn worker_loop(
     // One span per worker lifetime — the trace shows each simulated
     // machine as a lane of per-partition training spans.
     let _worker_span = obs::span("coordinator", "worker").with("worker", num(worker as f64));
-    loop {
-        if remaining.load(Ordering::Acquire) == 0 {
-            break;
-        }
-        let next = queue
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner)
-            .pop_front();
-        let job = match next {
-            Some(j) => j,
-            None => {
-                // queue drained but work may be re-queued on failure
-                std::thread::sleep(std::time::Duration::from_millis(2));
-                continue;
-            }
-        };
+    while let Some(job) = queue.pop(worker) {
         let _ = tx.send(WorkerEvent::Started { worker, part_id: job.part_id });
         let mut job_span = obs::span("coordinator", "train_partition");
         if obs::tracing_enabled() {
@@ -101,6 +77,7 @@ pub fn worker_loop(
                         worker,
                         part_id: job.part_id,
                         error: e.to_string(),
+                        transient: e.is_transient(),
                     })
                     .is_err()
                 {
@@ -111,6 +88,13 @@ pub fn worker_loop(
     }
 }
 
+fn init_runtime(cfg: &CoordinatorConfig) -> Result<Runtime> {
+    if let Some(inj) = fault::point("runtime.init").fire() {
+        return Err(inj.error());
+    }
+    Runtime::new(&cfg.artifacts_dir)
+}
+
 fn run_job(
     rt: &Runtime,
     dataset: &Dataset,
@@ -119,16 +103,19 @@ fn run_job(
     scratch: &mut SubgraphScratch,
     pads: &mut PadScratch,
 ) -> Result<(Vec<crate::graph::NodeId>, TrainedPartition)> {
-    // Test hook: simulate a machine fault on the first attempt.
-    if cfg.inject_failure == Some(job.part_id) && job.attempt == 0 {
-        return Err(crate::error::Error::Coordinator(
-            "injected fault (test hook)".into(),
-        ));
+    if let Some(inj) = fault::point("worker.batch").part(job.part_id).attempt(job.attempt).fire() {
+        return Err(inj.error());
     }
     let batch = build_batch_with(dataset, &job.members, cfg.mode, cfg.model, scratch)?;
+    if let Some(inj) = fault::point("worker.train").part(job.part_id).attempt(job.attempt).fire() {
+        return Err(inj.error());
+    }
     let opts = TrainOptions {
         model: cfg.model,
         epochs: cfg.epochs,
+        // seed depends on the partition only, never the attempt: a
+        // retried job trains bit-identically to a first-try success —
+        // the chaos-determinism contract rests on this line
         seed: cfg.seed ^ (job.part_id as u64) << 8,
         log_every: 0,
         exec: cfg.exec,

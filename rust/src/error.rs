@@ -33,6 +33,25 @@ pub enum Error {
 
     #[error("lint error: {0}")]
     Lint(String),
+
+    #[error("injected fault: {0}")]
+    Fault(String),
+}
+
+impl Error {
+    /// Whether a retry on another machine (or the same one, later) could
+    /// plausibly succeed. Transient classes are environmental — I/O,
+    /// PJRT/XLA runtime trouble, injected faults (which model machine
+    /// failures). Everything else (bad graph, bad config, corrupt
+    /// manifest, …) is deterministic: retrying burns an attempt on the
+    /// same failure, so the coordinator goes straight to its
+    /// `on_failure` policy.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::Io(_) | Error::Xla(_) | Error::Runtime(_) | Error::Fault(_)
+        )
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -48,3 +67,20 @@ impl From<crate::util::json::JsonError> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classification() {
+        assert!(Error::Fault("x".into()).is_transient());
+        assert!(Error::Runtime("x".into()).is_transient());
+        assert!(Error::Xla("x".into()).is_transient());
+        assert!(Error::Io(std::io::Error::other("x")).is_transient());
+        assert!(!Error::Config("x".into()).is_transient());
+        assert!(!Error::Serve("x".into()).is_transient());
+        assert!(!Error::Coordinator("x".into()).is_transient());
+        assert!(!Error::Graph("x".into()).is_transient());
+    }
+}

@@ -1,0 +1,97 @@
+//! Deterministic exponential backoff with seeded full jitter.
+//!
+//! This is the one sanctioned wait-before-retry helper: the
+//! `sleep_outside_backoff` lint rule bans raw `thread::sleep` everywhere
+//! outside `fault/`, so every retry delay in the tree flows through here
+//! and is (a) bounded, (b) jittered to avoid retry stampedes, and
+//! (c) reproducible from a seed — the jitter stream is SplitMix64, so a
+//! rerun with the same seed schedules the same delays.
+//!
+//! The coordinator does not *sleep* on this: it converts [`Backoff::
+//! delay_ms`] into a due-time on the delayed job queue so the leader's
+//! event loop keeps draining. [`Backoff::sleep`] exists for call sites
+//! that genuinely have nothing else to do (e.g. the leader-side shard
+//! write retry).
+
+use crate::util::rng::splitmix64;
+use std::time::Duration;
+
+/// Default first-retry delay.
+pub const DEFAULT_BASE_MS: u64 = 25;
+/// Default delay ceiling.
+pub const DEFAULT_CAP_MS: u64 = 2_000;
+
+/// Seeded exponential-backoff delay generator (full jitter).
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    state: u64,
+}
+
+impl Backoff {
+    pub fn new(seed: u64) -> Backoff {
+        Backoff::with_limits(seed, DEFAULT_BASE_MS, DEFAULT_CAP_MS)
+    }
+
+    pub fn with_limits(seed: u64, base_ms: u64, cap_ms: u64) -> Backoff {
+        Backoff {
+            base_ms: base_ms.max(1),
+            cap_ms: cap_ms.max(1),
+            state: seed ^ 0xBAC0FF,
+        }
+    }
+
+    /// Delay before retry number `attempt` (1 = first retry), in
+    /// milliseconds: uniform over `[0, min(cap, base · 2^(attempt-1))]`
+    /// ("full jitter"), drawn from the deterministic seeded stream.
+    pub fn delay_ms(&mut self, attempt: u32) -> u64 {
+        let ceiling = self
+            .base_ms
+            .checked_shl(attempt.saturating_sub(1).min(32))
+            .unwrap_or(self.cap_ms)
+            .min(self.cap_ms);
+        splitmix64(&mut self.state) % (ceiling + 1)
+    }
+
+    /// Sleep for the next delay; returns the slept milliseconds.
+    pub fn sleep(&mut self, attempt: u32) -> u64 {
+        let ms = self.delay_ms(attempt);
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delays_are_bounded_and_grow_with_attempt() {
+        let mut b = Backoff::with_limits(7, 10, 1_000);
+        for attempt in 1..=12u32 {
+            let ceiling = 10u64.checked_shl(attempt - 1).unwrap_or(1_000).min(1_000);
+            for _ in 0..50 {
+                assert!(b.delay_ms(attempt) <= ceiling, "attempt {attempt}");
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let schedule = |seed| {
+            let mut b = Backoff::new(seed);
+            (1..=8).map(|a| b.delay_ms(a)).collect::<Vec<u64>>()
+        };
+        assert_eq!(schedule(3), schedule(3));
+        assert_ne!(schedule(3), schedule(4), "different seeds should differ");
+    }
+
+    #[test]
+    fn huge_attempt_does_not_overflow() {
+        let mut b = Backoff::with_limits(1, 100, 500);
+        assert!(b.delay_ms(u32::MAX) <= 500);
+    }
+}

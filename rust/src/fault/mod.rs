@@ -1,0 +1,299 @@
+//! faultkit — deterministic fault injection for the training/serving
+//! pipeline, in the style of `obs/`: **off by default, one relaxed
+//! atomic load when disabled**.
+//!
+//! Production code marks its failure domains with named *fault points*:
+//!
+//! ```ignore
+//! if let Some(inj) = fault::point("worker.train").part(job.part_id).attempt(job.attempt).fire() {
+//!     return Err(inj.error());
+//! }
+//! ```
+//!
+//! A seeded [`FaultPlan`] (parsed from `--fault-plan` / `[fault] plan`,
+//! see [`plan`] for the grammar) arms points with `fail`, `delay(ms)`,
+//! or `corrupt` actions. `delay` is served inside [`Point::fire`] (the
+//! call site never sees it); `fail` and `corrupt` come back as an
+//! [`Injection`] for the site to act on — corruption sites derive the
+//! damaged byte/bit deterministically from [`Injection::salt`], so a
+//! given plan+seed damages the same bytes every run.
+//!
+//! Every `fault::point("…")` literal must be declared in
+//! [`FAULT_POINTS`]; the `undeclared_fault_point` lint rule enforces it
+//! (mirroring the CLI `SWITCHES` registry), so the chaos sweep in
+//! nightly CI provably covers every point.
+//!
+//! Firings are counted in the PR 6 registry (`fault.injected`) and
+//! emitted as trace events, so a chaos run's timeline shows exactly
+//! where faults landed.
+
+pub mod backoff;
+pub mod plan;
+
+pub use backoff::Backoff;
+pub use plan::{Action, FaultPlan, PlanEntry};
+
+use crate::obs;
+use crate::util::json::{num, s};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Registered fault points — the instrumented failure domains:
+/// per-machine PJRT client creation, batch assembly, partition
+/// training, shard write (leader), shard read (serving), and shard
+/// manifest load. Every `fault::point("x")` literal in library code
+/// must appear here (`undeclared_fault_point` lint rule).
+pub const FAULT_POINTS: &[&str] = &[
+    "runtime.init",
+    "worker.batch",
+    "worker.train",
+    "shard.write",
+    "shard.read",
+    "manifest.load",
+];
+
+/// Fast-path gate: when false (the default), [`Point::fire`] is a single
+/// relaxed load and nothing else.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed plan. Only locked on the slow path (faults enabled).
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Serializes scoped installs (tests): one plan owner at a time.
+static SCOPE: Mutex<()> = Mutex::new(());
+
+fn plan_slot() -> MutexGuard<'static, Option<FaultPlan>> {
+    // the slot only ever holds a complete plan — poison (a panicked
+    // holder) cannot leave it mid-update, so recovery is safe
+    PLAN.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Install a plan process-wide (CLI path; stays until [`clear`]).
+/// An empty plan leaves injection disabled.
+pub fn install(plan: FaultPlan) {
+    let enable = !plan.is_empty();
+    *plan_slot() = Some(plan);
+    ENABLED.store(enable, Ordering::Relaxed);
+}
+
+/// Disarm all fault points and drop the plan.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Relaxed);
+    *plan_slot() = None;
+}
+
+/// Whether a plan is currently armed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII guard for a scoped plan install: holds the global scope lock
+/// (serializing concurrent installers — parallel tests queue instead of
+/// clobbering each other) and disarms on drop.
+pub struct PlanGuard {
+    _scope: MutexGuard<'static, ()>,
+}
+
+impl Drop for PlanGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Install a plan for the lifetime of the returned guard. Tests use
+/// this; concurrent callers serialize on a global lock.
+pub fn install_scoped(plan: FaultPlan) -> PlanGuard {
+    let scope = SCOPE.lock().unwrap_or_else(PoisonError::into_inner);
+    install(plan);
+    PlanGuard { _scope: scope }
+}
+
+/// Exclusive fault-free section: takes the scope lock with no plan
+/// armed, so a fault-sensitive integration test can't be perturbed by a
+/// concurrently installed plan.
+pub fn exclusive() -> PlanGuard {
+    install_scoped(FaultPlan::default())
+}
+
+/// A fault point firing under construction (name + optional context).
+#[must_use = "a fault point does nothing until fire() is called"]
+pub struct Point {
+    name: &'static str,
+    part: Option<u32>,
+    attempt: Option<u32>,
+}
+
+/// Mark a fault point. Returns a builder; attach context with
+/// [`Point::part`] / [`Point::attempt`], then call [`Point::fire`].
+#[inline]
+pub fn point(name: &'static str) -> Point {
+    Point { name, part: None, attempt: None }
+}
+
+impl Point {
+    #[inline]
+    pub fn part(mut self, part: u32) -> Point {
+        self.part = Some(part);
+        self
+    }
+
+    #[inline]
+    pub fn attempt(mut self, attempt: u32) -> Point {
+        self.attempt = Some(attempt);
+        self
+    }
+
+    /// Evaluate this firing against the installed plan. Disabled path:
+    /// one relaxed atomic load. `delay` actions are served here
+    /// (transparent to the caller); `fail`/`corrupt` are returned.
+    #[inline]
+    pub fn fire(self) -> Option<Injection> {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return None;
+        }
+        self.fire_slow()
+    }
+
+    #[cold]
+    fn fire_slow(self) -> Option<Injection> {
+        let outcome = plan_slot()
+            .as_mut()
+            .and_then(|p| p.evaluate(self.name, self.part, self.attempt));
+        let (action, salt) = outcome?;
+        obs::registry().counter("fault.injected").inc();
+        obs::event(
+            "fault",
+            "injected",
+            vec![
+                ("point", s(self.name)),
+                ("action", s(match action {
+                    Action::Fail => "fail",
+                    Action::Delay(_) => "delay",
+                    Action::Corrupt => "corrupt",
+                })),
+                ("part", num(self.part.map(|p| p as f64).unwrap_or(-1.0))),
+                ("attempt", num(self.attempt.map(|a| a as f64).unwrap_or(-1.0))),
+            ],
+        );
+        log::warn!(
+            "fault injected at {} (part {:?}, attempt {:?}): {:?}",
+            self.name,
+            self.part,
+            self.attempt,
+            action
+        );
+        match action {
+            Action::Delay(ms) => {
+                // served here so every instrumented site gets delay
+                // support for free; the lock is already released
+                std::thread::sleep(Duration::from_millis(ms));
+                None
+            }
+            Action::Fail => Some(Injection { point: self.name, action: Action::Fail, salt }),
+            Action::Corrupt => {
+                Some(Injection { point: self.name, action: Action::Corrupt, salt })
+            }
+        }
+    }
+}
+
+/// A fired `fail` or `corrupt` injection, handed to the call site.
+#[derive(Clone, Copy, Debug)]
+pub struct Injection {
+    pub point: &'static str,
+    pub action: Action,
+    /// Deterministic per-hit salt for corruption offsets.
+    pub salt: u64,
+}
+
+impl Injection {
+    /// The error an injected failure surfaces as (classified transient —
+    /// injected faults model recoverable machine failures).
+    pub fn error(&self) -> crate::error::Error {
+        crate::error::Error::Fault(format!("injected fault at {}", self.point))
+    }
+
+    /// Whether this injection asks the site to damage data (sites with
+    /// no corruptible payload treat `corrupt` as `fail`).
+    pub fn is_corrupt(&self) -> bool {
+        self.action == Action::Corrupt
+    }
+
+    /// Deterministic offset in `[0, n)` derived from the salt — used to
+    /// pick the damaged byte/bit. Returns 0 for `n == 0`.
+    pub fn offset(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let mut state = self.salt;
+        (crate::util::rng::splitmix64(&mut state) % n as u64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_points_are_inert() {
+        // no scoped plan held here: whatever other tests do, this
+        // synthetic name is never armed by them
+        assert!(point("test.mod.inert").fire().is_none());
+    }
+
+    #[test]
+    fn scoped_install_fires_and_disarms() {
+        let salt_offset;
+        {
+            let _g = install_scoped(FaultPlan::new(vec![
+                PlanEntry::new("test.mod.scoped", Action::Corrupt).times(1),
+            ]));
+            assert!(enabled());
+            let inj = point("test.mod.scoped").part(2).fire().unwrap();
+            assert!(inj.is_corrupt());
+            salt_offset = inj.offset(1000);
+            assert!(point("test.mod.scoped").part(2).fire().is_none(), "times=1");
+        }
+        assert!(!enabled(), "guard drop must disarm");
+        assert!(point("test.mod.scoped").part(2).fire().is_none());
+        assert!(salt_offset < 1000);
+    }
+
+    #[test]
+    fn injected_error_is_transient() {
+        let _g = install_scoped(FaultPlan::new(vec![PlanEntry::new(
+            "test.mod.transient",
+            Action::Fail,
+        )]));
+        let err = point("test.mod.transient").fire().unwrap().error();
+        assert!(err.is_transient());
+        assert!(err.to_string().contains("test.mod.transient"));
+    }
+
+    #[test]
+    fn delay_is_served_internally() {
+        let _g = install_scoped(FaultPlan::new(vec![
+            PlanEntry::new("test.mod.delay", Action::Delay(1)).times(1),
+        ]));
+        let sw = crate::util::Stopwatch::start();
+        assert!(point("test.mod.delay").fire().is_none(), "delay is transparent");
+        assert!(sw.millis() >= 1.0);
+    }
+
+    #[test]
+    fn empty_plan_does_not_enable() {
+        let _g = install_scoped(FaultPlan::default());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn registered_points_parse() {
+        for p in FAULT_POINTS {
+            assert!(
+                FaultPlan::parse(&format!("{p}:fail")).is_ok(),
+                "{p} must be armable"
+            );
+        }
+    }
+}

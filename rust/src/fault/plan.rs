@@ -1,0 +1,387 @@
+//! Fault-plan grammar and evaluation.
+//!
+//! A plan is a `;`-separated list of entries, each arming one fault
+//! point with selectors and an action:
+//!
+//! ```text
+//! plan     := entry (';' entry)*
+//! entry    := point ':' action
+//!           | point ':' selectors ':' action
+//! selectors:= sel (',' sel)*           (empty list allowed)
+//! sel      := part=N | attempt=N | p=F | seed=N | times=N
+//! action   := fail | delay(MS) | corrupt
+//! ```
+//!
+//! Examples:
+//!
+//! ```text
+//! worker.train:part=3,attempt=0:fail
+//! shard.read:p=0.05,seed=7:corrupt
+//! runtime.init:times=1:delay(250)
+//! ```
+//!
+//! Selector semantics, applied in order per firing:
+//!
+//! * `part` / `attempt` — fire only when the instrumented site supplies
+//!   a matching context value (a site without that context never
+//!   matches the selector);
+//! * `p` — fire with probability `p`, drawn from a per-entry
+//!   deterministic stream (`seed` pins the stream; default derives from
+//!   the entry's position in the plan);
+//! * `times` — fire at most N times over the process lifetime
+//!   (probability misses do not count).
+//!
+//! The first entry that matches and fires wins; later entries are not
+//! consulted for that firing. Parsing validates point names against
+//! [`super::FAULT_POINTS`] so a typo is a config error, not a silently
+//! inert plan; programmatic construction ([`FaultPlan::new`]) skips that
+//! check for tests that use synthetic point names.
+
+use crate::error::{Error, Result};
+use crate::util::rng::splitmix64;
+
+/// What an armed fault point does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Return an injected error from the instrumented operation.
+    Fail,
+    /// Stall the operation for this many milliseconds, then proceed.
+    Delay(u64),
+    /// Deterministically damage the operation's data (sites without a
+    /// corruptible payload treat this as [`Action::Fail`]).
+    Corrupt,
+}
+
+impl Action {
+    fn parse(text: &str) -> Result<Action> {
+        let text = text.trim();
+        match text {
+            "fail" => return Ok(Action::Fail),
+            "corrupt" => return Ok(Action::Corrupt),
+            _ => {}
+        }
+        if let Some(rest) = text.strip_prefix("delay(") {
+            if let Some(ms) = rest.strip_suffix(')') {
+                let ms: u64 = ms.trim().parse().map_err(|_| {
+                    Error::Config(format!("fault plan: bad delay millis {ms:?}"))
+                })?;
+                return Ok(Action::Delay(ms));
+            }
+        }
+        Err(Error::Config(format!(
+            "fault plan: unknown action {text:?} (expected fail | delay(ms) | corrupt)"
+        )))
+    }
+}
+
+/// One armed fault point.
+#[derive(Clone, Debug)]
+pub struct PlanEntry {
+    pub point: String,
+    pub part: Option<u32>,
+    pub attempt: Option<u32>,
+    pub p: Option<f64>,
+    pub times: Option<u32>,
+    pub action: Action,
+    /// Seed of the per-entry probability/salt stream.
+    pub seed: u64,
+    /// Probability-draw state (advances on every selector-matched
+    /// evaluation, hit or miss, so draws stay reproducible).
+    draw_state: u64,
+    /// Times this entry has fired.
+    hits: u32,
+}
+
+impl PlanEntry {
+    /// Arm `point` with `action` and no selectors (always fires).
+    pub fn new(point: &str, action: Action) -> PlanEntry {
+        PlanEntry {
+            point: point.to_string(),
+            part: None,
+            attempt: None,
+            p: None,
+            times: None,
+            action,
+            seed: 0,
+            draw_state: 0,
+            hits: 0,
+        }
+    }
+
+    pub fn part(mut self, part: u32) -> PlanEntry {
+        self.part = Some(part);
+        self
+    }
+
+    pub fn attempt(mut self, attempt: u32) -> PlanEntry {
+        self.attempt = Some(attempt);
+        self
+    }
+
+    pub fn times(mut self, times: u32) -> PlanEntry {
+        self.times = Some(times);
+        self
+    }
+
+    pub fn probability(mut self, p: f64, seed: u64) -> PlanEntry {
+        self.p = Some(p);
+        self.seed = seed;
+        self.draw_state = seed;
+        self
+    }
+
+    fn parse(text: &str, index: usize) -> Result<PlanEntry> {
+        let segments: Vec<&str> = text.split(':').collect();
+        let (point, selectors, action) = match segments.as_slice() {
+            [point, action] => (point.trim(), "", action.trim()),
+            [point, selectors, action] => (point.trim(), selectors.trim(), action.trim()),
+            _ => {
+                return Err(Error::Config(format!(
+                    "fault plan entry {text:?}: expected point[:selectors]:action"
+                )))
+            }
+        };
+        if point.is_empty() {
+            return Err(Error::Config(format!("fault plan entry {text:?}: empty point")));
+        }
+        let mut entry = PlanEntry::new(point, Action::parse(action)?);
+        // default seed: distinct per entry position, stable across runs
+        entry.seed = 0x5EED ^ (index as u64);
+        for sel in selectors.split(',') {
+            let sel = sel.trim();
+            if sel.is_empty() {
+                continue;
+            }
+            let (key, value) = sel.split_once('=').ok_or_else(|| {
+                Error::Config(format!("fault plan selector {sel:?}: expected key=value"))
+            })?;
+            let bad = |what: &str| {
+                Error::Config(format!("fault plan selector {sel:?}: bad {what}"))
+            };
+            match key.trim() {
+                "part" => entry.part = Some(value.trim().parse().map_err(|_| bad("part"))?),
+                "attempt" => {
+                    entry.attempt = Some(value.trim().parse().map_err(|_| bad("attempt"))?)
+                }
+                "times" => entry.times = Some(value.trim().parse().map_err(|_| bad("times"))?),
+                "seed" => entry.seed = value.trim().parse().map_err(|_| bad("seed"))?,
+                "p" => {
+                    let p: f64 = value.trim().parse().map_err(|_| bad("probability"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(bad("probability (must be in [0, 1])"));
+                    }
+                    entry.p = Some(p);
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "fault plan selector {other:?}: unknown key \
+                         (expected part | attempt | p | seed | times)"
+                    )))
+                }
+            }
+        }
+        entry.draw_state = entry.seed;
+        Ok(entry)
+    }
+
+    /// Whether this entry fires for a `(point, part, attempt)` firing.
+    /// Advances internal probability/hit state.
+    fn fires(&mut self, point: &str, part: Option<u32>, attempt: Option<u32>) -> bool {
+        if self.point != point {
+            return false;
+        }
+        if let Some(want) = self.part {
+            if part != Some(want) {
+                return false;
+            }
+        }
+        if let Some(want) = self.attempt {
+            if attempt != Some(want) {
+                return false;
+            }
+        }
+        if let Some(limit) = self.times {
+            if self.hits >= limit {
+                return false;
+            }
+        }
+        if let Some(p) = self.p {
+            let draw = splitmix64(&mut self.draw_state) as f64 / (u64::MAX as f64 + 1.0);
+            if draw >= p {
+                return false;
+            }
+        }
+        self.hits += 1;
+        true
+    }
+
+    /// Deterministic per-hit salt: corrupt sites derive byte/bit offsets
+    /// from it, so the same plan damages the same bytes every run.
+    fn salt(&self, part: Option<u32>) -> u64 {
+        let mut s = self
+            .seed
+            .wrapping_add((self.hits as u64) << 32)
+            .wrapping_add(part.map(|p| p as u64 + 1).unwrap_or(0));
+        splitmix64(&mut s)
+    }
+}
+
+/// A parsed, stateful fault plan (entry order is match priority).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub entries: Vec<PlanEntry>,
+}
+
+impl FaultPlan {
+    pub fn new(entries: Vec<PlanEntry>) -> FaultPlan {
+        FaultPlan { entries }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parse a spec string, validating point names against the
+    /// registered [`super::FAULT_POINTS`].
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut entries = Vec::new();
+        for (index, text) in spec.split(';').enumerate() {
+            let text = text.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let entry = PlanEntry::parse(text, index)?;
+            if !super::FAULT_POINTS.contains(&entry.point.as_str()) {
+                return Err(Error::Config(format!(
+                    "fault plan: unknown fault point {:?} (registered: {})",
+                    entry.point,
+                    super::FAULT_POINTS.join(", ")
+                )));
+            }
+            entries.push(entry);
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// Evaluate a firing; the first matching entry wins. Returns the
+    /// action plus the deterministic corruption salt.
+    pub fn evaluate(
+        &mut self,
+        point: &str,
+        part: Option<u32>,
+        attempt: Option<u32>,
+    ) -> Option<(Action, u64)> {
+        for entry in &mut self.entries {
+            if entry.fires(point, part, attempt) {
+                return Some((entry.action, entry.salt(part)));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let plan = FaultPlan::parse(
+            "worker.train:part=3,attempt=0:fail; shard.read:p=0.05,seed=7:corrupt",
+        )
+        .unwrap();
+        assert_eq!(plan.entries.len(), 2);
+        assert_eq!(plan.entries[0].point, "worker.train");
+        assert_eq!(plan.entries[0].part, Some(3));
+        assert_eq!(plan.entries[0].attempt, Some(0));
+        assert_eq!(plan.entries[0].action, Action::Fail);
+        assert_eq!(plan.entries[1].point, "shard.read");
+        assert_eq!(plan.entries[1].p, Some(0.05));
+        assert_eq!(plan.entries[1].seed, 7);
+        assert_eq!(plan.entries[1].action, Action::Corrupt);
+    }
+
+    #[test]
+    fn parses_delay_and_times() {
+        let plan = FaultPlan::parse("runtime.init:times=1:delay(250)").unwrap();
+        assert_eq!(plan.entries[0].action, Action::Delay(250));
+        assert_eq!(plan.entries[0].times, Some(1));
+    }
+
+    #[test]
+    fn rejects_unknown_point_action_and_selector() {
+        assert!(FaultPlan::parse("worker.nope:fail").is_err());
+        assert!(FaultPlan::parse("worker.train:explode").is_err());
+        assert!(FaultPlan::parse("worker.train:color=red:fail").is_err());
+        assert!(FaultPlan::parse("worker.train:p=1.5:fail").is_err());
+        assert!(FaultPlan::parse("worker.train:delay(abc)").is_err());
+        assert!(FaultPlan::parse("a:b:c:d").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_an_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn selectors_gate_firing() {
+        let mut plan =
+            FaultPlan::parse("worker.train:part=1,attempt=0:fail").unwrap();
+        assert!(plan.evaluate("worker.train", Some(0), Some(0)).is_none());
+        assert!(plan.evaluate("worker.train", Some(1), Some(1)).is_none());
+        assert!(plan.evaluate("worker.train", None, None).is_none());
+        assert!(plan.evaluate("shard.read", Some(1), Some(0)).is_none());
+        let (action, _) = plan.evaluate("worker.train", Some(1), Some(0)).unwrap();
+        assert_eq!(action, Action::Fail);
+    }
+
+    #[test]
+    fn times_caps_total_fires() {
+        let mut plan = FaultPlan::parse("worker.train:times=2:fail").unwrap();
+        assert!(plan.evaluate("worker.train", Some(0), Some(0)).is_some());
+        assert!(plan.evaluate("worker.train", Some(1), Some(0)).is_some());
+        assert!(plan.evaluate("worker.train", Some(2), Some(0)).is_none());
+    }
+
+    #[test]
+    fn probability_stream_is_deterministic() {
+        let run = || {
+            let mut plan = FaultPlan::parse("shard.read:p=0.5,seed=42:corrupt").unwrap();
+            (0..64)
+                .map(|i| plan.evaluate("shard.read", Some(i), None).is_some())
+                .collect::<Vec<bool>>()
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed must reproduce the same fire pattern");
+        assert!(a.iter().any(|&f| f) && !a.iter().all(|&f| f), "p=0.5 mixes");
+    }
+
+    #[test]
+    fn first_matching_entry_wins() {
+        let mut plan =
+            FaultPlan::parse("worker.train:part=0:corrupt; worker.train:fail").unwrap();
+        let (a0, _) = plan.evaluate("worker.train", Some(0), None).unwrap();
+        assert_eq!(a0, Action::Corrupt);
+        let (a1, _) = plan.evaluate("worker.train", Some(1), None).unwrap();
+        assert_eq!(a1, Action::Fail);
+    }
+
+    #[test]
+    fn salts_are_stable_per_plan() {
+        let salt = || {
+            let mut plan = FaultPlan::parse("shard.read:seed=9:corrupt").unwrap();
+            plan.evaluate("shard.read", Some(3), None).map(|(_, s)| s)
+        };
+        assert_eq!(salt(), salt());
+    }
+
+    #[test]
+    fn programmatic_entries_allow_synthetic_points() {
+        let mut plan = FaultPlan::new(vec![
+            PlanEntry::new("test.alpha", Action::Fail).times(1),
+        ]);
+        assert!(plan.evaluate("test.alpha", None, None).is_some());
+        assert!(plan.evaluate("test.alpha", None, None).is_none());
+    }
+}

@@ -35,6 +35,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod fault;
 pub mod graph;
 pub mod obs;
 pub mod partition;

@@ -40,7 +40,7 @@ use leiden_fusion::partition::{
     PartitionPipeline, PartitionReport, PartitionSpec, PipelineEvent,
 };
 use leiden_fusion::runtime::{default_artifacts_dir, Manifest};
-use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
+use leiden_fusion::serve::{Engine, EngineConfig, NodeStatus, ShardedEmbeddingStore};
 use leiden_fusion::train::ModelKind;
 use leiden_fusion::util::{fmt_duration, init_logging, Stopwatch};
 use leiden_fusion::{Error, Result};
@@ -59,6 +59,11 @@ USAGE:
                   [--machines 4] [--n 0] [--seed 42] [--threads 1] [--shards dir]
                   [--exec session|reference]   (PJRT path: device-resident
                    session (default) or the host round-trip reference loop)
+                  [--max-retries 1] [--on-failure abort|skip] [--deadline SECS]
+                  [--resume]   (replay intact journaled partitions from the
+                   --shards dir; retrain only what's missing)
+                  [--fault-plan SPEC]   (deterministic fault injection, e.g.
+                   \"worker.train:part=0,attempt=0:fail; shard.read:p=0.05,seed=7:corrupt\")
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
   repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
                   [--cache-stripes 8] [--artifacts dir] [--warm]
@@ -95,7 +100,7 @@ SPEC grammar (stages joined by '+', optional key=value parameters):
 ";
 
 /// Boolean switches (never bind the next token as a value).
-const SWITCHES: &[&str] = &["help", "warm", "train", "fixable"];
+const SWITCHES: &[&str] = &["help", "warm", "train", "fixable", "resume"];
 
 fn main() {
     init_logging();
@@ -315,7 +320,34 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(dir) = args.get("shards") {
         cfg.shards_out = Some(PathBuf::from(dir));
     }
+    cfg.max_retries = args.usize_or("max-retries", cfg.max_retries as usize)? as u32;
+    if let Some(p) = args.get("on-failure") {
+        cfg.on_failure = leiden_fusion::coordinator::FailurePolicy::parse(p)?;
+    }
+    cfg.deadline_secs = args.f64_or("deadline", cfg.deadline_secs)?;
+    if cfg.deadline_secs < 0.0 {
+        return Err(Error::Config(format!(
+            "--deadline must be >= 0 seconds, got {}",
+            cfg.deadline_secs
+        )));
+    }
+    cfg.resume = cfg.resume || args.has("resume");
+    if let Some(p) = args.get("fault-plan") {
+        cfg.fault_plan = Some(p.to_string());
+    }
+    install_fault_plan(cfg.fault_plan.as_deref())?;
     Ok(cfg)
+}
+
+/// Parse and install the deterministic fault-injection plan (CLI
+/// `--fault-plan` wins over the config's `[fault] plan`). No-op when
+/// neither is given — every fault point stays one relaxed atomic load.
+fn install_fault_plan(spec: Option<&str>) -> Result<()> {
+    if let Some(spec) = spec {
+        leiden_fusion::fault::install(leiden_fusion::fault::FaultPlan::parse(spec)?);
+        eprintln!("fault plan installed: {spec}");
+    }
+    Ok(())
 }
 
 /// Run the full distributed pipeline for one configuration.
@@ -335,6 +367,10 @@ fn run_experiment(
     ccfg.seed = cfg.seed;
     ccfg.exec = cfg.exec;
     ccfg.shard_dir = cfg.shards_out.clone();
+    ccfg.max_retries = cfg.max_retries;
+    ccfg.on_failure = cfg.on_failure;
+    ccfg.deadline_secs = cfg.deadline_secs;
+    ccfg.resume = cfg.resume;
     let report = Coordinator::new(ccfg).run_report(ds, &preport)?;
     Ok((preport, report))
 }
@@ -384,6 +420,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.eval.metric_name,
         report.eval.test_metric
     );
+    if report.skipped_partitions.is_empty() {
+        println!("coverage: 1.000 (all partitions embedded)");
+    } else {
+        println!(
+            "coverage: {:.3} — DEGRADED, skipped partitions {:?} \
+             (on_failure = skip); metrics cover the survivors only",
+            report.coverage, report.skipped_partitions
+        );
+    }
     if let Some(dir) = &cfg.shards_out {
         println!(
             "serving bundle: {} (query it with `repro serve --shards {}`)",
@@ -414,6 +459,8 @@ fn serve_setup(args: &Args) -> Result<(Arc<ShardedEmbeddingStore>, Engine, Serve
     scfg.cache_capacity = args.usize_or("cache", scfg.cache_capacity)?;
     scfg.cache_stripes = args.usize_or("cache-stripes", scfg.cache_stripes)?;
     scfg.warm = scfg.warm || args.has("warm");
+    // shard.read / manifest.load fault points are live under serve too
+    install_fault_plan(args.get("fault-plan"))?;
 
     let store = Arc::new(ShardedEmbeddingStore::open(&scfg.shards_dir)?);
     let engine = Engine::new(
@@ -464,14 +511,23 @@ fn print_engine_stats(engine: &Engine) {
     }
 }
 
-fn print_predictions(preds: &[leiden_fusion::serve::Prediction]) {
+/// Per-row query output: healthy rows render node/class/score,
+/// quarantined or unknown rows show the unavailability reason instead.
+fn print_statuses(statuses: &[NodeStatus]) {
     let mut t = Table::new("Predictions", &["node", "class", "score"]);
-    for p in preds {
-        t.row(vec![
-            p.node.to_string(),
-            p.class.to_string(),
-            format!("{:.4}", p.score),
-        ]);
+    for s in statuses {
+        match s {
+            NodeStatus::Ready(p) => {
+                t.row(vec![
+                    p.node.to_string(),
+                    p.class.to_string(),
+                    format!("{:.4}", p.score),
+                ]);
+            }
+            NodeStatus::Unavailable { node, reason } => {
+                t.row(vec![node.to_string(), "unavailable".into(), reason.clone()]);
+            }
+        }
     }
     t.print();
 }
@@ -489,8 +545,16 @@ fn cmd_query(args: &Args) -> Result<()> {
         store.num_nodes(),
         store.dim()
     );
-    let preds = engine.query(&nodes)?;
-    print_predictions(&preds);
+    let quarantined = store.quarantined_shards();
+    if quarantined > 0 {
+        eprintln!(
+            "DEGRADED bundle: {quarantined}/{} shard(s) quarantined — \
+             rows they own come back unavailable",
+            store.num_shards()
+        );
+    }
+    let statuses = engine.query_status(&nodes)?;
+    print_statuses(&statuses);
     print_engine_stats(&engine);
     Ok(())
 }
@@ -586,6 +650,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         store.warm(scfg.workers.max(1))?;
         println!("warmed {} shard slabs in {}", store.num_shards(), fmt_duration(sw.secs()));
     }
+    let quarantined = store.quarantined_shards();
+    if quarantined > 0 {
+        eprintln!(
+            "DEGRADED bundle: {quarantined}/{} shard(s) quarantined — \
+             rows they own come back unavailable",
+            store.num_shards()
+        );
+    }
     println!("enter node ids (e.g. `0,5,9`), `stats`, or `quit`:");
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
@@ -597,8 +669,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         match line {
             "quit" | "exit" => break,
             "stats" => print_engine_stats(&engine),
-            _ => match parse_node_list(line).and_then(|ns| engine.query(&ns)) {
-                Ok(preds) => print_predictions(&preds),
+            _ => match parse_node_list(line).and_then(|ns| engine.query_status(&ns)) {
+                Ok(statuses) => print_statuses(&statuses),
                 Err(e) => eprintln!("error: {e}"),
             },
         }

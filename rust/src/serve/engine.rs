@@ -66,6 +66,31 @@ impl Default for EngineConfig {
     }
 }
 
+/// Per-row answer from [`Engine::query_status`]: the degraded-mode
+/// counterpart of [`Prediction`]. A bundle with quarantined shards (see
+/// `store.rs`) keeps serving healthy rows as `Ready`; rows whose shard is
+/// quarantined — or whose node id is unknown — come back `Unavailable`
+/// with the underlying reason instead of failing the whole batch.
+#[derive(Clone, Debug)]
+pub enum NodeStatus {
+    Ready(Prediction),
+    Unavailable { node: NodeId, reason: String },
+}
+
+impl NodeStatus {
+    pub fn is_ready(&self) -> bool {
+        matches!(self, NodeStatus::Ready(_))
+    }
+
+    /// The prediction, if this row was answered.
+    pub fn prediction(&self) -> Option<&Prediction> {
+        match self {
+            NodeStatus::Ready(p) => Some(p),
+            NodeStatus::Unavailable { .. } => None,
+        }
+    }
+}
+
 /// Answer for one queried node. `logits` is the raw MLP output row and is
 /// the ground truth; `class`/`score` are conveniences derived from it.
 #[derive(Clone, Debug)]
@@ -301,15 +326,50 @@ impl Engine {
     }
 
     /// Classify a batch of nodes. Blocks until every answer arrives;
-    /// results come back in input order. Unknown node ids fail the whole
-    /// call (partial answers would silently skew downstream aggregation).
+    /// results come back in input order. Unknown node ids — and rows
+    /// whose shard is quarantined — fail the whole call (partial answers
+    /// would silently skew downstream aggregation). Callers that want
+    /// per-row degradation use [`Engine::query_status`] instead.
     pub fn query(&self, nodes: &[NodeId]) -> Result<Vec<Prediction>> {
+        self.run(nodes)?
+            .into_iter()
+            .map(|row| row.map_err(Error::Serve))
+            .collect()
+    }
+
+    /// Classify a batch of nodes, degrading per row instead of per call:
+    /// rows served from healthy shards come back
+    /// [`NodeStatus::Ready`]; rows whose shard is quarantined (or whose
+    /// node id is unknown) come back [`NodeStatus::Unavailable`] with the
+    /// reason. Engine-level failures — shutdown, a poisoned worker pool —
+    /// still fail the call, since no row can be answered.
+    pub fn query_status(&self, nodes: &[NodeId]) -> Result<Vec<NodeStatus>> {
+        Ok(self
+            .run(nodes)?
+            .into_iter()
+            .zip(nodes)
+            .map(|(row, &node)| match row {
+                Ok(p) => NodeStatus::Ready(p),
+                Err(reason) => NodeStatus::Unavailable { node, reason },
+            })
+            .collect())
+    }
+
+    /// Shared query path: cache/single-flight triage, enqueue, wait.
+    /// Returns one slot per input row — `Err` carries that row's failure
+    /// message. The outer `Result` is reserved for engine-level failures
+    /// (shutdown, poisoned pool, lock poison) where no row was answered.
+    fn run(
+        &self,
+        nodes: &[NodeId],
+    ) -> Result<Vec<std::result::Result<Prediction, String>>> {
         if nodes.is_empty() {
             return Ok(Vec::new());
         }
         let _sp = obs::span("serve", "query").with("n", num(nodes.len() as f64));
         self.shared.metrics.requests.add(nodes.len() as u64);
-        let mut out: Vec<Option<Prediction>> = vec![None; nodes.len()];
+        let mut out: Vec<Option<std::result::Result<Prediction, String>>> =
+            vec![None; nodes.len()];
 
         // ---- cache / single-flight triage on the client thread ----------
         // Hits fill `out` directly; joins and leader slots both wait on a
@@ -323,7 +383,7 @@ impl Engine {
             match self.shared.cache.lookup(&v) {
                 Lookup::Hit(p) => {
                     hits += 1;
-                    out[i] = Some(p);
+                    out[i] = Some(Ok(p));
                 }
                 Lookup::Wait(f) => {
                     joins += 1;
@@ -378,14 +438,12 @@ impl Engine {
         }
 
         for (i, f) in waits {
-            match f.wait() {
-                Ok(p) => out[i] = Some(p),
-                Err(msg) => return Err(Error::Serve(msg)),
-            }
+            out[i] = Some(f.wait());
         }
-        out.into_iter()
-            .map(|p| p.ok_or_else(|| Error::Serve("query slot left unanswered".into())))
-            .collect()
+        Ok(out
+            .into_iter()
+            .map(|p| p.unwrap_or_else(|| Err("query slot left unanswered".into())))
+            .collect())
     }
 
     /// Convenience single-node query.

@@ -18,7 +18,11 @@
 //!    directory, builds the index from headers alone, and loads each
 //!    shard once into an immutable `Arc<[f32]>` slab: after first touch
 //!    (or an eager parallel [`ShardedEmbeddingStore::warm`]) row gathers
-//!    are lock-free and allocation-free.
+//!    are lock-free and allocation-free. Shards that fail their `LFS1`
+//!    section checksums — or are truncated or missing — are
+//!    **quarantined**, not fatal: the store keeps serving every healthy
+//!    shard and [`engine::NodeStatus::Unavailable`] reports the holes
+//!    per row (see *Robustness* in `DESIGN.md`).
 //! 4. **Engine** ([`engine`]) — a worker thread pool batches
 //!    node-classification queries (up to `batch_size` per PJRT forward)
 //!    against the trained MLP, behind a striped, single-flight
@@ -38,7 +42,7 @@ pub mod shard;
 pub mod store;
 
 pub use cache::{Flight, Lookup, LruCache, ResultCache, MAX_LRU_CAPACITY};
-pub use engine::{Engine, EngineConfig, EngineStats, Prediction};
+pub use engine::{Engine, EngineConfig, EngineStats, NodeStatus, Prediction};
 pub use index::{IndexLayout, OwnershipIndex};
 pub use shard::{
     read_shard, read_shard_header, shard_file_name, write_shard, ShardEntry, ShardHeader,

@@ -12,18 +12,32 @@
 //! Shard file layout (all little-endian):
 //!
 //! ```text
-//! magic   "LFS1"            4 bytes
-//! part_id u32               owning partition
-//! rows    u64               node count
-//! dim     u32               embedding width
-//! nodes   rows × u32        global node ids, row order
-//! data    rows·dim × f32    embeddings, row-major
-//! trailer u64               == rows (truncation guard)
+//! magic     "LFS1"            4 bytes
+//! part_id   u32               owning partition
+//! rows      u64               node count
+//! dim       u32               embedding width
+//! nodes     rows × u32        global node ids, row order
+//! nodes_crc u64               FNV-1a over part_id‖rows‖dim‖nodes bytes
+//! data      rows·dim × f32    embeddings, row-major
+//! data_crc  u64               FNV-1a over data bytes
+//! trailer   u64               == rows (truncation guard)
 //! ```
+//!
+//! The two per-section checksums close the single-bit-flip hole the
+//! pure length/trailer guards left open: *any* flip anywhere in the
+//! file is rejected — magic flips by the magic check, `rows`/`dim`
+//! flips by the length check, node-id and header flips by `nodes_crc`,
+//! embedding flips by `data_crc`, checksum flips by their own mismatch,
+//! trailer flips by the trailer check. A damaged shard therefore
+//! surfaces as a clean [`Error::Serve`] for the store to quarantine —
+//! never a panic, never silently-wrong embeddings
+//! (`prop_rejects_single_bit_flips` pins this).
 
 use crate::error::{Error, Result};
+use crate::fault;
 use crate::graph::NodeId;
 use crate::util::json::{num, obj, s, Json};
+use crate::util::Fnv64;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -51,6 +65,19 @@ pub struct ShardHeader {
     pub nodes: Vec<NodeId>,
 }
 
+/// FNV-1a over the header fields + node-id bytes (the `nodes_crc`
+/// section coverage).
+fn header_crc(part_id: u32, rows: u64, dim: u32, nodes: &[NodeId]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(&part_id.to_le_bytes());
+    h.write(&rows.to_le_bytes());
+    h.write(&dim.to_le_bytes());
+    for &v in nodes {
+        h.write(&v.to_le_bytes());
+    }
+    h.finish()
+}
+
 /// Write one partition's owned-node embeddings as an `LFS1` shard.
 pub fn write_shard(
     path: &Path,
@@ -59,6 +86,12 @@ pub fn write_shard(
     emb: &[f32],
     dim: usize,
 ) -> Result<()> {
+    let injection = fault::point("shard.write").part(part_id).fire();
+    if let Some(inj) = injection {
+        if !inj.is_corrupt() {
+            return Err(inj.error());
+        }
+    }
     if emb.len() != nodes.len() * dim {
         return Err(Error::Serve(format!(
             "shard block {} != {} nodes × dim {dim}",
@@ -77,10 +110,28 @@ pub fn write_shard(
     for &v in nodes {
         out.write_all(&v.to_le_bytes())?;
     }
+    out.write_all(&header_crc(part_id, nodes.len() as u64, dim as u32, nodes).to_le_bytes())?;
+    let mut data_crc = Fnv64::new();
     for &x in emb {
-        out.write_all(&x.to_le_bytes())?;
+        let bytes = x.to_le_bytes();
+        data_crc.write(&bytes);
+        out.write_all(&bytes)?;
     }
+    out.write_all(&data_crc.finish().to_le_bytes())?;
     out.write_all(&(nodes.len() as u64).to_le_bytes())?; // trailer
+    out.flush()?;
+    drop(out);
+    if let Some(inj) = injection {
+        // `corrupt`: model a torn/bit-rotten write — the shard lands on
+        // disk with one deterministic bit flipped, for the read-side
+        // checksums to catch and the store to quarantine
+        let mut bytes = std::fs::read(path)?;
+        if !bytes.is_empty() {
+            let at = inj.offset(bytes.len());
+            bytes[at] ^= 1 << (inj.salt & 7);
+            std::fs::write(path, &bytes)?;
+        }
+    }
     Ok(())
 }
 
@@ -102,14 +153,27 @@ fn read_header(r: &mut impl Read, path: &Path, file_len: u64) -> Result<ShardHea
     let mut b8 = [0u8; 8];
     r.read_exact(&mut b4)?;
     let part_id = u32::from_le_bytes(b4);
+    if let Some(inj) = fault::point("shard.read").part(part_id).fire() {
+        if !inj.is_corrupt() {
+            return Err(inj.error());
+        }
+        // `corrupt`: poison the declared row count — every downstream
+        // guard (length check) sees a damaged header
+        return Err(Error::Serve(format!(
+            "{}: shard corrupt or truncated (injected read corruption)",
+            path.display()
+        )));
+    }
     r.read_exact(&mut b8)?;
     let rows64 = u64::from_le_bytes(b8);
     r.read_exact(&mut b4)?;
     let dim64 = u32::from_le_bytes(b4) as u64;
+    // header (magic+part+rows+dim) + nodes + nodes_crc + data + data_crc
+    // + trailer, overflow-safe
     let expect = rows64
         .checked_mul(4)
         .and_then(|ids| rows64.checked_mul(dim64)?.checked_mul(4)?.checked_add(ids))
-        .and_then(|body| body.checked_add((4 + 4 + 8 + 4) + 8));
+        .and_then(|body| body.checked_add((4 + 4 + 8 + 4) + 8 + 8 + 8));
     match expect {
         Some(e) if e == file_len => {}
         _ => {
@@ -126,6 +190,13 @@ fn read_header(r: &mut impl Read, path: &Path, file_len: u64) -> Result<ShardHea
     for v in nodes.iter_mut() {
         r.read_exact(&mut b4)?;
         *v = NodeId::from_le_bytes(b4);
+    }
+    r.read_exact(&mut b8)?;
+    if u64::from_le_bytes(b8) != header_crc(part_id, rows64, dim64 as u32, &nodes) {
+        return Err(Error::Serve(format!(
+            "{}: shard header checksum mismatch (corrupt node ids or header)",
+            path.display()
+        )));
     }
     Ok(ShardHeader { part_id, rows, dim, nodes })
 }
@@ -148,11 +219,20 @@ pub fn read_shard(path: &Path) -> Result<(ShardHeader, Vec<f32>)> {
     let header = read_header(&mut r, path, file_len)?;
     let mut b4 = [0u8; 4];
     let mut data = vec![0f32; header.rows * header.dim];
+    let mut crc = Fnv64::new();
     for x in data.iter_mut() {
         r.read_exact(&mut b4)?;
+        crc.write(&b4);
         *x = f32::from_le_bytes(b4);
     }
     let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    if u64::from_le_bytes(b8) != crc.finish() {
+        return Err(Error::Serve(format!(
+            "{}: shard data checksum mismatch (corrupt embedding bytes)",
+            path.display()
+        )));
+    }
     r.read_exact(&mut b8)?;
     if u64::from_le_bytes(b8) as usize != header.rows {
         return Err(Error::Serve(format!("{}: shard truncated", path.display())));
@@ -176,7 +256,9 @@ pub struct ShardManifest {
     pub dataset: String,
     /// `multiclass` | `multilabel` — selects the pred artifact family.
     pub task: String,
-    /// Total owned nodes across all shards (== dataset nodes).
+    /// Total owned nodes across all shards. Equals the dataset's node
+    /// count only for a full-coverage run — an `on_failure = skip` run
+    /// writes a bundle covering the surviving partitions only.
     pub num_nodes: usize,
     /// Embedding width; must match the MLP artifact's `f`.
     pub dim: usize,
@@ -221,12 +303,20 @@ impl ShardManifest {
 
     pub fn load(dir: &Path) -> Result<Self> {
         let path = Self::path_in(dir);
-        let text = std::fs::read_to_string(&path).map_err(|e| {
+        let mut text = std::fs::read_to_string(&path).map_err(|e| {
             Error::Serve(format!(
                 "cannot read {} (run `repro train --shards <dir>` first?): {e}",
                 path.display()
             ))
         })?;
+        if let Some(inj) = fault::point("manifest.load").fire() {
+            if !inj.is_corrupt() {
+                return Err(inj.error());
+            }
+            // `corrupt`: garble the manifest text mid-stream — the JSON
+            // parse (or a missing-field check) rejects it downstream
+            text.truncate(inj.offset(text.len()));
+        }
         let root = Json::parse(&text)?;
         let gets = |k: &str| -> Result<String> {
             root.get(k)
@@ -420,6 +510,85 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Property: flipping any single bit anywhere in a shard file is
+    /// rejected by the full read as a clean `Error::Serve` — never a
+    /// panic, never silently-wrong embeddings. The lazy header read may
+    /// legitimately accept flips past the header section, but must
+    /// never panic and never return altered ids. Pins the per-section
+    /// checksum scheme.
+    #[test]
+    fn prop_rejects_single_bit_flips() {
+        prop::check(
+            "lfs1-bitflip",
+            80,
+            0xB17F,
+            |rng: &mut Rng| {
+                let rows = 1 + rng.index(12);
+                let dim = 1 + rng.index(6);
+                let nodes: Vec<NodeId> = (0..rows).map(|v| v as NodeId * 3).collect();
+                let emb: Vec<f32> =
+                    (0..rows * dim).map(|i| i as f32 * 0.25 - 1.0).collect();
+                let where_ = rng.f64();
+                (dim, nodes, emb, where_)
+            },
+            |(dim, nodes, emb, where_)| {
+                let path = tmp(&format!("flip_{}_{}.lfs", dim, nodes.len()));
+                write_shard(&path, 5, nodes, emb, *dim).map_err(|e| format!("write: {e}"))?;
+                let mut bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+                let bit = ((bytes.len() * 8 - 1) as f64 * where_) as usize;
+                bytes[bit / 8] ^= 1 << (bit % 8);
+                std::fs::write(&path, &bytes).map_err(|e| e.to_string())?;
+                let eager = read_shard(&path);
+                let lazy = read_shard_header(&path);
+                std::fs::remove_file(&path).ok();
+                match eager {
+                    Ok(_) => return Err(format!("read_shard accepted bit flip {bit}")),
+                    Err(Error::Serve(_)) => {}
+                    Err(other) => {
+                        return Err(format!("bit {bit}: expected Error::Serve, got {other}"))
+                    }
+                }
+                if let Ok(h) = lazy {
+                    // flips past the header region are invisible to the
+                    // lazy path — but what it returns must be undamaged
+                    if h.part_id != 5 || h.dim != *dim || &h.nodes != nodes {
+                        return Err(format!("header read returned altered ids (bit {bit})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Pin the on-disk checksum layout: both section checksums are
+    /// FNV-1a 64 at fixed offsets, so a foreign writer can interoperate
+    /// and a format drift fails loudly here.
+    #[test]
+    fn checksum_layout_is_pinned() {
+        let path = tmp("pinned.lfs");
+        let nodes: Vec<NodeId> = vec![7, 9];
+        let emb = vec![1.5f32, -2.5, 0.0, 42.0];
+        write_shard(&path, 3, &nodes, &emb, 2).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // layout: 20-byte fixed header, 8 node bytes, nodes_crc,
+        // 16 data bytes, data_crc, trailer
+        assert_eq!(bytes.len(), 20 + 8 + 8 + 16 + 8 + 8);
+        let mut h = crate::util::Fnv64::new();
+        h.write(&3u32.to_le_bytes());
+        h.write(&2u64.to_le_bytes());
+        h.write(&2u32.to_le_bytes());
+        h.write(&7u32.to_le_bytes());
+        h.write(&9u32.to_le_bytes());
+        assert_eq!(&bytes[28..36], &h.finish().to_le_bytes());
+        let mut d = crate::util::Fnv64::new();
+        for x in &emb {
+            d.write(&x.to_le_bytes());
+        }
+        assert_eq!(&bytes[52..60], &d.finish().to_le_bytes());
+        assert_eq!(&bytes[60..68], &2u64.to_le_bytes());
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

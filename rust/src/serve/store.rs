@@ -24,8 +24,10 @@ use super::index::OwnershipIndex;
 use super::shard::{read_shard, read_shard_header, ShardManifest};
 use crate::error::{Error, Result};
 use crate::graph::NodeId;
+use crate::obs;
 use crate::util::parallel::map_chunks;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, OnceLock};
 
 struct Shard {
@@ -33,6 +35,20 @@ struct Shard {
     rows: usize,
     /// Embedding rows, populated on first access and immutable after.
     slab: OnceLock<Arc<[f32]>>,
+    /// Set when the shard is corrupt/truncated/missing — at open time
+    /// (header rejected) or at first slab load (data checksum). A
+    /// quarantined shard's nodes answer `Unavailable`, the rest of the
+    /// bundle keeps serving, and no disk retry is attempted.
+    quarantined: AtomicBool,
+}
+
+impl Shard {
+    fn quarantine(&self, why: &str) {
+        if !self.quarantined.swap(true, Ordering::Relaxed) {
+            obs::registry().counter("serve.shards_quarantined").inc();
+            log::warn!("shard {} quarantined: {why}", self.path.display());
+        }
+    }
 }
 
 /// Lazily-loaded, shard-per-partition embedding store.
@@ -45,45 +61,68 @@ pub struct ShardedEmbeddingStore {
 
 impl ShardedEmbeddingStore {
     /// Open a shard directory: parse `shards.json`, read every shard
-    /// header (cheap — ids only, with a length-based truncation check),
-    /// and build the ownership index. Embedding rows stay on disk.
+    /// header (cheap — ids only, with length + checksum truncation/
+    /// corruption checks), and build the ownership index. Embedding rows
+    /// stay on disk.
+    ///
+    /// Graceful degradation: a shard whose header is corrupt, truncated,
+    /// missing, or inconsistent with the manifest is **quarantined**, not
+    /// fatal — its nodes simply aren't in the index (the engine answers
+    /// `Unavailable` for them) while every healthy shard keeps serving.
+    /// Only bundle-level problems (unreadable manifest, overlapping
+    /// healthy shards) abort the open.
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest = ShardManifest::load(dir)?;
         let mut shards = Vec::with_capacity(manifest.shards.len());
         let mut headers = Vec::with_capacity(manifest.shards.len());
         for entry in &manifest.shards {
             let path = dir.join(&entry.file);
-            let header = read_shard_header(&path)?;
-            if header.part_id != entry.part_id {
-                return Err(Error::Serve(format!(
-                    "{}: shard claims partition {}, manifest says {}",
-                    path.display(),
-                    header.part_id,
-                    entry.part_id
-                )));
+            let verdict = read_shard_header(&path).and_then(|header| {
+                if header.part_id != entry.part_id {
+                    Err(Error::Serve(format!(
+                        "shard claims partition {}, manifest says {}",
+                        header.part_id, entry.part_id
+                    )))
+                } else if header.rows != entry.rows {
+                    Err(Error::Serve(format!(
+                        "shard has {} rows, manifest says {}",
+                        header.rows, entry.rows
+                    )))
+                } else if header.dim != manifest.dim {
+                    Err(Error::Serve(format!(
+                        "shard dim {} != manifest dim {}",
+                        header.dim, manifest.dim
+                    )))
+                } else {
+                    Ok(header)
+                }
+            });
+            let shard = Shard {
+                path,
+                rows: entry.rows,
+                slab: OnceLock::new(),
+                quarantined: AtomicBool::new(false),
+            };
+            match verdict {
+                Ok(header) => headers.push(header.nodes),
+                Err(e) => {
+                    shard.quarantine(&e.to_string());
+                    // keep shard positions aligned with the manifest:
+                    // an empty view owns no nodes
+                    headers.push(Vec::new());
+                }
             }
-            if header.rows != entry.rows {
-                return Err(Error::Serve(format!(
-                    "{}: shard has {} rows, manifest says {}",
-                    path.display(),
-                    header.rows,
-                    entry.rows
-                )));
-            }
-            if header.dim != manifest.dim {
-                return Err(Error::Serve(format!(
-                    "{}: shard dim {} != manifest dim {}",
-                    path.display(),
-                    header.dim,
-                    manifest.dim
-                )));
-            }
-            shards.push(Shard { path, rows: header.rows, slab: OnceLock::new() });
-            headers.push(header.nodes);
+            shards.push(shard);
         }
+        let quarantined = shards
+            .iter()
+            .filter(|s| s.quarantined.load(Ordering::Relaxed))
+            .count();
         let views: Vec<&[NodeId]> = headers.iter().map(|n| n.as_slice()).collect();
         let index = OwnershipIndex::build(&views)?;
-        if index.len() != manifest.num_nodes {
+        // with quarantined shards the cover is intentionally partial;
+        // the exact-cover check only applies to a fully healthy bundle
+        if quarantined == 0 && index.len() != manifest.num_nodes {
             return Err(Error::Serve(format!(
                 "shards cover {} nodes, manifest says {}",
                 index.len(),
@@ -124,6 +163,22 @@ impl ShardedEmbeddingStore {
         self.shards.iter().filter(|s| s.slab.get().is_some()).count()
     }
 
+    /// Shards quarantined so far (corrupt/truncated/missing at open or
+    /// at first data load).
+    pub fn quarantined_shards(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|s| s.quarantined.load(Ordering::Relaxed))
+            .count()
+    }
+
+    /// Whether a shard (by position in the manifest) is quarantined.
+    pub fn is_quarantined(&self, idx: usize) -> bool {
+        self.shards
+            .get(idx)
+            .is_some_and(|s| s.quarantined.load(Ordering::Relaxed))
+    }
+
     /// Resolve a node to `(shard index, row)` without touching data.
     #[inline]
     pub fn locate(&self, v: NodeId) -> Option<(u32, u32)> {
@@ -142,10 +197,28 @@ impl ShardedEmbeddingStore {
         if let Some(slab) = shard.slab.get() {
             return Ok(slab);
         }
-        let (header, data) = read_shard(&shard.path)?;
+        if shard.quarantined.load(Ordering::Relaxed) {
+            return Err(Error::Serve(format!(
+                "{}: shard quarantined",
+                shard.path.display()
+            )));
+        }
+        let (header, data) = match read_shard(&shard.path) {
+            Ok(ok) => ok,
+            Err(e) => {
+                // data-section corruption first seen here (open only
+                // verified the header): quarantine, no disk retry
+                shard.quarantine(&e.to_string());
+                return Err(Error::Serve(format!(
+                    "{}: shard quarantined: {e}",
+                    shard.path.display()
+                )));
+            }
+        };
         // open() validated the header; re-check defensively in case the
         // file changed underneath a running server
         if header.rows != shard.rows || header.dim != self.manifest.dim {
+            shard.quarantine("shard changed on disk while serving");
             return Err(Error::Serve(format!(
                 "{}: shard changed on disk while serving",
                 shard.path.display()
@@ -195,12 +268,20 @@ impl ShardedEmbeddingStore {
         Ok(out)
     }
 
-    /// Eagerly load every shard slab, `threads`-wide (1 = sequential).
-    /// Serving after `warm` never touches disk or any lock.
+    /// Eagerly load every healthy shard slab, `threads`-wide
+    /// (1 = sequential). Serving after `warm` never touches disk or any
+    /// lock. A shard that fails to load is quarantined (and counted in
+    /// `serve.shards_quarantined`), not fatal — warming a degraded
+    /// bundle warms what survives.
     pub fn warm(&self, threads: usize) -> Result<()> {
         map_chunks(threads, self.shards.len(), 1, |_, range| {
             for i in range {
-                self.slab(i)?;
+                if self.is_quarantined(i) {
+                    continue;
+                }
+                // a load failure quarantines the shard inside slab();
+                // the rest of the bundle still warms
+                let _ = self.slab(i);
             }
             Ok(())
         })
@@ -318,21 +399,81 @@ mod tests {
     }
 
     #[test]
-    fn rejects_row_count_mismatch_with_manifest() {
+    fn quarantines_row_count_mismatch_with_manifest() {
         let dir = bundle("rows", &[(0, vec![0, 1, 2], 2)]);
-        // rewrite the shard with fewer rows than the manifest claims
+        // rewrite the shard with fewer rows than the manifest claims:
+        // inconsistent with the bundle → quarantined, open survives
         write_shard(&dir.join(shard_file_name(0)), 0, &[0, 1], &[0.0; 4], 2).unwrap();
-        assert!(ShardedEmbeddingStore::open(&dir).is_err());
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.quarantined_shards(), 1);
+        assert!(store.embedding(0).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
-    fn rejects_truncated_shard_at_open() {
-        let dir = bundle("trunc", &[(0, vec![0, 1, 2], 4)]);
+    fn quarantines_truncated_shard_at_open_and_serves_the_rest() {
+        let dir = bundle("trunc", &[(0, vec![0, 1, 2], 4), (1, vec![3, 4], 4)]);
         let path = dir.join(shard_file_name(0));
         let full = std::fs::read(&path).unwrap();
         std::fs::write(&path, &full[..full.len() - 5]).unwrap();
-        assert!(ShardedEmbeddingStore::open(&dir).is_err());
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.quarantined_shards(), 1);
+        assert!(store.is_quarantined(0));
+        assert!(!store.is_quarantined(1));
+        // dead shard's nodes are gone from the index; healthy rows serve
+        assert!(store.locate(1).is_none());
+        let err = store.embedding(1).unwrap_err();
+        assert!(matches!(err, Error::Serve(_)), "{err}");
+        assert_eq!(store.embedding(4).unwrap(), vec![40.0, 41.0, 42.0, 43.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn quarantines_missing_shard_file() {
+        let dir = bundle("missing", &[(0, vec![0], 2), (1, vec![1], 2)]);
+        std::fs::remove_file(dir.join(shard_file_name(0))).unwrap();
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.quarantined_shards(), 1);
+        assert_eq!(store.embedding(1).unwrap(), vec![10.0, 11.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn quarantines_data_corruption_at_first_load() {
+        let dir = bundle("databits", &[(0, vec![0, 1], 2), (1, vec![2], 2)]);
+        let path = dir.join(shard_file_name(0));
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit inside the data section (after the 20-byte fixed
+        // header + 8 node bytes + 8 crc bytes)
+        let off = 20 + 8 + 8 + 3;
+        bytes[off] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        // header is intact → open succeeds with the shard healthy
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.quarantined_shards(), 0);
+        assert_eq!(store.locate(0), Some((0, 0)));
+        // first data touch trips the data checksum → quarantine
+        assert!(store.embedding(0).is_err());
+        assert_eq!(store.quarantined_shards(), 1);
+        // no disk retry: still an error, still exactly one quarantine
+        assert!(store.embedding(1).is_err());
+        assert_eq!(store.quarantined_shards(), 1);
+        // the healthy shard keeps serving
+        assert_eq!(store.embedding(2).unwrap(), vec![20.0, 21.0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn warm_tolerates_quarantined_shards() {
+        let dir = bundle("warmq", &[(0, vec![0], 3), (1, vec![1], 3)]);
+        let path = dir.join(shard_file_name(1));
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 1]).unwrap();
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        store.warm(2).unwrap();
+        assert_eq!(store.loaded_shards(), 1);
+        assert_eq!(store.quarantined_shards(), 1);
+        assert_eq!(store.embedding(0).unwrap(), vec![0.0, 1.0, 2.0]);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -27,6 +27,43 @@ impl Stopwatch {
     }
 }
 
+/// Streaming FNV-1a 64-bit hash — the crate's integrity/fingerprint
+/// hash (LFS1 shard section checksums, run-journal fingerprints). Not
+/// cryptographic: it detects corruption and config drift, not
+/// adversaries, and it is byte-order-stable because every caller feeds
+/// it little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
 /// Human-readable duration, e.g. `1.23s` / `45.6ms` / `789µs`.
 pub fn fmt_duration(secs: f64) -> String {
     if secs >= 1.0 {
@@ -86,5 +123,32 @@ mod tests {
         let sw = Stopwatch::start();
         assert!(sw.secs() >= 0.0);
         assert!(sw.millis() >= sw.secs());
+    }
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    use super::Fnv64;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // FNV-1a 64 reference values
+        assert_eq!(Fnv64::new().finish(), 0xcbf29ce484222325);
+        let mut h = Fnv64::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+        let mut h = Fnv64::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut a = Fnv64::new();
+        a.write(b"hello ");
+        a.write(b"world");
+        let mut b = Fnv64::new();
+        b.write(b"hello world");
+        assert_eq!(a.finish(), b.finish());
     }
 }

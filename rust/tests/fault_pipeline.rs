@@ -1,0 +1,316 @@
+//! Fault-injection integration tests over the *real* fault points.
+//!
+//! These live in their own test binary on purpose: cargo runs test
+//! binaries one process at a time, so an armed [`FaultPlan`] here can
+//! never leak into the library's unit tests (which only ever arm
+//! synthetic `test.*` points). Within this binary, every test that
+//! touches a registered fault point holds a [`fault::install_scoped`]
+//! guard — or [`fault::exclusive`] for a fault-free baseline — for its
+//! whole fault-sensitive span, so cargo's in-process test parallelism
+//! serializes on the plan instead of cross-firing.
+//!
+//! The headline property is **chaos determinism**: a recoverable
+//! injected fault must leave the final report *bit-identical* to the
+//! fault-free run — retries replay the same partition seed, so the only
+//! trace of the fault is the attempt counter and the metrics.
+
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig, FailurePolicy};
+use leiden_fusion::data::karate_dataset;
+use leiden_fusion::fault::{self, FaultPlan};
+use leiden_fusion::partition::leiden_fusion;
+use leiden_fusion::serve::{read_shard, shard_file_name, write_shard, ShardManifest};
+use leiden_fusion::testing::artifacts_if_built;
+use leiden_fusion::{obs, Error};
+use std::path::PathBuf;
+
+/// Coordinator config for the karate end-to-end runs, `None` when the
+/// PJRT artifact bundle is not built (the test self-skips).
+fn cfg_if_built() -> Option<CoordinatorConfig> {
+    let mut cfg = CoordinatorConfig::new(artifacts_if_built()?);
+    cfg.epochs = 10;
+    cfg.mlp_epochs = 30;
+    cfg.machines = 2;
+    Some(cfg)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lf_fault_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// One injected transient failure at `worker.train` → the retry trains
+/// the same seed and the whole report is bit-identical to a fault-free
+/// run. This is the acceptance property for the entire retry path.
+#[test]
+fn chaos_fail_at_worker_train_is_bit_identical_to_fault_free() {
+    let Some(cfg) = cfg_if_built() else { return };
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+
+    let base = {
+        let _quiet = fault::exclusive();
+        Coordinator::new(cfg.clone()).run(&ds, &p).unwrap()
+    };
+
+    let injected_before = obs::registry().counter("fault.injected").get();
+    let faulted = {
+        let _g = fault::install_scoped(
+            FaultPlan::parse("worker.train:part=0,attempt=0:fail").unwrap(),
+        );
+        Coordinator::new(cfg).run(&ds, &p).unwrap()
+    };
+    assert!(
+        obs::registry().counter("fault.injected").get() > injected_before,
+        "the plan must actually have fired"
+    );
+
+    // metrics: bit-identical, not approximately equal
+    assert_eq!(base.eval.test_metric.to_bits(), faulted.eval.test_metric.to_bits());
+    assert_eq!(base.eval.val_metric.to_bits(), faulted.eval.val_metric.to_bits());
+    assert_eq!(base.eval.mlp_losses.len(), faulted.eval.mlp_losses.len());
+    for (a, b) in base.eval.mlp_losses.iter().zip(&faulted.eval.mlp_losses) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // per-partition training curves too (stats are sorted by part_id)
+    assert_eq!(base.per_partition.len(), faulted.per_partition.len());
+    for (a, b) in base.per_partition.iter().zip(&faulted.per_partition) {
+        assert_eq!(a.part_id, b.part_id);
+        assert_eq!(a.num_nodes, b.num_nodes);
+        assert_eq!(a.losses.len(), b.losses.len());
+        for (x, y) in a.losses.iter().zip(&b.losses) {
+            assert_eq!(x.to_bits(), y.to_bits(), "partition {} diverged", a.part_id);
+        }
+    }
+
+    // the only visible difference: partition 0 took two attempts
+    let tries = |r: &leiden_fusion::coordinator::TrainReport, part: u32| {
+        r.per_partition.iter().find(|s| s.part_id == part).unwrap().attempts
+    };
+    assert_eq!(tries(&base, 0), 1);
+    assert_eq!(tries(&faulted, 0), 2, "one fail + one successful retry");
+    assert_eq!(tries(&faulted, 1), 1);
+    assert_eq!(faulted.coverage, 1.0);
+    assert!(faulted.skipped_partitions.is_empty());
+}
+
+/// A partition that fails on *every* attempt under `on_failure = skip`
+/// degrades the run instead of killing it: the report carries the hole,
+/// coverage drops below 1.0, and evaluation still runs over survivors.
+#[test]
+fn unrecoverable_fault_with_skip_policy_degrades_gracefully() {
+    let Some(mut cfg) = cfg_if_built() else { return };
+    cfg.on_failure = FailurePolicy::Skip;
+    cfg.max_retries = 1;
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+
+    let _g = fault::install_scoped(FaultPlan::parse("worker.train:part=0:fail").unwrap());
+    let report = Coordinator::new(cfg).run(&ds, &p).unwrap();
+
+    assert_eq!(report.skipped_partitions, vec![0]);
+    assert!(report.coverage < 1.0, "coverage {} must show the hole", report.coverage);
+    assert!(report.coverage > 0.0);
+    assert_eq!(report.per_partition.len(), 1, "only the survivor has stats");
+    assert_eq!(report.per_partition[0].part_id, 1);
+    assert!(report.eval.test_metric.is_finite(), "evaluation ran over survivors");
+}
+
+/// The same unrecoverable fault under the default `abort` policy fails
+/// the whole run with a typed error naming the partition.
+#[test]
+fn unrecoverable_fault_with_abort_policy_fails_the_run() {
+    let Some(cfg) = cfg_if_built() else { return };
+    assert_eq!(cfg.on_failure, FailurePolicy::Abort, "abort is the default");
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+
+    let _g = fault::install_scoped(FaultPlan::parse("worker.train:part=0:fail").unwrap());
+    let err = Coordinator::new(cfg).run(&ds, &p).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    assert!(err.to_string().contains("partition 0"), "{err}");
+}
+
+/// `delay` injections are transparent: the run slows down but the
+/// report is bit-identical — no retry, no attempt bump.
+#[test]
+fn delay_injection_is_invisible_in_the_report() {
+    let Some(cfg) = cfg_if_built() else { return };
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+
+    let base = {
+        let _quiet = fault::exclusive();
+        Coordinator::new(cfg.clone()).run(&ds, &p).unwrap()
+    };
+    let delayed = {
+        let _g = fault::install_scoped(FaultPlan::parse("worker.train:delay(5)").unwrap());
+        Coordinator::new(cfg).run(&ds, &p).unwrap()
+    };
+    assert_eq!(base.eval.test_metric.to_bits(), delayed.eval.test_metric.to_bits());
+    for (a, b) in base.per_partition.iter().zip(&delayed.per_partition) {
+        assert_eq!(a.attempts, b.attempts, "delay must not consume retries");
+    }
+}
+
+/// A worker whose runtime init fails is retired; with every worker
+/// retired the run aborts with a clear error instead of hanging. Fires
+/// before PJRT comes up, so this needs no artifacts.
+#[test]
+fn runtime_init_fault_retires_all_workers_and_aborts() {
+    let mut cfg = CoordinatorConfig::new(PathBuf::from("/nonexistent_artifacts"));
+    cfg.machines = 2;
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+
+    let _g = fault::install_scoped(FaultPlan::parse("runtime.init:fail").unwrap());
+    let err = Coordinator::new(cfg).run(&ds, &p).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    assert!(err.to_string().contains("all workers retired"), "{err}");
+}
+
+/// `shard.write:corrupt` models a torn write: the file lands on disk
+/// with one flipped bit, and the LFS1 checksums refuse it on read.
+#[test]
+fn corrupt_shard_write_is_caught_by_read_checksums() {
+    let dir = tmp_dir("wcorrupt");
+    let path = dir.join(shard_file_name(3));
+    let nodes: Vec<u32> = (0..8).collect();
+    let emb: Vec<f32> = (0..8 * 4).map(|i| i as f32 * 0.5).collect();
+
+    {
+        let _g = fault::install_scoped(FaultPlan::parse("shard.write:corrupt").unwrap());
+        write_shard(&path, 3, &nodes, &emb, 4).unwrap();
+    }
+    let err = read_shard(&path).unwrap_err();
+    assert!(matches!(err, Error::Serve(_)), "{err}");
+
+    // the same write with no plan armed round-trips cleanly
+    let _quiet = fault::exclusive();
+    write_shard(&path, 3, &nodes, &emb, 4).unwrap();
+    let (header, data) = read_shard(&path).unwrap();
+    assert_eq!(header.rows, 8);
+    assert_eq!(data.len(), emb.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `shard.write:fail` surfaces as a transient error — the coordinator's
+/// durable-write retry loop depends on that classification.
+#[test]
+fn failed_shard_write_is_transient() {
+    let dir = tmp_dir("wfail");
+    let path = dir.join(shard_file_name(0));
+    let _g = fault::install_scoped(FaultPlan::parse("shard.write:times=1:fail").unwrap());
+    let err = write_shard(&path, 0, &[1, 2], &[0.0; 8], 4).unwrap_err();
+    assert!(err.is_transient(), "{err}");
+    assert!(!path.exists(), "a failed write must not leave a file behind");
+    // the retry (times=1 exhausted) succeeds
+    write_shard(&path, 0, &[1, 2], &[0.0; 8], 4).unwrap();
+    assert!(read_shard(&path).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `shard.read` injections surface as typed serve errors — fail and
+/// corrupt both — never a panic, never silently wrong data.
+#[test]
+fn shard_read_injections_surface_typed_errors() {
+    let dir = tmp_dir("rfault");
+    let path = dir.join(shard_file_name(7));
+    {
+        let _quiet = fault::exclusive();
+        write_shard(&path, 7, &[4, 5, 6], &[1.0; 6], 2).unwrap();
+    }
+    {
+        let _g = fault::install_scoped(FaultPlan::parse("shard.read:times=1:fail").unwrap());
+        let err = read_shard(&path).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        // plan exhausted: the same bytes read fine afterwards
+        assert!(read_shard(&path).is_ok());
+    }
+    {
+        let _g = fault::install_scoped(FaultPlan::parse("shard.read:corrupt").unwrap());
+        let err = read_shard(&path).unwrap_err();
+        assert!(matches!(err, Error::Serve(_)), "{err}");
+        assert!(err.to_string().contains("corrupt"), "{err}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `manifest.load` injections: `fail` yields the injected transient
+/// error, `corrupt` garbles the JSON mid-stream and the parser rejects
+/// it with a typed error.
+#[test]
+fn manifest_load_injections_never_panic() {
+    let dir = tmp_dir("manifest");
+    let manifest = ShardManifest {
+        version: 1,
+        dataset: "karate".into(),
+        task: "multiclass".into(),
+        num_nodes: 34,
+        dim: 8,
+        classes: 4,
+        classifier_file: "classifier.ckpt".into(),
+        shards: vec![],
+    };
+    {
+        let _quiet = fault::exclusive();
+        manifest.save(&dir).unwrap();
+        assert_eq!(ShardManifest::load(&dir).unwrap(), manifest);
+    }
+    {
+        let _g = fault::install_scoped(FaultPlan::parse("manifest.load:times=1:fail").unwrap());
+        let err = ShardManifest::load(&dir).unwrap_err();
+        assert!(err.is_transient(), "{err}");
+        assert_eq!(ShardManifest::load(&dir).unwrap(), manifest, "plan exhausted");
+    }
+    {
+        let _g = fault::install_scoped(FaultPlan::parse("manifest.load:corrupt").unwrap());
+        let err = ShardManifest::load(&dir).unwrap_err();
+        // truncated JSON: either a parse error or a missing-field error,
+        // but always a typed Err — the property is "no panic, no junk"
+        assert!(!err.to_string().is_empty());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-recovery drill: full run → damage one shard on disk → resume.
+/// The damaged partition retrains (journal replay re-verifies every
+/// byte), the intact one replays, and the final metrics are
+/// bit-identical to the original run.
+#[test]
+fn resume_after_shard_damage_retrains_only_the_damaged_partition() {
+    let Some(mut cfg) = cfg_if_built() else { return };
+    let dir = tmp_dir("resume");
+    cfg.shard_dir = Some(dir.clone());
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+
+    let _quiet = fault::exclusive();
+    let first = Coordinator::new(cfg.clone()).run(&ds, &p).unwrap();
+
+    // flip one mid-file bit in partition 0's shard — real bit rot, not
+    // an injected read fault
+    let shard0 = dir.join(shard_file_name(0));
+    let mut bytes = std::fs::read(&shard0).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&shard0, &bytes).unwrap();
+
+    cfg.resume = true;
+    let resumed = Coordinator::new(cfg).run(&ds, &p).unwrap();
+    let by_part = |r: &leiden_fusion::coordinator::TrainReport, part: u32| {
+        r.per_partition.iter().find(|s| s.part_id == part).cloned().unwrap()
+    };
+    assert!(
+        !by_part(&resumed, 0).losses.is_empty(),
+        "damaged partition must retrain"
+    );
+    assert!(
+        by_part(&resumed, 1).losses.is_empty(),
+        "intact partition must replay from the journal"
+    );
+    assert_eq!(first.eval.test_metric.to_bits(), resumed.eval.test_metric.to_bits());
+    assert_eq!(resumed.coverage, 1.0);
+    std::fs::remove_dir_all(&dir).ok();
+}

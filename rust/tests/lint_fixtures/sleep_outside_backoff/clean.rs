@@ -1,0 +1,17 @@
+//! Clean fixture: waiting happens on a condvar with a bounded timeout,
+//! never a raw sleep.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub fn wait_for_work(lock: &Mutex<bool>, cv: &Condvar) {
+    let mut ready = lock
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
+    while !*ready {
+        let (guard, _) = cv
+            .wait_timeout(ready, Duration::from_millis(50))
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        ready = guard;
+    }
+}

@@ -1,0 +1,7 @@
+//! Suppressed fixture: a deliberate one-shot settle delay with a
+//! reviewed justification.
+
+pub fn drain_grace() {
+    // lint: allow(sleep_outside_backoff) — one-shot shutdown grace period, not a retry loop
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}

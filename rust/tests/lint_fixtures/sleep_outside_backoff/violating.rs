@@ -1,0 +1,8 @@
+//! Violating fixture: a hand-rolled retry delay — unmetered, unseeded,
+//! invisible to `coordinator.backoff_secs`
+//! (linted under a non-`fault/` virtual path).
+
+pub fn retry_pause(attempt: u32) {
+    let ms = 10 * attempt as u64;
+    std::thread::sleep(std::time::Duration::from_millis(ms));
+}

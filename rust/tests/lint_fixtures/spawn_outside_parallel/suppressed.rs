@@ -4,6 +4,6 @@
 pub fn watchdog() -> std::thread::JoinHandle<()> {
     // lint: allow(spawn_outside_parallel) — long-lived watchdog, not a fork-join kernel
     std::thread::spawn(|| loop {
-        std::thread::sleep(std::time::Duration::from_secs(60));
+        std::thread::park();
     })
 }

@@ -1,0 +1,9 @@
+//! Clean fixture: every fault point named here is declared in the
+//! registry fixture.
+
+pub fn guarded() -> Option<u32> {
+    if fault::point("worker.train").fire().is_some() {
+        return None;
+    }
+    Some(1)
+}

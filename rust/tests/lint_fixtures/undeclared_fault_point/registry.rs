@@ -1,0 +1,8 @@
+//! Fixture registry: a `FAULT_POINTS` const in the style of
+//! `fault/mod.rs`, linted under that virtual path.
+
+pub const FAULT_POINTS: &[&str] = &[
+    "runtime.init",
+    "worker.train",
+    "shard.read",
+];

@@ -1,0 +1,7 @@
+//! Suppressed fixture: an experimental point not yet promoted into the
+//! registry, with a reviewed justification.
+
+pub fn probe() -> bool {
+    // lint: allow(undeclared_fault_point) — staging-only probe point, promoted on graduation
+    fault::point("staging.probe").fire().is_none()
+}

@@ -1,0 +1,9 @@
+//! Violating fixture: a typo'd fault-point name the registry does not
+//! declare — injectable by accident, invisible to plan validation.
+
+pub fn guarded() -> Option<u32> {
+    if fault::point("worker.tarin").fire().is_some() {
+        return None;
+    }
+    Some(1)
+}

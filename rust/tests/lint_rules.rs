@@ -146,6 +146,57 @@ fn undeclared_switch_triple() {
 }
 
 #[test]
+fn sleep_outside_backoff_triple() {
+    check_triple("sleep_outside_backoff", "runtime/retry.rs");
+}
+
+#[test]
+fn sleep_is_legal_inside_the_fault_module() {
+    let violating = fixture("sleep_outside_backoff/violating.rs");
+    let report = lint_sources(&[("fault/backoff.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "sleep_outside_backoff").is_empty());
+}
+
+#[test]
+fn undeclared_fault_point_triple() {
+    let registry = fixture("undeclared_fault_point/registry.rs");
+
+    let violating = fixture("undeclared_fault_point/violating.rs");
+    let report = lint_sources(&[
+        ("fault/mod.rs", registry.as_str()),
+        ("serve/shard.rs", violating.as_str()),
+    ]);
+    let hits = rule_hits(&report, "undeclared_fault_point");
+    assert_eq!(hits.len(), 1, "got {:?}", report.diagnostics);
+    assert!(hits[0].is_unannotated());
+    assert!(hits[0].message.contains("worker.tarin"));
+
+    let clean = fixture("undeclared_fault_point/clean.rs");
+    let report = lint_sources(&[
+        ("fault/mod.rs", registry.as_str()),
+        ("serve/shard.rs", clean.as_str()),
+    ]);
+    assert!(report.diagnostics.is_empty(), "{:?}", report.diagnostics);
+
+    let suppressed = fixture("undeclared_fault_point/suppressed.rs");
+    let report = lint_sources(&[
+        ("fault/mod.rs", registry.as_str()),
+        ("serve/shard.rs", suppressed.as_str()),
+    ]);
+    assert_eq!(report.unannotated_count(), 0, "{:?}", report.diagnostics);
+    assert_eq!(rule_hits(&report, "undeclared_fault_point").len(), 1);
+}
+
+#[test]
+fn undeclared_fault_point_is_inert_without_a_registry() {
+    // Without a FAULT_POINTS declaration the canonical names are
+    // unknowable; the rule must stay silent rather than guess.
+    let violating = fixture("undeclared_fault_point/violating.rs");
+    let report = lint_sources(&[("serve/shard.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "undeclared_fault_point").is_empty());
+}
+
+#[test]
 fn undeclared_switch_is_inert_without_a_registry() {
     // A file set with no main.rs SWITCHES declaration cannot know the
     // canonical names, so the rule must stay silent rather than guess.
