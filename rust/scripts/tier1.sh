@@ -169,8 +169,66 @@ if [ -f artifacts/manifest.json ]; then
     > target/train_resumed.txt
   grep -E '^(val |coverage:)' target/train_resumed.txt > target/train_resumed_metrics.txt
   cmp target/train_clean_metrics.txt target/train_resumed_metrics.txt
+
+  # Distributed loopback smoke: a real coordinator process plus two real
+  # `worker join` processes over 127.0.0.1 must reproduce the in-process
+  # run bit for bit — identical metric lines AND byte-identical shards.
+  echo "== net smoke: distributed loopback == in-process (bit-identical) =="
+  bin=target/release/repro
+  flags="--dataset karate --k 2 --epochs 10 --mlp-epochs 30 --seed 7"
+  rm -rf target/net_local_shards target/net_tcp_shards target/net_port
+  "$bin" train $flags --machines 2 --shards target/net_local_shards \
+    > target/net_local.txt
+  "$bin" coordinator serve $flags --machines 2 --shards target/net_tcp_shards \
+    --bind 127.0.0.1:0 --port-file target/net_port --join-timeout 120 \
+    > target/net_tcp.txt &
+  coord=$!
+  for _ in $(seq 1 300); do [ -s target/net_port ] && break; sleep 0.1; done
+  test -s target/net_port
+  addr="127.0.0.1:$(cat target/net_port)"
+  "$bin" worker join "$addr" $flags > /dev/null &
+  w1=$!
+  "$bin" worker join "$addr" $flags > /dev/null &
+  w2=$!
+  wait "$w1"
+  wait "$w2"
+  wait "$coord"
+  grep -E '^(val |coverage:)' target/net_local.txt > target/net_local_metrics.txt
+  grep -E '^(val |coverage:)' target/net_tcp.txt > target/net_tcp_metrics.txt
+  cmp target/net_local_metrics.txt target/net_tcp_metrics.txt
+  cmp target/net_local_shards/part0.lfs target/net_tcp_shards/part0.lfs
+  cmp target/net_local_shards/part1.lfs target/net_tcp_shards/part1.lfs
+
+  # Crash drill: SIGKILL one worker while it holds a job (an injected
+  # worker-side training delay keeps it mid-job on purpose). The leader
+  # sees the dead socket, requeues the job, retires the slot after the
+  # grace window, and the surviving worker finishes the run — to the
+  # same bytes as the in-process run.
+  echo "== net smoke: kill -9 a worker mid-run; output unchanged =="
+  rm -rf target/net_kill_shards target/net_port
+  "$bin" coordinator serve $flags --machines 2 --shards target/net_kill_shards \
+    --bind 127.0.0.1:0 --port-file target/net_port --join-timeout 120 \
+    --grace-ms 500 > target/net_kill.txt &
+  coord=$!
+  for _ in $(seq 1 300); do [ -s target/net_port ] && break; sleep 0.1; done
+  test -s target/net_port
+  addr="127.0.0.1:$(cat target/net_port)"
+  "$bin" worker join "$addr" $flags \
+    --fault-plan "worker.train:delay(8000)" > /dev/null &
+  victim=$!
+  sleep 2
+  kill -9 "$victim" 2> /dev/null || true
+  wait "$victim" 2> /dev/null || true
+  "$bin" worker join "$addr" $flags > /dev/null &
+  w2=$!
+  wait "$w2"
+  wait "$coord"
+  grep -E '^(val |coverage:)' target/net_kill.txt > target/net_kill_metrics.txt
+  cmp target/net_local_metrics.txt target/net_kill_metrics.txt
+  cmp target/net_local_shards/part0.lfs target/net_kill_shards/part0.lfs
+  cmp target/net_local_shards/part1.lfs target/net_kill_shards/part1.lfs
 else
-  echo "note: PJRT artifacts absent — fault + resume smokes skipped"
+  echo "note: PJRT artifacts absent — fault + resume + net smokes skipped"
 fi
 
 echo "tier1: OK"

@@ -22,6 +22,7 @@
 //! | `undeclared_switch` | every `args.has("x")` switch is declared in `main.rs` `SWITCHES` (closes the `--switch positional` misparse class) |
 //! | `undeclared_fault_point` | every `fault::point("x")` is declared in the `FAULT_POINTS` registry (an undeclared point is invisible to plan validation and the chaos sweep) |
 //! | `sleep_outside_backoff` | no raw `thread::sleep` outside `fault/` — delays flow through `fault::Backoff` (seeded, metered) or the job queue |
+//! | `raw_socket_io` | no `TcpStream`/`TcpListener` outside `net/` — every wire byte rides the CRC-checked `LFN1` frame codec and its `net.send`/`net.recv` fault points |
 //!
 //! To add a rule: implement [`Rule`], add it to [`all_rules`], document
 //! it in DESIGN.md, and add one violating + one clean + one suppressed
@@ -57,6 +58,11 @@ const THREADING_MODULE: &str = "util/parallel.rs";
 /// `delay(ms)` actions). Everything else either backs off through
 /// [`crate::fault::Backoff`] or parks on a condvar.
 const SLEEP_MODULE_PREFIX: &str = "fault/";
+
+/// The one module allowed to name a raw socket type: `net/` owns the
+/// `LFN1` frame codec, and every byte on the wire must pass through it
+/// (CRC validation + the `net.send`/`net.recv` fault points).
+const NET_MODULE_PREFIX: &str = "net/";
 
 /// One lexed, region-annotated source file.
 pub struct SourceFile {
@@ -286,6 +292,7 @@ pub fn all_rules() -> Vec<Box<dyn Rule>> {
         Box::new(UndeclaredSwitch),
         Box::new(UndeclaredFaultPoint),
         Box::new(SleepOutsideBackoff),
+        Box::new(RawSocketIo),
     ]
 }
 
@@ -819,6 +826,52 @@ impl Rule for SleepOutsideBackoff {
     }
 }
 
+// ---- raw_socket_io --------------------------------------------------------
+
+/// Socket I/O outside `net/` bypasses the `LFN1` frame codec: bytes
+/// that never pass a CRC, `net.send`/`net.recv` fault points that never
+/// fire, and a second wire dialect nobody versioned. Anything that
+/// needs the network speaks typed `net::Message`s over `net::frame`;
+/// only `net/` itself may name a socket type.
+struct RawSocketIo;
+
+impl Rule for RawSocketIo {
+    fn name(&self) -> &'static str {
+        "raw_socket_io"
+    }
+
+    fn summary(&self) -> &'static str {
+        "no TcpStream/TcpListener outside net/ (all socket I/O rides the frame codec)"
+    }
+
+    fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
+        for file in &set.files {
+            if file.path.starts_with(NET_MODULE_PREFIX) {
+                continue;
+            }
+            let mut seen = BTreeSet::new();
+            for t in &file.tokens {
+                let hit = t.kind == TokenKind::Ident
+                    && (t.text == "TcpStream" || t.text == "TcpListener");
+                if hit && !file.in_test_code(t.line) {
+                    emit(
+                        file,
+                        self.name(),
+                        t.line,
+                        format!(
+                            "raw socket type {} — speak LFN1 frames through net::frame \
+                             (checksummed, fault-injectable) instead",
+                            t.text
+                        ),
+                        &mut seen,
+                        out,
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -974,6 +1027,25 @@ mod tests {
         assert!(rules_hit(&lint_one("fault/backoff.rs", src)).is_empty());
         let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { std::thread::sleep(std::time::Duration::from_millis(5)); }\n}\n";
         assert!(rules_hit(&lint_one("serve/cache.rs", test_src)).is_empty());
+    }
+
+    #[test]
+    fn raw_socket_io_fires_outside_net_only() {
+        let src = "use std::net::TcpStream;\nfn f(addr: &str) {\n    let _s = TcpStream::connect(addr);\n}\n";
+        assert_eq!(
+            rules_hit(&lint_one("serve/transport.rs", src)),
+            vec!["raw_socket_io", "raw_socket_io"]
+        );
+        assert!(rules_hit(&lint_one("net/frame.rs", src)).is_empty());
+        assert!(rules_hit(&lint_one("net/server.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn raw_socket_io_flags_listener_and_skips_tests() {
+        let src = "fn f() { let _l = std::net::TcpListener::bind(\"127.0.0.1:0\"); }\n";
+        assert_eq!(rules_hit(&lint_one("coordinator/mod.rs", src)), vec!["raw_socket_io"]);
+        let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { let _l = std::net::TcpListener::bind(\"127.0.0.1:0\"); }\n}\n";
+        assert!(rules_hit(&lint_one("coordinator/mod.rs", test_src)).is_empty());
     }
 
     #[test]

@@ -178,6 +178,9 @@ pub struct ExperimentConfig {
     pub shards_out: Option<PathBuf>,
     /// Serving-engine knobs (`[serve]` section).
     pub serve: ServeConfig,
+    /// Distributed-transport knobs (`[net]` section), used by the
+    /// `coordinator serve` and `worker join` subcommands.
+    pub net: NetConfig,
 }
 
 /// Configuration of the embedding-serving layer (`[serve]` section).
@@ -235,6 +238,73 @@ impl ServeConfig {
     }
 }
 
+/// Configuration of the distributed TCP transport (`[net]` section):
+/// the leader's bind address, liveness cadence, and the reconnect
+/// behaviour on both sides. Shared by `coordinator serve` (bind, join
+/// deadline, grace window) and `worker join` (redial budget); workers
+/// adopt the leader's heartbeat cadence from the `Welcome` frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Leader bind address (`--bind`); port 0 asks the OS for a free
+    /// port — combine with `port_file` so scripts can find it.
+    pub bind: String,
+    /// Worker heartbeat interval in milliseconds. The leader suspects a
+    /// session silent for ~3 intervals (plus seeded jitter).
+    pub heartbeat_ms: u64,
+    /// How long a suspected worker may take to reconnect before its
+    /// slot is retired, in milliseconds.
+    pub grace_ms: u64,
+    /// Leader gives up (retiring every slot) when no worker has joined
+    /// within this many seconds; 0 waits forever.
+    pub join_timeout_secs: f64,
+    /// Consecutive failed dial attempts before `worker join` gives up.
+    pub reconnect_attempts: u32,
+    /// When set, the leader writes its bound port here after listen —
+    /// race-free port discovery for scripts binding port 0 (`--port-file`).
+    pub port_file: Option<PathBuf>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            bind: "127.0.0.1:0".to_string(),
+            heartbeat_ms: 500,
+            grace_ms: 2000,
+            join_timeout_secs: 30.0,
+            reconnect_attempts: 5,
+            port_file: None,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn from_toml(t: &Toml) -> Result<Self> {
+        let d = NetConfig::default();
+        // negative intervals clamp to 0 (where 0 has a defined meaning)
+        // instead of wrapping through `as u64`
+        let nneg = |key: &str, default: u64| -> u64 {
+            t.int_or("net", key, default as i64).max(0) as u64
+        };
+        Ok(NetConfig {
+            bind: match t.get("net", "bind") {
+                Some(Value::Str(s)) => s.clone(),
+                _ => d.bind,
+            },
+            heartbeat_ms: nneg("heartbeat_ms", d.heartbeat_ms),
+            grace_ms: nneg("grace_ms", d.grace_ms),
+            join_timeout_secs: float_opt(t, "net", "join_timeout_secs")?
+                .unwrap_or(d.join_timeout_secs)
+                .max(0.0),
+            reconnect_attempts: nneg("reconnect_attempts", d.reconnect_attempts as u64)
+                as u32,
+            port_file: match t.get("net", "port_file") {
+                Some(Value::Str(s)) => Some(PathBuf::from(s)),
+                _ => d.port_file,
+            },
+        })
+    }
+}
+
 /// `[obs] trace = "path"` — when set, the launcher enables span tracing
 /// at startup and writes a Chrome-trace JSON here on exit. The CLI
 /// `--trace-out` flag wins over this key.
@@ -284,6 +354,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: crate::runtime::default_artifacts_dir(),
             shards_out: None,
             serve: ServeConfig::default(),
+            net: NetConfig::default(),
         }
     }
 }
@@ -407,6 +478,7 @@ impl ExperimentConfig {
                 _ => None,
             },
             serve: ServeConfig::from_toml(t),
+            net: NetConfig::from_toml(t)?,
         })
     }
 }
@@ -546,6 +618,40 @@ machines = 2
         let cfg = ExperimentConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
         assert_eq!(cfg.serve, ServeConfig::default());
         assert_eq!(cfg.shards_out, None);
+    }
+
+    #[test]
+    fn parses_net_section() {
+        let t = Toml::parse(
+            "[net]\nbind = \"0.0.0.0:7700\"\nheartbeat_ms = 250\ngrace_ms = 5000\n\
+             join_timeout_secs = 10\nreconnect_attempts = 3\nport_file = \"out/port\"\n",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.net.bind, "0.0.0.0:7700");
+        assert_eq!(cfg.net.heartbeat_ms, 250);
+        assert_eq!(cfg.net.grace_ms, 5000);
+        assert_eq!(cfg.net.join_timeout_secs, 10.0);
+        assert_eq!(cfg.net.reconnect_attempts, 3);
+        assert_eq!(cfg.net.port_file, Some(PathBuf::from("out/port")));
+    }
+
+    #[test]
+    fn net_defaults_and_clamps() {
+        let cfg = ExperimentConfig::from_toml(&Toml::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(cfg.net, NetConfig::default());
+        // negative intervals clamp to 0 instead of wrapping through u64
+        let t = Toml::parse(
+            "[net]\nheartbeat_ms = -9\ngrace_ms = -1\njoin_timeout_secs = -2.0\n",
+        )
+        .unwrap();
+        let n = NetConfig::from_toml(&t).unwrap();
+        assert_eq!(n.heartbeat_ms, 0);
+        assert_eq!(n.grace_ms, 0);
+        assert_eq!(n.join_timeout_secs, 0.0);
+        // a non-numeric join timeout is a clear error, not a default
+        let t = Toml::parse("[net]\njoin_timeout_secs = \"soon\"\n").unwrap();
+        assert!(NetConfig::from_toml(&t).is_err());
     }
 
     #[test]

@@ -3,7 +3,15 @@
 //! Only control data crosses threads — partition tensors are built
 //! worker-side from the shared read-only dataset, mirroring a cluster
 //! where each machine loads its own shard.
+//!
+//! The same message shapes ride both transports: in-process they cross
+//! an mpsc channel as-is; over TCP they are serialized into frames by
+//! `net::wire`. That is why failures carry a typed [`ErrorCode`]
+//! instead of a worker-side `transient: bool` — the classification is
+//! one shared taxonomy, computed from the error class itself, and small
+//! enough to put on the wire.
 
+use crate::error::Error;
 use crate::graph::NodeId;
 use crate::train::TrainedPartition;
 
@@ -16,6 +24,100 @@ pub struct Job {
     pub attempt: u32,
 }
 
+/// Wire-serializable classification of a worker-side failure.
+///
+/// One code per [`Error`] variant, so transient-vs-permanent is decided
+/// by the error *class* (see [`Error::is_transient`]) on both sides of
+/// any transport, and survives a round-trip through a u16 on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ErrorCode {
+    Graph = 1,
+    Partition = 2,
+    Runtime = 3,
+    Config = 4,
+    Coordinator = 5,
+    Io = 6,
+    Manifest = 7,
+    Serve = 8,
+    Xla = 9,
+    Lint = 10,
+    Fault = 11,
+    Net = 12,
+}
+
+impl ErrorCode {
+    /// Classify a typed error into its wire code.
+    pub fn of(e: &Error) -> Self {
+        match e {
+            Error::Graph(_) => ErrorCode::Graph,
+            Error::Partition(_) => ErrorCode::Partition,
+            Error::Runtime(_) => ErrorCode::Runtime,
+            Error::Config(_) => ErrorCode::Config,
+            Error::Coordinator(_) => ErrorCode::Coordinator,
+            Error::Io(_) => ErrorCode::Io,
+            Error::Manifest(_) => ErrorCode::Manifest,
+            Error::Serve(_) => ErrorCode::Serve,
+            Error::Xla(_) => ErrorCode::Xla,
+            Error::Lint(_) => ErrorCode::Lint,
+            Error::Fault(_) => ErrorCode::Fault,
+            Error::Net(_) => ErrorCode::Net,
+        }
+    }
+
+    /// Mirror of [`Error::is_transient`], decidable from the code alone
+    /// so the leader never needs the (lossy) message string to pick a
+    /// retry-vs-policy path.
+    pub fn is_transient(self) -> bool {
+        matches!(
+            self,
+            ErrorCode::Io | ErrorCode::Xla | ErrorCode::Runtime | ErrorCode::Fault | ErrorCode::Net
+        )
+    }
+
+    pub fn as_u16(self) -> u16 {
+        self as u16
+    }
+
+    /// Decode a wire code; unknown values map to `None` so a corrupt or
+    /// future-version frame degrades into a typed decode error, not UB.
+    pub fn from_u16(v: u16) -> Option<Self> {
+        match v {
+            1 => Some(ErrorCode::Graph),
+            2 => Some(ErrorCode::Partition),
+            3 => Some(ErrorCode::Runtime),
+            4 => Some(ErrorCode::Config),
+            5 => Some(ErrorCode::Coordinator),
+            6 => Some(ErrorCode::Io),
+            7 => Some(ErrorCode::Manifest),
+            8 => Some(ErrorCode::Serve),
+            9 => Some(ErrorCode::Xla),
+            10 => Some(ErrorCode::Lint),
+            11 => Some(ErrorCode::Fault),
+            12 => Some(ErrorCode::Net),
+            _ => None,
+        }
+    }
+
+    /// Short stable name, for logs and journal lines.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Graph => "graph",
+            ErrorCode::Partition => "partition",
+            ErrorCode::Runtime => "runtime",
+            ErrorCode::Config => "config",
+            ErrorCode::Coordinator => "coordinator",
+            ErrorCode::Io => "io",
+            ErrorCode::Manifest => "manifest",
+            ErrorCode::Serve => "serve",
+            ErrorCode::Xla => "xla",
+            ErrorCode::Lint => "lint",
+            ErrorCode::Fault => "fault",
+            ErrorCode::Net => "net",
+        }
+    }
+}
+
 /// Events streamed from workers to the leader.
 #[derive(Debug)]
 pub enum WorkerEvent {
@@ -26,6 +128,11 @@ pub enum WorkerEvent {
     Finished {
         worker: usize,
         part_id: u32,
+        /// Attempt number the result was produced under. The leader
+        /// dedupes idempotent re-deliveries (e.g. a retried job whose
+        /// first result arrives late over a resurrected connection) by
+        /// `(part_id, attempt)`.
+        attempt: u32,
         /// Owned (non-replica) global node ids, in the result's row order.
         nodes: Vec<NodeId>,
         result: TrainedPartition,
@@ -33,12 +140,11 @@ pub enum WorkerEvent {
     Failed {
         worker: usize,
         part_id: u32,
-        error: String,
-        /// [`crate::error::Error::is_transient`] of the underlying error,
-        /// classified worker-side (the typed error doesn't cross the
-        /// channel). Transient failures earn backoff + retry; permanent
-        /// ones go straight to the leader's `on_failure` policy.
-        transient: bool,
+        /// Typed classification; [`ErrorCode::is_transient`] failures
+        /// earn backoff + retry, permanent ones go straight to the
+        /// leader's `on_failure` policy.
+        code: ErrorCode,
+        message: String,
     },
     /// The worker is permanently out of service (runtime init failed —
     /// without a PJRT client it can train nothing). The leader removes
@@ -48,4 +154,57 @@ pub enum WorkerEvent {
         worker: usize,
         error: String,
     },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_code_roundtrips_through_u16() {
+        for code in [
+            ErrorCode::Graph,
+            ErrorCode::Partition,
+            ErrorCode::Runtime,
+            ErrorCode::Config,
+            ErrorCode::Coordinator,
+            ErrorCode::Io,
+            ErrorCode::Manifest,
+            ErrorCode::Serve,
+            ErrorCode::Xla,
+            ErrorCode::Lint,
+            ErrorCode::Fault,
+            ErrorCode::Net,
+        ] {
+            assert_eq!(ErrorCode::from_u16(code.as_u16()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u16(0), None);
+        assert_eq!(ErrorCode::from_u16(13), None);
+        assert_eq!(ErrorCode::from_u16(u16::MAX), None);
+    }
+
+    #[test]
+    fn error_code_transience_matches_error_taxonomy() {
+        let cases: Vec<Error> = vec![
+            Error::Graph("x".into()),
+            Error::Partition("x".into()),
+            Error::Runtime("x".into()),
+            Error::Config("x".into()),
+            Error::Coordinator("x".into()),
+            Error::Io(std::io::Error::other("x")),
+            Error::Manifest("x".into()),
+            Error::Serve("x".into()),
+            Error::Xla("x".into()),
+            Error::Lint("x".into()),
+            Error::Fault("x".into()),
+            Error::Net("x".into()),
+        ];
+        for e in &cases {
+            assert_eq!(
+                ErrorCode::of(e).is_transient(),
+                e.is_transient(),
+                "taxonomy drift for {e}"
+            );
+        }
+    }
 }

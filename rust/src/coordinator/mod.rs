@@ -8,11 +8,16 @@
 //! for physical machines (the paper itself emulates the cluster by training
 //! partitions sequentially on one host; §5 Setup).
 //!
-//! Topology: a condvar [`JobQueue`] feeds `min(machines, jobs)` workers;
-//! each worker owns a thread-local [`Runtime`] (PJRT clients are not
-//! `Send`), trains whole partitions, and streams [`WorkerEvent`]s back to
-//! the leader, which assembles the embedding store and finally runs the
-//! integration MLP + evaluation.
+//! Topology: a condvar [`JobQueue`] feeds the workers; each worker owns
+//! a thread-local [`Runtime`] (PJRT clients are not `Send`), trains
+//! whole partitions, and streams [`WorkerEvent`]s back to the leader,
+//! which assembles the embedding store and finally runs the integration
+//! MLP + evaluation. The worker side is one [`Transport`] choice:
+//! `Local` spawns `min(machines, jobs)` in-process threads; `Tcp` binds
+//! a socket and lets `repro worker join` processes fill the `machines`
+//! slots over the `LFN1` wire protocol (see [`crate::net`]) — the event
+//! loop is transport-blind, so retries, deadlines, journaling, and the
+//! final metrics are byte-for-byte the same code either way.
 //!
 //! Fault tolerance (see DESIGN.md *Robustness*):
 //!
@@ -33,7 +38,14 @@
 //!   journaled shards and retrains only what's missing.
 //! * **Worker retirement** — a worker whose PJRT runtime fails to
 //!   initialise sends [`WorkerEvent::Retired`]; its jobs redistribute
-//!   over the survivors and a run with zero live workers aborts.
+//!   over the survivors and a run with zero live workers aborts. Over
+//!   TCP the same event retires a worker that stayed disconnected past
+//!   its grace window.
+//! * **Idempotent results** — the leader accepts each `(part_id,
+//!   attempt)` at most once and ignores results for resolved
+//!   partitions, so a result racing its own requeue (a crashed worker's
+//!   last frame, a deadline-expired attempt that finished anyway) can
+//!   never double-count.
 
 pub mod journal;
 pub mod messages;
@@ -41,7 +53,7 @@ pub mod queue;
 pub mod worker;
 
 pub use journal::{JournalState, PartRecord, RunJournal};
-pub use messages::{Job, WorkerEvent};
+pub use messages::{ErrorCode, Job, WorkerEvent};
 pub use queue::JobQueue;
 
 use crate::data::Dataset;
@@ -57,8 +69,9 @@ use crate::train::{
 };
 use crate::util::json::num;
 use crate::util::Stopwatch;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
 /// Watchdog granularity: how often the leader scans for deadline
@@ -101,6 +114,18 @@ impl FailurePolicy {
     }
 }
 
+/// Which transport carries jobs and results between leader and workers.
+#[derive(Clone, Debug, Default)]
+pub enum Transport {
+    /// In-process worker threads over an mpsc channel (the default).
+    #[default]
+    Local,
+    /// Multi-process TCP: the leader binds a socket and `repro worker
+    /// join` processes fill the worker slots over the `LFN1` framed
+    /// protocol (see [`crate::net`]).
+    Tcp(crate::config::NetConfig),
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -133,6 +158,8 @@ pub struct CoordinatorConfig {
     /// Replay intact journaled partitions instead of retraining them
     /// (requires `shard_dir`; see [`RunJournal`]).
     pub resume: bool,
+    /// How workers are attached: in-process threads or TCP sessions.
+    pub transport: Transport,
 }
 
 impl CoordinatorConfig {
@@ -151,6 +178,7 @@ impl CoordinatorConfig {
             on_failure: FailurePolicy::Abort,
             deadline_secs: 0.0,
             resume: false,
+            transport: Transport::Local,
         }
     }
 }
@@ -502,8 +530,13 @@ impl Coordinator {
         let mut skipped: Vec<u32> = Vec::new();
 
         if live_jobs > 0 {
-            let workers = self.cfg.machines.min(live_jobs).max(1);
-            let queue = JobQueue::new(jobs, workers);
+            let workers = match &self.cfg.transport {
+                // remote sessions are real processes: keep every
+                // configured slot open even when jobs < machines
+                Transport::Local => self.cfg.machines.min(live_jobs).max(1),
+                Transport::Tcp(_) => self.cfg.machines.max(1),
+            };
+            let queue = Arc::new(JobQueue::new(jobs, workers));
             let (tx, rx) = mpsc::channel::<WorkerEvent>();
             // per-partition retry backoff, seeded so a rerun schedules
             // the same jitter (splitmix decorrelates adjacent parts)
@@ -522,14 +555,34 @@ impl Coordinator {
             let mut retired = vec![false; workers];
             let mut live_workers = workers;
             let clock = Stopwatch::start();
+            // results accepted at most once per (part, attempt): a slow or
+            // resurrected worker re-delivering after a requeue is dropped
+            let mut accepted: BTreeSet<(u32, u32)> = BTreeSet::new();
 
             // lint: allow(spawn_outside_parallel) — leader/worker topology over an mpsc channel with retries, not the ordered fork-join map util::parallel models
             let run_result = std::thread::scope(|scope| -> Result<()> {
-                let q = &queue;
-                for wid in 0..workers {
-                    let tx = tx.clone();
-                    let cfg = self.cfg.clone();
-                    scope.spawn(move || worker::worker_loop(wid, dataset, q, tx, &cfg));
+                // the event loop below is transport-blind: local threads
+                // and TCP sessions feed the same WorkerEvent channel
+                let mut server = None;
+                match &self.cfg.transport {
+                    Transport::Local => {
+                        let q = &queue;
+                        for wid in 0..workers {
+                            let tx = tx.clone();
+                            let cfg = self.cfg.clone();
+                            scope.spawn(move || worker::worker_loop(wid, dataset, q, tx, &cfg));
+                        }
+                    }
+                    Transport::Tcp(net) => {
+                        server = Some(crate::net::TcpServer::start(
+                            net,
+                            self.cfg.seed,
+                            fingerprint,
+                            workers,
+                            Arc::clone(&queue),
+                            tx.clone(),
+                        )?);
+                    }
                 }
                 drop(tx);
 
@@ -636,14 +689,23 @@ impl Coordinator {
                                     running[p] = Some((worker, clock.secs()));
                                 }
                             }
-                            WorkerEvent::Finished { worker, part_id, nodes, result } => {
+                            WorkerEvent::Finished { worker, part_id, attempt, nodes, result } => {
                                 let p = part_id as usize;
-                                if resolved[p] {
-                                    // duplicate attempt (deadline expiry
-                                    // requeued it, both finished)
+                                if p >= k {
+                                    // remote peers are the only source of
+                                    // out-of-range ids; never index on one
+                                    log::warn!(
+                                        "ignoring result for unknown partition \
+                                         {part_id} from worker {worker}"
+                                    );
+                                    continue;
+                                }
+                                if !accepted.insert((part_id, attempt)) || resolved[p] {
+                                    // duplicate attempt (deadline expiry or a
+                                    // reconnect requeued it, both delivered)
                                     log::debug!(
                                         "ignoring duplicate result for partition \
-                                         {part_id} from worker {worker}"
+                                         {part_id} (attempt {attempt}) from worker {worker}"
                                     );
                                     continue;
                                 }
@@ -707,12 +769,19 @@ impl Coordinator {
                                 completed += 1;
                                 queue.resolve_job();
                             }
-                            WorkerEvent::Failed { worker, part_id, error, transient } => {
+                            WorkerEvent::Failed { worker, part_id, code, message } => {
                                 let p = part_id as usize;
+                                if p >= k {
+                                    log::warn!(
+                                        "ignoring failure for unknown partition \
+                                         {part_id} from worker {worker}: {message}"
+                                    );
+                                    continue;
+                                }
                                 if resolved[p] {
                                     log::debug!(
                                         "ignoring stale failure for resolved partition \
-                                         {part_id}: {error}"
+                                         {part_id}: {message}"
                                     );
                                     continue;
                                 }
@@ -725,7 +794,7 @@ impl Coordinator {
                                     _ => {
                                         log::debug!(
                                             "ignoring failure from expired attempt on \
-                                             partition {part_id} (worker {worker}): {error}"
+                                             partition {part_id} (worker {worker}): {message}"
                                         );
                                         continue;
                                     }
@@ -738,8 +807,8 @@ impl Coordinator {
                                     &mut backoffs[p],
                                     part_id,
                                     attempts[p],
-                                    transient,
-                                    &error,
+                                    code.is_transient(),
+                                    &message,
                                 ) {
                                     Verdict::Requeued => {}
                                     Verdict::Skipped => {
@@ -780,6 +849,11 @@ impl Coordinator {
                     Ok(())
                 })();
                 queue.shutdown();
+                if let Some(server) = server {
+                    // sessions see the closed queue, drain their workers
+                    // (Shutdown → Bye), and are joined here
+                    server.drain();
+                }
                 r
             });
             run_result?;

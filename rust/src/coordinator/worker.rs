@@ -8,7 +8,7 @@
 //! both surface as ordinary job failures for the leader's retry/backoff
 //! machinery.
 
-use super::messages::{Job, WorkerEvent};
+use super::messages::{ErrorCode, Job, WorkerEvent};
 use super::queue::JobQueue;
 use super::CoordinatorConfig;
 use crate::data::Dataset;
@@ -65,7 +65,13 @@ pub fn worker_loop(
         match run_job(&rt, dataset, &job, cfg, &mut scratch, &mut pads) {
             Ok((nodes, result)) => {
                 if tx
-                    .send(WorkerEvent::Finished { worker, part_id: job.part_id, nodes, result })
+                    .send(WorkerEvent::Finished {
+                        worker,
+                        part_id: job.part_id,
+                        attempt: job.attempt,
+                        nodes,
+                        result,
+                    })
                     .is_err()
                 {
                     break; // leader gone
@@ -76,8 +82,8 @@ pub fn worker_loop(
                     .send(WorkerEvent::Failed {
                         worker,
                         part_id: job.part_id,
-                        error: e.to_string(),
-                        transient: e.is_transient(),
+                        code: ErrorCode::of(&e),
+                        message: e.to_string(),
                     })
                     .is_err()
                 {
@@ -88,14 +94,14 @@ pub fn worker_loop(
     }
 }
 
-fn init_runtime(cfg: &CoordinatorConfig) -> Result<Runtime> {
+pub(crate) fn init_runtime(cfg: &CoordinatorConfig) -> Result<Runtime> {
     if let Some(inj) = fault::point("runtime.init").fire() {
         return Err(inj.error());
     }
     Runtime::new(&cfg.artifacts_dir)
 }
 
-fn run_job(
+pub(crate) fn run_job(
     rt: &Runtime,
     dataset: &Dataset,
     job: &Job,

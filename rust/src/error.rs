@@ -36,20 +36,23 @@ pub enum Error {
 
     #[error("injected fault: {0}")]
     Fault(String),
+
+    #[error("net error: {0}")]
+    Net(String),
 }
 
 impl Error {
     /// Whether a retry on another machine (or the same one, later) could
     /// plausibly succeed. Transient classes are environmental — I/O,
-    /// PJRT/XLA runtime trouble, injected faults (which model machine
-    /// failures). Everything else (bad graph, bad config, corrupt
-    /// manifest, …) is deterministic: retrying burns an attempt on the
-    /// same failure, so the coordinator goes straight to its
+    /// network trouble, PJRT/XLA runtime trouble, injected faults (which
+    /// model machine failures). Everything else (bad graph, bad config,
+    /// corrupt manifest, …) is deterministic: retrying burns an attempt
+    /// on the same failure, so the coordinator goes straight to its
     /// `on_failure` policy.
     pub fn is_transient(&self) -> bool {
         matches!(
             self,
-            Error::Io(_) | Error::Xla(_) | Error::Runtime(_) | Error::Fault(_)
+            Error::Io(_) | Error::Xla(_) | Error::Runtime(_) | Error::Fault(_) | Error::Net(_)
         )
     }
 }
@@ -78,6 +81,7 @@ mod tests {
         assert!(Error::Runtime("x".into()).is_transient());
         assert!(Error::Xla("x".into()).is_transient());
         assert!(Error::Io(std::io::Error::other("x")).is_transient());
+        assert!(Error::Net("x".into()).is_transient());
         assert!(!Error::Config("x".into()).is_transient());
         assert!(!Error::Serve("x".into()).is_transient());
         assert!(!Error::Coordinator("x".into()).is_transient());

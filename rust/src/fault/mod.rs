@@ -41,9 +41,11 @@ use std::time::Duration;
 
 /// Registered fault points — the instrumented failure domains:
 /// per-machine PJRT client creation, batch assembly, partition
-/// training, shard write (leader), shard read (serving), and shard
-/// manifest load. Every `fault::point("x")` literal in library code
-/// must appear here (`undeclared_fault_point` lint rule).
+/// training, shard write (leader), shard read (serving), shard
+/// manifest load, and the four wire-level domains of the TCP transport
+/// (connection accept, connection dial, frame send, frame receive).
+/// Every `fault::point("x")` literal in library code must appear here
+/// (`undeclared_fault_point` lint rule).
 pub const FAULT_POINTS: &[&str] = &[
     "runtime.init",
     "worker.batch",
@@ -51,6 +53,10 @@ pub const FAULT_POINTS: &[&str] = &[
     "shard.write",
     "shard.read",
     "manifest.load",
+    "net.accept",
+    "net.connect",
+    "net.send",
+    "net.recv",
 ];
 
 /// Fast-path gate: when false (the default), [`Point::fire`] is a single

@@ -37,6 +37,7 @@ pub mod data;
 pub mod error;
 pub mod fault;
 pub mod graph;
+pub mod net;
 pub mod obs;
 pub mod partition;
 pub mod runtime;

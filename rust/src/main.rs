@@ -5,6 +5,11 @@
 //!   train      — full distributed pipeline: partition → per-machine GNN
 //!                training → embedding integration → MLP → eval
 //!                (`--shards <dir>` also exports a serving bundle)
+//!   coordinator — `train` over real TCP workers: `coordinator serve`
+//!                binds a listener, waits for `worker join` processes,
+//!                and runs the identical pipeline (same metrics, shards)
+//!   worker     — `worker join <addr>`: dial a coordinator, prove the
+//!                run fingerprint matches, train assigned partitions
 //!   pipeline   — `train` for LF vs baselines side by side
 //!   serve      — load a shard bundle and answer queries interactively
 //!   query      — one-shot classification of --nodes against a bundle
@@ -28,8 +33,8 @@
 
 use leiden_fusion::benchkit::Table;
 use leiden_fusion::cli::Args;
-use leiden_fusion::config::{obs_trace_path, ExperimentConfig, ServeConfig, Toml};
-use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
+use leiden_fusion::config::{obs_trace_path, ExperimentConfig, NetConfig, ServeConfig, Toml};
+use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig, Transport};
 use leiden_fusion::data::{
     karate_dataset, synth_arxiv, synth_proteins, ArxivLikeConfig, Dataset,
     ProteinsLikeConfig,
@@ -64,6 +69,17 @@ USAGE:
                    --shards dir; retrain only what's missing)
                   [--fault-plan SPEC]   (deterministic fault injection, e.g.
                    \"worker.train:part=0,attempt=0:fail; shard.read:p=0.05,seed=7:corrupt\")
+  repro coordinator serve
+                  (all `train` flags, plus:)
+                  [--bind 127.0.0.1:0] [--port-file file]   (write the bound
+                   port for scripts when --bind picks port 0)
+                  [--heartbeat-ms 500] [--grace-ms 2000] [--join-timeout 30]
+                  (waits for `worker join` processes, then runs the exact
+                   `train` pipeline over them: identical metrics + shards)
+  repro worker    join <addr>   (plus the same dataset/partition/train
+                   flags or --config as the coordinator — the handshake
+                   rejects a worker whose run fingerprint differs)
+                  [--reconnect-attempts 5]
   repro pipeline  [--dataset arxiv] [--k 4] (LF vs METIS vs LPA comparison)
   repro serve     --shards dir [--batch 64] [--workers 2] [--cache 4096]
                   [--cache-stripes 8] [--artifacts dir] [--warm]
@@ -144,6 +160,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("partition") => cmd_partition(args),
         Some("train") => cmd_train(args),
+        Some("coordinator") => cmd_coordinator(args),
+        Some("worker") => cmd_worker(args),
         Some("pipeline") => cmd_pipeline(args),
         Some("serve") => cmd_serve(args),
         Some("query") => cmd_query(args),
@@ -350,14 +368,10 @@ fn install_fault_plan(spec: Option<&str>) -> Result<()> {
     Ok(())
 }
 
-/// Run the full distributed pipeline for one configuration.
-fn run_experiment(
-    cfg: &ExperimentConfig,
-    ds: &Dataset,
-) -> Result<(PartitionReport, leiden_fusion::coordinator::TrainReport)> {
-    let pipeline = PartitionPipeline::new(cfg.spec.clone(), cfg.seed)
-        .with_threads(cfg.partition_threads);
-    let preport = pipeline.run(&ds.graph, cfg.k)?;
+/// Lower an experiment config to the coordinator's own knobs. Shared by
+/// every launch shape (in-process train, TCP leader, TCP worker) so the
+/// training configuration can never diverge between transports.
+fn coordinator_config(cfg: &ExperimentConfig) -> CoordinatorConfig {
     let mut ccfg = CoordinatorConfig::new(cfg.artifacts_dir.clone());
     ccfg.machines = cfg.machines;
     ccfg.mode = cfg.mode;
@@ -371,11 +385,105 @@ fn run_experiment(
     ccfg.on_failure = cfg.on_failure;
     ccfg.deadline_secs = cfg.deadline_secs;
     ccfg.resume = cfg.resume;
+    ccfg
+}
+
+/// `[net]` options with their CLI overrides, for the TCP subcommands.
+fn net_config(args: &Args, cfg: &ExperimentConfig) -> Result<NetConfig> {
+    let mut net = cfg.net.clone();
+    if let Some(b) = args.get("bind") {
+        net.bind = b.to_string();
+    }
+    if let Some(p) = args.get("port-file") {
+        net.port_file = Some(PathBuf::from(p));
+    }
+    net.heartbeat_ms = args.u64_or("heartbeat-ms", net.heartbeat_ms)?;
+    net.grace_ms = args.u64_or("grace-ms", net.grace_ms)?;
+    net.join_timeout_secs = args.f64_or("join-timeout", net.join_timeout_secs)?;
+    net.reconnect_attempts =
+        args.u64_or("reconnect-attempts", net.reconnect_attempts as u64)? as u32;
+    Ok(net)
+}
+
+/// Run the full distributed pipeline for one configuration.
+fn run_experiment(
+    cfg: &ExperimentConfig,
+    ds: &Dataset,
+    transport: Transport,
+) -> Result<(PartitionReport, leiden_fusion::coordinator::TrainReport)> {
+    let pipeline = PartitionPipeline::new(cfg.spec.clone(), cfg.seed)
+        .with_threads(cfg.partition_threads);
+    let preport = pipeline.run(&ds.graph, cfg.k)?;
+    let mut ccfg = coordinator_config(cfg);
+    ccfg.transport = transport;
     let report = Coordinator::new(ccfg).run_report(ds, &preport)?;
     Ok((preport, report))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    train_with_transport(args, Transport::Local)
+}
+
+/// `repro coordinator serve`: the exact `train` pipeline, but partitions
+/// are shipped to TCP workers instead of in-process threads. Output
+/// lines are identical to `train` on purpose — the tier-1 loopback smoke
+/// diffs them to prove the transports agree bit for bit.
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("serve") => {}
+        other => {
+            return Err(Error::Config(format!(
+                "coordinator: expected `serve`, got {other:?} (usage: repro coordinator serve)"
+            )))
+        }
+    }
+    let cfg = experiment_config(args)?;
+    let net = net_config(args, &cfg)?;
+    train_with_transport(args, Transport::Tcp(net))
+}
+
+/// `repro worker join <addr>`: run the deterministic partition pipeline
+/// locally (proving this process describes the same run as the leader),
+/// then serve training assignments until drained.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = match (
+        args.positional.first().map(String::as_str),
+        args.positional.get(1),
+    ) {
+        (Some("join"), Some(addr)) => addr.clone(),
+        _ => {
+            return Err(Error::Config(
+                "worker: usage: repro worker join <host:port>".into(),
+            ))
+        }
+    };
+    let cfg = experiment_config(args)?;
+    let net = net_config(args, &cfg)?;
+    let ds = load_dataset(&cfg.dataset, cfg.dataset_n, cfg.seed)?;
+    println!(
+        "worker joining {addr}: dataset={} spec={} k={} seed={}",
+        ds.name, cfg.spec, cfg.k, cfg.seed
+    );
+    let pipeline = PartitionPipeline::new(cfg.spec.clone(), cfg.seed)
+        .with_threads(cfg.partition_threads);
+    let preport = pipeline.run(&ds.graph, cfg.k)?;
+    let members = preport.partitioning.members();
+    let fingerprint = leiden_fusion::coordinator::RunJournal::fingerprint(
+        &ds.name,
+        ds.num_nodes(),
+        &members,
+        cfg.seed,
+        cfg.epochs,
+        cfg.mlp_epochs,
+        cfg.mode.as_str(),
+        cfg.model.as_str(),
+        cfg.exec.as_str(),
+    );
+    let ccfg = coordinator_config(&cfg);
+    leiden_fusion::net::run_worker(&addr, &ds, &ccfg, &net, fingerprint)
+}
+
+fn train_with_transport(args: &Args, transport: Transport) -> Result<()> {
     let cfg = experiment_config(args)?;
     let ds = load_dataset(&cfg.dataset, cfg.dataset_n, cfg.seed)?;
     println!(
@@ -389,7 +497,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.machines,
         cfg.exec.as_str()
     );
-    let (preport, report) = run_experiment(&cfg, &ds)?;
+    let (preport, report) = run_experiment(&cfg, &ds, transport)?;
     println!("partition stages: {}", preport.stage_summary());
     let q = preport.quality(&ds.graph);
     let mut t = Table::new(
@@ -689,7 +797,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     for method in ["lf", "metis", "lpa"] {
         let mut cfg = base.clone();
         cfg.spec = method.parse()?;
-        let (preport, report) = run_experiment(&cfg, &ds)?;
+        let (preport, report) = run_experiment(&cfg, &ds, Transport::Local)?;
         let q = preport.quality(&ds.graph);
         t.row(vec![
             method.to_string(),

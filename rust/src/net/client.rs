@@ -1,0 +1,279 @@
+//! Worker-side TCP transport: `repro worker join <addr>`.
+//!
+//! One training machine. Dials the leader (fault point `net.connect`),
+//! handshakes the run fingerprint, then serves `Assign` frames with the
+//! exact job-execution path an in-process worker thread uses
+//! ([`worker::run_job`]) — same runtime, same scratch reuse, same
+//! attempt-independent training seed, so a partition trained here is
+//! bit-identical to one trained locally.
+//!
+//! A background heartbeat thread keeps the session alive through long
+//! training calls (the main thread cannot speak while it trains). All
+//! frame writes go through one mutex so a heartbeat can never interleave
+//! bytes into the middle of a result frame.
+//!
+//! Connection loss is survivable: the worker redials with its session
+//! token inside the leader's grace window and resumes the same slot;
+//! consecutive dial failures beyond `reconnect_attempts` give up. A
+//! `Reject` is permanent (config mismatch — retrying cannot help).
+
+use super::wire::Message;
+use crate::config::NetConfig;
+use crate::coordinator::{worker, CoordinatorConfig, ErrorCode, Job};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::fault::{self, Backoff};
+use crate::graph::SubgraphScratch;
+use crate::obs;
+use crate::runtime::Runtime;
+use crate::train::PadScratch;
+use crate::util::json::num;
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::time::Duration;
+
+/// How one connection ended.
+enum Outcome {
+    /// The leader drained us: the run is over.
+    Shutdown,
+    /// The connection died; redial with the session token.
+    Disconnected,
+}
+
+/// Join the coordinator at `addr` and train partitions until drained.
+/// `fingerprint` must be the run fingerprint this worker computed from
+/// its own dataset + partitioning + config — the handshake proves both
+/// processes describe the same run before any job is shipped.
+pub fn run_worker(
+    addr: &str,
+    dataset: &Dataset,
+    cfg: &CoordinatorConfig,
+    net: &NetConfig,
+    fingerprint: u64,
+) -> Result<()> {
+    let rt = worker::init_runtime(cfg)?;
+    let mut scratch = SubgraphScratch::new();
+    let mut pads = PadScratch::new();
+    let mut token = 0u64;
+    let mut backoff = Backoff::new(cfg.seed ^ 0xC0);
+    let mut failures = 0u32;
+    let _span = obs::span("net", "worker").with("addr", crate::util::json::s(addr));
+    loop {
+        let mut welcomed = false;
+        let ended = connect_and_serve(
+            addr,
+            dataset,
+            cfg,
+            fingerprint,
+            &rt,
+            &mut scratch,
+            &mut pads,
+            &mut token,
+            &mut welcomed,
+        );
+        if welcomed {
+            // a served session resets the dial budget: only
+            // *consecutive* failures to establish a session count
+            failures = 0;
+        }
+        match ended {
+            Ok(Outcome::Shutdown) => {
+                log::info!("drained by the coordinator; exiting");
+                return Ok(());
+            }
+            Ok(Outcome::Disconnected) => {
+                failures += 1;
+            }
+            Err(e) if e.is_transient() => {
+                failures += 1;
+                log::warn!("session attempt failed: {e}");
+            }
+            // Reject and other permanent errors: retrying cannot help
+            Err(e) => return Err(e),
+        }
+        if failures > net.reconnect_attempts {
+            return Err(Error::Net(format!(
+                "gave up after {} consecutive failed connection attempts to {addr}",
+                net.reconnect_attempts
+            )));
+        }
+        obs::registry().counter("net.worker_redials").inc();
+        let slept = backoff.sleep(failures);
+        log::warn!(
+            "redialing {addr} (attempt {failures}/{}) after {slept}ms",
+            net.reconnect_attempts
+        );
+    }
+}
+
+/// Dial, handshake, and serve one connection to completion.
+#[allow(clippy::too_many_arguments)]
+fn connect_and_serve(
+    addr: &str,
+    dataset: &Dataset,
+    cfg: &CoordinatorConfig,
+    fingerprint: u64,
+    rt: &Runtime,
+    scratch: &mut SubgraphScratch,
+    pads: &mut PadScratch,
+    token: &mut u64,
+    welcomed: &mut bool,
+) -> Result<Outcome> {
+    if let Some(inj) = fault::point("net.connect").fire() {
+        // no corruptible payload at dial time: corrupt degrades to fail
+        return Err(inj.error());
+    }
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Net(format!("cannot connect to {addr}: {e}")))?;
+    let _ = stream.set_nodelay(true);
+    Message::Hello { token: *token, fingerprint }.write_to(&mut stream)?;
+    let heartbeat_ms = match Message::read_from(&mut stream)? {
+        Message::Welcome { worker, token: t, heartbeat_ms } => {
+            log::info!("joined as worker {worker} (session {t:016x})");
+            *token = t;
+            *welcomed = true;
+            heartbeat_ms
+        }
+        Message::Reject { reason } => {
+            return Err(Error::Config(format!("coordinator rejected this worker: {reason}")))
+        }
+        other => {
+            return Err(Error::Net(format!(
+                "expected welcome or reject, got frame type {}",
+                other.ftype()
+            )))
+        }
+    };
+    // shared writer: the heartbeat thread and the job loop both send
+    // frames; the mutex keeps every frame's bytes contiguous on the wire
+    let writer = Arc::new(Mutex::new(
+        stream
+            .try_clone()
+            .map_err(|e| Error::Net(format!("cannot clone session stream: {e}")))?,
+    ));
+    let beat = Heartbeat::spawn(Arc::clone(&writer), heartbeat_ms);
+    let outcome = serve_loop(&mut stream, &writer, dataset, cfg, rt, scratch, pads);
+    beat.stop();
+    outcome
+}
+
+/// Serve assignments on an established session until shutdown or error.
+fn serve_loop(
+    stream: &mut TcpStream,
+    writer: &Arc<Mutex<TcpStream>>,
+    dataset: &Dataset,
+    cfg: &CoordinatorConfig,
+    rt: &Runtime,
+    scratch: &mut SubgraphScratch,
+    pads: &mut PadScratch,
+) -> Result<Outcome> {
+    loop {
+        match Message::read_from(stream) {
+            Ok(Message::Assign { part_id, attempt, members }) => {
+                let job = Job { part_id, members, attempt };
+                log::debug!(
+                    "assigned partition {part_id} (attempt {attempt}, {} nodes)",
+                    job.members.len()
+                );
+                let mut job_span = obs::span("net", "train_partition");
+                if obs::tracing_enabled() {
+                    job_span.attr("part", num(part_id as f64));
+                    job_span.attr("attempt", num(attempt as f64));
+                }
+                let reply = match worker::run_job(rt, dataset, &job, cfg, scratch, pads) {
+                    Ok((nodes, result)) => Message::Result {
+                        part_id,
+                        attempt,
+                        train_secs: result.train_secs,
+                        num_replicas: result.num_replicas as u64,
+                        losses: result.losses,
+                        // the shard ships as its exact on-disk LFS1 byte
+                        // image: the leader re-validates every section
+                        // checksum before trusting a row
+                        shard: crate::serve::encode_shard(
+                            part_id,
+                            &nodes,
+                            &result.embeddings,
+                            result.emb_dim,
+                        )?,
+                    },
+                    Err(e) => {
+                        log::warn!("partition {part_id} (attempt {attempt}) failed: {e}");
+                        Message::Failed {
+                            part_id,
+                            attempt,
+                            code: ErrorCode::of(&e),
+                            message: e.to_string(),
+                        }
+                    }
+                };
+                let mut w = writer.lock().unwrap_or_else(PoisonError::into_inner);
+                if let Err(e) = reply.write_to(&mut *w) {
+                    log::warn!("cannot send outcome for partition {part_id}: {e}");
+                    return Ok(Outcome::Disconnected);
+                }
+            }
+            Ok(Message::Shutdown) => {
+                let mut w = writer.lock().unwrap_or_else(PoisonError::into_inner);
+                let _ = Message::Bye.write_to(&mut *w);
+                return Ok(Outcome::Shutdown);
+            }
+            Ok(other) => {
+                log::debug!("ignoring unexpected frame type {}", other.ftype());
+            }
+            Err(e) => {
+                log::warn!("connection lost: {e}");
+                return Ok(Outcome::Disconnected);
+            }
+        }
+    }
+}
+
+/// Background heartbeat: one `Heartbeat` frame per interval, stopped by
+/// a condvar (no polling sleep). Exits on its own if the socket dies —
+/// the main loop notices the same death through its blocking read.
+struct Heartbeat {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeat {
+    fn spawn(writer: Arc<Mutex<TcpStream>>, interval_ms: u64) -> Heartbeat {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = Arc::clone(&stop);
+        // lint: allow(spawn_outside_parallel) — liveness beacon thread beside a blocking training loop, not a fork-join computation
+        let handle = std::thread::spawn(move || {
+            let (flag, cv) = &*stop2;
+            let mut stopped = flag.lock().unwrap_or_else(PoisonError::into_inner);
+            while !*stopped {
+                let (g, _) = cv
+                    .wait_timeout(stopped, Duration::from_millis(interval_ms.max(1)))
+                    .unwrap_or_else(PoisonError::into_inner);
+                stopped = g;
+                if *stopped {
+                    return;
+                }
+                // release the stop flag while touching the socket so
+                // stop() never waits on a stalled write
+                drop(stopped);
+                {
+                    let mut w = writer.lock().unwrap_or_else(PoisonError::into_inner);
+                    if Message::Heartbeat.write_to(&mut *w).is_err() {
+                        return;
+                    }
+                }
+                stopped = flag.lock().unwrap_or_else(PoisonError::into_inner);
+            }
+        });
+        Heartbeat { stop, handle: Some(handle) }
+    }
+
+    fn stop(mut self) {
+        let (flag, cv) = &*self.stop;
+        *flag.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Multi-process distributed transport: a hand-rolled, dependency-free
+//! TCP protocol turning the in-process coordinator into a real
+//! leader/worker cluster (`repro coordinator serve` + `repro worker
+//! join`).
+//!
+//! Layers, bottom up:
+//!
+//! - [`frame`] — `LFN1` length-prefixed binary frames: magic, version,
+//!   frame type, payload length, and a CRC-32 over header + payload.
+//!   Any damage (truncation, bit flip, bad magic/version, oversized
+//!   length) is a typed `Error::Net`; fault points `net.send` /
+//!   `net.recv` inject wire-level chaos here.
+//! - [`wire`] — typed [`wire::Message`]s over frames: handshake
+//!   (`Hello`/`Welcome`/`Reject` with the run fingerprint), job flow
+//!   (`Assign`/`Result`/`Failed` with the shared [`ErrorCode`]
+//!   taxonomy), liveness (`Heartbeat`), and drain (`Shutdown`/`Bye`).
+//!   Shards travel as their exact on-disk `LFS1` byte image.
+//! - [`server`] — the leader's accept loop plus one session proxy per
+//!   joined worker: heartbeat-deadline suspicion, grace-window
+//!   reconnect by session token, crash → requeue through the ordinary
+//!   retry machinery, idempotent result forwarding.
+//! - [`client`] — the worker: dial (+ `net.connect` fault point),
+//!   fingerprint handshake, heartbeats beside blocking training calls,
+//!   seeded-backoff redial on connection loss.
+//!
+//! The coordinator selects this transport via
+//! `coordinator::Transport::Tcp`; everything above the transport seam —
+//! retries, backoff, deadlines, journal, shard writes, metrics — is
+//! byte-for-byte the code the local mode runs, which is what makes a
+//! distributed run bit-identical to an in-process one.
+//!
+//! [`ErrorCode`]: crate::coordinator::ErrorCode
+
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod wire;
+
+pub use client::run_worker;
+pub use frame::{
+    crc32, decode_frame, encode_frame, read_frame, write_frame, Frame, HEADER_LEN,
+    MAX_FRAME_LEN, NET_MAGIC, NET_VERSION,
+};
+pub use server::TcpServer;
+pub use wire::Message;

@@ -1,0 +1,719 @@
+//! Leader-side TCP transport: accepts `worker join` processes and
+//! impersonates each one as a local worker toward the coordinator's
+//! event loop.
+//!
+//! Architecture: one nonblocking accept thread (handshake + fault point
+//! `net.accept`), and per session a blocking **reader thread** (socket →
+//! mailbox) plus a **session proxy thread** that owns the worker slot:
+//! it pops jobs from the shared [`JobQueue`], ships `Assign` frames,
+//! and forwards `Result`/`Failed` frames as the same [`WorkerEvent`]s an
+//! in-process worker thread would send. The coordinator's `drive` loop
+//! is transport-blind — retries, backoff, deadlines, and dedupe all run
+//! unchanged.
+//!
+//! Robustness semantics (see `DESIGN.md`, *Distributed*):
+//! - **Handshake**: the first frame must be `Hello` carrying the run
+//!   fingerprint; a mismatch is `Reject`ed before any slot is consumed.
+//! - **Liveness**: a session that stays silent past its seeded-jitter
+//!   deadline is *suspected*: its socket is closed, its in-flight job is
+//!   requeued through the ordinary failure path, and the worker gets a
+//!   grace window to reconnect (token-based resume). Past the window the
+//!   slot is retired exactly like a local worker that lost its runtime.
+//! - **Idempotent results**: every `Result` frame is forwarded; the
+//!   leader dedupes by `(part_id, attempt)`, so a result racing its own
+//!   requeue is harmless.
+//! - **Drain**: when the queue is exhausted the proxy sends `Shutdown`,
+//!   waits briefly for `Bye`, and closes; [`TcpServer::drain`] then
+//!   joins every thread.
+
+use super::wire::Message;
+use crate::config::NetConfig;
+use crate::coordinator::{ErrorCode, Job, JobQueue, WorkerEvent};
+use crate::error::{Error, Result};
+use crate::fault;
+use crate::obs;
+use crate::util::json::num;
+use crate::util::rng::splitmix64;
+use crate::util::Stopwatch;
+use std::collections::BTreeMap;
+use std::io::ErrorKind;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Accept-loop poll tick (std has no timed accept).
+const ACCEPT_TICK_MS: u64 = 20;
+
+/// Mailbox poll tick inside a session proxy (liveness/shutdown scan).
+const SESSION_TICK_MS: u64 = 50;
+
+/// A connection must deliver its `Hello` within this window, so one
+/// stalled dialer cannot block the accept loop for long.
+const HANDSHAKE_TIMEOUT_MS: u64 = 2000;
+
+/// Heartbeat intervals a session may stay silent before it is suspected
+/// (plus a seeded jitter below one interval, so a fleet of sessions
+/// never stampedes its deadlines in lockstep).
+const LIVENESS_BEATS: u64 = 3;
+
+/// What a session proxy delivers to its session thread.
+enum SessionMsg {
+    /// A reconnected worker's fresh stream (the new writer).
+    Attach(TcpStream),
+    /// A decoded frame from the current reader thread.
+    Frame(Message),
+    /// The reader thread lost the connection (error text).
+    Gone(String),
+}
+
+struct Registry {
+    /// token → (worker slot, session mailbox). Tokens are deterministic
+    /// (seed ^ fingerprint ^ slot through splitmix64) — this transport
+    /// trusts its network boundary like the rest of the crate trusts its
+    /// inputs; the token resumes sessions, it does not authenticate.
+    sessions: BTreeMap<u64, (u32, Sender<SessionMsg>)>,
+    /// Next unassigned worker slot.
+    next_slot: usize,
+    /// Sessions ever joined (monotone; disables the join deadline).
+    joined: usize,
+}
+
+struct Shared {
+    net: NetConfig,
+    seed: u64,
+    fingerprint: u64,
+    slots: usize,
+    queue: Arc<JobQueue>,
+    tx: Sender<WorkerEvent>,
+    shutdown: AtomicBool,
+    registry: Mutex<Registry>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn registry(&self) -> MutexGuard<'_, Registry> {
+        // sessions map updates are single-step inserts/removes — a
+        // poisoned lock cannot hold a half-applied registry
+        self.registry.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn track(&self, handle: JoinHandle<()>) {
+        self.handles.lock().unwrap_or_else(PoisonError::into_inner).push(handle);
+    }
+}
+
+/// The leader's listening endpoint. Started by the coordinator when
+/// `transport = tcp`; [`TcpServer::drain`] must be called after the
+/// event loop ends (the queue must already be shut down by then).
+pub struct TcpServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind, write the port file (if configured), and start accepting
+    /// `worker join` connections for `slots` worker slots.
+    pub fn start(
+        net: &NetConfig,
+        seed: u64,
+        fingerprint: u64,
+        slots: usize,
+        queue: Arc<JobQueue>,
+        tx: Sender<WorkerEvent>,
+    ) -> Result<TcpServer> {
+        let listener = TcpListener::bind(&net.bind)
+            .map_err(|e| Error::Net(format!("cannot bind {}: {e}", net.bind)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Net(format!("cannot read bound address: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Net(format!("cannot configure listener: {e}")))?;
+        if let Some(path) = &net.port_file {
+            // written after bind so a script polling the file never reads
+            // a port nobody listens on
+            std::fs::write(path, format!("{}\n", addr.port()))?;
+        }
+        let shared = Arc::new(Shared {
+            net: net.clone(),
+            seed,
+            fingerprint,
+            slots,
+            queue,
+            tx,
+            shutdown: AtomicBool::new(false),
+            registry: Mutex::new(Registry {
+                sessions: BTreeMap::new(),
+                next_slot: 0,
+                joined: 0,
+            }),
+            handles: Mutex::new(Vec::new()),
+        });
+        log::info!("coordinator listening on {addr} ({slots} worker slot(s))");
+        obs::event(
+            "net",
+            "serve.start",
+            vec![("port", num(addr.port() as f64)), ("slots", num(slots as f64))],
+        );
+        let sh = Arc::clone(&shared);
+        // lint: allow(spawn_outside_parallel) — long-lived accept loop for the TCP transport, not a fork-join computation
+        let accept = std::thread::spawn(move || accept_loop(&sh, listener));
+        Ok(TcpServer { shared, addr, accept: Some(accept) })
+    }
+
+    /// The bound address (port resolved, even when `bind` asked for 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake every session, and join all transport
+    /// threads. The job queue must already be shut down, so session
+    /// proxies fall out of `pop` and drain their workers.
+    pub fn drain(mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // sessions push reader handles while we join — keep taking until
+        // the vec stays empty
+        loop {
+            let batch: Vec<JoinHandle<()>> = {
+                let mut held =
+                    self.shared.handles.lock().unwrap_or_else(PoisonError::into_inner);
+                std::mem::take(&mut *held)
+            };
+            if batch.is_empty() {
+                break;
+            }
+            for h in batch {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn accept_loop(sh: &Arc<Shared>, listener: TcpListener) {
+    let sw = Stopwatch::start();
+    loop {
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if let Some(inj) = fault::point("net.accept").fire() {
+                    // no corruptible payload at accept: fail and corrupt
+                    // alike drop the connection pre-handshake — the
+                    // worker's dial-side retry absorbs it
+                    log::warn!("net.accept: dropping connection from {peer}: {}", inj.error());
+                    drop(stream);
+                    continue;
+                }
+                if let Err(e) = handshake(sh, stream) {
+                    log::warn!("handshake with {peer} failed: {e}");
+                }
+            }
+            Err(e) => {
+                if e.kind() != ErrorKind::WouldBlock {
+                    log::warn!("accept error: {e}");
+                }
+                let deadline = sh.net.join_timeout_secs;
+                if deadline > 0.0 && sh.registry().joined == 0 && sw.secs() > deadline {
+                    // nobody ever joined: retire every slot so the leader
+                    // aborts with its ordinary "all workers retired"
+                    // diagnosis instead of waiting forever
+                    log::error!("no worker joined within {deadline:.0}s; giving up");
+                    for wid in 0..sh.slots {
+                        let _ = sh.tx.send(WorkerEvent::Retired {
+                            worker: wid,
+                            error: format!("no worker joined within {deadline:.0}s"),
+                        });
+                    }
+                    return;
+                }
+                // lint: allow(sleep_outside_backoff) — std has no timed accept; bounded poll tick, not a retry loop
+                std::thread::sleep(Duration::from_millis(ACCEPT_TICK_MS));
+            }
+        }
+    }
+}
+
+/// Run the `Hello` → `Welcome`/`Reject` exchange on a fresh connection
+/// and hand the stream to a (new or resumed) session.
+fn handshake(sh: &Arc<Shared>, mut stream: TcpStream) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(Duration::from_millis(HANDSHAKE_TIMEOUT_MS)))
+        .map_err(|e| Error::Net(format!("cannot arm handshake timeout: {e}")))?;
+    let hello = Message::read_from(&mut stream)?;
+    let Message::Hello { token, fingerprint } = hello else {
+        return Err(Error::Net(format!(
+            "expected hello, got frame type {}",
+            hello.ftype()
+        )));
+    };
+    if fingerprint != sh.fingerprint {
+        let reason = format!(
+            "run fingerprint mismatch: worker {fingerprint:016x}, leader {:016x} — \
+             dataset, partitioning, seed, or training config differ",
+            sh.fingerprint
+        );
+        let _ = Message::Reject { reason: reason.clone() }.write_to(&mut stream);
+        return Err(Error::Net(reason));
+    }
+    // handshake timeout off: from here on the reader blocks freely and
+    // liveness is the session proxy's business
+    stream
+        .set_read_timeout(None)
+        .map_err(|e| Error::Net(format!("cannot clear handshake timeout: {e}")))?;
+    if token == 0 {
+        join_session(sh, stream)
+    } else {
+        resume_session(sh, stream, token)
+    }
+}
+
+fn join_session(sh: &Arc<Shared>, mut stream: TcpStream) -> Result<()> {
+    let (wid, token) = {
+        let mut reg = sh.registry();
+        if reg.next_slot >= sh.slots {
+            drop(reg);
+            let reason = format!("cluster full: all {} worker slot(s) joined", sh.slots);
+            let _ = Message::Reject { reason: reason.clone() }.write_to(&mut stream);
+            return Err(Error::Net(reason));
+        }
+        let wid = reg.next_slot;
+        reg.next_slot += 1;
+        reg.joined += 1;
+        // deterministic, clock-free session token; nonzero by |1 (zero
+        // means "fresh join" on the wire)
+        let mut state =
+            sh.seed ^ sh.fingerprint ^ (wid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (wid, splitmix64(&mut state) | 1)
+    };
+    if let Err(e) = (Message::Welcome {
+        worker: wid as u32,
+        token,
+        heartbeat_ms: sh.net.heartbeat_ms,
+    })
+    .write_to(&mut stream)
+    {
+        // the slot was reserved but its worker is gone before it ever
+        // joined — retire it so the leader's live-worker accounting stays
+        // exact instead of waiting on a ghost
+        let _ = sh.tx.send(WorkerEvent::Retired {
+            worker: wid,
+            error: format!("handshake write failed: {e}"),
+        });
+        return Err(e);
+    }
+    let (stx, srx) = mpsc::channel::<SessionMsg>();
+    sh.registry().sessions.insert(token, (wid as u32, stx.clone()));
+    obs::registry().counter("net.sessions_joined").inc();
+    obs::event("net", "session.joined", vec![("worker", num(wid as f64))]);
+    log::info!("worker {wid} joined (session {token:016x})");
+    let reader = stream
+        .try_clone()
+        .map_err(|e| Error::Net(format!("cannot clone session stream: {e}")))?;
+    spawn_reader(sh, reader, stx);
+    let sh2 = Arc::clone(sh);
+    // lint: allow(spawn_outside_parallel) — one long-lived proxy thread per remote worker session, not a fork-join computation
+    let handle = std::thread::spawn(move || {
+        Session::new(sh2, wid, token, srx, stream).run();
+    });
+    sh.track(handle);
+    Ok(())
+}
+
+fn resume_session(sh: &Arc<Shared>, mut stream: TcpStream, token: u64) -> Result<()> {
+    let entry = sh.registry().sessions.get(&token).cloned();
+    let Some((wid, stx)) = entry else {
+        let reason = "unknown session token (session retired or never existed)".to_string();
+        let _ = Message::Reject { reason: reason.clone() }.write_to(&mut stream);
+        return Err(Error::Net(reason));
+    };
+    // welcome first: the session proxy may write an Assign the moment the
+    // stream is attached, and the worker expects Welcome before anything
+    (Message::Welcome { worker: wid, token, heartbeat_ms: sh.net.heartbeat_ms })
+        .write_to(&mut stream)?;
+    let reader = stream
+        .try_clone()
+        .map_err(|e| Error::Net(format!("cannot clone session stream: {e}")))?;
+    if stx.send(SessionMsg::Attach(stream)).is_err() {
+        let reason = "session just retired".to_string();
+        let mut via_reader = reader;
+        let _ = Message::Reject { reason: reason.clone() }.write_to(&mut via_reader);
+        return Err(Error::Net(reason));
+    }
+    obs::registry().counter("net.reconnects").inc();
+    obs::event("net", "session.reconnected", vec![("worker", num(wid as f64))]);
+    log::info!("worker {wid} reconnected (session {token:016x})");
+    spawn_reader(sh, reader, stx);
+    Ok(())
+}
+
+/// Blocking frame pump: socket → session mailbox. Exits on any read
+/// error (`Gone`) or once the session is over (mailbox closed).
+fn spawn_reader(sh: &Arc<Shared>, mut stream: TcpStream, to_session: Sender<SessionMsg>) {
+    // lint: allow(spawn_outside_parallel) — blocking socket reader pumping frames into the session mailbox, not a fork-join computation
+    let handle = std::thread::spawn(move || loop {
+        match Message::read_from(&mut stream) {
+            Ok(msg) => {
+                if to_session.send(SessionMsg::Frame(msg)).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = to_session.send(SessionMsg::Gone(e.to_string()));
+                return;
+            }
+        }
+    });
+    sh.track(handle);
+}
+
+/// Why an assignment round ended without a forwarded outcome.
+enum AssignEnd {
+    /// Result or Failed for this job was forwarded to the leader.
+    Done,
+    /// The job must be requeued (connection trouble); the session may
+    /// still be alive (reattached) or awaiting its grace window.
+    Requeue(String),
+    /// The server is shutting down.
+    Shutdown,
+}
+
+/// One remote worker's slot proxy: owns the mailbox, the current writer
+/// stream, and the liveness clock.
+struct Session {
+    sh: Arc<Shared>,
+    wid: usize,
+    token: u64,
+    rx: Receiver<SessionMsg>,
+    writer: Option<TcpStream>,
+    /// Silence budget before suspicion, with seeded per-slot jitter.
+    liveness_ms: f64,
+}
+
+impl Session {
+    fn new(
+        sh: Arc<Shared>,
+        wid: usize,
+        token: u64,
+        rx: Receiver<SessionMsg>,
+        writer: TcpStream,
+    ) -> Session {
+        let hb = sh.net.heartbeat_ms.max(1);
+        let mut state = sh.seed ^ sh.fingerprint ^ (wid as u64) ^ 0x11FE;
+        let jitter = splitmix64(&mut state) % hb;
+        let liveness_ms = (hb * LIVENESS_BEATS + jitter) as f64;
+        Session { sh, wid, token, rx, writer: Some(writer), liveness_ms }
+    }
+
+    fn run(mut self) {
+        let mut span = obs::span("net", "session");
+        if obs::tracing_enabled() {
+            span.attr("worker", num(self.wid as f64));
+        }
+        loop {
+            self.drain_mailbox();
+            if self.sh.shutdown.load(Ordering::Relaxed) {
+                self.hangup();
+                return;
+            }
+            if self.writer.is_none() && !self.await_reattach() {
+                self.retire("connection lost");
+                return;
+            }
+            let Some(job) = self.sh.queue.pop(self.wid) else {
+                self.drain_worker();
+                return;
+            };
+            // Started first: the leader attributes failures to the
+            // attempt it believes is running, so the proxy must register
+            // the attempt before anything can fail it
+            let _ = self
+                .sh
+                .tx
+                .send(WorkerEvent::Started { worker: self.wid, part_id: job.part_id });
+            match self.run_assignment(&job) {
+                AssignEnd::Done => {}
+                AssignEnd::Requeue(why) => {
+                    log::warn!(
+                        "worker {}: requeueing partition {} (attempt {}): {why}",
+                        self.wid,
+                        job.part_id,
+                        job.attempt
+                    );
+                    obs::registry().counter("net.jobs_requeued").inc();
+                    let _ = self.sh.tx.send(WorkerEvent::Failed {
+                        worker: self.wid,
+                        part_id: job.part_id,
+                        code: ErrorCode::Net,
+                        message: why,
+                    });
+                }
+                AssignEnd::Shutdown => {
+                    self.hangup();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Ship `Assign` and pump the mailbox until this job concludes, the
+    /// connection degrades, or the server shuts down.
+    fn run_assignment(&mut self, job: &Job) -> AssignEnd {
+        let assign = Message::Assign {
+            part_id: job.part_id,
+            attempt: job.attempt,
+            members: job.members.clone(),
+        };
+        match &mut self.writer {
+            Some(w) => {
+                if let Err(e) = assign.write_to(w) {
+                    self.suspect();
+                    return AssignEnd::Requeue(format!("assign write failed: {e}"));
+                }
+            }
+            None => return AssignEnd::Requeue("no connection at assign time".into()),
+        }
+        let mut idle = Stopwatch::start();
+        loop {
+            if self.sh.shutdown.load(Ordering::Relaxed) {
+                return AssignEnd::Shutdown;
+            }
+            match self.rx.recv_timeout(Duration::from_millis(SESSION_TICK_MS)) {
+                Ok(SessionMsg::Frame(msg)) => {
+                    idle = Stopwatch::start();
+                    match msg {
+                        Message::Heartbeat => {}
+                        Message::Result { .. } => {
+                            let mine = self.forward_result(msg, job);
+                            if mine {
+                                return AssignEnd::Done;
+                            }
+                        }
+                        Message::Failed { part_id, attempt: _, code, message } => {
+                            let _ = self.sh.tx.send(WorkerEvent::Failed {
+                                worker: self.wid,
+                                part_id,
+                                code,
+                                message,
+                            });
+                            if part_id == job.part_id {
+                                return AssignEnd::Done;
+                            }
+                        }
+                        Message::Bye => {
+                            // worker is leaving mid-assignment
+                            self.suspect();
+                            return AssignEnd::Requeue("worker said goodbye mid-job".into());
+                        }
+                        other => {
+                            log::debug!(
+                                "worker {}: ignoring unexpected frame type {}",
+                                self.wid,
+                                other.ftype()
+                            );
+                        }
+                    }
+                }
+                Ok(SessionMsg::Attach(stream)) => {
+                    // the worker reconnected: its previous connection —
+                    // and with it the in-flight assignment — is gone; the
+                    // retry path retrains it (bit-identically: the train
+                    // seed never depends on the attempt)
+                    self.writer = Some(stream);
+                    return AssignEnd::Requeue("worker reconnected; assignment lost".into());
+                }
+                Ok(SessionMsg::Gone(e)) => {
+                    self.suspect();
+                    return AssignEnd::Requeue(format!("connection lost mid-job: {e}"));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if idle.millis() > self.liveness_ms {
+                        self.suspect();
+                        return AssignEnd::Requeue(format!(
+                            "liveness deadline expired ({:.0}ms silent)",
+                            idle.millis()
+                        ));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // unreachable while the registry holds a mailbox
+                    // sender; treat as a lost connection all the same
+                    self.suspect();
+                    return AssignEnd::Requeue("session mailbox closed".into());
+                }
+            }
+        }
+    }
+
+    /// Decode a `Result` frame into the same `Finished` event a local
+    /// worker sends. A shard that fails its `LFS1` checksums after a
+    /// CRC-valid frame is a *transient* failure — retrain, don't abort.
+    /// Returns whether the frame concluded `job`.
+    fn forward_result(&self, msg: Message, job: &Job) -> bool {
+        let Message::Result { part_id, attempt, train_secs, num_replicas, losses, shard } = msg
+        else {
+            return false;
+        };
+        match crate::serve::decode_shard_bytes(&shard) {
+            Ok((header, data)) if header.part_id == part_id => {
+                let result = crate::train::TrainedPartition {
+                    losses,
+                    embeddings: data,
+                    emb_dim: header.dim,
+                    logits: Vec::new(),
+                    num_classes: 0,
+                    num_replicas: num_replicas as usize,
+                    train_secs,
+                    exec_stats: None,
+                };
+                let _ = self.sh.tx.send(WorkerEvent::Finished {
+                    worker: self.wid,
+                    part_id,
+                    attempt,
+                    nodes: header.nodes,
+                    result,
+                });
+            }
+            Ok((header, _)) => {
+                let _ = self.sh.tx.send(WorkerEvent::Failed {
+                    worker: self.wid,
+                    part_id,
+                    code: ErrorCode::Net,
+                    message: format!(
+                        "result shard labeled partition {} (expected {part_id})",
+                        header.part_id
+                    ),
+                });
+            }
+            Err(e) => {
+                let _ = self.sh.tx.send(WorkerEvent::Failed {
+                    worker: self.wid,
+                    part_id,
+                    code: ErrorCode::Net,
+                    message: format!("result shard rejected: {e}"),
+                });
+            }
+        }
+        part_id == job.part_id && attempt == job.attempt
+    }
+
+    /// Handle anything already in the mailbox without blocking (frames
+    /// and disconnects that arrived while the proxy was between jobs).
+    fn drain_mailbox(&mut self) {
+        while let Ok(msg) = self.rx.try_recv() {
+            match msg {
+                SessionMsg::Attach(stream) => self.writer = Some(stream),
+                SessionMsg::Gone(e) => {
+                    log::debug!("worker {}: connection lost while idle: {e}", self.wid);
+                    self.suspect();
+                }
+                SessionMsg::Frame(m) => {
+                    // forward stale results (the leader dedupes); drop
+                    // the rest — there is no assignment to conclude
+                    if matches!(m, Message::Result { .. }) {
+                        let never = Job { part_id: u32::MAX, members: Vec::new(), attempt: 0 };
+                        self.forward_result(m, &never);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mark the connection suspect: close the socket (unblocks the
+    /// reader and forces the worker's next read/write to fail fast so it
+    /// reconnects) and drop the writer.
+    fn suspect(&mut self) {
+        obs::registry().counter("net.sessions_suspected").inc();
+        if let Some(w) = self.writer.take() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Grace window: wait for the worker to reconnect (an `Attach` in
+    /// the mailbox). True = reattached (or server shutdown, which the
+    /// caller checks next); false = the window expired.
+    fn await_reattach(&mut self) -> bool {
+        let sw = Stopwatch::start();
+        log::warn!(
+            "worker {}: suspected; waiting {}ms for a reconnect",
+            self.wid,
+            self.sh.net.grace_ms
+        );
+        while sw.millis() < self.sh.net.grace_ms as f64 {
+            if self.sh.shutdown.load(Ordering::Relaxed) {
+                return true;
+            }
+            match self.rx.recv_timeout(Duration::from_millis(SESSION_TICK_MS)) {
+                Ok(SessionMsg::Attach(stream)) => {
+                    self.writer = Some(stream);
+                    return true;
+                }
+                // stale frames/disconnects from the dead connection
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return false,
+            }
+        }
+        false
+    }
+
+    /// Graceful worker drain once the queue is exhausted: `Shutdown`,
+    /// bounded wait for `Bye`, close.
+    fn drain_worker(&mut self) {
+        if let Some(w) = &mut self.writer {
+            if Message::Shutdown.write_to(w).is_ok() {
+                let sw = Stopwatch::start();
+                while sw.millis() < self.sh.net.grace_ms as f64 {
+                    match self.rx.recv_timeout(Duration::from_millis(SESSION_TICK_MS)) {
+                        Ok(SessionMsg::Frame(Message::Bye)) | Ok(SessionMsg::Gone(_)) => break,
+                        Ok(_) => {}
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }
+        }
+        log::debug!("worker {}: drained", self.wid);
+        self.hangup();
+    }
+
+    /// Best-effort `Shutdown` notice (server teardown), then hang up.
+    fn hangup(&mut self) {
+        if let Some(w) = &mut self.writer {
+            let _ = Message::Shutdown.write_to(w);
+        }
+        self.finish();
+    }
+
+    /// Retire this slot: the worker stayed gone past its grace window —
+    /// the exact analogue of a local worker losing its runtime.
+    fn retire(&mut self, why: &str) {
+        obs::registry().counter("net.sessions_retired").inc();
+        obs::event("net", "session.retired", vec![("worker", num(self.wid as f64))]);
+        let _ = self.sh.tx.send(WorkerEvent::Retired {
+            worker: self.wid,
+            error: format!(
+                "{why}; no reconnect within the {}ms grace window",
+                self.sh.net.grace_ms
+            ),
+        });
+        self.finish();
+    }
+
+    /// Common teardown: deregister the token and close the socket (which
+    /// also unblocks this session's reader thread).
+    fn finish(&mut self) {
+        self.sh.registry().sessions.remove(&self.token);
+        if let Some(w) = self.writer.take() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+}

@@ -1,0 +1,540 @@
+//! Typed messages over `LFN1` frames: the complete leader↔worker
+//! vocabulary of the distributed coordinator.
+//!
+//! Each [`Message`] variant maps to one frame type; payloads are encoded
+//! with the bounds-checked little-endian helpers below (length-prefixed
+//! vectors and strings, `count × size ≤ remaining` guarded before any
+//! allocation, trailing bytes rejected). Like the frame layer, every
+//! malformed payload is a typed [`Error::Net`] — a peer speaking
+//! garbage, or a CRC collision slipping a damaged frame through, can
+//! never panic the process or be half-accepted.
+//!
+//! Trained shards travel as their exact on-disk `LFS1` byte image
+//! (`serve::encode_shard` on the worker, `serve::decode_shard_bytes` on
+//! the leader), so the wire inherits the shard format's own section
+//! checksums on top of the frame CRC, and the leader writes bytes that
+//! are bit-identical to a local run's.
+
+use super::frame::{read_frame, write_frame, Frame};
+use crate::coordinator::ErrorCode;
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+use std::io::{Read, Write};
+
+/// Frame type tags (the `ftype` header field).
+pub const FT_HELLO: u16 = 1;
+pub const FT_WELCOME: u16 = 2;
+pub const FT_REJECT: u16 = 3;
+pub const FT_ASSIGN: u16 = 4;
+pub const FT_RESULT: u16 = 5;
+pub const FT_FAILED: u16 = 6;
+pub const FT_HEARTBEAT: u16 = 7;
+pub const FT_SHUTDOWN: u16 = 8;
+pub const FT_BYE: u16 = 9;
+
+/// A protocol message. See `DESIGN.md` (*Distributed*) for the
+/// handshake and session state machines these drive.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Worker → leader, first frame on every connection. `token == 0`
+    /// asks for a fresh session; a nonzero token resumes a suspected
+    /// session within its grace window. The fingerprint is the journal's
+    /// run fingerprint computed from the worker's own config + locally
+    /// partitioned dataset — agreement proves both processes describe
+    /// the same run.
+    Hello { token: u64, fingerprint: u64 },
+    /// Leader → worker: session accepted. Carries the assigned worker
+    /// slot, the session token to present on reconnect, and the
+    /// heartbeat cadence the worker must keep.
+    Welcome { worker: u32, token: u64, heartbeat_ms: u64 },
+    /// Leader → worker: session refused (fingerprint mismatch, cluster
+    /// full, unknown token). Permanent — the worker must not retry.
+    Reject { reason: String },
+    /// Leader → worker: train this partition. Members are authoritative
+    /// (the worker's own partitioning is only used for the handshake
+    /// fingerprint).
+    Assign { part_id: u32, attempt: u32, members: Vec<NodeId> },
+    /// Worker → leader: training succeeded. `shard` is the partition's
+    /// `LFS1` byte image; `nodes`/losses/stats mirror the in-process
+    /// `WorkerEvent::Finished` fields the leader needs.
+    Result {
+        part_id: u32,
+        attempt: u32,
+        train_secs: f64,
+        num_replicas: u64,
+        losses: Vec<f32>,
+        shard: Vec<u8>,
+    },
+    /// Worker → leader: training failed with a typed [`ErrorCode`] —
+    /// the same transient-vs-permanent taxonomy the in-process channel
+    /// uses, now wire-portable.
+    Failed { part_id: u32, attempt: u32, code: ErrorCode, message: String },
+    /// Worker → leader: liveness beacon (any frame refreshes liveness;
+    /// this one exists for idle periods).
+    Heartbeat,
+    /// Leader → worker: drain — finish nothing new, acknowledge with
+    /// [`Message::Bye`], close.
+    Shutdown,
+    /// Worker → leader: drain acknowledged.
+    Bye,
+}
+
+// ---------------------------------------------------------------------
+// payload encoding
+
+struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    fn new() -> PayloadWriter {
+        PayloadWriter { buf: Vec::new() }
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, v: &[u8]) -> Result<()> {
+        self.u32(checked_len(v.len())?);
+        self.buf.extend_from_slice(v);
+        Ok(())
+    }
+
+    fn str(&mut self, v: &str) -> Result<()> {
+        self.bytes(v.as_bytes())
+    }
+
+    fn u32s(&mut self, v: &[u32]) -> Result<()> {
+        self.u32(checked_len(v.len())?);
+        for x in v {
+            self.u32(*x);
+        }
+        Ok(())
+    }
+
+    fn f32s(&mut self, v: &[f32]) -> Result<()> {
+        self.u32(checked_len(v.len())?);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+}
+
+fn checked_len(n: usize) -> Result<u32> {
+    u32::try_from(n).map_err(|_| Error::Net(format!("payload collection too long: {n} items")))
+}
+
+struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn new(buf: &'a [u8], what: &'static str) -> PayloadReader<'a> {
+        PayloadReader { buf, pos: 0, what }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(Error::Net(format!(
+                "truncated {} payload: wanted {n} bytes, {} left",
+                self.what,
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Element count for a list of `size`-byte items, validated against
+    /// the bytes actually present — a corrupt count can never drive an
+    /// oversized allocation.
+    fn count(&mut self, size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let fits = n.checked_mul(size).is_some_and(|total| total <= self.remaining());
+        if !fits {
+            return Err(Error::Net(format!(
+                "corrupt {} payload: {n} items of {size} bytes exceed {} remaining",
+                self.what,
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let raw = self.bytes()?;
+        String::from_utf8(raw)
+            .map_err(|_| Error::Net(format!("corrupt {} payload: invalid utf-8", self.what)))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.take(4)?;
+            out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Net(format!(
+                "corrupt {} payload: {} trailing bytes",
+                self.what,
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Frame type tag for this message.
+    pub fn ftype(&self) -> u16 {
+        match self {
+            Message::Hello { .. } => FT_HELLO,
+            Message::Welcome { .. } => FT_WELCOME,
+            Message::Reject { .. } => FT_REJECT,
+            Message::Assign { .. } => FT_ASSIGN,
+            Message::Result { .. } => FT_RESULT,
+            Message::Failed { .. } => FT_FAILED,
+            Message::Heartbeat => FT_HEARTBEAT,
+            Message::Shutdown => FT_SHUTDOWN,
+            Message::Bye => FT_BYE,
+        }
+    }
+
+    /// Encode this message's payload (frame header added by the caller).
+    pub fn encode_payload(&self) -> Result<Vec<u8>> {
+        let mut w = PayloadWriter::new();
+        match self {
+            Message::Hello { token, fingerprint } => {
+                w.u64(*token);
+                w.u64(*fingerprint);
+            }
+            Message::Welcome { worker, token, heartbeat_ms } => {
+                w.u32(*worker);
+                w.u64(*token);
+                w.u64(*heartbeat_ms);
+            }
+            Message::Reject { reason } => w.str(reason)?,
+            Message::Assign { part_id, attempt, members } => {
+                w.u32(*part_id);
+                w.u32(*attempt);
+                w.u32s(members)?;
+            }
+            Message::Result { part_id, attempt, train_secs, num_replicas, losses, shard } => {
+                w.u32(*part_id);
+                w.u32(*attempt);
+                w.f64(*train_secs);
+                w.u64(*num_replicas);
+                w.f32s(losses)?;
+                w.bytes(shard)?;
+            }
+            Message::Failed { part_id, attempt, code, message } => {
+                w.u32(*part_id);
+                w.u32(*attempt);
+                w.u16(code.as_u16());
+                w.str(message)?;
+            }
+            Message::Heartbeat | Message::Shutdown | Message::Bye => {}
+        }
+        Ok(w.buf)
+    }
+
+    /// Decode a message from a CRC-verified frame. Unknown frame types
+    /// and malformed payloads are [`Error::Net`].
+    pub fn decode(frame: &Frame) -> Result<Message> {
+        let msg = match frame.ftype {
+            FT_HELLO => {
+                let mut r = PayloadReader::new(&frame.payload, "hello");
+                let m = Message::Hello { token: r.u64()?, fingerprint: r.u64()? };
+                r.finish()?;
+                m
+            }
+            FT_WELCOME => {
+                let mut r = PayloadReader::new(&frame.payload, "welcome");
+                let m = Message::Welcome {
+                    worker: r.u32()?,
+                    token: r.u64()?,
+                    heartbeat_ms: r.u64()?,
+                };
+                r.finish()?;
+                m
+            }
+            FT_REJECT => {
+                let mut r = PayloadReader::new(&frame.payload, "reject");
+                let m = Message::Reject { reason: r.str()? };
+                r.finish()?;
+                m
+            }
+            FT_ASSIGN => {
+                let mut r = PayloadReader::new(&frame.payload, "assign");
+                let m = Message::Assign {
+                    part_id: r.u32()?,
+                    attempt: r.u32()?,
+                    members: r.u32s()?,
+                };
+                r.finish()?;
+                m
+            }
+            FT_RESULT => {
+                let mut r = PayloadReader::new(&frame.payload, "result");
+                let m = Message::Result {
+                    part_id: r.u32()?,
+                    attempt: r.u32()?,
+                    train_secs: r.f64()?,
+                    num_replicas: r.u64()?,
+                    losses: r.f32s()?,
+                    shard: r.bytes()?,
+                };
+                r.finish()?;
+                m
+            }
+            FT_FAILED => {
+                let mut r = PayloadReader::new(&frame.payload, "failed");
+                let part_id = r.u32()?;
+                let attempt = r.u32()?;
+                let raw = r.u16()?;
+                let code = ErrorCode::from_u16(raw).ok_or_else(|| {
+                    Error::Net(format!("corrupt failed payload: unknown error code {raw}"))
+                })?;
+                let m = Message::Failed { part_id, attempt, code, message: r.str()? };
+                r.finish()?;
+                m
+            }
+            FT_HEARTBEAT | FT_SHUTDOWN | FT_BYE => {
+                let r = PayloadReader::new(
+                    &frame.payload,
+                    match frame.ftype {
+                        FT_HEARTBEAT => "heartbeat",
+                        FT_SHUTDOWN => "shutdown",
+                        _ => "bye",
+                    },
+                );
+                r.finish()?;
+                match frame.ftype {
+                    FT_HEARTBEAT => Message::Heartbeat,
+                    FT_SHUTDOWN => Message::Shutdown,
+                    _ => Message::Bye,
+                }
+            }
+            other => return Err(Error::Net(format!("unknown frame type {other}"))),
+        };
+        Ok(msg)
+    }
+
+    /// Encode and write this message as one frame.
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        let payload = self.encode_payload()?;
+        write_frame(w, self.ftype(), &payload)
+    }
+
+    /// Read and decode one message from the stream.
+    pub fn read_from(r: &mut impl Read) -> Result<Message> {
+        let frame = read_frame(r)?;
+        Message::decode(&frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::encode_frame;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(msg: &Message) -> Message {
+        let mut buf: Vec<u8> = Vec::new();
+        msg.write_to(&mut buf).unwrap();
+        let mut r: &[u8] = &buf;
+        Message::read_from(&mut r).unwrap()
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let msgs = vec![
+            Message::Hello { token: 0, fingerprint: 0xDEAD_BEEF_CAFE },
+            Message::Welcome { worker: 3, token: u64::MAX, heartbeat_ms: 500 },
+            Message::Reject { reason: "fingerprint mismatch".into() },
+            Message::Assign { part_id: 7, attempt: 2, members: vec![0, 5, 9, u32::MAX] },
+            Message::Result {
+                part_id: 1,
+                attempt: 0,
+                train_secs: 0.125,
+                num_replicas: 42,
+                losses: vec![1.5, f32::NAN, -0.0],
+                shard: vec![1, 2, 3, 255],
+            },
+            Message::Failed {
+                part_id: 9,
+                attempt: 3,
+                code: ErrorCode::Fault,
+                message: "injected fault at worker.train".into(),
+            },
+            Message::Heartbeat,
+            Message::Shutdown,
+            Message::Bye,
+        ];
+        for msg in &msgs {
+            let back = roundtrip(msg);
+            // NaN-safe comparison: compare at the bit level via re-encode
+            assert_eq!(
+                back.encode_payload().unwrap(),
+                msg.encode_payload().unwrap(),
+                "payload mismatch for {msg:?}"
+            );
+            assert_eq!(back.ftype(), msg.ftype());
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_frame_type_and_code() {
+        let frame = Frame { ftype: 999, payload: vec![] };
+        assert!(matches!(Message::decode(&frame), Err(Error::Net(_))));
+        // Failed with an unmapped error code: reject, don't guess
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&7u32.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        bad.extend_from_slice(&999u16.to_le_bytes());
+        bad.extend_from_slice(&0u32.to_le_bytes()); // empty message string
+        let frame = Frame { ftype: FT_FAILED, payload: bad };
+        assert!(matches!(Message::decode(&frame), Err(Error::Net(_))));
+    }
+
+    #[test]
+    fn rejects_trailing_and_truncated_payloads() {
+        let hello = Message::Hello { token: 1, fingerprint: 2 };
+        let mut payload = hello.encode_payload().unwrap();
+        payload.push(0); // trailing byte
+        assert!(matches!(
+            Message::decode(&Frame { ftype: FT_HELLO, payload }),
+            Err(Error::Net(_))
+        ));
+        let mut payload = hello.encode_payload().unwrap();
+        payload.truncate(11);
+        assert!(matches!(
+            Message::decode(&Frame { ftype: FT_HELLO, payload }),
+            Err(Error::Net(_))
+        ));
+        // heartbeat must be empty
+        assert!(matches!(
+            Message::decode(&Frame { ftype: FT_HEARTBEAT, payload: vec![9] }),
+            Err(Error::Net(_))
+        ));
+    }
+
+    #[test]
+    fn corrupt_count_cannot_drive_allocation() {
+        // an Assign whose member count claims 1B entries but carries none:
+        // the count-vs-remaining guard must reject before reserving
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&1_000_000_000u32.to_le_bytes());
+        assert!(matches!(
+            Message::decode(&Frame { ftype: FT_ASSIGN, payload }),
+            Err(Error::Net(_))
+        ));
+    }
+
+    /// Property: random payload bytes under every known frame type
+    /// either decode to a message that re-encodes to the same bytes, or
+    /// fail as a typed `Error::Net` — never a panic.
+    #[test]
+    fn prop_fuzzed_payloads_never_panic() {
+        const FTYPES: &[u16] = &[
+            FT_HELLO, FT_WELCOME, FT_REJECT, FT_ASSIGN, FT_RESULT, FT_FAILED, FT_HEARTBEAT,
+            FT_SHUTDOWN, FT_BYE, 0, 4242,
+        ];
+        prop::check(
+            "wire-fuzz",
+            80,
+            0x51FE,
+            |rng: &mut Rng| {
+                let ftype = FTYPES[rng.index(FTYPES.len())];
+                let len = rng.index(64);
+                let payload: Vec<u8> = (0..len).map(|_| rng.index(256) as u8).collect();
+                (ftype, payload)
+            },
+            |(ftype, payload)| {
+                let frame = Frame { ftype: *ftype, payload: payload.clone() };
+                match Message::decode(&frame) {
+                    Ok(msg) => {
+                        let re = msg.encode_payload().map_err(|e| format!("re-encode: {e}"))?;
+                        if &re != payload {
+                            return Err("accepted payload does not re-encode identically".into());
+                        }
+                        Ok(())
+                    }
+                    Err(Error::Net(_)) => Ok(()),
+                    Err(other) => Err(format!("expected Error::Net, got {other}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn message_survives_frame_layer() {
+        // a full frame encode → decode → message decode chain
+        let msg = Message::Assign { part_id: 3, attempt: 1, members: vec![10, 20, 30] };
+        let bytes = encode_frame(msg.ftype(), &msg.encode_payload().unwrap()).unwrap();
+        let frame = crate::net::frame::decode_frame(&bytes).unwrap();
+        assert_eq!(Message::decode(&frame).unwrap(), msg);
+    }
+}

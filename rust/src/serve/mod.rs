@@ -45,7 +45,7 @@ pub use cache::{Flight, Lookup, LruCache, ResultCache, MAX_LRU_CAPACITY};
 pub use engine::{Engine, EngineConfig, EngineStats, NodeStatus, Prediction};
 pub use index::{IndexLayout, OwnershipIndex};
 pub use shard::{
-    read_shard, read_shard_header, shard_file_name, write_shard, ShardEntry, ShardHeader,
-    ShardManifest, CLASSIFIER_FILE, SHARD_MANIFEST_FILE,
+    decode_shard_bytes, encode_shard, read_shard, read_shard_header, shard_file_name,
+    write_shard, ShardEntry, ShardHeader, ShardManifest, CLASSIFIER_FILE, SHARD_MANIFEST_FILE,
 };
 pub use store::ShardedEmbeddingStore;

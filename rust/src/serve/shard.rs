@@ -78,6 +78,54 @@ fn header_crc(part_id: u32, rows: u64, dim: u32, nodes: &[NodeId]) -> u64 {
     h.finish()
 }
 
+/// Encode one partition's owned-node embeddings as `LFS1` bytes — the
+/// exact byte sequence [`write_shard`] puts on disk. Shared by the file
+/// writer and the net transport, which ships trained shards over the
+/// wire through this same checksummed format so the leader validates
+/// remote results with the very path serving trusts.
+pub fn encode_shard(part_id: u32, nodes: &[NodeId], emb: &[f32], dim: usize) -> Result<Vec<u8>> {
+    if emb.len() != nodes.len() * dim {
+        return Err(Error::Serve(format!(
+            "shard block {} != {} nodes × dim {dim}",
+            emb.len(),
+            nodes.len()
+        )));
+    }
+    let mut out: Vec<u8> =
+        Vec::with_capacity(20 + nodes.len() * 4 + 8 + emb.len() * 4 + 8 + 8);
+    out.extend_from_slice(SHARD_MAGIC);
+    out.extend_from_slice(&part_id.to_le_bytes());
+    out.extend_from_slice(&(nodes.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    for &v in nodes {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(
+        &header_crc(part_id, nodes.len() as u64, dim as u32, nodes).to_le_bytes(),
+    );
+    let mut data_crc = Fnv64::new();
+    for &x in emb {
+        let bytes = x.to_le_bytes();
+        data_crc.write(&bytes);
+        out.extend_from_slice(&bytes);
+    }
+    out.extend_from_slice(&data_crc.finish().to_le_bytes());
+    out.extend_from_slice(&(nodes.len() as u64).to_le_bytes()); // trailer
+    Ok(out)
+}
+
+/// Decode and fully validate `LFS1` bytes: the in-memory equivalent of
+/// [`read_shard`] — same magic/length/checksum/trailer guards, same
+/// clean [`Error::Serve`] on any damage, no filesystem and no
+/// `shard.read` fault point (wire transport has its own `net.*`
+/// domain).
+pub fn decode_shard_bytes(bytes: &[u8]) -> Result<(ShardHeader, Vec<f32>)> {
+    let mut r: &[u8] = bytes;
+    let header = read_header_impl(&mut r, "inline shard", bytes.len() as u64, false)?;
+    let data = read_body_impl(&mut r, "inline shard", &header)?;
+    Ok((header, data))
+}
+
 /// Write one partition's owned-node embeddings as an `LFS1` shard.
 pub fn write_shard(
     path: &Path,
@@ -92,33 +140,12 @@ pub fn write_shard(
             return Err(inj.error());
         }
     }
-    if emb.len() != nodes.len() * dim {
-        return Err(Error::Serve(format!(
-            "shard block {} != {} nodes × dim {dim}",
-            emb.len(),
-            nodes.len()
-        )));
-    }
+    let encoded = encode_shard(part_id, nodes, emb, dim)?;
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
     let mut out = BufWriter::new(std::fs::File::create(path)?);
-    out.write_all(SHARD_MAGIC)?;
-    out.write_all(&part_id.to_le_bytes())?;
-    out.write_all(&(nodes.len() as u64).to_le_bytes())?;
-    out.write_all(&(dim as u32).to_le_bytes())?;
-    for &v in nodes {
-        out.write_all(&v.to_le_bytes())?;
-    }
-    out.write_all(&header_crc(part_id, nodes.len() as u64, dim as u32, nodes).to_le_bytes())?;
-    let mut data_crc = Fnv64::new();
-    for &x in emb {
-        let bytes = x.to_le_bytes();
-        data_crc.write(&bytes);
-        out.write_all(&bytes)?;
-    }
-    out.write_all(&data_crc.finish().to_le_bytes())?;
-    out.write_all(&(nodes.len() as u64).to_le_bytes())?; // trailer
+    out.write_all(&encoded)?;
     out.flush()?;
     drop(out);
     if let Some(inj) = injection {
@@ -144,25 +171,35 @@ pub fn write_shard(
 /// as the truncation guard: a file shorter than the header implies fails
 /// here, before any embedding bytes are touched.
 fn read_header(r: &mut impl Read, path: &Path, file_len: u64) -> Result<ShardHeader> {
+    read_header_impl(r, &path.display().to_string(), file_len, true)
+}
+
+fn read_header_impl(
+    r: &mut impl Read,
+    label: &str,
+    total_len: u64,
+    fire_fault: bool,
+) -> Result<ShardHeader> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != SHARD_MAGIC {
-        return Err(Error::Serve(format!("{}: not an LFS1 shard", path.display())));
+        return Err(Error::Serve(format!("{label}: not an LFS1 shard")));
     }
     let mut b4 = [0u8; 4];
     let mut b8 = [0u8; 8];
     r.read_exact(&mut b4)?;
     let part_id = u32::from_le_bytes(b4);
-    if let Some(inj) = fault::point("shard.read").part(part_id).fire() {
-        if !inj.is_corrupt() {
-            return Err(inj.error());
+    if fire_fault {
+        if let Some(inj) = fault::point("shard.read").part(part_id).fire() {
+            if !inj.is_corrupt() {
+                return Err(inj.error());
+            }
+            // `corrupt`: poison the declared row count — every downstream
+            // guard (length check) sees a damaged header
+            return Err(Error::Serve(format!(
+                "{label}: shard corrupt or truncated (injected read corruption)"
+            )));
         }
-        // `corrupt`: poison the declared row count — every downstream
-        // guard (length check) sees a damaged header
-        return Err(Error::Serve(format!(
-            "{}: shard corrupt or truncated (injected read corruption)",
-            path.display()
-        )));
     }
     r.read_exact(&mut b8)?;
     let rows64 = u64::from_le_bytes(b8);
@@ -175,12 +212,11 @@ fn read_header(r: &mut impl Read, path: &Path, file_len: u64) -> Result<ShardHea
         .and_then(|ids| rows64.checked_mul(dim64)?.checked_mul(4)?.checked_add(ids))
         .and_then(|body| body.checked_add((4 + 4 + 8 + 4) + 8 + 8 + 8));
     match expect {
-        Some(e) if e == file_len => {}
+        Some(e) if e == total_len => {}
         _ => {
             return Err(Error::Serve(format!(
-                "{}: shard corrupt or truncated ({file_len} bytes, header declares \
-                 {rows64} rows × dim {dim64})",
-                path.display()
+                "{label}: shard corrupt or truncated ({total_len} bytes, header declares \
+                 {rows64} rows × dim {dim64})"
             )))
         }
     }
@@ -194,11 +230,35 @@ fn read_header(r: &mut impl Read, path: &Path, file_len: u64) -> Result<ShardHea
     r.read_exact(&mut b8)?;
     if u64::from_le_bytes(b8) != header_crc(part_id, rows64, dim64 as u32, &nodes) {
         return Err(Error::Serve(format!(
-            "{}: shard header checksum mismatch (corrupt node ids or header)",
-            path.display()
+            "{label}: shard header checksum mismatch (corrupt node ids or header)"
         )));
     }
     Ok(ShardHeader { part_id, rows, dim, nodes })
+}
+
+/// Read the embedding rows + data checksum + trailer that follow a
+/// validated header (shared by the file reader and the wire decoder).
+fn read_body_impl(r: &mut impl Read, label: &str, header: &ShardHeader) -> Result<Vec<f32>> {
+    let mut b4 = [0u8; 4];
+    let mut data = vec![0f32; header.rows * header.dim];
+    let mut crc = Fnv64::new();
+    for x in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        crc.write(&b4);
+        *x = f32::from_le_bytes(b4);
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    if u64::from_le_bytes(b8) != crc.finish() {
+        return Err(Error::Serve(format!(
+            "{label}: shard data checksum mismatch (corrupt embedding bytes)"
+        )));
+    }
+    r.read_exact(&mut b8)?;
+    if u64::from_le_bytes(b8) as usize != header.rows {
+        return Err(Error::Serve(format!("{label}: shard truncated")));
+    }
+    Ok(data)
 }
 
 /// Read only the header + ownership ids of a shard (the length-based
@@ -217,26 +277,7 @@ pub fn read_shard(path: &Path) -> Result<(ShardHeader, Vec<f32>)> {
     let file_len = file.metadata()?.len();
     let mut r = BufReader::new(file);
     let header = read_header(&mut r, path, file_len)?;
-    let mut b4 = [0u8; 4];
-    let mut data = vec![0f32; header.rows * header.dim];
-    let mut crc = Fnv64::new();
-    for x in data.iter_mut() {
-        r.read_exact(&mut b4)?;
-        crc.write(&b4);
-        *x = f32::from_le_bytes(b4);
-    }
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    if u64::from_le_bytes(b8) != crc.finish() {
-        return Err(Error::Serve(format!(
-            "{}: shard data checksum mismatch (corrupt embedding bytes)",
-            path.display()
-        )));
-    }
-    r.read_exact(&mut b8)?;
-    if u64::from_le_bytes(b8) as usize != header.rows {
-        return Err(Error::Serve(format!("{}: shard truncated", path.display())));
-    }
+    let data = read_body_impl(&mut r, &path.display().to_string(), &header)?;
     Ok((header, data))
 }
 
@@ -588,6 +629,35 @@ mod tests {
         }
         assert_eq!(&bytes[52..60], &d.finish().to_le_bytes());
         assert_eq!(&bytes[60..68], &2u64.to_le_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn encode_matches_file_bytes_and_decodes() {
+        // the in-memory codec and the file writer must emit the exact
+        // same bytes — the wire transport relies on this equivalence
+        let path = tmp("encode_eq.lfs");
+        let nodes: Vec<NodeId> = vec![11, 2, 5];
+        let emb = vec![0.5f32, -1.0, 3.25, f32::NAN, 0.0, -0.0];
+        write_shard(&path, 9, &nodes, &emb, 2).unwrap();
+        let file_bytes = std::fs::read(&path).unwrap();
+        let encoded = encode_shard(9, &nodes, &emb, 2).unwrap();
+        assert_eq!(file_bytes, encoded);
+        let (header, data) = decode_shard_bytes(&encoded).unwrap();
+        assert_eq!(header.part_id, 9);
+        assert_eq!(header.nodes, nodes);
+        for (a, b) in data.iter().zip(&emb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // any single damaged byte is rejected cleanly
+        let mut bad = encoded.clone();
+        bad[40] ^= 0x10;
+        assert!(matches!(decode_shard_bytes(&bad), Err(Error::Serve(_))));
+        assert!(matches!(
+            decode_shard_bytes(&encoded[..encoded.len() - 3]),
+            Err(_)
+        ));
+        assert!(encode_shard(0, &[1, 2], &[0.0; 3], 2).is_err());
         std::fs::remove_file(path).ok();
     }
 

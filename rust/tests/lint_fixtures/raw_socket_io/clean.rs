@@ -1,0 +1,14 @@
+//! Clean fixture: the caller never names a socket type — it speaks
+//! typed messages over whatever transport the `net` facade hands it,
+//! so every byte rides the checksummed `LFN1` frame path.
+
+use crate::error::Result;
+use crate::net::Message;
+
+pub fn push_heartbeat(stream: &mut (impl std::io::Read + std::io::Write)) -> Result<()> {
+    Message::Heartbeat.write_to(stream)
+}
+
+pub fn await_shutdown(stream: &mut (impl std::io::Read + std::io::Write)) -> Result<bool> {
+    Ok(matches!(Message::read_from(stream)?, Message::Shutdown))
+}

@@ -1,0 +1,16 @@
+//! Violating fixture: ad-hoc socket I/O — unframed bytes with no CRC,
+//! no version check, and no `net.send`/`net.recv` fault points
+//! (linted under a non-`net/` virtual path).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+
+pub fn push_metrics(addr: &str, payload: &[u8]) -> std::io::Result<()> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(payload)
+}
+
+pub fn debug_listener() -> std::io::Result<u16> {
+    let l = TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?.port())
+}

@@ -158,6 +158,19 @@ fn sleep_is_legal_inside_the_fault_module() {
 }
 
 #[test]
+fn raw_socket_io_triple() {
+    check_triple("raw_socket_io", "serve/transport.rs");
+}
+
+#[test]
+fn raw_socket_io_is_legal_inside_net() {
+    // The frame codec and its session machinery must touch sockets.
+    let violating = fixture("raw_socket_io/violating.rs");
+    let report = lint_sources(&[("net/frame.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "raw_socket_io").is_empty());
+}
+
+#[test]
 fn undeclared_fault_point_triple() {
     let registry = fixture("undeclared_fault_point/registry.rs");
 

@@ -1,0 +1,263 @@
+//! Distributed-transport integration tests: the `LFN1` handshake over a
+//! real loopback socket, and the tentpole acceptance property — a
+//! multi-worker TCP run produces **bit-identical** metrics and training
+//! curves to the in-process run, even when seeded network chaos forces
+//! redials and requeues mid-run.
+//!
+//! Handshake tests run everywhere (no PJRT needed: they never train);
+//! the end-to-end tests self-skip when the artifact bundle is absent,
+//! like the other coordinator integration suites. Tests that open
+//! sockets hold a [`fault::install_scoped`] guard or [`fault::exclusive`]
+//! so the registered `net.*` points can't cross-fire between tests.
+//!
+//! The kill -9 variant lives in `scripts/tier1.sh`: a worker *process*
+//! is SIGKILLed mid-run there, which no in-process test can model.
+
+use leiden_fusion::config::NetConfig;
+use leiden_fusion::coordinator::{
+    Coordinator, CoordinatorConfig, JobQueue, RunJournal, TrainReport, Transport,
+};
+use leiden_fusion::data::{karate_dataset, Dataset};
+use leiden_fusion::fault::{self, FaultPlan};
+use leiden_fusion::net::{self, Message, TcpServer};
+use leiden_fusion::partition::{leiden_fusion, Partitioning};
+use leiden_fusion::testing::artifacts_if_built;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn test_net(port_file: Option<PathBuf>) -> NetConfig {
+    NetConfig {
+        bind: "127.0.0.1:0".to_string(),
+        heartbeat_ms: 100,
+        grace_ms: 5000,
+        join_timeout_secs: 60.0,
+        reconnect_attempts: 5,
+        port_file,
+    }
+}
+
+/// Dial the server and set a read timeout so a protocol bug fails the
+/// test instead of hanging it.
+fn dial(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s
+}
+
+#[test]
+fn handshake_rejects_fingerprint_mismatch() {
+    let _quiet = fault::exclusive();
+    let queue = Arc::new(JobQueue::new(Vec::new(), 1));
+    let (tx, _rx) = mpsc::channel();
+    let server =
+        TcpServer::start(&test_net(None), 7, 0xF00D, 1, Arc::clone(&queue), tx).unwrap();
+
+    let mut s = dial(server.addr());
+    Message::Hello { token: 0, fingerprint: 0xDEAD }.write_to(&mut s).unwrap();
+    match Message::read_from(&mut s).unwrap() {
+        Message::Reject { reason } => {
+            assert!(reason.contains("fingerprint"), "unexpected reason: {reason}")
+        }
+        other => panic!("expected Reject, got frame type {}", other.ftype()),
+    }
+
+    queue.shutdown();
+    server.drain();
+}
+
+#[test]
+fn handshake_rejects_unknown_resume_token() {
+    let _quiet = fault::exclusive();
+    let queue = Arc::new(JobQueue::new(Vec::new(), 1));
+    let (tx, _rx) = mpsc::channel();
+    let server =
+        TcpServer::start(&test_net(None), 7, 0xF00D, 1, Arc::clone(&queue), tx).unwrap();
+
+    let mut s = dial(server.addr());
+    Message::Hello { token: 0x1234, fingerprint: 0xF00D }.write_to(&mut s).unwrap();
+    match Message::read_from(&mut s).unwrap() {
+        Message::Reject { reason } => {
+            assert!(reason.contains("unknown session"), "unexpected reason: {reason}")
+        }
+        other => panic!("expected Reject, got frame type {}", other.ftype()),
+    }
+
+    queue.shutdown();
+    server.drain();
+}
+
+#[test]
+fn welcome_then_graceful_drain_and_cluster_full() {
+    let _quiet = fault::exclusive();
+    let queue = Arc::new(JobQueue::new(Vec::new(), 1));
+    let (tx, _rx) = mpsc::channel();
+    let server =
+        TcpServer::start(&test_net(None), 7, 0xBEEF, 1, Arc::clone(&queue), tx).unwrap();
+
+    let mut s = dial(server.addr());
+    Message::Hello { token: 0, fingerprint: 0xBEEF }.write_to(&mut s).unwrap();
+    let (worker, token, heartbeat_ms) = match Message::read_from(&mut s).unwrap() {
+        Message::Welcome { worker, token, heartbeat_ms } => (worker, token, heartbeat_ms),
+        other => panic!("expected Welcome, got frame type {}", other.ftype()),
+    };
+    assert_eq!(worker, 0);
+    assert_ne!(token, 0, "a session token must be nonzero (zero means fresh join)");
+    assert_eq!(heartbeat_ms, 100, "workers adopt the leader's heartbeat cadence");
+
+    // the single slot is taken: the next join is turned away
+    let mut s2 = dial(server.addr());
+    Message::Hello { token: 0, fingerprint: 0xBEEF }.write_to(&mut s2).unwrap();
+    match Message::read_from(&mut s2).unwrap() {
+        Message::Reject { reason } => {
+            assert!(reason.contains("cluster full"), "unexpected reason: {reason}")
+        }
+        other => panic!("expected Reject, got frame type {}", other.ftype()),
+    }
+    drop(s2);
+
+    // closing the (empty) queue drains the session: Shutdown → Bye
+    queue.shutdown();
+    match Message::read_from(&mut s).unwrap() {
+        Message::Shutdown => {}
+        other => panic!("expected Shutdown, got frame type {}", other.ftype()),
+    }
+    Message::Bye.write_to(&mut s).unwrap();
+    server.drain();
+}
+
+// ---- end-to-end (artifact-gated, like the other coordinator suites) -------
+
+fn cfg_if_built() -> Option<CoordinatorConfig> {
+    let mut cfg = CoordinatorConfig::new(artifacts_if_built()?);
+    cfg.epochs = 10;
+    cfg.mlp_epochs = 30;
+    cfg.machines = 2;
+    Some(cfg)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lf_net_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the coordinator with the TCP transport and `workers` in-process
+/// `run_worker` clients (real sockets over loopback; port discovered
+/// through the port file, exactly like the tier-1 smoke script).
+fn run_distributed(
+    cfg: &CoordinatorConfig,
+    ds: &Dataset,
+    p: &Partitioning,
+    workers: usize,
+    tag: &str,
+) -> TrainReport {
+    let dir = tmp_dir(tag);
+    let port_file = dir.join("port");
+    let netc = test_net(Some(port_file.clone()));
+    let mut lcfg = cfg.clone();
+    lcfg.machines = workers;
+    lcfg.transport = Transport::Tcp(netc.clone());
+    let fingerprint = RunJournal::fingerprint(
+        &ds.name,
+        ds.num_nodes(),
+        &p.members(),
+        cfg.seed,
+        cfg.epochs,
+        cfg.mlp_epochs,
+        cfg.mode.as_str(),
+        cfg.model.as_str(),
+        cfg.exec.as_str(),
+    );
+    let report = std::thread::scope(|scope| {
+        let leader = scope.spawn(move || Coordinator::new(lcfg).run(ds, p));
+        let mut port = None;
+        for _ in 0..1500 {
+            if let Ok(text) = std::fs::read_to_string(&port_file) {
+                if let Ok(n) = text.trim().parse::<u16>() {
+                    port = Some(n);
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let port = port.expect("leader never wrote its port file");
+        let addr = format!("127.0.0.1:{port}");
+        let joins: Vec<_> = (0..workers)
+            .map(|_| {
+                let addr = addr.clone();
+                let netc = netc.clone();
+                scope.spawn(move || net::run_worker(&addr, ds, cfg, &netc, fingerprint))
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap().unwrap();
+        }
+        leader.join().unwrap().unwrap()
+    });
+    std::fs::remove_dir_all(&dir).ok();
+    report
+}
+
+/// Bit-identical where determinism is promised; wall-clock fields
+/// (`train_secs`) and bookkeeping (`attempts`) are transport noise.
+fn assert_reports_identical(local: &TrainReport, dist: &TrainReport) {
+    assert_eq!(local.eval.test_metric.to_bits(), dist.eval.test_metric.to_bits());
+    assert_eq!(local.eval.val_metric.to_bits(), dist.eval.val_metric.to_bits());
+    assert_eq!(local.eval.mlp_losses.len(), dist.eval.mlp_losses.len());
+    for (a, b) in local.eval.mlp_losses.iter().zip(&dist.eval.mlp_losses) {
+        assert_eq!(a.to_bits(), b.to_bits(), "MLP loss curve diverged");
+    }
+    assert_eq!(local.per_partition.len(), dist.per_partition.len());
+    for (a, b) in local.per_partition.iter().zip(&dist.per_partition) {
+        assert_eq!(a.part_id, b.part_id);
+        assert_eq!(a.num_nodes, b.num_nodes);
+        assert_eq!(a.num_replicas, b.num_replicas);
+        assert_eq!(a.losses.len(), b.losses.len());
+        for (x, y) in a.losses.iter().zip(&b.losses) {
+            assert_eq!(x.to_bits(), y.to_bits(), "partition {} diverged", a.part_id);
+        }
+    }
+    assert_eq!(local.coverage, dist.coverage);
+    assert_eq!(local.skipped_partitions, dist.skipped_partitions);
+}
+
+/// The tentpole property: a 2-worker loopback cluster reproduces the
+/// in-process run bit for bit — same metric bits, same loss curves.
+#[test]
+fn distributed_loopback_is_bit_identical_to_local() {
+    let Some(cfg) = cfg_if_built() else { return };
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+    let local = {
+        let _quiet = fault::exclusive();
+        Coordinator::new(cfg.clone()).run(&ds, &p).unwrap()
+    };
+    let dist = {
+        let _quiet = fault::exclusive();
+        run_distributed(&cfg, &ds, &p, 2, "clean")
+    };
+    assert_reports_identical(&local, &dist);
+}
+
+/// Chaos over the wire: one corrupted frame (CRC-rejected at the
+/// receiver, connection dropped, worker redials, job requeued) leaves
+/// the final report bit-identical — the distributed extension of the
+/// crate-wide chaos-determinism contract.
+#[test]
+fn distributed_chaos_corrupt_frame_is_bit_identical() {
+    let Some(cfg) = cfg_if_built() else { return };
+    let ds = karate_dataset(5);
+    let p = leiden_fusion(&ds.graph, 2, 0.05, 0.5, 1).unwrap();
+    let local = {
+        let _quiet = fault::exclusive();
+        Coordinator::new(cfg.clone()).run(&ds, &p).unwrap()
+    };
+    let dist = {
+        let _g = fault::install_scoped(FaultPlan::parse("net.send:times=1:corrupt").unwrap());
+        run_distributed(&cfg, &ds, &p, 2, "chaos")
+    };
+    assert_reports_identical(&local, &dist);
+}
