@@ -8,6 +8,13 @@
 //! coalesced (single-flight) answers, and the per-stage worker breakdown
 //! (gather / PJRT forward / publish).
 //!
+//! A second phase drives the HTTP front-end end-to-end: keep-alive
+//! client connections issue a zipfian-skewed, bursty `/classify` load
+//! while a new bundle version is published and hot-swapped mid-storm.
+//! Reported: HTTP QPS, p50/p99/p999, the swap build+flip time, QPS in
+//! the window around the swap vs after it (the throughput dip), and the
+//! count of failed requests across the flip — which must be zero.
+//!
 //! Flags (after `--` on `cargo bench`):
 //!   --json-out <path>   also write the machine-readable report there
 //!                       (the CI artifact / committed trajectory point).
@@ -27,10 +34,16 @@ use leiden_fusion::cli::Args;
 use leiden_fusion::coordinator::{Coordinator, CoordinatorConfig};
 use leiden_fusion::graph::NodeId;
 use leiden_fusion::runtime::default_artifacts_dir;
-use leiden_fusion::serve::{Engine, EngineConfig, ShardedEmbeddingStore};
+use leiden_fusion::serve::{
+    bundle, Backend, BundleHandle, Engine, EngineConfig, Generation, HttpServer,
+    HttpServerConfig, ShardManifest, ShardedEmbeddingStore, SwapOutcome,
+};
 use leiden_fusion::util::json::{num, obj, s, Json};
 use leiden_fusion::util::rng::Rng;
 use leiden_fusion::util::Stopwatch;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -92,19 +105,14 @@ fn main() {
     let warm_sw = Stopwatch::start();
     store.warm(workers.max(1)).expect("warm");
     let warm_secs = warm_sw.secs();
-    let engine = Arc::new(
-        Engine::new(
-            EngineConfig {
-                batch_size: batch,
-                workers,
-                cache_capacity: 4096,
-                cache_stripes: stripes,
-                ..Default::default()
-            },
-            Arc::clone(&store),
-        )
-        .expect("engine"),
-    );
+    let ecfg = EngineConfig {
+        batch_size: batch,
+        workers,
+        cache_capacity: 4096,
+        cache_stripes: stripes,
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::new(ecfg.clone(), Arc::clone(&store)).expect("engine"));
 
     // ---- skewed query storm ------------------------------------------
     let calls = if common::quick() { 2_000 } else { 10_000 };
@@ -143,6 +151,9 @@ fn main() {
         h.join().unwrap();
     }
     let wall_secs = wall.elapsed().as_secs_f64();
+
+    // ---- HTTP front-end under bursty load, hot-swapped mid-storm ------
+    let http = http_hot_swap_storm(&shard_dir, &store, ecfg);
 
     // ---- report -------------------------------------------------------
     let lat = Stats::of_samples(&latencies.lock().unwrap());
@@ -208,8 +219,189 @@ fn main() {
             ]),
         ),
         ("wall_secs", Json::Num(wall_secs)),
+        ("http", http),
     ]);
     write_report(&args, &doc);
 
     std::fs::remove_dir_all(&shard_dir).ok();
+}
+
+/// Minimal keep-alive HTTP client: write one request, read one response,
+/// return (status, body).
+fn http_roundtrip(stream: &mut TcpStream, request: &str) -> (u16, String) {
+    if stream.write_all(request.as_bytes()).is_err() {
+        return (0, String::new());
+    }
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+            let status: u16 =
+                head.split(' ').nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+            let clen: usize = head
+                .lines()
+                .find_map(|l| {
+                    let (k, v) = l.split_once(':')?;
+                    k.eq_ignore_ascii_case("content-length")
+                        .then(|| v.trim().parse().ok())?
+                })
+                .unwrap_or(0);
+            let body_start = head_end + 4;
+            while buf.len() < body_start + clen {
+                match stream.read(&mut chunk) {
+                    Ok(n) if n > 0 => buf.extend_from_slice(&chunk[..n]),
+                    _ => return (0, String::new()),
+                }
+            }
+            let body =
+                String::from_utf8_lossy(&buf[body_start..body_start + clen]).to_string();
+            return (status, body);
+        }
+        match stream.read(&mut chunk) {
+            Ok(n) if n > 0 => buf.extend_from_slice(&chunk[..n]),
+            _ => return (0, String::new()),
+        }
+    }
+}
+
+/// Drive the HTTP front-end with keep-alive clients under a zipfian,
+/// bursty load, publish version+1 mid-storm, hot-swap to it, and
+/// measure the damage (which must be: none).
+fn http_hot_swap_storm(
+    shard_dir: &std::path::Path,
+    store: &Arc<ShardedEmbeddingStore>,
+    ecfg: EngineConfig,
+) -> Json {
+    let from_version = store.manifest().version;
+    let gen_engine = Engine::new(ecfg.clone(), Arc::clone(store)).expect("gen engine");
+    let handle = Arc::new(BundleHandle::new(
+        shard_dir,
+        ecfg,
+        Generation { version: from_version, store: Arc::clone(store), engine: gen_engine },
+    ));
+    let server = HttpServer::start(
+        HttpServerConfig {
+            max_inflight: 1024,
+            request_deadline_ms: 0,
+            ..HttpServerConfig::default()
+        },
+        Arc::clone(&handle) as Arc<dyn Backend>,
+    )
+    .expect("http server");
+    let addr = server.addr();
+
+    let clients = 8;
+    let per_client = if common::quick() { 250 } else { 1_000 };
+    let n = store.num_nodes();
+    let errors = Arc::new(AtomicUsize::new(0));
+    let done = Arc::new(AtomicUsize::new(0));
+    let latencies: Arc<Mutex<Vec<f64>>> =
+        Arc::new(Mutex::new(Vec::with_capacity(clients * per_client)));
+
+    let wall = Instant::now();
+    let mut handles = Vec::new();
+    for tid in 0..clients {
+        let errors = Arc::clone(&errors);
+        let done = Arc::clone(&done);
+        let latencies = Arc::clone(&latencies);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0x4774_BE7C + tid as u64);
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            let mut local = Vec::with_capacity(per_client);
+            for call in 0..per_client {
+                // zipfian-ish skew: cubing the uniform sample piles most
+                // requests onto the low ids (the hot set)
+                let a = ((n as f64) * rng.f64().powi(3)) as usize % n;
+                let b = ((n as f64) * rng.f64().powi(3)) as usize % n;
+                let req = format!(
+                    "GET /classify?nodes={a},{b}&format=text HTTP/1.1\r\n\r\n"
+                );
+                let t0 = Instant::now();
+                let (status, _body) = http_roundtrip(&mut stream, &req);
+                local.push(t0.elapsed().as_secs_f64());
+                if status != 200 {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+                // bursty arrivals: a short pause every 50 calls makes the
+                // admission path see idle→burst transitions, not a
+                // steady drip
+                if call % 50 == 49 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+            latencies.lock().unwrap().extend(local);
+        }));
+    }
+
+    // ---- publish v+1 and hot-swap mid-storm ---------------------------
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut next = ShardManifest::load(shard_dir).expect("manifest");
+    next.version = from_version + 1;
+    bundle::stamp_digests(shard_dir, &mut next).expect("stamp");
+    bundle::publish(shard_dir, &next).expect("publish");
+    let c0 = done.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let outcome = handle.try_swap().expect("swap");
+    let swap_secs = t0.elapsed().as_secs_f64();
+    assert!(
+        matches!(outcome, SwapOutcome::Swapped { .. }),
+        "expected a swap, got {outcome:?}"
+    );
+    let c1 = done.load(Ordering::Relaxed);
+    let t1 = t0.elapsed().as_secs_f64();
+    let qps_during_swap = (c1 - c0) as f64 / t1.max(1e-9);
+    // an equally long window after the swap, for the dip comparison
+    std::thread::sleep(std::time::Duration::from_secs_f64(t1.min(2.0).max(0.05)));
+    let c2 = done.load(Ordering::Relaxed);
+    let t2 = t0.elapsed().as_secs_f64() - t1;
+    let qps_after_swap = (c2 - c1) as f64 / t2.max(1e-9);
+
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let failed = errors.load(Ordering::Relaxed);
+    let total = clients * per_client;
+    let lat = Stats::of_samples(&latencies.lock().unwrap());
+    let qps = total as f64 / wall_secs;
+    server.stop();
+    assert_eq!(failed, 0, "requests failed across the hot swap");
+    assert_eq!(handle.version(), from_version + 1, "swap did not take");
+
+    let mut t = Table::new(
+        "bench_serve: HTTP front-end + mid-load hot swap",
+        &["metric", "value"],
+    );
+    t.row(vec!["clients (keep-alive)".into(), clients.to_string()]);
+    t.row(vec!["requests".into(), total.to_string()]);
+    t.row(vec!["failed requests".into(), failed.to_string()]);
+    t.row(vec!["HTTP QPS".into(), format!("{qps:.0}")]);
+    t.row(vec!["p50 latency".into(), format!("{:.3}ms", lat.p50_s * 1e3)]);
+    t.row(vec!["p99 latency".into(), format!("{:.3}ms", lat.p99_s * 1e3)]);
+    t.row(vec!["p999 latency".into(), format!("{:.3}ms", lat.p999_s * 1e3)]);
+    t.row(vec![
+        "swap (validate+build+flip)".into(),
+        format!("{:.1}ms", swap_secs * 1e3),
+    ]);
+    t.row(vec!["QPS during swap window".into(), format!("{qps_during_swap:.0}")]);
+    t.row(vec!["QPS after swap".into(), format!("{qps_after_swap:.0}")]);
+    t.print();
+
+    obj(vec![
+        ("clients", num(clients as f64)),
+        ("requests", num(total as f64)),
+        ("failed_requests", num(failed as f64)),
+        ("qps", num(qps)),
+        ("p50_ms", num(lat.p50_s * 1e3)),
+        ("p99_ms", num(lat.p99_s * 1e3)),
+        ("p999_ms", num(lat.p999_s * 1e3)),
+        ("latency", lat.to_json()),
+        ("swap_ms", num(swap_secs * 1e3)),
+        ("qps_during_swap", num(qps_during_swap)),
+        ("qps_after_swap", num(qps_after_swap)),
+        ("swapped_to_version", num((from_version + 1) as f64)),
+        ("wall_secs", num(wall_secs)),
+    ])
 }

@@ -231,6 +231,7 @@ fn main() {
                 file: shard_file_name(s as u32),
                 part_id: s as u32,
                 rows: nodes.len(),
+                sha256: String::new(),
             });
             mutex_shards.push(Mutex::new(Some(Arc::new(emb))));
         }
@@ -242,6 +243,7 @@ fn main() {
             dim,
             classes: 2,
             classifier_file: CLASSIFIER_FILE.into(),
+            classifier_sha256: String::new(),
             shards: entries,
         }
         .save(&dir)

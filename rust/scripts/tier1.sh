@@ -227,8 +227,96 @@ if [ -f artifacts/manifest.json ]; then
   cmp target/net_local_metrics.txt target/net_kill_metrics.txt
   cmp target/net_local_shards/part0.lfs target/net_kill_shards/part0.lfs
   cmp target/net_local_shards/part1.lfs target/net_kill_shards/part1.lfs
+
+  # Serving-platform smoke: the HTTP front-end must serve logits
+  # bit-identical to the offline query path, survive a mid-load bundle
+  # publish with zero failed requests (hot-swap to the new version), and
+  # a kill -9 during publish must leave the live bundle untouched.
+  echo "== serve smoke: HTTP front-end + hot swap + kill -9 mid-publish =="
+  rm -rf target/http_shards target/http_port target/http_stop \
+    target/http_failures
+  "$bin" train $flags --machines 2 --shards target/http_shards > /dev/null
+  "$bin" query --shards target/http_shards --nodes 0,5,9 \
+    --logits-out target/http_offline.txt > /dev/null
+  test -s target/http_offline.txt
+  if command -v curl > /dev/null; then
+    "$bin" serve --shards target/http_shards --http 127.0.0.1:0 \
+      --port-file target/http_port --watch --warm > target/http_serve.txt &
+    server=$!
+    for _ in $(seq 1 300); do [ -s target/http_port ] && break; sleep 0.1; done
+    test -s target/http_port
+    haddr="127.0.0.1:$(cat target/http_port)"
+    curl -sf "http://$haddr/healthz" | grep -q '^ok$'
+    curl -sf "http://$haddr/readyz" | grep -q 'v=1 '
+    # logits over HTTP are byte-identical to the offline query path
+    curl -sf "http://$haddr/classify?nodes=0,5,9&format=text" \
+      > target/http_logits.txt
+    cmp target/http_offline.txt target/http_logits.txt
+    curl -sf "http://$haddr/metrics" | grep -q '^serve_http_requests '
+    curl -sf "http://$haddr/metrics" | grep -q '^serve_shards_quarantined '
+    # malformed input is a typed 4xx, not a hang or a crash
+    code=$(curl -s -o /dev/null -w '%{http_code}' \
+      "http://$haddr/classify?nodes=zebra")
+    [ "$code" = 400 ]
+
+    # hot-swap drill: continuous load while the SAME config retrains and
+    # publishes v2 (deterministic bytes, version bump); the watcher flips
+    # to v2 with zero failed requests and unchanged logits
+    : > target/http_failures
+    (
+      i=0
+      while [ ! -f target/http_stop ]; do
+        i=$((i + 1))
+        curl -sf "http://$haddr/classify?nodes=0,5,9&format=text" \
+          > /dev/null || echo "fail $i" >> target/http_failures
+      done
+    ) &
+    load=$!
+    "$bin" train $flags --machines 2 --shards target/http_shards > /dev/null
+    for _ in $(seq 1 300); do
+      curl -sf "http://$haddr/readyz" | grep -q 'v=2 ' && break
+      sleep 0.1
+    done
+    curl -sf "http://$haddr/readyz" | grep -q 'v=2 '
+    touch target/http_stop
+    wait "$load"
+    if [ -s target/http_failures ]; then
+      echo "requests failed across the hot swap:" >&2
+      cat target/http_failures >&2
+      exit 1
+    fi
+    curl -sf "http://$haddr/classify?nodes=0,5,9&format=text" \
+      > target/http_logits_v2.txt
+    cmp target/http_offline.txt target/http_logits_v2.txt
+    kill "$server" 2> /dev/null || true
+    wait "$server" 2> /dev/null || true
+  else
+    echo "note: curl absent — HTTP front-end smoke skipped"
+    # still bump the bundle to v2 so the kill -9 drill below starts from
+    # the same state either way
+    "$bin" train $flags --machines 2 --shards target/http_shards > /dev/null
+  fi
+
+  # kill -9 mid-publish: an injected delay holds the publish between the
+  # temp-file write and the rename; SIGKILL there must leave the live
+  # manifest byte-identical and the bundle fully servable
+  cp target/http_shards/shards.json target/http_manifest_before
+  "$bin" train $flags --machines 2 --shards target/http_shards \
+    --fault-plan "bundle.publish:times=1:delay(5000)" > /dev/null 2>&1 &
+  trainer=$!
+  for _ in $(seq 1 300); do
+    [ -f target/http_shards/shards.json.tmp ] && break
+    sleep 0.1
+  done
+  test -f target/http_shards/shards.json.tmp
+  kill -9 "$trainer" 2> /dev/null || true
+  wait "$trainer" 2> /dev/null || true
+  cmp target/http_manifest_before target/http_shards/shards.json
+  "$bin" query --shards target/http_shards --nodes 0,5,9 \
+    --logits-out target/http_after_kill.txt > /dev/null
+  cmp target/http_offline.txt target/http_after_kill.txt
 else
-  echo "note: PJRT artifacts absent — fault + resume + net smokes skipped"
+  echo "note: PJRT artifacts absent — fault + resume + net + serve smokes skipped"
 fi
 
 echo "tier1: OK"

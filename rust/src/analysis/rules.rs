@@ -22,7 +22,7 @@
 //! | `undeclared_switch` | every `args.has("x")` switch is declared in `main.rs` `SWITCHES` (closes the `--switch positional` misparse class) |
 //! | `undeclared_fault_point` | every `fault::point("x")` is declared in the `FAULT_POINTS` registry (an undeclared point is invisible to plan validation and the chaos sweep) |
 //! | `sleep_outside_backoff` | no raw `thread::sleep` outside `fault/` — delays flow through `fault::Backoff` (seeded, metered) or the job queue |
-//! | `raw_socket_io` | no `TcpStream`/`TcpListener` outside `net/` — every wire byte rides the CRC-checked `LFN1` frame codec and its `net.send`/`net.recv` fault points |
+//! | `raw_socket_io` | no `TcpStream`/`TcpListener` outside `net/` and `serve/http.rs` — every other wire byte rides the CRC-checked `LFN1` frame codec and its `net.send`/`net.recv` fault points |
 //!
 //! To add a rule: implement [`Rule`], add it to [`all_rules`], document
 //! it in DESIGN.md, and add one violating + one clean + one suppressed
@@ -63,6 +63,14 @@ const SLEEP_MODULE_PREFIX: &str = "fault/";
 /// `LFN1` frame codec, and every byte on the wire must pass through it
 /// (CRC validation + the `net.send`/`net.recv` fault points).
 const NET_MODULE_PREFIX: &str = "net/";
+
+/// The second sanctioned socket owner: the HTTP/1.1 front-end. HTTP is
+/// a foreign dialect by definition — it cannot ride the `LFN1` codec —
+/// so the file gets a whole-file exemption instead of per-line
+/// suppressions; its wire robustness is owned by its own incremental
+/// parser (typed errors, slowloris timeouts) and the `http.accept`
+/// fault point.
+const HTTP_FRONTEND_FILE: &str = "serve/http.rs";
 
 /// One lexed, region-annotated source file.
 pub struct SourceFile {
@@ -841,12 +849,12 @@ impl Rule for RawSocketIo {
     }
 
     fn summary(&self) -> &'static str {
-        "no TcpStream/TcpListener outside net/ (all socket I/O rides the frame codec)"
+        "no TcpStream/TcpListener outside net/ and serve/http.rs (all other socket I/O rides the frame codec)"
     }
 
     fn check(&self, set: &FileSet, out: &mut Vec<Diagnostic>) {
         for file in &set.files {
-            if file.path.starts_with(NET_MODULE_PREFIX) {
+            if file.path.starts_with(NET_MODULE_PREFIX) || file.path == HTTP_FRONTEND_FILE {
                 continue;
             }
             let mut seen = BTreeSet::new();
@@ -1038,6 +1046,15 @@ mod tests {
         );
         assert!(rules_hit(&lint_one("net/frame.rs", src)).is_empty());
         assert!(rules_hit(&lint_one("net/server.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn raw_socket_io_exempts_the_http_frontend_file_only() {
+        let src = "use std::net::{TcpListener, TcpStream};\nfn f() {\n    let _l = TcpListener::bind(\"127.0.0.1:0\");\n}\n";
+        assert!(rules_hit(&lint_one("serve/http.rs", src)).is_empty());
+        // the exemption is the exact file, not the serve/ directory
+        assert!(rules_hit(&lint_one("serve/http2.rs", src)).contains(&"raw_socket_io"));
+        assert!(rules_hit(&lint_one("serve/engine.rs", src)).contains(&"raw_socket_io"));
     }
 
     #[test]

@@ -201,6 +201,18 @@ pub struct ServeConfig {
     /// Eagerly load every shard slab before serving (`repro serve` also
     /// takes `--warm` on the CLI).
     pub warm: bool,
+    /// HTTP front-end bind address (`[serve] http`, `--http`); `None`
+    /// keeps the stdin query loop.
+    pub http: Option<String>,
+    /// Max concurrently admitted HTTP `/classify` requests; excess gets
+    /// 429 + `Retry-After` (`[serve] max_inflight`, 0 = unbounded).
+    pub max_inflight: usize,
+    /// Per-request deadline in milliseconds, exceeded → 503
+    /// (`[serve] request_deadline_ms`, 0 disables).
+    pub request_deadline_ms: u64,
+    /// Watch the bundle directory and hot-swap to newly published
+    /// versions (`[serve] watch`, `--watch`).
+    pub watch: bool,
 }
 
 impl Default for ServeConfig {
@@ -212,6 +224,10 @@ impl Default for ServeConfig {
             cache_capacity: 4096,
             cache_stripes: 8,
             warm: false,
+            http: None,
+            max_inflight: 256,
+            request_deadline_ms: 2_000,
+            watch: false,
         }
     }
 }
@@ -234,6 +250,15 @@ impl ServeConfig {
             cache_capacity: nneg("serve", "cache_capacity", d.cache_capacity),
             cache_stripes: nneg("serve", "cache_stripes", d.cache_stripes),
             warm: t.bool_or("serve", "warm", d.warm),
+            http: match t.get("serve", "http") {
+                Some(Value::Str(s)) => Some(s.clone()),
+                _ => d.http,
+            },
+            max_inflight: nneg("serve", "max_inflight", d.max_inflight),
+            request_deadline_ms: t
+                .int_or("serve", "request_deadline_ms", d.request_deadline_ms as i64)
+                .max(0) as u64,
+            watch: t.bool_or("serve", "watch", d.watch),
         }
     }
 }
@@ -588,7 +613,8 @@ machines = 2
         let t = Toml::parse(
             "[serve]\nshards_dir = \"out/shards\"\nexport_dir = \"out/shards\"\n\
              batch_size = 128\nworkers = 4\ncache_capacity = 100\n\
-             cache_stripes = 16\nwarm = true\n",
+             cache_stripes = 16\nwarm = true\nhttp = \"127.0.0.1:8080\"\n\
+             max_inflight = 32\nrequest_deadline_ms = 500\nwatch = true\n",
         )
         .unwrap();
         let cfg = ExperimentConfig::from_toml(&t).unwrap();
@@ -598,19 +624,35 @@ machines = 2
         assert_eq!(cfg.serve.cache_capacity, 100);
         assert_eq!(cfg.serve.cache_stripes, 16);
         assert!(cfg.serve.warm);
+        assert_eq!(cfg.serve.http.as_deref(), Some("127.0.0.1:8080"));
+        assert_eq!(cfg.serve.max_inflight, 32);
+        assert_eq!(cfg.serve.request_deadline_ms, 500);
+        assert!(cfg.serve.watch);
         assert_eq!(cfg.shards_out, Some(PathBuf::from("out/shards")));
+    }
+
+    #[test]
+    fn serve_http_defaults_off() {
+        let s = ServeConfig::from_toml(&Toml::parse("").unwrap());
+        assert_eq!(s.http, None);
+        assert_eq!(s.max_inflight, 256);
+        assert_eq!(s.request_deadline_ms, 2_000);
+        assert!(!s.watch);
     }
 
     #[test]
     fn serve_negative_values_clamp_to_zero() {
         let t = Toml::parse(
-            "[serve]\nworkers = -1\ncache_capacity = -5\ncache_stripes = -3\n",
+            "[serve]\nworkers = -1\ncache_capacity = -5\ncache_stripes = -3\n\
+             max_inflight = -2\nrequest_deadline_ms = -7\n",
         )
         .unwrap();
         let s = ServeConfig::from_toml(&t);
         assert_eq!(s.workers, 0);
         assert_eq!(s.cache_capacity, 0);
         assert_eq!(s.cache_stripes, 0, "-3 clamps to 0 (= auto), not 2^64");
+        assert_eq!(s.max_inflight, 0, "-2 clamps to 0 (= unbounded)");
+        assert_eq!(s.request_deadline_ms, 0, "-7 clamps to 0 (= no deadline)");
     }
 
     #[test]

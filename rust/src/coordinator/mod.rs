@@ -403,15 +403,15 @@ impl Coordinator {
         let mut journal: Option<RunJournal> = None;
         if let Some(dir) = &self.cfg.shard_dir {
             std::fs::create_dir_all(dir)?;
-            // Invalidate any pre-existing bundle before writing the first
-            // shard: the manifest is deleted now and rewritten only after a
-            // fully successful run, so an aborted run can never leave a
-            // readable bundle that mixes shards from different runs. The
-            // shards themselves stay — `--resume` replays them.
-            let manifest_path = crate::serve::ShardManifest::path_in(dir);
-            if manifest_path.exists() {
-                std::fs::remove_file(&manifest_path)?;
-            }
+            // The live manifest is deliberately left in place while this
+            // run writes shards: a server watching the directory keeps
+            // serving the published version and only flips once the new
+            // manifest is atomically published (temp + fsync + rename)
+            // at the end of a fully successful run. Mixed-bundle safety
+            // no longer needs a delete-first step — every manifest entry
+            // carries the shard's sha256, so a shard left by a
+            // different-config crash fails its digest check at load and
+            // is quarantined instead of silently served.
             let prior = if self.cfg.resume { RunJournal::load(dir)? } else { None };
             match prior {
                 Some(state) => {
@@ -925,34 +925,42 @@ impl Coordinator {
         // ---- finalize the serving bundle --------------------------------
         if let Some(dir) = &self.cfg.shard_dir {
             checkpoint::save_tensors(&dir.join(crate::serve::CLASSIFIER_FILE), &clf.params)?;
-            let manifest = crate::serve::ShardManifest {
-                version: 1,
+            // bump past whatever is currently published so a watching
+            // server sees a strictly newer version and hot-swaps to it
+            let version = crate::serve::bundle::live_version(dir) + 1;
+            let mut manifest = crate::serve::ShardManifest {
+                version,
                 dataset: dataset.name.clone(),
                 task: clf.task.to_string(),
                 num_nodes: covered,
                 dim: store.dim,
                 classes: clf.classes,
                 classifier_file: crate::serve::CLASSIFIER_FILE.to_string(),
+                classifier_sha256: String::new(),
                 shards: stats
                     .iter()
                     .map(|s| crate::serve::ShardEntry {
                         file: crate::serve::shard_file_name(s.part_id),
                         part_id: s.part_id,
                         rows: s.num_nodes,
+                        sha256: String::new(),
                     })
                     .collect(),
             };
-            manifest.save(dir)?;
+            crate::serve::bundle::stamp_digests(dir, &mut manifest)?;
+            crate::serve::bundle::publish(dir, &manifest)?;
             obs::event(
                 "coordinator",
                 "bundle.written",
                 vec![
+                    ("version", num(manifest.version as f64)),
                     ("shards", num(manifest.shards.len() as f64)),
                     ("nodes", num(manifest.num_nodes as f64)),
                 ],
             );
             log::debug!(
-                "serving bundle written to {} ({} shards, {} nodes, dim {})",
+                "serving bundle v{} published to {} ({} shards, {} nodes, dim {})",
+                manifest.version,
                 dir.display(),
                 manifest.shards.len(),
                 manifest.num_nodes,

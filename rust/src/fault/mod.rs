@@ -42,8 +42,10 @@ use std::time::Duration;
 /// Registered fault points — the instrumented failure domains:
 /// per-machine PJRT client creation, batch assembly, partition
 /// training, shard write (leader), shard read (serving), shard
-/// manifest load, and the four wire-level domains of the TCP transport
-/// (connection accept, connection dial, frame send, frame receive).
+/// manifest load, the four wire-level domains of the TCP transport
+/// (connection accept, connection dial, frame send, frame receive),
+/// and the three serving-platform domains (HTTP connection accept,
+/// bundle publish, bundle hot-swap).
 /// Every `fault::point("x")` literal in library code must appear here
 /// (`undeclared_fault_point` lint rule).
 pub const FAULT_POINTS: &[&str] = &[
@@ -57,6 +59,9 @@ pub const FAULT_POINTS: &[&str] = &[
     "net.connect",
     "net.send",
     "net.recv",
+    "http.accept",
+    "bundle.publish",
+    "bundle.swap",
 ];
 
 /// Fast-path gate: when false (the default), [`Point::fire`] is a single

@@ -11,7 +11,10 @@
 //!   worker     — `worker join <addr>`: dial a coordinator, prove the
 //!                run fingerprint matches, train assigned partitions
 //!   pipeline   — `train` for LF vs baselines side by side
-//!   serve      — load a shard bundle and answer queries interactively
+//!   serve      — load a shard bundle and answer queries interactively,
+//!                or over HTTP with `--http <addr>` (keep-alive, bounded
+//!                admission, `/healthz` `/readyz` `/metrics`); `--watch`
+//!                hot-swaps to newly published bundle versions
 //!   query      — one-shot classification of --nodes against a bundle
 //!   metrics    — run a small workload and dump the obs metrics registry
 //!   lint       — run the in-crate static analysis pass over `src/`
@@ -45,7 +48,10 @@ use leiden_fusion::partition::{
     PartitionPipeline, PartitionReport, PartitionSpec, PipelineEvent,
 };
 use leiden_fusion::runtime::{default_artifacts_dir, Manifest};
-use leiden_fusion::serve::{Engine, EngineConfig, NodeStatus, ShardedEmbeddingStore};
+use leiden_fusion::serve::{
+    format_status_line, BundleHandle, Engine, EngineConfig, Generation, HttpServer,
+    HttpServerConfig, NodeStatus, ShardedEmbeddingStore,
+};
 use leiden_fusion::train::ModelKind;
 use leiden_fusion::util::{fmt_duration, init_logging, Stopwatch};
 use leiden_fusion::{Error, Result};
@@ -85,8 +91,18 @@ USAGE:
                   [--cache-stripes 8] [--artifacts dir] [--warm]
                   (interactive: node ids on stdin; --warm preloads every
                    shard slab in parallel before the first query)
+                  [--http 127.0.0.1:8080]   (HTTP/1.1 front-end instead of
+                   stdin: GET /classify?nodes=0,5,9[&format=text|json],
+                   /healthz, /readyz, /metrics)
+                  [--port-file file]   (write the bound port when --http
+                   picks port 0)
+                  [--watch]   (hot-swap to newly published bundle versions)
+                  [--max-inflight 256] [--request-deadline-ms 2000]
   repro query     --shards dir --nodes 0,5,9 [--batch 64] [--workers 2]
                   [--cache 4096] [--cache-stripes 8]
+                  [--logits-out file]   (canonical per-node lines with
+                   bit-exact hex logits — byte-comparable against the
+                   HTTP front-end's format=text output)
   repro metrics   [--dataset karate] [--k 2] [--seed 42] [--n 0]
                   [--shards dir] [--train] [--epochs 2]
                   [--format json|prom] [--out file]
@@ -116,7 +132,7 @@ SPEC grammar (stages joined by '+', optional key=value parameters):
 ";
 
 /// Boolean switches (never bind the next token as a value).
-const SWITCHES: &[&str] = &["help", "warm", "train", "fixable", "resume"];
+const SWITCHES: &[&str] = &["help", "warm", "train", "fixable", "resume", "watch"];
 
 fn main() {
     init_logging();
@@ -550,8 +566,11 @@ fn train_with_transport(args: &Args, transport: Transport) -> Result<()> {
 // ---- serving --------------------------------------------------------------
 
 /// Resolve serve options (config file < CLI flags), open the shard store,
-/// and start the engine.
-fn serve_setup(args: &Args) -> Result<(Arc<ShardedEmbeddingStore>, Engine, ServeConfig)> {
+/// and start the engine. The `EngineConfig` comes back too so the
+/// hot-swap path can build replacement engines with identical knobs.
+fn serve_setup(
+    args: &Args,
+) -> Result<(Arc<ShardedEmbeddingStore>, Engine, ServeConfig, EngineConfig)> {
     let mut scfg = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
@@ -567,24 +586,29 @@ fn serve_setup(args: &Args) -> Result<(Arc<ShardedEmbeddingStore>, Engine, Serve
     scfg.cache_capacity = args.usize_or("cache", scfg.cache_capacity)?;
     scfg.cache_stripes = args.usize_or("cache-stripes", scfg.cache_stripes)?;
     scfg.warm = scfg.warm || args.has("warm");
+    if let Some(addr) = args.get("http") {
+        scfg.http = Some(addr.to_string());
+    }
+    scfg.max_inflight = args.usize_or("max-inflight", scfg.max_inflight)?;
+    scfg.request_deadline_ms =
+        args.u64_or("request-deadline-ms", scfg.request_deadline_ms)?;
+    scfg.watch = scfg.watch || args.has("watch");
     // shard.read / manifest.load fault points are live under serve too
     install_fault_plan(args.get("fault-plan"))?;
 
     let store = Arc::new(ShardedEmbeddingStore::open(&scfg.shards_dir)?);
-    let engine = Engine::new(
-        EngineConfig {
-            artifacts_dir: match args.get("artifacts") {
-                Some(p) => PathBuf::from(p),
-                None => default_artifacts_dir(),
-            },
-            batch_size: scfg.batch_size,
-            workers: scfg.workers,
-            cache_capacity: scfg.cache_capacity,
-            cache_stripes: scfg.cache_stripes,
+    let ecfg = EngineConfig {
+        artifacts_dir: match args.get("artifacts") {
+            Some(p) => PathBuf::from(p),
+            None => default_artifacts_dir(),
         },
-        Arc::clone(&store),
-    )?;
-    Ok((store, engine, scfg))
+        batch_size: scfg.batch_size,
+        workers: scfg.workers,
+        cache_capacity: scfg.cache_capacity,
+        cache_stripes: scfg.cache_stripes,
+    };
+    let engine = Engine::new(ecfg.clone(), Arc::clone(&store))?;
+    Ok((store, engine, scfg, ecfg))
 }
 
 fn parse_node_list(text: &str) -> Result<Vec<NodeId>> {
@@ -645,7 +669,7 @@ fn cmd_query(args: &Args) -> Result<()> {
         .get("nodes")
         .ok_or_else(|| Error::Config("query needs --nodes 0,5,9".into()))?;
     let nodes = parse_node_list(nodes_arg)?;
-    let (store, engine, _) = serve_setup(args)?;
+    let (store, engine, _, _) = serve_setup(args)?;
     println!(
         "bundle {} ({} shards, {} nodes, dim {})",
         store.dir().display(),
@@ -663,6 +687,19 @@ fn cmd_query(args: &Args) -> Result<()> {
     }
     let statuses = engine.query_status(&nodes)?;
     print_statuses(&statuses);
+    if let Some(path) = args.get("logits-out") {
+        // canonical per-node lines with bit-exact hex logits — the same
+        // renderer the HTTP front-end uses for format=text, so `cmp`
+        // between this file and a /classify response proves the two
+        // paths produce identical bits
+        let mut out = String::new();
+        for st in &statuses {
+            out.push_str(&format_status_line(st));
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        println!("logit lines written to {path}");
+    }
     print_engine_stats(&engine);
     Ok(())
 }
@@ -688,7 +725,7 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     let report = PartitionPipeline::new(spec, seed).run(&ds.graph, k)?;
 
     if args.get("shards").is_some() {
-        let (store, engine, _) = serve_setup(args)?;
+        let (store, engine, _, _) = serve_setup(args)?;
         let probe = store.num_nodes().min(64) as NodeId;
         let nodes: Vec<NodeId> = (0..probe).collect();
         engine.query(&nodes)?;
@@ -738,7 +775,7 @@ fn cmd_metrics(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::BufRead;
-    let (store, engine, scfg) = serve_setup(args)?;
+    let (store, engine, scfg, ecfg) = serve_setup(args)?;
     let m = store.manifest();
     println!(
         "serving {} from {}: {} shards, {} nodes, dim {}, {} logit columns, \
@@ -766,6 +803,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             store.num_shards()
         );
     }
+    if scfg.http.is_some() {
+        return serve_http(args, store, engine, &scfg, ecfg);
+    }
     println!("enter node ids (e.g. `0,5,9`), `stats`, or `quit`:");
     let stdin = std::io::stdin();
     for line in stdin.lock().lines() {
@@ -784,6 +824,53 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     print_engine_stats(&engine);
+    Ok(())
+}
+
+/// `repro serve --http <addr>`: the HTTP/1.1 front-end over a
+/// hot-swappable bundle handle. Blocks until the process is killed —
+/// deliberately NOT the stdin loop, so a backgrounded server whose
+/// stdin hits EOF keeps serving.
+fn serve_http(
+    args: &Args,
+    store: Arc<ShardedEmbeddingStore>,
+    engine: Engine,
+    scfg: &ServeConfig,
+    ecfg: EngineConfig,
+) -> Result<()> {
+    let version = store.manifest().version;
+    let handle = Arc::new(BundleHandle::new(
+        &scfg.shards_dir,
+        ecfg,
+        Generation { version, store, engine },
+    ));
+    if scfg.watch {
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // detached for the process lifetime: the server only stops by
+        // being killed, which takes the watcher with it
+        let _watcher = handle.spawn_watcher(
+            leiden_fusion::serve::bundle::WATCH_TICK_MS,
+            Arc::clone(&shutdown),
+        )?;
+        println!("watching {} for new bundle versions", scfg.shards_dir.display());
+    }
+    let addr = scfg.http.clone().unwrap_or_else(|| "127.0.0.1:0".into());
+    let server = HttpServer::start(
+        HttpServerConfig {
+            addr,
+            max_inflight: scfg.max_inflight,
+            request_deadline_ms: scfg.request_deadline_ms,
+            port_file: args.get("port-file").map(PathBuf::from),
+            ..HttpServerConfig::default()
+        },
+        handle,
+    )?;
+    println!(
+        "http front-end on {} (v{version}): /healthz /readyz /metrics \
+         /classify?nodes=0,5,9[&format=text|json]",
+        server.addr()
+    );
+    server.join();
     Ok(())
 }
 

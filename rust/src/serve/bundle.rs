@@ -1,0 +1,507 @@
+//! Versioned serving bundles: content addressing, crash-safe publish,
+//! and the atomic hot-swap handle.
+//!
+//! A *bundle* is a shard directory plus its `shards.json` manifest. This
+//! module gives it a lifecycle:
+//!
+//! * **publish** — the coordinator stamps every shard (and the classifier
+//!   checkpoint) with its SHA-256 content address, bumps the manifest
+//!   version past the live one, and lands the manifest crash-safely:
+//!   write `shards.json.tmp` → fsync → self-check → rename → fsync dir.
+//!   A crash at any point leaves either the old complete manifest or the
+//!   new complete manifest — never a torn file (the `bundle.publish`
+//!   fault point injects failures between the fsync and the rename to
+//!   prove it).
+//! * **validate** — every recorded digest is recomputed from the bytes on
+//!   disk before a candidate is trusted. A digest names exactly one byte
+//!   sequence, so a half-overwritten or foreign shard cannot slip in.
+//! * **swap** — [`BundleHandle`] holds the serving generation (store +
+//!   engine) behind an `Arc` that readers clone per request. A watcher
+//!   notices `v+1` on disk, validates it, builds the *entire* next
+//!   generation off to the side (open, warm, engine), and only then flips
+//!   the handle — in-flight requests finish against `v` on their own
+//!   `Arc`, and the old engine drains its workers and frees its slabs
+//!   when the last reference drops. Any validation or build failure
+//!   rejects the candidate (`serve.swap_rejected`), remembers it so it is
+//!   not retried every tick, and keeps serving `v` — rollback is simply
+//!   "never flip".
+//!
+//! Swap decisions are journaled to `swap_journal.jsonl` in the bundle
+//! directory so operators (and the nightly chaos sweep) can audit every
+//! flip and rejection.
+
+use super::engine::{Engine, EngineConfig, NodeStatus};
+use super::http::{Backend, ReadyInfo};
+use super::shard::ShardManifest;
+use super::store::ShardedEmbeddingStore;
+use crate::error::{Error, Result};
+use crate::fault;
+use crate::graph::NodeId;
+use crate::obs;
+use crate::util::json::{num, obj, s};
+use crate::util::sha256;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, PoisonError, RwLock};
+use std::thread::JoinHandle;
+
+/// Swap-watcher poll cadence (`repro serve --watch`).
+pub const WATCH_TICK_MS: u64 = 500;
+
+/// Name of the append-only swap audit log inside the bundle directory.
+pub const SWAP_JOURNAL_FILE: &str = "swap_journal.jsonl";
+
+/// SHA-256 content address (lowercase hex) of a file's bytes.
+pub fn file_digest(path: &Path) -> Result<String> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        Error::Serve(format!("cannot read {} for digest: {e}", path.display()))
+    })?;
+    Ok(sha256::digest_hex(&bytes))
+}
+
+/// Fill in the manifest's content addresses from the bytes on disk
+/// (every shard entry plus the classifier checkpoint).
+pub fn stamp_digests(dir: &Path, manifest: &mut ShardManifest) -> Result<()> {
+    for entry in &mut manifest.shards {
+        entry.sha256 = file_digest(&dir.join(&entry.file))?;
+    }
+    manifest.classifier_sha256 = file_digest(&dir.join(&manifest.classifier_file))?;
+    Ok(())
+}
+
+/// The version of the bundle currently live in `dir`, or 0 when no
+/// readable manifest exists. Reads the file directly (no fault point):
+/// version discovery must not consume injections aimed at the serving
+/// load path.
+pub fn live_version(dir: &Path) -> usize {
+    std::fs::read_to_string(ShardManifest::path_in(dir))
+        .ok()
+        .and_then(|text| ShardManifest::from_json_text(&text).ok())
+        .map(|m| m.version)
+        .unwrap_or(0)
+}
+
+/// Recompute every content address recorded in `manifest` against the
+/// bytes in `dir`. An entry without a digest (pre-versioned bundle) is
+/// only checked for existence — the store's LFS1 checksums still guard
+/// its contents at load time.
+pub fn validate(dir: &Path, manifest: &ShardManifest) -> Result<()> {
+    for entry in &manifest.shards {
+        let path = dir.join(&entry.file);
+        let got = file_digest(&path)?;
+        if !entry.sha256.is_empty() && got != entry.sha256 {
+            return Err(Error::Serve(format!(
+                "{}: content digest mismatch (manifest {}, file {got})",
+                path.display(),
+                entry.sha256
+            )));
+        }
+    }
+    let clf = dir.join(&manifest.classifier_file);
+    let got = file_digest(&clf)?;
+    if !manifest.classifier_sha256.is_empty() && got != manifest.classifier_sha256 {
+        return Err(Error::Serve(format!(
+            "{}: content digest mismatch (manifest {}, file {got})",
+            clf.display(),
+            manifest.classifier_sha256
+        )));
+    }
+    Ok(())
+}
+
+/// Land `manifest` in `dir` crash-safely: write `shards.json.tmp`, fsync
+/// it, re-read and parse it back (the self-check — a torn or damaged
+/// candidate is caught *before* it can replace the live file), rename it
+/// over `shards.json`, and fsync the directory so the rename itself is
+/// durable. The `bundle.publish` fault point fires between the fsync and
+/// the self-check: `fail`/`delay` model a crash or stall mid-publish,
+/// `corrupt` damages the candidate bytes on disk — in every case the
+/// live manifest is untouched.
+pub fn publish(dir: &Path, manifest: &ShardManifest) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let live = ShardManifest::path_in(dir);
+    let tmp = dir.join(SHARD_MANIFEST_TMP);
+    let text = manifest.to_json_text();
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(text.as_bytes())?;
+        f.sync_all()?;
+    }
+    if let Some(inj) = fault::point("bundle.publish").fire() {
+        if inj.is_corrupt() {
+            // model a torn write: damage one candidate byte on disk; the
+            // self-check below must reject it and leave the live file alone
+            let mut bytes = std::fs::read(&tmp)?;
+            if !bytes.is_empty() {
+                let at = inj.offset(bytes.len());
+                bytes[at] ^= 0x01;
+                std::fs::write(&tmp, &bytes)?;
+            }
+        } else {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(inj.error());
+        }
+    }
+    // self-check: the candidate must round-trip to exactly the manifest
+    // we intended to publish
+    let back = std::fs::read_to_string(&tmp)
+        .map_err(Error::from)
+        .and_then(|t| ShardManifest::from_json_text(&t));
+    match back {
+        Ok(m) if m == *manifest => {}
+        Ok(_) => {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(Error::Serve(
+                "publish self-check failed: candidate manifest does not match \
+                 the intended one; live version untouched"
+                    .into(),
+            ));
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(Error::Serve(format!(
+                "publish self-check failed: candidate manifest unreadable \
+                 ({e}); live version untouched"
+            )));
+        }
+    }
+    std::fs::rename(&tmp, &live)?;
+    // make the rename durable (best-effort: not all filesystems let a
+    // directory handle be fsynced)
+    let _ = std::fs::File::open(dir).and_then(|d| d.sync_all());
+    Ok(())
+}
+
+/// Temp name `publish` stages the candidate manifest under.
+pub const SHARD_MANIFEST_TMP: &str = "shards.json.tmp";
+
+/// One immutable serving generation: the store and engine built from a
+/// validated bundle version. Swapping replaces the whole generation.
+pub struct Generation {
+    pub version: usize,
+    pub store: Arc<ShardedEmbeddingStore>,
+    pub engine: Engine,
+}
+
+/// What a swap attempt decided.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SwapOutcome {
+    /// On-disk version is not newer than the serving one.
+    NoNewVersion,
+    Swapped { from: usize, to: usize },
+    /// Candidate failed validation or failed to build; `v` keeps serving
+    /// and the candidate version is quarantined (not retried) until an
+    /// even newer version appears.
+    Rejected { candidate: usize, reason: String },
+}
+
+/// The hot-swappable bundle handle: readers take an `Arc` to the current
+/// [`Generation`] per request; [`BundleHandle::try_swap`] flips it.
+pub struct BundleHandle {
+    dir: PathBuf,
+    engine_cfg: EngineConfig,
+    current: RwLock<Arc<Generation>>,
+    /// Last rejected candidate version — quarantined so the watcher does
+    /// not re-validate (and re-count) it every tick.
+    rejected: AtomicUsize,
+}
+
+impl BundleHandle {
+    pub fn new(dir: &Path, engine_cfg: EngineConfig, initial: Generation) -> Self {
+        obs::registry().gauge("serve.bundle_version").set(initial.version as f64);
+        BundleHandle {
+            dir: dir.to_path_buf(),
+            engine_cfg,
+            current: RwLock::new(Arc::new(initial)),
+            rejected: AtomicUsize::new(0),
+        }
+    }
+
+    /// The serving generation. Cloning the `Arc` pins it for the caller:
+    /// a concurrent swap cannot free slabs under an in-flight request.
+    pub fn current(&self) -> Arc<Generation> {
+        Arc::clone(&self.current.read().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    pub fn version(&self) -> usize {
+        self.current().version
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Attempt one swap to whatever version is on disk. Never panics and
+    /// never degrades the serving generation: every failure path leaves
+    /// `current` untouched. `Err` is reserved for transient conditions
+    /// (an injected `bundle.swap` failure, an unreadable manifest) that
+    /// the watcher should simply retry; a *rejected* candidate comes back
+    /// as `Ok(SwapOutcome::Rejected)` and is remembered.
+    pub fn try_swap(&self) -> Result<SwapOutcome> {
+        let from = self.version();
+        if let Some(inj) = fault::point("bundle.swap").fire() {
+            if !inj.is_corrupt() {
+                return Err(inj.error());
+            }
+            // `corrupt`: the candidate is treated as damaged without
+            // touching disk — the rejection path must keep `v` serving
+            let candidate = live_version(&self.dir);
+            return Ok(self.reject(candidate, "injected corrupt candidate"));
+        }
+        let manifest = ShardManifest::load(&self.dir)?;
+        if manifest.version <= from {
+            return Ok(SwapOutcome::NoNewVersion);
+        }
+        if self.rejected.load(Ordering::Relaxed) == manifest.version {
+            return Ok(SwapOutcome::NoNewVersion);
+        }
+        if let Err(e) = validate(&self.dir, &manifest) {
+            return Ok(self.reject(manifest.version, &e.to_string()));
+        }
+        let built = self.build_generation(manifest.version);
+        match built {
+            Ok(next) => {
+                let to = next.version;
+                {
+                    let mut cur =
+                        self.current.write().unwrap_or_else(PoisonError::into_inner);
+                    *cur = Arc::new(next);
+                }
+                obs::registry().counter("serve.swaps").inc();
+                obs::registry().gauge("serve.bundle_version").set(to as f64);
+                self.journal(obj(vec![
+                    ("event", s("swapped")),
+                    ("from", num(from as f64)),
+                    ("to", num(to as f64)),
+                ]));
+                log::info!("bundle hot-swap: v{from} -> v{to}");
+                Ok(SwapOutcome::Swapped { from, to })
+            }
+            Err(e) => Ok(self.reject(manifest.version, &e.to_string())),
+        }
+    }
+
+    /// Build the candidate generation completely off to the side: open,
+    /// warm every slab (the digest check runs during the loads), and
+    /// construct the engine. The serving generation is not touched.
+    fn build_generation(&self, version: usize) -> Result<Generation> {
+        let store = Arc::new(ShardedEmbeddingStore::open(&self.dir)?);
+        store.warm(self.engine_cfg.workers.max(1))?;
+        if store.quarantined_shards() > 0 {
+            return Err(Error::Serve(format!(
+                "candidate v{version} has {} quarantined shard(s)",
+                store.quarantined_shards()
+            )));
+        }
+        let engine = Engine::new(self.engine_cfg.clone(), Arc::clone(&store))?;
+        Ok(Generation { version, store, engine })
+    }
+
+    fn reject(&self, candidate: usize, reason: &str) -> SwapOutcome {
+        self.rejected.store(candidate, Ordering::Relaxed);
+        obs::registry().counter("serve.swap_rejected").inc();
+        self.journal(obj(vec![
+            ("event", s("rejected")),
+            ("candidate", num(candidate as f64)),
+            ("serving", num(self.version() as f64)),
+            ("reason", s(reason)),
+        ]));
+        log::warn!(
+            "bundle swap rejected: candidate v{candidate} ({reason}); \
+             keeping v{}",
+            self.version()
+        );
+        SwapOutcome::Rejected { candidate, reason: reason.to_string() }
+    }
+
+    /// Append one line to the swap journal (best-effort: auditing must
+    /// never take down serving).
+    fn journal(&self, line: crate::util::json::Json) {
+        let path = self.dir.join(SWAP_JOURNAL_FILE);
+        let res = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| writeln!(f, "{}", line.to_string()));
+        if let Err(e) = res {
+            log::warn!("cannot append swap journal {}: {e}", path.display());
+        }
+    }
+
+    /// Watch the bundle directory for a published `v+1` and hot-swap to
+    /// it. Polling is cheap (one manifest read per tick) and only an
+    /// on-disk version *newer* than the serving one triggers a swap
+    /// attempt — so `bundle.swap` injections fire on real candidates, not
+    /// on idle ticks. Runs until `shutdown` is set.
+    pub fn spawn_watcher(
+        self: &Arc<Self>,
+        tick_ms: u64,
+        shutdown: Arc<AtomicBool>,
+    ) -> std::io::Result<JoinHandle<()>> {
+        let handle = Arc::clone(self);
+        // lint: allow(spawn_outside_parallel) — long-lived watcher thread with its own lifecycle, not fork-join data parallelism
+        std::thread::Builder::new().name("lf-bundle-watch".into()).spawn(move || {
+            while !shutdown.load(Ordering::Relaxed) {
+                // lint: allow(sleep_outside_backoff) — bounded poll tick for new bundle versions, not a retry loop
+                std::thread::sleep(std::time::Duration::from_millis(tick_ms.max(1)));
+                let disk = live_version(&handle.dir);
+                if disk <= handle.version()
+                    || disk == handle.rejected.load(Ordering::Relaxed)
+                {
+                    continue;
+                }
+                match handle.try_swap() {
+                    Ok(_) => {}
+                    Err(e) => {
+                        // transient (injected failure, racing publish):
+                        // the next tick retries the same candidate
+                        log::debug!("swap attempt for v{disk} failed: {e}");
+                    }
+                }
+            }
+        })
+    }
+}
+
+impl Backend for BundleHandle {
+    fn classify(&self, nodes: &[NodeId]) -> Result<Vec<NodeStatus>> {
+        // pin the generation for the whole request: a swap mid-request
+        // frees the old slabs only after this Arc drops
+        self.current().engine.query_status(nodes)
+    }
+
+    fn ready(&self) -> ReadyInfo {
+        let g = self.current();
+        ReadyInfo {
+            version: g.version,
+            dataset: g.store.manifest().dataset.clone(),
+            nodes: g.store.num_nodes(),
+            quarantined: g.store.quarantined_shards(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fault::FaultPlan;
+    use crate::serve::shard::{shard_file_name, write_shard, ShardEntry, CLASSIFIER_FILE};
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("lf_bundle_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A minimal on-disk bundle (one shard + a placeholder classifier)
+    /// with digests stamped and version `v` published.
+    fn make_bundle(dir: &Path, version: usize, emb0: f32) -> ShardManifest {
+        let nodes = vec![0u32, 1, 2];
+        let emb = vec![emb0, 1.0, 2.0, 3.0, 4.0, 5.0];
+        write_shard(&dir.join(shard_file_name(0)), 0, &nodes, &emb, 2).unwrap();
+        std::fs::write(dir.join(CLASSIFIER_FILE), b"not a real checkpoint").unwrap();
+        let mut m = ShardManifest {
+            version,
+            dataset: "test".into(),
+            task: "multiclass".into(),
+            num_nodes: 3,
+            dim: 2,
+            classes: 2,
+            classifier_file: CLASSIFIER_FILE.into(),
+            classifier_sha256: String::new(),
+            shards: vec![ShardEntry {
+                file: shard_file_name(0),
+                part_id: 0,
+                rows: 3,
+                sha256: String::new(),
+            }],
+        };
+        stamp_digests(dir, &mut m).unwrap();
+        publish(dir, &m).unwrap();
+        m
+    }
+
+    #[test]
+    fn publish_roundtrips_and_validates() {
+        let _quiet = fault::exclusive();
+        let dir = tmp_dir("publish");
+        let m = make_bundle(&dir, 1, 10.0);
+        assert!(!m.shards[0].sha256.is_empty());
+        assert!(!m.classifier_sha256.is_empty());
+        let back = ShardManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        validate(&dir, &back).unwrap();
+        assert_eq!(live_version(&dir), 1);
+        assert!(!dir.join(SHARD_MANIFEST_TMP).exists(), "tmp cleaned up");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn validate_rejects_foreign_shard_bytes() {
+        let _quiet = fault::exclusive();
+        let dir = tmp_dir("validate");
+        let m = make_bundle(&dir, 1, 10.0);
+        // overwrite with a same-shape shard from a "different run"
+        write_shard(
+            &dir.join(shard_file_name(0)),
+            0,
+            &[0, 1, 2],
+            &[9.0; 6],
+            2,
+        )
+        .unwrap();
+        let err = validate(&dir, &m).unwrap_err();
+        assert!(err.to_string().contains("content digest mismatch"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn publish_fail_injection_leaves_live_version_untouched() {
+        let dir = tmp_dir("pubfail");
+        let v1 = make_bundle(&dir, 1, 10.0);
+        {
+            let _g =
+                fault::install_scoped(FaultPlan::parse("bundle.publish:times=1:fail").unwrap());
+            let mut v2 = v1.clone();
+            v2.version = 2;
+            let err = publish(&dir, &v2).unwrap_err();
+            assert!(err.is_transient(), "{err}");
+        }
+        assert_eq!(live_version(&dir), 1, "live manifest untouched");
+        assert_eq!(ShardManifest::load(&dir).unwrap(), v1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn publish_corrupt_injection_is_caught_by_self_check() {
+        let dir = tmp_dir("pubcorrupt");
+        let v1 = make_bundle(&dir, 1, 10.0);
+        {
+            let _g = fault::install_scoped(
+                FaultPlan::parse("bundle.publish:times=1:corrupt").unwrap(),
+            );
+            let mut v2 = v1.clone();
+            v2.version = 2;
+            let err = publish(&dir, &v2).unwrap_err();
+            assert!(err.to_string().contains("self-check"), "{err}");
+        }
+        assert_eq!(live_version(&dir), 1, "damaged candidate never went live");
+        assert_eq!(ShardManifest::load(&dir).unwrap(), v1);
+        // plan exhausted: the retry lands v2 cleanly
+        let mut v2 = v1.clone();
+        v2.version = 2;
+        publish(&dir, &v2).unwrap();
+        assert_eq!(live_version(&dir), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn live_version_is_zero_without_a_manifest() {
+        let dir = tmp_dir("nolive");
+        assert_eq!(live_version(&dir), 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

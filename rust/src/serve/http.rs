@@ -1,0 +1,1190 @@
+//! Hand-rolled HTTP/1.1 front-end over the serve engine — the network
+//! face of the bundle platform (`repro serve --http <addr>`).
+//!
+//! Design mirrors the LFN1 transport in `net/`: raw `std::net` sockets
+//! (this file and `net/` are the only places the `raw_socket_io` lint
+//! rule allows them), a nonblocking accept loop with a bounded poll
+//! tick, and a hard rule that **every malformed, truncated, oversized,
+//! or slow input becomes a typed [`Error::Serve`] and a well-formed
+//! response or close — never a panic, never a hung connection**.
+//!
+//! Surface:
+//!
+//! * `GET /healthz` — liveness (the process accepts connections).
+//! * `GET /readyz` — readiness: the serving bundle version, node count,
+//!   and quarantine state (`ready v=N nodes=M quarantined=Q`).
+//! * `GET /metrics` — Prometheus text from the [`obs`] registry.
+//! * `GET|POST /classify?nodes=0,5,9[&format=text|json]` — batched node
+//!   classification. Node ids also accepted as a comma-separated POST
+//!   body. `format=text` emits one [`format_status_line`] per node with
+//!   logits as exact f32 bit patterns — byte-comparable against
+//!   `repro query --logits-out` (the tier-1 hot-swap drill does exactly
+//!   that `cmp`).
+//!
+//! Overload behaviour is explicit, not emergent: admission to the engine
+//! is bounded by `max_inflight` (excess requests get `429` +
+//! `Retry-After` immediately), every request carries a deadline
+//! (`request_deadline_ms`, exceeded → `503`), and a connection that
+//! trickles its request slower than `request_timeout_ms` (slowloris) is
+//! answered `408` and closed. Keep-alive and pipelined requests are
+//! served in order from the same buffer; cross-connection batching is
+//! inherited from the engine's single-flight/batch-steal design — each
+//! connection thread is just one more concurrent asker.
+
+use super::engine::NodeStatus;
+use crate::error::{Error, Result};
+use crate::fault;
+use crate::graph::NodeId;
+use crate::obs;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::Stopwatch;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Accept-loop poll tick (nonblocking accept + shutdown check).
+const ACCEPT_TICK_MS: u64 = 20;
+/// Per-read socket timeout inside a connection (poll tick for the
+/// request-completion and keep-alive-idle clocks).
+const READ_TICK_MS: u64 = 50;
+/// Write timeout: a peer that stops draining its response is dropped.
+const WRITE_TIMEOUT_MS: u64 = 5_000;
+/// An idle keep-alive connection (no request bytes at all) is closed
+/// after this long.
+const KEEPALIVE_IDLE_MS: u64 = 10_000;
+/// Cap on node ids in one /classify request.
+const MAX_NODES_PER_REQUEST: usize = 4096;
+
+/// Parser limits (also the defaults for [`HttpServerConfig`]).
+#[derive(Clone, Debug)]
+pub struct HttpLimits {
+    /// Max bytes of request line + headers (through the blank line).
+    pub max_header_bytes: usize,
+    /// Max declared `Content-Length`.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits { max_header_bytes: 8 * 1024, max_body_bytes: 64 * 1024 }
+    }
+}
+
+/// One parsed request. Only what the front-end acts on is kept.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Raw request target, e.g. `/classify?nodes=0,5`.
+    pub target: String,
+    /// Connection semantics after this exchange (HTTP/1.1 defaults to
+    /// keep-alive, HTTP/1.0 to close, `Connection:` overrides).
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// Incremental HTTP/1.1 request parser over a growing byte buffer.
+///
+/// * `Ok(None)` — the buffer holds a *prefix* of a valid request; read
+///   more bytes and call again.
+/// * `Ok(Some((req, consumed)))` — one full request; drain `consumed`
+///   bytes (pipelined requests may follow).
+/// * `Err(Error::Serve)` — the bytes can never become a valid request
+///   (malformed, oversized, unsupported); answer 400 and close.
+///
+/// Never panics on any input: every index is bounds-checked and every
+/// arithmetic step is over checked/`usize` values well below overflow.
+pub fn parse_request(buf: &[u8], limits: &HttpLimits) -> Result<Option<(HttpRequest, usize)>> {
+    // locate the header terminator within the header budget
+    let window = buf.len().min(limits.max_header_bytes.saturating_add(4));
+    let head_end = find_subslice(&buf[..window], b"\r\n\r\n");
+    let Some(head_end) = head_end else {
+        if buf.len() > limits.max_header_bytes {
+            return Err(Error::Serve(format!(
+                "header section exceeds {} bytes without terminating",
+                limits.max_header_bytes
+            )));
+        }
+        return Ok(None);
+    };
+    let head = &buf[..head_end];
+    if head.iter().any(|&b| b == 0 || (b < 0x20 && b != b'\r' && b != b'\n' && b != b'\t')) {
+        return Err(Error::Serve("control bytes in header section".into()));
+    }
+    let head = std::str::from_utf8(head)
+        .map_err(|_| Error::Serve("header section is not valid UTF-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(Error::Serve(format!(
+                "malformed request line {request_line:?}"
+            )))
+        }
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(Error::Serve(format!("malformed method {method:?}")));
+    }
+    if !target.starts_with('/') {
+        return Err(Error::Serve(format!("request target {target:?} must be absolute")));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(Error::Serve(format!("unsupported version {version:?}"))),
+    };
+    let mut content_length = 0usize;
+    let mut keep_alive = http11;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(Error::Serve(format!("malformed header line {line:?}")));
+        };
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(Error::Serve(format!("malformed header name {name:?}")));
+        }
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse::<usize>()
+                .map_err(|_| Error::Serve(format!("bad content-length {value:?}")))?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            // chunked (or anything else) is out of scope for this
+            // front-end; reject it typed instead of misframing the stream
+            return Err(Error::Serve(format!("transfer-encoding {value:?} not supported")));
+        }
+    }
+    if content_length > limits.max_body_bytes {
+        return Err(Error::Serve(format!(
+            "declared body of {content_length} bytes exceeds limit {}",
+            limits.max_body_bytes
+        )));
+    }
+    let body_start = head_end + 4;
+    let total = body_start.saturating_add(content_length);
+    if buf.len() < total {
+        return Ok(None);
+    }
+    Ok(Some((
+        HttpRequest {
+            method: method.to_string(),
+            target: target.to_string(),
+            keep_alive,
+            body: buf[body_start..total].to_vec(),
+        },
+        total,
+    )))
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Readiness snapshot of the serving bundle (the `/readyz` payload).
+#[derive(Clone, Debug)]
+pub struct ReadyInfo {
+    pub version: usize,
+    pub dataset: String,
+    pub nodes: usize,
+    pub quarantined: usize,
+}
+
+/// What the front-end serves. Implemented by `bundle::BundleHandle`
+/// (the real engine behind a hot-swappable generation) and by test
+/// stubs, so every protocol/overload behaviour is testable without
+/// compiled PJRT artifacts.
+pub trait Backend: Send + Sync + 'static {
+    fn classify(&self, nodes: &[NodeId]) -> Result<Vec<NodeStatus>>;
+    fn ready(&self) -> ReadyInfo;
+}
+
+/// One node's answer as a canonical text line. Logits are rendered as
+/// exact little-endian f32 bit patterns (8 hex digits), so two paths
+/// producing bit-identical logits produce byte-identical lines — the
+/// contract behind the serve-vs-offline `cmp` drills.
+pub fn format_status_line(status: &NodeStatus) -> String {
+    match status {
+        NodeStatus::Ready(p) => {
+            let logits: Vec<String> =
+                p.logits.iter().map(|l| format!("{:08x}", l.to_bits())).collect();
+            format!("node={} class={} logits={}", p.node, p.class, logits.join(","))
+        }
+        NodeStatus::Unavailable { node, reason } => {
+            format!("node={node} unavailable={reason}")
+        }
+    }
+}
+
+/// Front-end knobs (CLI `--http`, `[serve]` config keys).
+#[derive(Clone, Debug)]
+pub struct HttpServerConfig {
+    /// Bind address (`127.0.0.1:0` asks the OS for a port — combine with
+    /// `port_file`).
+    pub addr: String,
+    /// Max concurrently admitted `/classify` requests; excess answered
+    /// `429` + `Retry-After` (0 = unbounded).
+    pub max_inflight: usize,
+    /// Per-request deadline in ms; exceeded → `503` (0 disables).
+    pub request_deadline_ms: u64,
+    /// A request (headers + body) must arrive completely within this
+    /// window — the slowloris guard (0 disables).
+    pub request_timeout_ms: u64,
+    /// Written with the bound port after listen (script discovery).
+    pub port_file: Option<PathBuf>,
+    pub limits: HttpLimits,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> Self {
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 256,
+            request_deadline_ms: 2_000,
+            request_timeout_ms: 2_000,
+            port_file: None,
+            limits: HttpLimits::default(),
+        }
+    }
+}
+
+struct Shared {
+    cfg: HttpServerConfig,
+    backend: Arc<dyn Backend>,
+    shutdown: AtomicBool,
+    /// `/classify` requests currently admitted to the engine.
+    inflight: AtomicUsize,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn track(&self, handle: JoinHandle<()>) {
+        let mut conns = self.conns.lock().unwrap_or_else(PoisonError::into_inner);
+        // reap finished connection threads so the vec stays bounded by
+        // the number of *live* connections
+        conns.retain(|h| !h.is_finished());
+        conns.push(handle);
+    }
+
+    fn drain(&self) {
+        loop {
+            let batch: Vec<JoinHandle<()>> = {
+                let mut conns =
+                    self.conns.lock().unwrap_or_else(PoisonError::into_inner);
+                std::mem::take(&mut *conns)
+            };
+            if batch.is_empty() {
+                return;
+            }
+            for h in batch {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The running front-end: an accept thread plus one thread per live
+/// connection. Dropping (or [`HttpServer::stop`]) shuts down cleanly.
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind, write the port file, and start accepting.
+    pub fn start(cfg: HttpServerConfig, backend: Arc<dyn Backend>) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| Error::Serve(format!("cannot bind {}: {e}", cfg.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Serve(format!("cannot resolve bound address: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Serve(format!("cannot configure listener: {e}")))?;
+        if let Some(path) = &cfg.port_file {
+            // written after bind so a script polling the file never reads
+            // a port nobody listens on
+            std::fs::write(path, format!("{}\n", addr.port()))?;
+        }
+        // touch the serving gauges/counters the scrape contract promises
+        // even before the first request or quarantine happens
+        let reg = obs::registry();
+        reg.counter("serve.shards_quarantined");
+        reg.counter("serve.swap_rejected");
+        reg.counter("serve.http_requests");
+        let shared = Arc::new(Shared {
+            cfg,
+            backend,
+            shutdown: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let sh = Arc::clone(&shared);
+        // lint: allow(spawn_outside_parallel) — long-lived accept loop for the HTTP front-end, not a fork-join computation
+        let accept = std::thread::Builder::new()
+            .name("lf-http-accept".into())
+            .spawn(move || accept_loop(&sh, listener))?;
+        obs::event("serve", "http.listen", vec![("port", num(addr.port() as f64))]);
+        log::info!("http front-end listening on {addr}");
+        Ok(HttpServer { shared, addr, accept: Some(accept) })
+    }
+
+    /// The bound address (port resolved, even when `addr` asked for 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (i.e. until shutdown — the CLI
+    /// serve path parks here and is killed externally).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.drain();
+    }
+
+    /// Stop accepting, close out connection threads, and return.
+    pub fn stop(mut self) {
+        self.shutdown_and_join();
+    }
+
+    fn shutdown_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.shared.drain();
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+fn accept_loop(sh: &Arc<Shared>, listener: TcpListener) {
+    loop {
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if let Some(inj) = fault::point("http.accept").fire() {
+                    // no corruptible payload at accept: fail and corrupt
+                    // alike drop the connection — the client's retry
+                    // absorbs it
+                    log::warn!("http.accept: dropping connection from {peer}: {}", inj.error());
+                    drop(stream);
+                    continue;
+                }
+                obs::registry().counter("serve.http_connections").inc();
+                let sh2 = Arc::clone(sh);
+                // lint: allow(spawn_outside_parallel) — one thread per live HTTP connection with its own lifecycle, not a fork-join computation
+                let spawned = std::thread::Builder::new()
+                    .name("lf-http-conn".into())
+                    .spawn(move || handle_connection(&sh2, stream));
+                match spawned {
+                    Ok(handle) => sh.track(handle),
+                    Err(e) => log::warn!("cannot spawn connection thread: {e}"),
+                }
+            }
+            Err(e) => {
+                if e.kind() != ErrorKind::WouldBlock {
+                    log::warn!("http accept error: {e}");
+                }
+                // lint: allow(sleep_outside_backoff) — std has no timed accept; bounded poll tick, not a retry loop
+                std::thread::sleep(Duration::from_millis(ACCEPT_TICK_MS));
+            }
+        }
+    }
+}
+
+/// Serve one connection: keep-alive loop of parse → respond, with the
+/// slowloris and idle clocks. Every exit path is a deliberate close.
+fn handle_connection(sh: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(READ_TICK_MS)))
+        .is_err()
+        || stream
+            .set_write_timeout(Some(Duration::from_millis(WRITE_TIMEOUT_MS)))
+            .is_err()
+    {
+        return;
+    }
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // arms when the first byte of a not-yet-complete request arrives
+    let mut request_started: Option<Stopwatch> = None;
+    let idle = Stopwatch::start();
+    let mut idle_since = 0.0f64;
+    loop {
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        // drain every complete pipelined request already buffered
+        loop {
+            match parse_request(&buf, &sh.cfg.limits) {
+                Ok(Some((req, consumed))) => {
+                    buf.drain(..consumed);
+                    let started = request_started.take();
+                    let keep = respond(sh, &mut stream, &req, started);
+                    if !keep || !req.keep_alive {
+                        return;
+                    }
+                    idle_since = idle.secs();
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    obs::registry().counter("serve.http_parse_errors").inc();
+                    let msg = format!("{e}\n");
+                    let _ = write_response(
+                        &mut stream,
+                        400,
+                        "Bad Request",
+                        "text/plain",
+                        msg.as_bytes(),
+                        false,
+                        &[],
+                    );
+                    return;
+                }
+            }
+        }
+        // slowloris: a partially-arrived request must complete in time
+        if let Some(sw) = &request_started {
+            let limit = sh.cfg.request_timeout_ms;
+            if limit > 0 && sw.millis() > limit as f64 {
+                obs::registry().counter("serve.http_slow_requests").inc();
+                let _ = write_response(
+                    &mut stream,
+                    408,
+                    "Request Timeout",
+                    "text/plain",
+                    b"request did not arrive in time\n",
+                    false,
+                    &[],
+                );
+                return;
+            }
+        } else if (idle.secs() - idle_since) * 1e3 > KEEPALIVE_IDLE_MS as f64 {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return, // peer closed
+            Ok(n) => {
+                if request_started.is_none() {
+                    request_started = Some(Stopwatch::start());
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Route and answer one request. Returns whether the connection may be
+/// kept alive (a handler-level failure still answers; only write errors
+/// force a close).
+fn respond(
+    sh: &Arc<Shared>,
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    started: Option<Stopwatch>,
+) -> bool {
+    let reg = obs::registry();
+    reg.counter("serve.http_requests").inc();
+    let sw = started.unwrap_or_else(Stopwatch::start);
+    let (path, query) = match req.target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.target.as_str(), ""),
+    };
+    let ok = match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            write_response(stream, 200, "OK", "text/plain", b"ok\n", req.keep_alive, &[])
+        }
+        ("GET", "/readyz") => {
+            let info = sh.backend.ready();
+            let body = format!(
+                "ready v={} dataset={} nodes={} quarantined={}\n",
+                info.version, info.dataset, info.nodes, info.quarantined
+            );
+            write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain",
+                body.as_bytes(),
+                req.keep_alive,
+                &[],
+            )
+        }
+        ("GET", "/metrics") => {
+            let body = reg.render_prometheus();
+            write_response(
+                stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                body.as_bytes(),
+                req.keep_alive,
+                &[],
+            )
+        }
+        ("GET" | "POST", "/classify") => classify(sh, stream, req, query, &sw),
+        ("GET" | "POST", _) => write_response(
+            stream,
+            404,
+            "Not Found",
+            "text/plain",
+            b"unknown path\n",
+            req.keep_alive,
+            &[],
+        ),
+        _ => write_response(
+            stream,
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            b"only GET and POST are served\n",
+            req.keep_alive,
+            &[],
+        ),
+    };
+    reg.histogram("serve.http_request_secs").record(sw.secs());
+    ok.is_ok()
+}
+
+/// The `/classify` handler: bounded admission, deadline, then the
+/// backend (engine) call.
+fn classify(
+    sh: &Arc<Shared>,
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    query: &str,
+    sw: &Stopwatch,
+) -> std::io::Result<()> {
+    let reg = obs::registry();
+    let deadline = sh.cfg.request_deadline_ms;
+    // bounded admission: never queue more engine work than configured —
+    // shed load *now* with an honest retry hint instead of building an
+    // invisible backlog
+    let max = sh.cfg.max_inflight;
+    if max > 0 {
+        let admitted = sh.inflight.fetch_add(1, Ordering::AcqRel);
+        if admitted >= max {
+            sh.inflight.fetch_sub(1, Ordering::AcqRel);
+            reg.counter("serve.http_throttled").inc();
+            return write_response(
+                stream,
+                429,
+                "Too Many Requests",
+                "text/plain",
+                b"admission queue full, retry later\n",
+                req.keep_alive,
+                &[("Retry-After", "1")],
+            );
+        }
+    } else {
+        sh.inflight.fetch_add(1, Ordering::AcqRel);
+    }
+    let result = classify_admitted(sh, req, query, sw);
+    sh.inflight.fetch_sub(1, Ordering::AcqRel);
+    match result {
+        Ok(body_and_type) => {
+            // the work is done, but a blown deadline is still reported
+            // honestly: the caller's SLO was missed
+            if deadline > 0 && sw.millis() > deadline as f64 {
+                reg.counter("serve.http_deadline_exceeded").inc();
+                return write_response(
+                    stream,
+                    503,
+                    "Service Unavailable",
+                    "text/plain",
+                    b"request deadline exceeded\n",
+                    req.keep_alive,
+                    &[("Retry-After", "1")],
+                );
+            }
+            let (body, ctype) = body_and_type;
+            write_response(stream, 200, "OK", ctype, body.as_bytes(), req.keep_alive, &[])
+        }
+        Err(ClassifyError::BadRequest(msg)) => {
+            let msg = format!("{msg}\n");
+            write_response(
+                stream,
+                400,
+                "Bad Request",
+                "text/plain",
+                msg.as_bytes(),
+                req.keep_alive,
+                &[],
+            )
+        }
+        Err(ClassifyError::Backend(e)) => {
+            reg.counter("serve.http_backend_errors").inc();
+            let msg = format!("backend error: {e}\n");
+            write_response(
+                stream,
+                503,
+                "Service Unavailable",
+                "text/plain",
+                msg.as_bytes(),
+                req.keep_alive,
+                &[("Retry-After", "1")],
+            )
+        }
+    }
+}
+
+enum ClassifyError {
+    BadRequest(String),
+    Backend(Error),
+}
+
+fn classify_admitted(
+    sh: &Arc<Shared>,
+    req: &HttpRequest,
+    query: &str,
+    _sw: &Stopwatch,
+) -> std::result::Result<(String, &'static str), ClassifyError> {
+    let mut nodes_param: Option<String> = None;
+    let mut text_format = false;
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match k {
+            "nodes" => nodes_param = Some(v.to_string()),
+            "format" => match v {
+                "text" => text_format = true,
+                "json" | "" => text_format = false,
+                other => {
+                    return Err(ClassifyError::BadRequest(format!(
+                        "unknown format {other:?} (expected text or json)"
+                    )))
+                }
+            },
+            other => {
+                return Err(ClassifyError::BadRequest(format!(
+                    "unknown query parameter {other:?}"
+                )))
+            }
+        }
+    }
+    let list = match nodes_param {
+        Some(list) => list,
+        None => String::from_utf8(req.body.clone())
+            .map_err(|_| ClassifyError::BadRequest("body is not valid UTF-8".into()))?,
+    };
+    let nodes = parse_nodes(&list).map_err(ClassifyError::BadRequest)?;
+    let statuses =
+        sh.backend.classify(&nodes).map_err(ClassifyError::Backend)?;
+    if text_format {
+        let mut out = String::new();
+        for st in &statuses {
+            out.push_str(&format_status_line(st));
+            out.push('\n');
+        }
+        Ok((out, "text/plain"))
+    } else {
+        let rows: Vec<Json> = statuses
+            .iter()
+            .map(|st| match st {
+                NodeStatus::Ready(p) => obj(vec![
+                    ("node", num(p.node as f64)),
+                    ("class", num(p.class as f64)),
+                    ("score", num(p.score as f64)),
+                    (
+                        "logits",
+                        Json::Arr(p.logits.iter().map(|&l| num(l as f64)).collect()),
+                    ),
+                ]),
+                NodeStatus::Unavailable { node, reason } => {
+                    obj(vec![("node", num(*node as f64)), ("unavailable", s(reason))])
+                }
+            })
+            .collect();
+        Ok((Json::Arr(rows).to_string(), "application/json"))
+    }
+}
+
+/// Parse a comma-separated node-id list (`"0,5,9"`).
+fn parse_nodes(text: &str) -> std::result::Result<Vec<NodeId>, String> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err("no node ids given (use ?nodes=0,5,9 or a POST body)".into());
+    }
+    let mut nodes = Vec::new();
+    for tok in text.split(',') {
+        let tok = tok.trim();
+        let id: NodeId = tok
+            .parse()
+            .map_err(|_| format!("bad node id {tok:?}"))?;
+        nodes.push(id);
+        if nodes.len() > MAX_NODES_PER_REQUEST {
+            return Err(format!(
+                "too many node ids (limit {MAX_NODES_PER_REQUEST} per request)"
+            ));
+        }
+    }
+    Ok(nodes)
+}
+
+/// Serialize one response. `extra` adds headers (e.g. `Retry-After`).
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+) -> std::io::Result<()> {
+    let reg = obs::registry();
+    match status {
+        200..=299 => reg.counter("serve.http_responses_2xx").inc(),
+        400..=499 => reg.counter("serve.http_responses_4xx").inc(),
+        _ => reg.counter("serve.http_responses_5xx").inc(),
+    }
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::Prediction;
+    use crate::testing::prop;
+
+    fn limits() -> HttpLimits {
+        HttpLimits::default()
+    }
+
+    fn parse(bytes: &[u8]) -> Result<Option<(HttpRequest, usize)>> {
+        parse_request(bytes, &limits())
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        let (req, consumed) = parse(raw).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.target, "/healthz");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!parse(raw).unwrap().unwrap().0.keep_alive);
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        assert!(!parse(raw).unwrap().unwrap().0.keep_alive);
+        let raw = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        assert!(parse(raw).unwrap().unwrap().0.keep_alive);
+    }
+
+    #[test]
+    fn reads_body_by_content_length() {
+        let raw = b"POST /classify HTTP/1.1\r\nContent-Length: 5\r\n\r\n0,5,9";
+        let (req, consumed) = parse(raw).unwrap().unwrap();
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.body, b"0,5,9");
+        // body not yet complete → incomplete, not an error
+        assert!(parse(&raw[..raw.len() - 2]).unwrap().is_none());
+    }
+
+    #[test]
+    fn pipelined_requests_come_back_one_at_a_time() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let (first, consumed) = parse(raw).unwrap().unwrap();
+        assert_eq!(first.target, "/a");
+        let (second, rest) = parse(&raw[consumed..]).unwrap().unwrap();
+        assert_eq!(second.target, "/b");
+        assert_eq!(consumed + rest, raw.len());
+    }
+
+    #[test]
+    fn rejects_malformed_inputs_typed() {
+        for bad in [
+            &b"FOO BAR\r\n\r\n"[..],
+            b"GET /x HTTP/2.0\r\n\r\n",
+            b"GET /x HTTP/1.1 extra\r\n\r\n",
+            b"get /x HTTP/1.1\r\n\r\n",
+            b"GET x HTTP/1.1\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nContent-Length: pony\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nBad name: v\r\n\r\n",
+            b"\x00\x01\x02\x03\r\n\r\n",
+        ] {
+            let err = parse(bad).unwrap_err();
+            assert!(matches!(err, Error::Serve(_)), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn oversized_header_and_body_are_rejected() {
+        let lim = limits();
+        // headers that never terminate within the budget
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(lim.max_header_bytes + 8));
+        let err = parse(&raw).unwrap_err();
+        assert!(err.to_string().contains("header section exceeds"), "{err}");
+        // an honest but oversized declared body
+        let raw = format!(
+            "POST /classify HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            lim.max_body_bytes + 1
+        );
+        let err = parse(raw.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("exceeds limit"), "{err}");
+    }
+
+    /// Truncation at *every* prefix of a valid request is either
+    /// "incomplete" or a typed error — never a panic, and never a bogus
+    /// complete parse.
+    #[test]
+    fn prop_truncation_at_every_prefix() {
+        prop::check(
+            "http-truncation",
+            25,
+            0x4774_0001,
+            |rng| random_request(rng),
+            |raw| {
+                let full = parse_request(raw, &limits())
+                    .map_err(|e| format!("full request rejected: {e}"))?
+                    .ok_or("full request parsed as incomplete")?;
+                if full.1 != raw.len() {
+                    return Err(format!("consumed {} of {}", full.1, raw.len()));
+                }
+                for cut in 0..raw.len() {
+                    match parse_request(&raw[..cut], &limits()) {
+                        Ok(Some((_, consumed))) if consumed > cut => {
+                            return Err(format!("prefix {cut}: consumed past the end"))
+                        }
+                        // complete parse of a shorter request embedded in
+                        // the prefix cannot happen for our generator (one
+                        // request, one terminator), but Ok(None)/Err are
+                        // both legal rejections of a truncated stream
+                        _ => {}
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Single-bit flips anywhere in the request: the parser must come
+    /// back with *some* typed verdict (complete, incomplete, or a typed
+    /// error) — never a panic.
+    #[test]
+    fn prop_single_bit_flips_never_panic() {
+        prop::check(
+            "http-bit-flips",
+            10,
+            0x4774_0002,
+            |rng| {
+                let raw = random_request(rng);
+                let bit = rng.index(raw.len() * 8);
+                (raw, bit)
+            },
+            |(raw, bit)| {
+                let mut mutated = raw.clone();
+                mutated[bit / 8] ^= 1 << (bit % 8);
+                match parse_request(&mutated, &limits()) {
+                    Ok(Some((_, consumed))) if consumed > mutated.len() => {
+                        Err("consumed past the end".into())
+                    }
+                    _ => Ok(()),
+                }
+            },
+        );
+    }
+
+    /// Pipelined garbage after a valid request: the valid one parses,
+    /// the garbage yields a typed error or incomplete — never a panic.
+    #[test]
+    fn prop_pipelined_garbage_is_contained() {
+        prop::check(
+            "http-pipelined-garbage",
+            25,
+            0x4774_0003,
+            |rng| {
+                let mut raw = random_request(rng);
+                let tail = raw.len() + rng.index(64);
+                while raw.len() < tail {
+                    raw.push((rng.index(256)) as u8);
+                }
+                raw
+            },
+            |raw| {
+                let (_req, consumed) = parse_request(raw, &limits())
+                    .map_err(|e| format!("valid head rejected: {e}"))?
+                    .ok_or("valid head parsed as incomplete")?;
+                match parse_request(&raw[consumed..], &limits()) {
+                    Ok(Some((_, c))) if c > raw.len() - consumed => {
+                        Err("garbage consumed past the end".into())
+                    }
+                    _ => Ok(()),
+                }
+            },
+        );
+    }
+
+    fn random_request(rng: &mut crate::util::rng::Rng) -> Vec<u8> {
+        let methods = ["GET", "POST"];
+        let method = methods[rng.index(methods.len())];
+        let path = format!("/p{}", rng.index(1000));
+        let n_headers = rng.index(4);
+        let mut raw = format!("{method} {path} HTTP/1.1\r\n");
+        for h in 0..n_headers {
+            raw.push_str(&format!("X-H{h}: v{}\r\n", rng.index(100)));
+        }
+        let body: Vec<u8> = (0..rng.index(32))
+            .map(|_| b'a' + (rng.index(26)) as u8)
+            .collect();
+        if !body.is_empty() || method == "POST" {
+            raw.push_str(&format!("Content-Length: {}\r\n", body.len()));
+        }
+        raw.push_str("\r\n");
+        let mut bytes = raw.into_bytes();
+        bytes.extend_from_slice(&body);
+        bytes
+    }
+
+    #[test]
+    fn parse_nodes_accepts_lists_and_rejects_junk() {
+        assert_eq!(parse_nodes("0,5,9").unwrap(), vec![0, 5, 9]);
+        assert_eq!(parse_nodes(" 3 , 4 ").unwrap(), vec![3, 4]);
+        assert!(parse_nodes("").is_err());
+        assert!(parse_nodes("1,x").is_err());
+        assert!(parse_nodes("-1").is_err());
+    }
+
+    #[test]
+    fn status_lines_are_canonical() {
+        let ready = NodeStatus::Ready(Prediction {
+            node: 7,
+            class: 2,
+            score: 1.5,
+            logits: vec![1.0, -0.5],
+        });
+        assert_eq!(
+            format_status_line(&ready),
+            "node=7 class=2 logits=3f800000,bf000000"
+        );
+        let gone = NodeStatus::Unavailable { node: 9, reason: "shard quarantined".into() };
+        assert_eq!(format_status_line(&gone), "node=9 unavailable=shard quarantined");
+    }
+
+    // ---- server-level tests over a loopback socket (stub backend) ------
+
+    struct StubBackend {
+        /// Simulated engine latency per request, ms.
+        delay_ms: u64,
+    }
+
+    impl Backend for StubBackend {
+        fn classify(&self, nodes: &[NodeId]) -> Result<Vec<NodeStatus>> {
+            if self.delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.delay_ms));
+            }
+            Ok(nodes
+                .iter()
+                .map(|&n| {
+                    NodeStatus::Ready(Prediction {
+                        node: n,
+                        class: n as usize % 2,
+                        score: 1.0,
+                        logits: vec![n as f32, -(n as f32)],
+                    })
+                })
+                .collect())
+        }
+
+        fn ready(&self) -> ReadyInfo {
+            ReadyInfo { version: 3, dataset: "stub".into(), nodes: 42, quarantined: 0 }
+        }
+    }
+
+    fn start_stub(cfg: HttpServerConfig, delay_ms: u64) -> HttpServer {
+        HttpServer::start(cfg, Arc::new(StubBackend { delay_ms })).unwrap()
+    }
+
+    /// Minimal test client: one request, returns (status, body).
+    fn roundtrip(stream: &mut TcpStream, request: &str) -> (u16, String) {
+        stream.write_all(request.as_bytes()).unwrap();
+        read_one_response(stream)
+    }
+
+    fn read_one_response(stream: &mut TcpStream) -> (u16, String) {
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 1024];
+        loop {
+            if let Some(head_end) = find_subslice(&buf, b"\r\n\r\n") {
+                let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+                let status: u16 = head
+                    .split(' ')
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0);
+                let clen: usize = head
+                    .lines()
+                    .find_map(|l| {
+                        let (k, v) = l.split_once(':')?;
+                        k.eq_ignore_ascii_case("content-length")
+                            .then(|| v.trim().parse().ok())?
+                    })
+                    .unwrap_or(0);
+                let body_start = head_end + 4;
+                while buf.len() < body_start + clen {
+                    let n = stream.read(&mut chunk).unwrap();
+                    assert!(n > 0, "peer closed mid-body");
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                let body =
+                    String::from_utf8_lossy(&buf[body_start..body_start + clen]).to_string();
+                return (status, body);
+            }
+            let n = stream.read(&mut chunk).unwrap_or(0);
+            if n == 0 {
+                return (0, String::new());
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    #[test]
+    fn serves_health_ready_and_classify_over_keep_alive() {
+        let server = start_stub(HttpServerConfig::default(), 0);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let (status, body) = roundtrip(&mut c, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!((status, body.as_str()), (200, "ok\n"));
+        // same connection keeps serving (keep-alive)
+        let (status, body) = roundtrip(&mut c, "GET /readyz HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(body.contains("v=3"), "{body}");
+        let (status, body) =
+            roundtrip(&mut c, "GET /classify?nodes=1,2&format=text HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert_eq!(body.lines().count(), 2);
+        assert!(body.starts_with("node=1 class=1 logits="), "{body}");
+        // POST body is an alternative to the query param
+        let (status, body) = roundtrip(
+            &mut c,
+            "POST /classify?format=text HTTP/1.1\r\nContent-Length: 3\r\n\r\n5,6",
+        );
+        // Content-Length 3 but body "5,6" is 3 bytes
+        assert_eq!(status, 200, "{body}");
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_close() {
+        let server = start_stub(HttpServerConfig::default(), 0);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let (status, body) = roundtrip(&mut c, "GET /x HTTP/9.9\r\n\r\n");
+        assert_eq!(status, 400);
+        assert!(body.contains("unsupported version"), "{body}");
+        // server closed the connection after the 400
+        let mut probe = [0u8; 1];
+        c.set_read_timeout(Some(Duration::from_millis(2000))).unwrap();
+        assert_eq!(c.read(&mut probe).unwrap_or(0), 0, "connection must be closed");
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_typed() {
+        let server = start_stub(HttpServerConfig::default(), 0);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let (status, _) = roundtrip(&mut c, "GET /nope HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 404);
+        let (status, _) = roundtrip(&mut c, "PUT /classify HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 405);
+        let (status, body) = roundtrip(&mut c, "GET /classify?nodes=zebra HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 400);
+        assert!(body.contains("bad node id"), "{body}");
+        server.stop();
+    }
+
+    #[test]
+    fn over_admission_is_throttled_with_retry_after() {
+        let cfg = HttpServerConfig { max_inflight: 1, ..HttpServerConfig::default() };
+        let server = start_stub(cfg, 300);
+        let addr = server.addr();
+        // first request occupies the only admission slot for ~300ms
+        let busy = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            roundtrip(&mut c, "GET /classify?nodes=1 HTTP/1.1\r\n\r\n")
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let mut c = TcpStream::connect(addr).unwrap();
+        let (status, body) = roundtrip(&mut c, "GET /classify?nodes=2 HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 429, "{body}");
+        let (status, _) = busy.join().unwrap();
+        assert_eq!(status, 200, "admitted request still completes");
+        server.stop();
+    }
+
+    #[test]
+    fn blown_deadline_is_a_503() {
+        let cfg = HttpServerConfig { request_deadline_ms: 50, ..HttpServerConfig::default() };
+        let server = start_stub(cfg, 200);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let (status, body) = roundtrip(&mut c, "GET /classify?nodes=1 HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 503);
+        assert!(body.contains("deadline"), "{body}");
+        server.stop();
+    }
+
+    #[test]
+    fn slowloris_partial_request_gets_408() {
+        let cfg = HttpServerConfig { request_timeout_ms: 150, ..HttpServerConfig::default() };
+        let server = start_stub(cfg, 0);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        // a request that never finishes arriving
+        c.write_all(b"GET /healthz HT").unwrap();
+        let (status, _) = read_one_response(&mut c);
+        assert_eq!(status, 408);
+        server.stop();
+    }
+
+    #[test]
+    fn metrics_endpoint_exports_the_serving_registry() {
+        let server = start_stub(HttpServerConfig::default(), 0);
+        let mut c = TcpStream::connect(server.addr()).unwrap();
+        let (status, body) = roundtrip(&mut c, "GET /metrics HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(body.contains("serve_http_requests"), "{body}");
+        assert!(body.contains("serve_shards_quarantined"), "{body}");
+        server.stop();
+    }
+}

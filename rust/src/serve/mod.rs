@@ -31,16 +31,33 @@
 //!    wake only that node's waiters. Batched logits are bit-identical to
 //!    the offline `classify` path because the MLP is row-wise.
 //!
+//! 5. **Bundle** ([`bundle`]) — content-addressed, versioned serving
+//!    bundles: `shards.json` carries a monotonically increasing
+//!    `version` and a sha256 per shard (and for the classifier), the
+//!    coordinator publishes crash-safely (temp + fsync + rename), and
+//!    [`bundle::BundleHandle`] hot-swaps a running server to a newly
+//!    published version — validating every checksum first, draining
+//!    in-flight queries against the old generation, and rolling back
+//!    (quarantining the candidate, keep serving) if validation fails.
+//! 6. **HTTP front-end** ([`http`]) — a dependency-free HTTP/1.1 server
+//!    (`repro serve --http`) with keep-alive, incremental parsing that
+//!    turns every malformed input into a typed error, bounded admission
+//!    with explicit backpressure (429/503/408), and `/healthz`,
+//!    `/readyz`, `/metrics` endpoints.
+//!
 //! Driven by the `serve` / `query` CLI subcommands and measured by
 //! `benches/bench_serve.rs` (QPS, p50/p99 latency, hit rate, per-stage
 //! breakdown → `BENCH_serve.json`).
 
+pub mod bundle;
 pub mod cache;
 pub mod engine;
+pub mod http;
 pub mod index;
 pub mod shard;
 pub mod store;
 
+pub use bundle::{BundleHandle, Generation, SwapOutcome};
 pub use cache::{Flight, Lookup, LruCache, ResultCache, MAX_LRU_CAPACITY};
 pub use engine::{Engine, EngineConfig, EngineStats, NodeStatus, Prediction};
 pub use index::{IndexLayout, OwnershipIndex};
@@ -48,4 +65,5 @@ pub use shard::{
     decode_shard_bytes, encode_shard, read_shard, read_shard_header, shard_file_name,
     write_shard, ShardEntry, ShardHeader, ShardManifest, CLASSIFIER_FILE, SHARD_MANIFEST_FILE,
 };
+pub use http::{format_status_line, Backend, HttpServer, HttpServerConfig, ReadyInfo};
 pub use store::ShardedEmbeddingStore;

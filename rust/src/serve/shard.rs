@@ -287,6 +287,11 @@ pub struct ShardEntry {
     pub file: String,
     pub part_id: u32,
     pub rows: usize,
+    /// Content address: lowercase-hex SHA-256 of the shard file bytes.
+    /// Recorded by `bundle::publish`; empty = unrecorded (a pre-versioned
+    /// bundle), in which case validation falls back to a full LFS1 decode
+    /// and the lazy-load digest check is skipped.
+    pub sha256: String,
 }
 
 /// `shards.json` — inventory of a serving bundle: shard files, global
@@ -306,6 +311,9 @@ pub struct ShardManifest {
     /// Logit columns of the classifier artifact (bucketed class dim).
     pub classes: usize,
     pub classifier_file: String,
+    /// Content address of the classifier checkpoint (lowercase-hex
+    /// SHA-256); empty = unrecorded, as for [`ShardEntry::sha256`].
+    pub classifier_sha256: String,
     pub shards: Vec<ShardEntry>,
 }
 
@@ -316,6 +324,13 @@ impl ShardManifest {
 
     pub fn save(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
+        std::fs::write(Self::path_in(dir), self.to_json_text())?;
+        Ok(())
+    }
+
+    /// The manifest's canonical JSON text — what [`Self::save`] writes and
+    /// `bundle::publish` stages into the temp candidate file.
+    pub fn to_json_text(&self) -> String {
         let shards = Json::Arr(
             self.shards
                 .iter()
@@ -324,6 +339,7 @@ impl ShardManifest {
                         ("file", s(&e.file)),
                         ("part_id", num(e.part_id as f64)),
                         ("rows", num(e.rows as f64)),
+                        ("sha256", s(&e.sha256)),
                     ])
                 })
                 .collect(),
@@ -336,10 +352,10 @@ impl ShardManifest {
             ("dim", num(self.dim as f64)),
             ("classes", num(self.classes as f64)),
             ("classifier_file", s(&self.classifier_file)),
+            ("classifier_sha256", s(&self.classifier_sha256)),
             ("shards", shards),
         ]);
-        std::fs::write(Self::path_in(dir), root.to_string())?;
-        Ok(())
+        root.to_string()
     }
 
     pub fn load(dir: &Path) -> Result<Self> {
@@ -358,7 +374,14 @@ impl ShardManifest {
             // parse (or a missing-field check) rejects it downstream
             text.truncate(inj.offset(text.len()));
         }
-        let root = Json::parse(&text)?;
+        Self::from_json_text(&text)
+    }
+
+    /// Parse a manifest from its JSON text (the `shards.json` contents).
+    /// Split out of [`Self::load`] so `bundle::publish` can self-check a
+    /// candidate file before atomically renaming it over the live one.
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let root = Json::parse(text)?;
         let gets = |k: &str| -> Result<String> {
             root.get(k)
                 .and_then(Json::as_str)
@@ -391,6 +414,13 @@ impl ShardManifest {
                         .get("rows")
                         .and_then(Json::as_usize)
                         .ok_or_else(|| Error::Serve("shard entry missing rows".into()))?,
+                    // absent in pre-versioned manifests: empty means
+                    // "no content address recorded"
+                    sha256: e
+                        .get("sha256")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -402,6 +432,11 @@ impl ShardManifest {
             dim: getn("dim")?,
             classes: getn("classes")?,
             classifier_file: gets("classifier_file")?,
+            classifier_sha256: root
+                .get("classifier_sha256")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
             shards,
         })
     }
@@ -672,14 +707,40 @@ mod tests {
             dim: 16,
             classes: 4,
             classifier_file: CLASSIFIER_FILE.into(),
+            classifier_sha256: "ab".repeat(32),
             shards: vec![
-                ShardEntry { file: shard_file_name(0), part_id: 0, rows: 18 },
-                ShardEntry { file: shard_file_name(1), part_id: 1, rows: 16 },
+                ShardEntry {
+                    file: shard_file_name(0),
+                    part_id: 0,
+                    rows: 18,
+                    sha256: "cd".repeat(32),
+                },
+                ShardEntry { file: shard_file_name(1), part_id: 1, rows: 16, sha256: String::new() },
             ],
         };
         m.save(&dir).unwrap();
         let back = ShardManifest::load(&dir).unwrap();
         assert_eq!(m, back);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Manifests written before content addressing (no `sha256` /
+    /// `classifier_sha256` keys) must still load, with empty digests.
+    #[test]
+    fn manifest_without_digests_loads() {
+        let dir = tmp("manifest_compat");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(SHARD_MANIFEST_FILE),
+            r#"{"version":1,"dataset":"karate","task":"multiclass","num_nodes":34,
+                "dim":16,"classes":4,"classifier_file":"classifier.ckpt",
+                "shards":[{"file":"part0.lfs","part_id":0,"rows":34}]}"#,
+        )
+        .unwrap();
+        let m = ShardManifest::load(&dir).unwrap();
+        assert_eq!(m.classifier_sha256, "");
+        assert_eq!(m.shards[0].sha256, "");
+        assert_eq!(m.shards[0].rows, 34);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -21,11 +21,13 @@
 //!   `util/parallel`) so serving starts with the cold I/O already paid.
 
 use super::index::OwnershipIndex;
-use super::shard::{read_shard, read_shard_header, ShardManifest};
+use super::shard::{decode_shard_bytes, read_shard_header, ShardManifest};
 use crate::error::{Error, Result};
+use crate::fault;
 use crate::graph::NodeId;
 use crate::obs;
 use crate::util::parallel::map_chunks;
+use crate::util::sha256;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -203,7 +205,40 @@ impl ShardedEmbeddingStore {
                 shard.path.display()
             )));
         }
-        let (header, data) = match read_shard(&shard.path) {
+        let entry = &self.manifest.shards[idx];
+        let loaded = (|| {
+            // the decode below goes through the in-memory path, so the
+            // read-side injection point fires here (as `read_shard` did)
+            if let Some(inj) = fault::point("shard.read").part(entry.part_id).fire() {
+                if !inj.is_corrupt() {
+                    return Err(inj.error());
+                }
+                return Err(Error::Serve(format!(
+                    "{}: shard corrupt or truncated (injected read corruption)",
+                    shard.path.display()
+                )));
+            }
+            let bytes = std::fs::read(&shard.path)?;
+            // content-address check before decoding: a manifest with a
+            // recorded digest names exactly one byte sequence, so a shard
+            // file overwritten by a different run (same shape, different
+            // embeddings — invisible to the header re-check below) is
+            // caught here instead of silently mixing bundle versions.
+            // Pre-versioned manifests (empty digest) fall back to the
+            // LFS1 checksums alone.
+            if !entry.sha256.is_empty() {
+                let got = sha256::digest_hex(&bytes);
+                if got != entry.sha256 {
+                    return Err(Error::Serve(format!(
+                        "content digest mismatch (manifest {}, file {got}) — \
+                         shard does not belong to this bundle version",
+                        entry.sha256
+                    )));
+                }
+            }
+            decode_shard_bytes(&bytes)
+        })();
+        let (header, data) = match loaded {
             Ok(ok) => ok,
             Err(e) => {
                 // data-section corruption first seen here (open only
@@ -316,12 +351,15 @@ mod tests {
                 .iter()
                 .flat_map(|&v| (0..*dim).map(move |j| v as f32 * 10.0 + j as f32))
                 .collect();
-            write_shard(&dir.join(shard_file_name(*part)), *part, nodes, &emb, *dim)
-                .unwrap();
+            let path = dir.join(shard_file_name(*part));
+            write_shard(&path, *part, nodes, &emb, *dim).unwrap();
             entries.push(ShardEntry {
                 file: shard_file_name(*part),
                 part_id: *part,
                 rows: nodes.len(),
+                // record real content addresses so store tests exercise
+                // the digest check on every lazy load
+                sha256: crate::util::sha256::digest_hex(&std::fs::read(&path).unwrap()),
             });
             total += nodes.len();
         }
@@ -333,11 +371,31 @@ mod tests {
             dim,
             classes: 2,
             classifier_file: CLASSIFIER_FILE.into(),
+            classifier_sha256: String::new(),
             shards: entries,
         }
         .save(&dir)
         .unwrap();
         dir
+    }
+
+    /// A shard overwritten by a *different* run with the same shape passes
+    /// every header check but must fail the content-address check and be
+    /// quarantined — the guard that lets a live manifest survive a
+    /// concurrent retrain into the same directory.
+    #[test]
+    fn digest_mismatch_quarantines_on_load() {
+        let dir = bundle("digest", &[(0, vec![0, 1, 2], 2)]);
+        // same part_id, same rows, same dim — only the embedding values
+        // differ, exactly what a retrain with a different seed produces
+        let emb: Vec<f32> = vec![9.0; 6];
+        write_shard(&dir.join(shard_file_name(0)), 0, &[0, 1, 2], &emb, 2).unwrap();
+        let store = ShardedEmbeddingStore::open(&dir).unwrap();
+        assert_eq!(store.quarantined_shards(), 0, "headers still look fine");
+        let err = store.embedding(0).unwrap_err();
+        assert!(err.to_string().contains("content digest mismatch"), "{err}");
+        assert_eq!(store.quarantined_shards(), 1);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

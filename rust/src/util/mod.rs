@@ -4,6 +4,7 @@
 pub mod json;
 pub mod parallel;
 pub mod rng;
+pub mod sha256;
 
 use std::time::Instant;
 

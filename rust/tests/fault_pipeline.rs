@@ -251,6 +251,7 @@ fn manifest_load_injections_never_panic() {
         dim: 8,
         classes: 4,
         classifier_file: "classifier.ckpt".into(),
+        classifier_sha256: String::new(),
         shards: vec![],
     };
     {

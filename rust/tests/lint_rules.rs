@@ -171,6 +171,18 @@ fn raw_socket_io_is_legal_inside_net() {
 }
 
 #[test]
+fn raw_socket_io_is_legal_in_http_frontend() {
+    // The HTTP front-end is the second sanctioned socket owner: HTTP
+    // cannot ride the LFN1 codec, so the exact file is exempt — but
+    // only that file, not the rest of serve/.
+    let violating = fixture("raw_socket_io/violating.rs");
+    let report = lint_sources(&[("serve/http.rs", violating.as_str())]);
+    assert!(rule_hits(&report, "raw_socket_io").is_empty());
+    let report = lint_sources(&[("serve/store.rs", violating.as_str())]);
+    assert!(!rule_hits(&report, "raw_socket_io").is_empty());
+}
+
+#[test]
 fn undeclared_fault_point_triple() {
     let registry = fixture("undeclared_fault_point/registry.rs");
 
